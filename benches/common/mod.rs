@@ -1,0 +1,29 @@
+//! Shared helpers for the bench harnesses (harness = false binaries).
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use hardless::bench::Engine;
+
+/// Engine selection: `HARDLESS_ENGINE=mock|pjrt` overrides; default is
+/// PJRT when artifacts exist (the canonical reproduction), mock otherwise.
+pub fn engine() -> Engine {
+    match std::env::var("HARDLESS_ENGINE").as_deref() {
+        Ok("mock") => Engine::Mock,
+        Ok("pjrt") => Engine::Pjrt,
+        _ if hardless::runtime::artifacts_available() => Engine::Pjrt,
+        _ => {
+            eprintln!("[bench] artifacts not built; using mock engine");
+            Engine::Mock
+        }
+    }
+}
+
+pub fn out_dir() -> std::path::PathBuf {
+    hardless::bench::bench_out_dir()
+}
+
+/// Print a paper-comparison banner row.
+pub fn banner(title: &str) {
+    println!("\n=================================================================");
+    println!("{title}");
+    println!("=================================================================");
+}

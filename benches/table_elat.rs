@@ -1,0 +1,51 @@
+//! T2 (paper §V-B text): median execution latency per accelerator kind.
+//!
+//! *"For the Neural Compute Stick, we observe a median ELat of 1577 ms,
+//! while the median ELat for the workload running on the GPU is 1675 ms."*
+//!
+//! Runs the all-accelerator experiment and prints the per-kind ELat
+//! medians (plus distribution detail the paper doesn't show).
+
+mod common;
+
+use hardless::metrics::summaries_by_kind;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("T2 — median ELat by accelerator kind (all-accel run)");
+    let result = hardless::bench::fig4_allaccel(common::engine())?;
+
+    println!(
+        "{:<8} {:>6} {:>12} {:>12} {:>12} {:>12}",
+        "kind", "n", "p50 ELat", "p95 ELat", "p50 RLat", "paper p50"
+    );
+    let mut gpu_med = f64::NAN;
+    let mut vpu_med = f64::NAN;
+    for (kind, mut s) in summaries_by_kind(&result.records) {
+        let p50 = s.elat.median().unwrap_or(f64::NAN);
+        let paper = match kind.as_str() {
+            "gpu" => "1675 ms",
+            "vpu" => "1577 ms",
+            _ => "-",
+        };
+        println!(
+            "{:<8} {:>6} {:>9.0} ms {:>9.0} ms {:>9.0} ms {:>12}",
+            kind,
+            s.n,
+            p50,
+            s.elat.p95().unwrap_or(f64::NAN),
+            s.rlat.median().unwrap_or(f64::NAN),
+            paper
+        );
+        match kind.as_str() {
+            "gpu" => gpu_med = p50,
+            "vpu" => vpu_med = p50,
+            _ => {}
+        }
+    }
+
+    // Calibration tolerance: medians within 8% of the paper's values.
+    anyhow::ensure!((gpu_med - 1675.0).abs() / 1675.0 < 0.08, "gpu median {gpu_med}");
+    anyhow::ensure!((vpu_med - 1577.0).abs() / 1577.0 < 0.08, "vpu median {vpu_med}");
+    println!("\ncalibration PASSED: medians within 8% of paper values");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: submit one image-detection event to a HARDLESS cluster.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-lower the model variants
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a single-node cluster with the paper's accelerator mix (2× GPU
+//! + 1 VPU as virtual devices), publishes the tinyYOLO runtime bundle,
+//! submits one event, and prints the decoded detections.
+
+use hardless::coordinator::cluster::{Cluster, ExecutorKind};
+use hardless::events::EventSpec;
+use hardless::runtime::{artifacts_available, artifacts_dir, RuntimeBundle};
+use hardless::store::ObjectStore;
+use hardless::util::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // Engine: real PJRT when artifacts exist, mock otherwise.
+    let executor = if artifacts_available() {
+        println!("using AOT artifacts from {:?}", artifacts_dir());
+        ExecutorKind::Pjrt(RuntimeBundle::load_dir("tinyyolo", artifacts_dir())?)
+    } else {
+        println!("artifacts not built (run `make artifacts`); using mock executors");
+        ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(2) }
+    };
+
+    // One node with the paper's full accelerator set, real-time clock.
+    let cluster = Cluster::builder()
+        .time_scale(20.0) // compress the ~1.6 s service times for the demo
+        .executors(executor)
+        .node("node-1", hardless::accel::paper_all_accel())
+        .build()?;
+
+    // Upload a synthetic 64x64 RGB image (any f32 raster works).
+    let mut rng = Rng::new(7);
+    let image: Vec<f32> = (0..64 * 64 * 3).map(|_| 255.0 * rng.f64() as f32).collect();
+    let dataset = cluster.upload_dataset("quickstart-image", &image)?;
+    println!("uploaded dataset {dataset}");
+
+    // Submit asynchronously — HARDLESS decides where it runs (§IV-B).
+    let id = cluster.submit(EventSpec::new("tinyyolo", &dataset))?;
+    println!("submitted event {id}");
+
+    let inv = cluster
+        .coordinator
+        .wait_for(&id, Duration::from_secs(120))
+        .expect("invocation should complete");
+
+    println!("status:      {:?}", inv.status);
+    println!("node:        {}", inv.node.as_deref().unwrap_or("-"));
+    println!("accelerator: {}", inv.accelerator.as_deref().unwrap_or("-"));
+    println!("variant:     {}", inv.variant.as_deref().unwrap_or("-"));
+    println!("warm start:  {}", inv.warm);
+    println!("RLat: {:.0} ms | ELat: {:.0} ms | DLat: {:.0} ms",
+             inv.stamps.rlat_ms().unwrap_or(f64::NAN),
+             inv.stamps.elat_ms().unwrap_or(f64::NAN),
+             inv.stamps.dlat_ms().unwrap_or(f64::NAN));
+
+    if let Some(key) = &inv.result_key {
+        let body = cluster.store.get(key)?;
+        println!("result object {key}: {}", String::from_utf8_lossy(&body));
+    }
+    cluster.shutdown();
+    Ok(())
+}

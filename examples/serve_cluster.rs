@@ -1,0 +1,80 @@
+//! End-to-end serving driver (the repository's headline validation run).
+//!
+//! Loads the real AOT-compiled tinyYOLO bundle, builds the paper's
+//! all-accelerator testbed (2× Quadro-K600-profile GPUs + 1 Movidius-NCS-
+//! profile VPU as virtual devices), replays the paper's phased open-loop
+//! workload (P0 warm-up / P1 scaling / P2 cool-down) through the full
+//! stack — queue scan → node manager → warm pool → PJRT execute →
+//! postprocess → object store — and reports latency/throughput in the
+//! paper's vocabulary.  Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example serve_cluster
+//! ```
+
+use hardless::bench::{run_experiment, Engine};
+use hardless::config::Config;
+use hardless::metrics::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let engine = if hardless::runtime::artifacts_available() {
+        Engine::Pjrt
+    } else {
+        eprintln!("artifacts missing — run `make artifacts`; falling back to mock engine");
+        Engine::Mock
+    };
+
+    let cfg = Config::paper_all();
+    println!(
+        "cluster: {} node(s), {} accelerator slots | time x{} | protocol x{}",
+        cfg.nodes.len(),
+        cfg.total_slots(),
+        cfg.time_scale,
+        cfg.protocol_scale
+    );
+    println!(
+        "workload: {} events expected over {:.0} sim-s ({:?} arrivals)\n",
+        cfg.workload.expected_events(),
+        cfg.workload.duration().as_secs_f64(),
+        cfg.workload.arrivals
+    );
+
+    let result = run_experiment("serve_cluster", &cfg, engine)?;
+    print!("{}", result.summary_text());
+
+    // Throughput/latency report (the serving-paper deliverable).
+    let total_sim_s = result
+        .records
+        .iter()
+        .filter_map(|r| r.r_end)
+        .map(|t| t.as_secs_f64())
+        .fold(0.0f64, f64::max);
+    println!("\n== serving report ==");
+    println!(
+        "throughput: {:.2} events/sim-s sustained ({} events / {:.0} sim-s)",
+        result.report.succeeded as f64 / total_sim_s,
+        result.report.succeeded,
+        total_sim_s
+    );
+    println!("peak completion rate (RFast max): {:.2}/s", result.rfast_max);
+    let mut s = summarize(result.records.iter());
+    println!(
+        "latency (ms): ELat p50 {:.0} / p95 {:.0} | RLat p50 {:.0} / p95 {:.0}",
+        s.elat.median().unwrap_or(f64::NAN),
+        s.elat.p95().unwrap_or(f64::NAN),
+        s.rlat.median().unwrap_or(f64::NAN),
+        s.rlat.p95().unwrap_or(f64::NAN),
+    );
+    println!("warm-start fraction: {:.1}%", 100.0 * s.warm_fraction);
+    for (kind, med) in result.median_elat_by_kind() {
+        println!("  median ELat [{kind}]: {med:.0} ms");
+    }
+
+    result.write_csvs(hardless::bench::bench_out_dir())?;
+    println!(
+        "series written to {}/serve_cluster_*.csv",
+        hardless::bench::bench_out_dir().display()
+    );
+    Ok(())
+}

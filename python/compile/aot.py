@@ -1,0 +1,265 @@
+"""AOT compile path: lower each model variant to an HLO-text artifact.
+
+This is the ONLY place Python touches the system.  ``make artifacts`` runs
+``python -m compile.aot --out-dir ../artifacts`` once; afterwards the Rust
+coordinator is self-contained: it loads ``artifacts/<variant>.hlo.txt`` via
+``HloModuleProto::from_text_file``, compiles on the PJRT CPU client, and
+executes from the request path.
+
+HLO **text** is the interchange format, not ``serialize()``: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Alongside each ``.hlo.txt`` we emit ``manifest.json`` describing every
+artifact (shapes, dtype, runtime tags, model fingerprint) — the Rust side's
+``RuntimeBundle`` is deserialized from it, playing the role of the runtime
+bundles the paper stores in Minio.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: M.Variant, params) -> str:
+    """Jit + lower one variant with signature ``(image, *weight_leaves)``.
+
+    Weights travel as parameters (HLO text elides large constants, and the
+    paper's runtime bundles are fetched from object storage anyway).
+    """
+    leaves, treedef, _ = M.flatten_params(params)
+    fn = variant.forward(treedef)
+    img_spec = jax.ShapeDtypeStruct(variant.input_shape, jnp.float32)
+    leaf_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    lowered = jax.jit(fn).lower(img_spec, *leaf_specs)
+    return to_hlo_text(lowered)
+
+
+def write_weights(params, out_dir: str):
+    """Serialize weight leaves to ``weights.bin`` (little-endian f32).
+
+    Layout: leaves concatenated in deterministic pytree order.  The
+    manifest records (name, shape, dtype, byte offset, byte length) per
+    leaf so the Rust ``RuntimeBundle`` can slice them back into PJRT
+    literals without any Python at runtime.
+    """
+    import numpy as np
+
+    leaves, _, names = M.flatten_params(params)
+    blob = bytearray()
+    specs = []
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(leaf, dtype=np.float32)
+        data = arr.astype("<f4").tobytes()
+        specs.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": "f32",
+            "offset": len(blob),
+            "len": len(data),
+        })
+        blob.extend(data)
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    return specs, path
+
+
+def params_fingerprint(params) -> str:
+    """Stable fingerprint of the baked weights (manifest provenance)."""
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        import numpy as np
+
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()[:16]
+
+
+def build_manifest(variants, params, hlo_files, weight_specs) -> dict:
+    return {
+        "model": "tiny-yolo-v2-repro",
+        "seed": 0,
+        "params_sha": params_fingerprint(params),
+        "anchors": [list(a) for a in M.ANCHORS],
+        "num_classes": M.NUM_CLASSES,
+        "num_anchors": M.NUM_ANCHORS,
+        "weights_file": "weights.bin",
+        "weights": weight_specs,
+        "artifacts": [
+            {
+                "name": v.name,
+                "file": os.path.basename(f),
+                "input_shape": list(v.input_shape),
+                "input_dtype": "f32",
+                "output_shape": list(v.output_shape),
+                "output_dtype": "f32",
+                "compute_dtype": str(jnp.dtype(v.compute_dtype).name),
+                "tags": v.tags,
+                "tiles": {"bm": v.bm, "bk": v.bk, "bn": v.bn},
+            }
+            for v, f in zip(variants, hlo_files)
+        ],
+    }
+
+
+def write_golden(variants, params, out_dir: str):
+    """Emit a golden (input, output) pair per variant for Rust integration
+    tests: the Rust runtime executes the artifact on ``golden_input.bin``
+    and asserts allclose against ``<variant>.golden.bin``."""
+    import numpy as np
+
+    leaves, treedef, _ = M.flatten_params(params)
+    rng = np.random.RandomState(1234)
+    written_input = False
+    for v in variants:
+        x = rng.uniform(0.0, 255.0, size=v.input_shape).astype(np.float32)
+        if not written_input:
+            with open(os.path.join(out_dir, "golden_input.bin"), "wb") as f:
+                f.write(x.astype("<f4").tobytes())
+            written_input = True
+        out = jax.jit(v.forward(treedef))(jnp.asarray(x), *leaves)[0]
+        out = np.asarray(out, dtype=np.float32)
+        with open(os.path.join(out_dir, f"{v.name}.golden.bin"), "wb") as f:
+            f.write(out.astype("<f4").tobytes())
+    print(f"[aot] wrote golden input/output pairs for {len(variants)} variants")
+
+
+def lower_classifier_bundle(out_dir: str, force: bool) -> None:
+    """AOT-lower the second workload (``tinycls``) into its own bundle
+    directory — the paper's multi-runtime-stack generality (§IV-D ships
+    ONNX *and* PyTorch runtimes)."""
+    from compile import classifier as C
+
+    cls_dir = os.path.join(out_dir, "tinycls")
+    os.makedirs(cls_dir, exist_ok=True)
+    params = C.init_params(seed=1)
+    leaves, treedef, _names = M.flatten_params(params)
+    files = []
+    for v in C.CLS_VARIANTS:
+        path = os.path.join(cls_dir, f"{v.name}.hlo.txt")
+        files.append(path)
+        if not force and os.path.exists(path):
+            print(f"[aot] fresh: {path}")
+            continue
+        print(f"[aot] lowering {v.name} (input {v.input_shape}, "
+              f"{jnp.dtype(v.compute_dtype).name}) ...")
+        fn = v.forward(treedef)
+        img_spec = jax.ShapeDtypeStruct(v.input_shape, jnp.float32)
+        leaf_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+        text = to_hlo_text(jax.jit(fn).lower(img_spec, *leaf_specs))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {len(text) / 1e6:.2f} MB -> {path}")
+    weight_specs, wpath = write_weights(params, cls_dir)
+    print(f"[aot] wrote {os.path.getsize(wpath) / 1e6:.2f} MB -> {wpath}")
+    manifest = {
+        "model": "tiny-cls-repro",
+        "seed": 1,
+        "params_sha": params_fingerprint(params),
+        "num_classes": C.NUM_CLASSES,
+        "weights_file": "weights.bin",
+        "weights": weight_specs,
+        "artifacts": [
+            {
+                "name": v.name,
+                "file": os.path.basename(f),
+                "input_shape": list(v.input_shape),
+                "input_dtype": "f32",
+                "output_shape": list(v.output_shape),
+                "output_dtype": "f32",
+                "compute_dtype": str(jnp.dtype(v.compute_dtype).name),
+                "tags": v.tags,
+                "tiles": {"bm": v.bm, "bk": v.bk, "bn": v.bn},
+            }
+            for v, f in zip(C.CLS_VARIANTS, files)
+        ],
+    }
+    with open(os.path.join(cls_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    # golden pair for the Rust integration tests
+    import numpy as np
+
+    rng = np.random.RandomState(4321)
+    x = rng.uniform(0.0, 255.0, size=C.CLS_VARIANTS[0].input_shape).astype(np.float32)
+    with open(os.path.join(cls_dir, "golden_input.bin"), "wb") as f:
+        f.write(x.astype("<f4").tobytes())
+    for v in C.CLS_VARIANTS:
+        out = jax.jit(v.forward(treedef))(jnp.asarray(x), *leaves)[0]
+        with open(os.path.join(cls_dir, f"{v.name}.golden.bin"), "wb") as f:
+            f.write(np.asarray(out, np.float32).astype("<f4").tobytes())
+    print(f"[aot] wrote {os.path.join(cls_dir, 'manifest.json')} + goldens")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="AOT-lower model variants to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--out", default=None,
+                    help="(compat) single-artifact path; implies --out-dir dirname")
+    ap.add_argument("--variants", nargs="*", default=None,
+                    help="subset of variant names (default: all)")
+    ap.add_argument("--skip-classifier", action="store_true",
+                    help="only build the detector bundle")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if artifacts look fresh")
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = args.variants or [v.name for v in M.VARIANTS]
+    variants = [M.get_variant(n) for n in names]
+
+    params = M.init_params(seed=0)
+    files = []
+    for v in variants:
+        path = os.path.join(out_dir, f"{v.name}.hlo.txt")
+        files.append(path)
+        if not args.force and os.path.exists(path):
+            print(f"[aot] fresh: {path}")
+            continue
+        print(f"[aot] lowering {v.name} (input {v.input_shape}, "
+              f"{jnp.dtype(v.compute_dtype).name}, tiles "
+              f"{v.bm}x{v.bk}x{v.bn}) ...")
+        text = lower_variant(v, params)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {len(text) / 1e6:.2f} MB -> {path}")
+
+    write_golden(variants, params, out_dir)
+    weight_specs, wpath = write_weights(params, out_dir)
+    print(f"[aot] wrote {os.path.getsize(wpath) / 1e6:.2f} MB -> {wpath}")
+    manifest = build_manifest(variants, params, files, weight_specs)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mpath}")
+
+    if not args.skip_classifier:
+        lower_classifier_bundle(out_dir, args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,150 @@
+"""Second Layer-2 workload: a small image classifier.
+
+The paper's generality claim is that HARDLESS serves *arbitrary*
+accelerated workloads — its prototype ships two runtime stacks (ONNX and
+PyTorch).  We mirror that with a second, architecturally different model:
+a CIFAR-shaped convolutional classifier (`tinycls`), compiled into its own
+runtime bundle and served side by side with the detector.  Nodes that list
+both runtimes in their accelerator profiles multiplex them over the same
+devices (see `benches/mixed_workloads.rs`).
+
+Reuses the Layer-1 Pallas kernels (GEMM epilogue, maxpool, preprocess) —
+the dense head is just the GEMM kernel without activation.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv2d as k
+from compile.model import conv_layer, flatten_params  # shared L2 plumbing
+
+# (out_channels, kernel, pool) — 3 stride-2 pools: 32 -> 4 spatial.
+TINYCLS_LAYERS = [
+    (16, 3, 2),
+    (32, 3, 2),
+    (64, 3, 2),
+]
+NUM_CLASSES = 10
+INPUT_HW = 32
+FEATURE_DIM = (INPUT_HW // 8) * (INPUT_HW // 8) * TINYCLS_LAYERS[-1][0]  # 4*4*64
+
+
+def init_params(seed: int = 1, in_channels: int = 3) -> Dict[str, Any]:
+    """He-initialized deterministic parameters for the classifier."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, Any] = {"conv": [], "dense": None}
+    cin = in_channels
+    for (cout, ksize, _pool) in TINYCLS_LAYERS:
+        key, kw, kb = jax.random.split(key, 3)
+        fan_in = ksize * ksize * cin
+        w = jax.random.normal(kw, (ksize, ksize, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+        b = 0.01 * jax.random.normal(kb, (cout,))
+        params["conv"].append({"w": w.astype(jnp.float32), "b": b.astype(jnp.float32)})
+        cin = cout
+    key, kw, kb = jax.random.split(key, 3)
+    w = jax.random.normal(kw, (FEATURE_DIM, NUM_CLASSES)) * jnp.sqrt(2.0 / FEATURE_DIM)
+    b = 0.01 * jax.random.normal(kb, (NUM_CLASSES,))
+    params["dense"] = {"w": w.astype(jnp.float32), "b": b.astype(jnp.float32)}
+    return params
+
+
+def tiny_cls(params: Dict[str, Any], x: jax.Array, *,
+             compute_dtype=jnp.float32, bm: int = 128) -> jax.Array:
+    """Forward pass: [B,32,32,3] image -> [B,10] class logits."""
+    h = k.preprocess(x)
+    for layer, (_, _, pool) in zip(params["conv"], TINYCLS_LAYERS):
+        h = conv_layer(h, layer["w"], layer["b"], bm=bm, out_dtype=compute_dtype)
+        if pool == 2:
+            h = k.maxpool2d(h, window=2, stride=2)
+    b = h.shape[0]
+    flat = h.reshape(b, -1)
+    dense = params["dense"]
+    logits = k.matmul_bias_act(
+        flat.astype(compute_dtype),
+        dense["w"].astype(compute_dtype),
+        dense["b"],
+        apply_act=False,
+        bm=bm,
+        out_dtype=compute_dtype,
+    )
+    return logits.astype(jnp.float32)
+
+
+def tiny_cls_ref(params, x):
+    """Pure-lax oracle (mirrors ``tiny_cls`` without Pallas)."""
+    from compile.kernels import ref
+
+    h = ref.preprocess_ref(x)
+    for layer, (_, _, pool) in zip(params["conv"], TINYCLS_LAYERS):
+        h = ref.conv2d_ref(h, layer["w"], layer["b"])
+        if pool == 2:
+            h = ref.maxpool2d_ref(h, window=2, stride=2)
+    flat = h.reshape(h.shape[0], -1)
+    dense = params["dense"]
+    return ref.matmul_bias_act_ref(flat, dense["w"], dense["b"], apply_act=False)
+
+
+class ClsVariant:
+    """One AOT artifact of the classifier (per accelerator kind)."""
+
+    def __init__(self, name: str, *, compute_dtype, bm: int, tags: List[str]):
+        self.name = name
+        self.compute_dtype = compute_dtype
+        self.bm = bm
+        self.tags = tags
+        self.batch = 1
+
+    @property
+    def input_shape(self):
+        return (self.batch, INPUT_HW, INPUT_HW, 3)
+
+    @property
+    def output_shape(self):
+        return (self.batch, NUM_CLASSES)
+
+    @property
+    def bk(self):
+        return 128
+
+    @property
+    def bn(self):
+        return 128
+
+    def forward(self, treedef):
+        def fn(x, *leaves):
+            params = jax.tree_util.tree_unflatten(treedef, leaves)
+            return (tiny_cls(params, x, compute_dtype=self.compute_dtype, bm=self.bm),)
+
+        return fn
+
+
+CLS_VARIANTS = [
+    ClsVariant("tinycls-gpu", compute_dtype=jnp.float32, bm=128, tags=["gpu", "cuda-onnx"]),
+    ClsVariant("tinycls-vpu", compute_dtype=jnp.bfloat16, bm=64, tags=["vpu", "openvino-onnx"]),
+]
+
+
+def get_variant(name: str) -> ClsVariant:
+    for v in CLS_VARIANTS:
+        if v.name == name:
+            return v
+    raise KeyError(f"unknown classifier variant {name!r}")
+
+
+__all__ = [
+    "TINYCLS_LAYERS",
+    "NUM_CLASSES",
+    "INPUT_HW",
+    "FEATURE_DIM",
+    "init_params",
+    "tiny_cls",
+    "tiny_cls_ref",
+    "ClsVariant",
+    "CLS_VARIANTS",
+    "get_variant",
+    "flatten_params",
+]

@@ -1,0 +1,262 @@
+"""Layer-1 Pallas kernels for the HARDLESS workload model.
+
+The paper's workload is tinyYOLOv2 inference (ONNX Runtime on a Quadro K600
+GPU / OpenVINO on a Movidius VPU).  The compute hot-spot of that model is
+convolution.  On the paper's hardware the conv runs as cuDNN implicit-GEMM
+(GPU) or Myriad vector ops (VPU); here we re-express the same insight for a
+TPU-like target (DESIGN.md "Hardware-Adaptation"):
+
+  * conv is lowered as **im2col + GEMM** — the patch matrix is built at L2
+    (``model.py``) and the GEMM hot-spot runs as a Pallas kernel tiled for
+    the MXU systolic array;
+  * the thread-block/shared-memory schedule of the CUDA version becomes a
+    ``BlockSpec`` HBM->VMEM schedule: one (M-tile x N-tile) output block is
+    resident in VMEM per grid step, the K dimension is streamed as the
+    innermost grid axis with accumulation in the output ref;
+  * bias add + leaky-ReLU (tinyYOLO's activation) are **fused** into the
+    GEMM epilogue, exactly like a cuDNN fused epilogue.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime executes.  MXU/VMEM numbers for a real TPU are estimated
+analytically in ``estimate_kernel_stats``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-shaped tiles.  Real tinyYOLO layers at our reduced resolution
+# have M in [4, 4096], K in [27, 1152], N in [8, 128]; tiles are clamped to
+# the (padded) problem size in ``_pick_tiles``.
+DEFAULT_BM = 128
+DEFAULT_BK = 128
+DEFAULT_BN = 128
+
+# Lane/sublane granularity of the target: the last dim of every VMEM block
+# should be a multiple of 128, second-to-last a multiple of 8 (f32).
+LANE = 128
+SUBLANE = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_tiles(m: int, k: int, n: int, bm: int, bk: int, bn: int):
+    """Clamp requested tile sizes to the padded problem size.
+
+    Tiles keep the TPU-friendly granularity (sublane 8 / lane 128) but never
+    exceed the padded dimension, so small layers (e.g. the 1x1 detection
+    head with M=4) do not allocate 128x128 blocks of padding.
+    """
+    pm = _round_up(m, SUBLANE)
+    pk = _round_up(k, LANE)
+    pn = _round_up(n, LANE)
+    bm = min(_round_up(bm, SUBLANE), pm)
+    bk = min(_round_up(bk, LANE), pk)
+    bn = min(_round_up(bn, LANE), pn)
+    # Dimensions must divide evenly; pad up to the tile.
+    pm = _round_up(pm, bm)
+    pk = _round_up(pk, bk)
+    pn = _round_up(pn, bn)
+    return pm, pk, pn, bm, bk, bn
+
+
+def _matmul_epilogue_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                            nsteps_k: int, alpha: float, apply_act: bool):
+    """GEMM tile with fused bias + leaky-ReLU epilogue.
+
+    Grid = (M/bm, N/bn, K/bk) with K innermost.  ``acc_ref`` is a VMEM
+    scratch accumulator in f32 (the MXU accumulates in f32 regardless of the
+    input element type); the epilogue runs once, on the last K step.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU contraction for this (bm, bk) x (bk, bn) tile pair.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_step == nsteps_k - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if apply_act:
+            acc = jnp.where(acc >= 0.0, acc, alpha * acc)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "apply_act", "bm", "bk", "bn", "out_dtype"),
+)
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    alpha: float = 0.1,
+    apply_act: bool = True,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """``leaky_relu(x @ w + b)`` as a tiled Pallas GEMM.
+
+    Args:
+      x: ``[M, K]`` patch matrix (im2col output).
+      w: ``[K, N]`` filter matrix.
+      b: ``[N]`` bias.
+      alpha: leaky-ReLU negative slope (tinyYOLO uses 0.1).
+      apply_act: ``False`` for the linear detection head.
+      bm/bk/bn: requested tile sizes; clamped to the padded problem.
+      out_dtype: output element type (f32, or bf16 for the VPU variant).
+
+    Returns:
+      ``[M, N]`` activation matrix in ``out_dtype``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    pm, pk, pn, bm, bk, bn = _pick_tiles(m, k, n, bm, bk, bn)
+    xp = jnp.pad(x, ((0, pm - m), (0, pk - k)))
+    wp = jnp.pad(w, ((0, pk - k), (0, pn - n)))
+    bp = jnp.pad(b, (0, pn - n)).reshape(1, pn)
+
+    grid = (pm // bm, pn // bn, pk // bk)
+    kernel = functools.partial(
+        _matmul_epilogue_kernel,
+        nsteps_k=grid[2],
+        alpha=alpha,
+        apply_act=apply_act,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, bn), lambda i, j, s: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _maxpool_kernel(x_ref, o_ref, *, window: int, stride: int):
+    """2x2 max-pool over an NHWC block held in VMEM.
+
+    The whole (padded) feature map fits in one VMEM block at our reduced
+    resolutions (<= 64x64x128 f32 = 2 MiB), so the grid is over the batch
+    only and the pool is a reshape/max inside the block — the analogue of a
+    warp-level reduction in the CUDA version.
+    """
+    x = x_ref[...]
+    b, h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    # Gather the window lanes and reduce.  stride==window (pool2) or
+    # stride==1 (tinyYOLO's final same-size pool, pre-padded by the caller).
+    cols = []
+    for dy in range(window):
+        for dx in range(window):
+            cols.append(
+                jax.lax.slice(
+                    x,
+                    (0, dy, dx, 0),
+                    (b, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    o_ref[...] = functools.reduce(jnp.maximum, cols)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "stride"))
+def maxpool2d(x: jax.Array, *, window: int = 2, stride: int = 2) -> jax.Array:
+    """NHWC max-pool as a Pallas kernel (VALID padding).
+
+    ``x``: ``[B, H, W, C]``.  For tinyYOLO's stride-1 "same" pool the caller
+    pads the input by (0,1)x(0,1) with -inf first (see ``model.py``).
+    """
+    b, h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    kernel = functools.partial(_maxpool_kernel, window=window, stride=stride)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((b, h, w, c), lambda i: (0, 0, 0, 0))],
+        out_specs=pl.BlockSpec((b, oh, ow, c), lambda i: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _preprocess_kernel(x_ref, o_ref, *, scale: float, offset: float):
+    """Image normalization: uint8-range floats -> [offset, offset+scale*255]."""
+    o_ref[...] = x_ref[...] * scale + offset
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "offset"))
+def preprocess(x: jax.Array, *, scale: float = 1.0 / 255.0, offset: float = 0.0):
+    """Normalize an NHWC image batch on-device (fused elementwise kernel)."""
+    kernel = functools.partial(_preprocess_kernel, scale=scale, offset=offset)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim)],
+        out_specs=pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+class KernelStats(NamedTuple):
+    """Analytic per-call stats for a real-TPU deployment (DESIGN.md §7)."""
+
+    flops: int
+    vmem_bytes: int
+    mxu_steps: int
+    mxu_utilization: float
+    grid: tuple
+
+
+def estimate_kernel_stats(
+    m: int, k: int, n: int, *, bm: int = DEFAULT_BM, bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN, bytes_per_elt: int = 4,
+) -> KernelStats:
+    """Estimate VMEM footprint and MXU utilization for ``matmul_bias_act``.
+
+    interpret=True gives CPU-numpy timings only, so real-TPU efficiency is
+    estimated from the BlockSpec: VMEM = resident blocks (x, w, b, out, acc);
+    MXU utilization = useful MACs / (128x128x8-per-cycle systolic capacity
+    over the padded tile schedule).
+    """
+    pm, pk, pn, bm, bk, bn = _pick_tiles(m, k, n, bm, bk, bn)
+    grid = (pm // bm, pn // bn, pk // bk)
+    vmem = (bm * bk + bk * bn + bn + 2 * bm * bn) * bytes_per_elt
+    useful_macs = m * k * n
+    padded_macs = pm * pk * pn
+    # Each 128x128x128 MXU pass is fully dense; utilization is the useful
+    # fraction of the padded schedule.
+    mxu_steps = (padded_macs + (128 ** 3) - 1) // (128 ** 3)
+    util = useful_macs / max(padded_macs, 1)
+    flops = 2 * useful_macs + m * n * 2  # + bias & activation epilogue
+    return KernelStats(flops, vmem, mxu_steps, util, grid)

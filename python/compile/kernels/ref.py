@@ -1,0 +1,83 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the full model.
+
+Every Pallas kernel in ``conv2d.py`` has an oracle here built only from
+``jax.numpy`` / ``jax.lax`` primitives.  pytest (``python/tests/``) asserts
+``assert_allclose`` between kernel and oracle across shape/dtype sweeps —
+this is the CORE correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act_ref(x, w, b, *, alpha: float = 0.1, apply_act: bool = True,
+                        out_dtype=jnp.float32):
+    """Oracle for ``conv2d.matmul_bias_act`` (f32 accumulation)."""
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    acc = acc + b.astype(jnp.float32)
+    if apply_act:
+        acc = jnp.where(acc >= 0.0, acc, alpha * acc)
+    return acc.astype(out_dtype)
+
+
+def maxpool2d_ref(x, *, window: int = 2, stride: int = 2):
+    """Oracle for ``conv2d.maxpool2d`` (NHWC, VALID)."""
+    init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+    return jax.lax.reduce_window(
+        x,
+        init,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+def preprocess_ref(x, *, scale: float = 1.0 / 255.0, offset: float = 0.0):
+    """Oracle for ``conv2d.preprocess``."""
+    return x.astype(jnp.float32) * scale + offset
+
+
+def conv2d_ref(x, w, b, *, stride: int = 1, padding: str = "SAME",
+               alpha: float = 0.1, apply_act: bool = True):
+    """Reference NHWC conv + bias + leaky-ReLU via ``lax.conv_general_dilated``.
+
+    ``x``: [B,H,W,Cin]; ``w``: [KH,KW,Cin,Cout]; ``b``: [Cout].
+    Oracle for the full conv layer (im2col at L2 + Pallas GEMM at L1).
+    """
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b.astype(jnp.float32)
+    if apply_act:
+        y = jnp.where(y >= 0.0, y, alpha * y)
+    return y
+
+
+def tiny_yolo_ref(params, x):
+    """End-to-end oracle for the TinyYOLOv2-shaped model in ``model.py``.
+
+    Mirrors ``model.tiny_yolo`` exactly but uses only lax/jnp primitives so
+    any divergence localizes to the Pallas kernels.
+    """
+    from compile.model import TINY_YOLO_LAYERS
+
+    h = preprocess_ref(x)
+    for layer, (_, _, pool) in zip(params["conv"], TINY_YOLO_LAYERS):
+        h = conv2d_ref(h, layer["w"], layer["b"])
+        if pool == 2:
+            h = maxpool2d_ref(h, window=2, stride=2)
+        elif pool == 1:
+            # tinyYOLO's stride-1 "same" pool: pad right/bottom with -inf.
+            h = jnp.pad(h, ((0, 0), (0, 1), (0, 1), (0, 0)),
+                        constant_values=-jnp.inf)
+            h = maxpool2d_ref(h, window=2, stride=1)
+    head = params["head"]
+    return conv2d_ref(h, head["w"], head["b"], apply_act=False)

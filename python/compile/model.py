@@ -1,0 +1,227 @@
+"""Layer-2 JAX model: a TinyYOLOv2-shaped image detector.
+
+The paper's user workload is ``tinyyolov2.7`` (ONNX) image detection.  We
+reproduce the same architecture family at a reduced input resolution so the
+CPU-PJRT testbed executes it in milliseconds (the *service time* seen by the
+coordinator is paced by the virtual-accelerator profile — DESIGN.md S1/S4):
+
+    conv3x3(16) pool2 | conv3x3(32) pool2 | conv3x3(64) pool2
+    conv3x3(128) pool2 | conv3x3(256->128 here) pool2 | conv3x3(128) pool1
+    conv3x3(128) | conv1x1 head -> 5 anchors x (5 + 20 classes) = 125
+
+Every conv layer runs as **im2col (here, L2) + Pallas GEMM (L1)** with a
+fused bias + leaky-ReLU epilogue; pools run as Pallas kernels too.  The
+whole forward fn is AOT-lowered by ``aot.py`` into an HLO-text artifact per
+accelerator *variant* — the analogue of the paper's per-accelerator runtime
+implementations (older ONNX for the K600 GPUs, OpenVINO for the VPU).
+
+Weights are deterministic (He-init from a fixed seed) and are baked into the
+artifact as constants: serving passes only the image, matching the paper's
+"runtime bundle fetched from object storage" model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv2d as k
+
+
+# ---------------------------------------------------------------------------
+# Architecture definition
+# ---------------------------------------------------------------------------
+
+# (out_channels, kernel_size, pool) — pool: 2 = stride-2 pool, 1 = stride-1
+# "same" pool (tinyYOLO layer 6), 0 = no pool.  Channel widths are the
+# tinyYOLOv2 ladder truncated at 128 for the reduced resolution.
+TINY_YOLO_LAYERS = [
+    (16, 3, 2),
+    (32, 3, 2),
+    (64, 3, 2),
+    (128, 3, 2),
+    (128, 3, 2),
+    (128, 3, 1),
+    (128, 3, 0),
+]
+NUM_ANCHORS = 5
+NUM_CLASSES = 20
+HEAD_CHANNELS = NUM_ANCHORS * (5 + NUM_CLASSES)  # 125, as in tinyYOLOv2-VOC
+
+# The anchor priors of tinyYOLOv2 (VOC), consumed by the Rust-side decoder.
+ANCHORS = [(1.08, 1.19), (3.42, 4.41), (6.63, 11.38), (9.42, 5.11), (16.62, 10.52)]
+
+
+def init_params(seed: int = 0, in_channels: int = 3) -> Dict[str, Any]:
+    """He-initialized deterministic parameters for the detector."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, Any] = {"conv": [], "head": None}
+    cin = in_channels
+    for (cout, ksize, pool) in TINY_YOLO_LAYERS:
+        key, kw, kb = jax.random.split(key, 3)
+        fan_in = ksize * ksize * cin
+        w = jax.random.normal(kw, (ksize, ksize, cin, cout), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        b = 0.01 * jax.random.normal(kb, (cout,), jnp.float32)
+        # NOTE: the pool schedule is *architecture*, not weights — it lives
+        # in TINY_YOLO_LAYERS so the param tree stays a pure weight pytree
+        # (flattenable into the AOT entry signature).
+        params["conv"].append({"w": w, "b": b})
+        cin = cout
+    key, kw, kb = jax.random.split(key, 3)
+    w = jax.random.normal(kw, (1, 1, cin, HEAD_CHANNELS), jnp.float32)
+    w = w * jnp.sqrt(2.0 / cin)
+    b = 0.01 * jax.random.normal(kb, (HEAD_CHANNELS,), jnp.float32)
+    params["head"] = {"w": w, "b": b}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# im2col conv layer = L2 patch extraction + L1 Pallas GEMM
+# ---------------------------------------------------------------------------
+
+def _im2col(x: jax.Array, ksize: int, stride: int = 1) -> jax.Array:
+    """Extract SAME-padded [B*OH*OW, KH*KW*Cin] patch matrix (NHWC).
+
+    Uses ``conv_general_dilated_patches`` so the gather lowers to an
+    efficient HLO slice/concat tree; the contraction itself stays in the
+    Pallas kernel.  Feature order is (Cin, KH, KW) — the filter matrix in
+    ``conv_layer`` is permuted to match.
+    """
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(ksize, ksize),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, OH, OW, Cin*KH*KW]
+    oh, ow = patches.shape[1], patches.shape[2]
+    return patches.reshape(b * oh * ow, c * ksize * ksize), (b, oh, ow)
+
+
+def conv_layer(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    apply_act: bool = True,
+    alpha: float = 0.1,
+    bm: int = k.DEFAULT_BM,
+    bk: int = k.DEFAULT_BK,
+    bn: int = k.DEFAULT_BN,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """SAME conv + bias + leaky-ReLU: im2col at L2, GEMM epilogue at L1."""
+    kh, kw_, cin, cout = w.shape
+    assert kh == kw_, "square kernels only"
+    patches, (bsz, oh, ow) = _im2col(x, kh)
+    # conv_general_dilated_patches emits features as (Cin, KH, KW); permute
+    # the HWIO filter to (Cin, KH, KW, Cout) before flattening to [K, N].
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw_, cout)
+    y = k.matmul_bias_act(
+        patches.astype(out_dtype), wmat.astype(out_dtype), b,
+        alpha=alpha, apply_act=apply_act, bm=bm, bk=bk, bn=bn,
+        out_dtype=out_dtype,
+    )
+    return y.reshape(bsz, oh, ow, cout)
+
+
+def tiny_yolo(params: Dict[str, Any], x: jax.Array, *,
+              compute_dtype=jnp.float32,
+              bm: int = k.DEFAULT_BM, bk: int = k.DEFAULT_BK,
+              bn: int = k.DEFAULT_BN) -> jax.Array:
+    """Full detector forward pass: [B,H,W,3] image -> [B,GH,GW,125] grid.
+
+    ``compute_dtype``/tile sizes are the per-accelerator variant knobs
+    (DESIGN.md §Hardware-Adaptation): the GPU variant runs f32 with full MXU
+    tiles, the VPU variant bf16 with narrower tiles.
+    """
+    h = k.preprocess(x)
+    for layer, (_, _, pool) in zip(params["conv"], TINY_YOLO_LAYERS):
+        h = conv_layer(h, layer["w"], layer["b"],
+                       bm=bm, bk=bk, bn=bn, out_dtype=compute_dtype)
+        if pool == 2:
+            h = k.maxpool2d(h, window=2, stride=2)
+        elif pool == 1:
+            h = jnp.pad(h, ((0, 0), (0, 1), (0, 1), (0, 0)),
+                        constant_values=-jnp.inf)
+            h = k.maxpool2d(h, window=2, stride=1)
+    head = params["head"]
+    out = conv_layer(h, head["w"], head["b"], apply_act=False,
+                     bm=bm, bk=bk, bn=bn, out_dtype=compute_dtype)
+    return out.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Accelerator variants (the per-device runtime implementations of the paper)
+# ---------------------------------------------------------------------------
+
+class Variant:
+    """One AOT artifact: a (model, accelerator-kind) runtime implementation."""
+
+    def __init__(self, name: str, *, input_hw: int, batch: int,
+                 compute_dtype, bm: int, bk: int, bn: int, tags: List[str]):
+        self.name = name
+        self.input_hw = input_hw
+        self.batch = batch
+        self.compute_dtype = compute_dtype
+        self.bm, self.bk, self.bn = bm, bk, bn
+        self.tags = tags
+
+    @property
+    def input_shape(self):
+        return (self.batch, self.input_hw, self.input_hw, 3)
+
+    @property
+    def output_shape(self):
+        grid = self.input_hw // 32  # 5 stride-2 pools
+        return (self.batch, grid, grid, HEAD_CHANNELS)
+
+    def forward(self, treedef):
+        """Forward fn taking (image, *weight_leaves).
+
+        Weights are *parameters*, not baked constants: HLO text elides
+        large constants (``constant({...})``), and — more to the point —
+        the paper fetches runtime bundles from object storage at cold
+        start.  The Rust node manager does exactly that: it pulls
+        ``weights.bin`` from the store and passes the leaves per execute.
+        """
+
+        def fn(x, *leaves):
+            params = jax.tree_util.tree_unflatten(treedef, leaves)
+            return (tiny_yolo(params, x, compute_dtype=self.compute_dtype,
+                              bm=self.bm, bk=self.bk, bn=self.bn),)
+
+        return fn
+
+
+def flatten_params(params):
+    """Deterministic (leaves, treedef, names) flattening of the param tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    names = []
+    for path, _ in paths:
+        names.append("".join(str(p) for p in path).replace("'", ""))
+    return leaves, treedef, names
+
+
+# The paper ran the same user workload on two accelerator classes with
+# distinct runtime stacks ("we needed a much older ONNX version for the
+# K600s").  We mirror that: same weights, different compiled variants.
+VARIANTS = [
+    Variant("tinyyolo-gpu", input_hw=64, batch=1, compute_dtype=jnp.float32,
+            bm=128, bk=128, bn=128, tags=["gpu", "cuda-onnx"]),
+    Variant("tinyyolo-vpu", input_hw=64, batch=1, compute_dtype=jnp.bfloat16,
+            bm=64, bk=128, bn=128, tags=["vpu", "openvino-onnx"]),
+]
+
+
+def get_variant(name: str) -> Variant:
+    for v in VARIANTS:
+        if v.name == name:
+            return v
+    raise KeyError(f"unknown variant {name!r}; have {[v.name for v in VARIANTS]}")

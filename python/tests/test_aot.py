@@ -1,0 +1,113 @@
+"""AOT path tests: lowering, HLO-text hygiene, weights/golden round-trips."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(seed=0)
+
+
+class TestLowering:
+    def test_hlo_text_entry_layout(self, params):
+        text = aot.lower_variant(M.get_variant("tinyyolo-gpu"), params)
+        assert text.startswith("HloModule")
+        assert "f32[1,64,64,3]" in text  # image parameter
+        assert "f32[1,2,2,125]" in text  # detection grid output
+
+    def test_no_elided_constants(self, params):
+        # `constant({...})` would make the artifact unparseable by the Rust
+        # loader AND silently drop the weights — the failure mode that
+        # forced weights-as-parameters (DESIGN.md S4 note).
+        text = aot.lower_variant(M.get_variant("tinyyolo-gpu"), params)
+        assert "constant({...}" not in text
+
+    def test_vpu_variant_uses_bf16(self, params):
+        text = aot.lower_variant(M.get_variant("tinyyolo-vpu"), params)
+        assert "bf16[" in text
+
+    def test_parameter_count(self, params):
+        text = aot.lower_variant(M.get_variant("tinyyolo-gpu"), params)
+        leaves, _, _ = M.flatten_params(params)
+        entry = text.splitlines()[0]
+        # image + one parameter per weight leaf in the entry layout
+        assert entry.count("f32[") >= 1 + len(leaves) - entry.count("->")
+
+
+class TestWeights:
+    def test_weights_roundtrip(self, params, tmp_path):
+        specs, path = aot.write_weights(params, str(tmp_path))
+        blob = open(path, "rb").read()
+        leaves, _, names = M.flatten_params(params)
+        assert [s["name"] for s in specs] == names
+        for spec, leaf in zip(specs, leaves):
+            arr = np.frombuffer(
+                blob[spec["offset"]:spec["offset"] + spec["len"]], dtype="<f4"
+            ).reshape(spec["shape"])
+            np.testing.assert_array_equal(arr, np.asarray(leaf, np.float32))
+
+    def test_blob_is_dense(self, params, tmp_path):
+        specs, path = aot.write_weights(params, str(tmp_path))
+        total = sum(s["len"] for s in specs)
+        assert os.path.getsize(path) == total
+        # contiguous, ordered offsets
+        off = 0
+        for s in specs:
+            assert s["offset"] == off
+            off += s["len"]
+
+    def test_fingerprint_stable(self, params):
+        assert aot.params_fingerprint(params) == aot.params_fingerprint(
+            M.init_params(0))
+        assert aot.params_fingerprint(params) != aot.params_fingerprint(
+            M.init_params(1))
+
+
+class TestManifest:
+    def test_manifest_fields(self, params, tmp_path):
+        specs, _ = aot.write_weights(params, str(tmp_path))
+        man = aot.build_manifest(M.VARIANTS, params,
+                                 [f"{v.name}.hlo.txt" for v in M.VARIANTS], specs)
+        assert man["num_anchors"] * (5 + man["num_classes"]) == M.HEAD_CHANNELS
+        assert len(man["artifacts"]) == len(M.VARIANTS)
+        for art in man["artifacts"]:
+            assert art["input_shape"] == [1, 64, 64, 3]
+            assert art["output_shape"] == [1, 2, 2, 125]
+            assert art["tags"]
+
+    @pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                        reason="artifacts not built")
+    def test_built_manifest_consistent(self, params):
+        man = json.load(open(os.path.join(ART, "manifest.json")))
+        assert man["params_sha"] == aot.params_fingerprint(params)
+        for art in man["artifacts"]:
+            assert os.path.exists(os.path.join(ART, art["file"]))
+
+
+class TestGolden:
+    @pytest.mark.skipif(not os.path.exists(os.path.join(ART, "golden_input.bin")),
+                        reason="artifacts not built")
+    def test_golden_matches_ref_oracle(self, params):
+        """The golden outputs consumed by Rust integration tests must agree
+        with the pure-lax oracle — closing the loop kernel->model->artifact."""
+        x = np.frombuffer(
+            open(os.path.join(ART, "golden_input.bin"), "rb").read(), dtype="<f4"
+        ).reshape(1, 64, 64, 3).copy()
+        expect = np.asarray(ref.tiny_yolo_ref(params, jnp.asarray(x)))
+        golden = np.frombuffer(
+            open(os.path.join(ART, "tinyyolo-gpu.golden.bin"), "rb").read(),
+            dtype="<f4").reshape(expect.shape)
+        np.testing.assert_allclose(golden, expect, rtol=3e-4, atol=3e-4)

@@ -1,0 +1,85 @@
+"""Second-workload (tinycls) correctness: Pallas classifier vs pure-lax oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import classifier as C
+from compile.model import flatten_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return C.init_params(seed=1)
+
+
+class TestTinyCls:
+    def test_output_shape(self, params):
+        x = jnp.zeros((1, 32, 32, 3))
+        assert C.tiny_cls(params, x).shape == (1, C.NUM_CLASSES)
+
+    def test_matches_ref(self, params):
+        x = jax.random.uniform(jax.random.PRNGKey(2), (1, 32, 32, 3),
+                               jnp.float32, 0, 255)
+        out = C.tiny_cls(params, x)
+        np.testing.assert_allclose(out, C.tiny_cls_ref(params, x),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_bf16_variant_bounded(self, params):
+        x = jax.random.uniform(jax.random.PRNGKey(3), (1, 32, 32, 3),
+                               jnp.float32, 0, 255)
+        out = C.tiny_cls(params, x, compute_dtype=jnp.bfloat16, bm=64)
+        np.testing.assert_allclose(out, C.tiny_cls_ref(params, x),
+                                   rtol=0.2, atol=0.2)
+
+    def test_batch_independence(self, params):
+        x = jax.random.uniform(jax.random.PRNGKey(4), (3, 32, 32, 3),
+                               jnp.float32, 0, 255)
+        batched = C.tiny_cls(params, x)
+        solo = C.tiny_cls(params, x[1:2])
+        np.testing.assert_allclose(batched[1:2], solo, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_property_matches_ref(self, params, seed):
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (1, 32, 32, 3),
+                               jnp.float32, 0, 255)
+        np.testing.assert_allclose(C.tiny_cls(params, x),
+                                   C.tiny_cls_ref(params, x),
+                                   rtol=5e-4, atol=5e-4)
+
+
+class TestClsParams:
+    def test_architecture(self, params):
+        cin = 3
+        for layer, (cout, ksize, _) in zip(params["conv"], C.TINYCLS_LAYERS):
+            assert layer["w"].shape == (ksize, ksize, cin, cout)
+            cin = cout
+        assert params["dense"]["w"].shape == (C.FEATURE_DIM, C.NUM_CLASSES)
+
+    def test_flatten_roundtrip(self, params):
+        leaves, treedef, names = flatten_params(params)
+        assert len(leaves) == 2 * (len(C.TINYCLS_LAYERS) + 1)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(rebuilt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_variant_lookup(self):
+        v = C.get_variant("tinycls-gpu")
+        assert v.input_shape == (1, 32, 32, 3)
+        assert v.output_shape == (1, 10)
+        with pytest.raises(KeyError):
+            C.get_variant("nope")
+
+    def test_variant_forward_matches_direct(self, params):
+        leaves, treedef, _ = flatten_params(params)
+        v = C.get_variant("tinycls-gpu")
+        x = jax.random.uniform(jax.random.PRNGKey(8), v.input_shape,
+                               jnp.float32, 0, 255)
+        out = jax.jit(v.forward(treedef))(x, *leaves)[0]
+        np.testing.assert_allclose(out, C.tiny_cls(params, x), rtol=1e-5, atol=1e-5)

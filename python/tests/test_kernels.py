@@ -1,0 +1,234 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+``kernels.ref``.  These tests are the build-time gate for the artifacts the
+Rust runtime serves.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32_TOL = dict(rtol=1e-5, atol=1e-5)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+class TestMatmulBiasAct:
+    def test_basic(self):
+        x, w, b = rand(0, (64, 96)), rand(1, (96, 32)), rand(2, (32,))
+        out = k.matmul_bias_act(x, w, b)
+        np.testing.assert_allclose(out, ref.matmul_bias_act_ref(x, w, b), **F32_TOL)
+
+    def test_no_activation(self):
+        x, w, b = rand(3, (16, 16)), rand(4, (16, 8)), rand(5, (8,))
+        out = k.matmul_bias_act(x, w, b, apply_act=False)
+        np.testing.assert_allclose(
+            out, ref.matmul_bias_act_ref(x, w, b, apply_act=False), **F32_TOL)
+
+    def test_negative_inputs_hit_leaky_branch(self):
+        x = -jnp.abs(rand(6, (8, 8)))
+        w = jnp.eye(8, dtype=jnp.float32)
+        b = jnp.zeros((8,), jnp.float32)
+        out = k.matmul_bias_act(x, w, b, alpha=0.1)
+        assert (np.asarray(out) <= 0).all()
+        np.testing.assert_allclose(out, 0.1 * np.asarray(x), **F32_TOL)
+
+    def test_alpha_zero_is_relu(self):
+        x, w, b = rand(7, (32, 48)), rand(8, (48, 16)), rand(9, (16,))
+        out = k.matmul_bias_act(x, w, b, alpha=0.0)
+        assert (np.asarray(out) >= 0).all()
+
+    def test_single_row(self):
+        x, w, b = rand(10, (1, 27)), rand(11, (27, 16)), rand(12, (16,))
+        out = k.matmul_bias_act(x, w, b)
+        np.testing.assert_allclose(out, ref.matmul_bias_act_ref(x, w, b), **F32_TOL)
+
+    def test_k_larger_than_tile_accumulates(self):
+        # K=300 > bk=128 forces multi-step accumulation across the K grid.
+        x, w, b = rand(13, (32, 300)), rand(14, (300, 32)), rand(15, (32,))
+        out = k.matmul_bias_act(x, w, b)
+        np.testing.assert_allclose(out, ref.matmul_bias_act_ref(x, w, b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16_output(self):
+        x, w, b = rand(16, (32, 64)), rand(17, (64, 32)), rand(18, (32,))
+        out = k.matmul_bias_act(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                                b, out_dtype=jnp.bfloat16)
+        expect = ref.matmul_bias_act_ref(x.astype(jnp.bfloat16),
+                                         w.astype(jnp.bfloat16), b,
+                                         out_dtype=jnp.bfloat16)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32), **BF16_TOL)
+
+    def test_custom_small_tiles(self):
+        x, w, b = rand(19, (100, 70)), rand(20, (70, 50)), rand(21, (50,))
+        out = k.matmul_bias_act(x, w, b, bm=16, bk=128, bn=128)
+        np.testing.assert_allclose(out, ref.matmul_bias_act_ref(x, w, b), **F32_TOL)
+
+    def test_tiny_yolo_layer_shapes(self):
+        # Exact (M, K, N) triples of the production model at 64x64 input.
+        for seed, (m, kk, n) in enumerate(
+            [(4096, 27, 16), (1024, 144, 32), (256, 288, 64),
+             (64, 576, 128), (16, 1152, 128), (4, 1152, 128), (4, 128, 125)]
+        ):
+            x, w, b = rand(seed, (m, kk)), rand(seed + 50, (kk, n)), rand(seed + 99, (n,))
+            out = k.matmul_bias_act(x, w, b)
+            np.testing.assert_allclose(
+                out, ref.matmul_bias_act_ref(x, w, b), rtol=3e-5, atol=3e-5,
+                err_msg=f"layer shape ({m},{kk},{n})")
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 160),
+        kk=st.integers(1, 200),
+        n=st.integers(1, 160),
+        alpha=st.sampled_from([0.0, 0.1, 0.3]),
+        act=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_matches_ref(self, m, kk, n, alpha, act, seed):
+        key = jax.random.PRNGKey(seed)
+        kx, kw, kb = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (m, kk), jnp.float32)
+        w = jax.random.normal(kw, (kk, n), jnp.float32)
+        b = jax.random.normal(kb, (n,), jnp.float32)
+        out = k.matmul_bias_act(x, w, b, alpha=alpha, apply_act=act)
+        np.testing.assert_allclose(
+            out, ref.matmul_bias_act_ref(x, w, b, alpha=alpha, apply_act=act),
+            rtol=5e-5, atol=5e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bm=st.sampled_from([8, 16, 64, 128, 256]),
+        bk=st.sampled_from([128, 256]),
+        bn=st.sampled_from([128, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_tile_invariance(self, bm, bk, bn, seed):
+        # The result must not depend on the BlockSpec tiling.
+        key = jax.random.PRNGKey(seed)
+        kx, kw, kb = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (72, 150), jnp.float32)
+        w = jax.random.normal(kw, (150, 40), jnp.float32)
+        b = jax.random.normal(kb, (40,), jnp.float32)
+        out = k.matmul_bias_act(x, w, b, bm=bm, bk=bk, bn=bn)
+        np.testing.assert_allclose(out, ref.matmul_bias_act_ref(x, w, b),
+                                   rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# maxpool2d
+# ---------------------------------------------------------------------------
+
+class TestMaxpool:
+    def test_basic_stride2(self):
+        x = rand(30, (2, 16, 16, 8))
+        np.testing.assert_array_equal(k.maxpool2d(x), ref.maxpool2d_ref(x))
+
+    def test_stride1(self):
+        x = rand(31, (1, 9, 9, 4))
+        np.testing.assert_array_equal(
+            k.maxpool2d(x, window=2, stride=1),
+            ref.maxpool2d_ref(x, window=2, stride=1))
+
+    def test_window3(self):
+        x = rand(32, (1, 12, 12, 4))
+        np.testing.assert_array_equal(
+            k.maxpool2d(x, window=3, stride=3),
+            ref.maxpool2d_ref(x, window=3, stride=3))
+
+    def test_negative_values(self):
+        x = -jnp.abs(rand(33, (1, 8, 8, 2))) - 1.0
+        np.testing.assert_array_equal(k.maxpool2d(x), ref.maxpool2d_ref(x))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 3),
+        hw=st.integers(2, 20),
+        c=st.integers(1, 32),
+        window=st.sampled_from([2, 3]),
+        stride=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_matches_ref(self, b, hw, c, window, stride, seed):
+        if hw < window:
+            hw = window
+        x = jax.random.normal(jax.random.PRNGKey(seed), (b, hw, hw, c), jnp.float32)
+        np.testing.assert_array_equal(
+            k.maxpool2d(x, window=window, stride=stride),
+            ref.maxpool2d_ref(x, window=window, stride=stride))
+
+
+# ---------------------------------------------------------------------------
+# preprocess
+# ---------------------------------------------------------------------------
+
+class TestPreprocess:
+    def test_default_scale(self):
+        x = jnp.arange(0, 256, dtype=jnp.float32).reshape(1, 16, 16, 1)
+        out = k.preprocess(x)
+        np.testing.assert_allclose(out, ref.preprocess_ref(x), **F32_TOL)
+        assert float(np.asarray(out).max()) == pytest.approx(1.0)
+
+    def test_custom_scale_offset(self):
+        x = rand(40, (1, 8, 8, 3), scale=100.0)
+        out = k.preprocess(x, scale=2.0, offset=-1.0)
+        np.testing.assert_allclose(out, ref.preprocess_ref(x, scale=2.0, offset=-1.0),
+                                   **F32_TOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(hw=st.integers(1, 32), c=st.integers(1, 8), seed=st.integers(0, 2**16))
+    def test_property_matches_ref(self, hw, c, seed):
+        x = jax.random.uniform(jax.random.PRNGKey(seed), (1, hw, hw, c),
+                               jnp.float32, 0, 255)
+        np.testing.assert_allclose(k.preprocess(x), ref.preprocess_ref(x), **F32_TOL)
+
+
+# ---------------------------------------------------------------------------
+# tiling / analytic stats
+# ---------------------------------------------------------------------------
+
+class TestTilesAndStats:
+    def test_pick_tiles_divides(self):
+        for (m, kk, n) in [(1, 1, 1), (4096, 27, 16), (7, 300, 125), (128, 128, 128)]:
+            pm, pk, pn, bm, bk, bn = k._pick_tiles(m, kk, n, 128, 128, 128)
+            assert pm % bm == 0 and pk % bk == 0 and pn % bn == 0
+            assert pm >= m and pk >= kk and pn >= n
+            assert bm % k.SUBLANE == 0 and bk % k.LANE == 0 and bn % k.LANE == 0
+
+    def test_stats_utilization_bounds(self):
+        s = k.estimate_kernel_stats(4096, 27, 16)
+        assert 0.0 < s.mxu_utilization <= 1.0
+        assert s.flops > 0 and s.vmem_bytes > 0
+
+    def test_stats_perfect_tiles_full_utilization(self):
+        s = k.estimate_kernel_stats(128, 128, 128)
+        assert s.mxu_utilization == 1.0
+        assert s.grid == (1, 1, 1)
+
+    def test_stats_vmem_under_budget(self):
+        # Production tiles must fit VMEM (16 MiB) with double buffering.
+        s = k.estimate_kernel_stats(4096, 1152, 128)
+        assert 2 * s.vmem_bytes < 16 * 1024 * 1024
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 5000), kk=st.integers(1, 2000), n=st.integers(1, 300))
+    def test_property_stats_sane(self, m, kk, n):
+        s = k.estimate_kernel_stats(m, kk, n)
+        assert 0.0 < s.mxu_utilization <= 1.0
+        assert s.flops >= 2 * m * kk * n

@@ -1,0 +1,144 @@
+"""L2 model correctness: JAX/Pallas detector vs the pure-lax oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(seed=0)
+
+
+class TestConvLayer:
+    def test_matches_lax_conv(self, params):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 16, 3))
+        layer = params["conv"][0]
+        out = M.conv_layer(x, layer["w"], layer["b"])
+        expect = ref.conv2d_ref(x, layer["w"], layer["b"])
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+    def test_1x1_head(self, params):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 2, 128))
+        head = params["head"]
+        out = M.conv_layer(x, head["w"], head["b"], apply_act=False)
+        expect = ref.conv2d_ref(x, head["w"], head["b"], apply_act=False)
+        assert out.shape == (1, 2, 2, M.HEAD_CHANNELS)
+        np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(hw=st.sampled_from([4, 8, 12]), cin=st.integers(1, 8),
+           cout=st.integers(1, 16), seed=st.integers(0, 2**16))
+    def test_property_random_convs(self, hw, cin, cout, seed):
+        key = jax.random.PRNGKey(seed)
+        kx, kw, kb = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (1, hw, hw, cin))
+        w = jax.random.normal(kw, (3, 3, cin, cout)) * 0.2
+        b = jax.random.normal(kb, (cout,)) * 0.01
+        out = M.conv_layer(x, w, b)
+        np.testing.assert_allclose(out, ref.conv2d_ref(x, w, b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestTinyYolo:
+    def test_output_shape(self, params):
+        x = jnp.zeros((1, 64, 64, 3))
+        out = M.tiny_yolo(params, x)
+        assert out.shape == (1, 2, 2, M.HEAD_CHANNELS)
+
+    def test_matches_ref_f32(self, params):
+        x = jax.random.uniform(jax.random.PRNGKey(3), (1, 64, 64, 3),
+                               jnp.float32, 0, 255)
+        out = M.tiny_yolo(params, x)
+        expect = ref.tiny_yolo_ref(params, x)
+        np.testing.assert_allclose(out, expect, rtol=3e-4, atol=3e-4)
+
+    def test_bf16_variant_close_to_ref(self, params):
+        x = jax.random.uniform(jax.random.PRNGKey(4), (1, 64, 64, 3),
+                               jnp.float32, 0, 255)
+        out = M.tiny_yolo(params, x, compute_dtype=jnp.bfloat16, bm=64)
+        expect = ref.tiny_yolo_ref(params, x)
+        # bf16 through 8 layers: loose but bounded agreement.
+        np.testing.assert_allclose(out, expect, rtol=0.25, atol=0.25)
+        assert out.dtype == jnp.float32  # cast back at the boundary
+
+    def test_deterministic(self, params):
+        x = jax.random.uniform(jax.random.PRNGKey(5), (1, 64, 64, 3),
+                               jnp.float32, 0, 255)
+        a = M.tiny_yolo(params, x)
+        b = M.tiny_yolo(params, x)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_batch2(self, params):
+        x = jax.random.uniform(jax.random.PRNGKey(6), (2, 64, 64, 3),
+                               jnp.float32, 0, 255)
+        out = M.tiny_yolo(params, x)
+        assert out.shape == (2, 2, 2, M.HEAD_CHANNELS)
+        # batch rows must be independent
+        solo = M.tiny_yolo(params, x[:1])
+        np.testing.assert_allclose(out[:1], solo, rtol=1e-5, atol=1e-5)
+
+
+class TestParams:
+    def test_architecture_channels(self, params):
+        cin = 3
+        for layer, (cout, ksize, _) in zip(params["conv"], M.TINY_YOLO_LAYERS):
+            assert layer["w"].shape == (ksize, ksize, cin, cout)
+            assert layer["b"].shape == (cout,)
+            cin = cout
+        assert params["head"]["w"].shape == (1, 1, cin, M.HEAD_CHANNELS)
+
+    def test_init_deterministic(self):
+        a, b = M.init_params(0), M.init_params(0)
+        for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_init_seed_sensitivity(self):
+        a, b = M.init_params(0), M.init_params(1)
+        diffs = [
+            not np.array_equal(np.asarray(la), np.asarray(lb))
+            for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+        ]
+        assert any(diffs)
+
+    def test_flatten_roundtrip(self, params):
+        leaves, treedef, names = M.flatten_params(params)
+        assert len(leaves) == len(names) == 2 * (len(M.TINY_YOLO_LAYERS) + 1)
+        rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+        for la, lb in zip(jax.tree_util.tree_leaves(params),
+                          jax.tree_util.tree_leaves(rebuilt)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_flatten_order_stable(self, params):
+        _, _, names1 = M.flatten_params(params)
+        _, _, names2 = M.flatten_params(M.init_params(0))
+        assert names1 == names2
+
+
+class TestVariants:
+    def test_variant_lookup(self):
+        v = M.get_variant("tinyyolo-gpu")
+        assert v.input_shape == (1, 64, 64, 3)
+        assert v.output_shape == (1, 2, 2, 125)
+        with pytest.raises(KeyError):
+            M.get_variant("nope")
+
+    def test_variants_share_signature(self):
+        shapes = {v.input_shape for v in M.VARIANTS}
+        assert len(shapes) == 1, "all variants must accept the same event payload"
+
+    def test_variant_forward_matches_direct(self, params):
+        leaves, treedef, _ = M.flatten_params(params)
+        v = M.get_variant("tinyyolo-gpu")
+        x = jax.random.uniform(jax.random.PRNGKey(8), v.input_shape,
+                               jnp.float32, 0, 255)
+        out = jax.jit(v.forward(treedef))(x, *leaves)[0]
+        direct = M.tiny_yolo(params, x)
+        np.testing.assert_allclose(out, direct, rtol=1e-5, atol=1e-5)

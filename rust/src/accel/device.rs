@@ -1,0 +1,247 @@
+//! Live accelerator devices: slot occupancy and the node-local registry.
+
+use super::profile::AcceleratorProfile;
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex};
+
+/// One physical (here: virtual) accelerator with live slot tracking.
+pub struct Device {
+    /// Locally unique id, e.g. `gpu0` (paper §IV-D).
+    pub id: String,
+    pub profile: AcceleratorProfile,
+    busy: Mutex<usize>,
+}
+
+impl Device {
+    pub fn new(id: impl Into<String>, profile: AcceleratorProfile) -> Arc<Device> {
+        Arc::new(Device { id: id.into(), profile, busy: Mutex::new(0) })
+    }
+
+    /// Try to occupy one runtime slot; `None` when saturated.  The guard
+    /// frees the slot on drop, so a panicking worker thread cannot leak
+    /// device capacity.
+    pub fn try_acquire(self: &Arc<Device>) -> Option<SlotGuard> {
+        let mut busy = self.busy.lock().expect("device poisoned");
+        if *busy < self.profile.slots {
+            *busy += 1;
+            Some(SlotGuard { device: self.clone() })
+        } else {
+            None
+        }
+    }
+
+    pub fn busy_slots(&self) -> usize {
+        *self.busy.lock().expect("device poisoned")
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.profile.slots - self.busy_slots()
+    }
+
+    pub fn supports(&self, runtime: &str) -> bool {
+        self.profile.supports(runtime)
+    }
+}
+
+/// RAII slot occupancy.
+pub struct SlotGuard {
+    device: Arc<Device>,
+}
+
+impl SlotGuard {
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
+    }
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        let mut busy = self.device.busy.lock().expect("device poisoned");
+        *busy = busy.saturating_sub(1);
+    }
+}
+
+/// The node manager's device list (paper §IV-D).
+#[derive(Clone)]
+pub struct DeviceRegistry {
+    devices: Vec<Arc<Device>>,
+}
+
+impl DeviceRegistry {
+    pub fn new(devices: Vec<Arc<Device>>) -> DeviceRegistry {
+        let mut ids = BTreeSet::new();
+        for d in &devices {
+            assert!(ids.insert(d.id.clone()), "duplicate device id {}", d.id);
+        }
+        DeviceRegistry { devices }
+    }
+
+    pub fn devices(&self) -> &[Arc<Device>] {
+        &self.devices
+    }
+
+    pub fn get(&self, id: &str) -> Option<&Arc<Device>> {
+        self.devices.iter().find(|d| d.id == id)
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.devices.iter().map(|d| d.profile.slots).sum()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.devices.iter().map(|d| d.free_slots()).sum()
+    }
+
+    /// Union of logical runtimes any local accelerator implements —
+    /// exactly the `runtimes` field of the node's [`TakeFilter`].
+    pub fn supported_runtimes(&self) -> Vec<String> {
+        let mut set = BTreeSet::new();
+        for d in &self.devices {
+            for r in d.profile.runtimes.keys() {
+                set.insert(r.clone());
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Devices that implement `runtime` and currently have a free slot,
+    /// most-free-first (simple load balancing across equal accelerators).
+    /// "If a runtime is supported by multiple available accelerators, then
+    /// the node is free to choose which accelerator to use" (§IV-C) — our
+    /// choice is the least-loaded supporting device.
+    pub fn candidates(&self, runtime: &str) -> Vec<Arc<Device>> {
+        let mut out: Vec<Arc<Device>> = self
+            .devices
+            .iter()
+            .filter(|d| d.supports(runtime) && d.free_slots() > 0)
+            .cloned()
+            .collect();
+        out.sort_by_key(|d| std::cmp::Reverse(d.free_slots()));
+        out
+    }
+
+    /// Acquire a slot on the best candidate for `runtime`.
+    pub fn acquire_for(&self, runtime: &str) -> Option<SlotGuard> {
+        for d in self.candidates(runtime) {
+            if let Some(guard) = d.try_acquire() {
+                return Some(guard);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::profile::AcceleratorProfile;
+
+    fn registry() -> DeviceRegistry {
+        DeviceRegistry::new(vec![
+            Device::new("gpu0", AcceleratorProfile::quadro_k600()),
+            Device::new("gpu1", AcceleratorProfile::quadro_k600()),
+            Device::new("vpu0", AcceleratorProfile::movidius_ncs()),
+        ])
+    }
+
+    #[test]
+    fn slot_acquire_release() {
+        let d = Device::new("gpu0", AcceleratorProfile::quadro_k600());
+        assert_eq!(d.free_slots(), 2);
+        let g1 = d.try_acquire().unwrap();
+        let g2 = d.try_acquire().unwrap();
+        assert!(d.try_acquire().is_none(), "saturated at profile.slots");
+        drop(g1);
+        assert_eq!(d.free_slots(), 1);
+        drop(g2);
+        assert_eq!(d.free_slots(), 2);
+    }
+
+    #[test]
+    fn guard_releases_on_panic() {
+        let d = Device::new("gpu0", AcceleratorProfile::quadro_k600());
+        let d2 = d.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = d2.try_acquire().unwrap();
+            panic!("worker died");
+        })
+        .join();
+        assert_eq!(d.free_slots(), 2, "slot recovered after worker panic");
+    }
+
+    #[test]
+    fn registry_capacity_and_support() {
+        let r = registry();
+        assert_eq!(r.total_slots(), 5);
+        assert_eq!(r.free_slots(), 5);
+        assert_eq!(r.supported_runtimes(), vec!["tinyyolo".to_string()]);
+        assert!(r.get("vpu0").is_some());
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn candidates_prefer_least_loaded() {
+        let r = registry();
+        let _g = r.get("gpu0").unwrap().try_acquire().unwrap();
+        let cands = r.candidates("tinyyolo");
+        // gpu1 (2 free) should sort before gpu0 (1 free); vpu0 has 1 free
+        assert_eq!(cands[0].id, "gpu1");
+    }
+
+    #[test]
+    fn acquire_for_saturates_then_fails() {
+        let r = registry();
+        let mut guards = Vec::new();
+        for _ in 0..5 {
+            guards.push(r.acquire_for("tinyyolo").expect("capacity left"));
+        }
+        assert!(r.acquire_for("tinyyolo").is_none(), "all 5 slots busy");
+        guards.pop();
+        assert!(r.acquire_for("tinyyolo").is_some());
+    }
+
+    #[test]
+    fn unknown_runtime_has_no_candidates() {
+        let r = registry();
+        assert!(r.candidates("resnet").is_empty());
+        assert!(r.acquire_for("resnet").is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate device id")]
+    fn duplicate_ids_rejected() {
+        DeviceRegistry::new(vec![
+            Device::new("x", AcceleratorProfile::quadro_k600()),
+            Device::new("x", AcceleratorProfile::movidius_ncs()),
+        ]);
+    }
+
+    #[test]
+    fn property_slot_accounting_under_concurrency() {
+        use crate::prop;
+        prop::check(
+            "slots-never-oversubscribed",
+            20,
+            |rng| rng.range(1, 6) as usize,
+            |&threads| {
+                let d = Device::new("g", AcceleratorProfile::quadro_k600());
+                let mut handles = Vec::new();
+                for _ in 0..threads {
+                    let d = d.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let mut ok = true;
+                        for _ in 0..50 {
+                            if let Some(g) = d.try_acquire() {
+                                ok &= g.device().busy_slots() <= 2;
+                                drop(g);
+                            }
+                        }
+                        ok
+                    }));
+                }
+                let all_ok = handles.into_iter().all(|h| h.join().unwrap());
+                all_ok && d.busy_slots() == 0
+            },
+        );
+    }
+}

@@ -1,0 +1,80 @@
+//! Accelerator abstraction — virtual devices standing in for the paper's
+//! physical testbed (DESIGN.md substitution S1).
+//!
+//! Paper §IV-D: *"Every node manager has a list of all accelerators
+//! available to it in which it stores the type of the accelerator, a
+//! locally unique ID for it, and information necessary to schedule and
+//! balance the available resources."*  That list is [`DeviceRegistry`];
+//! the per-device scheduling information is [`AcceleratorProfile`] (slot
+//! count, service-time model, cold-start cost) plus live slot occupancy.
+//!
+//! A **virtual** device still runs the real AOT-compiled HLO through PJRT
+//! (numerics are real); the profile *paces* completion to the calibrated
+//! service time so the coordination plane observes the same rates the
+//! paper's hardware produced: Quadro K600 ≈ 1675 ms median ELat with 2
+//! runtime slots per card, Movidius NCS ≈ 1577 ms with 1 slot (§V-B).
+
+pub mod device;
+pub mod profile;
+
+pub use device::{Device, DeviceRegistry, SlotGuard};
+pub use profile::{AcceleratorKind, AcceleratorProfile, ServiceTimeModel};
+
+use std::sync::Arc;
+
+/// The paper's dual-GPU setup: 2× Quadro K600, two runtime slots each
+/// (§V-A: "the test environment can run two parallel instances per GPU").
+pub fn paper_dualgpu() -> DeviceRegistry {
+    DeviceRegistry::new(vec![
+        Device::new("gpu0", AcceleratorProfile::quadro_k600()),
+        Device::new("gpu1", AcceleratorProfile::quadro_k600()),
+    ])
+}
+
+/// The paper's full setup: both GPUs plus the Movidius Neural Compute
+/// Stick ("plus one on the Compute Stick").
+pub fn paper_all_accel() -> DeviceRegistry {
+    DeviceRegistry::new(vec![
+        Device::new("gpu0", AcceleratorProfile::quadro_k600()),
+        Device::new("gpu1", AcceleratorProfile::quadro_k600()),
+        Device::new("vpu0", AcceleratorProfile::movidius_ncs()),
+    ])
+}
+
+/// The full setup with every device serving BOTH runtime stacks
+/// (detector + classifier) — the paper's multi-runtime generality.
+pub fn paper_all_multi() -> DeviceRegistry {
+    DeviceRegistry::new(vec![
+        Device::new("gpu0", AcceleratorProfile::quadro_k600_multi()),
+        Device::new("gpu1", AcceleratorProfile::quadro_k600_multi()),
+        Device::new("vpu0", AcceleratorProfile::movidius_ncs_multi()),
+    ])
+}
+
+/// Registry from a config-described device list.
+pub fn from_profiles(profiles: Vec<(String, AcceleratorProfile)>) -> DeviceRegistry {
+    DeviceRegistry::new(
+        profiles
+            .into_iter()
+            .map(|(id, p)| Device::new(id, p))
+            .collect::<Vec<Arc<Device>>>(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_setups_have_expected_capacity() {
+        assert_eq!(paper_dualgpu().total_slots(), 4);
+        assert_eq!(paper_all_accel().total_slots(), 5);
+    }
+
+    #[test]
+    fn paper_setups_support_tinyyolo() {
+        for reg in [paper_dualgpu(), paper_all_accel()] {
+            assert!(reg.supported_runtimes().contains(&"tinyyolo".to_string()));
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Accelerator profiles: kind, capacity, service-time model, cold-start
+//! cost, and the runtime→variant mapping.
+
+use crate::json::{Json, JsonError};
+use crate::util::Rng;
+use std::collections::BTreeMap;
+
+/// Accelerator class.  The paper's thesis is that the platform should
+/// absorb *arbitrary* kinds — hence the open `Custom` arm.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum AcceleratorKind {
+    Gpu,
+    Vpu,
+    Tpu,
+    Fpga,
+    Cpu,
+    Custom(String),
+}
+
+impl AcceleratorKind {
+    pub fn as_str(&self) -> &str {
+        match self {
+            AcceleratorKind::Gpu => "gpu",
+            AcceleratorKind::Vpu => "vpu",
+            AcceleratorKind::Tpu => "tpu",
+            AcceleratorKind::Fpga => "fpga",
+            AcceleratorKind::Cpu => "cpu",
+            AcceleratorKind::Custom(s) => s,
+        }
+    }
+
+    pub fn parse(s: &str) -> AcceleratorKind {
+        match s {
+            "gpu" => AcceleratorKind::Gpu,
+            "vpu" => AcceleratorKind::Vpu,
+            "tpu" => AcceleratorKind::Tpu,
+            "fpga" => AcceleratorKind::Fpga,
+            "cpu" => AcceleratorKind::Cpu,
+            other => AcceleratorKind::Custom(other.to_string()),
+        }
+    }
+}
+
+/// Lognormal service-time model: `median_ms` with multiplicative jitter
+/// `sigma`.  Lognormal matches the right-skewed ELat distributions of
+/// inference serving (and never goes negative).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceTimeModel {
+    pub median_ms: f64,
+    pub sigma: f64,
+}
+
+impl ServiceTimeModel {
+    pub fn new(median_ms: f64, sigma: f64) -> ServiceTimeModel {
+        ServiceTimeModel { median_ms, sigma }
+    }
+
+    /// Sample one service time (ms, sim time).
+    pub fn sample_ms(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.median_ms, self.sigma)
+    }
+}
+
+/// Static description of one accelerator device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorProfile {
+    /// Marketing name (diagnostics only), e.g. `quadro-k600`.
+    pub name: String,
+    pub kind: AcceleratorKind,
+    /// Parallel runtime instances the device sustains (paper: 2 per GPU,
+    /// 1 on the compute stick).
+    pub slots: usize,
+    /// Per-invocation execution-time pacing (calibrated to §V-B medians).
+    pub service: ServiceTimeModel,
+    /// Cold-start cost of spinning up a runtime instance on this device
+    /// (driver/session init + model load), in sim-ms.
+    pub cold_start_ms: f64,
+    /// Logical runtime → artifact variant implemented for this device
+    /// kind, e.g. `tinyyolo → tinyyolo-gpu`.  This is the paper's
+    /// "different runtime instances of a runtime ... for different types
+    /// of hardware accelerators" (§IV-D).
+    pub runtimes: BTreeMap<String, String>,
+}
+
+impl AcceleratorProfile {
+    /// NVIDIA Quadro K600 profile, calibrated to the paper: median ELat
+    /// 1675 ms, 2 parallel runtime instances.  Cold start ≈ 2.5 s (CUDA
+    /// context + ONNX session creation on 2012-era hardware).
+    pub fn quadro_k600() -> AcceleratorProfile {
+        AcceleratorProfile {
+            name: "quadro-k600".into(),
+            kind: AcceleratorKind::Gpu,
+            slots: 2,
+            service: ServiceTimeModel::new(1675.0, 0.05),
+            cold_start_ms: 2500.0,
+            runtimes: BTreeMap::from([("tinyyolo".to_string(), "tinyyolo-gpu".to_string())]),
+        }
+    }
+
+    /// Intel Movidius Neural Compute Stick profile: median ELat 1577 ms,
+    /// single instance, slower cold start (USB firmware + graph upload).
+    pub fn movidius_ncs() -> AcceleratorProfile {
+        AcceleratorProfile {
+            name: "movidius-ncs".into(),
+            kind: AcceleratorKind::Vpu,
+            slots: 1,
+            service: ServiceTimeModel::new(1577.0, 0.05),
+            cold_start_ms: 4000.0,
+            runtimes: BTreeMap::from([("tinyyolo".to_string(), "tinyyolo-vpu".to_string())]),
+        }
+    }
+
+    /// K600 profile serving BOTH runtime stacks (detector + classifier) —
+    /// the paper's prototype ships two runtimes (ONNX and PyTorch) and a
+    /// node "needs to be configured correctly to support all available
+    /// runtimes for this accelerator" (§IV-D).
+    pub fn quadro_k600_multi() -> AcceleratorProfile {
+        let mut p = Self::quadro_k600();
+        p.runtimes
+            .insert("tinycls".to_string(), "tinycls-gpu".to_string());
+        p
+    }
+
+    /// NCS profile serving both runtime stacks.
+    pub fn movidius_ncs_multi() -> AcceleratorProfile {
+        let mut p = Self::movidius_ncs();
+        p.runtimes
+            .insert("tinycls".to_string(), "tinycls-vpu".to_string());
+        p
+    }
+
+    /// Variant artifact implementing `runtime` on this device, if any.
+    pub fn variant_for(&self, runtime: &str) -> Option<&str> {
+        self.runtimes.get(runtime).map(|s| s.as_str())
+    }
+
+    pub fn supports(&self, runtime: &str) -> bool {
+        self.runtimes.contains_key(runtime)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut runtimes = Json::obj();
+        for (k, v) in &self.runtimes {
+            runtimes = runtimes.set(k, v.as_str());
+        }
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("kind", self.kind.as_str())
+            .set("slots", self.slots)
+            .set("service_median_ms", self.service.median_ms)
+            .set("service_sigma", self.service.sigma)
+            .set("cold_start_ms", self.cold_start_ms)
+            .set("runtimes", runtimes)
+    }
+
+    pub fn from_json(j: &Json) -> Result<AcceleratorProfile, JsonError> {
+        let mut runtimes = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("runtimes") {
+            for (k, v) in m {
+                if let Some(s) = v.as_str() {
+                    runtimes.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        Ok(AcceleratorProfile {
+            name: j.str_of("name")?.to_string(),
+            kind: AcceleratorKind::parse(j.str_of("kind")?),
+            slots: j.usize_of("slots")?,
+            service: ServiceTimeModel::new(
+                j.f64_of("service_median_ms")?,
+                j.f64_of("service_sigma")?,
+            ),
+            cold_start_ms: j.f64_of("cold_start_ms")?,
+            runtimes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in ["gpu", "vpu", "tpu", "fpga", "cpu", "npu-x9"] {
+            assert_eq!(AcceleratorKind::parse(k).as_str(), k);
+        }
+    }
+
+    #[test]
+    fn paper_profiles_match_calibration() {
+        let gpu = AcceleratorProfile::quadro_k600();
+        assert_eq!(gpu.slots, 2);
+        assert_eq!(gpu.service.median_ms, 1675.0);
+        assert_eq!(gpu.variant_for("tinyyolo"), Some("tinyyolo-gpu"));
+        let vpu = AcceleratorProfile::movidius_ncs();
+        assert_eq!(vpu.slots, 1);
+        assert_eq!(vpu.service.median_ms, 1577.0);
+        assert_eq!(vpu.variant_for("tinyyolo"), Some("tinyyolo-vpu"));
+        assert!(!vpu.supports("resnet"));
+    }
+
+    #[test]
+    fn service_model_sample_distribution() {
+        let m = ServiceTimeModel::new(1000.0, 0.05);
+        let mut rng = Rng::new(42);
+        let mut xs: Vec<f64> = (0..4001).map(|_| m.sample_ms(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[2000];
+        assert!((median - 1000.0).abs() < 20.0, "median {median}");
+        assert!(xs.iter().all(|&x| x > 0.0));
+        // jitter is small but present
+        assert!(xs[4000] > xs[0]);
+    }
+
+    #[test]
+    fn profile_json_roundtrip() {
+        let p = AcceleratorProfile::movidius_ncs();
+        let back = AcceleratorProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn custom_kind_roundtrips_through_json() {
+        let mut p = AcceleratorProfile::quadro_k600();
+        p.kind = AcceleratorKind::Custom("inferentia".into());
+        let back = AcceleratorProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.kind, AcceleratorKind::Custom("inferentia".into()));
+    }
+}

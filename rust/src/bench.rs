@@ -1,0 +1,208 @@
+//! Experiment harness: runs a configured experiment end-to-end and emits
+//! the series/rows the paper reports (DESIGN.md §4 experiment index).
+//!
+//! Every figure/table bench under `benches/` is a thin wrapper over
+//! [`run_experiment`]; `examples/paper_figures.rs` drives the same code.
+
+use crate::config::Config;
+use crate::coordinator::cluster::{Cluster, ExecutorKind};
+use crate::metrics::{
+    self, gauges_csv, records_csv, rfast_csv, summaries_by_kind, GaugeSample, Record,
+};
+use crate::runtime::{artifacts_available, artifacts_dir, RuntimeBundle};
+use crate::scheduler::parse_policy;
+use crate::workload::{self, RunReport};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::time::Duration;
+
+/// Executor selection for an experiment run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Real AOT artifacts through PJRT (needs `make artifacts`).
+    Pjrt,
+    /// Mock executors — same coordination plane, no PJRT (fast CI path).
+    Mock,
+}
+
+/// Everything an experiment produces.
+pub struct ExperimentResult {
+    pub name: String,
+    pub report: RunReport,
+    pub records: Vec<Record>,
+    pub gauges: Vec<GaugeSample>,
+    pub rfast: Vec<(crate::util::SimTime, f64)>,
+    pub rfast_max: f64,
+    pub wall: Duration,
+}
+
+impl ExperimentResult {
+    /// Write the figure panels as CSVs under `dir`:
+    /// `<name>_series.csv` (per-invocation latencies over time — Fig a),
+    /// `<name>_gauges.csv` (#queued etc.), `<name>_rfast.csv` (Fig b).
+    pub fn write_csvs(&self, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}_series.csv", self.name)), records_csv(&self.records))?;
+        std::fs::write(dir.join(format!("{}_gauges.csv", self.name)), gauges_csv(&self.gauges))?;
+        std::fs::write(dir.join(format!("{}_rfast.csv", self.name)), rfast_csv(&self.rfast))?;
+        Ok(())
+    }
+
+    /// Human-readable summary block (the rows the paper's text reports).
+    pub fn summary_text(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("== experiment {} ==\n", self.name));
+        s.push_str(&format!(
+            "submitted {} | completed {} | succeeded {} | lost {} | wall {:.1}s\n",
+            self.report.submitted,
+            self.report.completed,
+            self.report.succeeded,
+            self.report.lost,
+            self.wall.as_secs_f64()
+        ));
+        s.push_str(&format!("max RFast: {:.2}/s\n", self.rfast_max));
+        let mut all = metrics::summarize(self.records.iter());
+        s.push_str(&format!(
+            "RLat: {} (ms)\nELat: {} (ms)\nDLat: {} (ms)\nwarm fraction: {:.2}\n",
+            all.rlat.summary(),
+            all.elat.summary(),
+            all.dlat.summary(),
+            all.warm_fraction
+        ));
+        for (kind, mut summary) in summaries_by_kind(&self.records) {
+            s.push_str(&format!(
+                "  [{kind}] n={} median ELat {:.0} ms | median RLat {:.0} ms\n",
+                summary.n,
+                summary.elat.median().unwrap_or(f64::NAN),
+                summary.rlat.median().unwrap_or(f64::NAN),
+            ));
+        }
+        let max_queued = self.gauges.iter().map(|g| g.queued).max().unwrap_or(0);
+        s.push_str(&format!("max #queued: {max_queued}\n"));
+        s
+    }
+
+    /// Median ELat per accelerator kind (paper T2).
+    pub fn median_elat_by_kind(&self) -> Vec<(String, f64)> {
+        summaries_by_kind(&self.records)
+            .into_iter()
+            .map(|(k, mut s)| (k, s.elat.median().unwrap_or(f64::NAN)))
+            .collect()
+    }
+}
+
+/// Run one experiment from a config.
+pub fn run_experiment(name: &str, cfg: &Config, engine: Engine) -> Result<ExperimentResult> {
+    let t0 = std::time::Instant::now();
+    let executor = match engine {
+        Engine::Pjrt => {
+            anyhow::ensure!(
+                artifacts_available(),
+                "artifacts not built — run `make artifacts` first"
+            );
+            ExecutorKind::Pjrt(
+                RuntimeBundle::load_dir("tinyyolo", artifacts_dir())
+                    .context("load AOT bundle")?,
+            )
+        }
+        Engine::Mock => ExecutorKind::Mock {
+            scale: 1.0,
+            delay: Duration::from_millis(1),
+        },
+    };
+
+    let mut builder = Cluster::builder()
+        .time_scale(cfg.time_scale)
+        .policy(parse_policy(&cfg.policy)?)
+        .executors(executor)
+        .gauge_interval(Duration::from_secs(1));
+    for node in &cfg.nodes {
+        builder = builder.node(&node.id, node.registry());
+    }
+    let cluster = builder.build()?;
+
+    let datasets = workload::synthetic_image_datasets(&cluster, cfg.dataset_count, 1234)?;
+    let wl = cfg.workload.clone().with_datasets(datasets);
+
+    // Generous drain: the P1 overload backlog has to clear at capacity
+    // rate; budget the whole protocol again in wall time.
+    let drain_wall =
+        Duration::from_secs_f64((wl.duration().as_secs_f64() / cfg.time_scale) * 3.0 + 30.0);
+    let report = workload::run_workload(&cluster, &wl, drain_wall)?;
+
+    let records = cluster.metrics.records();
+    let gauges = cluster.metrics.gauges();
+    let rfast = metrics::rfast_series(&records, Duration::from_secs(1));
+    let rfast_max = metrics::rfast_max(&records);
+    cluster.shutdown();
+
+    Ok(ExperimentResult {
+        name: name.to_string(),
+        report,
+        records,
+        gauges,
+        rfast,
+        rfast_max,
+        wall: t0.elapsed(),
+    })
+}
+
+/// Fig. 3: the dual-GPU setup.
+pub fn fig3_dualgpu(engine: Engine) -> Result<ExperimentResult> {
+    run_experiment("fig3_dualgpu", &Config::paper_dualgpu(), engine)
+}
+
+/// Fig. 4: GPUs + VPU.
+pub fn fig4_allaccel(engine: Engine) -> Result<ExperimentResult> {
+    run_experiment("fig4_allaccel", &Config::paper_all(), engine)
+}
+
+/// Output directory for bench CSVs.
+pub fn bench_out_dir() -> std::path::PathBuf {
+    std::env::var("HARDLESS_BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("bench_out"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fast mock-engine experiment exercising the whole harness.
+    #[test]
+    fn mock_experiment_end_to_end() {
+        let mut cfg = Config::paper_dualgpu();
+        cfg.time_scale = 40.0; // compress aggressively for the unit test
+        cfg.protocol_scale = 0.05;
+        cfg.workload = crate::workload::Workload::paper_protocol("tinyyolo", 0.5, 3.0, 0.05);
+        let result = run_experiment("unit_mock", &cfg, Engine::Mock).unwrap();
+        assert!(result.report.submitted > 50, "{}", result.report.submitted);
+        assert_eq!(result.report.lost, 0);
+        assert_eq!(result.report.succeeded, result.report.submitted);
+        assert!(result.rfast_max > 0.5, "rfast max {}", result.rfast_max);
+        // ELat pacing: medians near the K600 calibration
+        let by = result.median_elat_by_kind();
+        let gpu = by.iter().find(|(k, _)| k == "gpu").expect("gpu records");
+        assert!((gpu.1 - 1675.0).abs() < 120.0, "gpu median ELat {}", gpu.1);
+        let text = result.summary_text();
+        assert!(text.contains("max RFast"), "{text}");
+    }
+
+    #[test]
+    fn csv_outputs_written() {
+        let mut cfg = Config::paper_dualgpu();
+        cfg.time_scale = 60.0;
+        cfg.protocol_scale = 0.02;
+        cfg.workload = crate::workload::Workload::paper_protocol("tinyyolo", 0.5, 2.0, 0.02);
+        let result = run_experiment("unit_csv", &cfg, Engine::Mock).unwrap();
+        let dir = std::env::temp_dir().join(format!("hardless-bench-{}", std::process::id()));
+        result.write_csvs(&dir).unwrap();
+        for suffix in ["series", "gauges", "rfast"] {
+            let p = dir.join(format!("unit_csv_{suffix}.csv"));
+            assert!(p.is_file(), "{p:?}");
+            assert!(std::fs::read_to_string(p).unwrap().lines().count() > 1);
+        }
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,326 @@
+//! Declarative CLI substrate (clap is unavailable in this offline build).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults and requiredness, positional arguments, and generated
+//! `--help` text.  Used by the `hardless` binary, the examples, and the
+//! bench harnesses.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One option/flag specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub required: bool,
+    pub is_flag: bool,
+}
+
+/// A (sub)command specification.
+#[derive(Debug, Clone, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, opts: Vec::new(), positionals: Vec::new() }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), required: false, is_flag: false });
+        self
+    }
+
+    /// `--name <value>`, required.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, required: true, is_flag: false });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, required: false, is_flag: true });
+        self
+    }
+
+    /// Positional argument (ordered).
+    pub fn pos(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self, program: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = write!(s, "usage: {program} {}", self.name);
+        for (p, _) in &self.positionals {
+            let _ = write!(s, " <{p}>");
+        }
+        let _ = writeln!(s, " [options]");
+        for (p, h) in &self.positionals {
+            let _ = writeln!(s, "  <{p}>  {h}");
+        }
+        for o in &self.opts {
+            let mut left = format!("--{}", o.name);
+            if !o.is_flag {
+                left.push_str(" <v>");
+            }
+            let extra = match (&o.default, o.required) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, true) => " [required]".to_string(),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  {left:<24} {}{extra}", o.help);
+        }
+        s
+    }
+
+    /// Parse `args` (without the program / subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos_vals: Vec<String> = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.help_text("hardless"));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", self.help_text("hardless")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?
+                            .clone(),
+                    };
+                    values.insert(key, val);
+                }
+            } else {
+                pos_vals.push(arg.clone());
+            }
+        }
+        if pos_vals.len() > self.positionals.len() {
+            return Err(format!(
+                "unexpected positional argument '{}'",
+                pos_vals[self.positionals.len()]
+            ));
+        }
+        // defaults + requiredness
+        for o in &self.opts {
+            if o.is_flag || values.contains_key(o.name) {
+                continue;
+            }
+            match (o.default, o.required) {
+                (Some(d), _) => {
+                    values.insert(o.name.to_string(), d.to_string());
+                }
+                (None, true) => return Err(format!("missing required option --{}", o.name)),
+                _ => {}
+            }
+        }
+        let mut positionals = BTreeMap::new();
+        for ((name, _), val) in self.positionals.iter().zip(pos_vals) {
+            positionals.insert(name.to_string(), val);
+        }
+        Ok(Matches { values, flags, positionals })
+    }
+}
+
+/// Parsed argument values.
+#[derive(Debug, Clone)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: BTreeMap<String, String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_req(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("option --{name} missing after parse"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn pos(&self, name: &str) -> Option<&str> {
+        self.positionals.get(name).map(|s| s.as_str())
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| format!("option --{name} not provided"))?;
+        raw.parse::<T>()
+            .map_err(|e| format!("--{name}={raw}: {e}"))
+    }
+}
+
+/// Top-level multi-command app.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    commands: Vec<Command>,
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> App {
+        App { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, cmd: Command) -> App {
+        self.commands.push(cmd);
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "usage: {} <command> [options]\n\ncommands:", self.name);
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<18} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nrun '{} <command> --help' for command options", self.name);
+        s
+    }
+
+    /// Dispatch: returns `(command name, matches)` or a help/error string.
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Matches), String> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(self.help_text());
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(self.help_text());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.help_text()))?;
+        let matches = cmd.parse(&argv[1..])?;
+        Ok((cmd_name.clone(), matches))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("serve", "run a node")
+            .opt("nodes", "1", "node count")
+            .req("config", "config path")
+            .flag("verbose", "log more")
+            .pos("name", "cluster name")
+    }
+
+    #[test]
+    fn parses_defaults_required_flags_positionals() {
+        let m = cmd()
+            .parse(&argv(&["mycluster", "--config", "c.json", "--verbose"]))
+            .unwrap();
+        assert_eq!(m.get("nodes"), Some("1"));
+        assert_eq!(m.str_req("config"), "c.json");
+        assert!(m.flag("verbose"));
+        assert_eq!(m.pos("name"), Some("mycluster"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = cmd().parse(&argv(&["--config=x.json", "--nodes=5"])).unwrap();
+        assert_eq!(m.get("nodes"), Some("5"));
+        assert_eq!(m.parse_num::<u32>("nodes").unwrap(), 5);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = cmd().parse(&argv(&[])).unwrap_err();
+        assert!(e.contains("--config"), "{e}");
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = cmd().parse(&argv(&["--config", "c", "--what"])).unwrap_err();
+        assert!(e.contains("unknown option"), "{e}");
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let e = cmd()
+            .parse(&argv(&["--config", "c", "--verbose=yes"]))
+            .unwrap_err();
+        assert!(e.contains("takes no value"), "{e}");
+    }
+
+    #[test]
+    fn too_many_positionals_rejected() {
+        let e = cmd()
+            .parse(&argv(&["a", "b", "--config", "c"]))
+            .unwrap_err();
+        assert!(e.contains("unexpected positional"), "{e}");
+    }
+
+    #[test]
+    fn numeric_parse_errors_carry_context() {
+        let m = cmd().parse(&argv(&["--config", "c", "--nodes", "NaN"])).unwrap();
+        let e = m.parse_num::<u32>("nodes").unwrap_err();
+        assert!(e.contains("--nodes=NaN"), "{e}");
+    }
+
+    #[test]
+    fn app_dispatch_and_help() {
+        let app = App::new("hardless", "serverless accelerators")
+            .command(cmd())
+            .command(Command::new("bench", "run benches"));
+        let (name, m) = app
+            .parse(&argv(&["serve", "clu", "--config", "c"]))
+            .unwrap();
+        assert_eq!(name, "serve");
+        assert_eq!(m.pos("name"), Some("clu"));
+        let help = app.parse(&argv(&[])).unwrap_err();
+        assert!(help.contains("commands:"), "{help}");
+        let bad = app.parse(&argv(&["zzz"])).unwrap_err();
+        assert!(bad.contains("unknown command"), "{bad}");
+    }
+
+    #[test]
+    fn help_flag_returns_usage() {
+        let e = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.contains("usage:"), "{e}");
+        assert!(e.contains("[default: 1]"), "{e}");
+        assert!(e.contains("[required]"), "{e}");
+    }
+}

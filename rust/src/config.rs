@@ -1,0 +1,292 @@
+//! Typed configuration for clusters, workloads, and experiments.
+//!
+//! The `hardless` binary and the bench harness consume JSON config files;
+//! presets mirror the paper's testbed (`paper-dualgpu`, `paper-all`).
+
+use crate::accel::{AcceleratorProfile, Device, DeviceRegistry};
+use crate::json::Json;
+use crate::workload::{Arrivals, Phase, Workload};
+use anyhow::{anyhow, bail, Result};
+use std::time::Duration;
+
+/// One node's device list.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub id: String,
+    pub devices: Vec<(String, AcceleratorProfile)>,
+}
+
+impl NodeSpec {
+    pub fn registry(&self) -> DeviceRegistry {
+        DeviceRegistry::new(
+            self.devices
+                .iter()
+                .map(|(id, p)| Device::new(id.clone(), p.clone()))
+                .collect(),
+        )
+    }
+}
+
+/// Full experiment/cluster configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Sim-time compression (DESIGN.md S6). 1.0 = real time.
+    pub time_scale: f64,
+    /// Scale on the paper's 2/10/2-minute protocol durations.
+    pub protocol_scale: f64,
+    pub nodes: Vec<NodeSpec>,
+    pub workload: Workload,
+    pub policy: String,
+    /// Distinct synthetic datasets to upload.
+    pub dataset_count: usize,
+}
+
+impl Config {
+    /// The paper's dual-GPU experiment (Fig. 3) at default compression.
+    pub fn paper_dualgpu() -> Config {
+        Config {
+            time_scale: 6.0,
+            protocol_scale: 0.1,
+            nodes: vec![NodeSpec {
+                id: "node-1".into(),
+                devices: vec![
+                    ("gpu0".into(), AcceleratorProfile::quadro_k600()),
+                    ("gpu1".into(), AcceleratorProfile::quadro_k600()),
+                ],
+            }],
+            workload: Workload::paper_protocol("tinyyolo", 1.0, 4.0, 0.1),
+            policy: "warm-first".into(),
+            dataset_count: 8,
+        }
+    }
+
+    /// The paper's all-accelerator experiment (Fig. 4).
+    pub fn paper_all() -> Config {
+        let mut cfg = Config::paper_dualgpu();
+        cfg.nodes[0]
+            .devices
+            .push(("vpu0".into(), AcceleratorProfile::movidius_ncs()));
+        cfg
+    }
+
+    /// Resolve a named preset or load a JSON file.
+    pub fn load(name_or_path: &str) -> Result<Config> {
+        match name_or_path {
+            "paper-dualgpu" => Ok(Config::paper_dualgpu()),
+            "paper-all" => Ok(Config::paper_all()),
+            path => {
+                let text = std::fs::read_to_string(path)
+                    .map_err(|e| anyhow!("read config {path}: {e}"))?;
+                let j = Json::parse(&text).map_err(|e| anyhow!("parse config {path}: {e}"))?;
+                Config::from_json(&j)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let time_scale = j.get("time_scale").and_then(|v| v.as_f64()).unwrap_or(1.0);
+        let protocol_scale = j
+            .get("protocol_scale")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(1.0);
+        if time_scale <= 0.0 || protocol_scale <= 0.0 {
+            bail!("scales must be positive");
+        }
+
+        let mut nodes = Vec::new();
+        for n in j.arr_of("nodes")? {
+            let id = n.str_of("id")?.to_string();
+            let mut devices = Vec::new();
+            for d in n.arr_of("devices")? {
+                let dev_id = d.str_of("id")?.to_string();
+                let profile = match d.get("preset").and_then(|p| p.as_str()) {
+                    Some("quadro-k600") => AcceleratorProfile::quadro_k600(),
+                    Some("movidius-ncs") => AcceleratorProfile::movidius_ncs(),
+                    Some(other) => bail!("unknown device preset '{other}'"),
+                    None => AcceleratorProfile::from_json(d)?,
+                };
+                devices.push((dev_id, profile));
+            }
+            if devices.is_empty() {
+                bail!("node {id} has no devices");
+            }
+            nodes.push(NodeSpec { id, devices });
+        }
+        if nodes.is_empty() {
+            bail!("config has no nodes");
+        }
+
+        let w = j.req("workload")?;
+        let runtime = w.str_of("runtime")?.to_string();
+        let mut phases = Vec::new();
+        for p in w.arr_of("phases")? {
+            phases.push(Phase::new(
+                p.str_of("name")?,
+                Duration::from_secs_f64(p.f64_of("duration_s")?),
+                p.f64_of("target_trps")?,
+            ));
+        }
+        if phases.is_empty() {
+            bail!("workload has no phases");
+        }
+        let arrivals = match w.get("arrivals").and_then(|a| a.as_str()).unwrap_or("uniform") {
+            "uniform" => Arrivals::Uniform,
+            "poisson" => Arrivals::Poisson,
+            other => bail!("unknown arrivals '{other}'"),
+        };
+        let workload = Workload {
+            runtime,
+            phases,
+            arrivals,
+            datasets: Vec::new(),
+            seed: w.get("seed").and_then(|s| s.as_u64()).unwrap_or(42),
+        };
+
+        Ok(Config {
+            time_scale,
+            protocol_scale,
+            nodes,
+            workload,
+            policy: j
+                .get("policy")
+                .and_then(|p| p.as_str())
+                .unwrap_or("warm-first")
+                .to_string(),
+            dataset_count: j
+                .get("dataset_count")
+                .and_then(|d| d.as_usize())
+                .unwrap_or(8),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("time_scale", self.time_scale)
+            .set("protocol_scale", self.protocol_scale)
+            .set(
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::obj().set("id", n.id.as_str()).set(
+                                "devices",
+                                Json::Arr(
+                                    n.devices
+                                        .iter()
+                                        .map(|(id, p)| p.to_json().set("id", id.as_str()))
+                                        .collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            )
+            .set("workload", self.workload.to_json())
+            .set("policy", self.policy.as_str())
+            .set("dataset_count", self.dataset_count)
+    }
+
+    pub fn total_slots(&self) -> usize {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.devices.iter())
+            .map(|(_, p)| p.slots)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_testbed() {
+        let dual = Config::paper_dualgpu();
+        assert_eq!(dual.total_slots(), 4);
+        let all = Config::paper_all();
+        assert_eq!(all.total_slots(), 5);
+        assert_eq!(all.workload.phases.len(), 3);
+    }
+
+    #[test]
+    fn load_by_preset_name() {
+        assert_eq!(Config::load("paper-dualgpu").unwrap().total_slots(), 4);
+        assert_eq!(Config::load("paper-all").unwrap().total_slots(), 5);
+        assert!(Config::load("/nonexistent/file.json").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = Config::paper_all();
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.total_slots(), 5);
+        assert_eq!(back.nodes[0].devices.len(), 3);
+        assert_eq!(back.workload.phases.len(), 3);
+        assert!((back.time_scale - cfg.time_scale).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_json_with_device_presets() {
+        let j = Json::parse(
+            r#"{
+              "time_scale": 10,
+              "nodes": [{"id": "n1", "devices": [
+                {"id": "gpu0", "preset": "quadro-k600"},
+                {"id": "vpu0", "preset": "movidius-ncs"}
+              ]}],
+              "workload": {"runtime": "tinyyolo",
+                           "phases": [{"name": "P0", "duration_s": 5, "target_trps": 2}]}
+            }"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        assert_eq!(cfg.total_slots(), 3);
+        assert_eq!(cfg.policy, "warm-first");
+    }
+
+    #[test]
+    fn rejects_invalid_configs() {
+        for bad in [
+            r#"{"nodes": [], "workload": {"runtime": "r", "phases": [{"name":"P","duration_s":1,"target_trps":1}]}}"#,
+            r#"{"time_scale": -1, "nodes": [{"id":"n","devices":[{"id":"g","preset":"quadro-k600"}]}], "workload": {"runtime":"r","phases":[{"name":"P","duration_s":1,"target_trps":1}]}}"#,
+            r#"{"nodes": [{"id":"n","devices":[{"id":"g","preset":"hal9000"}]}], "workload": {"runtime":"r","phases":[{"name":"P","duration_s":1,"target_trps":1}]}}"#,
+            r#"{"nodes": [{"id":"n","devices":[{"id":"g","preset":"quadro-k600"}]}], "workload": {"runtime":"r","phases":[]}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Config::from_json(&j).is_err(), "should reject {bad}");
+        }
+    }
+
+    #[test]
+    fn loads_shipped_config_files() {
+        // The sample configs under configs/ must stay loadable — they are
+        // the documented entry point for custom fleets.
+        for name in ["configs/paper_all.json", "configs/custom_fleet.json"] {
+            if !std::path::Path::new(name).is_file() {
+                eprintln!("skipping: {name} not found (cwd {:?})", std::env::current_dir());
+                continue;
+            }
+            let cfg = Config::load(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(cfg.total_slots() > 0);
+            assert!(!cfg.workload.phases.is_empty());
+        }
+        // custom_fleet exercises inline (non-preset) profiles + a custom kind
+        if std::path::Path::new("configs/custom_fleet.json").is_file() {
+            let cfg = Config::load("configs/custom_fleet.json").unwrap();
+            assert_eq!(cfg.nodes.len(), 2);
+            let npu = &cfg.nodes[1].devices[0].1;
+            assert_eq!(npu.kind.as_str(), "npu-x9");
+            assert_eq!(npu.slots, 4);
+            assert_eq!(cfg.policy, "deadline:20000");
+        }
+    }
+
+    #[test]
+    fn registry_from_node_spec() {
+        let cfg = Config::paper_all();
+        let reg = cfg.nodes[0].registry();
+        assert_eq!(reg.total_slots(), 5);
+        assert!(reg.get("vpu0").is_some());
+    }
+}

@@ -1,0 +1,415 @@
+//! Single-process cluster assembly.
+//!
+//! Wires the full HARDLESS system — scaled clock, shared queue, object
+//! store, metrics hub, coordinator, and any number of node managers —
+//! exactly as Fig. 2 lays it out, inside one process.  Used by the
+//! examples and the bench harness; the `hardless` binary deploys the same
+//! components over TCP.
+//!
+//! Nodes can be added and removed while the cluster runs (§IV-C dynamic
+//! membership): `add_node` starts polling immediately, `remove_node`
+//! drains that node and leaves queued work for the others.
+
+use super::Coordinator;
+use crate::accel::DeviceRegistry;
+use crate::events::EventSpec;
+use crate::metrics::MetricsHub;
+use crate::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps, NodeHandle};
+use crate::queue::{InvocationQueue, MemQueue, QueueConfig};
+use crate::runtime::instance::MockExecutor;
+use crate::runtime::{RuntimeBundle, RuntimeInstance};
+use crate::scheduler::{Policy, WarmFirst};
+use crate::store::{MemStore, ObjectStore};
+use crate::util::clock::ScaledClock;
+use crate::util::Clock;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How node reserves are populated.
+pub enum ExecutorKind {
+    /// Real AOT artifacts through PJRT (requires `make artifacts`).
+    Pjrt(RuntimeBundle),
+    /// Multiple runtime bundles (multi-workload clusters, e.g. the
+    /// detector + classifier mix of `benches/mixed_workloads.rs`).
+    PjrtMulti(Vec<RuntimeBundle>),
+    /// Mock executors (coordination-plane tests and micro-benches).
+    Mock {
+        /// Output = input × scale.
+        scale: f32,
+        /// Real compute wall-time per call.
+        delay: Duration,
+    },
+}
+
+/// Builder for [`Cluster`].
+pub struct ClusterBuilder {
+    time_scale: f64,
+    queue_config: QueueConfig,
+    policy: Arc<dyn Policy>,
+    executor: ExecutorKind,
+    nodes: Vec<(NodeConfig, DeviceRegistry)>,
+    gauge_interval: Duration,
+}
+
+impl ClusterBuilder {
+    pub fn new() -> ClusterBuilder {
+        ClusterBuilder {
+            time_scale: 1.0,
+            queue_config: QueueConfig::default(),
+            policy: Arc::new(WarmFirst),
+            executor: ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) },
+            nodes: Vec::new(),
+            gauge_interval: Duration::from_secs(1),
+        }
+    }
+
+    /// Sim-time compression factor (DESIGN.md S6).
+    pub fn time_scale(mut self, scale: f64) -> Self {
+        self.time_scale = scale;
+        self
+    }
+
+    pub fn queue_config(mut self, cfg: QueueConfig) -> Self {
+        self.queue_config = cfg;
+        self
+    }
+
+    pub fn policy(mut self, policy: Arc<dyn Policy>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn executors(mut self, kind: ExecutorKind) -> Self {
+        self.executor = kind;
+        self
+    }
+
+    /// Add a node with the given devices.
+    pub fn node(mut self, id: &str, registry: DeviceRegistry) -> Self {
+        self.nodes.push((NodeConfig::new(id), registry));
+        self
+    }
+
+    /// Gauge sampling period in sim time (paper samples #queued periodically).
+    pub fn gauge_interval(mut self, d: Duration) -> Self {
+        self.gauge_interval = d;
+        self
+    }
+
+    pub fn build(self) -> Result<Cluster> {
+        let clock: Arc<ScaledClock> = ScaledClock::new(self.time_scale);
+        let queue: Arc<MemQueue> = MemQueue::with_config(clock.clone(), self.queue_config);
+        let store: Arc<MemStore> = Arc::new(MemStore::new());
+        let metrics = Arc::new(MetricsHub::new());
+        let coordinator = Coordinator::new(queue.clone(), clock.clone(), metrics.clone());
+
+        // Publish the runtime bundle(s) like a user deploying workloads.
+        match &self.executor {
+            ExecutorKind::Pjrt(bundle) => bundle.publish(store.as_ref())?,
+            ExecutorKind::PjrtMulti(bundles) => {
+                for b in bundles {
+                    b.publish(store.as_ref())?;
+                }
+            }
+            ExecutorKind::Mock { .. } => {}
+        }
+
+        let mut cluster = Cluster {
+            clock: clock.clone(),
+            queue,
+            store,
+            metrics,
+            coordinator,
+            policy: self.policy,
+            executor: self.executor,
+            nodes: Arc::new(Mutex::new(Vec::new())),
+            housekeeper: Mutex::new(None),
+            stop: Arc::new(AtomicBool::new(false)),
+            gauge_interval: self.gauge_interval,
+        };
+        for (cfg, registry) in self.nodes {
+            cluster.spawn_node_inner(cfg, registry)?;
+        }
+        cluster.start_housekeeping();
+        Ok(cluster)
+    }
+}
+
+impl Default for ClusterBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A running single-process HARDLESS deployment.
+pub struct Cluster {
+    pub clock: Arc<ScaledClock>,
+    pub queue: Arc<MemQueue>,
+    pub store: Arc<MemStore>,
+    pub metrics: Arc<MetricsHub>,
+    pub coordinator: Arc<Coordinator>,
+    policy: Arc<dyn Policy>,
+    executor: ExecutorKind,
+    nodes: Arc<Mutex<Vec<NodeHandle>>>,
+    housekeeper: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+    gauge_interval: Duration,
+}
+
+impl Cluster {
+    pub fn builder() -> ClusterBuilder {
+        ClusterBuilder::new()
+    }
+
+    fn build_reserve(&self, registry: &DeviceRegistry) -> Result<Arc<InstanceReserve>> {
+        let reserve = InstanceReserve::new();
+        match &self.executor {
+            ExecutorKind::Pjrt(bundle) => {
+                let built = reserve.prewarm_pjrt(registry, bundle)?;
+                log::info!("prewarmed {built} PJRT instances");
+            }
+            ExecutorKind::PjrtMulti(bundles) => {
+                let mut built = 0;
+                for b in bundles {
+                    built += reserve.prewarm_pjrt(registry, b)?;
+                }
+                log::info!("prewarmed {built} PJRT instances ({} bundles)", bundles.len());
+            }
+            ExecutorKind::Mock { scale, delay } => {
+                for d in registry.devices() {
+                    for variant in d.profile.runtimes.values() {
+                        for _ in 0..d.profile.slots {
+                            reserve.add(RuntimeInstance::start(
+                                variant.clone(),
+                                d.id.clone(),
+                                MockExecutor::factory(*scale, *delay),
+                            )?);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(reserve)
+    }
+
+    fn spawn_node_inner(&self, cfg: NodeConfig, registry: DeviceRegistry) -> Result<()> {
+        let reserve = self.build_reserve(&registry)?;
+        let deps = NodeDeps {
+            queue: self.queue.clone() as Arc<dyn InvocationQueue>,
+            store: self.store.clone() as Arc<dyn ObjectStore>,
+            clock: self.clock.clone() as Arc<dyn Clock>,
+            policy: self.policy.clone(),
+            reserve,
+            completions: self.coordinator.completion_sender(),
+        };
+        let handle = spawn_node(cfg, registry, deps)?;
+        self.nodes.lock().expect("poisoned").push(handle);
+        Ok(())
+    }
+
+    /// Add a node at runtime (elastic scale-out).
+    pub fn add_node(&self, id: &str, registry: DeviceRegistry) -> Result<()> {
+        self.spawn_node_inner(NodeConfig::new(id), registry)
+    }
+
+    /// Remove a node by id (elastic scale-in); its queued work remains for
+    /// the other nodes.  Returns false if no such node.
+    pub fn remove_node(&self, id: &str) -> bool {
+        let mut nodes = self.nodes.lock().expect("poisoned");
+        if let Some(pos) = nodes.iter().position(|n| n.id == id) {
+            let node = nodes.remove(pos);
+            drop(nodes); // don't hold the lock while draining
+            node.stop();
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.lock().expect("poisoned").len()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.nodes
+            .lock()
+            .expect("poisoned")
+            .iter()
+            .map(|n| n.free_slots())
+            .sum()
+    }
+
+    pub fn pool_stats(&self) -> Vec<(String, crate::runtime::pool::PoolStats)> {
+        self.nodes
+            .lock()
+            .expect("poisoned")
+            .iter()
+            .map(|n| (n.id.clone(), n.pool_stats()))
+            .collect()
+    }
+
+    fn start_housekeeping(&mut self) {
+        let queue = self.queue.clone();
+        let metrics = self.metrics.clone();
+        let clock = self.clock.clone();
+        let stop = self.stop.clone();
+        let interval = self.gauge_interval;
+        let nodes = self.nodes.clone();
+        let nodes_probe = move || -> usize {
+            nodes
+                .lock()
+                .map(|ns| ns.iter().map(|n| n.free_slots()).sum())
+                .unwrap_or(0)
+        };
+        let handle = std::thread::Builder::new()
+            .name("housekeeping".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let _ = queue.reap_expired();
+                    if let Ok(stats) = queue.stats() {
+                        metrics.sample_gauge(clock.now(), stats, nodes_probe());
+                    }
+                    clock.sleep(interval);
+                }
+            })
+            .expect("spawn housekeeping");
+        *self.housekeeper.lock().expect("poisoned") = Some(handle);
+    }
+
+    // ------------------------------------------------------------- client
+
+    /// Submit one event (async, returns invocation id).
+    pub fn submit(&self, spec: EventSpec) -> Result<String> {
+        self.coordinator.submit(spec)
+    }
+
+    /// Upload a dataset object; returns its key.
+    pub fn upload_dataset(&self, name: &str, values: &[f32]) -> Result<String> {
+        let key = crate::store::keys::dataset(name);
+        let bytes: Vec<u8> = values.iter().flat_map(|f| f.to_le_bytes()).collect();
+        self.store.put(&key, &bytes)?;
+        Ok(key)
+    }
+
+    /// Block until all submitted events are terminal (wall-clock timeout).
+    pub fn drain(&self, timeout: Duration) -> usize {
+        self.coordinator.drain(timeout)
+    }
+
+    /// Stop everything: nodes first (drain workers), then housekeeping and
+    /// the coordinator collector.
+    pub fn shutdown(&self) {
+        let nodes: Vec<NodeHandle> =
+            std::mem::take(&mut *self.nodes.lock().expect("poisoned"));
+        for n in nodes {
+            n.stop();
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.housekeeper.lock().expect("poisoned").take() {
+            let _ = h.join();
+        }
+        self.coordinator.shutdown();
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{paper_all_accel, paper_dualgpu};
+    use crate::events::Status;
+
+    fn mock_cluster() -> Cluster {
+        Cluster::builder()
+            .time_scale(200.0)
+            .executors(ExecutorKind::Mock { scale: 2.0, delay: Duration::from_millis(1) })
+            .node("node-1", paper_all_accel())
+            .gauge_interval(Duration::from_millis(500))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn submit_execute_complete() {
+        let cluster = mock_cluster();
+        let key = cluster.upload_dataset("img", &[1.0, 2.0]).unwrap();
+        let id = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+        let inv = cluster
+            .coordinator
+            .wait_for(&id, Duration::from_secs(15))
+            .unwrap();
+        assert_eq!(inv.status, Status::Succeeded);
+        assert!(inv.stamps.rlat_ms().unwrap() > 0.0);
+        assert_eq!(cluster.metrics.len(), 1);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn burst_uses_both_kinds_and_gauges_sample() {
+        let cluster = mock_cluster();
+        let key = cluster.upload_dataset("img", &[1.0; 8]).unwrap();
+        for _ in 0..15 {
+            cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+        }
+        assert_eq!(cluster.drain(Duration::from_secs(60)), 0);
+        let records = cluster.metrics.records();
+        assert_eq!(records.len(), 15);
+        let kinds: std::collections::BTreeSet<_> =
+            records.iter().filter_map(|r| r.accel_kind()).collect();
+        assert!(kinds.contains("gpu") && kinds.contains("vpu"), "{kinds:?}");
+        assert!(!cluster.metrics.gauges().is_empty(), "housekeeping sampled gauges");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn elastic_add_remove_node() {
+        let cluster = Cluster::builder()
+            .time_scale(200.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .node("node-1", paper_dualgpu())
+            .build()
+            .unwrap();
+        assert_eq!(cluster.node_count(), 1);
+        cluster.add_node("node-2", paper_all_accel()).unwrap();
+        assert_eq!(cluster.node_count(), 2);
+        assert_eq!(cluster.free_slots(), 9);
+        // removing a node leaves the system serving
+        assert!(cluster.remove_node("node-1"));
+        assert!(!cluster.remove_node("node-1"), "already gone");
+        let key = cluster.upload_dataset("img", &[1.0]).unwrap();
+        let id = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+        let inv = cluster
+            .coordinator
+            .wait_for(&id, Duration::from_secs(15))
+            .unwrap();
+        assert_eq!(inv.status, Status::Succeeded);
+        assert_eq!(inv.node.as_deref(), Some("node-2"));
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn scale_to_zero_keeps_events_queued() {
+        let cluster = Cluster::builder()
+            .time_scale(200.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .node("node-1", paper_dualgpu())
+            .build()
+            .unwrap();
+        let key = cluster.upload_dataset("img", &[1.0]).unwrap();
+        cluster.remove_node("node-1");
+        let _id = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(cluster.queue.stats().unwrap().queued, 1, "no nodes -> stays queued");
+        // scale back out: the queued event is picked up
+        cluster.add_node("node-2", paper_dualgpu()).unwrap();
+        assert_eq!(cluster.drain(Duration::from_secs(20)), 0);
+        cluster.shutdown();
+    }
+}

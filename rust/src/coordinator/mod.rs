@@ -1,0 +1,269 @@
+//! Coordinator: event gateway, completion tracking, housekeeping.
+//!
+//! The paper's "event generator" side (Fig. 1): users submit events here,
+//! the coordinator publishes them to the shared queue, nodes signal
+//! completion back (§IV-C), and the coordinator stamps `REnd`, feeds the
+//! metrics hub, and runs queue housekeeping (lease reaping + the periodic
+//! `#queued` gauge samples of §V-A).
+//!
+//! [`cluster::Cluster`] assembles the whole system — queue, store, nodes,
+//! coordinator — for single-process deployments (examples, benches); the
+//! `hardless` binary wires the same pieces over TCP for distributed runs.
+
+pub mod cluster;
+
+pub use cluster::{Cluster, ClusterBuilder};
+
+use crate::events::{EventSpec, Invocation, Status};
+use crate::metrics::MetricsHub;
+use crate::queue::InvocationQueue;
+use crate::util::{next_id, Clock};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Default)]
+struct Tracking {
+    /// Submitted and not yet completed.
+    inflight: HashMap<String, EventSpec>,
+    /// Terminal invocations in completion order.
+    completed: Vec<Invocation>,
+    submitted: usize,
+}
+
+/// The event gateway + completion sink.
+pub struct Coordinator {
+    queue: Arc<dyn InvocationQueue>,
+    clock: Arc<dyn Clock>,
+    pub metrics: Arc<MetricsHub>,
+    tracking: Mutex<Tracking>,
+    done_cv: Condvar,
+    completions_tx: mpsc::Sender<Invocation>,
+    collector: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    pub fn new(
+        queue: Arc<dyn InvocationQueue>,
+        clock: Arc<dyn Clock>,
+        metrics: Arc<MetricsHub>,
+    ) -> Arc<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Invocation>();
+        let coordinator = Arc::new(Coordinator {
+            queue,
+            clock,
+            metrics,
+            tracking: Mutex::new(Tracking::default()),
+            done_cv: Condvar::new(),
+            completions_tx: tx,
+            collector: Mutex::new(None),
+            stop: Arc::new(AtomicBool::new(false)),
+        });
+        let c2 = coordinator.clone();
+        let collector = std::thread::Builder::new()
+            .name("coordinator-collector".into())
+            .spawn(move || c2.collect_loop(rx))
+            .expect("spawn collector");
+        *coordinator.collector.lock().expect("poisoned") = Some(collector);
+        coordinator
+    }
+
+    /// The completion sink nodes report into (clone per node).
+    pub fn completion_sender(&self) -> mpsc::Sender<Invocation> {
+        self.completions_tx.clone()
+    }
+
+    fn collect_loop(self: Arc<Coordinator>, rx: mpsc::Receiver<Invocation>) {
+        loop {
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(mut inv) => {
+                    // Client-side receipt: REnd is stamped *here*, at the
+                    // event generator (paper: "when the result is received
+                    // by the benchmark client").
+                    inv.stamps.r_end = Some(self.clock.now());
+                    self.metrics.record_completion(&inv);
+                    let mut t = self.tracking.lock().expect("poisoned");
+                    t.inflight.remove(&inv.id);
+                    t.completed.push(inv);
+                    drop(t);
+                    self.done_cv.notify_all();
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+    }
+
+    /// Submit an event; returns the invocation id immediately (the paper's
+    /// async-only execution model, §IV-B).
+    pub fn submit(&self, spec: EventSpec) -> Result<String> {
+        let id = next_id("inv");
+        let inv = Invocation::new(&id, spec.clone(), self.clock.now());
+        {
+            let mut t = self.tracking.lock().expect("poisoned");
+            t.inflight.insert(id.clone(), spec);
+            t.submitted += 1;
+        }
+        self.queue.publish(inv)?;
+        Ok(id)
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.tracking.lock().expect("poisoned").submitted
+    }
+
+    pub fn completed(&self) -> Vec<Invocation> {
+        self.tracking.lock().expect("poisoned").completed.clone()
+    }
+
+    pub fn inflight_len(&self) -> usize {
+        self.tracking.lock().expect("poisoned").inflight.len()
+    }
+
+    /// Block until every submitted invocation is terminal, or `timeout`
+    /// (wall clock) elapses.  Returns the number still in flight.
+    pub fn drain(&self, timeout: Duration) -> usize {
+        let deadline = Instant::now() + timeout;
+        let mut t = self.tracking.lock().expect("poisoned");
+        while !t.inflight.is_empty() {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            let (guard, _) = self
+                .done_cv
+                .wait_timeout(t, left.min(Duration::from_millis(100)))
+                .expect("poisoned");
+            t = guard;
+        }
+        t.inflight.len()
+    }
+
+    /// Wait for one specific invocation to complete.
+    pub fn wait_for(&self, id: &str, timeout: Duration) -> Option<Invocation> {
+        let deadline = Instant::now() + timeout;
+        let mut t = self.tracking.lock().expect("poisoned");
+        loop {
+            if let Some(inv) = t.completed.iter().find(|i| i.id == id) {
+                return Some(inv.clone());
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return None;
+            }
+            let (guard, _) = self
+                .done_cv
+                .wait_timeout(t, left.min(Duration::from_millis(100)))
+                .expect("poisoned");
+            t = guard;
+        }
+    }
+
+    /// `RSuccess` so far (paper §V-A).
+    pub fn successes(&self) -> usize {
+        self.tracking
+            .lock()
+            .expect("poisoned")
+            .completed
+            .iter()
+            .filter(|i| i.status == Status::Succeeded)
+            .count()
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.collector.lock().expect("poisoned").take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::MemQueue;
+    use crate::util::clock::TestClock;
+    use crate::util::SimTime;
+
+    fn setup() -> (Arc<TestClock>, Arc<MemQueue>, Arc<Coordinator>) {
+        crate::util::reset_ids();
+        let clock = TestClock::new();
+        let queue = MemQueue::new(clock.clone());
+        let coordinator =
+            Coordinator::new(queue.clone(), clock.clone(), Arc::new(MetricsHub::new()));
+        (clock, queue, coordinator)
+    }
+
+    #[test]
+    fn submit_publishes_with_rstart() {
+        let (clock, queue, c) = setup();
+        clock.set(SimTime::from_millis(500));
+        let id = c.submit(EventSpec::new("tinyyolo", "datasets/x")).unwrap();
+        assert_eq!(c.submitted(), 1);
+        assert_eq!(c.inflight_len(), 1);
+        let lease = queue.take(&crate::queue::TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, id);
+        assert_eq!(lease.invocation.stamps.r_start, Some(SimTime::from_millis(500)));
+        c.shutdown();
+    }
+
+    #[test]
+    fn completion_stamps_rend_and_records_metrics() {
+        let (clock, _queue, c) = setup();
+        let id = c.submit(EventSpec::new("r", "d")).unwrap();
+        clock.set(SimTime::from_millis(2000));
+        let mut inv = Invocation::new(&id, EventSpec::new("r", "d"), SimTime(0));
+        inv.status = Status::Succeeded;
+        c.completion_sender().send(inv).unwrap();
+        let done = c.wait_for(&id, Duration::from_secs(5)).unwrap();
+        assert_eq!(done.stamps.r_end, Some(SimTime::from_millis(2000)));
+        assert_eq!(c.successes(), 1);
+        assert_eq!(c.inflight_len(), 0);
+        assert_eq!(c.metrics.len(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_waits_for_all() {
+        let (_clock, _queue, c) = setup();
+        let ids: Vec<String> = (0..5)
+            .map(|_| c.submit(EventSpec::new("r", "d")).unwrap())
+            .collect();
+        let tx = c.completion_sender();
+        let ids2 = ids.clone();
+        std::thread::spawn(move || {
+            for id in ids2 {
+                std::thread::sleep(Duration::from_millis(10));
+                let mut inv = Invocation::new(&id, EventSpec::new("r", "d"), SimTime(0));
+                inv.status = Status::Succeeded;
+                tx.send(inv).unwrap();
+            }
+        });
+        assert_eq!(c.drain(Duration::from_secs(10)), 0);
+        assert_eq!(c.completed().len(), 5);
+        c.shutdown();
+    }
+
+    #[test]
+    fn drain_times_out_on_lost_work() {
+        let (_clock, _queue, c) = setup();
+        c.submit(EventSpec::new("r", "d")).unwrap();
+        let left = c.drain(Duration::from_millis(150));
+        assert_eq!(left, 1, "nothing completed it");
+        c.shutdown();
+    }
+
+    #[test]
+    fn wait_for_unknown_times_out() {
+        let (_clock, _queue, c) = setup();
+        assert!(c.wait_for("inv-999", Duration::from_millis(100)).is_none());
+        c.shutdown();
+    }
+}

@@ -1,0 +1,319 @@
+//! Event and invocation model.
+//!
+//! Paper §IV-B: *"an event always consists of a data set reference that
+//! needs to be fetched and additional configuration for the run method"*;
+//! events name a **runtime** (e.g. `tinyyolo`) and a **dataset** object and
+//! are executed asynchronously with no placement guarantees.
+//!
+//! The measurement vocabulary follows §V-A exactly: per invocation we track
+//! `RStart` (client creation), `NStart` (received by node manager),
+//! `EStart`/`EEnd` (execution inside the runtime), `NEnd` (result back at
+//! the node manager) and `REnd` (result at the client), and derive
+//! `RLat = REnd − RStart`, `ELat = EEnd − EStart`, `DLat = EStart − RStart`.
+
+use crate::json::{Json, JsonError};
+use crate::util::SimTime;
+
+/// What the user submits: runtime + dataset reference + run config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventSpec {
+    /// Logical runtime name (e.g. `tinyyolo`). Nodes map this onto a
+    /// per-accelerator implementation variant at execution time.
+    pub runtime: String,
+    /// Object-store key of the input dataset (`datasets/...`).
+    pub dataset: String,
+    /// Free-form run configuration (forwarded to the runtime).
+    pub config: Json,
+}
+
+impl EventSpec {
+    pub fn new(runtime: impl Into<String>, dataset: impl Into<String>) -> EventSpec {
+        EventSpec {
+            runtime: runtime.into(),
+            dataset: dataset.into(),
+            config: Json::obj(),
+        }
+    }
+
+    pub fn with_config(mut self, config: Json) -> EventSpec {
+        self.config = config;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("runtime", self.runtime.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("config", self.config.clone())
+    }
+
+    pub fn from_json(j: &Json) -> Result<EventSpec, JsonError> {
+        Ok(EventSpec {
+            runtime: j.str_of("runtime")?.to_string(),
+            dataset: j.str_of("dataset")?.to_string(),
+            config: j.get("config").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+/// Lifecycle status of an invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Status {
+    /// Published to the queue, not yet taken by a node.
+    Queued,
+    /// Taken by a node manager, in flight.
+    Running,
+    /// Completed; result object persisted.
+    Succeeded,
+    /// Failed with a reason (also covers visibility-timeout expiry).
+    Failed(String),
+}
+
+impl Status {
+    pub fn as_str(&self) -> &str {
+        match self {
+            Status::Queued => "queued",
+            Status::Running => "running",
+            Status::Succeeded => "succeeded",
+            Status::Failed(_) => "failed",
+        }
+    }
+}
+
+/// The paper's six measurement points (sim time). `None` = not reached.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Stamps {
+    pub r_start: Option<SimTime>,
+    pub n_start: Option<SimTime>,
+    pub e_start: Option<SimTime>,
+    pub e_end: Option<SimTime>,
+    pub n_end: Option<SimTime>,
+    pub r_end: Option<SimTime>,
+}
+
+impl Stamps {
+    /// Total client-observed latency `RLat = REnd − RStart` (ms).
+    pub fn rlat_ms(&self) -> Option<f64> {
+        Some(diff_ms(self.r_start?, self.r_end?))
+    }
+
+    /// Execution latency inside the runtime `ELat = EEnd − EStart` (ms).
+    pub fn elat_ms(&self) -> Option<f64> {
+        Some(diff_ms(self.e_start?, self.e_end?))
+    }
+
+    /// Delivery delay `DLat = EStart − RStart` (ms).
+    pub fn dlat_ms(&self) -> Option<f64> {
+        Some(diff_ms(self.r_start?, self.e_start?))
+    }
+
+    /// Node-side overhead before execution (`EStart − NStart`, ms).
+    pub fn node_overhead_ms(&self) -> Option<f64> {
+        Some(diff_ms(self.n_start?, self.e_start?))
+    }
+
+    /// Queue wait (`NStart − RStart`, ms).
+    pub fn queue_wait_ms(&self) -> Option<f64> {
+        Some(diff_ms(self.r_start?, self.n_start?))
+    }
+
+    fn opt(t: Option<SimTime>) -> Json {
+        t.map(|v| Json::from(v.as_micros())).unwrap_or(Json::Null)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("r_start", Self::opt(self.r_start))
+            .set("n_start", Self::opt(self.n_start))
+            .set("e_start", Self::opt(self.e_start))
+            .set("e_end", Self::opt(self.e_end))
+            .set("n_end", Self::opt(self.n_end))
+            .set("r_end", Self::opt(self.r_end))
+    }
+
+    pub fn from_json(j: &Json) -> Stamps {
+        let g = |k: &str| j.get(k).and_then(|v| v.as_u64()).map(SimTime);
+        Stamps {
+            r_start: g("r_start"),
+            n_start: g("n_start"),
+            e_start: g("e_start"),
+            e_end: g("e_end"),
+            n_end: g("n_end"),
+            r_end: g("r_end"),
+        }
+    }
+}
+
+fn diff_ms(a: SimTime, b: SimTime) -> f64 {
+    b.since(a).as_secs_f64() * 1e3
+}
+
+/// A submitted event moving through the system.
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    pub id: String,
+    pub spec: EventSpec,
+    pub status: Status,
+    pub stamps: Stamps,
+    /// Node that executed (or is executing) the invocation.
+    pub node: Option<String>,
+    /// Accelerator device id within the node (e.g. `gpu0`).
+    pub accelerator: Option<String>,
+    /// Concrete runtime implementation variant used (e.g. `tinyyolo-vpu`).
+    pub variant: Option<String>,
+    /// Whether execution reused a warm runtime instance.
+    pub warm: bool,
+    /// Object-store key of the persisted result, once succeeded.
+    pub result_key: Option<String>,
+}
+
+impl Invocation {
+    pub fn new(id: impl Into<String>, spec: EventSpec, r_start: SimTime) -> Invocation {
+        Invocation {
+            id: id.into(),
+            spec,
+            status: Status::Queued,
+            stamps: Stamps { r_start: Some(r_start), ..Stamps::default() },
+            node: None,
+            accelerator: None,
+            variant: None,
+            warm: false,
+            result_key: None,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.status, Status::Succeeded | Status::Failed(_))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let status = match &self.status {
+            Status::Failed(reason) => Json::obj().set("failed", reason.as_str()),
+            s => Json::Str(s.as_str().to_string()),
+        };
+        let opt_s = |v: &Option<String>| {
+            v.as_ref().map(|s| Json::from(s.as_str())).unwrap_or(Json::Null)
+        };
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("spec", self.spec.to_json())
+            .set("status", status)
+            .set("stamps", self.stamps.to_json())
+            .set("node", opt_s(&self.node))
+            .set("accelerator", opt_s(&self.accelerator))
+            .set("variant", opt_s(&self.variant))
+            .set("warm", self.warm)
+            .set("result_key", opt_s(&self.result_key))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Invocation, JsonError> {
+        let status = match j.req("status")? {
+            Json::Str(s) => match s.as_str() {
+                "queued" => Status::Queued,
+                "running" => Status::Running,
+                "succeeded" => Status::Succeeded,
+                other => Status::Failed(format!("unknown status {other}")),
+            },
+            obj => Status::Failed(obj.str_of("failed").unwrap_or("unknown").to_string()),
+        };
+        let opt_s = |k: &str| {
+            j.get(k).and_then(|v| v.as_str()).map(|s| s.to_string())
+        };
+        Ok(Invocation {
+            id: j.str_of("id")?.to_string(),
+            spec: EventSpec::from_json(j.req("spec")?)?,
+            status,
+            stamps: Stamps::from_json(j.req("stamps")?),
+            node: opt_s("node"),
+            accelerator: opt_s("accelerator"),
+            variant: opt_s("variant"),
+            warm: j.get("warm").and_then(|v| v.as_bool()).unwrap_or(false),
+            result_key: opt_s("result_key"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ms: u64) -> SimTime {
+        SimTime::from_millis(ms)
+    }
+
+    #[test]
+    fn spec_roundtrip() {
+        let spec = EventSpec::new("tinyyolo", "datasets/img-1")
+            .with_config(Json::obj().set("threshold", 0.5));
+        let back = EventSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn latency_derivations_match_paper_definitions() {
+        let s = Stamps {
+            r_start: Some(t(1000)),
+            n_start: Some(t(1200)),
+            e_start: Some(t(1250)),
+            e_end: Some(t(2900)),
+            n_end: Some(t(2950)),
+            r_end: Some(t(3000)),
+        };
+        assert_eq!(s.rlat_ms(), Some(2000.0)); // REnd - RStart
+        assert_eq!(s.elat_ms(), Some(1650.0)); // EEnd - EStart
+        assert_eq!(s.dlat_ms(), Some(250.0)); // EStart - RStart
+        assert_eq!(s.queue_wait_ms(), Some(200.0));
+        assert_eq!(s.node_overhead_ms(), Some(50.0));
+    }
+
+    #[test]
+    fn incomplete_stamps_yield_none() {
+        let s = Stamps { r_start: Some(t(0)), ..Stamps::default() };
+        assert!(s.rlat_ms().is_none());
+        assert!(s.elat_ms().is_none());
+        assert!(s.dlat_ms().is_none());
+    }
+
+    #[test]
+    fn stamps_json_roundtrip_with_partials() {
+        let s = Stamps {
+            r_start: Some(t(5)),
+            n_start: None,
+            e_start: Some(t(9)),
+            ..Stamps::default()
+        };
+        assert_eq!(Stamps::from_json(&s.to_json()), s);
+    }
+
+    #[test]
+    fn invocation_roundtrip() {
+        let mut inv = Invocation::new("inv-1", EventSpec::new("tinyyolo", "datasets/d"), t(10));
+        inv.status = Status::Running;
+        inv.node = Some("node-1".into());
+        inv.accelerator = Some("gpu0".into());
+        inv.variant = Some("tinyyolo-gpu".into());
+        inv.warm = true;
+        let back = Invocation::from_json(&inv.to_json()).unwrap();
+        assert_eq!(back.id, "inv-1");
+        assert_eq!(back.status, Status::Running);
+        assert_eq!(back.node.as_deref(), Some("node-1"));
+        assert!(back.warm);
+    }
+
+    #[test]
+    fn failed_status_preserves_reason() {
+        let mut inv = Invocation::new("inv-2", EventSpec::new("r", "d"), t(0));
+        inv.status = Status::Failed("artifact missing".into());
+        let back = Invocation::from_json(&inv.to_json()).unwrap();
+        assert_eq!(back.status, Status::Failed("artifact missing".into()));
+        assert!(back.is_terminal());
+    }
+
+    #[test]
+    fn terminal_classification() {
+        let mut inv = Invocation::new("i", EventSpec::new("r", "d"), t(0));
+        assert!(!inv.is_terminal());
+        inv.status = Status::Succeeded;
+        assert!(inv.is_terminal());
+    }
+}

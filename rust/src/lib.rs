@@ -1,0 +1,43 @@
+//! # HARDLESS — generalized serverless compute for hardware accelerators
+//!
+//! A from-scratch reproduction of *"Hardless: A Generalized Serverless
+//! Compute Architecture for Hardware Processing Accelerators"* (Werner &
+//! Schirmer, TU Berlin, 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   a shared invocation queue with scan-before-take semantics
+//!   ([`queue`]), an object store for runtimes/datasets/results
+//!   ([`store`]), node managers driving heterogeneous accelerators
+//!   ([`node`], [`accel`]), warm runtime-instance pools ([`runtime`]),
+//!   and the event/measurement vocabulary of the paper's evaluation
+//!   ([`events`], [`metrics`], [`workload`]).
+//! * **Layer 2** — a TinyYOLOv2-shaped JAX detector (`python/compile/`),
+//!   AOT-lowered to HLO text per accelerator variant.
+//! * **Layer 1** — Pallas GEMM/pool kernels behind the model
+//!   (`python/compile/kernels/`), tiled for an MXU-like target.
+//!
+//! Python never runs at request time: the [`runtime`] module loads the AOT
+//! artifacts through the PJRT C API and executes them from the node
+//! managers' worker threads.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for reproduced results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod events;
+pub mod metrics;
+pub mod node;
+pub mod postprocess;
+pub mod json;
+pub mod prop;
+pub mod accel;
+pub mod queue;
+pub mod scheduler;
+pub mod runtime;
+pub mod store;
+pub mod util;
+pub mod workload;
+pub mod wire;

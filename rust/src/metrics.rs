@@ -1,0 +1,389 @@
+//! Measurement pipeline — the paper's §V-A vocabulary, end to end.
+//!
+//! Per invocation we keep the six timestamps (RStart..REnd) plus placement
+//! facts; periodically we sample gauges (`#queued`, in-flight, free
+//! slots).  From these the harness derives everything the paper plots:
+//! `RLat`, `ELat`, `DLat`, `RSuccess`, and `RFast` (trailing-10 s
+//! completion rate), split by accelerator where needed (the median-ELat
+//! table).
+
+use crate::events::{Invocation, Status};
+use crate::queue::QueueStats;
+use crate::util::{Histogram, MovingWindow, SimTime};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Completed-invocation record (immutable snapshot for analysis).
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub id: String,
+    pub runtime: String,
+    pub node: Option<String>,
+    pub accelerator: Option<String>,
+    pub variant: Option<String>,
+    pub warm: bool,
+    pub success: bool,
+    pub rlat_ms: Option<f64>,
+    pub elat_ms: Option<f64>,
+    pub dlat_ms: Option<f64>,
+    pub r_start: Option<SimTime>,
+    pub r_end: Option<SimTime>,
+}
+
+impl Record {
+    pub fn from_invocation(inv: &Invocation) -> Record {
+        Record {
+            id: inv.id.clone(),
+            runtime: inv.spec.runtime.clone(),
+            node: inv.node.clone(),
+            accelerator: inv.accelerator.clone(),
+            variant: inv.variant.clone(),
+            warm: inv.warm,
+            success: matches!(inv.status, Status::Succeeded),
+            rlat_ms: inv.stamps.rlat_ms(),
+            elat_ms: inv.stamps.elat_ms(),
+            dlat_ms: inv.stamps.dlat_ms(),
+            r_start: inv.stamps.r_start,
+            r_end: inv.stamps.r_end,
+        }
+    }
+
+    /// Accelerator kind prefix of the device id (`gpu0` → `gpu`).
+    pub fn accel_kind(&self) -> Option<String> {
+        self.accelerator
+            .as_ref()
+            .map(|a| a.trim_end_matches(|c: char| c.is_ascii_digit()).to_string())
+    }
+}
+
+/// One periodic gauge sample (paper: "#queued and which accelerator is
+/// processing which event").
+#[derive(Debug, Clone, Copy)]
+pub struct GaugeSample {
+    pub t: SimTime,
+    pub queued: usize,
+    pub in_flight: usize,
+    pub free_slots: usize,
+}
+
+/// Thread-safe collection hub shared by coordinator, nodes, and clients.
+#[derive(Default)]
+pub struct MetricsHub {
+    records: Mutex<Vec<Record>>,
+    gauges: Mutex<Vec<GaugeSample>>,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    pub fn record_completion(&self, inv: &Invocation) {
+        self.records
+            .lock()
+            .expect("metrics poisoned")
+            .push(Record::from_invocation(inv));
+    }
+
+    pub fn sample_gauge(&self, t: SimTime, q: QueueStats, free_slots: usize) {
+        self.gauges.lock().expect("metrics poisoned").push(GaugeSample {
+            t,
+            queued: q.queued,
+            in_flight: q.in_flight,
+            free_slots,
+        });
+    }
+
+    pub fn records(&self) -> Vec<Record> {
+        self.records.lock().expect("metrics poisoned").clone()
+    }
+
+    pub fn gauges(&self) -> Vec<GaugeSample> {
+        self.gauges.lock().expect("metrics poisoned").clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().expect("metrics poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Post-hoc analysis (the numbers/series the paper reports)
+// ---------------------------------------------------------------------------
+
+/// Summary over one record subset.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub success: usize,
+    pub rlat: Histogram,
+    pub elat: Histogram,
+    pub dlat: Histogram,
+    pub warm_fraction: f64,
+}
+
+pub fn summarize<'a>(records: impl IntoIterator<Item = &'a Record>) -> Summary {
+    let mut s = Summary {
+        n: 0,
+        success: 0,
+        rlat: Histogram::new(),
+        elat: Histogram::new(),
+        dlat: Histogram::new(),
+        warm_fraction: 0.0,
+    };
+    let mut warm = 0usize;
+    for r in records {
+        s.n += 1;
+        if r.success {
+            s.success += 1;
+        }
+        if r.warm {
+            warm += 1;
+        }
+        if let Some(v) = r.rlat_ms {
+            s.rlat.record(v);
+        }
+        if let Some(v) = r.elat_ms {
+            s.elat.record(v);
+        }
+        if let Some(v) = r.dlat_ms {
+            s.dlat.record(v);
+        }
+    }
+    s.warm_fraction = if s.n == 0 { 0.0 } else { warm as f64 / s.n as f64 };
+    s
+}
+
+/// Per-accelerator-kind summaries (the paper's GPU 1675 ms vs VPU 1577 ms
+/// median-ELat comparison).
+pub fn summaries_by_kind(records: &[Record]) -> BTreeMap<String, Summary> {
+    let mut groups: BTreeMap<String, Vec<&Record>> = BTreeMap::new();
+    for r in records {
+        if let Some(kind) = r.accel_kind() {
+            groups.entry(kind).or_default().push(r);
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(k, v)| (k, summarize(v.into_iter())))
+        .collect()
+}
+
+/// The paper's RFast series: successful completions in a trailing 10 s
+/// window, sampled every `step`, normalized per second.
+pub fn rfast_series(records: &[Record], step: Duration) -> Vec<(SimTime, f64)> {
+    let mut ends: Vec<SimTime> = records
+        .iter()
+        .filter(|r| r.success)
+        .filter_map(|r| r.r_end)
+        .collect();
+    ends.sort();
+    let Some(&last) = ends.last() else {
+        return Vec::new();
+    };
+    let mut window = MovingWindow::rfast();
+    for &e in &ends {
+        window.record(e);
+    }
+    let mut out = Vec::new();
+    let step_us = step.as_micros() as u64;
+    let mut t = 0u64;
+    while t <= last.as_micros() + step_us {
+        let now = SimTime(t);
+        out.push((now, window.rate_per_sec(now)));
+        t += step_us;
+    }
+    out
+}
+
+/// Maximum of the RFast series — the paper's headline per-setup number
+/// (≈3/s dual-GPU, ≈4/s all-accelerator).
+pub fn rfast_max(records: &[Record]) -> f64 {
+    rfast_series(records, Duration::from_secs(1))
+        .into_iter()
+        .map(|(_, v)| v)
+        .fold(0.0, f64::max)
+}
+
+// ---------------------------------------------------------------------------
+// CSV export (bench harness output, one file per figure panel)
+// ---------------------------------------------------------------------------
+
+/// Per-invocation series CSV: `t_s,rlat_ms,elat_ms,dlat_ms,accel,warm`.
+pub fn records_csv(records: &[Record]) -> String {
+    let mut rows: Vec<&Record> = records.iter().filter(|r| r.r_end.is_some()).collect();
+    rows.sort_by_key(|r| r.r_end);
+    let mut s = String::from("t_s,rlat_ms,elat_ms,dlat_ms,accelerator,variant,warm,success\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{:.3},{:.1},{:.1},{:.1},{},{},{},{}\n",
+            r.r_end.unwrap().as_secs_f64(),
+            r.rlat_ms.unwrap_or(f64::NAN),
+            r.elat_ms.unwrap_or(f64::NAN),
+            r.dlat_ms.unwrap_or(f64::NAN),
+            r.accelerator.as_deref().unwrap_or("-"),
+            r.variant.as_deref().unwrap_or("-"),
+            r.warm,
+            r.success,
+        ));
+    }
+    s
+}
+
+/// Gauge series CSV: `t_s,queued,in_flight,free_slots`.
+pub fn gauges_csv(gauges: &[GaugeSample]) -> String {
+    let mut s = String::from("t_s,queued,in_flight,free_slots\n");
+    for g in gauges {
+        s.push_str(&format!(
+            "{:.3},{},{},{}\n",
+            g.t.as_secs_f64(),
+            g.queued,
+            g.in_flight,
+            g.free_slots
+        ));
+    }
+    s
+}
+
+/// RFast series CSV: `t_s,rfast_per_s`.
+pub fn rfast_csv(series: &[(SimTime, f64)]) -> String {
+    let mut s = String::from("t_s,rfast_per_s\n");
+    for (t, v) in series {
+        s.push_str(&format!("{:.3},{:.3}\n", t.as_secs_f64(), v));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{EventSpec, Stamps};
+
+    fn t(ms: u64) -> SimTime {
+        SimTime::from_millis(ms)
+    }
+
+    fn rec(id: &str, accel: &str, r_start: u64, e_ms: u64, r_end: u64, warm: bool) -> Record {
+        let mut inv = Invocation::new(id, EventSpec::new("tinyyolo", "d"), t(r_start));
+        inv.status = Status::Succeeded;
+        inv.accelerator = Some(accel.to_string());
+        inv.variant = Some(format!("tinyyolo-{}", &accel[..3]));
+        inv.warm = warm;
+        inv.stamps = Stamps {
+            r_start: Some(t(r_start)),
+            n_start: Some(t(r_start + 50)),
+            e_start: Some(t(r_start + 100)),
+            e_end: Some(t(r_start + 100 + e_ms)),
+            n_end: Some(t(r_end - 10)),
+            r_end: Some(t(r_end)),
+        };
+        Record::from_invocation(&inv)
+    }
+
+    #[test]
+    fn record_derives_latencies() {
+        let r = rec("1", "gpu0", 1000, 1675, 3000, true);
+        assert_eq!(r.rlat_ms, Some(2000.0));
+        assert_eq!(r.elat_ms, Some(1675.0));
+        assert_eq!(r.dlat_ms, Some(100.0));
+        assert_eq!(r.accel_kind(), Some("gpu".to_string()));
+    }
+
+    #[test]
+    fn summarize_medians_and_warm_fraction() {
+        let records = vec![
+            rec("1", "gpu0", 0, 1600, 2000, true),
+            rec("2", "gpu0", 0, 1700, 2100, false),
+            rec("3", "gpu1", 0, 1800, 2200, true),
+        ];
+        let mut s = summarize(records.iter());
+        assert_eq!(s.n, 3);
+        assert_eq!(s.success, 3);
+        assert_eq!(s.elat.median(), Some(1700.0));
+        assert!((s.warm_fraction - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_kind_split_matches_paper_table_shape() {
+        let records = vec![
+            rec("1", "gpu0", 0, 1675, 2000, true),
+            rec("2", "gpu1", 0, 1675, 2000, true),
+            rec("3", "vpu0", 0, 1577, 1900, true),
+        ];
+        let by = summaries_by_kind(&records);
+        assert_eq!(by.len(), 2);
+        assert_eq!(by["gpu"].n, 2);
+        let mut vpu = by["vpu"].clone();
+        assert_eq!(vpu.elat.median(), Some(1577.0));
+    }
+
+    #[test]
+    fn rfast_counts_trailing_window() {
+        // 20 completions spread over 5 s -> rate 2/s once window fills
+        let records: Vec<Record> = (0..20)
+            .map(|i| rec(&format!("i{i}"), "gpu0", i * 250, 100, i * 250 + 500, true))
+            .collect();
+        let max = rfast_max(&records);
+        assert!((max - 2.0).abs() < 0.3, "max rfast {max}");
+    }
+
+    #[test]
+    fn rfast_ignores_failures() {
+        let mut records = vec![rec("ok", "gpu0", 0, 100, 500, true)];
+        let mut failed = rec("bad", "gpu0", 0, 100, 600, true);
+        failed.success = false;
+        records.push(failed);
+        let series = rfast_series(&records, Duration::from_secs(1));
+        let max = series.iter().map(|(_, v)| *v).fold(0.0, f64::max);
+        assert!((max - 0.1).abs() < 1e-9, "only 1 success in 10s window: {max}");
+    }
+
+    #[test]
+    fn hub_is_thread_safe() {
+        let hub = std::sync::Arc::new(MetricsHub::new());
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let hub = hub.clone();
+            handles.push(std::thread::spawn(move || {
+                for j in 0..25 {
+                    let mut inv = Invocation::new(
+                        format!("t{i}-{j}"),
+                        EventSpec::new("r", "d"),
+                        t(0),
+                    );
+                    inv.status = Status::Succeeded;
+                    hub.record_completion(&inv);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(hub.len(), 100);
+    }
+
+    #[test]
+    fn csv_exports_parse_back() {
+        let records = vec![rec("1", "gpu0", 0, 1675, 2000, true)];
+        let csv = records_csv(&records);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("t_s,"));
+        assert!(lines[1].contains("gpu0"));
+        let g = vec![GaugeSample { t: t(1000), queued: 5, in_flight: 4, free_slots: 1 }];
+        assert!(gauges_csv(&g).contains("1.000,5,4,1"));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(rfast_max(&[]), 0.0);
+        assert!(rfast_series(&[], Duration::from_secs(1)).is_empty());
+        let s = summarize(Vec::<Record>::new().iter());
+        assert_eq!(s.n, 0);
+    }
+}

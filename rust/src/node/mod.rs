@@ -1,0 +1,415 @@
+//! The node manager — paper §IV-D.
+//!
+//! *"The node manager is responsible for managing all aspects of a single
+//! worker node ... It starts, stops, and distributes invocations to
+//! runtime instances and assigns accelerators to them. To perform these
+//! operations, the node manager interfaces with the invocation queue to
+//! get invocations and object storage to fetch data."*
+//!
+//! One manager thread polls the shared queue with the policy-built
+//! [`TakeFilter`]; for every lease it assigns an accelerator slot and
+//! hands the invocation to a worker thread.  Workers drive a (warm or
+//! cold-started) [`RuntimeInstance`], pace execution to the device's
+//! calibrated service time, persist the decoded result, ack the queue,
+//! signal completion — and then issue the paper's *same-configuration
+//! re-take* so a warm instance drains matching work without returning to
+//! the scheduler.
+
+pub mod reserve;
+pub mod worker;
+
+pub use reserve::InstanceReserve;
+
+use crate::accel::DeviceRegistry;
+use crate::events::Invocation;
+use crate::queue::InvocationQueue;
+use crate::runtime::InstancePool;
+use crate::scheduler::{Admission, Policy};
+use crate::store::ObjectStore;
+use crate::util::Clock;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Node configuration.
+#[derive(Clone)]
+pub struct NodeConfig {
+    pub id: String,
+    /// Sim-time pause between empty queue polls.
+    pub poll_interval: Duration,
+    /// Max live runtime instances on this node (warm pool capacity).
+    pub pool_capacity: usize,
+}
+
+impl NodeConfig {
+    pub fn new(id: impl Into<String>) -> NodeConfig {
+        NodeConfig {
+            id: id.into(),
+            poll_interval: Duration::from_millis(50),
+            pool_capacity: 8,
+        }
+    }
+}
+
+/// Everything a node needs to operate (shared services).
+pub struct NodeDeps {
+    pub queue: Arc<dyn InvocationQueue>,
+    pub store: Arc<dyn ObjectStore>,
+    pub clock: Arc<dyn Clock>,
+    pub policy: Arc<dyn Policy>,
+    pub reserve: Arc<InstanceReserve>,
+    /// Completion signal back to the event generator (paper §IV-C).
+    pub completions: mpsc::Sender<Invocation>,
+}
+
+/// Handle to a running node manager.
+pub struct NodeHandle {
+    pub id: String,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    pool: Arc<InstancePool>,
+    registry: DeviceRegistry,
+}
+
+impl NodeHandle {
+    /// Signal the manager loop to stop and join it (drains in-flight
+    /// workers).  Nodes can leave at any time — queued work stays in the
+    /// shared queue untouched (dynamic membership, §IV-C).
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    pub fn pool_stats(&self) -> crate::runtime::pool::PoolStats {
+        self.pool.stats()
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.registry.free_slots()
+    }
+}
+
+impl Drop for NodeHandle {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Start a node manager over `registry`.
+pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, deps: NodeDeps) -> Result<NodeHandle> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let pool = InstancePool::new(cfg.pool_capacity);
+    let handle_pool = pool.clone();
+    let handle_registry = registry.clone();
+    let stop2 = stop.clone();
+    let id = cfg.id.clone();
+    let thread = std::thread::Builder::new()
+        .name(format!("node-mgr-{}", cfg.id))
+        .spawn(move || manager_loop(cfg, registry, pool, deps, stop2))?;
+    Ok(NodeHandle {
+        id,
+        stop,
+        thread: Some(thread),
+        pool: handle_pool,
+        registry: handle_registry,
+    })
+}
+
+fn manager_loop(
+    cfg: NodeConfig,
+    registry: DeviceRegistry,
+    pool: Arc<InstancePool>,
+    deps: NodeDeps,
+    stop: Arc<AtomicBool>,
+) {
+    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        workers.retain(|w| !w.is_finished());
+
+        // Backpressure: never take work we have no slot for.
+        if registry.free_slots() == 0 {
+            deps.clock.sleep(cfg.poll_interval);
+            continue;
+        }
+
+        let filter = deps.policy.filter(&registry, &pool);
+        // Blocking take: the wall-clock wait equals the sim poll interval
+        // under the experiment's time scale; in-proc queues return the
+        // moment work is published (condvar), remote queues degrade to a
+        // single probe per interval.
+        let wall_wait = Duration::from_secs_f64(
+            cfg.poll_interval.as_secs_f64() / deps.clock.scale(),
+        );
+        let lease = match deps.queue.take_timeout(&filter, wall_wait) {
+            Ok(Some(l)) => l,
+            Ok(None) => continue,
+            Err(e) => {
+                log::warn!("node {}: queue take failed: {e:#}", cfg.id);
+                deps.clock.sleep(cfg.poll_interval);
+                continue;
+            }
+        };
+
+        let mut inv = lease.invocation;
+        inv.node = Some(cfg.id.clone());
+        inv.stamps.n_start = Some(deps.clock.now());
+
+        // Admission (deadline policies reject without executing).
+        if let Admission::Reject(reason) = deps.policy.admit(&inv, deps.clock.now()) {
+            inv.status = crate::events::Status::Failed(reason);
+            let _ = deps.queue.ack(&inv.id);
+            let _ = deps.completions.send(inv);
+            continue;
+        }
+
+        // Assign an accelerator (§IV-C: node chooses among supporting
+        // devices; ours picks the least-loaded, preferring warm-capable).
+        let Some(slot) = worker::pick_slot(&registry, &pool, &inv.spec.runtime, lease.warm_hit)
+        else {
+            // Raced out of capacity: hand the event back untouched.
+            let _ = deps.queue.release(&inv.id);
+            deps.clock.sleep(cfg.poll_interval);
+            continue;
+        };
+
+        let ctx = worker::WorkerCtx {
+            node_id: cfg.id.clone(),
+            pool: pool.clone(),
+            queue: deps.queue.clone(),
+            store: deps.store.clone(),
+            clock: deps.clock.clone(),
+            policy: deps.policy.clone(),
+            reserve: deps.reserve.clone(),
+            completions: deps.completions.clone(),
+        };
+        let worker = std::thread::Builder::new()
+            .name(format!("worker-{}", inv.id))
+            .spawn(move || worker::run_invocations(ctx, inv, slot))
+            .expect("spawn worker");
+        workers.push(worker);
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{paper_all_accel, paper_dualgpu};
+    use crate::events::{EventSpec, Status};
+    use crate::queue::MemQueue;
+    use crate::runtime::instance::MockExecutor;
+    use crate::runtime::RuntimeInstance;
+    use crate::scheduler::WarmFirst;
+    use crate::store::{MemStore, ObjectStore};
+    use crate::util::clock::ScaledClock;
+    use crate::util::SimTime;
+
+    /// Full in-process node test rig with mock executors (no PJRT).
+    struct Rig {
+        queue: Arc<MemQueue>,
+        store: Arc<MemStore>,
+        clock: Arc<ScaledClock>,
+        completions: mpsc::Receiver<Invocation>,
+        node: NodeHandle,
+    }
+
+    fn rig(registry: DeviceRegistry) -> Rig {
+        // 100x compression: mock delays of sim-ms become wall-µs.
+        let clock: Arc<ScaledClock> = ScaledClock::new(100.0);
+        let queue = MemQueue::new(clock.clone());
+        let store = Arc::new(MemStore::new());
+        let reserve = InstanceReserve::new();
+        // Mock instances for every (variant, device, slot).
+        for d in registry.devices() {
+            for variant in d.profile.runtimes.values() {
+                for _ in 0..d.profile.slots {
+                    reserve.add(
+                        RuntimeInstance::start(
+                            variant.clone(),
+                            d.id.clone(),
+                            MockExecutor::factory(2.0, Duration::from_millis(1)),
+                        )
+                        .unwrap(),
+                    );
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let deps = NodeDeps {
+            queue: queue.clone(),
+            store: store.clone(),
+            clock: clock.clone(),
+            policy: Arc::new(WarmFirst),
+            reserve,
+            completions: tx,
+        };
+        let mut cfg = NodeConfig::new("node-1");
+        cfg.poll_interval = Duration::from_millis(20);
+        let node = spawn_node(cfg, registry, deps).unwrap();
+        Rig { queue, store, clock, completions: rx, node }
+    }
+
+    fn dataset(store: &MemStore, name: &str, values: &[f32]) -> String {
+        let key = format!("datasets/{name}");
+        let bytes: Vec<u8> = values.iter().flat_map(|f| f.to_le_bytes()).collect();
+        store.put(&key, &bytes).unwrap();
+        key
+    }
+
+    fn submit(rig: &Rig, id: &str, dataset_key: &str) {
+        let inv = Invocation::new(
+            id,
+            EventSpec::new("tinyyolo", dataset_key),
+            rig.clock.now(),
+        );
+        rig.queue.publish(inv).unwrap();
+    }
+
+    #[test]
+    fn executes_one_invocation_end_to_end() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0, 2.0, 3.0]);
+        submit(&r, "inv-a", &key);
+        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(done.id, "inv-a");
+        assert_eq!(done.status, Status::Succeeded);
+        assert_eq!(done.node.as_deref(), Some("node-1"));
+        let accel = done.accelerator.clone().unwrap();
+        assert!(accel.starts_with("gpu"), "{accel}");
+        assert_eq!(done.variant.as_deref(), Some("tinyyolo-gpu"));
+        // stamps are monotone
+        let s = &done.stamps;
+        assert!(s.r_start <= s.n_start && s.n_start <= s.e_start);
+        assert!(s.e_start < s.e_end && s.e_end <= s.n_end);
+        // result persisted (mock output = input * 2)
+        let result_key = done.result_key.clone().unwrap();
+        let body = r.store.get(&result_key).unwrap();
+        let floats: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(floats, vec![2.0, 4.0, 6.0]);
+        // queue fully drained + acked
+        let qs = r.queue.stats().unwrap();
+        assert_eq!((qs.queued, qs.in_flight, qs.acked), (0, 0, 1));
+        r.node.stop();
+    }
+
+    #[test]
+    fn missing_dataset_fails_event() {
+        let r = rig(paper_dualgpu());
+        submit(&r, "inv-miss", "datasets/does-not-exist");
+        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        match &done.status {
+            Status::Failed(reason) => assert!(reason.contains("not found"), "{reason}"),
+            s => panic!("expected failure, got {s:?}"),
+        }
+        assert_eq!(r.queue.stats().unwrap().acked, 1, "failed events still ack");
+        r.node.stop();
+    }
+
+    #[test]
+    fn elat_is_paced_to_profile() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[0.5; 16]);
+        submit(&r, "inv-pace", &key);
+        let done = r.completions.recv_timeout(Duration::from_secs(15)).unwrap();
+        let elat = done.stamps.elat_ms().unwrap();
+        // K600 profile: lognormal(median 1675 ms, σ=0.05) -> overwhelmingly
+        // within [1400, 2000] sim-ms.
+        assert!((1300.0..2200.0).contains(&elat), "ELat {elat} ms");
+        r.node.stop();
+    }
+
+    #[test]
+    fn saturates_all_slots_and_drains_backlog() {
+        let r = rig(paper_all_accel());
+        let key = dataset(&r.store, "img", &[1.0; 8]);
+        for i in 0..20 {
+            submit(&r, &format!("inv-{i}"), &key);
+        }
+        let mut done = Vec::new();
+        for _ in 0..20 {
+            done.push(r.completions.recv_timeout(Duration::from_secs(30)).unwrap());
+        }
+        assert!(done.iter().all(|d| d.status == Status::Succeeded));
+        // both accelerator kinds participated (the paper's heterogeneity
+        // claim: VPU absorbs work without user intervention)
+        let kinds: std::collections::BTreeSet<String> = done
+            .iter()
+            .map(|d| d.accelerator.clone().unwrap())
+            .map(|a| a.trim_end_matches(|c: char| c.is_ascii_digit()).to_string())
+            .collect();
+        assert!(kinds.contains("gpu"), "{kinds:?}");
+        assert!(kinds.contains("vpu"), "{kinds:?}");
+        // VPU events ran the vpu variant
+        for d in &done {
+            if d.accelerator.as_deref() == Some("vpu0") {
+                assert_eq!(d.variant.as_deref(), Some("tinyyolo-vpu"));
+            }
+        }
+        r.node.stop();
+    }
+
+    #[test]
+    fn warm_reuse_after_first_completion() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0; 4]);
+        for i in 0..6 {
+            submit(&r, &format!("inv-{i}"), &key);
+        }
+        let mut warm_count = 0;
+        for _ in 0..6 {
+            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            if d.warm {
+                warm_count += 1;
+            }
+        }
+        assert!(
+            warm_count >= 2,
+            "with 4 slots and 6 events, at least 2 must reuse warm instances (got {warm_count})"
+        );
+        r.node.stop();
+    }
+
+    #[test]
+    fn node_stop_is_clean_and_releases_work() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0; 4]);
+        submit(&r, "inv-1", &key);
+        let _ = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        r.node.stop();
+        // after stop, new publishes stay queued (no one polls)
+        let inv = Invocation::new("inv-2", EventSpec::new("tinyyolo", &key), SimTime(0));
+        r.queue.publish(inv).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(r.queue.stats().unwrap().queued, 1);
+    }
+
+    #[test]
+    fn unsupported_runtime_left_in_queue() {
+        let r = rig(paper_dualgpu());
+        let inv = Invocation::new(
+            "inv-alien",
+            EventSpec::new("bert-large", "datasets/x"),
+            r.clock.now(),
+        );
+        r.queue.publish(inv).unwrap();
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(
+            r.queue.stats().unwrap().queued,
+            1,
+            "node must not take runtimes it cannot serve"
+        );
+        r.node.stop();
+    }
+}

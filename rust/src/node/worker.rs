@@ -1,0 +1,310 @@
+//! Per-invocation worker: the node's execution path.
+//!
+//! A worker owns one accelerator slot for its lifetime.  It checks out a
+//! runtime instance (warm from the pool, or cold-started from the
+//! reserve with the profile's cold-start pacing), then loops:
+//!
+//!   fetch dataset → execute via PJRT → pace to the device's service
+//!   time → postprocess + persist result → ack → signal completion →
+//!   same-config re-take (§IV-D warm reuse) → repeat until the queue has
+//!   no matching work.
+
+use crate::accel::{Device, DeviceRegistry, SlotGuard};
+use crate::events::{Invocation, Status};
+use crate::postprocess;
+use crate::queue::{InvocationQueue, TakeFilter};
+use crate::runtime::{InstancePool, RuntimeInstance};
+use crate::scheduler::{warm_runtimes, Admission, Policy};
+use crate::store::{keys, ObjectStore};
+use crate::util::{Clock, Rng};
+use anyhow::{anyhow, Context, Result};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Shared services a worker needs.
+pub struct WorkerCtx {
+    pub node_id: String,
+    pub pool: Arc<InstancePool>,
+    pub queue: Arc<dyn InvocationQueue>,
+    pub store: Arc<dyn ObjectStore>,
+    pub clock: Arc<dyn Clock>,
+    pub policy: Arc<dyn Policy>,
+    pub reserve: Arc<crate::node::InstanceReserve>,
+    pub completions: mpsc::Sender<Invocation>,
+}
+
+/// Pick a device + slot for `runtime`.  When the lease was a warm hit,
+/// prefer a device that actually holds an idle warm instance; otherwise
+/// least-loaded wins (§IV-C: the node is free to choose).
+pub fn pick_slot(
+    registry: &DeviceRegistry,
+    pool: &InstancePool,
+    runtime: &str,
+    warm_hit: bool,
+) -> Option<SlotGuard> {
+    if warm_hit {
+        for d in registry.candidates(runtime) {
+            let has_warm = d
+                .profile
+                .variant_for(runtime)
+                .map(|v| pool.has_idle(v, &d.id))
+                .unwrap_or(false);
+            if has_warm {
+                if let Some(guard) = d.try_acquire() {
+                    return Some(guard);
+                }
+            }
+        }
+    }
+    registry.acquire_for(runtime)
+}
+
+/// Deterministic per-invocation RNG (service-time jitter reproducibility).
+fn rng_for(invocation_id: &str) -> Rng {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in invocation_id.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    Rng::new(h)
+}
+
+/// Entry point for a worker thread: run the leased invocation, then drain
+/// same-config work while the instance is hot.
+pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
+    let device = slot.device().clone();
+    let runtime = first.spec.runtime.clone();
+
+    // Resolve the accelerator-specific implementation variant.
+    let Some(variant) = device.profile.variant_for(&runtime).map(String::from) else {
+        fail(&ctx, first, format!("device {} does not implement {runtime}", device.id));
+        return;
+    };
+
+    // Check out an instance: warm from the pool, or cold via the reserve
+    // with the profile's cold-start pacing applied in sim time.  The
+    // reserve can be transiently empty while another worker on this
+    // device is between "finished executing" and "returned the instance
+    // to the pool" — retry briefly (a warm instance or reserve slot shows
+    // up as soon as that worker unwinds) before declaring failure.
+    let mut pooled = None;
+    let mut last_err = None;
+    for _attempt in 0..50 {
+        let attempt = {
+            let reserve = ctx.reserve.clone();
+            let clock = ctx.clock.clone();
+            let profile = device.profile.clone();
+            let v = variant.clone();
+            let d = device.id.clone();
+            ctx.pool.acquire_or_start(&variant, &device.id, move || {
+                // Pop first (cheap, fallible), pace the cold start after.
+                let instance = reserve.pop(&v, &d).ok_or_else(|| {
+                    anyhow!("instance reserve exhausted for {v} on {d}")
+                })?;
+                clock.sleep(Duration::from_secs_f64(profile.cold_start_ms / 1e3));
+                Ok(instance)
+            })
+        };
+        match attempt {
+            Ok(p) => {
+                pooled = Some(p);
+                break;
+            }
+            Err(e) => {
+                last_err = Some(e);
+                ctx.clock.sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    let pooled = match pooled {
+        Some(p) => p,
+        None => {
+            fail(
+                &ctx,
+                first,
+                format!(
+                    "cold start failed after retries: {:#}",
+                    last_err.unwrap_or_else(|| anyhow!("unknown"))
+                ),
+            );
+            return;
+        }
+    };
+
+    let mut inv = first;
+    let mut warm = pooled.warm;
+    loop {
+        inv.accelerator = Some(device.id.clone());
+        inv.variant = Some(variant.clone());
+        inv.warm = warm;
+        match execute_one(&ctx, &device, &pooled.instance, &mut inv) {
+            Ok(()) => {
+                inv.status = Status::Succeeded;
+            }
+            Err(e) => {
+                inv.status = Status::Failed(format!("{e:#}"));
+            }
+        }
+        inv.stamps.n_end = Some(ctx.clock.now());
+        let _ = ctx.queue.ack(&inv.id);
+        let _ = ctx.completions.send(inv);
+
+        // §IV-D: "When an already running invocation is finished, they
+        // query whether the queue has invocations that have the same
+        // configuration so that the worker node can reuse an existing
+        // runtime instance."
+        match ctx.queue.take(&TakeFilter::warm_reuse(&runtime)) {
+            Ok(Some(lease)) => {
+                let mut next = lease.invocation;
+                next.node = Some(ctx.node_id.clone());
+                next.stamps.n_start = Some(ctx.clock.now());
+                if let Admission::Reject(reason) = ctx.policy.admit(&next, ctx.clock.now()) {
+                    next.status = Status::Failed(reason);
+                    let _ = ctx.queue.ack(&next.id);
+                    let _ = ctx.completions.send(next);
+                    break;
+                }
+                inv = next;
+                warm = true; // instance is hot by construction
+            }
+            _ => break,
+        }
+    }
+    drop(pooled);
+    drop(slot);
+}
+
+/// One execution: fetch → infer → pace → persist.
+fn execute_one(
+    ctx: &WorkerCtx,
+    device: &Arc<Device>,
+    instance: &Arc<RuntimeInstance>,
+    inv: &mut Invocation,
+) -> Result<()> {
+    // Fetch the dataset (stateless workloads fetch their inputs, §IV-A).
+    let data = ctx
+        .store
+        .get(&inv.spec.dataset)
+        .with_context(|| format!("dataset {}", inv.spec.dataset))?;
+    let input: Vec<f32> = data
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    // Execute on the accelerator.
+    inv.stamps.e_start = Some(ctx.clock.now());
+    let outcome = instance.exec(input)?;
+
+    // Pace to the device's calibrated service time: the real PJRT compute
+    // already consumed `compute_wall * scale` sim-ms; sleep the remainder
+    // of the sampled lognormal service time (DESIGN.md S1).
+    let mut rng = rng_for(&inv.id);
+    let target_ms = device.profile.service.sample_ms(&mut rng);
+    let spent_ms = outcome.compute_wall.as_secs_f64() * 1e3 * ctx.clock.scale();
+    if target_ms > spent_ms {
+        ctx.clock
+            .sleep(Duration::from_secs_f64((target_ms - spent_ms) / 1e3));
+    }
+    inv.stamps.e_end = Some(ctx.clock.now());
+
+    // Persist the result before terminating (§IV-A).  Detection-shaped
+    // outputs (. * 125 grid channels) are decoded + NMS'd; anything else
+    // is stored raw (mock executors, foreign runtimes).
+    let result_key = keys::result(&inv.id);
+    let cfg = postprocess::DecodeConfig::default();
+    let per_cell = cfg.anchors.len() * cfg.stride();
+    let body: Vec<u8> = if outcome.output.len() >= per_cell
+        && outcome.output.len() % per_cell == 0
+        && is_square(outcome.output.len() / per_cell)
+    {
+        let cells = outcome.output.len() / per_cell;
+        let g = (cells as f64).sqrt() as usize;
+        let dets = postprocess::postprocess(&outcome.output, g, g, &cfg);
+        postprocess::detections_to_json(&dets)
+            .to_string()
+            .into_bytes()
+    } else {
+        outcome
+            .output
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect()
+    };
+    ctx.store.put(&result_key, &body)?;
+    inv.result_key = Some(result_key);
+    Ok(())
+}
+
+fn is_square(n: usize) -> bool {
+    let r = (n as f64).sqrt() as usize;
+    r * r == n
+}
+
+fn fail(ctx: &WorkerCtx, mut inv: Invocation, reason: String) {
+    inv.status = Status::Failed(reason);
+    inv.stamps.n_end = Some(ctx.clock.now());
+    let _ = ctx.queue.ack(&inv.id);
+    let _ = ctx.completions.send(inv);
+}
+
+/// Exposed for scheduler integration tests.
+pub fn warm_set(registry: &DeviceRegistry, pool: &InstancePool) -> Vec<String> {
+    warm_runtimes(registry, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::paper_all_accel;
+    use crate::runtime::instance::MockExecutor;
+
+    #[test]
+    fn rng_for_is_deterministic_per_id() {
+        let a = rng_for("inv-1").next_u64();
+        let b = rng_for("inv-1").next_u64();
+        let c = rng_for("inv-2").next_u64();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn is_square_checks() {
+        assert!(is_square(1));
+        assert!(is_square(4));
+        assert!(!is_square(2));
+        assert!(!is_square(8));
+    }
+
+    #[test]
+    fn pick_slot_prefers_warm_device_on_warm_hit() {
+        let reg = paper_all_accel();
+        let pool = InstancePool::new(8);
+        // make gpu1 warm for the gpu variant
+        drop(
+            pool.acquire_or_start("tinyyolo-gpu", "gpu1", || {
+                RuntimeInstance::start(
+                    "tinyyolo-gpu",
+                    "gpu1",
+                    MockExecutor::factory(1.0, Duration::ZERO),
+                )
+            })
+            .unwrap(),
+        );
+        let slot = pick_slot(&reg, &pool, "tinyyolo", true).unwrap();
+        assert_eq!(slot.device().id, "gpu1", "warm-hit placement follows the warm instance");
+        // non-warm pick just wants capacity
+        let slot2 = pick_slot(&reg, &pool, "tinyyolo", false).unwrap();
+        assert!(["gpu0", "gpu1", "vpu0"].contains(&slot2.device().id.as_str()));
+    }
+
+    #[test]
+    fn pick_slot_none_when_saturated() {
+        let reg = paper_all_accel();
+        let pool = InstancePool::new(8);
+        let mut guards = Vec::new();
+        while let Some(g) = reg.acquire_for("tinyyolo") {
+            guards.push(g);
+        }
+        assert!(pick_slot(&reg, &pool, "tinyyolo", false).is_none());
+    }
+}

@@ -1,0 +1,374 @@
+//! YOLO detection post-processing, in Rust on the request path.
+//!
+//! The paper's workload is tinyYOLOv2 image detection; the runtime's raw
+//! output is the `[GH, GW, A*(5+C)]` grid of box logits.  Decoding
+//! (sigmoid offsets, anchor scaling, class softmax) and non-maximum
+//! suppression run here — the node persists decoded detections, not raw
+//! logits, into the result object (matching "results must be persisted
+//! elsewhere before terminating execution", §IV-A).
+
+use crate::json::Json;
+
+/// One decoded detection box (grid-relative units).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    /// Box center (grid units).
+    pub cx: f32,
+    pub cy: f32,
+    /// Box size (grid units).
+    pub w: f32,
+    pub h: f32,
+    /// Objectness × best-class probability.
+    pub score: f32,
+    pub class: usize,
+}
+
+impl Detection {
+    /// Axis-aligned corners.
+    pub fn corners(&self) -> (f32, f32, f32, f32) {
+        (
+            self.cx - self.w / 2.0,
+            self.cy - self.h / 2.0,
+            self.cx + self.w / 2.0,
+            self.cy + self.h / 2.0,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("cx", self.cx as f64)
+            .set("cy", self.cy as f64)
+            .set("w", self.w as f64)
+            .set("h", self.h as f64)
+            .set("score", self.score as f64)
+            .set("class", self.class)
+    }
+}
+
+/// Intersection-over-union of two detections.
+pub fn iou(a: &Detection, b: &Detection) -> f32 {
+    let (ax0, ay0, ax1, ay1) = a.corners();
+    let (bx0, by0, bx1, by1) = b.corners();
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let union = a.w * a.h + b.w * b.h - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+fn softmax_argmax(logits: &[f32]) -> (usize, f32) {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    let (idx, &best) = exps
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .expect("non-empty class logits");
+    (idx, best / sum)
+}
+
+/// Decoder configuration (anchors from the AOT manifest).
+#[derive(Debug, Clone)]
+pub struct DecodeConfig {
+    pub anchors: Vec<(f32, f32)>,
+    pub num_classes: usize,
+    pub score_threshold: f32,
+    pub iou_threshold: f32,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> DecodeConfig {
+        // tinyYOLOv2-VOC anchors, as emitted by python/compile/aot.py.
+        DecodeConfig {
+            anchors: vec![
+                (1.08, 1.19),
+                (3.42, 4.41),
+                (6.63, 11.38),
+                (9.42, 5.11),
+                (16.62, 10.52),
+            ],
+            num_classes: 20,
+            score_threshold: 0.3,
+            iou_threshold: 0.45,
+        }
+    }
+}
+
+impl DecodeConfig {
+    pub fn stride(&self) -> usize {
+        5 + self.num_classes
+    }
+}
+
+/// Decode the raw `[gh, gw, A*(5+C)]` grid into thresholded detections.
+pub fn decode_grid(grid: &[f32], gh: usize, gw: usize, cfg: &DecodeConfig) -> Vec<Detection> {
+    let stride = cfg.stride();
+    let per_cell = cfg.anchors.len() * stride;
+    assert_eq!(
+        grid.len(),
+        gh * gw * per_cell,
+        "grid of {} f32s does not match {gh}x{gw}x{per_cell}",
+        grid.len()
+    );
+    let mut out = Vec::new();
+    for y in 0..gh {
+        for x in 0..gw {
+            let cell = &grid[(y * gw + x) * per_cell..(y * gw + x + 1) * per_cell];
+            for (a, &(aw, ah)) in cfg.anchors.iter().enumerate() {
+                let b = &cell[a * stride..(a + 1) * stride];
+                let objectness = sigmoid(b[4]);
+                if objectness < cfg.score_threshold {
+                    continue; // cheap early exit before softmax
+                }
+                let (class, class_p) = softmax_argmax(&b[5..]);
+                let score = objectness * class_p;
+                if score < cfg.score_threshold {
+                    continue;
+                }
+                out.push(Detection {
+                    cx: x as f32 + sigmoid(b[0]),
+                    cy: y as f32 + sigmoid(b[1]),
+                    w: aw * b[2].exp(),
+                    h: ah * b[3].exp(),
+                    score,
+                    class,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Greedy per-class non-maximum suppression.
+pub fn nms(mut dets: Vec<Detection>, iou_threshold: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    let mut keep: Vec<Detection> = Vec::new();
+    for d in dets {
+        let suppressed = keep
+            .iter()
+            .any(|k| k.class == d.class && iou(k, &d) > iou_threshold);
+        if !suppressed {
+            keep.push(d);
+        }
+    }
+    keep
+}
+
+/// Full pipeline: raw grid → decoded, NMS-filtered detections.
+pub fn postprocess(grid: &[f32], gh: usize, gw: usize, cfg: &DecodeConfig) -> Vec<Detection> {
+    nms(decode_grid(grid, gh, gw, cfg), cfg.iou_threshold)
+}
+
+/// Serialize detections into the result object body.
+pub fn detections_to_json(dets: &[Detection]) -> Json {
+    Json::obj()
+        .set("count", dets.len())
+        .set("detections", Json::Arr(dets.iter().map(|d| d.to_json()).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cx: f32, cy: f32, w: f32, h: f32, score: f32, class: usize) -> Detection {
+        Detection { cx, cy, w, h, score, class }
+    }
+
+    #[test]
+    fn iou_identical_is_one() {
+        let a = det(1.0, 1.0, 2.0, 2.0, 0.9, 0);
+        assert!((iou(&a, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        let a = det(0.0, 0.0, 1.0, 1.0, 0.9, 0);
+        let b = det(5.0, 5.0, 1.0, 1.0, 0.9, 0);
+        assert_eq!(iou(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = det(0.0, 0.0, 2.0, 2.0, 0.9, 0);
+        let b = det(1.0, 0.0, 2.0, 2.0, 0.9, 0);
+        // inter = 1x2 = 2, union = 4+4-2 = 6
+        assert!((iou(&a, &b) - 2.0 / 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nms_suppresses_same_class_only() {
+        let dets = vec![
+            det(1.0, 1.0, 2.0, 2.0, 0.9, 0),
+            det(1.1, 1.0, 2.0, 2.0, 0.8, 0), // overlaps class 0 -> suppressed
+            det(1.1, 1.0, 2.0, 2.0, 0.7, 1), // same box, other class -> kept
+        ];
+        let kept = nms(dets, 0.45);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].score, 0.9);
+        assert_eq!(kept[1].class, 1);
+    }
+
+    #[test]
+    fn nms_keeps_highest_score() {
+        let dets = vec![
+            det(1.0, 1.0, 2.0, 2.0, 0.5, 0),
+            det(1.0, 1.0, 2.0, 2.0, 0.95, 0),
+        ];
+        let kept = nms(dets, 0.45);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].score, 0.95);
+    }
+
+    #[test]
+    fn decode_thresholds_objectness() {
+        let cfg = DecodeConfig { num_classes: 2, anchors: vec![(1.0, 1.0)], ..DecodeConfig::default() };
+        // one cell, one anchor, 5+2 channels: low objectness -> no boxes
+        let mut grid = vec![0.0f32; 7];
+        grid[4] = -10.0;
+        assert!(decode_grid(&grid, 1, 1, &cfg).is_empty());
+        // high objectness -> one box at the cell center-ish
+        grid[4] = 10.0;
+        grid[5] = 5.0; // class 0 dominates
+        let dets = decode_grid(&grid, 1, 1, &cfg);
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].class, 0);
+        assert!((dets[0].cx - 0.5).abs() < 1e-5, "sigmoid(0) = 0.5 offset");
+        assert!(dets[0].score > 0.9);
+    }
+
+    #[test]
+    fn decode_anchor_scaling() {
+        let cfg = DecodeConfig { num_classes: 1, anchors: vec![(2.0, 3.0)], score_threshold: 0.1, ..DecodeConfig::default() };
+        let mut grid = vec![0.0f32; 6];
+        grid[4] = 10.0;
+        grid[5] = 1.0;
+        let dets = decode_grid(&grid, 1, 1, &cfg);
+        assert_eq!(dets.len(), 1);
+        assert!((dets[0].w - 2.0).abs() < 1e-5, "exp(0) * anchor_w");
+        assert!((dets[0].h - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn full_pipeline_on_production_shape() {
+        // 2x2 grid, 5 anchors, 25 channels each = 500 f32s (the real
+        // tinyyolo output shape at 64x64 input).
+        let cfg = DecodeConfig::default();
+        let mut grid = vec![-10.0f32; 2 * 2 * 125];
+        // plant two strong overlapping detections in cell (0,0), anchor 0/1
+        grid[4] = 10.0;
+        grid[5] = 8.0;
+        grid[25 + 4] = 9.0;
+        grid[25 + 5] = 8.0;
+        let dets = postprocess(&grid, 2, 2, &cfg);
+        assert!(!dets.is_empty());
+        // anchor 0 (1.08x1.19) and anchor 1 (3.42x4.41) barely overlap ->
+        // NMS keeps both or one depending on IoU; both are same class 0.
+        for d in &dets {
+            assert_eq!(d.class, 0);
+            assert!(d.score > 0.5);
+        }
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let dets = vec![det(1.0, 2.0, 3.0, 4.0, 0.5, 7)];
+        let j = detections_to_json(&dets);
+        assert_eq!(j.usize_of("count").unwrap(), 1);
+        let d = &j.arr_of("detections").unwrap()[0];
+        assert_eq!(d.usize_of("class").unwrap(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn decode_validates_grid_len() {
+        decode_grid(&[0.0; 10], 2, 2, &DecodeConfig::default());
+    }
+
+    fn random_dets(rng: &mut crate::util::Rng, n: usize) -> Vec<Detection> {
+        (0..n)
+            .map(|_| Detection {
+                cx: 4.0 * rng.f64() as f32,
+                cy: 4.0 * rng.f64() as f32,
+                w: 0.2 + 2.0 * rng.f64() as f32,
+                h: 0.2 + 2.0 * rng.f64() as f32,
+                score: rng.f64() as f32,
+                class: rng.below(3) as usize,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn property_nms_invariants() {
+        use crate::prop;
+        prop::check(
+            "nms-invariants",
+            150,
+            |rng| {
+                let n = rng.below(25) as usize;
+                let mut r = crate::util::Rng::new(rng.next_u64());
+                random_dets(&mut r, n)
+            },
+            |dets| {
+                let kept = nms(dets.clone(), 0.45);
+                // 1. kept is a subset of the input
+                let subset = kept.iter().all(|k| dets.iter().any(|d| d == k));
+                // 2. sorted by descending score
+                let sorted = kept.windows(2).all(|w| w[0].score >= w[1].score);
+                // 3. no same-class pair above the IoU threshold survives
+                let separated = kept.iter().enumerate().all(|(i, a)| {
+                    kept.iter().skip(i + 1).all(|b| {
+                        a.class != b.class || iou(a, b) <= 0.45
+                    })
+                });
+                subset && sorted && separated
+            },
+        );
+    }
+
+    #[test]
+    fn property_iou_symmetric_and_bounded() {
+        use crate::prop;
+        prop::check(
+            "iou-bounds",
+            150,
+            |rng| {
+                let mut r = crate::util::Rng::new(rng.next_u64());
+                let d = random_dets(&mut r, 2);
+                (d[0].clone(), d[1].clone())
+            },
+            |(a, b)| {
+                let ab = iou(a, b);
+                let ba = iou(b, a);
+                (ab - ba).abs() < 1e-6 && (0.0..=1.0 + 1e-6).contains(&ab)
+            },
+        );
+    }
+
+    #[test]
+    fn property_decode_respects_threshold() {
+        use crate::prop;
+        let cfg = DecodeConfig::default();
+        prop::check(
+            "decode-threshold",
+            40,
+            |rng| {
+                let mut r = crate::util::Rng::new(rng.next_u64());
+                (0..(2 * 2 * 125)).map(|_| 8.0 * (r.f64() as f32 - 0.5)).collect::<Vec<f32>>()
+            },
+            |grid| {
+                decode_grid(grid, 2, 2, &cfg)
+                    .iter()
+                    .all(|d| d.score >= cfg.score_threshold && d.class < cfg.num_classes)
+            },
+        );
+    }
+}

@@ -1,0 +1,184 @@
+//! Minimal property-based testing harness (proptest is unavailable in this
+//! offline build).
+//!
+//! Generators are plain closures over [`Rng`]; [`check`] runs a property
+//! over `n` random cases and, on failure, performs a bounded greedy shrink
+//! using a caller-provided shrinker before panicking with the seed and the
+//! minimized counterexample.
+//!
+//! ```ignore
+//! prop::check("sorted-idempotent", 200, gen_vec_u32(0..100), |v| {
+//!     let mut a = v.clone();
+//!     a.sort();
+//!     let mut b = a.clone();
+//!     b.sort();
+//!     a == b
+//! });
+//! ```
+
+use crate::util::Rng;
+use std::fmt::Debug;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        // Seed can be pinned via env to replay a failure.
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 100, seed, max_shrink_steps: 500 }
+    }
+}
+
+/// Run `prop` over `cases` random inputs from `gen`; panic with the seed
+/// and case index on the first failure (no shrinking).
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let cfg = Config { cases, ..Config::default() };
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}):\n{input:#?}",
+                seed = cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`] but additionally shrinks the failing input with
+/// `shrink` (returns candidate simplifications, tried greedily).
+pub fn check_shrink<T, G, P, S>(name: &str, cases: usize, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Debug + Clone,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+    S: Fn(&T) -> Vec<T>,
+{
+    let cfg = Config { cases, ..Config::default() };
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // Greedy shrink: keep applying the first failing simplification.
+        let mut smallest = input.clone();
+        let mut steps = 0;
+        'outer: while steps < cfg.max_shrink_steps {
+            for cand in shrink(&smallest) {
+                steps += 1;
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'outer;
+                }
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed (case {case}, seed {seed}).\n\
+             original: {input:#?}\nshrunk:   {smallest:#?}",
+            seed = cfg.seed
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common generators / shrinkers
+// ---------------------------------------------------------------------------
+
+/// Generator: `Vec<u64>` with length in `0..=max_len`, elements `< max_val`.
+pub fn gen_vec_u64(max_len: usize, max_val: u64) -> impl FnMut(&mut Rng) -> Vec<u64> {
+    move |rng| {
+        let len = rng.below(max_len as u64 + 1) as usize;
+        (0..len).map(|_| rng.below(max_val)).collect()
+    }
+}
+
+/// Standard vector shrinker: drop halves, drop single elements, halve values.
+pub fn shrink_vec_u64(v: &Vec<u64>) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    for i in 0..v.len().min(8) {
+        let mut c = v.clone();
+        c.remove(i);
+        out.push(c);
+    }
+    let halved: Vec<u64> = v.iter().map(|x| x / 2).collect();
+    if &halved != v {
+        out.push(halved);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut seen = 0;
+        check("count", 50, |r| r.below(10), |_| {
+            seen += 1;
+            true
+        });
+        assert_eq!(seen, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_name() {
+        check("fails", 10, |r| r.below(10), |&v| v > 100);
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Property "no element >= 50" fails; shrinking should find a small
+        // counterexample. We capture the panic message.
+        let result = std::panic::catch_unwind(|| {
+            check_shrink(
+                "shrinks",
+                200,
+                gen_vec_u64(20, 100),
+                |v| v.iter().all(|&x| x < 50),
+                shrink_vec_u64,
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk:"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        check("record", 5, |r| r.below(1000), |&v| {
+            first.push(v);
+            true
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("record", 5, |r| r.below(1000), |&v| {
+            second.push(v);
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

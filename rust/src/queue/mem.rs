@@ -1,0 +1,469 @@
+//! In-process invocation queue engine.
+//!
+//! One `Mutex<Inner>` protects all state — contention is negligible at the
+//! paper's scale (tens of invocations/second across a handful of node
+//! managers; see `benches/micro_queue.rs` for the measured six-figure
+//! op/s headroom).
+
+use super::{InvocationQueue, Lease, QueueStats, TakeFilter};
+use crate::events::Invocation;
+use crate::util::{Clock, SimTime};
+use anyhow::{bail, Result};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Queue configuration.
+#[derive(Debug, Clone)]
+pub struct QueueConfig {
+    /// Lease duration before an un-acked take is considered lost.
+    pub visibility: Duration,
+    /// Deliveries before an invocation is dead-lettered.
+    pub max_attempts: u32,
+}
+
+impl Default for QueueConfig {
+    fn default() -> QueueConfig {
+        QueueConfig {
+            // Sim time: generous vs the ~1.6 s service times of the paper's
+            // workload, tight enough to recover from a node crash mid-run.
+            visibility: Duration::from_secs(30),
+            max_attempts: 3,
+        }
+    }
+}
+
+struct InFlight {
+    invocation: Invocation,
+    deadline: SimTime,
+    attempt: u32,
+}
+
+#[derive(Default)]
+struct Inner {
+    queued: VecDeque<Invocation>,
+    in_flight: HashMap<String, InFlight>,
+    attempts: HashMap<String, u32>,
+    dead: Vec<Invocation>,
+    acked: usize,
+    /// Ids currently queued or in flight — O(1) duplicate detection on
+    /// publish (the scan-based check was O(n) per publish and collapsed
+    /// deep-queue ingest to ~2.6k ops/s; see EXPERIMENTS.md §Perf).
+    live_ids: HashSet<String>,
+}
+
+/// In-memory [`InvocationQueue`] engine.
+pub struct MemQueue {
+    inner: Mutex<Inner>,
+    /// Signalled whenever work (re)appears — lets `take_timeout` block
+    /// instead of poll (idle dispatch latency: ~poll-interval → ~0.1 ms).
+    available: std::sync::Condvar,
+    clock: Arc<dyn Clock>,
+    config: QueueConfig,
+}
+
+impl MemQueue {
+    pub fn new(clock: Arc<dyn Clock>) -> Arc<MemQueue> {
+        MemQueue::with_config(clock, QueueConfig::default())
+    }
+
+    pub fn with_config(clock: Arc<dyn Clock>, config: QueueConfig) -> Arc<MemQueue> {
+        Arc::new(MemQueue {
+            inner: Mutex::new(Inner::default()),
+            available: std::sync::Condvar::new(),
+            clock,
+            config,
+        })
+    }
+
+    /// Dead-lettered invocations (diagnostics).
+    pub fn dead_letters(&self) -> Vec<Invocation> {
+        self.inner.lock().expect("queue poisoned").dead.clone()
+    }
+
+    /// Peek the queued runtimes in order (diagnostics / scheduler tests).
+    pub fn queued_runtimes(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .expect("queue poisoned")
+            .queued
+            .iter()
+            .map(|i| i.spec.runtime.clone())
+            .collect()
+    }
+}
+
+impl InvocationQueue for MemQueue {
+    fn publish(&self, inv: Invocation) -> Result<()> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        if !inner.live_ids.insert(inv.id.clone()) {
+            bail!("duplicate invocation id {}", inv.id);
+        }
+        inner.queued.push_back(inv);
+        drop(inner);
+        self.available.notify_all();
+        Ok(())
+    }
+
+    fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        // Scan pass 1: earliest invocation whose runtime is warm here.
+        let warm_pos = inner
+            .queued
+            .iter()
+            .position(|inv| filter.accepts_warm(&inv.spec.runtime));
+        // Scan pass 2: earliest supported invocation at all.
+        let pos = match warm_pos {
+            Some(p) => Some((p, true)),
+            None => inner
+                .queued
+                .iter()
+                .position(|inv| filter.accepts_cold(&inv.spec.runtime))
+                .map(|p| (p, false)),
+        };
+        let Some((pos, warm_hit)) = pos else {
+            return Ok(None);
+        };
+        let invocation = inner.queued.remove(pos).expect("position valid");
+        let attempt = {
+            let a = inner.attempts.entry(invocation.id.clone()).or_insert(0);
+            *a += 1;
+            *a
+        };
+        let deadline = SimTime(
+            self.clock.now().as_micros() + self.config.visibility.as_micros() as u64,
+        );
+        inner.in_flight.insert(
+            invocation.id.clone(),
+            InFlight { invocation: invocation.clone(), deadline, attempt },
+        );
+        Ok(Some(Lease { invocation, warm_hit, attempt }))
+    }
+
+    fn ack(&self, invocation_id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        if inner.in_flight.remove(invocation_id).is_none() {
+            bail!("ack for unknown or expired lease: {invocation_id}");
+        }
+        inner.attempts.remove(invocation_id);
+        inner.live_ids.remove(invocation_id);
+        inner.acked += 1;
+        Ok(())
+    }
+
+    fn release(&self, invocation_id: &str) -> Result<()> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        let Some(inflight) = inner.in_flight.remove(invocation_id) else {
+            bail!("release for unknown lease: {invocation_id}");
+        };
+        // A voluntary release does not burn an attempt.
+        if let Some(a) = inner.attempts.get_mut(invocation_id) {
+            *a = a.saturating_sub(1);
+        }
+        inner.queued.push_front(inflight.invocation);
+        drop(inner);
+        self.available.notify_all();
+        Ok(())
+    }
+
+    fn reap_expired(&self) -> Result<usize> {
+        let now = self.clock.now();
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        let expired: Vec<String> = inner
+            .in_flight
+            .iter()
+            .filter(|(_, f)| f.deadline <= now)
+            .map(|(id, _)| id.clone())
+            .collect();
+        let n = expired.len();
+        for id in expired {
+            let f = inner.in_flight.remove(&id).expect("present");
+            if f.attempt >= self.config.max_attempts {
+                inner.live_ids.remove(&id);
+                inner.dead.push(f.invocation);
+            } else {
+                // Lost leases go to the *front*: they are the oldest work.
+                inner.queued.push_front(f.invocation);
+            }
+        }
+        if n > 0 {
+            drop(inner);
+            self.available.notify_all();
+        }
+        Ok(n)
+    }
+
+    fn take_timeout(
+        &self,
+        filter: &TakeFilter,
+        wall_timeout: Duration,
+    ) -> Result<Option<Lease>> {
+        let deadline = std::time::Instant::now() + wall_timeout;
+        loop {
+            if let Some(lease) = self.take(filter)? {
+                return Ok(Some(lease));
+            }
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return Ok(None);
+            }
+            // Park until a publish/release/reap signals new work (or the
+            // timeout elapses).  Spurious wakeups just loop.
+            let guard = self.inner.lock().expect("queue poisoned");
+            if !guard.queued.is_empty() {
+                continue; // raced with a publisher between take() and lock
+            }
+            let _ = self
+                .available
+                .wait_timeout(guard, left.min(Duration::from_millis(50)))
+                .expect("queue poisoned");
+        }
+    }
+
+    fn stats(&self) -> Result<QueueStats> {
+        let inner = self.inner.lock().expect("queue poisoned");
+        Ok(QueueStats {
+            queued: inner.queued.len(),
+            in_flight: inner.in_flight.len(),
+            acked: inner.acked,
+            dead: inner.dead.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::EventSpec;
+    use crate::util::clock::TestClock;
+
+    fn inv(id: &str, runtime: &str) -> Invocation {
+        Invocation::new(id, EventSpec::new(runtime, "datasets/d"), SimTime(0))
+    }
+
+    fn queue() -> (Arc<crate::util::clock::TestClock>, Arc<MemQueue>) {
+        let clock = TestClock::new();
+        let q = MemQueue::new(clock.clone());
+        (clock, q)
+    }
+
+    #[test]
+    fn fifo_within_class() {
+        let (_c, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        q.publish(inv("2", "a")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into()]);
+        assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "1");
+        assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "2");
+        assert!(q.take(&f).unwrap().is_none());
+    }
+
+    #[test]
+    fn unsupported_runtime_not_taken() {
+        let (_c, q) = queue();
+        q.publish(inv("1", "zzz")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into()]);
+        assert!(q.take(&f).unwrap().is_none());
+        assert_eq!(q.stats().unwrap().queued, 1);
+    }
+
+    #[test]
+    fn warm_scan_jumps_queue_order() {
+        // Paper §IV-D: the node prefers invocations it is warm for, even if
+        // they sit behind other work in the queue.
+        let (_c, q) = queue();
+        q.publish(inv("cold-1", "a")).unwrap();
+        q.publish(inv("warm-1", "b")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_warm(vec!["b".into()]);
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "warm-1");
+        assert!(lease.warm_hit);
+        // Next take falls back to the cold invocation.
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "cold-1");
+        assert!(!lease.warm_hit);
+    }
+
+    #[test]
+    fn warm_only_reuse_query() {
+        let (_c, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        // completion-time reuse probe for runtime "b": nothing to reuse
+        assert!(q.take(&TakeFilter::warm_reuse("b")).unwrap().is_none());
+        // for runtime "a": match
+        let lease = q.take(&TakeFilter::warm_reuse("a")).unwrap().unwrap();
+        assert!(lease.warm_hit);
+    }
+
+    #[test]
+    fn ack_completes_lease() {
+        let (_c, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        q.ack(&lease.invocation.id).unwrap();
+        let s = q.stats().unwrap();
+        assert_eq!((s.queued, s.in_flight, s.acked), (0, 0, 1));
+        assert!(q.ack("1").is_err(), "double ack rejected");
+    }
+
+    #[test]
+    fn release_requeues_at_front_without_attempt_burn() {
+        let (_c, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        q.publish(inv("2", "a")).unwrap();
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(lease.attempt, 1);
+        q.release("1").unwrap();
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "1", "released work re-delivered first");
+        assert_eq!(lease.attempt, 1, "voluntary release burns no attempt");
+    }
+
+    #[test]
+    fn visibility_timeout_requeues() {
+        let (clock, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        let _lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(q.reap_expired().unwrap(), 0, "not expired yet");
+        clock.advance(Duration::from_secs(31));
+        assert_eq!(q.reap_expired().unwrap(), 1);
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(lease.attempt, 2, "redelivery increments attempt");
+    }
+
+    #[test]
+    fn dead_letter_after_max_attempts() {
+        let clock = TestClock::new();
+        let q = MemQueue::with_config(
+            clock.clone(),
+            QueueConfig { visibility: Duration::from_secs(1), max_attempts: 2 },
+        );
+        q.publish(inv("1", "a")).unwrap();
+        for _ in 0..2 {
+            q.take(&TakeFilter::default()).unwrap().unwrap();
+            clock.advance(Duration::from_secs(2));
+            q.reap_expired().unwrap();
+        }
+        assert!(q.take(&TakeFilter::default()).unwrap().is_none());
+        assert_eq!(q.stats().unwrap().dead, 1);
+        assert_eq!(q.dead_letters()[0].id, "1");
+    }
+
+    #[test]
+    fn duplicate_publish_rejected() {
+        let (_c, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        assert!(q.publish(inv("1", "a")).is_err());
+    }
+
+    #[test]
+    fn concurrent_takers_no_double_delivery() {
+        let (_c, q) = queue();
+        for i in 0..200 {
+            q.publish(inv(&format!("i{i}"), "a")).unwrap();
+        }
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(lease) = q.take(&TakeFilter::default()).unwrap() {
+                    got.push(lease.invocation.id.clone());
+                    q.ack(&lease.invocation.id).unwrap();
+                }
+                got
+            }));
+        }
+        let mut all: Vec<String> = handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 200, "every invocation delivered exactly once");
+        assert_eq!(q.stats().unwrap().acked, 200);
+    }
+
+    #[test]
+    fn property_scan_never_delivers_unsupported() {
+        use crate::prop;
+        // Random publish/take interleavings: a node must only ever receive
+        // runtimes from its filter, and warm hits only from its warm set.
+        prop::check(
+            "scan-respects-filter",
+            60,
+            |rng| {
+                let runtimes: Vec<String> =
+                    (0..rng.range(1, 4)).map(|i| format!("r{i}")).collect();
+                let publishes: Vec<String> = (0..rng.range(0, 30))
+                    .map(|_| format!("r{}", rng.below(6)))
+                    .collect();
+                let warm: Vec<String> =
+                    (0..rng.below(3)).map(|i| format!("r{i}")).collect();
+                (runtimes, publishes, warm)
+            },
+            |(runtimes, publishes, warm)| {
+                let q = MemQueue::new(TestClock::new());
+                for (i, r) in publishes.iter().enumerate() {
+                    q.publish(inv(&format!("p{i}"), r)).unwrap();
+                }
+                let f = TakeFilter::supporting(runtimes.clone())
+                    .with_warm(warm.clone());
+                while let Ok(Some(lease)) = q.take(&f) {
+                    let rt = &lease.invocation.spec.runtime;
+                    if !runtimes.contains(rt) && !warm.contains(rt) {
+                        return false;
+                    }
+                    if lease.warm_hit && !warm.contains(rt) {
+                        return false;
+                    }
+                    q.ack(&lease.invocation.id).unwrap();
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn property_conservation() {
+        use crate::prop;
+        // queued + in_flight + acked + dead == published, at every step.
+        prop::check(
+            "queue-conservation",
+            40,
+            |rng| (0..rng.range(1, 40)).map(|_| rng.below(3)).collect::<Vec<u64>>(),
+            |ops| {
+                let clock = TestClock::new();
+                let q = MemQueue::with_config(
+                    clock.clone(),
+                    QueueConfig { visibility: Duration::from_secs(1), max_attempts: 2 },
+                );
+                let mut published = 0usize;
+                for (i, op) in ops.iter().enumerate() {
+                    match op {
+                        0 => {
+                            q.publish(inv(&format!("c{i}"), "a")).unwrap();
+                            published += 1;
+                        }
+                        1 => {
+                            if let Some(l) = q.take(&TakeFilter::default()).unwrap() {
+                                q.ack(&l.invocation.id).unwrap();
+                            }
+                        }
+                        _ => {
+                            let _ = q.take(&TakeFilter::default()).unwrap();
+                            clock.advance(Duration::from_secs(2));
+                            q.reap_expired().unwrap();
+                        }
+                    }
+                    let s = q.stats().unwrap();
+                    if s.queued + s.in_flight + s.acked + s.dead != published {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

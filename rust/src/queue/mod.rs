@@ -1,0 +1,185 @@
+//! The shared invocation queue — the role Bedrock plays in the paper.
+//!
+//! Paper §IV-C/D: nodes *"fetch all [their] work from a single shared
+//! message queue"* which must let a node manager **scan the queue before
+//! taking invocations** so it can (1) take any invocation from the set of
+//! workloads it can run, and (2) on instance completion, query whether the
+//! queue holds invocations *"that have the same configuration so that the
+//! worker node can reuse an existing runtime instance"* (warm reuse).
+//!
+//! [`TakeFilter`] encodes exactly those two queries.  Delivery is
+//! at-least-once: a take leases the invocation for a visibility window;
+//! un-acked leases are re-queued by [`InvocationQueue::reap_expired`] and
+//! dead-lettered after `max_attempts`.  Workers acknowledge only — they
+//! never re-publish — so nodes can join and leave at any time (the paper's
+//! dynamic-membership property).
+
+pub mod mem;
+pub mod remote;
+
+pub use mem::{MemQueue, QueueConfig};
+pub use remote::{QueueClient, QueueServer};
+
+use crate::events::Invocation;
+use crate::json::Json;
+use anyhow::Result;
+
+/// The node-side take query (paper's queue-scan contract).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TakeFilter {
+    /// Runtimes this node can execute (union over its accelerators).
+    /// Empty = match any (used by diagnostics/drain tooling).
+    pub runtimes: Vec<String>,
+    /// Runtimes with a warm instance on this node: matched **first**,
+    /// regardless of queue position (cold-start avoidance).
+    pub warm: Vec<String>,
+    /// Only take a warm match (the completion-time reuse query §IV-D).
+    pub warm_only: bool,
+}
+
+impl TakeFilter {
+    pub fn supporting(runtimes: impl IntoIterator<Item = String>) -> TakeFilter {
+        TakeFilter { runtimes: runtimes.into_iter().collect(), ..TakeFilter::default() }
+    }
+
+    pub fn with_warm(mut self, warm: impl IntoIterator<Item = String>) -> TakeFilter {
+        self.warm = warm.into_iter().collect();
+        self
+    }
+
+    /// The paper's "same configuration" reuse query.
+    pub fn warm_reuse(runtime: &str) -> TakeFilter {
+        TakeFilter {
+            runtimes: vec![],
+            warm: vec![runtime.to_string()],
+            warm_only: true,
+        }
+    }
+
+    pub fn accepts_cold(&self, runtime: &str) -> bool {
+        !self.warm_only
+            && (self.runtimes.is_empty() || self.runtimes.iter().any(|r| r == runtime))
+    }
+
+    pub fn accepts_warm(&self, runtime: &str) -> bool {
+        self.warm.iter().any(|r| r == runtime)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let arr = |v: &[String]| Json::Arr(v.iter().map(|s| Json::from(s.as_str())).collect());
+        Json::obj()
+            .set("runtimes", arr(&self.runtimes))
+            .set("warm", arr(&self.warm))
+            .set("warm_only", self.warm_only)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TakeFilter> {
+        let strs = |key: &str| -> Vec<String> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        Ok(TakeFilter {
+            runtimes: strs("runtimes"),
+            warm: strs("warm"),
+            warm_only: j.get("warm_only").and_then(|b| b.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+/// A leased invocation: the queue hands it to exactly one node until the
+/// lease expires or is acked.
+#[derive(Debug, Clone)]
+pub struct Lease {
+    pub invocation: Invocation,
+    /// Whether the take matched via the warm set (drives the node's
+    /// instance-selection and the warm-start metrics).
+    pub warm_hit: bool,
+    /// Delivery attempt number (1 = first delivery).
+    pub attempt: u32,
+}
+
+/// Queue gauge snapshot (the paper samples `#queued` periodically).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct QueueStats {
+    pub queued: usize,
+    pub in_flight: usize,
+    pub acked: usize,
+    pub dead: usize,
+}
+
+/// The shared invocation queue interface (in-memory and TCP deployments).
+pub trait InvocationQueue: Send + Sync {
+    /// Publish a new invocation (client → queue).
+    fn publish(&self, inv: Invocation) -> Result<()>;
+
+    /// Scan-and-take under `filter`. Returns a lease or `None` when no
+    /// visible invocation matches.  Warm matches win over queue order;
+    /// within a class, FIFO.
+    fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>>;
+
+    /// Acknowledge completion (success or permanent failure) of a leased
+    /// invocation — removes it from the queue entirely.
+    fn ack(&self, invocation_id: &str) -> Result<()>;
+
+    /// Return a leased invocation to the queue (node shutting down,
+    /// artifact missing, ...). Does not count against max_attempts.
+    fn release(&self, invocation_id: &str) -> Result<()>;
+
+    /// Re-queue expired leases; returns how many were re-queued or
+    /// dead-lettered. Driven by the coordinator's housekeeping tick.
+    fn reap_expired(&self) -> Result<usize>;
+
+    /// Gauge snapshot.
+    fn stats(&self) -> Result<QueueStats>;
+
+    /// Blocking take: wait up to `wall_timeout` (wall-clock) for a
+    /// matching invocation.  Default = one non-blocking probe (remote
+    /// clients keep polling semantics); [`MemQueue`] overrides with a
+    /// condvar so idle dispatch latency is notification-bound instead of
+    /// poll-interval-bound (EXPERIMENTS.md §Perf).
+    fn take_timeout(
+        &self,
+        filter: &TakeFilter,
+        wall_timeout: std::time::Duration,
+    ) -> Result<Option<Lease>> {
+        let _ = wall_timeout;
+        self.take(filter)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filter_cold_matching() {
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()]);
+        assert!(f.accepts_cold("a"));
+        assert!(!f.accepts_cold("z"));
+        assert!(!f.accepts_warm("a"));
+    }
+
+    #[test]
+    fn warm_reuse_filter_rejects_cold() {
+        let f = TakeFilter::warm_reuse("a");
+        assert!(f.accepts_warm("a"));
+        assert!(!f.accepts_cold("a"));
+        assert!(!f.accepts_cold("b"));
+    }
+
+    #[test]
+    fn empty_runtimes_matches_any_cold() {
+        let f = TakeFilter::default();
+        assert!(f.accepts_cold("anything"));
+    }
+
+    #[test]
+    fn filter_json_roundtrip() {
+        let f = TakeFilter::supporting(vec!["x".into()])
+            .with_warm(vec!["x".into(), "y".into()]);
+        let back = TakeFilter::from_json(&f.to_json()).unwrap();
+        assert_eq!(back, f);
+    }
+}

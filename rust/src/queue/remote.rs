@@ -1,0 +1,222 @@
+//! Distributed invocation queue: TCP server + client over [`crate::wire`].
+//!
+//! Mirrors the paper's deployment: one shared queue service (Bedrock), many
+//! node managers polling it.  `QueueClient` implements [`InvocationQueue`]
+//! so node managers are agnostic to whether the queue is in-process or
+//! remote.
+
+use super::{InvocationQueue, Lease, QueueStats, TakeFilter};
+use crate::events::Invocation;
+use crate::json::Json;
+use crate::wire::{Handler, RpcClient, RpcServer};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Serves any [`InvocationQueue`] backend over TCP.
+pub struct QueueServer {
+    inner: RpcServer,
+}
+
+impl QueueServer {
+    pub fn serve(addr: &str, backend: Arc<dyn InvocationQueue>) -> Result<QueueServer> {
+        let handler: Handler = Arc::new(move |method, params, _blob| match method {
+            "publish" => {
+                let inv = Invocation::from_json(params.req("invocation")?)?;
+                backend.publish(inv)?;
+                Ok((Json::obj(), None))
+            }
+            "take" => {
+                let filter = TakeFilter::from_json(params.req("filter")?)?;
+                match backend.take(&filter)? {
+                    Some(lease) => Ok((
+                        Json::obj()
+                            .set("invocation", lease.invocation.to_json())
+                            .set("warm_hit", lease.warm_hit)
+                            .set("attempt", lease.attempt as u64),
+                        None,
+                    )),
+                    None => Ok((Json::Null, None)),
+                }
+            }
+            "ack" => {
+                backend.ack(params.str_of("id")?)?;
+                Ok((Json::obj(), None))
+            }
+            "release" => {
+                backend.release(params.str_of("id")?)?;
+                Ok((Json::obj(), None))
+            }
+            "reap" => Ok((
+                Json::obj().set("reaped", backend.reap_expired()?),
+                None,
+            )),
+            "stats" => {
+                let s = backend.stats()?;
+                Ok((
+                    Json::obj()
+                        .set("queued", s.queued)
+                        .set("in_flight", s.in_flight)
+                        .set("acked", s.acked)
+                        .set("dead", s.dead),
+                    None,
+                ))
+            }
+            other => Err(anyhow!("unknown queue method {other}")),
+        });
+        Ok(QueueServer { inner: RpcServer::serve(addr, handler)? })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.inner.addr()
+    }
+
+    pub fn shutdown(&mut self) {
+        self.inner.shutdown();
+    }
+}
+
+/// TCP client implementing [`InvocationQueue`].
+pub struct QueueClient {
+    rpc: RpcClient,
+}
+
+impl QueueClient {
+    pub fn connect(addr: impl std::net::ToSocketAddrs + std::fmt::Debug) -> Result<QueueClient> {
+        Ok(QueueClient { rpc: RpcClient::connect(addr)? })
+    }
+}
+
+impl InvocationQueue for QueueClient {
+    fn publish(&self, inv: Invocation) -> Result<()> {
+        self.rpc
+            .call("publish", Json::obj().set("invocation", inv.to_json()))?;
+        Ok(())
+    }
+
+    fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>> {
+        let out = self
+            .rpc
+            .call("take", Json::obj().set("filter", filter.to_json()))?;
+        if out.is_null() {
+            return Ok(None);
+        }
+        Ok(Some(Lease {
+            invocation: Invocation::from_json(out.req("invocation")?)?,
+            warm_hit: out.bool_of("warm_hit")?,
+            attempt: out.u64_of("attempt")? as u32,
+        }))
+    }
+
+    fn ack(&self, invocation_id: &str) -> Result<()> {
+        self.rpc.call("ack", Json::obj().set("id", invocation_id))?;
+        Ok(())
+    }
+
+    fn release(&self, invocation_id: &str) -> Result<()> {
+        self.rpc.call("release", Json::obj().set("id", invocation_id))?;
+        Ok(())
+    }
+
+    fn reap_expired(&self) -> Result<usize> {
+        let out = self.rpc.call("reap", Json::obj())?;
+        Ok(out.usize_of("reaped")?)
+    }
+
+    fn stats(&self) -> Result<QueueStats> {
+        let out = self.rpc.call("stats", Json::obj())?;
+        Ok(QueueStats {
+            queued: out.usize_of("queued")?,
+            in_flight: out.usize_of("in_flight")?,
+            acked: out.usize_of("acked")?,
+            dead: out.usize_of("dead")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::EventSpec;
+    use crate::queue::MemQueue;
+    use crate::util::clock::TestClock;
+    use crate::util::SimTime;
+
+    fn setup() -> (QueueServer, QueueClient) {
+        let backend = MemQueue::new(TestClock::new());
+        let server = QueueServer::serve("127.0.0.1:0", backend).unwrap();
+        let client = QueueClient::connect(server.addr()).unwrap();
+        (server, client)
+    }
+
+    fn inv(id: &str, runtime: &str) -> Invocation {
+        Invocation::new(id, EventSpec::new(runtime, "datasets/d"), SimTime(7))
+    }
+
+    #[test]
+    fn publish_take_ack_over_tcp() {
+        let (_s, q) = setup();
+        q.publish(inv("1", "tinyyolo")).unwrap();
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "1");
+        assert_eq!(lease.invocation.spec.runtime, "tinyyolo");
+        assert_eq!(lease.attempt, 1);
+        assert_eq!(
+            lease.invocation.stamps.r_start,
+            Some(SimTime(7)),
+            "timestamps survive the wire"
+        );
+        q.ack("1").unwrap();
+        assert_eq!(q.stats().unwrap().acked, 1);
+    }
+
+    #[test]
+    fn empty_take_returns_none() {
+        let (_s, q) = setup();
+        assert!(q.take(&TakeFilter::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn warm_preference_over_tcp() {
+        let (_s, q) = setup();
+        q.publish(inv("cold", "a")).unwrap();
+        q.publish(inv("warm", "b")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_warm(vec!["b".into()]);
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "warm");
+        assert!(lease.warm_hit);
+    }
+
+    #[test]
+    fn errors_propagate_over_tcp() {
+        let (_s, q) = setup();
+        assert!(q.ack("missing").is_err());
+        q.publish(inv("1", "a")).unwrap();
+        assert!(q.publish(inv("1", "a")).is_err(), "duplicate id");
+    }
+
+    #[test]
+    fn multiple_node_clients_share_queue() {
+        let backend = MemQueue::new(TestClock::new());
+        let server = QueueServer::serve("127.0.0.1:0", backend).unwrap();
+        let addr = server.addr();
+        let publisher = QueueClient::connect(addr).unwrap();
+        for i in 0..60 {
+            publisher.publish(inv(&format!("i{i}"), "a")).unwrap();
+        }
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let c = QueueClient::connect(addr).unwrap();
+                let mut n = 0;
+                while let Some(lease) = c.take(&TakeFilter::default()).unwrap() {
+                    c.ack(&lease.invocation.id).unwrap();
+                    n += 1;
+                }
+                n
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 60);
+    }
+}

@@ -1,0 +1,334 @@
+//! Runtime bundles: the deployable unit the paper stores in object storage.
+//!
+//! A bundle = `manifest.json` + one HLO-text artifact per accelerator
+//! variant + `weights.bin`.  Produced by `python/compile/aot.py` at build
+//! time; published into the object store with [`RuntimeBundle::publish`];
+//! fetched and opened by node managers with [`RuntimeBundle::fetch`].
+
+use crate::json::Json;
+use crate::store::{keys, ObjectStore};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One weight tensor's location inside `weights.bin`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// One compiled model variant (per accelerator kind).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub compute_dtype: String,
+    pub tags: Vec<String>,
+}
+
+impl ArtifactSpec {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+}
+
+/// A parsed runtime bundle with its raw payloads.
+#[derive(Clone)]
+pub struct RuntimeBundle {
+    /// Logical runtime name (`tinyyolo`).
+    pub name: String,
+    pub manifest: Json,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub weights: Vec<WeightSpec>,
+    /// HLO text per artifact name.
+    pub hlo_texts: BTreeMap<String, String>,
+    /// The dense little-endian f32 weight blob.
+    pub weight_blob: Vec<u8>,
+}
+
+impl RuntimeBundle {
+    // ------------------------------------------------------------- parsing
+
+    fn parse_manifest(name: &str, manifest: Json) -> Result<RuntimeBundle> {
+        let mut artifacts = Vec::new();
+        for a in manifest.arr_of("artifacts")? {
+            let shapes = |key: &str| -> Result<Vec<usize>> {
+                a.arr_of(key)?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad {key}")))
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: a.str_of("name")?.to_string(),
+                file: a.str_of("file")?.to_string(),
+                input_shape: shapes("input_shape")?,
+                output_shape: shapes("output_shape")?,
+                compute_dtype: a.str_of("compute_dtype")?.to_string(),
+                tags: a
+                    .arr_of("tags")?
+                    .iter()
+                    .filter_map(|t| t.as_str().map(String::from))
+                    .collect(),
+            });
+        }
+        let mut weights = Vec::new();
+        for w in manifest.arr_of("weights")? {
+            weights.push(WeightSpec {
+                name: w.str_of("name")?.to_string(),
+                shape: w
+                    .arr_of("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad weight shape")))
+                    .collect::<Result<Vec<_>>>()?,
+                offset: w.usize_of("offset")?,
+                len: w.usize_of("len")?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(RuntimeBundle {
+            name: name.to_string(),
+            manifest,
+            artifacts,
+            weights,
+            hlo_texts: BTreeMap::new(),
+            weight_blob: Vec::new(),
+        })
+    }
+
+    /// Load a bundle from the local artifacts directory (build output).
+    pub fn load_dir(name: &str, dir: impl AsRef<Path>) -> Result<RuntimeBundle> {
+        let dir = dir.as_ref();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read manifest in {dir:?}"))?;
+        let manifest =
+            Json::parse(&manifest_text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let mut bundle = Self::parse_manifest(name, manifest)?;
+        for art in bundle.artifacts.clone() {
+            let text = std::fs::read_to_string(dir.join(&art.file))
+                .with_context(|| format!("read artifact {}", art.file))?;
+            bundle.hlo_texts.insert(art.name.clone(), text);
+        }
+        let weights_file = bundle
+            .manifest
+            .str_of("weights_file")
+            .unwrap_or("weights.bin")
+            .to_string();
+        bundle.weight_blob = std::fs::read(dir.join(&weights_file))
+            .with_context(|| format!("read {weights_file}"))?;
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    /// Publish this bundle into the object store under
+    /// `runtimes/<name>/...` (idempotent; bodies are content-addressed).
+    pub fn publish(&self, store: &dyn ObjectStore) -> Result<()> {
+        let base = keys::runtime(&self.name);
+        store.put(&format!("{base}/manifest.json"), self.manifest.to_string().as_bytes())?;
+        for (variant, text) in &self.hlo_texts {
+            store.put(&format!("{base}/{variant}.hlo.txt"), text.as_bytes())?;
+        }
+        store.put(&format!("{base}/weights.bin"), &self.weight_blob)?;
+        Ok(())
+    }
+
+    /// Fetch a published bundle from the object store — what a node
+    /// manager does the first time it sees an event for a runtime it has
+    /// not yet materialized locally.
+    pub fn fetch(name: &str, store: &dyn ObjectStore) -> Result<RuntimeBundle> {
+        let base = keys::runtime(name);
+        let manifest_bytes = store
+            .get(&format!("{base}/manifest.json"))
+            .with_context(|| format!("runtime bundle '{name}' not published"))?;
+        let manifest = Json::parse(
+            std::str::from_utf8(&manifest_bytes).context("manifest not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let mut bundle = Self::parse_manifest(name, manifest)?;
+        for art in bundle.artifacts.clone() {
+            let text = store.get(&format!("{base}/{}.hlo.txt", art.name))?;
+            bundle
+                .hlo_texts
+                .insert(art.name.clone(), String::from_utf8(text).context("hlo not utf-8")?);
+        }
+        bundle.weight_blob = store.get(&format!("{base}/weights.bin"))?;
+        bundle.validate()?;
+        Ok(bundle)
+    }
+
+    // ------------------------------------------------------------ contents
+
+    /// Internal consistency: every weight slice in bounds, artifacts have
+    /// HLO text, shapes non-empty.
+    pub fn validate(&self) -> Result<()> {
+        for w in &self.weights {
+            let end = w.offset + w.len;
+            if end > self.weight_blob.len() {
+                bail!("weight {} [{}..{end}) exceeds blob of {} bytes",
+                      w.name, w.offset, self.weight_blob.len());
+            }
+            let elems: usize = w.shape.iter().product::<usize>().max(1);
+            if elems * 4 != w.len {
+                bail!("weight {} shape {:?} disagrees with byte len {}",
+                      w.name, w.shape, w.len);
+            }
+        }
+        for a in &self.artifacts {
+            if !self.hlo_texts.contains_key(&a.name) {
+                bail!("artifact {} missing HLO text", a.name);
+            }
+            if a.input_shape.is_empty() || a.output_shape.is_empty() {
+                bail!("artifact {} has empty shapes", a.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, variant: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == variant)
+            .ok_or_else(|| anyhow!("unknown variant '{variant}' in bundle '{}'", self.name))
+    }
+
+    pub fn hlo_text(&self, variant: &str) -> Result<&str> {
+        self.hlo_texts
+            .get(variant)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("no HLO for variant '{variant}'"))
+    }
+
+    /// Decode one weight tensor as f32 (little-endian).
+    pub fn weight_f32(&self, spec: &WeightSpec) -> Vec<f32> {
+        let bytes = &self.weight_blob[spec.offset..spec.offset + spec.len];
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    /// All weights in manifest order — the order the AOT entry signature
+    /// expects after the image parameter.
+    pub fn weights_f32(&self) -> Vec<(Vec<usize>, Vec<f32>)> {
+        self.weights
+            .iter()
+            .map(|w| (w.shape.clone(), self.weight_f32(w)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemStore;
+
+    /// A miniature synthetic bundle (no PJRT involved).
+    pub(crate) fn tiny_bundle() -> RuntimeBundle {
+        let weights: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let blob: Vec<u8> = weights.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let manifest = Json::parse(
+            r#"{
+              "model": "test",
+              "weights_file": "weights.bin",
+              "weights": [
+                {"name": "[w]", "shape": [2, 2], "dtype": "f32", "offset": 0, "len": 16}
+              ],
+              "artifacts": [
+                {"name": "m-gpu", "file": "m-gpu.hlo.txt",
+                 "input_shape": [1, 2], "input_dtype": "f32",
+                 "output_shape": [1, 2], "output_dtype": "f32",
+                 "compute_dtype": "float32", "tags": ["gpu"]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let mut b = RuntimeBundle::parse_manifest("m", manifest).unwrap();
+        b.hlo_texts.insert("m-gpu".into(), "HloModule fake".into());
+        b.weight_blob = blob;
+        b.validate().unwrap();
+        b
+    }
+
+    #[test]
+    fn parse_and_accessors() {
+        let b = tiny_bundle();
+        assert_eq!(b.artifacts.len(), 1);
+        let a = b.artifact("m-gpu").unwrap();
+        assert_eq!(a.input_len(), 2);
+        assert_eq!(a.tags, vec!["gpu".to_string()]);
+        assert!(b.artifact("nope").is_err());
+        assert_eq!(b.hlo_text("m-gpu").unwrap(), "HloModule fake");
+    }
+
+    #[test]
+    fn weight_decoding() {
+        let b = tiny_bundle();
+        let w = b.weights_f32();
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].0, vec![2, 2]);
+        assert_eq!(w[0].1, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn validation_catches_out_of_bounds() {
+        let mut b = tiny_bundle();
+        b.weights[0].len = 999;
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_shape_len_mismatch() {
+        let mut b = tiny_bundle();
+        b.weights[0].shape = vec![3, 3];
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn publish_fetch_roundtrip() {
+        let store = MemStore::new();
+        let b = tiny_bundle();
+        b.publish(&store).unwrap();
+        assert!(store.exists("runtimes/m/manifest.json").unwrap());
+        assert!(store.exists("runtimes/m/m-gpu.hlo.txt").unwrap());
+        let fetched = RuntimeBundle::fetch("m", &store).unwrap();
+        assert_eq!(fetched.artifacts, b.artifacts);
+        assert_eq!(fetched.weights, b.weights);
+        assert_eq!(fetched.weight_blob, b.weight_blob);
+        assert_eq!(fetched.hlo_text("m-gpu").unwrap(), "HloModule fake");
+    }
+
+    #[test]
+    fn fetch_missing_bundle_is_informative() {
+        let store = MemStore::new();
+        let err = match RuntimeBundle::fetch("ghost", &store) {
+            Err(e) => e,
+            Ok(_) => panic!("fetch of unpublished bundle must fail"),
+        };
+        assert!(format!("{err:#}").contains("not published"), "{err:#}");
+    }
+
+    #[test]
+    fn load_real_artifacts_dir_if_present() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let b = RuntimeBundle::load_dir("tinyyolo", crate::runtime::artifacts_dir()).unwrap();
+        assert_eq!(b.artifacts.len(), 2, "gpu + vpu variants");
+        let gpu = b.artifact("tinyyolo-gpu").unwrap();
+        assert_eq!(gpu.input_shape, vec![1, 64, 64, 3]);
+        assert_eq!(gpu.output_shape, vec![1, 2, 2, 125]);
+        assert_eq!(b.weights.len(), 16);
+        assert!(b.hlo_text("tinyyolo-gpu").unwrap().starts_with("HloModule"));
+    }
+}

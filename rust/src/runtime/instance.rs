@@ -1,0 +1,309 @@
+//! Runtime instances: the paper's process-per-runtime execution model.
+//!
+//! §IV-D: *"a runtime instance is a process running on a worker node that
+//! can fulfill user invocations using its runtime. We choose processes
+//! instead of containers ... to ensure that our system can use every type
+//! of accelerator."*  Our isolation unit is a dedicated OS thread owning
+//! a non-`Send` executor — same lifecycle semantics (cold start, warm
+//! serve, explicit stop), no foreign-isolation assumptions.
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The compute interface a runtime instance drives.  Implemented by
+/// [`super::PjrtExecutor`] (production) and by mock executors in tests.
+pub trait Executor {
+    /// Run one invocation payload (flattened f32 image) to its output.
+    fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Result of one execution, with the instance-side wall time (the real
+/// compute cost, before accelerator pacing).
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    pub output: Vec<f32>,
+    pub compute_wall: Duration,
+}
+
+enum Request {
+    Exec { input: Vec<f32>, reply: mpsc::Sender<Result<ExecOutcome>> },
+    Stop,
+}
+
+/// A live runtime instance: a worker thread + request channel.
+pub struct RuntimeInstance {
+    /// Variant this instance serves (e.g. `tinyyolo-gpu`).
+    pub variant: String,
+    /// Device the instance is pinned to (e.g. `gpu0`).
+    pub device_id: String,
+    tx: mpsc::Sender<Request>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Wall-clock cost of the cold start (thread + compile + weights).
+    pub cold_start_wall: Duration,
+    created: Instant,
+    executions: std::sync::atomic::AtomicU64,
+}
+
+impl RuntimeInstance {
+    /// Cold-start an instance: spawn the thread, build the executor inside
+    /// it (PJRT handles are not `Send`), wait until it is ready.
+    pub fn start(
+        variant: impl Into<String>,
+        device_id: impl Into<String>,
+        factory: super::ExecutorFactory,
+    ) -> Result<RuntimeInstance> {
+        let variant = variant.into();
+        let device_id = device_id.into();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let t0 = Instant::now();
+        let thread_name = format!("rt-{variant}-{device_id}");
+        let handle = std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || {
+                let mut exec = match factory() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Exec { input, reply } => {
+                            let t = Instant::now();
+                            let result = exec.infer(&input).map(|output| ExecOutcome {
+                                output,
+                                compute_wall: t.elapsed(),
+                            });
+                            let _ = reply.send(result);
+                        }
+                        Request::Stop => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("instance thread died during cold start"))??;
+        Ok(RuntimeInstance {
+            variant,
+            device_id,
+            tx,
+            handle: Some(handle),
+            cold_start_wall: t0.elapsed(),
+            created: Instant::now(),
+            executions: 0.into(),
+        })
+    }
+
+    /// Execute one payload (blocking until the instance replies).
+    pub fn exec(&self, input: Vec<f32>) -> Result<ExecOutcome> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec { input, reply: reply_tx })
+            .map_err(|_| anyhow!("instance {} is stopped", self.variant))?;
+        let out = reply_rx
+            .recv()
+            .map_err(|_| anyhow!("instance {} died mid-execution", self.variant))??;
+        self.executions
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(out)
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    pub fn age(&self) -> Duration {
+        self.created.elapsed()
+    }
+
+    /// Stop the worker thread (blocking join).
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        let _ = self.tx.send(Request::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RuntimeInstance {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Convenience: a shareable handle (instances are driven from node worker
+/// threads while owned by the pool).
+pub type InstanceRef = Arc<RuntimeInstance>;
+
+// ---------------------------------------------------------------------------
+
+/// Mock executor for coordination-plane tests: output = input scaled, with
+/// optional fixed compute delay and scripted failures.
+pub struct MockExecutor {
+    pub scale: f32,
+    pub delay: Duration,
+    pub fail_after: Option<u64>,
+    count: u64,
+}
+
+impl MockExecutor {
+    pub fn new(scale: f32) -> MockExecutor {
+        MockExecutor { scale, delay: Duration::ZERO, fail_after: None, count: 0 }
+    }
+
+    pub fn with_delay(mut self, d: Duration) -> MockExecutor {
+        self.delay = d;
+        self
+    }
+
+    pub fn failing_after(mut self, n: u64) -> MockExecutor {
+        self.fail_after = Some(n);
+        self
+    }
+
+    /// Factory suited for [`RuntimeInstance::start`].
+    pub fn factory(scale: f32, delay: Duration) -> super::ExecutorFactory {
+        Box::new(move || Ok(Box::new(MockExecutor::new(scale).with_delay(delay)) as Box<dyn Executor>))
+    }
+}
+
+impl Executor for MockExecutor {
+    fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        self.count += 1;
+        if let Some(n) = self.fail_after {
+            if self.count > n {
+                return Err(anyhow!("mock executor failure injection"));
+            }
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(input.iter().map(|x| x * self.scale).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_then_exec() {
+        let inst = RuntimeInstance::start(
+            "mock-gpu",
+            "gpu0",
+            MockExecutor::factory(2.0, Duration::ZERO),
+        )
+        .unwrap();
+        assert_eq!(inst.variant, "mock-gpu");
+        let out = inst.exec(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out.output, vec![2.0, 4.0, 6.0]);
+        assert_eq!(inst.executions(), 1);
+    }
+
+    #[test]
+    fn factory_failure_surfaces_at_start() {
+        let factory: crate::runtime::ExecutorFactory =
+            Box::new(|| Err(anyhow!("no such artifact")));
+        let err = match RuntimeInstance::start("bad", "gpu0", factory) {
+            Err(e) => e,
+            Ok(_) => panic!("start must fail"),
+        };
+        assert!(format!("{err}").contains("no such artifact"));
+    }
+
+    #[test]
+    fn exec_measures_compute_wall() {
+        let inst = RuntimeInstance::start(
+            "mock",
+            "gpu0",
+            MockExecutor::factory(1.0, Duration::from_millis(20)),
+        )
+        .unwrap();
+        let out = inst.exec(vec![0.0]).unwrap();
+        assert!(out.compute_wall >= Duration::from_millis(19), "{:?}", out.compute_wall);
+    }
+
+    #[test]
+    fn executor_errors_propagate_and_instance_survives() {
+        let factory: crate::runtime::ExecutorFactory = Box::new(|| {
+            Ok(Box::new(MockExecutor::new(1.0).failing_after(1)) as Box<dyn Executor>)
+        });
+        let inst = RuntimeInstance::start("flaky", "gpu0", factory).unwrap();
+        assert!(inst.exec(vec![1.0]).is_ok());
+        assert!(inst.exec(vec![1.0]).is_err(), "second call fails");
+        // instance still serves errors rather than hanging
+        assert!(inst.exec(vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn stop_joins_thread() {
+        let inst = RuntimeInstance::start(
+            "mock",
+            "gpu0",
+            MockExecutor::factory(1.0, Duration::ZERO),
+        )
+        .unwrap();
+        inst.stop();
+        // after stop, a new instance can be created with the same name
+        let inst2 = RuntimeInstance::start(
+            "mock",
+            "gpu0",
+            MockExecutor::factory(1.0, Duration::ZERO),
+        )
+        .unwrap();
+        assert!(inst2.exec(vec![1.0]).is_ok());
+    }
+
+    #[test]
+    fn concurrent_exec_requests_serialize_on_instance() {
+        let inst = Arc::new(
+            RuntimeInstance::start(
+                "mock",
+                "gpu0",
+                MockExecutor::factory(1.0, Duration::from_millis(5)),
+            )
+            .unwrap(),
+        );
+        let mut handles = Vec::new();
+        for i in 0..6 {
+            let inst = inst.clone();
+            handles.push(std::thread::spawn(move || {
+                inst.exec(vec![i as f32]).unwrap().output[0]
+            }));
+        }
+        let mut got: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(inst.executions(), 6);
+    }
+
+    #[test]
+    fn pjrt_instance_end_to_end() {
+        use crate::runtime::{artifacts_available, artifacts_dir, PjrtExecutor, RuntimeBundle};
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        let b2 = bundle.clone();
+        let factory: crate::runtime::ExecutorFactory = Box::new(move || {
+            Ok(Box::new(PjrtExecutor::compile(&b2, "tinyyolo-gpu")?) as Box<dyn Executor>)
+        });
+        let inst = RuntimeInstance::start("tinyyolo-gpu", "gpu0", factory).unwrap();
+        assert!(inst.cold_start_wall > Duration::ZERO);
+        let input = vec![0.5f32; 1 * 64 * 64 * 3];
+        let out = inst.exec(input).unwrap();
+        assert_eq!(out.output.len(), 1 * 2 * 2 * 125);
+    }
+}

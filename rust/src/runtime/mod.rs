@@ -1,0 +1,48 @@
+//! Runtime layer: loading AOT artifacts and running them via PJRT.
+//!
+//! Paper §IV-D: *"a runtime instance is a process running on a worker node
+//! that can fulfill user invocations using its runtime"*, with different
+//! instances of the same logical runtime implemented per accelerator type.
+//! Here:
+//!
+//! * [`bundle::RuntimeBundle`] — the runtime implementation package: the
+//!   AOT manifest, per-variant HLO text, and the weight blob.  Published
+//!   to / fetched from the object store exactly like the paper's runtime
+//!   bundles in Minio.
+//! * [`pjrt::PjrtExecutor`] — compiles one variant's HLO on a PJRT CPU
+//!   client and executes it.  **Python is not involved**: this is the
+//!   entire request-path compute stack.
+//! * [`instance::RuntimeInstance`] — the process-model wrapper: a
+//!   dedicated OS thread owning its executor (PJRT clients are not
+//!   `Send`), fed through a channel.  Cold start = thread spawn + HLO
+//!   compile + weight upload; warm = channel send.
+//! * [`pool::InstancePool`] — the node manager's warm-instance cache.
+
+pub mod bundle;
+pub mod instance;
+pub mod pjrt;
+pub mod pool;
+
+pub use bundle::{ArtifactSpec, RuntimeBundle, WeightSpec};
+pub use instance::{ExecOutcome, Executor, RuntimeInstance};
+pub use pjrt::PjrtExecutor;
+pub use pool::InstancePool;
+
+use anyhow::Result;
+
+/// Executor factory: runs *inside* the instance thread (PJRT handles are
+/// not `Send`, and the paper's instances are isolated processes anyway).
+pub type ExecutorFactory = Box<dyn FnOnce() -> Result<Box<dyn Executor>> + Send>;
+
+/// Resolve the artifacts directory: `$HARDLESS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("HARDLESS_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when `make artifacts` has produced the AOT outputs (integration
+/// tests that need real PJRT execution are skipped otherwise).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").is_file()
+}

@@ -1,0 +1,231 @@
+//! PJRT executor: compile + run one AOT model variant.
+//!
+//! The Rust half of the AOT bridge (see `/opt/xla-example/load_hlo` and
+//! `python/compile/aot.py`): HLO **text** is parsed with the XLA text
+//! parser (`parse_and_return_unverified_module`, which reassigns
+//! instruction ids — jax ≥0.5 emits 64-bit ids that xla_extension 0.5.1
+//! rejects in proto form), compiled on the PJRT CPU client, and executed
+//! with the image plus the bundle's weight literals.
+//!
+//! `PjrtExecutor` is intentionally **not `Send`** (the underlying client
+//! is `Rc`-based); it lives inside its [`super::RuntimeInstance`] thread,
+//! mirroring the paper's process-per-instance isolation.
+
+use super::bundle::RuntimeBundle;
+use super::instance::Executor;
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled model variant bound to a PJRT client.
+pub struct PjrtExecutor {
+    exe: PjRtLoadedExecutable,
+    /// Weight literals in entry-signature order (after the image).
+    weight_literals: Vec<Literal>,
+    input_shape: Vec<usize>,
+    input_len: usize,
+    output_len: usize,
+    variant: String,
+}
+
+impl PjrtExecutor {
+    /// Compile `variant` from `bundle` on a fresh PJRT CPU client.
+    ///
+    /// This is the cold-start path: client creation + HLO parse + XLA
+    /// compilation + weight literal upload all happen here.
+    pub fn compile(bundle: &RuntimeBundle, variant: &str) -> Result<PjrtExecutor> {
+        let art = bundle.artifact(variant)?.clone();
+        let hlo = bundle.hlo_text(variant)?;
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = HloModuleProto::parse_and_return_unverified_module(hlo.as_bytes())
+            .with_context(|| format!("parse HLO text for {variant}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {variant}"))?;
+
+        let mut weight_literals = Vec::with_capacity(bundle.weights.len());
+        for (shape, data) in bundle.weights_f32() {
+            weight_literals.push(make_literal(&data, &shape)?);
+        }
+        Ok(PjrtExecutor {
+            exe,
+            weight_literals,
+            input_len: art.input_len(),
+            input_shape: art.input_shape.clone(),
+            output_len: art.output_len(),
+            variant: variant.to_string(),
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_len
+    }
+}
+
+/// Build an f32 literal of `shape` from `data`.
+fn make_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let expect: usize = shape.iter().product::<usize>().max(1);
+    if expect != data.len() {
+        bail!("literal shape {shape:?} wants {expect} elems, got {}", data.len());
+    }
+    let flat = Literal::vec1(data);
+    if shape.len() <= 1 {
+        return Ok(flat);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+impl Executor for PjrtExecutor {
+    /// Execute the variant on one input image (flattened NHWC f32).
+    ///
+    /// The request-path hot loop: one literal upload, one PJRT execute,
+    /// one device-to-host readback.  No Python anywhere.
+    fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.input_len {
+            bail!(
+                "input of {} f32s, variant {} expects {}",
+                input.len(),
+                self.variant,
+                self.input_len
+            );
+        }
+        // The AOT signature is (image[1,H,W,3], *weight_leaves).
+        let img = make_literal(input, &self.input_shape)?;
+        let mut args: Vec<&Literal> = Vec::with_capacity(1 + self.weight_literals.len());
+        args.push(&img);
+        args.extend(self.weight_literals.iter());
+        let result = self.exe.execute::<&Literal>(&args)?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("readback")?
+            .to_tuple1()
+            .context("unwrap 1-tuple (AOT lowers with return_tuple=True)")?;
+        let values = out.to_vec::<f32>()?;
+        if values.len() != self.output_len {
+            bail!(
+                "variant {} produced {} f32s, manifest says {}",
+                self.variant,
+                values.len(),
+                self.output_len
+            );
+        }
+        Ok(values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    fn golden(path: &str) -> Vec<f32> {
+        let bytes = std::fs::read(artifacts_dir().join(path)).unwrap();
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn make_literal_validates_shape() {
+        assert!(make_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(make_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    #[test]
+    fn gpu_variant_matches_python_golden() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        let mut exec = PjrtExecutor::compile(&bundle, "tinyyolo-gpu").unwrap();
+        let input = golden("golden_input.bin");
+        let expect = golden("tinyyolo-gpu.golden.bin");
+        let out = exec.infer(&input).unwrap();
+        assert_eq!(out.len(), expect.len());
+        let d = max_abs_diff(&out, &expect);
+        assert!(d < 1e-3, "rust PJRT output diverges from jax golden by {d}");
+    }
+
+    #[test]
+    fn vpu_variant_runs_and_approximates_gpu() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        let mut exec = PjrtExecutor::compile(&bundle, "tinyyolo-vpu").unwrap();
+        let input = golden("golden_input.bin");
+        let expect = golden("tinyyolo-vpu.golden.bin");
+        let out = exec.infer(&input).unwrap();
+        // bf16 rounding differs between xla_extension 0.5.1 and the jax
+        // 0.8 CPU backend (fusion/accumulation order through 8 bf16
+        // layers), so exact agreement with the jax bf16 golden is not
+        // attainable.  Empirically the jax bf16 golden itself deviates
+        // from the f32 golden by mean |Δ| ≈ 0.092 on outputs of mean
+        // magnitude ≈ 1.0 — i.e. that is the inherent bf16 noise floor of
+        // this network.  Require the rust output to sit inside the same
+        // noise ball around *both* goldens.
+        let bound = |a: &[f32], b: &[f32], max_tol: f32, mean_tol: f32, what: &str| {
+            let worst = max_abs_diff(a, b);
+            let mean: f32 =
+                a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+            assert!(
+                worst < max_tol && mean < mean_tol,
+                "{what}: worst {worst}, mean {mean}"
+            );
+        };
+        bound(&out, &expect, 0.75, 0.15, "vs bf16 golden");
+        let f32_golden = golden("tinyyolo-gpu.golden.bin");
+        bound(&out, &f32_golden, 0.75, 0.15, "vs f32 golden");
+    }
+
+    #[test]
+    fn repeated_inference_is_deterministic() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        let mut exec = PjrtExecutor::compile(&bundle, "tinyyolo-gpu").unwrap();
+        let input = golden("golden_input.bin");
+        let a = exec.infer(&input).unwrap();
+        let b = exec.infer(&input).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn wrong_input_size_rejected() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        let mut exec = PjrtExecutor::compile(&bundle, "tinyyolo-gpu").unwrap();
+        assert!(exec.infer(&[0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn unknown_variant_fails_to_compile() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        assert!(PjrtExecutor::compile(&bundle, "tinyyolo-zzz").is_err());
+    }
+}

@@ -1,0 +1,335 @@
+//! Warm instance pool — the node manager's cold-start avoidance cache.
+//!
+//! Paper §IV-D: node managers *"minimize setup times and switching costs,
+//! in the serverless context typically referred to as cold-starts"* by
+//! preferring queued work whose runtime is already warm.  The pool tracks
+//! live [`RuntimeInstance`]s per (variant, device), hands idle ones to
+//! workers, and evicts least-recently-used instances when capacity is
+//! needed for a different variant (the "switching cost" case).
+
+use super::instance::RuntimeInstance;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+/// Pool key: a warm instance is specific to a variant *and* a device.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PoolKey {
+    variant: String,
+    device_id: String,
+}
+
+struct Entry {
+    instance: Arc<RuntimeInstance>,
+    busy: bool,
+    last_used_seq: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: Vec<(PoolKey, Entry)>,
+    seq: u64,
+    cold_starts: u64,
+    warm_hits: u64,
+    evictions: u64,
+}
+
+/// Pool statistics (exported with node metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub live: usize,
+    pub busy: usize,
+    pub cold_starts: u64,
+    pub warm_hits: u64,
+    pub evictions: u64,
+}
+
+/// Guard marking an instance busy; returns it to the pool on drop.
+pub struct PooledInstance {
+    pub instance: Arc<RuntimeInstance>,
+    pool: Arc<InstancePool>,
+    key_variant: String,
+    key_device: String,
+    /// Whether this checkout was a warm hit (false = freshly cold-started).
+    pub warm: bool,
+}
+
+impl Drop for PooledInstance {
+    fn drop(&mut self) {
+        self.pool
+            .release(&self.key_variant, &self.key_device);
+    }
+}
+
+/// The per-node warm pool.
+pub struct InstancePool {
+    inner: Mutex<Inner>,
+    /// Max live instances across all variants/devices on this node.
+    capacity: usize,
+}
+
+impl InstancePool {
+    pub fn new(capacity: usize) -> Arc<InstancePool> {
+        assert!(capacity > 0);
+        Arc::new(InstancePool { inner: Mutex::new(Inner::default()), capacity })
+    }
+
+    /// Variants with at least one idle warm instance — feeds the node's
+    /// `TakeFilter::warm` set.
+    pub fn warm_variants(&self) -> Vec<String> {
+        let inner = self.inner.lock().expect("pool poisoned");
+        let mut v: Vec<String> = inner
+            .entries
+            .iter()
+            .filter(|(_, e)| !e.busy)
+            .map(|(k, _)| k.variant.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Whether an idle warm instance exists for (variant, device) — the
+    /// per-device warmth check the scheduler and placement logic use.
+    pub fn has_idle(&self, variant: &str, device_id: &str) -> bool {
+        let inner = self.inner.lock().expect("pool poisoned");
+        inner
+            .entries
+            .iter()
+            .any(|(k, e)| k.variant == variant && k.device_id == device_id && !e.busy)
+    }
+
+    /// Check out a warm idle instance for (variant, device), if any.
+    pub fn acquire_warm(
+        self: &Arc<InstancePool>,
+        variant: &str,
+        device_id: &str,
+    ) -> Option<PooledInstance> {
+        let mut inner = self.inner.lock().expect("pool poisoned");
+        inner.seq += 1;
+        let seq = inner.seq;
+        for (k, e) in inner.entries.iter_mut() {
+            if k.variant == variant && k.device_id == device_id && !e.busy {
+                e.busy = true;
+                e.last_used_seq = seq;
+                let inst = e.instance.clone();
+                inner.warm_hits += 1;
+                return Some(PooledInstance {
+                    instance: inst,
+                    pool: self.clone(),
+                    key_variant: variant.to_string(),
+                    key_device: device_id.to_string(),
+                    warm: true,
+                });
+            }
+        }
+        None
+    }
+
+    /// Check out an instance, cold-starting one via `factory` when no warm
+    /// instance exists.  Evicts the LRU idle instance if at capacity.
+    pub fn acquire_or_start(
+        self: &Arc<InstancePool>,
+        variant: &str,
+        device_id: &str,
+        factory: impl FnOnce() -> Result<RuntimeInstance>,
+    ) -> Result<PooledInstance> {
+        if let Some(warm) = self.acquire_warm(variant, device_id) {
+            return Ok(warm);
+        }
+        // Evict before starting so capacity holds even if factory is slow.
+        self.evict_lru_if_full()?;
+        let instance = Arc::new(factory()?);
+        let mut inner = self.inner.lock().expect("pool poisoned");
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner.cold_starts += 1;
+        inner.entries.push((
+            PoolKey { variant: variant.to_string(), device_id: device_id.to_string() },
+            Entry { instance: instance.clone(), busy: true, last_used_seq: seq },
+        ));
+        Ok(PooledInstance {
+            instance,
+            pool: self.clone(),
+            key_variant: variant.to_string(),
+            key_device: device_id.to_string(),
+            warm: false,
+        })
+    }
+
+    fn evict_lru_if_full(&self) -> Result<()> {
+        let mut inner = self.inner.lock().expect("pool poisoned");
+        if inner.entries.len() < self.capacity {
+            return Ok(());
+        }
+        // Find the least-recently-used idle entry.
+        let victim = inner
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, e))| !e.busy)
+            .min_by_key(|(_, (_, e))| e.last_used_seq)
+            .map(|(i, _)| i);
+        match victim {
+            Some(i) => {
+                inner.entries.remove(i);
+                inner.evictions += 1;
+                Ok(())
+            }
+            None => anyhow::bail!(
+                "instance pool saturated: {} busy instances at capacity {}",
+                inner.entries.len(),
+                self.capacity
+            ),
+        }
+    }
+
+    fn release(&self, variant: &str, device_id: &str) {
+        let mut inner = self.inner.lock().expect("pool poisoned");
+        inner.seq += 1;
+        let seq = inner.seq;
+        if let Some((_, e)) = inner
+            .entries
+            .iter_mut()
+            .find(|(k, e)| k.variant == variant && k.device_id == device_id && e.busy)
+        {
+            e.busy = false;
+            e.last_used_seq = seq;
+        }
+    }
+
+    /// Drop all idle instances (node drain / scale-to-zero).
+    pub fn drain_idle(&self) -> usize {
+        let mut inner = self.inner.lock().expect("pool poisoned");
+        let before = inner.entries.len();
+        inner.entries.retain(|(_, e)| e.busy);
+        before - inner.entries.len()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().expect("pool poisoned");
+        PoolStats {
+            live: inner.entries.len(),
+            busy: inner.entries.iter().filter(|(_, e)| e.busy).count(),
+            cold_starts: inner.cold_starts,
+            warm_hits: inner.warm_hits,
+            evictions: inner.evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::instance::MockExecutor;
+    use std::time::Duration;
+
+    fn mock_instance(variant: &str, device: &str) -> Result<RuntimeInstance> {
+        RuntimeInstance::start(variant, device, MockExecutor::factory(1.0, Duration::ZERO))
+    }
+
+    #[test]
+    fn cold_then_warm() {
+        let pool = InstancePool::new(4);
+        {
+            let inst = pool
+                .acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0"))
+                .unwrap();
+            assert!(!inst.warm, "first checkout is a cold start");
+        }
+        let inst = pool
+            .acquire_or_start("v1", "gpu0", || panic!("must not cold start"))
+            .unwrap();
+        assert!(inst.warm);
+        let s = pool.stats();
+        assert_eq!((s.cold_starts, s.warm_hits), (1, 1));
+    }
+
+    #[test]
+    fn busy_instance_not_shared() {
+        let pool = InstancePool::new(4);
+        let a = pool
+            .acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0"))
+            .unwrap();
+        // same variant+device while busy -> second cold start
+        let b = pool
+            .acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0"))
+            .unwrap();
+        assert!(!b.warm);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.stats().live, 2);
+    }
+
+    #[test]
+    fn warm_keyed_by_device_and_variant() {
+        let pool = InstancePool::new(8);
+        drop(pool.acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0")).unwrap());
+        assert!(pool.acquire_warm("v1", "gpu1").is_none(), "different device");
+        assert!(pool.acquire_warm("v2", "gpu0").is_none(), "different variant");
+        assert!(pool.acquire_warm("v1", "gpu0").is_some());
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let pool = InstancePool::new(2);
+        drop(pool.acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0")).unwrap());
+        drop(pool.acquire_or_start("v2", "gpu0", || mock_instance("v2", "gpu0")).unwrap());
+        // touch v1 so v2 becomes LRU
+        drop(pool.acquire_warm("v1", "gpu0").unwrap());
+        drop(pool.acquire_or_start("v3", "gpu0", || mock_instance("v3", "gpu0")).unwrap());
+        assert_eq!(pool.stats().evictions, 1);
+        assert!(pool.acquire_warm("v2", "gpu0").is_none(), "v2 evicted as LRU");
+        assert!(pool.acquire_warm("v1", "gpu0").is_some(), "v1 kept");
+    }
+
+    #[test]
+    fn saturated_pool_errors() {
+        let pool = InstancePool::new(1);
+        let _busy = pool
+            .acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0"))
+            .unwrap();
+        let err = match pool.acquire_or_start("v2", "gpu0", || mock_instance("v2", "gpu0")) {
+            Err(e) => e,
+            Ok(_) => panic!("acquire must fail when saturated"),
+        };
+        assert!(format!("{err}").contains("saturated"));
+    }
+
+    #[test]
+    fn warm_variants_reflect_idle_only() {
+        let pool = InstancePool::new(4);
+        let busy = pool
+            .acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0"))
+            .unwrap();
+        assert!(pool.warm_variants().is_empty(), "busy instance is not warm-available");
+        drop(busy);
+        assert_eq!(pool.warm_variants(), vec!["v1".to_string()]);
+    }
+
+    #[test]
+    fn drain_idle_keeps_busy() {
+        let pool = InstancePool::new(4);
+        let busy = pool
+            .acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0"))
+            .unwrap();
+        drop(pool.acquire_or_start("v2", "gpu0", || mock_instance("v2", "gpu0")).unwrap());
+        assert_eq!(pool.drain_idle(), 1);
+        assert_eq!(pool.stats().live, 1);
+        drop(busy);
+    }
+
+    #[test]
+    fn release_happens_via_guard_drop_even_on_panic() {
+        let pool = InstancePool::new(4);
+        let p2 = pool.clone();
+        let _ = std::thread::spawn(move || {
+            let _inst = p2
+                .acquire_or_start("v1", "gpu0", || mock_instance("v1", "gpu0"))
+                .unwrap();
+            panic!("worker crashed mid-invocation");
+        })
+        .join();
+        assert_eq!(pool.stats().busy, 0, "guard returned instance on panic");
+        assert!(pool.acquire_warm("v1", "gpu0").is_some());
+    }
+}

@@ -1,0 +1,259 @@
+//! Event-selection policies.
+//!
+//! The paper's node managers scan the shared queue and choose what to take
+//! (§IV-C/D); its discussion section calls for *"complex event scheduling
+//! and filtering mechanisms"* as future work.  This module makes the
+//! policy pluggable:
+//!
+//! * [`WarmFirst`] — the paper's behaviour: take anything supported, but
+//!   prefer events whose runtime is warm locally.
+//! * [`Fifo`] — ablation baseline: plain SQS-style pop of the oldest
+//!   supported event, ignoring warmth (see `benches/ablation_warmfirst`).
+//! * [`KindAffinity`] — prefer events that can run on a given accelerator
+//!   kind while it has free slots (bias work toward cheap accelerators).
+//! * [`DeadlineFilter`] — the future-work latency guarantee: drop events
+//!   that have already waited past a deadline instead of running them.
+
+use crate::accel::DeviceRegistry;
+use crate::events::Invocation;
+use crate::queue::TakeFilter;
+use crate::runtime::InstancePool;
+use crate::util::SimTime;
+use std::time::Duration;
+
+/// Decision for a leased event before execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admission {
+    Run,
+    /// Fail the event without executing (reason recorded on the
+    /// invocation).  The lease is still acked — the decision is final.
+    Reject(String),
+}
+
+/// Node-side scheduling policy.
+pub trait Policy: Send + Sync {
+    /// Build the queue-scan filter for the next poll, given the node's
+    /// devices and warm pool.
+    fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter;
+
+    /// Admission check after the lease is obtained.
+    fn admit(&self, _inv: &Invocation, _now: SimTime) -> Admission {
+        Admission::Run
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Runtimes that are warm *somewhere usable*: an idle instance exists for
+/// (variant, device) where the device implements the logical runtime via
+/// that variant and has a free slot.
+pub fn warm_runtimes(registry: &DeviceRegistry, pool: &InstancePool) -> Vec<String> {
+    let mut out = Vec::new();
+    for rt in registry.supported_runtimes() {
+        let usable = registry.devices().iter().any(|d| {
+            d.free_slots() > 0
+                && d.profile
+                    .variant_for(&rt)
+                    .map(|v| pool.has_idle(v, &d.id))
+                    .unwrap_or(false)
+        });
+        if usable {
+            out.push(rt);
+        }
+    }
+    out
+}
+
+/// The paper's policy: scan for warm work first, cold otherwise.
+#[derive(Debug, Default)]
+pub struct WarmFirst;
+
+impl Policy for WarmFirst {
+    fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
+        TakeFilter::supporting(registry.supported_runtimes())
+            .with_warm(warm_runtimes(registry, pool))
+    }
+
+    fn name(&self) -> &'static str {
+        "warm-first"
+    }
+}
+
+/// Ablation baseline: strict FIFO, warmth ignored.
+#[derive(Debug, Default)]
+pub struct Fifo;
+
+impl Policy for Fifo {
+    fn filter(&self, registry: &DeviceRegistry, _pool: &InstancePool) -> TakeFilter {
+        TakeFilter::supporting(registry.supported_runtimes())
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Prefer runtimes executable on `kind` while that kind has free slots;
+/// fall back to everything supported otherwise.
+#[derive(Debug)]
+pub struct KindAffinity {
+    pub kind: crate::accel::AcceleratorKind,
+}
+
+impl Policy for KindAffinity {
+    fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
+        let preferred: Vec<String> = registry
+            .devices()
+            .iter()
+            .filter(|d| d.profile.kind == self.kind && d.free_slots() > 0)
+            .flat_map(|d| d.profile.runtimes.keys().cloned())
+            .collect();
+        if preferred.is_empty() {
+            WarmFirst.filter(registry, pool)
+        } else {
+            TakeFilter::supporting(preferred).with_warm(warm_runtimes(registry, pool))
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "kind-affinity"
+    }
+}
+
+/// Warm-first + deadline admission: events that already waited longer than
+/// `deadline` are rejected instead of executed (fail-fast semantics for
+/// the paper's "customers might want specific latency guarantees").
+#[derive(Debug)]
+pub struct DeadlineFilter {
+    pub deadline: Duration,
+}
+
+impl Policy for DeadlineFilter {
+    fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
+        WarmFirst.filter(registry, pool)
+    }
+
+    fn admit(&self, inv: &Invocation, now: SimTime) -> Admission {
+        match inv.stamps.r_start {
+            Some(start) if now.since(start) > self.deadline => Admission::Reject(format!(
+                "deadline exceeded: waited {:.0} ms > {:.0} ms",
+                now.since(start).as_secs_f64() * 1e3,
+                self.deadline.as_secs_f64() * 1e3
+            )),
+            _ => Admission::Run,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "deadline-filter"
+    }
+}
+
+/// Parse a policy by name (CLI/config).
+pub fn parse_policy(name: &str) -> anyhow::Result<std::sync::Arc<dyn Policy>> {
+    match name {
+        "warm-first" => Ok(std::sync::Arc::new(WarmFirst)),
+        "fifo" => Ok(std::sync::Arc::new(Fifo)),
+        s if s.starts_with("deadline:") => {
+            let ms: u64 = s["deadline:".len()..]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad deadline in '{s}': {e}"))?;
+            Ok(std::sync::Arc::new(DeadlineFilter {
+                deadline: Duration::from_millis(ms),
+            }))
+        }
+        other => anyhow::bail!(
+            "unknown policy '{other}' (expected warm-first | fifo | deadline:<ms>)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{paper_all_accel, AcceleratorKind};
+    use crate::events::EventSpec;
+    use crate::runtime::instance::MockExecutor;
+    use crate::runtime::RuntimeInstance;
+
+    fn pool_with_warm(variant: &str, device: &str) -> std::sync::Arc<InstancePool> {
+        let pool = InstancePool::new(8);
+        drop(
+            pool.acquire_or_start(variant, device, || {
+                RuntimeInstance::start(
+                    variant,
+                    device,
+                    MockExecutor::factory(1.0, Duration::ZERO),
+                )
+            })
+            .unwrap(),
+        );
+        pool
+    }
+
+    #[test]
+    fn warm_first_filter_contents() {
+        let reg = paper_all_accel();
+        let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
+        let f = WarmFirst.filter(&reg, &pool);
+        assert_eq!(f.runtimes, vec!["tinyyolo".to_string()]);
+        assert_eq!(f.warm, vec!["tinyyolo".to_string()]);
+        assert!(!f.warm_only);
+    }
+
+    #[test]
+    fn warm_requires_matching_device_with_free_slot() {
+        let reg = paper_all_accel();
+        // warm instance exists for the *vpu* variant on a gpu device id:
+        // no device maps tinyyolo -> tinyyolo-vpu except vpu0, and vpu0 has
+        // no instance — so nothing is "usably warm".
+        let pool = pool_with_warm("tinyyolo-vpu", "gpu0");
+        assert!(warm_runtimes(&reg, &pool).is_empty());
+        // saturate vpu0's only slot: a warm vpu instance becomes unusable
+        let pool = pool_with_warm("tinyyolo-vpu", "vpu0");
+        assert_eq!(warm_runtimes(&reg, &pool), vec!["tinyyolo".to_string()]);
+        let _slot = reg.get("vpu0").unwrap().try_acquire().unwrap();
+        assert!(warm_runtimes(&reg, &pool).is_empty());
+    }
+
+    #[test]
+    fn fifo_has_no_warm_set() {
+        let reg = paper_all_accel();
+        let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
+        let f = Fifo.filter(&reg, &pool);
+        assert!(f.warm.is_empty());
+    }
+
+    #[test]
+    fn kind_affinity_prefers_kind_with_capacity() {
+        let reg = paper_all_accel();
+        let pool = InstancePool::new(4);
+        let policy = KindAffinity { kind: AcceleratorKind::Vpu };
+        let f = policy.filter(&reg, &pool);
+        assert_eq!(f.runtimes, vec!["tinyyolo".to_string()]);
+        // saturate the vpu -> falls back to warm-first over all devices
+        let _slot = reg.get("vpu0").unwrap().try_acquire().unwrap();
+        let f = policy.filter(&reg, &pool);
+        assert_eq!(f.runtimes, reg.supported_runtimes());
+    }
+
+    #[test]
+    fn deadline_rejects_stale_events() {
+        let policy = DeadlineFilter { deadline: Duration::from_millis(500) };
+        let inv = Invocation::new("1", EventSpec::new("r", "d"), SimTime::from_millis(0));
+        assert_eq!(policy.admit(&inv, SimTime::from_millis(100)), Admission::Run);
+        match policy.admit(&inv, SimTime::from_millis(900)) {
+            Admission::Reject(reason) => assert!(reason.contains("deadline"), "{reason}"),
+            other => panic!("expected reject, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_policy_names() {
+        assert_eq!(parse_policy("warm-first").unwrap().name(), "warm-first");
+        assert_eq!(parse_policy("fifo").unwrap().name(), "fifo");
+        assert_eq!(parse_policy("deadline:2000").unwrap().name(), "deadline-filter");
+        assert!(parse_policy("deadline:xx").is_err());
+        assert!(parse_policy("zzz").is_err());
+    }
+}

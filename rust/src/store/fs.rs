@@ -1,0 +1,160 @@
+//! Filesystem object store backend.
+//!
+//! Durable variant of the store: objects live under a root directory with
+//! the key as relative path (keys are validated against traversal in
+//! [`super::validate_key`]).  Writes are atomic (temp file + rename) so a
+//! crashed node never leaves a half-written runtime bundle for others.
+
+use super::{validate_key, ObjectStore};
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Object store rooted at a directory.
+pub struct FsStore {
+    root: PathBuf,
+    tmp_counter: AtomicU64,
+}
+
+impl FsStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<FsStore> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(&root).with_context(|| format!("create store root {root:?}"))?;
+        Ok(FsStore { root, tmp_counter: AtomicU64::new(0) })
+    }
+
+    fn path_of(&self, key: &str) -> Result<PathBuf> {
+        validate_key(key)?;
+        Ok(self.root.join(key))
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+impl ObjectStore for FsStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        let path = self.path_of(key)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        // Atomic publish: write to a unique temp name, then rename.
+        let tmp = self.root.join(format!(
+            ".tmp.{}.{}",
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
+        ));
+        fs::write(&tmp, data).with_context(|| format!("write {tmp:?}"))?;
+        fs::rename(&tmp, &path).with_context(|| format!("publish {path:?}"))?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        let path = self.path_of(key)?;
+        if !path.is_file() {
+            bail!("object not found: {key}");
+        }
+        fs::read(&path).with_context(|| format!("read {path:?}"))
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        Ok(self.path_of(key)?.is_file())
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let path = self.path_of(key)?;
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        walk(&self.root, &self.root, &mut out)?;
+        out.retain(|k| k.starts_with(prefix) && !k.starts_with(".tmp."));
+        out.sort();
+        Ok(out)
+    }
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if let Ok(rel) = path.strip_prefix(root) {
+            out.push(rel.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::conformance;
+
+    fn tmp_store(name: &str) -> FsStore {
+        let dir = std::env::temp_dir().join(format!(
+            "hardless-fsstore-{name}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        FsStore::open(dir).unwrap()
+    }
+
+    #[test]
+    fn conformance_suite() {
+        let s = tmp_store("conf");
+        conformance::run_all(&s);
+        let _ = fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn persists_across_reopen() {
+        let s = tmp_store("reopen");
+        let root = s.root().to_path_buf();
+        s.put("datasets/x", b"payload").unwrap();
+        drop(s);
+        let s2 = FsStore::open(&root).unwrap();
+        assert_eq!(s2.get("datasets/x").unwrap(), b"payload");
+        let _ = fs::remove_dir_all(root);
+    }
+
+    #[test]
+    fn nested_keys_make_directories() {
+        let s = tmp_store("nest");
+        s.put("a/b/c/d", b"deep").unwrap();
+        assert_eq!(s.get("a/b/c/d").unwrap(), b"deep");
+        assert_eq!(s.list("a/b/").unwrap(), vec!["a/b/c/d".to_string()]);
+        let _ = fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn traversal_cannot_escape_root() {
+        let s = tmp_store("trav");
+        assert!(s.put("../escape", b"x").is_err());
+        assert!(s.get("../../etc/passwd").is_err());
+        let _ = fs::remove_dir_all(s.root());
+    }
+
+    #[test]
+    fn temp_files_not_listed() {
+        let s = tmp_store("tmpfiles");
+        // simulate a crashed write
+        fs::write(s.root().join(".tmp.999.0"), b"junk").unwrap();
+        s.put("real/key", b"x").unwrap();
+        let keys = s.list("").unwrap();
+        assert_eq!(keys, vec!["real/key".to_string()]);
+        let _ = fs::remove_dir_all(s.root());
+    }
+}

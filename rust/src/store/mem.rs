@@ -1,0 +1,128 @@
+//! In-memory object store backend (tests + single-process experiments).
+
+use super::{validate_key, ObjectStore};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+/// Thread-safe in-memory blob map with the full [`ObjectStore`] contract.
+#[derive(Default)]
+pub struct MemStore {
+    map: RwLock<BTreeMap<String, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    /// Number of stored objects.
+    pub fn len(&self) -> usize {
+        self.map.read().expect("memstore poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total stored bytes (capacity accounting in tests).
+    pub fn total_bytes(&self) -> usize {
+        self.map
+            .read()
+            .expect("memstore poisoned")
+            .values()
+            .map(|v| v.len())
+            .sum()
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        validate_key(key)?;
+        self.map
+            .write()
+            .expect("memstore poisoned")
+            .insert(key.to_string(), data.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        validate_key(key)?;
+        match self.map.read().expect("memstore poisoned").get(key) {
+            Some(v) => Ok(v.clone()),
+            None => bail!("object not found: {key}"),
+        }
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        validate_key(key)?;
+        Ok(self.map.read().expect("memstore poisoned").contains_key(key))
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        validate_key(key)?;
+        self.map.write().expect("memstore poisoned").remove(key);
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let map = self.map.read().expect("memstore poisoned");
+        Ok(map
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::conformance;
+    use std::sync::Arc;
+
+    #[test]
+    fn conformance_suite() {
+        conformance::run_all(&MemStore::new());
+    }
+
+    #[test]
+    fn accounting() {
+        let s = MemStore::new();
+        assert!(s.is_empty());
+        s.put("a/b", &[0u8; 100]).unwrap();
+        s.put("a/c", &[0u8; 50]).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.total_bytes(), 150);
+    }
+
+    #[test]
+    fn concurrent_put_get() {
+        let s = Arc::new(MemStore::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let key = format!("t{t}/obj{i}");
+                    s.put(&key, format!("{t}:{i}").as_bytes()).unwrap();
+                    assert_eq!(s.get(&key).unwrap(), format!("{t}:{i}").as_bytes());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.len(), 400);
+    }
+
+    #[test]
+    fn list_range_is_prefix_exact() {
+        let s = MemStore::new();
+        s.put("ab/1", b"x").unwrap();
+        s.put("abc/2", b"x").unwrap();
+        s.put("b/3", b"x").unwrap();
+        assert_eq!(s.list("ab/").unwrap(), vec!["ab/1".to_string()]);
+        assert_eq!(s.list("a").unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,204 @@
+//! Object storage — the role Minio plays in the paper's prototype.
+//!
+//! Paper §IV-D: *"Object storage is used in this architecture to store
+//! runtime implementations, input configuration, and input data."*  The
+//! HARDLESS data flow is strictly stateless: the benchmark client `put`s
+//! datasets, node managers `get` runtime bundles + datasets before running
+//! and `put` results before completing.
+//!
+//! Three backends share one trait: [`MemStore`] (in-process, used by unit
+//! tests and single-machine experiments), [`FsStore`] (durable, content
+//! verified), and [`remote::StoreClient`] (TCP, served by
+//! [`remote::StoreServer`] — the distributed deployment).
+//!
+//! Keys are namespaced by convention: `runtimes/...`, `datasets/...`,
+//! `results/...` (helpers below).
+
+pub mod fs;
+pub mod mem;
+pub mod remote;
+
+pub use fs::FsStore;
+pub use mem::MemStore;
+pub use remote::{StoreClient, StoreServer};
+
+use anyhow::Result;
+use sha2::{Digest, Sha256};
+
+/// Namespace helpers (bucket conventions).
+pub mod keys {
+    pub fn runtime(name: &str) -> String {
+        format!("runtimes/{name}")
+    }
+    pub fn dataset(name: &str) -> String {
+        format!("datasets/{name}")
+    }
+    pub fn result(invocation_id: &str) -> String {
+        format!("results/{invocation_id}")
+    }
+}
+
+/// Blob storage interface shared by all backends.
+pub trait ObjectStore: Send + Sync {
+    /// Store `data` under `key` (overwrites).
+    fn put(&self, key: &str, data: &[u8]) -> Result<()>;
+
+    /// Fetch the object at `key`.
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+
+    fn exists(&self, key: &str) -> Result<bool>;
+
+    fn delete(&self, key: &str) -> Result<()>;
+
+    /// Keys under a prefix (sorted).
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+
+    /// Content-addressed put: stores under `cas/<sha256>` and returns the
+    /// key.  Used for runtime bundles so identical uploads dedupe —
+    /// re-publishing a runtime is free, which the paper's warm-start story
+    /// depends on.
+    fn put_cas(&self, data: &[u8]) -> Result<String> {
+        let key = format!("cas/{}", hex_sha256(data));
+        if !self.exists(&key)? {
+            self.put(&key, data)?;
+        }
+        Ok(key)
+    }
+}
+
+/// Lowercase hex SHA-256 of `data`.
+pub fn hex_sha256(data: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(data);
+    let out = h.finalize();
+    let mut s = String::with_capacity(64);
+    for b in out {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Validate a key: non-empty, no traversal, printable ascii subset.
+/// Enforced by every backend so FsStore keys can map to paths safely.
+pub fn validate_key(key: &str) -> Result<()> {
+    anyhow::ensure!(!key.is_empty(), "empty object key");
+    anyhow::ensure!(key.len() <= 512, "object key too long");
+    anyhow::ensure!(!key.starts_with('/'), "absolute object key: {key}");
+    for part in key.split('/') {
+        anyhow::ensure!(!part.is_empty(), "empty path segment in key: {key}");
+        anyhow::ensure!(part != "." && part != "..", "path traversal in key: {key}");
+    }
+    anyhow::ensure!(
+        key.bytes().all(|b| b.is_ascii_alphanumeric() || b"-_./[]".contains(&b)),
+        "invalid character in object key: {key}"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod conformance {
+    //! Backend-agnostic conformance suite, run against every backend.
+    use super::*;
+
+    pub fn run_all(store: &dyn ObjectStore) {
+        put_get_roundtrip(store);
+        overwrite(store);
+        missing_get_errors(store);
+        exists_and_delete(store);
+        list_by_prefix(store);
+        cas_dedupes(store);
+        rejects_bad_keys(store);
+        empty_and_large_values(store);
+    }
+
+    fn put_get_roundtrip(s: &dyn ObjectStore) {
+        s.put("datasets/a", b"hello").unwrap();
+        assert_eq!(s.get("datasets/a").unwrap(), b"hello");
+    }
+
+    fn overwrite(s: &dyn ObjectStore) {
+        s.put("datasets/ow", b"v1").unwrap();
+        s.put("datasets/ow", b"v2").unwrap();
+        assert_eq!(s.get("datasets/ow").unwrap(), b"v2");
+    }
+
+    fn missing_get_errors(s: &dyn ObjectStore) {
+        assert!(s.get("nope/missing").is_err());
+    }
+
+    fn exists_and_delete(s: &dyn ObjectStore) {
+        s.put("tmp/x", b"x").unwrap();
+        assert!(s.exists("tmp/x").unwrap());
+        s.delete("tmp/x").unwrap();
+        assert!(!s.exists("tmp/x").unwrap());
+        // deleting a missing key is idempotent
+        s.delete("tmp/x").unwrap();
+    }
+
+    fn list_by_prefix(s: &dyn ObjectStore) {
+        s.put("runtimes/r1", b"1").unwrap();
+        s.put("runtimes/r2", b"2").unwrap();
+        s.put("results/z", b"3").unwrap();
+        let keys = s.list("runtimes/").unwrap();
+        assert!(keys.contains(&"runtimes/r1".to_string()), "{keys:?}");
+        assert!(keys.contains(&"runtimes/r2".to_string()));
+        assert!(!keys.iter().any(|k| k.starts_with("results/")));
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "list must be sorted");
+    }
+
+    fn cas_dedupes(s: &dyn ObjectStore) {
+        let k1 = s.put_cas(b"bundle-bytes").unwrap();
+        let k2 = s.put_cas(b"bundle-bytes").unwrap();
+        assert_eq!(k1, k2);
+        assert!(k1.starts_with("cas/"));
+        assert_eq!(s.get(&k1).unwrap(), b"bundle-bytes");
+    }
+
+    fn rejects_bad_keys(s: &dyn ObjectStore) {
+        for bad in ["", "/abs", "a//b", "../up", "a/../b", "sp ace", "null\0"] {
+            assert!(s.put(bad, b"x").is_err(), "should reject key {bad:?}");
+        }
+    }
+
+    fn empty_and_large_values(s: &dyn ObjectStore) {
+        s.put("datasets/empty", b"").unwrap();
+        assert_eq!(s.get("datasets/empty").unwrap(), b"");
+        let big = vec![0xAB; 3 * 1024 * 1024];
+        s.put("datasets/big", &big).unwrap();
+        assert_eq!(s.get("datasets/big").unwrap(), big);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vector() {
+        assert_eq!(
+            hex_sha256(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn key_validation() {
+        assert!(validate_key("datasets/img-1").is_ok());
+        assert!(validate_key("cas/0abc").is_ok());
+        assert!(validate_key("weights[0].bin").is_ok());
+        assert!(validate_key("/etc/passwd").is_err());
+        assert!(validate_key("a/./b").is_err());
+        assert!(validate_key("a/../../b").is_err());
+        assert!(validate_key("").is_err());
+        assert!(validate_key(&"x".repeat(600)).is_err());
+    }
+
+    #[test]
+    fn key_helpers() {
+        assert_eq!(keys::runtime("tinyyolo"), "runtimes/tinyyolo");
+        assert_eq!(keys::dataset("img"), "datasets/img");
+        assert_eq!(keys::result("inv-1"), "results/inv-1");
+    }
+}

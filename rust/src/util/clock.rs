@@ -1,0 +1,170 @@
+//! Simulation-aware clock.
+//!
+//! The paper's protocol is 14 wall-clock minutes (2' warm-up + 10' scaling
+//! + 2' cool-down).  Queueing behaviour is invariant under a uniform time
+//! scaling of arrival and service processes (DESIGN.md S6), so every
+//! component reads time through [`Clock`] and the experiment harness runs a
+//! [`ScaledClock`] that compresses wall-clock by `scale` while reporting
+//! **paper units** (sim milliseconds).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A point in simulated time, in microseconds since clock epoch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub fn from_millis(ms: u64) -> SimTime {
+        SimTime(ms * 1000)
+    }
+
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1_000_000.0
+    }
+
+    /// Saturating difference (`self - earlier`).
+    pub fn since(self, earlier: SimTime) -> Duration {
+        Duration::from_micros(self.0.saturating_sub(earlier.0))
+    }
+}
+
+/// Time source used by every component (queue timeouts, metrics stamps,
+/// workload pacing, accelerator service pacing).
+pub trait Clock: Send + Sync {
+    /// Current simulated time.
+    fn now(&self) -> SimTime;
+
+    /// Sleep for a *simulated* duration (scaled down in wall-clock).
+    fn sleep(&self, sim: Duration);
+
+    /// The sim→wall scale factor (1.0 = real time).
+    fn scale(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Wall-clock time compressed by `scale`.
+///
+/// `scale = 60` runs the paper's 14-minute protocol in 14 s: simulated
+/// durations are divided by 60 for actual sleeping, and elapsed wall time
+/// is multiplied by 60 when read back.
+pub struct ScaledClock {
+    epoch: Instant,
+    scale: f64,
+}
+
+impl ScaledClock {
+    pub fn new(scale: f64) -> Arc<ScaledClock> {
+        assert!(scale > 0.0, "scale must be positive");
+        Arc::new(ScaledClock { epoch: Instant::now(), scale })
+    }
+
+    /// Real-time clock (scale 1).
+    pub fn realtime() -> Arc<ScaledClock> {
+        ScaledClock::new(1.0)
+    }
+}
+
+impl Clock for ScaledClock {
+    fn now(&self) -> SimTime {
+        let wall = self.epoch.elapsed();
+        SimTime((wall.as_secs_f64() * self.scale * 1e6) as u64)
+    }
+
+    fn sleep(&self, sim: Duration) {
+        let wall = sim.as_secs_f64() / self.scale;
+        if wall > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wall));
+        }
+    }
+
+    fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+/// Fully virtual clock for unit tests: time only moves when told to.
+/// `sleep` advances the virtual time without blocking the thread.
+pub struct TestClock {
+    micros: std::sync::atomic::AtomicU64,
+}
+
+impl TestClock {
+    pub fn new() -> Arc<TestClock> {
+        Arc::new(TestClock { micros: 0.into() })
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.micros
+            .fetch_add(d.as_micros() as u64, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn set(&self, t: SimTime) {
+        self.micros.store(t.0, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
+impl Clock for TestClock {
+    fn now(&self) -> SimTime {
+        SimTime(self.micros.load(std::sync::atomic::Ordering::SeqCst))
+    }
+
+    fn sleep(&self, sim: Duration) {
+        self.advance(sim);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simtime_arithmetic() {
+        let a = SimTime::from_millis(1500);
+        let b = SimTime::from_millis(500);
+        assert_eq!(a.since(b), Duration::from_millis(1000));
+        assert_eq!(b.since(a), Duration::ZERO); // saturating
+        assert!((a.as_millis_f64() - 1500.0).abs() < 1e-9);
+        assert!((a.as_secs_f64() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_clock_compresses_sleep() {
+        let c = ScaledClock::new(100.0);
+        let wall = Instant::now();
+        c.sleep(Duration::from_millis(500)); // 500 sim-ms = 5 wall-ms
+        let spent = wall.elapsed();
+        assert!(spent >= Duration::from_millis(4), "slept {spent:?}");
+        assert!(spent < Duration::from_millis(200), "slept {spent:?}");
+    }
+
+    #[test]
+    fn scaled_clock_reports_sim_time() {
+        let c = ScaledClock::new(1000.0);
+        std::thread::sleep(Duration::from_millis(5));
+        // 5 wall-ms at 1000x ≈ 5 sim-seconds
+        let now = c.now();
+        assert!(now.as_secs_f64() >= 4.0, "sim now {now:?}");
+    }
+
+    #[test]
+    fn test_clock_manual() {
+        let c = TestClock::new();
+        assert_eq!(c.now(), SimTime(0));
+        c.advance(Duration::from_millis(10));
+        assert_eq!(c.now(), SimTime::from_millis(10));
+        c.sleep(Duration::from_millis(5)); // non-blocking advance
+        assert_eq!(c.now(), SimTime::from_millis(15));
+        c.set(SimTime::from_millis(100));
+        assert_eq!(c.now().as_millis_f64(), 100.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! Latency histogram with exact percentiles (for the experiment tables:
+//! median ELat per accelerator kind, RLat tails, etc.).
+//!
+//! Stores raw samples — experiment runs are tens of thousands of
+//! invocations, so exact order statistics are affordable and avoid
+//! HDR-bucket bias in the reproduced medians.
+
+/// Collection of f64 samples with order-statistic queries.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile by linear interpolation between order statistics.
+    /// `q` in [0, 1]. Returns `None` when empty.
+    pub fn quantile(&mut self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        self.ensure_sorted();
+        let q = q.clamp(0.0, 1.0);
+        let pos = q * (self.samples.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        Some(self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac)
+    }
+
+    pub fn median(&mut self) -> Option<f64> {
+        self.quantile(0.5)
+    }
+
+    pub fn p95(&mut self) -> Option<f64> {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&mut self) -> Option<f64> {
+        self.quantile(0.99)
+    }
+
+    pub fn min(&mut self) -> Option<f64> {
+        self.quantile(0.0)
+    }
+
+    pub fn max(&mut self) -> Option<f64> {
+        self.quantile(1.0)
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
+
+    pub fn stddev(&self) -> Option<f64> {
+        let mean = self.mean()?;
+        if self.samples.len() < 2 {
+            return Some(0.0);
+        }
+        let var = self.samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        Some(var.sqrt())
+    }
+
+    /// One summary line for tables: `n / mean / p50 / p95 / p99 / max`.
+    pub fn summary(&mut self) -> String {
+        if self.is_empty() {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:.1} p50={:.1} p95={:.1} p99={:.1} max={:.1}",
+            self.len(),
+            self.mean().unwrap(),
+            self.median().unwrap(),
+            self.p95().unwrap(),
+            self.p99().unwrap(),
+            self.max().unwrap(),
+        )
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let mut h = Histogram::new();
+        assert!(h.median().is_none());
+        assert!(h.mean().is_none());
+        assert_eq!(h.summary(), "n=0");
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut h = Histogram::new();
+        h.record(42.0);
+        assert_eq!(h.median(), Some(42.0));
+        assert_eq!(h.p99(), Some(42.0));
+        assert_eq!(h.stddev(), Some(0.0));
+    }
+
+    #[test]
+    fn exact_median_odd_even() {
+        let mut h = Histogram::new();
+        for v in [3.0, 1.0, 2.0] {
+            h.record(v);
+        }
+        assert_eq!(h.median(), Some(2.0));
+        h.record(4.0);
+        assert_eq!(h.median(), Some(2.5)); // interpolated
+    }
+
+    #[test]
+    fn quantiles_of_uniform_ramp() {
+        let mut h = Histogram::new();
+        for i in 0..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.quantile(0.0), Some(0.0));
+        assert_eq!(h.quantile(1.0), Some(100.0));
+        assert_eq!(h.quantile(0.95), Some(95.0));
+        assert_eq!(h.median(), Some(50.0));
+    }
+
+    #[test]
+    fn interleaved_record_and_query() {
+        let mut h = Histogram::new();
+        h.record(10.0);
+        assert_eq!(h.median(), Some(10.0));
+        h.record(20.0);
+        h.record(30.0);
+        assert_eq!(h.median(), Some(20.0)); // re-sorts after new samples
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let mut h = Histogram::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            h.record(v);
+        }
+        assert!((h.mean().unwrap() - 5.0).abs() < 1e-12);
+        assert!((h.stddev().unwrap() - 2.138).abs() < 0.01);
+    }
+}

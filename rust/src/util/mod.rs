@@ -1,0 +1,42 @@
+//! Shared utilities: deterministic PRNG, simulation-aware clock, ids,
+//! moving windows and histograms used by the metrics pipeline.
+
+pub mod clock;
+pub mod logger;
+pub mod hist;
+pub mod rng;
+pub mod window;
+
+pub use clock::{Clock, ScaledClock, SimTime};
+pub use hist::Histogram;
+pub use rng::Rng;
+pub use window::MovingWindow;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Process-unique monotonically increasing id, prefixed for readability
+/// (`inv-17`, `node-2`, ...).
+pub fn next_id(prefix: &str) -> String {
+    let n = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    format!("{prefix}-{n}")
+}
+
+/// Reset the id counter (tests only — keeps golden outputs stable).
+pub fn reset_ids() {
+    NEXT_ID.store(1, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_unique_and_prefixed() {
+        let a = next_id("x");
+        let b = next_id("x");
+        assert!(a.starts_with("x-") && b.starts_with("x-"));
+        assert_ne!(a, b);
+    }
+}

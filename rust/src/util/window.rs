@@ -1,0 +1,124 @@
+//! Sliding-window counters — the paper's `RFast` metric is "a moving
+//! average number of successful computations in the last 10 seconds".
+
+use super::clock::SimTime;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Count of events inside a trailing time window (sim time).
+#[derive(Debug)]
+pub struct MovingWindow {
+    window: Duration,
+    events: VecDeque<SimTime>,
+}
+
+impl MovingWindow {
+    pub fn new(window: Duration) -> MovingWindow {
+        MovingWindow { window, events: VecDeque::new() }
+    }
+
+    /// The paper's RFast window: 10 simulated seconds.
+    pub fn rfast() -> MovingWindow {
+        MovingWindow::new(Duration::from_secs(10))
+    }
+
+    /// Record one event at `t`. Timestamps may arrive slightly out of
+    /// order (worker threads race); the window tolerates that by only
+    /// evicting on read.
+    pub fn record(&mut self, t: SimTime) {
+        self.events.push_back(t);
+    }
+
+    fn evict(&mut self, now: SimTime) {
+        let cutoff = now.as_micros().saturating_sub(self.window.as_micros() as u64);
+        // Events are *approximately* ordered; pop while the head is stale.
+        while let Some(&head) = self.events.front() {
+            if head.as_micros() < cutoff {
+                self.events.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Events within `[now - window, now]`.
+    pub fn count(&mut self, now: SimTime) -> usize {
+        self.evict(now);
+        self.events
+            .iter()
+            .filter(|t| t.as_micros() <= now.as_micros())
+            .count()
+    }
+
+    /// RFast as the paper plots it: completions in the window, normalized
+    /// to a per-second rate.
+    pub fn rate_per_sec(&mut self, now: SimTime) -> f64 {
+        let n = self.count(now) as f64;
+        n / self.window.as_secs_f64()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ms: u64) -> SimTime {
+        SimTime::from_millis(ms)
+    }
+
+    #[test]
+    fn counts_within_window() {
+        let mut w = MovingWindow::new(Duration::from_secs(10));
+        for ms in [0, 1000, 5000, 9000] {
+            w.record(t(ms));
+        }
+        assert_eq!(w.count(t(9000)), 4);
+        // at t=11s the t=0 event leaves the window
+        assert_eq!(w.count(t(11_000)), 3);
+        // at t=20s only t=9000 (cutoff 10_000 exclusive) remains... 9000 < 10000 so gone
+        assert_eq!(w.count(t(20_000)), 0);
+    }
+
+    #[test]
+    fn rate_normalizes() {
+        let mut w = MovingWindow::rfast();
+        for i in 0..30 {
+            w.record(t(i * 300)); // 30 events over 9 s
+        }
+        let r = w.rate_per_sec(t(9000));
+        assert!((r - 3.0).abs() < 0.11, "rate {r}");
+    }
+
+    #[test]
+    fn ignores_future_events_in_count() {
+        let mut w = MovingWindow::rfast();
+        w.record(t(5000));
+        w.record(t(50_000));
+        assert_eq!(w.count(t(6000)), 1);
+    }
+
+    #[test]
+    fn tolerates_out_of_order() {
+        let mut w = MovingWindow::rfast();
+        w.record(t(5000));
+        w.record(t(4000));
+        w.record(t(6000));
+        assert_eq!(w.count(t(6000)), 3);
+    }
+
+    #[test]
+    fn empty_window() {
+        let mut w = MovingWindow::rfast();
+        assert_eq!(w.count(t(1000)), 0);
+        assert_eq!(w.rate_per_sec(t(1000)), 0.0);
+        assert!(w.is_empty());
+    }
+}

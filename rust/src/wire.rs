@@ -1,0 +1,339 @@
+//! Wire substrate: length-prefixed JSON frames over TCP plus a tiny
+//! request/response RPC layer.
+//!
+//! Used by the distributed deployments of the invocation queue
+//! ([`crate::queue::remote`]) and the object store
+//! ([`crate::store::remote`]) — the roles Bedrock and Minio play in the
+//! paper's prototype.  Frame layout: `u32 little-endian length || payload`,
+//! payload is UTF-8 JSON.  Binary blobs ride base64-free as JSON arrays are
+//! too slow; they use a second raw frame (see [`write_blob`]).
+
+use crate::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Upper bound on a single frame (64 MiB) — guards against corrupt length
+/// prefixes taking the process down.
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one JSON frame.
+pub fn write_frame(stream: &mut impl Write, v: &Json) -> Result<()> {
+    write_blob(stream, v.to_string().as_bytes())
+}
+
+/// Write one raw frame (used for dataset/result payloads).
+pub fn write_blob(stream: &mut impl Write, data: &[u8]) -> Result<()> {
+    let len = u32::try_from(data.len()).context("frame too large")?;
+    if len > MAX_FRAME {
+        bail!("frame of {len} bytes exceeds MAX_FRAME");
+    }
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(data)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one JSON frame.
+pub fn read_frame(stream: &mut impl Read) -> Result<Json> {
+    let data = read_blob(stream)?;
+    let text = std::str::from_utf8(&data).context("frame is not utf-8")?;
+    Json::parse(text).map_err(|e| anyhow!("bad frame json: {e}"))
+}
+
+/// Read one raw frame.
+pub fn read_blob(stream: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        bail!("incoming frame of {len} bytes exceeds MAX_FRAME");
+    }
+    let mut data = vec![0u8; len as usize];
+    stream.read_exact(&mut data)?;
+    Ok(data)
+}
+
+// ---------------------------------------------------------------------------
+// RPC layer
+// ---------------------------------------------------------------------------
+
+/// Handler invoked per request: `(method, params, blob)` → `(result, blob)`.
+/// `blob` carries raw payload bytes when the request/response has any
+/// (methods set `"blob": true` in their envelope).
+pub type Handler =
+    Arc<dyn Fn(&str, &Json, Option<Vec<u8>>) -> Result<(Json, Option<Vec<u8>>)> + Send + Sync>;
+
+/// A TCP RPC server: one thread per connection, sequential requests per
+/// connection (the node-manager clients are themselves single-threaded
+/// pollers, matching the paper's one-node-manager-per-machine design).
+pub struct RpcServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn serve(addr: &str, handler: Handler) -> Result<RpcServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("rpc-accept-{local}"))
+            .spawn(move || {
+                while !stop2.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = handler.clone();
+                            let stop3 = stop2.clone();
+                            std::thread::spawn(move || {
+                                let _ = serve_conn(stream, h, stop3);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(RpcServer { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let req = match read_frame(&mut stream) {
+            Ok(r) => r,
+            Err(e) => {
+                // timeouts poll the stop flag; EOF/parse errors end the conn
+                if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                    if matches!(
+                        ioe.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) {
+                        continue;
+                    }
+                }
+                return Ok(());
+            }
+        };
+        let method = req.str_of("method").unwrap_or("").to_string();
+        let params = req.get("params").cloned().unwrap_or(Json::Null);
+        let has_blob = req.get("blob").and_then(|b| b.as_bool()).unwrap_or(false);
+        let blob = if has_blob {
+            // blob frames follow the envelope immediately; block until read
+            stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+            let b = read_blob(&mut stream)?;
+            stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+            Some(b)
+        } else {
+            None
+        };
+        match handler(&method, &params, blob) {
+            Ok((result, out_blob)) => {
+                let resp = Json::obj()
+                    .set("ok", true)
+                    .set("result", result)
+                    .set("blob", out_blob.is_some());
+                write_frame(&mut stream, &resp)?;
+                if let Some(b) = out_blob {
+                    write_blob(&mut stream, &b)?;
+                }
+            }
+            Err(e) => {
+                let resp = Json::obj().set("ok", false).set("error", format!("{e:#}"));
+                write_frame(&mut stream, &resp)?;
+            }
+        }
+    }
+}
+
+/// Client side: a persistent connection issuing sequential requests.
+pub struct RpcClient {
+    stream: Mutex<TcpStream>,
+}
+
+impl RpcClient {
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RpcClient> {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connect {addr:?}"))?;
+        stream.set_nodelay(true)?;
+        Ok(RpcClient { stream: Mutex::new(stream) })
+    }
+
+    /// Issue `method(params)`; returns the result value.
+    pub fn call(&self, method: &str, params: Json) -> Result<Json> {
+        Ok(self.call_blob(method, params, None)?.0)
+    }
+
+    /// Issue a call that may carry / return a raw payload.
+    pub fn call_blob(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+    ) -> Result<(Json, Option<Vec<u8>>)> {
+        let mut stream = self.stream.lock().expect("rpc client poisoned");
+        let req = Json::obj()
+            .set("method", method)
+            .set("params", params)
+            .set("blob", blob.is_some());
+        write_frame(&mut *stream, &req)?;
+        if let Some(b) = blob {
+            write_blob(&mut *stream, b)?;
+        }
+        let resp = read_frame(&mut *stream)?;
+        if !resp.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+            bail!(
+                "rpc {method} failed: {}",
+                resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown")
+            );
+        }
+        let out_blob = if resp.get("blob").and_then(|b| b.as_bool()).unwrap_or(false) {
+            Some(read_blob(&mut *stream)?)
+        } else {
+            None
+        };
+        Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> RpcServer {
+        let handler: Handler = Arc::new(|method, params, blob| match method {
+            "echo" => Ok((params.clone(), blob)),
+            "add" => {
+                let a = params.f64_of("a")?;
+                let b = params.f64_of("b")?;
+                Ok((Json::obj().set("sum", a + b), None))
+            }
+            "boom" => Err(anyhow!("intentional failure")),
+            other => Err(anyhow!("unknown method {other}")),
+        });
+        RpcServer::serve("127.0.0.1:0", handler).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_json_call() {
+        let server = echo_server();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        let out = client
+            .call("add", Json::obj().set("a", 2.0).set("b", 40.0))
+            .unwrap();
+        assert_eq!(out.f64_of("sum").unwrap(), 42.0);
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let server = echo_server();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        let payload = vec![7u8; 100_000];
+        let (out, blob) = client
+            .call_blob("echo", Json::obj().set("k", "v"), Some(&payload))
+            .unwrap();
+        assert_eq!(out.str_of("k").unwrap(), "v");
+        assert_eq!(blob.unwrap(), payload);
+    }
+
+    #[test]
+    fn error_propagates() {
+        let server = echo_server();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        let err = client.call("boom", Json::Null).unwrap_err();
+        assert!(format!("{err}").contains("intentional failure"));
+    }
+
+    #[test]
+    fn unknown_method_is_error_not_hang() {
+        let server = echo_server();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        assert!(client.call("nope", Json::Null).is_err());
+    }
+
+    #[test]
+    fn sequential_calls_on_one_connection() {
+        let server = echo_server();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        for i in 0..50 {
+            let out = client
+                .call("add", Json::obj().set("a", i as f64).set("b", 1.0))
+                .unwrap();
+            assert_eq!(out.f64_of("sum").unwrap(), i as f64 + 1.0);
+        }
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let server = echo_server();
+        let addr = server.addr();
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            handles.push(std::thread::spawn(move || {
+                let client = RpcClient::connect(addr).unwrap();
+                for i in 0..20 {
+                    let out = client
+                        .call("add", Json::obj().set("a", t as f64).set("b", i as f64))
+                        .unwrap();
+                    assert_eq!(out.f64_of("sum").unwrap(), (t + i) as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn frame_size_guard() {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_blob(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn server_shutdown_is_clean() {
+        let mut server = echo_server();
+        let addr = server.addr();
+        server.shutdown();
+        std::thread::sleep(Duration::from_millis(50));
+        // New connections should fail or be ignored after shutdown.
+        let r = RpcClient::connect(addr)
+            .and_then(|c| c.call("add", Json::obj().set("a", 1.0).set("b", 2.0)));
+        assert!(r.is_err() || r.is_ok()); // must not hang — reaching here is the test
+    }
+}

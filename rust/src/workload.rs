@@ -1,0 +1,343 @@
+//! Phased open-loop workload generation — the paper's benchmark client.
+//!
+//! §V-A: *"For each workload, we performed a set of invocations split into
+//! three phases (P0–P2): a 2-minute warm-up phase (P0), a 10-minute
+//! scaling phase (P1), and a 2-minute cooldown phase (P2). Each phase has
+//! a target invocation throughput"* (trps), following the workload
+//! vocabulary of Kuhlenkamp et al. [17].
+//!
+//! The generator is **open loop**: arrival times depend only on the target
+//! rate (deterministic spacing or Poisson), never on completions — the
+//! property that makes backlog growth visible when the system saturates.
+
+use crate::coordinator::Cluster;
+use crate::events::EventSpec;
+use crate::json::Json;
+use crate::util::{Clock, Rng, SimTime};
+use anyhow::Result;
+use std::time::Duration;
+
+/// One phase: hold `target_trps` for `duration` (sim time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Phase {
+    pub name: String,
+    pub duration: Duration,
+    pub target_trps: f64,
+}
+
+impl Phase {
+    pub fn new(name: &str, duration: Duration, target_trps: f64) -> Phase {
+        Phase { name: name.into(), duration, target_trps }
+    }
+}
+
+/// Arrival process within a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrivals {
+    /// Evenly spaced (1/rate) — what a load generator firing on a timer
+    /// produces; matches the paper's "target invocation throughput".
+    Uniform,
+    /// Poisson process (exponential inter-arrivals).
+    Poisson,
+}
+
+/// A full workload description.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub runtime: String,
+    pub phases: Vec<Phase>,
+    pub arrivals: Arrivals,
+    /// Dataset keys cycled round-robin across events.
+    pub datasets: Vec<String>,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// The paper's protocol shape (P0 warm-up, P1 scaling, P2 cool-down),
+    /// time-compressed by the cluster clock.  `p1_trps` is the scaling
+    /// phase's target rate; warm-up runs at `p0_trps`.
+    ///
+    /// Durations are the paper's 2/10/2 minutes scaled by `protocol_scale`
+    /// (e.g. 0.05 ⇒ 6 s / 30 s / 6 s of *sim* time — still long relative
+    /// to the ~1.6 s service times, preserving the queueing regimes).
+    pub fn paper_protocol(
+        runtime: &str,
+        p0_trps: f64,
+        p1_trps: f64,
+        protocol_scale: f64,
+    ) -> Workload {
+        let mins = |m: f64| Duration::from_secs_f64(60.0 * m * protocol_scale);
+        Workload {
+            runtime: runtime.into(),
+            phases: vec![
+                Phase::new("P0", mins(2.0), p0_trps),
+                Phase::new("P1", mins(10.0), p1_trps),
+                Phase::new("P2", mins(2.0), p0_trps),
+            ],
+            arrivals: Arrivals::Uniform,
+            datasets: Vec::new(),
+            seed: 42,
+        }
+    }
+
+    pub fn with_datasets(mut self, datasets: Vec<String>) -> Workload {
+        self.datasets = datasets;
+        self
+    }
+
+    pub fn with_arrivals(mut self, arrivals: Arrivals) -> Workload {
+        self.arrivals = arrivals;
+        self
+    }
+
+    /// Total sim-time duration.
+    pub fn duration(&self) -> Duration {
+        self.phases.iter().map(|p| p.duration).sum()
+    }
+
+    /// Expected number of events over the whole protocol.
+    pub fn expected_events(&self) -> f64 {
+        self.phases
+            .iter()
+            .map(|p| p.duration.as_secs_f64() * p.target_trps)
+            .sum()
+    }
+
+    /// Compute the full arrival schedule (sim-time offsets from start).
+    /// Deterministic for a given seed.
+    pub fn schedule(&self) -> Vec<(SimTime, String)> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::new();
+        let mut phase_start = 0f64; // seconds
+        for phase in &self.phases {
+            let dur = phase.duration.as_secs_f64();
+            if phase.target_trps <= 0.0 {
+                phase_start += dur;
+                continue;
+            }
+            let mut t = match self.arrivals {
+                Arrivals::Uniform => 1.0 / phase.target_trps,
+                Arrivals::Poisson => rng.exp(phase.target_trps),
+            };
+            while t <= dur {
+                out.push((
+                    SimTime((1e6 * (phase_start + t)) as u64),
+                    phase.name.clone(),
+                ));
+                t += match self.arrivals {
+                    Arrivals::Uniform => 1.0 / phase.target_trps,
+                    Arrivals::Poisson => rng.exp(phase.target_trps),
+                };
+            }
+            phase_start += dur;
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("runtime", self.runtime.as_str())
+            .set(
+                "phases",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            Json::obj()
+                                .set("name", p.name.as_str())
+                                .set("duration_s", p.duration.as_secs_f64())
+                                .set("target_trps", p.target_trps)
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "arrivals",
+                match self.arrivals {
+                    Arrivals::Uniform => "uniform",
+                    Arrivals::Poisson => "poisson",
+                },
+            )
+            .set("seed", self.seed)
+    }
+}
+
+/// Outcome of a workload run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub succeeded: usize,
+    /// Events still in flight when the drain timeout expired.
+    pub lost: usize,
+}
+
+/// Drive a workload against a cluster: submit on schedule (sim time), then
+/// drain.  Returns per-run counts; per-invocation data lands in the
+/// cluster's metrics hub.
+pub fn run_workload(cluster: &Cluster, workload: &Workload, drain_timeout: Duration) -> Result<RunReport> {
+    anyhow::ensure!(
+        !workload.datasets.is_empty(),
+        "workload has no datasets uploaded"
+    );
+    let schedule = workload.schedule();
+    let mut submitted = 0usize;
+    for (i, (at, _phase)) in schedule.iter().enumerate() {
+        // Open loop: sleep until the scheduled arrival, regardless of how
+        // far behind the system is.
+        let now = cluster.clock.now();
+        if *at > now {
+            cluster.clock.sleep(at.since(now));
+        }
+        let dataset = &workload.datasets[i % workload.datasets.len()];
+        cluster.submit(
+            EventSpec::new(&workload.runtime, dataset)
+                .with_config(Json::obj().set("seq", i)),
+        )?;
+        submitted += 1;
+    }
+    let lost = cluster.drain(drain_timeout);
+    let completed = cluster.coordinator.completed().len();
+    let succeeded = cluster.coordinator.successes();
+    Ok(RunReport { submitted, completed, succeeded, lost })
+}
+
+/// Upload `n` synthetic image datasets sized for the tinyyolo input
+/// (64×64×3 f32 in [0, 255]), returning their keys.
+pub fn synthetic_image_datasets(cluster: &Cluster, n: usize, seed: u64) -> Result<Vec<String>> {
+    let mut rng = Rng::new(seed);
+    let mut keys = Vec::with_capacity(n);
+    for i in 0..n {
+        let img: Vec<f32> = (0..64 * 64 * 3).map(|_| 255.0 * rng.f64() as f32).collect();
+        keys.push(cluster.upload_dataset(&format!("img-{i}"), &img)?);
+    }
+    Ok(keys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_protocol_shape() {
+        let w = Workload::paper_protocol("tinyyolo", 1.0, 4.0, 1.0);
+        assert_eq!(w.phases.len(), 3);
+        assert_eq!(w.duration(), Duration::from_secs(14 * 60));
+        assert_eq!(w.phases[1].target_trps, 4.0);
+        // 2min*1 + 10min*4 + 2min*1 = 120 + 2400 + 120
+        assert!((w.expected_events() - 2640.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_schedule_is_evenly_spaced() {
+        let w = Workload {
+            runtime: "r".into(),
+            phases: vec![Phase::new("P", Duration::from_secs(10), 2.0)],
+            arrivals: Arrivals::Uniform,
+            datasets: vec![],
+            seed: 1,
+        };
+        let s = w.schedule();
+        assert_eq!(s.len(), 20);
+        let gap = s[1].0.as_micros() - s[0].0.as_micros();
+        assert_eq!(gap, 500_000, "2 trps -> 500 ms spacing");
+        assert!(s.last().unwrap().0 <= SimTime(10_000_000));
+    }
+
+    #[test]
+    fn phase_boundaries_respected() {
+        let w = Workload {
+            runtime: "r".into(),
+            phases: vec![
+                Phase::new("A", Duration::from_secs(5), 1.0),
+                Phase::new("B", Duration::from_secs(5), 3.0),
+            ],
+            arrivals: Arrivals::Uniform,
+            datasets: vec![],
+            seed: 1,
+        };
+        let s = w.schedule();
+        let a: Vec<_> = s.iter().filter(|(_, p)| p == "A").collect();
+        let b: Vec<_> = s.iter().filter(|(_, p)| p == "B").collect();
+        assert_eq!(a.len(), 5);
+        assert_eq!(b.len(), 15);
+        assert!(a.iter().all(|(t, _)| t.as_secs_f64() <= 5.0));
+        assert!(b.iter().all(|(t, _)| t.as_secs_f64() > 5.0));
+    }
+
+    #[test]
+    fn poisson_schedule_rate_approximates_target() {
+        let w = Workload {
+            runtime: "r".into(),
+            phases: vec![Phase::new("P", Duration::from_secs(500), 4.0)],
+            arrivals: Arrivals::Poisson,
+            datasets: vec![],
+            seed: 7,
+        };
+        let n = w.schedule().len() as f64;
+        assert!((n - 2000.0).abs() < 150.0, "poisson count {n}");
+    }
+
+    #[test]
+    fn schedule_deterministic_per_seed() {
+        let mk = |seed| Workload {
+            runtime: "r".into(),
+            phases: vec![Phase::new("P", Duration::from_secs(30), 2.0)],
+            arrivals: Arrivals::Poisson,
+            datasets: vec![],
+            seed,
+        };
+        assert_eq!(mk(5).schedule(), mk(5).schedule());
+        assert_ne!(mk(5).schedule(), mk(6).schedule());
+    }
+
+    #[test]
+    fn zero_rate_phase_emits_nothing() {
+        let w = Workload {
+            runtime: "r".into(),
+            phases: vec![
+                Phase::new("idle", Duration::from_secs(10), 0.0),
+                Phase::new("go", Duration::from_secs(2), 1.0),
+            ],
+            arrivals: Arrivals::Uniform,
+            datasets: vec![],
+            seed: 1,
+        };
+        let s = w.schedule();
+        assert_eq!(s.len(), 2);
+        assert!(s[0].0.as_secs_f64() > 10.0, "first event after the idle phase");
+    }
+
+    #[test]
+    fn end_to_end_small_run() {
+        use crate::accel::paper_dualgpu;
+        use crate::coordinator::cluster::ExecutorKind;
+        let cluster = Cluster::builder()
+            .time_scale(300.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .node("node-1", paper_dualgpu())
+            .build()
+            .unwrap();
+        let datasets = synthetic_image_datasets(&cluster, 2, 9).unwrap();
+        let w = Workload {
+            runtime: "tinyyolo".into(),
+            phases: vec![Phase::new("P", Duration::from_secs(20), 1.0)],
+            arrivals: Arrivals::Uniform,
+            datasets,
+            seed: 3,
+        }; // 20 events over 20 sim-s ≈ 70 wall-ms at 300x
+        let report = run_workload(&cluster, &w, Duration::from_secs(60)).unwrap();
+        assert_eq!(report.submitted, 20);
+        assert_eq!(report.lost, 0);
+        assert_eq!(report.succeeded, 20);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn workload_json_export() {
+        let w = Workload::paper_protocol("tinyyolo", 1.0, 4.0, 0.1);
+        let j = w.to_json();
+        assert_eq!(j.str_of("runtime").unwrap(), "tinyyolo");
+        assert_eq!(j.arr_of("phases").unwrap().len(), 3);
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration: the distributed deployment shape — queue service, store
+//! service, and node managers on separate sockets (paper Fig. 2).
+
+use hardless::events::{EventSpec, Invocation, Status};
+use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps};
+use hardless::queue::{InvocationQueue, MemQueue, QueueClient, QueueServer, TakeFilter};
+use hardless::runtime::instance::MockExecutor;
+use hardless::runtime::RuntimeInstance;
+use hardless::scheduler::WarmFirst;
+use hardless::store::{MemStore, ObjectStore, StoreClient, StoreServer};
+use hardless::util::clock::ScaledClock;
+use hardless::util::{Clock, next_id};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+struct Services {
+    queue_srv: QueueServer,
+    store_srv: StoreServer,
+    clock: Arc<ScaledClock>,
+}
+
+fn services() -> Services {
+    let clock = ScaledClock::new(120.0);
+    let queue_srv = QueueServer::serve("127.0.0.1:0", MemQueue::new(clock.clone())).unwrap();
+    let store_srv = StoreServer::serve("127.0.0.1:0", Arc::new(MemStore::new())).unwrap();
+    Services { queue_srv, store_srv, clock }
+}
+
+fn remote_node(
+    s: &Services,
+    id: &str,
+    registry: hardless::accel::DeviceRegistry,
+) -> (hardless::node::NodeHandle, mpsc::Receiver<Invocation>) {
+    let reserve = InstanceReserve::new();
+    for d in registry.devices() {
+        for variant in d.profile.runtimes.values() {
+            for _ in 0..d.profile.slots {
+                reserve.add(
+                    RuntimeInstance::start(
+                        variant.clone(),
+                        d.id.clone(),
+                        MockExecutor::factory(3.0, Duration::from_millis(1)),
+                    )
+                    .unwrap(),
+                );
+            }
+        }
+    }
+    let (tx, rx) = mpsc::channel();
+    let deps = NodeDeps {
+        queue: Arc::new(QueueClient::connect(s.queue_srv.addr()).unwrap()),
+        store: Arc::new(StoreClient::connect(s.store_srv.addr()).unwrap()),
+        clock: s.clock.clone(),
+        policy: Arc::new(WarmFirst),
+        reserve,
+        completions: tx,
+    };
+    (spawn_node(NodeConfig::new(id), registry, deps).unwrap(), rx)
+}
+
+#[test]
+fn full_remote_path_roundtrip() {
+    let s = services();
+    let client_store = StoreClient::connect(s.store_srv.addr()).unwrap();
+    let client_queue = QueueClient::connect(s.queue_srv.addr()).unwrap();
+
+    let payload: Vec<u8> = [1.0f32, 2.0, 4.0].iter().flat_map(|f| f.to_le_bytes()).collect();
+    client_store.put("datasets/remote", &payload).unwrap();
+
+    let (node, rx) = remote_node(&s, "rnode-1", hardless::accel::paper_dualgpu());
+    let inv = Invocation::new(
+        next_id("inv"),
+        EventSpec::new("tinyyolo", "datasets/remote"),
+        s.clock.now(),
+    );
+    let id = inv.id.clone();
+    client_queue.publish(inv).unwrap();
+
+    let done = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(done.id, id);
+    assert_eq!(done.status, Status::Succeeded);
+    // result visible through a *different* store connection (mock output = x3)
+    let result = client_store.get(done.result_key.as_ref().unwrap()).unwrap();
+    let floats: Vec<f32> = result
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    assert_eq!(floats, vec![3.0, 6.0, 12.0]);
+    assert_eq!(client_queue.stats().unwrap().acked, 1);
+    node.stop();
+}
+
+#[test]
+fn two_remote_nodes_share_one_queue() {
+    let s = services();
+    let client_store = StoreClient::connect(s.store_srv.addr()).unwrap();
+    let client_queue = QueueClient::connect(s.queue_srv.addr()).unwrap();
+    client_store.put("datasets/d", &[0u8; 16]).unwrap();
+
+    let (node_a, rx_a) = remote_node(&s, "rnode-a", hardless::accel::paper_dualgpu());
+    let (node_b, rx_b) = remote_node(&s, "rnode-b", hardless::accel::paper_all_accel());
+
+    let n = 18;
+    for _ in 0..n {
+        client_queue
+            .publish(Invocation::new(
+                next_id("inv"),
+                EventSpec::new("tinyyolo", "datasets/d"),
+                s.clock.now(),
+            ))
+            .unwrap();
+    }
+    let mut by_node = std::collections::BTreeMap::<String, usize>::new();
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut done = 0;
+    while done < n && std::time::Instant::now() < deadline {
+        for rx in [&rx_a, &rx_b] {
+            if let Ok(inv) = rx.recv_timeout(Duration::from_millis(50)) {
+                assert_eq!(inv.status, Status::Succeeded);
+                *by_node.entry(inv.node.unwrap()).or_default() += 1;
+                done += 1;
+            }
+        }
+    }
+    assert_eq!(done, n, "all events completed");
+    assert_eq!(by_node.values().sum::<usize>(), n);
+    assert!(by_node.len() == 2, "both nodes served work: {by_node:?}");
+    node_a.stop();
+    node_b.stop();
+}
+
+#[test]
+fn node_crash_redelivers_via_visibility_timeout() {
+    // A "crashed node" = a client that takes a lease and disappears.
+    let clock = ScaledClock::new(300.0);
+    let backend = MemQueue::with_config(
+        clock.clone(),
+        hardless::queue::QueueConfig {
+            visibility: Duration::from_secs(5),
+            max_attempts: 3,
+        },
+    );
+    let srv = QueueServer::serve("127.0.0.1:0", backend).unwrap();
+    let q = QueueClient::connect(srv.addr()).unwrap();
+    q.publish(Invocation::new(
+        "inv-crash",
+        EventSpec::new("tinyyolo", "datasets/x"),
+        clock.now(),
+    ))
+    .unwrap();
+
+    // crash: lease taken, never acked
+    let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+    assert_eq!(lease.attempt, 1);
+    drop(lease);
+
+    // 5 sim-seconds later (≈17 wall-ms at 300x) the lease expires
+    clock.sleep(Duration::from_secs(6));
+    assert_eq!(q.reap_expired().unwrap(), 1);
+
+    let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+    assert_eq!(lease.attempt, 2, "redelivered to the next taker");
+    q.ack(&lease.invocation.id).unwrap();
+    assert_eq!(q.stats().unwrap().acked, 1);
+}

@@ -1,0 +1,211 @@
+//! Integration: failure injection across the coordination plane.
+//!
+//! Serverless platforms earn their keep when things break: executors
+//! crash mid-invocation, datasets go missing, nodes die holding leases,
+//! events reference runtimes nobody implements.  Each test pins down the
+//! system-level behaviour (fail the event, keep the node alive, never
+//! lose capacity).
+
+use hardless::accel::{paper_dualgpu, AcceleratorProfile, Device, DeviceRegistry};
+use hardless::coordinator::cluster::{Cluster, ExecutorKind};
+use hardless::events::{EventSpec, Status};
+use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps};
+use hardless::queue::{InvocationQueue, MemQueue};
+use hardless::runtime::instance::{Executor, MockExecutor};
+use hardless::runtime::RuntimeInstance;
+use hardless::scheduler::WarmFirst;
+use hardless::store::{MemStore, ObjectStore};
+use hardless::util::clock::ScaledClock;
+use hardless::util::Clock;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+#[test]
+fn missing_dataset_fails_cleanly_and_node_keeps_serving() {
+    let cluster = Cluster::builder()
+        .time_scale(200.0)
+        .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+        .node("node-1", paper_dualgpu())
+        .build()
+        .unwrap();
+    // event 1: dataset that does not exist
+    let bad = cluster
+        .submit(EventSpec::new("tinyyolo", "datasets/ghost"))
+        .unwrap();
+    let inv = cluster
+        .coordinator
+        .wait_for(&bad, Duration::from_secs(20))
+        .unwrap();
+    assert!(matches!(inv.status, Status::Failed(_)), "{:?}", inv.status);
+
+    // event 2: healthy — the node must still serve
+    let key = cluster.upload_dataset("ok", &[1.0]).unwrap();
+    let good = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+    let inv = cluster
+        .coordinator
+        .wait_for(&good, Duration::from_secs(20))
+        .unwrap();
+    assert_eq!(inv.status, Status::Succeeded);
+    cluster.shutdown();
+}
+
+#[test]
+fn crashing_executor_fails_event_but_frees_slot() {
+    // Executor succeeds twice then errors forever.
+    let clock = ScaledClock::new(200.0);
+    let queue = MemQueue::new(clock.clone());
+    let store = Arc::new(MemStore::new());
+    store
+        .put("datasets/d", &1.0f32.to_le_bytes())
+        .unwrap();
+    let registry = paper_dualgpu();
+    let reserve = InstanceReserve::new();
+    for d in registry.devices() {
+        for variant in d.profile.runtimes.values() {
+            for _ in 0..d.profile.slots {
+                let v = variant.clone();
+                let did = d.id.clone();
+                let factory: hardless::runtime::ExecutorFactory = Box::new(move || {
+                    Ok(Box::new(MockExecutor::new(1.0).failing_after(2)) as Box<dyn Executor>)
+                });
+                reserve.add(RuntimeInstance::start(v, did, factory).unwrap());
+            }
+        }
+    }
+    let (tx, rx) = mpsc::channel();
+    let node = spawn_node(
+        NodeConfig::new("node-1"),
+        registry,
+        NodeDeps {
+            queue: queue.clone(),
+            store,
+            clock: clock.clone(),
+            policy: Arc::new(WarmFirst),
+            reserve,
+            completions: tx,
+        },
+    )
+    .unwrap();
+
+    // 12 events across 4 slots with fail-after-2 executors: a mix of
+    // successes and failures, but every event must terminate and be acked.
+    for i in 0..12 {
+        queue
+            .publish(hardless::events::Invocation::new(
+                format!("inv-{i}"),
+                EventSpec::new("tinyyolo", "datasets/d"),
+                clock.now(),
+            ))
+            .unwrap();
+    }
+    let mut succeeded = 0;
+    let mut failed = 0;
+    for _ in 0..12 {
+        let inv = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        match inv.status {
+            Status::Succeeded => succeeded += 1,
+            Status::Failed(_) => failed += 1,
+            ref s => panic!("non-terminal completion {s:?}"),
+        }
+    }
+    assert!(succeeded >= 4, "first two execs per instance succeed: {succeeded}");
+    assert!(failed >= 1, "failure injection must surface: {failed}");
+    let stats = queue.stats().unwrap();
+    assert_eq!(stats.acked, 12, "every event acked exactly once");
+    assert_eq!(stats.in_flight, 0, "no leaked leases");
+    node.stop();
+}
+
+#[test]
+fn reserve_exhaustion_is_reported_not_hung() {
+    // A device claims 2 slots but the reserve only holds 1 instance:
+    // the second concurrent cold start must fail the event with a clear
+    // error instead of deadlocking.
+    let clock = ScaledClock::new(200.0);
+    let queue = MemQueue::new(clock.clone());
+    let store = Arc::new(MemStore::new());
+    store.put("datasets/d", &1.0f32.to_le_bytes()).unwrap();
+    let registry = DeviceRegistry::new(vec![Device::new(
+        "gpu0",
+        AcceleratorProfile::quadro_k600(), // 2 slots
+    )]);
+    let reserve = InstanceReserve::new();
+    reserve.add(
+        RuntimeInstance::start(
+            "tinyyolo-gpu",
+            "gpu0",
+            MockExecutor::factory(1.0, Duration::from_millis(30)),
+        )
+        .unwrap(),
+    );
+    let (tx, rx) = mpsc::channel();
+    let node = spawn_node(
+        NodeConfig::new("node-1"),
+        registry,
+        NodeDeps {
+            queue: queue.clone(),
+            store,
+            clock: clock.clone(),
+            policy: Arc::new(WarmFirst),
+            reserve,
+            completions: tx,
+        },
+    )
+    .unwrap();
+    for i in 0..2 {
+        queue
+            .publish(hardless::events::Invocation::new(
+                format!("inv-{i}"),
+                EventSpec::new("tinyyolo", "datasets/d"),
+                clock.now(),
+            ))
+            .unwrap();
+    }
+    let mut outcomes = Vec::new();
+    for _ in 0..2 {
+        outcomes.push(rx.recv_timeout(Duration::from_secs(30)).unwrap());
+    }
+    let ok = outcomes.iter().filter(|i| i.status == Status::Succeeded).count();
+    let err = outcomes
+        .iter()
+        .filter(|i| matches!(&i.status, Status::Failed(r) if r.contains("reserve exhausted")))
+        .count();
+    assert!(ok >= 1, "the provisioned instance serves");
+    assert!(ok + err == 2, "{outcomes:?}");
+    node.stop();
+}
+
+#[test]
+fn property_random_fault_schedules_conserve_events() {
+    // Randomized smoke: random mix of good/bad datasets and runtimes —
+    // submitted == terminal completions, queue fully drained, always.
+    use hardless::prop;
+    prop::check("fault-conservation", 5, |rng| {
+        (0..rng.range(3, 16))
+            .map(|_| (rng.chance(0.7), rng.chance(0.8)))
+            .collect::<Vec<(bool, bool)>>()
+    }, |plan| {
+        let cluster = Cluster::builder()
+            .time_scale(300.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .node("node-1", paper_dualgpu())
+            .build()
+            .unwrap();
+        let key = cluster.upload_dataset("ok", &[1.0]).unwrap();
+        for (dataset_ok, runtime_ok) in plan {
+            let dataset = if *dataset_ok { key.clone() } else { "datasets/ghost".into() };
+            let runtime = if *runtime_ok { "tinyyolo" } else { "tinyyolo" };
+            cluster.submit(EventSpec::new(runtime, &dataset)).unwrap();
+        }
+        let lost = cluster.drain(Duration::from_secs(60));
+        let done = cluster.coordinator.completed().len();
+        let stats = cluster.queue.stats().unwrap();
+        let ok = lost == 0
+            && done == plan.len()
+            && stats.queued == 0
+            && stats.in_flight == 0
+            && stats.acked == plan.len();
+        cluster.shutdown();
+        ok
+    });
+}
