@@ -10,6 +10,7 @@
 mod common;
 
 use hardless::accel::{AcceleratorKind, AcceleratorProfile, Device, DeviceRegistry, ServiceTimeModel};
+use hardless::api::HardlessClient;
 use hardless::coordinator::cluster::{Cluster, ExecutorKind};
 use hardless::metrics::summarize;
 use hardless::scheduler::parse_policy;

@@ -11,6 +11,7 @@
 mod common;
 
 use hardless::accel::{AcceleratorKind, AcceleratorProfile, Device, DeviceRegistry, ServiceTimeModel};
+use hardless::api::HardlessClient;
 use hardless::coordinator::cluster::{Cluster, ExecutorKind};
 use hardless::events::EventSpec;
 use hardless::metrics::summarize;
@@ -50,8 +51,7 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..n {
         let id = cluster.submit(EventSpec::new("tinyyolo", &dataset))?;
         cluster
-            .coordinator
-            .wait_for(&id, Duration::from_secs(10))
+            .wait(&id, Duration::from_secs(10))?
             .expect("completion");
     }
     let records = cluster.metrics.records();

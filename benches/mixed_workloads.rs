@@ -10,6 +10,7 @@
 mod common;
 
 use hardless::accel::paper_all_multi;
+use hardless::api::HardlessClient;
 use hardless::coordinator::cluster::{Cluster, ExecutorKind};
 use hardless::events::EventSpec;
 use hardless::runtime::{artifacts_available, artifacts_dir, RuntimeBundle};

@@ -1,40 +1,57 @@
-//! Distributed deployment: queue + store + node over TCP in one demo.
+//! Distributed deployment: gateway + queue + store + node over TCP.
 //!
 //! The paper's architecture (Fig. 2) separates the invocation queue
 //! (Bedrock), object storage (Minio), node managers, and the benchmark
-//! client into independent services.  This example starts each component
-//! on its own socket — the same wiring `hardless serve` / `hardless node`
-//! use across machines — and pushes events through the full remote path.
+//! client into independent services.  This example adds the piece the
+//! paper leaves implicit — the client-facing gateway — and pushes events
+//! through the full remote path with the same [`HardlessClient`] calls
+//! the in-process examples use:
+//!
+//! ```text
+//! client ──RemoteClient──▶ gateway ──publish──▶ queue ◀──long-poll── node
+//! client ◀──wait/result── gateway ◀──report(RPC)─────────────────── node
+//! ```
 //!
 //! ```bash
 //! cargo run --release --example distributed
 //! ```
 
-use hardless::events::{EventSpec, Invocation};
-use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps};
-use hardless::queue::{InvocationQueue, MemQueue, QueueClient, QueueServer};
+use hardless::api::{GatewayConfig, GatewayServer, HardlessClient, RemoteClient, RemoteReporter};
+use hardless::node::{spawn_node, CompletionSink, InstanceReserve, NodeConfig, NodeDeps};
+use hardless::queue::{MemQueue, QueueClient, QueueServer};
 use hardless::runtime::instance::MockExecutor;
 use hardless::runtime::RuntimeInstance;
 use hardless::scheduler::WarmFirst;
 use hardless::store::{MemStore, ObjectStore, StoreClient, StoreServer};
 use hardless::util::clock::ScaledClock;
-use hardless::util::{next_id, Clock, Rng};
-use std::sync::{mpsc, Arc};
+use hardless::util::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
-    // --- "infrastructure machine": queue + store services -----------------
+    // --- "infrastructure machine": gateway + queue + store services -------
     let clock = ScaledClock::new(60.0);
     let queue_backend = MemQueue::new(clock.clone());
     let store_backend = Arc::new(MemStore::new());
-    let queue_srv = QueueServer::serve("127.0.0.1:0", queue_backend)?;
-    let store_srv = StoreServer::serve("127.0.0.1:0", store_backend)?;
+    let queue_srv = QueueServer::serve("127.0.0.1:0", queue_backend.clone())?;
+    let store_srv = StoreServer::serve("127.0.0.1:0", store_backend.clone())?;
+    let gateway = GatewayServer::serve(
+        "127.0.0.1:0",
+        queue_backend,
+        store_backend,
+        clock.clone(),
+        GatewayConfig {
+            announce_runtimes: vec!["tinyyolo".into()],
+            ..GatewayConfig::default()
+        },
+    )?;
+    println!("gateway service on {}", gateway.addr());
     println!("queue service on {}", queue_srv.addr());
     println!("store service on {}", store_srv.addr());
 
-    // --- "client machine": uploads data, publishes events -----------------
+    // --- "client machine": the gateway client + a store connection --------
+    let client = RemoteClient::connect(gateway.addr())?;
     let client_store = StoreClient::connect(store_srv.addr())?;
-    let client_queue = QueueClient::connect(queue_srv.addr())?;
     let mut rng = Rng::new(3);
     let img: Vec<f32> = (0..64 * 64 * 3).map(|_| 255.0 * rng.f64() as f32).collect();
     let img_bytes: Vec<u8> = img.iter().flat_map(|f| f.to_le_bytes()).collect();
@@ -57,7 +74,9 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-    let (tx, rx) = mpsc::channel();
+    // Completions travel back to the gateway over RPC — that is where
+    // REnd is stamped and where `wait`/`status` observe them.
+    let reporter: Arc<dyn CompletionSink> = Arc::new(RemoteReporter::connect(gateway.addr())?);
     let node = spawn_node(
         NodeConfig::new("remote-node-1"),
         registry,
@@ -67,39 +86,47 @@ fn main() -> anyhow::Result<()> {
             clock: clock.clone(),
             policy: Arc::new(WarmFirst),
             reserve,
-            completions: tx,
+            completions: reporter,
         },
     )?;
     println!("worker node joined (5 slots over TCP)\n");
 
     // --- drive 10 events through the remote path --------------------------
     let n = 10;
-    for _ in 0..n {
-        let inv = Invocation::new(
-            next_id("inv"),
-            EventSpec::new("tinyyolo", "datasets/remote-img"),
-            clock.now(),
-        );
-        client_queue.publish(inv)?;
-    }
-    let mut done = 0;
-    while done < n {
-        let inv = rx.recv_timeout(Duration::from_secs(60))?;
-        done += 1;
+    let specs = (0..n)
+        .map(|_| hardless::events::EventSpec::new("tinyyolo", "datasets/remote-img"))
+        .collect();
+    let ids = client.submit_batch(specs)?;
+    println!("submitted {} events in one round trip", ids.len());
+
+    let mut warm = 0;
+    for id in &ids {
+        let inv = client
+            .wait(id, Duration::from_secs(60))?
+            .expect("event completes");
+        if inv.warm {
+            warm += 1;
+        }
         println!(
-            "  [{done:2}/{n}] {} on {} ({}) ELat {:.0} ms",
+            "  {} -> {:<9} on {} ({}) RLat {:>6.0} ms",
             inv.id,
+            inv.status.as_str(),
             inv.accelerator.as_deref().unwrap_or("-"),
             if inv.warm { "warm" } else { "cold" },
-            inv.stamps.elat_ms().unwrap_or(f64::NAN),
+            inv.stamps.rlat_ms().unwrap_or(f64::NAN),
         );
-        // result object is visible to the client through its own connection
-        let key = inv.result_key.expect("result persisted");
-        assert!(client_store.exists(&key)?, "client sees {key}");
     }
-    let stats = client_queue.stats()?;
-    println!("\nqueue stats: acked={} dead={} queued={}", stats.acked, stats.dead, stats.queued);
-    assert_eq!(stats.acked, n);
+    let first_result = client.fetch_result(&ids[0])?.expect("result persisted");
+    println!("\nfirst result: {} bytes in the object store", first_result.len());
+
+    let stats = client.cluster_stats()?;
+    println!(
+        "cluster: submitted {} | completed {} | succeeded {} | warm {warm}/{n}",
+        stats.submitted, stats.completed, stats.succeeded
+    );
+    assert_eq!(stats.succeeded, n);
+    println!("runtimes advertised: {:?}", client.list_runtimes()?);
+
     node.stop();
     println!("distributed demo OK");
     Ok(())

@@ -16,9 +16,9 @@
 //! ```
 
 use hardless::accel::{paper_dualgpu, AcceleratorProfile, Device, DeviceRegistry};
+use hardless::api::HardlessClient;
 use hardless::coordinator::cluster::{Cluster, ExecutorKind};
 use hardless::events::EventSpec;
-use hardless::queue::InvocationQueue;
 use hardless::util::Rng;
 use std::time::Duration;
 
@@ -34,14 +34,14 @@ fn submit_burst(cluster: &Cluster, datasets: &[String], n: usize) -> anyhow::Res
 }
 
 fn status(cluster: &Cluster, label: &str) {
-    let q = cluster.queue.stats().unwrap();
+    let s = cluster.cluster_stats().unwrap();
     println!(
         "[{label}] nodes={} free_slots={} queued={} in_flight={} done={}",
         cluster.node_count(),
         cluster.free_slots(),
-        q.queued,
-        q.in_flight,
-        cluster.coordinator.completed().len(),
+        s.queue.queued,
+        s.queue.in_flight,
+        s.completed,
     );
 }
 
@@ -84,7 +84,10 @@ fn main() -> anyhow::Result<()> {
     submit_burst(&cluster, &datasets, 6)?;
     std::thread::sleep(Duration::from_millis(300));
     status(&cluster, "P4");
-    assert!(cluster.queue.stats().unwrap().queued >= 6, "work must wait, not vanish");
+    assert!(
+        cluster.cluster_stats()?.queue.queued >= 6,
+        "work must wait, not vanish"
+    );
 
     println!("\nphase 5: a node returns and drains the backlog");
     cluster.add_node("node-c", paper_dualgpu())?;

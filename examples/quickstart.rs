@@ -9,10 +9,10 @@
 //! + 1 VPU as virtual devices), publishes the tinyYOLO runtime bundle,
 //! submits one event, and prints the decoded detections.
 
+use hardless::api::HardlessClient;
 use hardless::coordinator::cluster::{Cluster, ExecutorKind};
 use hardless::events::EventSpec;
 use hardless::runtime::{artifacts_available, artifacts_dir, RuntimeBundle};
-use hardless::store::ObjectStore;
 use hardless::util::Rng;
 use std::time::Duration;
 
@@ -39,13 +39,14 @@ fn main() -> anyhow::Result<()> {
     let dataset = cluster.upload_dataset("quickstart-image", &image)?;
     println!("uploaded dataset {dataset}");
 
-    // Submit asynchronously — HARDLESS decides where it runs (§IV-B).
+    // Submit asynchronously through the unified client API — HARDLESS
+    // decides where it runs (§IV-B).  The same trait calls work against a
+    // remote gateway via `api::RemoteClient`.
     let id = cluster.submit(EventSpec::new("tinyyolo", &dataset))?;
     println!("submitted event {id}");
 
     let inv = cluster
-        .coordinator
-        .wait_for(&id, Duration::from_secs(120))
+        .wait(&id, Duration::from_secs(120))?
         .expect("invocation should complete");
 
     println!("status:      {:?}", inv.status);
@@ -58,9 +59,12 @@ fn main() -> anyhow::Result<()> {
              inv.stamps.elat_ms().unwrap_or(f64::NAN),
              inv.stamps.dlat_ms().unwrap_or(f64::NAN));
 
-    if let Some(key) = &inv.result_key {
-        let body = cluster.store.get(key)?;
-        println!("result object {key}: {}", String::from_utf8_lossy(&body));
+    if let Some(body) = cluster.fetch_result(&id)? {
+        println!(
+            "result object {}: {}",
+            inv.result_key.as_deref().unwrap_or("-"),
+            String::from_utf8_lossy(&body)
+        );
     }
     cluster.shutdown();
     Ok(())

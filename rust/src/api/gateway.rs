@@ -1,0 +1,491 @@
+//! The gateway: the coordinator hosted as a TCP service, plus the remote
+//! client that speaks to it.
+//!
+//! Deployment shape (paper Fig. 2, distributed): `hardless serve` runs
+//! the shared queue, the object store, and this gateway; node managers
+//! take work from the queue and report completions to the gateway over
+//! RPC; benchmark clients submit and wait through [`RemoteClient`].  The
+//! gateway stamps `REnd` when a completion report arrives — the paper's
+//! "result received by the benchmark client" moment — and feeds its
+//! [`MetricsHub`], so distributed runs produce the same §V-A series as
+//! in-process ones.
+
+use super::{ClusterStats, HardlessClient, SubmissionStatus};
+use crate::coordinator::Coordinator;
+use crate::events::{EventSpec, Invocation};
+use crate::json::Json;
+use crate::metrics::MetricsHub;
+use crate::node::CompletionSink;
+use crate::queue::InvocationQueue;
+use crate::store::ObjectStore;
+use crate::util::Clock;
+use crate::wire::{poll_chunked, Handler, RpcClient, RpcServer, LONG_POLL_CHUNK};
+use anyhow::{anyhow, Result};
+use std::net::ToSocketAddrs;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Server-side cap on one blocking `wait` chunk.  Clients loop over
+/// chunks until their own deadline ([`poll_chunked`]), so this only
+/// bounds how long a single RPC may hold its connection thread.
+pub const WAIT_CHUNK: Duration = LONG_POLL_CHUNK;
+
+/// Gateway tunables.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Runtimes advertised by `list_runtimes` in addition to bundles
+    /// published in the object store (mock/demo deployments have no
+    /// published bundle to discover).
+    pub announce_runtimes: Vec<String>,
+    /// Housekeeping period (sim time): lease reaping + `#queued` gauge
+    /// sampling (paper §V-A).
+    pub housekeeping_interval: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            announce_runtimes: Vec::new(),
+            housekeeping_interval: Duration::from_secs(1),
+        }
+    }
+}
+
+/// The coordinator as a network service.
+pub struct GatewayServer {
+    rpc: RpcServer,
+    coordinator: Arc<Coordinator>,
+    metrics: Arc<MetricsHub>,
+    stop: Arc<AtomicBool>,
+    housekeeper: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GatewayServer {
+    /// Bind the gateway on `addr` (port 0 for ephemeral) over a queue and
+    /// store that the node fleet shares.
+    pub fn serve(
+        addr: &str,
+        queue: Arc<dyn InvocationQueue>,
+        store: Arc<dyn ObjectStore>,
+        clock: Arc<dyn Clock>,
+        config: GatewayConfig,
+    ) -> Result<GatewayServer> {
+        let metrics = Arc::new(MetricsHub::new());
+        let coordinator = Coordinator::new(queue.clone(), clock.clone(), metrics.clone());
+        let completions = coordinator.completion_sender();
+        let mut announce = config.announce_runtimes.clone();
+        announce.sort();
+        announce.dedup();
+
+        let handler: Handler = {
+            let coordinator = coordinator.clone();
+            let store = store.clone();
+            Arc::new(move |method, params, _blob| match method {
+                "submit" => {
+                    let spec = EventSpec::from_json(params.req("spec")?)?;
+                    let id = coordinator.submit(spec)?;
+                    Ok((Json::obj().set("id", id), None))
+                }
+                "submit_batch" => {
+                    let mut ids = Vec::new();
+                    for spec in params.arr_of("specs")? {
+                        let id = coordinator.submit(EventSpec::from_json(spec)?)?;
+                        ids.push(Json::Str(id));
+                    }
+                    Ok((Json::obj().set("ids", Json::Arr(ids)), None))
+                }
+                "status" => {
+                    let (inflight, done) = coordinator.lookup(params.str_of("id")?);
+                    let status = match done {
+                        Some(inv) => SubmissionStatus::Done(inv),
+                        None if inflight => SubmissionStatus::InFlight,
+                        None => SubmissionStatus::Unknown,
+                    };
+                    Ok((status.to_json(), None))
+                }
+                "wait" => {
+                    let id = params.str_of("id")?;
+                    let ms = params
+                        .u64_of("timeout_ms")
+                        .unwrap_or(0)
+                        .min(WAIT_CHUNK.as_millis() as u64);
+                    match coordinator.wait_for(id, Duration::from_millis(ms)) {
+                        Some(inv) => Ok((inv.to_json(), None)),
+                        None => Ok((Json::Null, None)),
+                    }
+                }
+                "fetch_result" => {
+                    let id = params.str_of("id")?;
+                    match coordinator.lookup(id).1.and_then(|i| i.result_key) {
+                        Some(key) => {
+                            let data = store.get(&key)?;
+                            Ok((Json::obj().set("len", data.len()), Some(data)))
+                        }
+                        None => Ok((Json::Null, None)),
+                    }
+                }
+                "stats" => Ok((ClusterStats::gather(&coordinator)?.to_json(), None)),
+                "runtimes" => {
+                    let mut names = announce.clone();
+                    for key in store.list("runtimes/").unwrap_or_default() {
+                        if let Some(rest) = key.strip_prefix("runtimes/") {
+                            match rest.split('/').next() {
+                                Some(name) if !name.is_empty() => {
+                                    names.push(name.to_string())
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                    names.sort();
+                    names.dedup();
+                    let arr = names.into_iter().map(Json::Str).collect();
+                    Ok((Json::obj().set("runtimes", Json::Arr(arr)), None))
+                }
+                "report" => {
+                    // Node → gateway completion path.  The collector
+                    // thread behind this sender stamps REnd and records
+                    // the metrics — identical to the in-process channel.
+                    let inv = Invocation::from_json(params.req("invocation")?)?;
+                    completions
+                        .send(inv)
+                        .map_err(|_| anyhow!("gateway coordinator is shut down"))?;
+                    Ok((Json::obj(), None))
+                }
+                other => Err(anyhow!("unknown gateway method {other}")),
+            })
+        };
+        let rpc = RpcServer::serve(addr, handler)?;
+
+        // Housekeeping (the coordinator-side duties the single-process
+        // Cluster runs): re-queue expired leases, sample queue gauges.
+        // Free-slot counts live on remote nodes, so the gauge records 0.
+        let stop = Arc::new(AtomicBool::new(false));
+        let housekeeper = {
+            let stop = stop.clone();
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let clock = clock.clone();
+            let interval = config.housekeeping_interval;
+            std::thread::Builder::new()
+                .name("gateway-housekeeping".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        let _ = queue.reap_expired();
+                        if let Ok(stats) = queue.stats() {
+                            metrics.sample_gauge(clock.now(), stats, 0);
+                        }
+                        clock.sleep(interval);
+                    }
+                })?
+        };
+
+        Ok(GatewayServer {
+            rpc,
+            coordinator,
+            metrics,
+            stop,
+            housekeeper: Some(housekeeper),
+        })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.rpc.addr()
+    }
+
+    /// The hosted coordinator (in-process inspection: serve loop, tests).
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coordinator
+    }
+
+    /// The gateway-side metrics hub (`REnd`-stamped records + gauges).
+    pub fn metrics(&self) -> &Arc<MetricsHub> {
+        &self.metrics
+    }
+
+    pub fn shutdown(&mut self) {
+        self.rpc.shutdown();
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.housekeeper.take() {
+            let _ = h.join();
+        }
+        self.coordinator.shutdown();
+    }
+}
+
+impl Drop for GatewayServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// TCP implementation of [`HardlessClient`] speaking to a [`GatewayServer`].
+pub struct RemoteClient {
+    rpc: RpcClient,
+}
+
+impl RemoteClient {
+    pub fn connect(
+        addr: impl std::net::ToSocketAddrs + std::fmt::Debug,
+    ) -> Result<RemoteClient> {
+        Ok(RemoteClient { rpc: RpcClient::connect(addr)? })
+    }
+}
+
+impl HardlessClient for RemoteClient {
+    fn submit(&self, spec: EventSpec) -> Result<String> {
+        let out = self
+            .rpc
+            .call("submit", Json::obj().set("spec", spec.to_json()))?;
+        Ok(out.str_of("id")?.to_string())
+    }
+
+    fn submit_batch(&self, specs: Vec<EventSpec>) -> Result<Vec<String>> {
+        let arr = specs.iter().map(|s| s.to_json()).collect();
+        let out = self
+            .rpc
+            .call("submit_batch", Json::obj().set("specs", Json::Arr(arr)))?;
+        Ok(out
+            .arr_of("ids")?
+            .iter()
+            .filter_map(|j| j.as_str().map(String::from))
+            .collect())
+    }
+
+    fn status(&self, id: &str) -> Result<SubmissionStatus> {
+        SubmissionStatus::from_json(&self.rpc.call("status", Json::obj().set("id", id))?)
+    }
+
+    fn wait(&self, id: &str, timeout: Duration) -> Result<Option<Invocation>> {
+        // Chunked server-side blocking: each RPC parks at the gateway for
+        // at most WAIT_CHUNK, far below the client read timeout, so a
+        // long wait never looks like a dead server.
+        poll_chunked(timeout, |chunk_ms| {
+            let out = self.rpc.call(
+                "wait",
+                Json::obj().set("id", id).set("timeout_ms", chunk_ms),
+            )?;
+            if out.is_null() {
+                Ok(None)
+            } else {
+                Ok(Some(Invocation::from_json(&out)?))
+            }
+        })
+    }
+
+    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>> {
+        let (out, blob) =
+            self.rpc
+                .call_blob("fetch_result", Json::obj().set("id", id), None)?;
+        if out.is_null() {
+            return Ok(None);
+        }
+        Ok(Some(blob.ok_or_else(|| {
+            anyhow!("gateway fetch_result returned no payload")
+        })?))
+    }
+
+    fn cluster_stats(&self) -> Result<ClusterStats> {
+        ClusterStats::from_json(&self.rpc.call("stats", Json::obj())?)
+    }
+
+    fn list_runtimes(&self) -> Result<Vec<String>> {
+        let out = self.rpc.call("runtimes", Json::obj())?;
+        Ok(out
+            .arr_of("runtimes")?
+            .iter()
+            .filter_map(|j| j.as_str().map(String::from))
+            .collect())
+    }
+}
+
+/// Node-side completion reporting over RPC — the distributed counterpart
+/// of the coordinator's in-process mpsc channel.
+///
+/// Reconnects on failure: a node outlives gateway restarts and network
+/// blips, so a dead connection is dropped and re-dialed on the next
+/// report instead of failing fast forever (an `RpcClient` poisons itself
+/// after a mid-call failure by design).
+pub struct RemoteReporter {
+    addr: std::net::SocketAddr,
+    rpc: Mutex<Option<RpcClient>>,
+}
+
+impl RemoteReporter {
+    pub fn connect(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+    ) -> Result<RemoteReporter> {
+        let resolved = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow!("no address for {addr:?}"))?;
+        let client = RpcClient::connect(resolved)?;
+        Ok(RemoteReporter { addr: resolved, rpc: Mutex::new(Some(client)) })
+    }
+
+    fn try_report(&self, inv: &Invocation) -> Result<()> {
+        let mut guard = self.rpc.lock().expect("reporter poisoned");
+        if guard.is_none() {
+            *guard = Some(RpcClient::connect(self.addr)?);
+        }
+        let client = guard.as_ref().expect("just ensured");
+        match client.call("report", Json::obj().set("invocation", inv.to_json())) {
+            Ok(_) => Ok(()),
+            Err(e) => {
+                // Drop the (possibly poisoned) connection; the next
+                // attempt re-dials.
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+}
+
+impl CompletionSink for RemoteReporter {
+    fn report(&self, inv: Invocation) -> Result<()> {
+        // One immediate retry on a fresh connection covers the common
+        // gateway-restart case; persistent failure surfaces to the node
+        // (which logs and keeps serving), and the next report re-dials
+        // again rather than staying broken.
+        self.try_report(&inv).or_else(|_| self.try_report(&inv))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Status;
+    use crate::queue::{MemQueue, TakeFilter};
+    use crate::store::MemStore;
+    use crate::util::clock::ScaledClock;
+    use std::time::Instant;
+
+    struct Rig {
+        gateway: GatewayServer,
+        client: RemoteClient,
+        queue: Arc<MemQueue>,
+        store: Arc<MemStore>,
+    }
+
+    fn rig() -> Rig {
+        let clock = ScaledClock::new(100.0);
+        let queue = MemQueue::new(clock.clone());
+        let store = Arc::new(MemStore::new());
+        let gateway = GatewayServer::serve(
+            "127.0.0.1:0",
+            queue.clone(),
+            store.clone(),
+            clock,
+            GatewayConfig {
+                announce_runtimes: vec!["tinyyolo".into()],
+                ..GatewayConfig::default()
+            },
+        )
+        .unwrap();
+        let client = RemoteClient::connect(gateway.addr()).unwrap();
+        Rig { gateway, client, queue, store }
+    }
+
+    /// Play the node role by hand: take the lease, persist a result,
+    /// ack, and report completion to the gateway over RPC.
+    fn complete_as_node(r: &Rig, payload: &[u8]) -> String {
+        let lease = r.queue.take(&TakeFilter::default()).unwrap().unwrap();
+        let mut inv = lease.invocation;
+        let key = crate::store::keys::result(&inv.id);
+        crate::store::ObjectStore::put(r.store.as_ref(), &key, payload).unwrap();
+        inv.result_key = Some(key);
+        inv.status = Status::Succeeded;
+        r.queue.ack(&inv.id).unwrap();
+        let reporter = RemoteReporter::connect(r.gateway.addr()).unwrap();
+        let id = inv.id.clone();
+        reporter.report(inv).unwrap();
+        id
+    }
+
+    #[test]
+    fn submit_status_wait_fetch_over_tcp() {
+        let r = rig();
+        let id = r
+            .client
+            .submit(EventSpec::new("tinyyolo", "datasets/x"))
+            .unwrap();
+        assert_eq!(r.client.status(&id).unwrap(), SubmissionStatus::InFlight);
+        assert_eq!(r.client.cluster_stats().unwrap().queue.queued, 1);
+
+        let completed = complete_as_node(&r, b"detections");
+        assert_eq!(completed, id);
+
+        let inv = r
+            .client
+            .wait(&id, Duration::from_secs(10))
+            .unwrap()
+            .expect("reported completion reaches the waiter");
+        assert_eq!(inv.status, Status::Succeeded);
+        assert!(inv.stamps.r_start.is_some(), "RStart stamped at submit");
+        assert!(inv.stamps.r_end.is_some(), "REnd stamped at the gateway");
+        assert!(inv.stamps.r_end >= inv.stamps.r_start);
+
+        assert_eq!(r.client.fetch_result(&id).unwrap().unwrap(), b"detections");
+
+        let stats = r.client.cluster_stats().unwrap();
+        assert_eq!((stats.submitted, stats.completed, stats.succeeded), (1, 1, 1));
+        assert_eq!(stats.inflight, 0);
+        // the gateway's metrics hub recorded the REnd-stamped completion
+        assert_eq!(r.gateway.metrics().len(), 1);
+        assert!(r.gateway.metrics().records()[0].r_end.is_some());
+    }
+
+    #[test]
+    fn batch_submit_over_one_round_trip() {
+        let r = rig();
+        let ids = r
+            .client
+            .submit_batch(
+                (0..4)
+                    .map(|i| EventSpec::new("tinyyolo", format!("datasets/d{i}")))
+                    .collect(),
+            )
+            .unwrap();
+        assert_eq!(ids.len(), 4);
+        let unique: std::collections::BTreeSet<_> = ids.iter().collect();
+        assert_eq!(unique.len(), 4);
+        assert_eq!(r.client.cluster_stats().unwrap().queue.queued, 4);
+    }
+
+    #[test]
+    fn wait_returns_none_on_timeout_without_hanging() {
+        let r = rig();
+        let id = r
+            .client
+            .submit(EventSpec::new("tinyyolo", "datasets/x"))
+            .unwrap();
+        let t0 = Instant::now();
+        let got = r.client.wait(&id, Duration::from_millis(300)).unwrap();
+        assert!(got.is_none());
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn unknown_ids_are_unknown_and_resultless() {
+        let r = rig();
+        assert_eq!(
+            r.client.status("inv-ghost").unwrap(),
+            SubmissionStatus::Unknown
+        );
+        assert!(r.client.fetch_result("inv-ghost").unwrap().is_none());
+    }
+
+    #[test]
+    fn runtimes_union_announced_and_published() {
+        let r = rig();
+        crate::store::ObjectStore::put(
+            r.store.as_ref(),
+            "runtimes/tinycls/manifest.json",
+            b"{}",
+        )
+        .unwrap();
+        let names = r.client.list_runtimes().unwrap();
+        assert_eq!(names, vec!["tinycls".to_string(), "tinyyolo".to_string()]);
+    }
+}

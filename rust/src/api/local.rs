@@ -1,0 +1,183 @@
+//! Local (in-process) implementation of [`HardlessClient`].
+//!
+//! [`Cluster`] *is* a client: submissions go through its coordinator,
+//! results come from its object store — the same calls
+//! [`super::RemoteClient`] makes over TCP, without the wire.
+
+use super::{ClusterStats, HardlessClient, SubmissionStatus};
+use crate::coordinator::Cluster;
+use crate::events::{EventSpec, Invocation};
+use crate::store::ObjectStore;
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+impl HardlessClient for Cluster {
+    fn submit(&self, spec: EventSpec) -> Result<String> {
+        self.coordinator.submit(spec)
+    }
+
+    fn status(&self, id: &str) -> Result<SubmissionStatus> {
+        // `lookup` reads inflight + done under one lock hold, so the
+        // three states are mutually exclusive snapshots.
+        let (inflight, done) = self.coordinator.lookup(id);
+        Ok(match done {
+            Some(inv) => SubmissionStatus::Done(inv),
+            None if inflight => SubmissionStatus::InFlight,
+            None => SubmissionStatus::Unknown,
+        })
+    }
+
+    fn wait(&self, id: &str, timeout: Duration) -> Result<Option<Invocation>> {
+        Ok(self.coordinator.wait_for(id, timeout))
+    }
+
+    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>> {
+        match self.coordinator.lookup(id).1.and_then(|i| i.result_key) {
+            Some(key) => Ok(Some(self.store.get(&key)?)),
+            None => Ok(None),
+        }
+    }
+
+    fn cluster_stats(&self) -> Result<ClusterStats> {
+        ClusterStats::gather(&self.coordinator)
+    }
+
+    fn list_runtimes(&self) -> Result<Vec<String>> {
+        Ok(self.supported_runtimes())
+    }
+}
+
+/// An owning handle implementing [`HardlessClient`] over a shared
+/// [`Cluster`] — for call sites that need a `'static` trait object (e.g.
+/// handing one client to several submitter threads).
+#[derive(Clone)]
+pub struct LocalClient {
+    cluster: Arc<Cluster>,
+}
+
+impl LocalClient {
+    pub fn new(cluster: Arc<Cluster>) -> LocalClient {
+        LocalClient { cluster }
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+}
+
+impl HardlessClient for LocalClient {
+    fn submit(&self, spec: EventSpec) -> Result<String> {
+        HardlessClient::submit(&*self.cluster, spec)
+    }
+
+    fn submit_batch(&self, specs: Vec<EventSpec>) -> Result<Vec<String>> {
+        HardlessClient::submit_batch(&*self.cluster, specs)
+    }
+
+    fn status(&self, id: &str) -> Result<SubmissionStatus> {
+        HardlessClient::status(&*self.cluster, id)
+    }
+
+    fn wait(&self, id: &str, timeout: Duration) -> Result<Option<Invocation>> {
+        HardlessClient::wait(&*self.cluster, id, timeout)
+    }
+
+    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>> {
+        HardlessClient::fetch_result(&*self.cluster, id)
+    }
+
+    fn cluster_stats(&self) -> Result<ClusterStats> {
+        HardlessClient::cluster_stats(&*self.cluster)
+    }
+
+    fn list_runtimes(&self) -> Result<Vec<String>> {
+        HardlessClient::list_runtimes(&*self.cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::paper_all_accel;
+    use crate::coordinator::cluster::ExecutorKind;
+    use crate::events::Status;
+
+    fn mock_cluster() -> Arc<Cluster> {
+        Arc::new(
+            Cluster::builder()
+                .time_scale(200.0)
+                .executors(ExecutorKind::Mock {
+                    scale: 2.0,
+                    delay: Duration::from_millis(1),
+                })
+                .node("node-1", paper_all_accel())
+                .build()
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn local_client_full_lifecycle() {
+        let cluster = mock_cluster();
+        let client = LocalClient::new(cluster.clone());
+        assert_eq!(client.status("inv-nope").unwrap(), SubmissionStatus::Unknown);
+        assert_eq!(client.list_runtimes().unwrap(), vec!["tinyyolo".to_string()]);
+
+        let key = cluster.upload_dataset("img", &[1.0, 2.0, 3.0]).unwrap();
+        let id = client.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+        let inv = client
+            .wait(&id, Duration::from_secs(15))
+            .unwrap()
+            .expect("completes");
+        assert_eq!(inv.status, Status::Succeeded);
+        assert!(matches!(
+            client.status(&id).unwrap(),
+            SubmissionStatus::Done(_)
+        ));
+
+        // mock executor: output = input * 2
+        let body = client.fetch_result(&id).unwrap().expect("result persisted");
+        let floats: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(floats, vec![2.0, 4.0, 6.0]);
+
+        let stats = client.cluster_stats().unwrap();
+        assert_eq!(stats.submitted, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.succeeded, 1);
+        assert_eq!(stats.inflight, 0);
+        assert_eq!(stats.queue.acked, 1);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn batch_submission_via_trait_object() {
+        let cluster = mock_cluster();
+        let client: Arc<dyn HardlessClient> = Arc::new(LocalClient::new(cluster.clone()));
+        let key = cluster.upload_dataset("img", &[1.0; 4]).unwrap();
+        let ids = client
+            .submit_batch((0..5).map(|_| EventSpec::new("tinyyolo", &key)).collect())
+            .unwrap();
+        assert_eq!(ids.len(), 5);
+        for id in &ids {
+            let inv = client
+                .wait(id, Duration::from_secs(20))
+                .unwrap()
+                .expect("completes");
+            assert_eq!(inv.status, Status::Succeeded);
+        }
+        assert_eq!(client.cluster_stats().unwrap().succeeded, 5);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn fetch_result_none_while_pending_or_unknown() {
+        let cluster = mock_cluster();
+        let client = LocalClient::new(cluster.clone());
+        assert!(client.fetch_result("inv-unknown").unwrap().is_none());
+        cluster.shutdown();
+    }
+}

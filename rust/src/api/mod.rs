@@ -1,0 +1,195 @@
+//! The HARDLESS client API — one surface for every deployment topology.
+//!
+//! The paper's serverless promise (§IV-B) is that users *"submit events
+//! and receive results"* with no knowledge of which node or accelerator
+//! executes them.  [`HardlessClient`] is that contract: submit, observe,
+//! wait, fetch — identically against
+//!
+//! * an in-process [`crate::coordinator::Cluster`] (the trait is
+//!   implemented directly on `Cluster`, with [`LocalClient`] as an
+//!   `Arc`-owning wrapper for trait-object use), or
+//! * a remote [`GatewayServer`] over TCP via [`RemoteClient`] — the
+//!   deployment shape of `hardless serve` / `hardless submit`.
+//!
+//! The gateway hosts the coordinator server-side: it publishes to the
+//! shared queue, receives node completion reports over RPC
+//! ([`RemoteReporter`] implements [`crate::node::CompletionSink`]),
+//! stamps `REnd` at receipt, and feeds the metrics hub — so the paper's
+//! measurement vocabulary survives distribution intact.
+
+pub mod gateway;
+pub mod local;
+
+pub use gateway::{GatewayConfig, GatewayServer, RemoteClient, RemoteReporter};
+pub use local::LocalClient;
+
+use crate::events::{EventSpec, Invocation};
+use crate::json::Json;
+use crate::queue::QueueStats;
+use anyhow::Result;
+use std::time::Duration;
+
+/// Client-visible lifecycle of one submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmissionStatus {
+    /// The gateway/coordinator has never seen this id.
+    Unknown,
+    /// Submitted and not yet terminal (queued or running on a node).
+    InFlight,
+    /// Terminal; carries the full invocation (stamps, placement, result key).
+    Done(Invocation),
+}
+
+impl SubmissionStatus {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, SubmissionStatus::Done(_))
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            SubmissionStatus::Unknown => Json::obj().set("state", "unknown"),
+            SubmissionStatus::InFlight => Json::obj().set("state", "inflight"),
+            SubmissionStatus::Done(inv) => Json::obj()
+                .set("state", "done")
+                .set("invocation", inv.to_json()),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<SubmissionStatus> {
+        match j.str_of("state")? {
+            "unknown" => Ok(SubmissionStatus::Unknown),
+            "inflight" => Ok(SubmissionStatus::InFlight),
+            "done" => Ok(SubmissionStatus::Done(Invocation::from_json(
+                j.req("invocation")?,
+            )?)),
+            other => anyhow::bail!("unknown submission state '{other}'"),
+        }
+    }
+}
+
+/// One aggregate snapshot: coordinator bookkeeping + queue gauges — the
+/// client-side view of the paper's §V-A counters (`RSuccess`, `#queued`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClusterStats {
+    pub submitted: usize,
+    pub inflight: usize,
+    pub completed: usize,
+    pub succeeded: usize,
+    pub failed: usize,
+    pub queue: QueueStats,
+}
+
+impl ClusterStats {
+    /// Assemble from a coordinator — the single source both transports
+    /// (local trait impl, gateway `stats` handler) share.
+    pub fn gather(coordinator: &crate::coordinator::Coordinator) -> Result<ClusterStats> {
+        let counts = coordinator.counts();
+        Ok(ClusterStats {
+            submitted: counts.submitted,
+            inflight: counts.inflight,
+            completed: counts.completed,
+            succeeded: counts.succeeded,
+            failed: counts.failed,
+            queue: coordinator.queue_stats()?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("submitted", self.submitted)
+            .set("inflight", self.inflight)
+            .set("completed", self.completed)
+            .set("succeeded", self.succeeded)
+            .set("failed", self.failed)
+            .set("queued", self.queue.queued)
+            .set("queue_in_flight", self.queue.in_flight)
+            .set("acked", self.queue.acked)
+            .set("dead", self.queue.dead)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterStats> {
+        Ok(ClusterStats {
+            submitted: j.usize_of("submitted")?,
+            inflight: j.usize_of("inflight")?,
+            completed: j.usize_of("completed")?,
+            succeeded: j.usize_of("succeeded")?,
+            failed: j.usize_of("failed")?,
+            queue: QueueStats {
+                queued: j.usize_of("queued")?,
+                in_flight: j.usize_of("queue_in_flight")?,
+                acked: j.usize_of("acked")?,
+                dead: j.usize_of("dead")?,
+            },
+        })
+    }
+}
+
+/// The unified client surface (Berkeley View's minimal invoke/result API):
+/// every example, bench, and CLI path submits through this trait, never
+/// through the coordinator or queue directly.
+pub trait HardlessClient: Send + Sync {
+    /// Submit one event; returns the invocation id immediately (the
+    /// paper's async-only execution model).
+    fn submit(&self, spec: EventSpec) -> Result<String>;
+
+    /// Submit many events; one round trip on remote transports.
+    fn submit_batch(&self, specs: Vec<EventSpec>) -> Result<Vec<String>> {
+        specs.into_iter().map(|s| self.submit(s)).collect()
+    }
+
+    /// Non-blocking lifecycle probe.
+    fn status(&self, id: &str) -> Result<SubmissionStatus>;
+
+    /// Block until `id` is terminal or `timeout` (wall clock) elapses.
+    fn wait(&self, id: &str, timeout: Duration) -> Result<Option<Invocation>>;
+
+    /// Fetch the persisted result payload of a completed invocation.
+    /// `None` until the invocation is terminal with a result object.
+    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>>;
+
+    /// Aggregate counters (submissions, completions, queue gauges).
+    fn cluster_stats(&self) -> Result<ClusterStats>;
+
+    /// Logical runtimes the deployment advertises.
+    fn list_runtimes(&self) -> Result<Vec<String>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SimTime;
+
+    #[test]
+    fn submission_status_json_roundtrip() {
+        let mut inv = Invocation::new("inv-9", EventSpec::new("r", "d"), SimTime(5));
+        inv.status = crate::events::Status::Succeeded;
+        for st in [
+            SubmissionStatus::Unknown,
+            SubmissionStatus::InFlight,
+            SubmissionStatus::Done(inv),
+        ] {
+            assert_eq!(SubmissionStatus::from_json(&st.to_json()).unwrap(), st);
+        }
+    }
+
+    #[test]
+    fn cluster_stats_json_roundtrip() {
+        let stats = ClusterStats {
+            submitted: 10,
+            inflight: 2,
+            completed: 8,
+            succeeded: 7,
+            failed: 1,
+            queue: QueueStats { queued: 1, in_flight: 1, acked: 8, dead: 0 },
+        };
+        assert_eq!(ClusterStats::from_json(&stats.to_json()).unwrap(), stats);
+    }
+
+    #[test]
+    fn terminal_classification() {
+        assert!(!SubmissionStatus::Unknown.is_terminal());
+        assert!(!SubmissionStatus::InFlight.is_terminal());
+        let inv = Invocation::new("i", EventSpec::new("r", "d"), SimTime(0));
+        assert!(SubmissionStatus::Done(inv).is_terminal());
+    }
+}

@@ -12,7 +12,6 @@
 
 use super::Coordinator;
 use crate::accel::DeviceRegistry;
-use crate::events::EventSpec;
 use crate::metrics::MetricsHub;
 use crate::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps, NodeHandle};
 use crate::queue::{InvocationQueue, MemQueue, QueueConfig};
@@ -202,7 +201,7 @@ impl Cluster {
             clock: self.clock.clone() as Arc<dyn Clock>,
             policy: self.policy.clone(),
             reserve,
-            completions: self.coordinator.completion_sender(),
+            completions: self.coordinator.completion_sink(),
         };
         let handle = spawn_node(cfg, registry, deps)?;
         self.nodes.lock().expect("poisoned").push(handle);
@@ -278,12 +277,26 @@ impl Cluster {
         *self.housekeeper.lock().expect("poisoned") = Some(handle);
     }
 
-    // ------------------------------------------------------------- client
-
-    /// Submit one event (async, returns invocation id).
-    pub fn submit(&self, spec: EventSpec) -> Result<String> {
-        self.coordinator.submit(spec)
+    /// Logical runtimes currently serveable (union over live nodes).
+    pub fn supported_runtimes(&self) -> Vec<String> {
+        let mut all: Vec<String> = self
+            .nodes
+            .lock()
+            .expect("poisoned")
+            .iter()
+            .flat_map(|n| n.supported_runtimes())
+            .collect();
+        all.sort();
+        all.dedup();
+        all
     }
+
+    // ------------------------------------------------------------- client
+    //
+    // Event submission and result retrieval live on the
+    // [`crate::api::HardlessClient`] trait (implemented for `Cluster` in
+    // `api::local`) so local and distributed deployments share one client
+    // surface.  Only deployment-shaped helpers remain inherent.
 
     /// Upload a dataset object; returns its key.
     pub fn upload_dataset(&self, name: &str, values: &[f32]) -> Result<String> {
@@ -324,7 +337,8 @@ impl Drop for Cluster {
 mod tests {
     use super::*;
     use crate::accel::{paper_all_accel, paper_dualgpu};
-    use crate::events::Status;
+    use crate::api::HardlessClient;
+    use crate::events::{EventSpec, Status};
 
     fn mock_cluster() -> Cluster {
         Cluster::builder()
@@ -342,9 +356,9 @@ mod tests {
         let key = cluster.upload_dataset("img", &[1.0, 2.0]).unwrap();
         let id = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
         let inv = cluster
-            .coordinator
-            .wait_for(&id, Duration::from_secs(15))
-            .unwrap();
+            .wait(&id, Duration::from_secs(15))
+            .unwrap()
+            .expect("completes");
         assert_eq!(inv.status, Status::Succeeded);
         assert!(inv.stamps.rlat_ms().unwrap() > 0.0);
         assert_eq!(cluster.metrics.len(), 1);
@@ -386,9 +400,9 @@ mod tests {
         let key = cluster.upload_dataset("img", &[1.0]).unwrap();
         let id = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
         let inv = cluster
-            .coordinator
-            .wait_for(&id, Duration::from_secs(15))
-            .unwrap();
+            .wait(&id, Duration::from_secs(15))
+            .unwrap()
+            .expect("completes");
         assert_eq!(inv.status, Status::Succeeded);
         assert_eq!(inv.node.as_deref(), Some("node-2"));
         cluster.shutdown();

@@ -16,21 +16,46 @@ pub use cluster::{Cluster, ClusterBuilder};
 
 use crate::events::{EventSpec, Invocation, Status};
 use crate::metrics::MetricsHub;
-use crate::queue::InvocationQueue;
+use crate::node::CompletionSink;
+use crate::queue::{InvocationQueue, QueueStats};
 use crate::util::{next_id, Clock};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Snapshot of the coordinator's submission bookkeeping (one lock hold).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrackingCounts {
+    pub submitted: usize,
+    pub inflight: usize,
+    pub completed: usize,
+    pub succeeded: usize,
+    pub failed: usize,
+}
+
+/// How many terminal invocations the coordinator retains for
+/// `status`/`wait`/`fetch_result`.  A gateway is a forever-running
+/// process, so the retained window is bounded; the counters stay exact
+/// regardless, and evicted ids simply read as `Unknown`.  Generous vs
+/// the paper's ~4 events/s (≈ 7 hours of lookback).
+const COMPLETED_RETENTION: usize = 100_000;
 
 #[derive(Default)]
 struct Tracking {
     /// Submitted and not yet completed.
     inflight: HashMap<String, EventSpec>,
-    /// Terminal invocations in completion order.
-    completed: Vec<Invocation>,
+    /// Terminal invocations by id — O(1) `status`/`wait_for` probes
+    /// (bounded by [`COMPLETED_RETENTION`]).
+    done: HashMap<String, Invocation>,
+    /// Completion order of the retained window (drives eviction and
+    /// ordered snapshots).
+    done_order: VecDeque<String>,
     submitted: usize,
+    /// Monotonic counters, unaffected by retention eviction.
+    completed_total: usize,
+    succeeded_total: usize,
 }
 
 /// The event gateway + completion sink.
@@ -76,6 +101,11 @@ impl Coordinator {
         self.completions_tx.clone()
     }
 
+    /// The same sink behind the node-facing [`CompletionSink`] abstraction.
+    pub fn completion_sink(&self) -> Arc<dyn CompletionSink> {
+        Arc::new(self.completions_tx.clone())
+    }
+
     fn collect_loop(self: Arc<Coordinator>, rx: mpsc::Receiver<Invocation>) {
         loop {
             match rx.recv_timeout(Duration::from_millis(100)) {
@@ -85,9 +115,27 @@ impl Coordinator {
                     // by the benchmark client").
                     inv.stamps.r_end = Some(self.clock.now());
                     self.metrics.record_completion(&inv);
+                    let id = inv.id.clone();
+                    let succeeded = inv.status == Status::Succeeded;
                     let mut t = self.tracking.lock().expect("poisoned");
-                    t.inflight.remove(&inv.id);
-                    t.completed.push(inv);
+                    t.inflight.remove(&id);
+                    // Duplicate reports (e.g. a node retrying a report
+                    // RPC) are idempotent: the first terminal state wins.
+                    if let std::collections::hash_map::Entry::Vacant(slot) =
+                        t.done.entry(id.clone())
+                    {
+                        slot.insert(inv);
+                        t.done_order.push_back(id);
+                        t.completed_total += 1;
+                        if succeeded {
+                            t.succeeded_total += 1;
+                        }
+                    }
+                    while t.done_order.len() > COMPLETED_RETENTION {
+                        if let Some(old) = t.done_order.pop_front() {
+                            t.done.remove(&old);
+                        }
+                    }
                     drop(t);
                     self.done_cv.notify_all();
                 }
@@ -103,7 +151,10 @@ impl Coordinator {
 
     /// Submit an event; returns the invocation id immediately (the paper's
     /// async-only execution model, §IV-B).
-    pub fn submit(&self, spec: EventSpec) -> Result<String> {
+    ///
+    /// Crate-private: user code goes through [`crate::api::HardlessClient`]
+    /// (the one client surface for local and distributed deployments).
+    pub(crate) fn submit(&self, spec: EventSpec) -> Result<String> {
         let id = next_id("inv");
         let inv = Invocation::new(&id, spec.clone(), self.clock.now());
         {
@@ -119,12 +170,43 @@ impl Coordinator {
         self.tracking.lock().expect("poisoned").submitted
     }
 
+    /// Retained terminal invocations in completion order (the full
+    /// history up to [`COMPLETED_RETENTION`]).
     pub fn completed(&self) -> Vec<Invocation> {
-        self.tracking.lock().expect("poisoned").completed.clone()
+        let t = self.tracking.lock().expect("poisoned");
+        t.done_order
+            .iter()
+            .filter_map(|id| t.done.get(id).cloned())
+            .collect()
     }
 
     pub fn inflight_len(&self) -> usize {
         self.tracking.lock().expect("poisoned").inflight.len()
+    }
+
+    /// One-lock lookup for the client `status` call: whether `id` is still
+    /// in flight, and its terminal invocation if it has completed.
+    pub fn lookup(&self, id: &str) -> (bool, Option<Invocation>) {
+        let t = self.tracking.lock().expect("poisoned");
+        (t.inflight.contains_key(id), t.done.get(id).cloned())
+    }
+
+    /// Submission counters under a single lock hold (the gateway `stats`
+    /// call) — O(1), exact regardless of retention eviction.
+    pub fn counts(&self) -> TrackingCounts {
+        let t = self.tracking.lock().expect("poisoned");
+        TrackingCounts {
+            submitted: t.submitted,
+            inflight: t.inflight.len(),
+            completed: t.completed_total,
+            succeeded: t.succeeded_total,
+            failed: t.completed_total - t.succeeded_total,
+        }
+    }
+
+    /// Gauge snapshot of the queue this coordinator publishes into.
+    pub fn queue_stats(&self) -> Result<QueueStats> {
+        self.queue.stats()
     }
 
     /// Block until every submitted invocation is terminal, or `timeout`
@@ -151,7 +233,7 @@ impl Coordinator {
         let deadline = Instant::now() + timeout;
         let mut t = self.tracking.lock().expect("poisoned");
         loop {
-            if let Some(inv) = t.completed.iter().find(|i| i.id == id) {
+            if let Some(inv) = t.done.get(id) {
                 return Some(inv.clone());
             }
             let left = deadline.saturating_duration_since(Instant::now());
@@ -168,13 +250,7 @@ impl Coordinator {
 
     /// `RSuccess` so far (paper §V-A).
     pub fn successes(&self) -> usize {
-        self.tracking
-            .lock()
-            .expect("poisoned")
-            .completed
-            .iter()
-            .filter(|i| i.status == Status::Succeeded)
-            .count()
+        self.tracking.lock().expect("poisoned").succeeded_total
     }
 
     pub fn shutdown(&self) {
@@ -264,6 +340,105 @@ mod tests {
     fn wait_for_unknown_times_out() {
         let (_clock, _queue, c) = setup();
         assert!(c.wait_for("inv-999", Duration::from_millis(100)).is_none());
+        c.shutdown();
+    }
+
+    #[test]
+    fn lookup_reflects_lifecycle() {
+        let (_clock, queue, c) = setup();
+        assert_eq!(c.lookup("inv-404"), (false, None));
+        let id = c.submit(EventSpec::new("r", "d")).unwrap();
+        assert_eq!(c.lookup(&id), (true, None));
+        let lease = queue.take(&crate::queue::TakeFilter::default()).unwrap().unwrap();
+        let mut inv = lease.invocation;
+        inv.status = Status::Succeeded;
+        queue.ack(&inv.id).unwrap();
+        c.completion_sender().send(inv).unwrap();
+        c.wait_for(&id, Duration::from_secs(5)).unwrap();
+        let (inflight, done) = c.lookup(&id);
+        assert!(!inflight);
+        assert_eq!(done.unwrap().status, Status::Succeeded);
+        c.shutdown();
+    }
+
+    /// Spawn a thread that drains the queue and reports success for
+    /// `total` invocations (a stand-in node).
+    fn completer(
+        queue: Arc<MemQueue>,
+        tx: mpsc::Sender<Invocation>,
+        total: usize,
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut done = 0;
+            while done < total {
+                match queue.take(&crate::queue::TakeFilter::default()).unwrap() {
+                    Some(lease) => {
+                        let mut inv = lease.invocation;
+                        inv.status = Status::Succeeded;
+                        queue.ack(&inv.id).unwrap();
+                        tx.send(inv).unwrap();
+                        done += 1;
+                    }
+                    None => std::thread::sleep(Duration::from_millis(1)),
+                }
+            }
+        })
+    }
+
+    #[test]
+    fn drain_under_parallel_submitters() {
+        let (_clock, queue, c) = setup();
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 25;
+        let finisher = completer(queue, c.completion_sender(), THREADS * PER_THREAD);
+        let submitters: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let c2 = c.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        c2.submit(EventSpec::new("r", format!("d-{t}-{i}"))).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for s in submitters {
+            s.join().unwrap();
+        }
+        assert_eq!(c.drain(Duration::from_secs(30)), 0, "all terminal");
+        finisher.join().unwrap();
+        let counts = c.counts();
+        assert_eq!(counts.submitted, THREADS * PER_THREAD);
+        assert_eq!(counts.completed, THREADS * PER_THREAD);
+        assert_eq!(counts.succeeded, THREADS * PER_THREAD);
+        assert_eq!((counts.inflight, counts.failed), (0, 0));
+        c.shutdown();
+    }
+
+    #[test]
+    fn wait_for_under_parallel_waiters() {
+        let (_clock, queue, c) = setup();
+        const N: usize = 16;
+        let ids: Vec<String> = (0..N)
+            .map(|_| c.submit(EventSpec::new("r", "d")).unwrap())
+            .collect();
+        let finisher = completer(queue, c.completion_sender(), N);
+        let waiters: Vec<_> = ids
+            .iter()
+            .map(|id| {
+                let c2 = c.clone();
+                let id = id.clone();
+                std::thread::spawn(move || {
+                    c2.wait_for(&id, Duration::from_secs(30)).expect("completes")
+                })
+            })
+            .collect();
+        for w in waiters {
+            let inv = w.join().unwrap();
+            assert_eq!(inv.status, Status::Succeeded);
+            assert!(inv.stamps.r_end.is_some(), "REnd stamped by the collector");
+        }
+        finisher.join().unwrap();
+        assert_eq!(c.counts().completed, N);
         c.shutdown();
     }
 }

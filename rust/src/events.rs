@@ -149,7 +149,7 @@ fn diff_ms(a: SimTime, b: SimTime) -> f64 {
 }
 
 /// A submitted event moving through the system.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Invocation {
     pub id: String,
     pub spec: EventSpec,

@@ -20,9 +20,37 @@
 //! artifacts through the PJRT C API and executes them from the node
 //! managers' worker threads.
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index, and
-//! `EXPERIMENTS.md` for reproduced results.
+//! ## The client surface
+//!
+//! All user interaction goes through [`api::HardlessClient`] — one
+//! submit/status/wait/fetch trait with two transports:
+//!
+//! * **local** — the trait is implemented on [`coordinator::Cluster`]
+//!   (examples, benches, tests);
+//! * **remote** — [`api::RemoteClient`] speaks TCP to the
+//!   [`api::GatewayServer`] started by `hardless serve`, which hosts the
+//!   coordinator server-side: it publishes to the shared queue, receives
+//!   node completion reports over RPC, stamps `REnd`, and feeds the
+//!   metrics hub.
+//!
+//! Deployment walkthrough (`serve` → `node` → `submit`):
+//!
+//! ```text
+//! hardless serve                         # gateway + queue + store
+//! hardless node --engine mock            # worker node joins
+//! hardless submit --dataset datasets/x --wait   # submit, await result
+//! hardless status                        # cluster counters
+//! ```
+//!
+//! Publishing raw invocations straight into the queue is deprecated for
+//! user code: only the gateway/coordinator stamps `RStart`/`REnd` and
+//! tracks completion, so direct-queue events are invisible to `status`,
+//! `wait`, and the metrics pipeline.
+//!
+//! See `DESIGN.md` for the system inventory, the gateway API, and the
+//! experiment index, and `EXPERIMENTS.md` for reproduced results.
 
+pub mod api;
 pub mod bench;
 pub mod cli;
 pub mod config;

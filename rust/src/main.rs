@@ -1,20 +1,35 @@
 //! `hardless` — the HARDLESS leader/CLI binary.
 //!
-//! Subcommands:
+//! Distributed deployments are gateway-centric (serve → node → submit):
+//!
 //!   run        — run a full experiment (preset or config file), print the
 //!                paper-style summary, write CSVs
 //!   figures    — regenerate the paper's Fig. 3 + Fig. 4 and text tables
-//!   serve      — start queue + store TCP services (distributed deployment)
-//!   node       — start a worker node against remote queue/store services
-//!   submit     — publish one event to a remote queue
+//!   serve      — start the gateway + shared queue + object store
+//!   node       — start a worker node against a running `serve`
+//!   submit     — submit one event through the gateway (`--wait` blocks
+//!                for the result and prints latencies)
+//!   status     — one invocation's lifecycle, or the cluster counters
 //!   inspect    — print artifact/bundle information
+//!
+//! Publishing invocations straight into the queue (the pre-gateway
+//! `submit`) is deprecated: only the gateway stamps `RStart`/`REnd` and
+//! tracks status, so direct-queue events are invisible to `status`,
+//! `wait`, and the metrics pipeline.
 
+use hardless::api::{
+    GatewayConfig, GatewayServer, HardlessClient, RemoteClient, RemoteReporter,
+    SubmissionStatus,
+};
 use hardless::bench::{self, Engine};
 use hardless::cli::{App, Command};
 use hardless::config::Config;
+use hardless::events::EventSpec;
 use hardless::json::Json;
 use hardless::runtime::{artifacts_dir, RuntimeBundle};
 use std::time::Duration;
+
+const DEFAULT_GATEWAY: &str = "127.0.0.1:7400";
 
 fn app() -> App {
     App::new("hardless", "generalized serverless compute for hardware accelerators")
@@ -31,25 +46,36 @@ fn app() -> App {
                 .opt("out", "bench_out", "CSV output directory"),
         )
         .command(
-            Command::new("serve", "serve the shared queue + object store over TCP")
+            Command::new("serve", "serve the gateway + shared queue + object store over TCP")
+                .opt("gateway-addr", DEFAULT_GATEWAY, "gateway (client API) bind address")
                 .opt("queue-addr", "127.0.0.1:7401", "queue bind address")
                 .opt("store-addr", "127.0.0.1:7402", "store bind address")
-                .opt("store-dir", "", "object store directory (empty = in-memory)"),
+                .opt("store-dir", "", "object store directory (empty = in-memory)")
+                .opt("runtimes", "tinyyolo", "comma-separated runtimes to announce"),
         )
         .command(
-            Command::new("node", "run a worker node against remote services")
+            Command::new("node", "run a worker node against a running `serve`")
                 .opt("queue-addr", "127.0.0.1:7401", "queue address")
                 .opt("store-addr", "127.0.0.1:7402", "store address")
+                .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address for completion reporting (empty = node-local only)")
                 .opt("devices", "paper-all", "device preset: paper-dualgpu | paper-all")
                 .opt("id", "node-1", "node id")
                 .opt("policy", "warm-first", "warm-first | fifo | deadline:<ms>")
+                .opt("engine", "pjrt", "pjrt | mock (mock needs no artifacts)")
                 .opt("duration-s", "30", "how long to serve before draining"),
         )
         .command(
-            Command::new("submit", "publish one event to a remote queue")
-                .opt("queue-addr", "127.0.0.1:7401", "queue address")
+            Command::new("submit", "submit one event through the gateway")
+                .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address")
                 .opt("runtime", "tinyyolo", "logical runtime name")
+                .opt("timeout-s", "120", "wait timeout (with --wait)")
+                .flag("wait", "block until the result arrives; print latencies")
                 .req("dataset", "dataset object key"),
+        )
+        .command(
+            Command::new("status", "inspect one invocation or the whole cluster")
+                .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address")
+                .opt("id", "", "invocation id (empty = cluster stats + runtimes)"),
         )
         .command(
             Command::new("inspect", "print AOT bundle information")
@@ -73,6 +99,7 @@ fn main() {
         "serve" => cmd_serve(&m),
         "node" => cmd_node(&m),
         "submit" => cmd_submit(&m),
+        "status" => cmd_status(&m),
         "inspect" => cmd_inspect(&m),
         other => {
             eprintln!("unhandled command {other}");
@@ -127,31 +154,60 @@ fn cmd_figures(m: &hardless::cli::Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(m: &hardless::cli::Matches) -> anyhow::Result<()> {
-    use hardless::queue::{MemQueue, QueueServer};
+    use hardless::queue::{InvocationQueue, MemQueue, QueueServer};
     use hardless::store::{FsStore, MemStore, ObjectStore, StoreServer};
     use hardless::util::clock::ScaledClock;
     use std::sync::Arc;
 
     let clock = ScaledClock::realtime();
-    let queue = MemQueue::new(clock);
+    let queue = MemQueue::new(clock.clone());
     let store: Arc<dyn ObjectStore> = match m.str_req("store-dir") {
         "" => Arc::new(MemStore::new()),
         dir => Arc::new(FsStore::open(dir)?),
     };
-    let qs = QueueServer::serve(m.str_req("queue-addr"), queue)?;
-    let ss = StoreServer::serve(m.str_req("store-addr"), store)?;
-    println!("queue listening on {}", qs.addr());
-    println!("store listening on {}", ss.addr());
-    println!("publish the runtime bundle and start nodes; ctrl-c to stop");
+    let announce: Vec<String> = m
+        .str_req("runtimes")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    let qs = QueueServer::serve(m.str_req("queue-addr"), queue.clone())?;
+    let ss = StoreServer::serve(m.str_req("store-addr"), store.clone())?;
+    let gw = GatewayServer::serve(
+        m.str_req("gateway-addr"),
+        queue.clone() as Arc<dyn InvocationQueue>,
+        store,
+        clock,
+        GatewayConfig { announce_runtimes: announce, ..GatewayConfig::default() },
+    )?;
+    println!("gateway listening on {}  (submit/status/wait/results)", gw.addr());
+    println!("queue   listening on {}  (node managers take work here)", qs.addr());
+    println!("store   listening on {}  (datasets, bundles, results)", ss.addr());
+    println!("start nodes (`hardless node`), then submit (`hardless submit --wait`); ctrl-c to stop");
     loop {
-        std::thread::sleep(Duration::from_secs(3600));
+        std::thread::sleep(Duration::from_secs(30));
+        let counts = gw.coordinator().counts();
+        if counts.submitted > 0 {
+            let q = queue.stats()?;
+            log::info!(
+                "gateway: submitted {} | inflight {} | completed {} | queued {}",
+                counts.submitted,
+                counts.inflight,
+                counts.completed,
+                q.queued
+            );
+        }
     }
 }
 
 fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     use hardless::accel::{paper_all_accel, paper_dualgpu};
-    use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps};
+    use hardless::node::{
+        spawn_node, CompletionSink, InstanceReserve, NodeConfig, NodeDeps, TeeSink,
+    };
     use hardless::queue::QueueClient;
+    use hardless::runtime::{instance::MockExecutor, RuntimeInstance};
     use hardless::scheduler::parse_policy;
     use hardless::store::StoreClient;
     use hardless::util::clock::ScaledClock;
@@ -166,22 +222,66 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     let store = Arc::new(StoreClient::connect(m.str_req("store-addr"))?);
     let clock = ScaledClock::realtime();
 
-    // Fetch the runtime bundle from the store and prewarm executors —
-    // exactly what the paper's node manager does at join time.
-    let bundle = RuntimeBundle::fetch("tinyyolo", store.as_ref())
-        .or_else(|_| RuntimeBundle::load_dir("tinyyolo", artifacts_dir()))?;
     let reserve = InstanceReserve::new();
-    let built = reserve.prewarm_pjrt(&registry, &bundle)?;
-    println!("node {}: prewarmed {built} PJRT instances", m.str_req("id"));
+    match parse_engine(m)? {
+        Engine::Pjrt => {
+            // Fetch the runtime bundle from the store and prewarm
+            // executors — what the paper's node manager does at join time.
+            let bundle = RuntimeBundle::fetch("tinyyolo", store.as_ref())
+                .or_else(|_| RuntimeBundle::load_dir("tinyyolo", artifacts_dir()))?;
+            let built = reserve.prewarm_pjrt(&registry, &bundle)?;
+            println!("node {}: prewarmed {built} PJRT instances", m.str_req("id"));
+        }
+        Engine::Mock => {
+            for d in registry.devices() {
+                for variant in d.profile.runtimes.values() {
+                    for _ in 0..d.profile.slots {
+                        reserve.add(RuntimeInstance::start(
+                            variant.clone(),
+                            d.id.clone(),
+                            MockExecutor::factory(1.0, Duration::from_millis(1)),
+                        )?);
+                    }
+                }
+            }
+            println!(
+                "node {}: mock engine, {} instances reserved",
+                m.str_req("id"),
+                reserve.total()
+            );
+        }
+    }
 
+    // Completion reporting: to the gateway over RPC (so REnd is stamped
+    // and `hardless status` sees the completion) plus a local channel for
+    // the progress printout below.
     let (tx, rx) = mpsc::channel();
+    let gateway_addr = m.str_req("gateway-addr");
+    let completions: Arc<dyn CompletionSink> = if gateway_addr.is_empty() {
+        println!("no gateway configured; completions stay node-local");
+        Arc::new(tx)
+    } else {
+        match RemoteReporter::connect(gateway_addr) {
+            Ok(reporter) => {
+                println!("reporting completions to gateway {gateway_addr}");
+                Arc::new(TeeSink(vec![Arc::new(reporter), Arc::new(tx)]))
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: gateway {gateway_addr} unreachable ({e:#}); completions stay node-local"
+                );
+                Arc::new(tx)
+            }
+        }
+    };
+
     let deps = NodeDeps {
         queue,
         store,
         clock,
         policy: parse_policy(m.str_req("policy"))?,
         reserve,
-        completions: tx,
+        completions,
     };
     let node = spawn_node(NodeConfig::new(m.str_req("id")), registry, deps)?;
     let secs: u64 = m.parse_num("duration-s").map_err(|e| anyhow::anyhow!(e))?;
@@ -205,19 +305,65 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_submit(m: &hardless::cli::Matches) -> anyhow::Result<()> {
-    use hardless::events::{EventSpec, Invocation};
-    use hardless::queue::{InvocationQueue, QueueClient};
-    use hardless::util::next_id;
-
-    let queue = QueueClient::connect(m.str_req("queue-addr"))?;
-    let id = next_id("inv");
-    let inv = Invocation::new(
-        &id,
-        EventSpec::new(m.str_req("runtime"), m.str_req("dataset")),
-        hardless::util::SimTime(0),
+    let gateway_addr = m.str_req("gateway-addr");
+    let client = RemoteClient::connect(gateway_addr)?;
+    let id = client.submit(EventSpec::new(
+        m.str_req("runtime"),
+        m.str_req("dataset"),
+    ))?;
+    println!("submitted {id} via gateway {gateway_addr}");
+    if !m.flag("wait") {
+        println!("poll with: hardless status --id {id}");
+        return Ok(());
+    }
+    let timeout_s: u64 = m.parse_num("timeout-s").map_err(|e| anyhow::anyhow!(e))?;
+    let Some(inv) = client.wait(&id, Duration::from_secs(timeout_s))? else {
+        anyhow::bail!("{id} not terminal after {timeout_s}s (still queued or running)");
+    };
+    println!("status:      {:?}", inv.status);
+    println!("node:        {}", inv.node.as_deref().unwrap_or("-"));
+    println!("accelerator: {}", inv.accelerator.as_deref().unwrap_or("-"));
+    println!("variant:     {}", inv.variant.as_deref().unwrap_or("-"));
+    println!("warm start:  {}", inv.warm);
+    println!(
+        "RLat: {:.0} ms | ELat: {:.0} ms | DLat: {:.0} ms",
+        inv.stamps.rlat_ms().unwrap_or(f64::NAN),
+        inv.stamps.elat_ms().unwrap_or(f64::NAN),
+        inv.stamps.dlat_ms().unwrap_or(f64::NAN)
     );
-    queue.publish(inv)?;
-    println!("published {id}");
+    if let Some(body) = client.fetch_result(&id)? {
+        match std::str::from_utf8(&body) {
+            Ok(text) if text.starts_with('{') || text.starts_with('[') => {
+                println!("result ({} bytes): {text}", body.len())
+            }
+            _ => println!("result: {} bytes (binary)", body.len()),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_status(m: &hardless::cli::Matches) -> anyhow::Result<()> {
+    let client = RemoteClient::connect(m.str_req("gateway-addr"))?;
+    match m.str_req("id") {
+        "" => {
+            let out = client.cluster_stats()?.to_json().set(
+                "runtimes",
+                Json::Arr(
+                    client
+                        .list_runtimes()?
+                        .into_iter()
+                        .map(Json::Str)
+                        .collect(),
+                ),
+            );
+            println!("{}", out.to_pretty());
+        }
+        id => match client.status(id)? {
+            SubmissionStatus::Unknown => println!("{id}: unknown to this gateway"),
+            SubmissionStatus::InFlight => println!("{id}: in flight (queued or running)"),
+            SubmissionStatus::Done(inv) => println!("{}", inv.to_json().to_pretty()),
+        },
+    }
     Ok(())
 }
 

@@ -32,6 +32,45 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+/// Where a node reports terminal invocations (paper §IV-C: nodes signal
+/// completion back to the event generator).  Single-process deployments
+/// use an mpsc channel straight into the coordinator's collector;
+/// distributed nodes report to the gateway over TCP
+/// ([`crate::api::RemoteReporter`]).  The node manager is agnostic.
+pub trait CompletionSink: Send + Sync {
+    /// Deliver one terminal invocation.  Errors are the sink's problem to
+    /// describe; the node logs and keeps serving either way.
+    fn report(&self, inv: Invocation) -> Result<()>;
+}
+
+/// The in-process sink: a channel into the coordinator (or a test rig).
+impl CompletionSink for mpsc::Sender<Invocation> {
+    fn report(&self, inv: Invocation) -> Result<()> {
+        self.send(inv)
+            .map_err(|_| anyhow::anyhow!("completion receiver dropped"))
+    }
+}
+
+/// Fan a completion out to several sinks (e.g. gateway RPC + local log).
+/// Every sink sees every invocation; the first error is returned after
+/// all sinks have been tried.
+pub struct TeeSink(pub Vec<Arc<dyn CompletionSink>>);
+
+impl CompletionSink for TeeSink {
+    fn report(&self, inv: Invocation) -> Result<()> {
+        let mut first_err = None;
+        for sink in &self.0 {
+            if let Err(e) = sink.report(inv.clone()) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+}
+
 /// Node configuration.
 #[derive(Clone)]
 pub struct NodeConfig {
@@ -60,7 +99,7 @@ pub struct NodeDeps {
     pub policy: Arc<dyn Policy>,
     pub reserve: Arc<InstanceReserve>,
     /// Completion signal back to the event generator (paper §IV-C).
-    pub completions: mpsc::Sender<Invocation>,
+    pub completions: Arc<dyn CompletionSink>,
 }
 
 /// Handle to a running node manager.
@@ -93,6 +132,11 @@ impl NodeHandle {
 
     pub fn free_slots(&self) -> usize {
         self.registry.free_slots()
+    }
+
+    /// Logical runtimes this node can serve (union over its devices).
+    pub fn supported_runtimes(&self) -> Vec<String> {
+        self.registry.supported_runtimes()
     }
 }
 
@@ -141,9 +185,9 @@ fn manager_loop(
 
         let filter = deps.policy.filter(&registry, &pool);
         // Blocking take: the wall-clock wait equals the sim poll interval
-        // under the experiment's time scale; in-proc queues return the
-        // moment work is published (condvar), remote queues degrade to a
-        // single probe per interval.
+        // under the experiment's time scale; work arriving mid-wait wakes
+        // the manager immediately — condvar in-process, server-side
+        // long-poll over TCP.
         let wall_wait = Duration::from_secs_f64(
             cfg.poll_interval.as_secs_f64() / deps.clock.scale(),
         );
@@ -165,7 +209,9 @@ fn manager_loop(
         if let Admission::Reject(reason) = deps.policy.admit(&inv, deps.clock.now()) {
             inv.status = crate::events::Status::Failed(reason);
             let _ = deps.queue.ack(&inv.id);
-            let _ = deps.completions.send(inv);
+            if let Err(e) = deps.completions.report(inv) {
+                log::warn!("node {}: completion report failed: {e:#}", cfg.id);
+            }
             continue;
         }
 
@@ -250,7 +296,7 @@ mod tests {
             clock: clock.clone(),
             policy: Arc::new(WarmFirst),
             reserve,
-            completions: tx,
+            completions: Arc::new(tx),
         };
         let mut cfg = NodeConfig::new("node-1");
         cfg.poll_interval = Duration::from_millis(20);

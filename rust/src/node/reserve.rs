@@ -16,7 +16,7 @@
 //! (variant, device).
 
 use crate::accel::DeviceRegistry;
-use crate::runtime::{PjrtExecutor, RuntimeBundle, RuntimeInstance};
+use crate::runtime::{RuntimeBundle, RuntimeInstance};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -72,7 +72,12 @@ impl InstanceReserve {
     /// Build PJRT instances for every (device, variant, slot) of the
     /// registry from `bundle` — the node-startup compile pass.  Returns
     /// the number of instances built.
+    ///
+    /// Requires the `pjrt` cargo feature (the `xla` bindings); without it
+    /// this fails at call time with a pointer at the mock engine.
+    #[cfg(feature = "pjrt")]
     pub fn prewarm_pjrt(&self, registry: &DeviceRegistry, bundle: &RuntimeBundle) -> Result<usize> {
+        use crate::runtime::PjrtExecutor;
         let mut built = 0;
         for device in registry.devices() {
             for (_runtime, variant) in &device.profile.runtimes {
@@ -96,6 +101,15 @@ impl InstanceReserve {
             }
         }
         Ok(built)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn prewarm_pjrt(&self, registry: &DeviceRegistry, bundle: &RuntimeBundle) -> Result<usize> {
+        let _ = (registry, bundle);
+        anyhow::bail!(
+            "hardless was built without the `pjrt` feature; \
+             rebuild with `--features pjrt` or use the mock engine"
+        )
     }
 }
 
@@ -126,6 +140,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn prewarm_builds_slots_per_device_variant() {
         if !crate::runtime::artifacts_available() {
             eprintln!("skipping: artifacts not built");

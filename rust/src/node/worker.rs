@@ -11,6 +11,7 @@
 
 use crate::accel::{Device, DeviceRegistry, SlotGuard};
 use crate::events::{Invocation, Status};
+use crate::node::CompletionSink;
 use crate::postprocess;
 use crate::queue::{InvocationQueue, TakeFilter};
 use crate::runtime::{InstancePool, RuntimeInstance};
@@ -18,7 +19,7 @@ use crate::scheduler::{warm_runtimes, Admission, Policy};
 use crate::store::{keys, ObjectStore};
 use crate::util::{Clock, Rng};
 use anyhow::{anyhow, Context, Result};
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Shared services a worker needs.
@@ -30,7 +31,7 @@ pub struct WorkerCtx {
     pub clock: Arc<dyn Clock>,
     pub policy: Arc<dyn Policy>,
     pub reserve: Arc<crate::node::InstanceReserve>,
-    pub completions: mpsc::Sender<Invocation>,
+    pub completions: Arc<dyn CompletionSink>,
 }
 
 /// Pick a device + slot for `runtime`.  When the lease was a warm hit,
@@ -147,7 +148,9 @@ pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
         }
         inv.stamps.n_end = Some(ctx.clock.now());
         let _ = ctx.queue.ack(&inv.id);
-        let _ = ctx.completions.send(inv);
+        if let Err(e) = ctx.completions.report(inv) {
+            log::warn!("node {}: completion report failed: {e:#}", ctx.node_id);
+        }
 
         // §IV-D: "When an already running invocation is finished, they
         // query whether the queue has invocations that have the same
@@ -161,7 +164,7 @@ pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
                 if let Admission::Reject(reason) = ctx.policy.admit(&next, ctx.clock.now()) {
                     next.status = Status::Failed(reason);
                     let _ = ctx.queue.ack(&next.id);
-                    let _ = ctx.completions.send(next);
+                    let _ = ctx.completions.report(next);
                     break;
                 }
                 inv = next;
@@ -244,7 +247,7 @@ fn fail(ctx: &WorkerCtx, mut inv: Invocation, reason: String) {
     inv.status = Status::Failed(reason);
     inv.stamps.n_end = Some(ctx.clock.now());
     let _ = ctx.queue.ack(&inv.id);
-    let _ = ctx.completions.send(inv);
+    let _ = ctx.completions.report(inv);
 }
 
 /// Exposed for scheduler integration tests.

@@ -135,10 +135,11 @@ pub trait InvocationQueue: Send + Sync {
     fn stats(&self) -> Result<QueueStats>;
 
     /// Blocking take: wait up to `wall_timeout` (wall-clock) for a
-    /// matching invocation.  Default = one non-blocking probe (remote
-    /// clients keep polling semantics); [`MemQueue`] overrides with a
-    /// condvar so idle dispatch latency is notification-bound instead of
-    /// poll-interval-bound (EXPERIMENTS.md §Perf).
+    /// matching invocation.  Default = one non-blocking probe;
+    /// [`MemQueue`] overrides with a condvar and [`QueueClient`] with a
+    /// server-side long poll, so idle dispatch latency is
+    /// notification-bound instead of poll-interval-bound — in-process
+    /// and over TCP alike (EXPERIMENTS.md §Perf).
     fn take_timeout(
         &self,
         filter: &TakeFilter,

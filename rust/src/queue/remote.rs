@@ -8,9 +8,31 @@
 use super::{InvocationQueue, Lease, QueueStats, TakeFilter};
 use crate::events::Invocation;
 use crate::json::Json;
-use crate::wire::{Handler, RpcClient, RpcServer};
+use crate::wire::{poll_chunked, Handler, RpcClient, RpcServer, LONG_POLL_CHUNK};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
+use std::time::Duration;
+
+fn lease_to_json(lease: Option<Lease>) -> Json {
+    match lease {
+        Some(lease) => Json::obj()
+            .set("invocation", lease.invocation.to_json())
+            .set("warm_hit", lease.warm_hit)
+            .set("attempt", lease.attempt as u64),
+        None => Json::Null,
+    }
+}
+
+fn lease_from_json(out: &Json) -> Result<Option<Lease>> {
+    if out.is_null() {
+        return Ok(None);
+    }
+    Ok(Some(Lease {
+        invocation: Invocation::from_json(out.req("invocation")?)?,
+        warm_hit: out.bool_of("warm_hit")?,
+        attempt: out.u64_of("attempt")? as u32,
+    }))
+}
 
 /// Serves any [`InvocationQueue`] backend over TCP.
 pub struct QueueServer {
@@ -27,16 +49,22 @@ impl QueueServer {
             }
             "take" => {
                 let filter = TakeFilter::from_json(params.req("filter")?)?;
-                match backend.take(&filter)? {
-                    Some(lease) => Ok((
-                        Json::obj()
-                            .set("invocation", lease.invocation.to_json())
-                            .set("warm_hit", lease.warm_hit)
-                            .set("attempt", lease.attempt as u64),
-                        None,
-                    )),
-                    None => Ok((Json::Null, None)),
-                }
+                Ok((lease_to_json(backend.take(&filter)?), None))
+            }
+            "take_timeout" => {
+                // Server-side long poll: park on the backend (condvar on
+                // MemQueue) so remote node managers are notification-
+                // bound rather than poll-interval-bound.  One chunk per
+                // RPC; the connection thread is dedicated, so blocking
+                // here starves no one.
+                let filter = TakeFilter::from_json(params.req("filter")?)?;
+                let ms = params
+                    .u64_of("timeout_ms")
+                    .unwrap_or(0)
+                    .min(LONG_POLL_CHUNK.as_millis() as u64);
+                let lease =
+                    backend.take_timeout(&filter, Duration::from_millis(ms))?;
+                Ok((lease_to_json(lease), None))
             }
             "ack" => {
                 backend.ack(params.str_of("id")?)?;
@@ -97,14 +125,26 @@ impl InvocationQueue for QueueClient {
         let out = self
             .rpc
             .call("take", Json::obj().set("filter", filter.to_json()))?;
-        if out.is_null() {
-            return Ok(None);
-        }
-        Ok(Some(Lease {
-            invocation: Invocation::from_json(out.req("invocation")?)?,
-            warm_hit: out.bool_of("warm_hit")?,
-            attempt: out.u64_of("attempt")? as u32,
-        }))
+        lease_from_json(&out)
+    }
+
+    /// Remote long poll: chunked server-side blocking replaces the old
+    /// single non-blocking probe, so idle dispatch latency over TCP is
+    /// one notification instead of one poll interval.
+    fn take_timeout(
+        &self,
+        filter: &TakeFilter,
+        wall_timeout: Duration,
+    ) -> Result<Option<Lease>> {
+        poll_chunked(wall_timeout, |chunk_ms| {
+            let out = self.rpc.call(
+                "take_timeout",
+                Json::obj()
+                    .set("filter", filter.to_json())
+                    .set("timeout_ms", chunk_ms),
+            )?;
+            lease_from_json(&out)
+        })
     }
 
     fn ack(&self, invocation_id: &str) -> Result<()> {
@@ -193,6 +233,56 @@ mod tests {
         assert!(q.ack("missing").is_err());
         q.publish(inv("1", "a")).unwrap();
         assert!(q.publish(inv("1", "a")).is_err(), "duplicate id");
+    }
+
+    #[test]
+    fn long_poll_returns_promptly_when_work_arrives_mid_wait() {
+        let (s, q) = setup();
+        let publisher = QueueClient::connect(s.addr()).unwrap();
+        let t0 = std::time::Instant::now();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            publisher.publish(inv("late", "a")).unwrap();
+        });
+        // Without the server-side long poll this single call would probe
+        // once, find nothing, and return None immediately.
+        let lease = q
+            .take_timeout(&TakeFilter::default(), Duration::from_secs(5))
+            .unwrap()
+            .expect("woken by the publish, not the poll interval");
+        assert_eq!(lease.invocation.id, "late");
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(100), "{waited:?}");
+        assert!(waited < Duration::from_secs(2), "{waited:?}");
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn long_poll_times_out_empty() {
+        let (_s, q) = setup();
+        let t0 = std::time::Instant::now();
+        let got = q
+            .take_timeout(&TakeFilter::default(), Duration::from_millis(200))
+            .unwrap();
+        assert!(got.is_none());
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(150), "{waited:?}");
+        assert!(waited < Duration::from_secs(3), "{waited:?}");
+    }
+
+    #[test]
+    fn long_poll_zero_timeout_is_a_probe() {
+        let (_s, q) = setup();
+        q.publish(inv("1", "a")).unwrap();
+        let lease = q
+            .take_timeout(&TakeFilter::default(), Duration::ZERO)
+            .unwrap()
+            .expect("immediate work still delivered");
+        assert_eq!(lease.invocation.id, "1");
+        assert!(q
+            .take_timeout(&TakeFilter::default(), Duration::ZERO)
+            .unwrap()
+            .is_none());
     }
 
     #[test]

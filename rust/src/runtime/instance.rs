@@ -289,6 +289,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "pjrt")]
     fn pjrt_instance_end_to_end() {
         use crate::runtime::{artifacts_available, artifacts_dir, PjrtExecutor, RuntimeBundle};
         if !artifacts_available() {

@@ -20,11 +20,13 @@
 
 pub mod bundle;
 pub mod instance;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod pool;
 
 pub use bundle::{ArtifactSpec, RuntimeBundle, WeightSpec};
 pub use instance::{ExecOutcome, Executor, RuntimeInstance};
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtExecutor;
 pub use pool::InstancePool;
 

@@ -60,24 +60,36 @@ pub trait Clock: Send + Sync {
 pub struct ScaledClock {
     epoch: Instant,
     scale: f64,
+    /// Added to every reading.  Scaled (single-process) experiments use 0
+    /// — sim time starts at the experiment epoch; [`ScaledClock::realtime`]
+    /// anchors to the UNIX epoch instead so that *separate processes*
+    /// (gateway, nodes, clients in a distributed deployment) stamp
+    /// comparable SimTimes and cross-process latencies like `DLat` stay
+    /// meaningful.
+    offset_micros: u64,
 }
 
 impl ScaledClock {
     pub fn new(scale: f64) -> Arc<ScaledClock> {
         assert!(scale > 0.0, "scale must be positive");
-        Arc::new(ScaledClock { epoch: Instant::now(), scale })
+        Arc::new(ScaledClock { epoch: Instant::now(), scale, offset_micros: 0 })
     }
 
-    /// Real-time clock (scale 1).
+    /// Real-time clock (scale 1), anchored to the UNIX epoch so stamps
+    /// from different processes on synchronized hosts share a time base.
     pub fn realtime() -> Arc<ScaledClock> {
-        ScaledClock::new(1.0)
+        let offset_micros = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        Arc::new(ScaledClock { epoch: Instant::now(), scale: 1.0, offset_micros })
     }
 }
 
 impl Clock for ScaledClock {
     fn now(&self) -> SimTime {
         let wall = self.epoch.elapsed();
-        SimTime((wall.as_secs_f64() * self.scale * 1e6) as u64)
+        SimTime(self.offset_micros + (wall.as_secs_f64() * self.scale * 1e6) as u64)
     }
 
     fn sleep(&self, sim: Duration) {

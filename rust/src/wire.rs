@@ -14,7 +14,7 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Upper bound on a single frame (64 MiB) — guards against corrupt length
 /// prefixes taking the process down.
@@ -180,16 +180,66 @@ fn serve_conn(mut stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) ->
     }
 }
 
+/// Default client read timeout.  Generous — server-side blocking calls
+/// cap their chunks at [`LONG_POLL_CHUNK`] — but finite, so a server that
+/// dies mid-call surfaces a clean error instead of hanging the caller
+/// forever.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Cap on one server-side blocking chunk (gateway `wait`, queue
+/// long-poll).  Must stay well below [`DEFAULT_READ_TIMEOUT`] so a
+/// deliberately parked RPC never looks like a dead server; clients loop
+/// via [`poll_chunked`] until their own deadline.
+pub const LONG_POLL_CHUNK: Duration = Duration::from_secs(10);
+
+/// Client side of a chunked server-blocking call: issue `call(chunk_ms)`
+/// until it yields a value or `timeout` elapses.  Each chunk is capped at
+/// [`LONG_POLL_CHUNK`], enforcing the read-timeout invariant in one place
+/// for every long-polling client (queue take, gateway wait).
+pub fn poll_chunked<T>(
+    timeout: Duration,
+    mut call: impl FnMut(u64) -> Result<Option<T>>,
+) -> Result<Option<T>> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let chunk = remaining.min(LONG_POLL_CHUNK);
+        if let Some(v) = call(chunk.as_millis() as u64)? {
+            return Ok(Some(v));
+        }
+        if remaining <= chunk {
+            return Ok(None);
+        }
+    }
+}
+
 /// Client side: a persistent connection issuing sequential requests.
 pub struct RpcClient {
     stream: Mutex<TcpStream>,
+    read_timeout: Duration,
+    /// Set when a call died mid-frame: request/response framing may be
+    /// desynchronized, so every later call fails fast until reconnect.
+    broken: AtomicBool,
 }
 
 impl RpcClient {
     pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RpcClient> {
+        RpcClient::connect_with_timeout(addr, DEFAULT_READ_TIMEOUT)
+    }
+
+    /// Connect with an explicit per-read timeout (tests, impatient CLIs).
+    pub fn connect_with_timeout(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        read_timeout: Duration,
+    ) -> Result<RpcClient> {
         let stream = TcpStream::connect(&addr).with_context(|| format!("connect {addr:?}"))?;
         stream.set_nodelay(true)?;
-        Ok(RpcClient { stream: Mutex::new(stream) })
+        stream.set_read_timeout(Some(read_timeout))?;
+        Ok(RpcClient {
+            stream: Mutex::new(stream),
+            read_timeout,
+            broken: AtomicBool::new(false),
+        })
     }
 
     /// Issue `method(params)`; returns the result value.
@@ -205,27 +255,71 @@ impl RpcClient {
         blob: Option<&[u8]>,
     ) -> Result<(Json, Option<Vec<u8>>)> {
         let mut stream = self.stream.lock().expect("rpc client poisoned");
+        // Checked under the lock: a caller that was blocked on the mutex
+        // while another thread's call died mid-frame must not write onto
+        // the now-desynchronized stream.
+        if self.broken.load(Ordering::SeqCst) {
+            bail!("rpc {method}: connection is broken after an earlier mid-call failure; reconnect");
+        }
+        match Self::exchange(&mut stream, method, params, blob) {
+            Ok(x) => x,
+            Err(e) => {
+                // IO failed mid-frame (server died, network partition, or
+                // no response within the read timeout): the stream can no
+                // longer be trusted to be frame-aligned.
+                self.broken.store(true, Ordering::SeqCst);
+                let timed_out = e
+                    .downcast_ref::<std::io::Error>()
+                    .map(|ioe| {
+                        matches!(
+                            ioe.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        )
+                    })
+                    .unwrap_or(false);
+                if timed_out {
+                    Err(e.context(format!(
+                        "rpc {method}: no response within {:?} — server down or unreachable",
+                        self.read_timeout
+                    )))
+                } else {
+                    Err(e.context(format!("rpc {method}: connection failed")))
+                }
+            }
+        }
+    }
+
+    /// One request/response exchange.  Outer `Err` = transport failure
+    /// (poisons the connection); inner `Result` = server-reported error
+    /// (connection stays healthy).
+    #[allow(clippy::type_complexity)]
+    fn exchange(
+        stream: &mut TcpStream,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+    ) -> Result<Result<(Json, Option<Vec<u8>>)>> {
         let req = Json::obj()
             .set("method", method)
             .set("params", params)
             .set("blob", blob.is_some());
-        write_frame(&mut *stream, &req)?;
+        write_frame(stream, &req)?;
         if let Some(b) = blob {
-            write_blob(&mut *stream, b)?;
+            write_blob(stream, b)?;
         }
-        let resp = read_frame(&mut *stream)?;
+        let resp = read_frame(stream)?;
         if !resp.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
-            bail!(
+            return Ok(Err(anyhow!(
                 "rpc {method} failed: {}",
                 resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown")
-            );
+            )));
         }
         let out_blob = if resp.get("blob").and_then(|b| b.as_bool()).unwrap_or(false) {
-            Some(read_blob(&mut *stream)?)
+            Some(read_blob(stream)?)
         } else {
             None
         };
-        Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob))
+        Ok(Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob)))
     }
 }
 
@@ -323,6 +417,64 @@ mod tests {
         buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         let mut cursor = std::io::Cursor::new(buf);
         assert!(read_blob(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn stalled_server_times_out_cleanly() {
+        // A server that accepts but never replies: the client must return
+        // a clean error within its read timeout instead of blocking
+        // forever (a dead gateway must not wedge every node).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (keep_tx, keep_rx) = std::sync::mpsc::channel::<()>();
+        let hold = std::thread::spawn(move || {
+            let conn = listener.accept().unwrap().0;
+            // hold the connection open, silently, until the test is done
+            let _ = keep_rx.recv_timeout(Duration::from_secs(30));
+            drop(conn);
+        });
+        let client =
+            RpcClient::connect_with_timeout(addr, Duration::from_millis(200)).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = client.call("ping", Json::Null).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "did not hang");
+        assert!(
+            format!("{err:#}").contains("no response within"),
+            "{err:#}"
+        );
+        // the connection is poisoned: later calls fail fast, no new hang
+        let t1 = std::time::Instant::now();
+        let err2 = client.call("ping", Json::Null).unwrap_err();
+        assert!(t1.elapsed() < Duration::from_millis(50));
+        assert!(format!("{err2}").contains("broken"), "{err2}");
+        drop(keep_tx);
+        hold.join().unwrap();
+    }
+
+    #[test]
+    fn server_death_mid_call_errors_instead_of_hanging() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let killer = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            drop(conn); // server "crashes" before answering
+        });
+        let client = RpcClient::connect(addr).unwrap();
+        let err = client.call("ping", Json::Null).unwrap_err();
+        assert!(format!("{err:#}").contains("rpc ping"), "{err:#}");
+        killer.join().unwrap();
+    }
+
+    #[test]
+    fn server_reported_errors_do_not_poison_the_connection() {
+        let server = echo_server();
+        let client = RpcClient::connect(server.addr()).unwrap();
+        assert!(client.call("boom", Json::Null).is_err());
+        // framing stayed aligned: the next call succeeds
+        let out = client
+            .call("add", Json::obj().set("a", 1.0).set("b", 2.0))
+            .unwrap();
+        assert_eq!(out.f64_of("sum").unwrap(), 3.0);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! rate (deterministic spacing or Poisson), never on completions — the
 //! property that makes backlog growth visible when the system saturates.
 
+use crate::api::HardlessClient;
 use crate::coordinator::Cluster;
 use crate::events::EventSpec;
 use crate::json::Json;
@@ -197,9 +198,13 @@ pub fn run_workload(cluster: &Cluster, workload: &Workload, drain_timeout: Durat
         submitted += 1;
     }
     let lost = cluster.drain(drain_timeout);
-    let completed = cluster.coordinator.completed().len();
-    let succeeded = cluster.coordinator.successes();
-    Ok(RunReport { submitted, completed, succeeded, lost })
+    let counts = cluster.coordinator.counts();
+    Ok(RunReport {
+        submitted,
+        completed: counts.completed,
+        succeeded: counts.succeeded,
+        lost,
+    })
 }
 
 /// Upload `n` synthetic image datasets sized for the tinyyolo input

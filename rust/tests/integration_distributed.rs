@@ -53,7 +53,7 @@ fn remote_node(
         clock: s.clock.clone(),
         policy: Arc::new(WarmFirst),
         reserve,
-        completions: tx,
+        completions: Arc::new(tx),
     };
     (spawn_node(NodeConfig::new(id), registry, deps).unwrap(), rx)
 }

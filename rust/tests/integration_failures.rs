@@ -7,6 +7,7 @@
 //! lose capacity).
 
 use hardless::accel::{paper_dualgpu, AcceleratorProfile, Device, DeviceRegistry};
+use hardless::api::HardlessClient;
 use hardless::coordinator::cluster::{Cluster, ExecutorKind};
 use hardless::events::{EventSpec, Status};
 use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps};
@@ -33,8 +34,8 @@ fn missing_dataset_fails_cleanly_and_node_keeps_serving() {
         .submit(EventSpec::new("tinyyolo", "datasets/ghost"))
         .unwrap();
     let inv = cluster
-        .coordinator
-        .wait_for(&bad, Duration::from_secs(20))
+        .wait(&bad, Duration::from_secs(20))
+        .unwrap()
         .unwrap();
     assert!(matches!(inv.status, Status::Failed(_)), "{:?}", inv.status);
 
@@ -42,8 +43,8 @@ fn missing_dataset_fails_cleanly_and_node_keeps_serving() {
     let key = cluster.upload_dataset("ok", &[1.0]).unwrap();
     let good = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
     let inv = cluster
-        .coordinator
-        .wait_for(&good, Duration::from_secs(20))
+        .wait(&good, Duration::from_secs(20))
+        .unwrap()
         .unwrap();
     assert_eq!(inv.status, Status::Succeeded);
     cluster.shutdown();
@@ -82,7 +83,7 @@ fn crashing_executor_fails_event_but_frees_slot() {
             clock: clock.clone(),
             policy: Arc::new(WarmFirst),
             reserve,
-            completions: tx,
+            completions: Arc::new(tx),
         },
     )
     .unwrap();
@@ -148,7 +149,7 @@ fn reserve_exhaustion_is_reported_not_hung() {
             clock: clock.clone(),
             policy: Arc::new(WarmFirst),
             reserve,
-            completions: tx,
+            completions: Arc::new(tx),
         },
     )
     .unwrap();
@@ -198,7 +199,7 @@ fn property_random_fault_schedules_conserve_events() {
             cluster.submit(EventSpec::new(runtime, &dataset)).unwrap();
         }
         let lost = cluster.drain(Duration::from_secs(60));
-        let done = cluster.coordinator.completed().len();
+        let done = cluster.cluster_stats().unwrap().completed;
         let stats = cluster.queue.stats().unwrap();
         let ok = lost == 0
             && done == plan.len()

@@ -1,0 +1,217 @@
+//! Integration: the gateway-centric distributed deployment.
+//!
+//! Everything `hardless serve` + `hardless node` + `hardless submit
+//! --wait` wire up, in-process over real TCP sockets: a RemoteClient
+//! submits through the GatewayServer, a mock-engine node takes work from
+//! the QueueServer via the long-poll path and reports completions back
+//! to the gateway over RPC, and the client observes status, stamps,
+//! results, and cluster stats — without ever touching the queue.
+
+use hardless::api::{
+    ClusterStats, GatewayConfig, GatewayServer, HardlessClient, RemoteClient, RemoteReporter,
+    SubmissionStatus,
+};
+use hardless::events::{EventSpec, Status};
+use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps, NodeHandle};
+use hardless::queue::{MemQueue, QueueClient, QueueServer};
+use hardless::runtime::instance::MockExecutor;
+use hardless::runtime::RuntimeInstance;
+use hardless::scheduler::WarmFirst;
+use hardless::store::{MemStore, ObjectStore, StoreClient, StoreServer};
+use hardless::util::clock::ScaledClock;
+use std::sync::Arc;
+use std::time::Duration;
+
+struct Deployment {
+    gateway: GatewayServer,
+    queue_srv: QueueServer,
+    store_srv: StoreServer,
+    clock: Arc<ScaledClock>,
+}
+
+fn deployment() -> Deployment {
+    let clock = ScaledClock::new(120.0);
+    let queue = MemQueue::new(clock.clone());
+    let store = Arc::new(MemStore::new());
+    let queue_srv = QueueServer::serve("127.0.0.1:0", queue.clone()).unwrap();
+    let store_srv = StoreServer::serve("127.0.0.1:0", store.clone()).unwrap();
+    let gateway = GatewayServer::serve(
+        "127.0.0.1:0",
+        queue,
+        store,
+        clock.clone(),
+        GatewayConfig {
+            announce_runtimes: vec!["tinyyolo".into()],
+            ..GatewayConfig::default()
+        },
+    )
+    .unwrap();
+    Deployment { gateway, queue_srv, store_srv, clock }
+}
+
+/// A worker node wired exactly like `hardless node --engine mock`:
+/// queue + store over TCP, completions reported to the gateway over RPC.
+fn remote_node(d: &Deployment, id: &str, mock_scale: f32) -> NodeHandle {
+    let registry = hardless::accel::paper_dualgpu();
+    let reserve = InstanceReserve::new();
+    for dev in registry.devices() {
+        for variant in dev.profile.runtimes.values() {
+            for _ in 0..dev.profile.slots {
+                reserve.add(
+                    RuntimeInstance::start(
+                        variant.clone(),
+                        dev.id.clone(),
+                        MockExecutor::factory(mock_scale, Duration::from_millis(1)),
+                    )
+                    .unwrap(),
+                );
+            }
+        }
+    }
+    let deps = NodeDeps {
+        queue: Arc::new(QueueClient::connect(d.queue_srv.addr()).unwrap()),
+        store: Arc::new(StoreClient::connect(d.store_srv.addr()).unwrap()),
+        clock: d.clock.clone(),
+        policy: Arc::new(WarmFirst),
+        reserve,
+        completions: Arc::new(RemoteReporter::connect(d.gateway.addr()).unwrap()),
+    };
+    spawn_node(NodeConfig::new(id), registry, deps).unwrap()
+}
+
+fn upload(d: &Deployment, name: &str, values: &[f32]) -> String {
+    let store = StoreClient::connect(d.store_srv.addr()).unwrap();
+    let key = format!("datasets/{name}");
+    let bytes: Vec<u8> = values.iter().flat_map(|f| f.to_le_bytes()).collect();
+    store.put(&key, &bytes).unwrap();
+    key
+}
+
+#[test]
+fn submit_execute_fetch_round_trip_over_tcp() {
+    let d = deployment();
+    let client = RemoteClient::connect(d.gateway.addr()).unwrap();
+    let key = upload(&d, "img", &[1.0, 2.0, 4.0]);
+    let node = remote_node(&d, "rnode-1", 3.0);
+
+    let id = client.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+    let inv = client
+        .wait(&id, Duration::from_secs(30))
+        .unwrap()
+        .expect("round trip completes");
+    assert_eq!(inv.status, Status::Succeeded);
+    assert_eq!(inv.node.as_deref(), Some("rnode-1"));
+
+    // The paper's measurement vocabulary survives the wire: RStart was
+    // stamped at submit, REnd at the gateway when the report arrived,
+    // and the node-side stamps travelled back in between.
+    let s = &inv.stamps;
+    assert!(s.r_start.is_some(), "RStart at gateway submit");
+    assert!(s.r_end.is_some(), "REnd at gateway receipt");
+    assert!(s.r_start <= s.n_start && s.n_start <= s.e_start);
+    assert!(s.e_start < s.e_end && s.e_end <= s.n_end);
+    assert!(s.n_end <= s.r_end);
+    assert!(inv.stamps.rlat_ms().unwrap() > 0.0);
+
+    // First event on a fresh node is a cold start.
+    assert!(!inv.warm, "first execution must be a cold start");
+
+    // Result payload through the gateway (mock engine: output = input*3).
+    let body = client.fetch_result(&id).unwrap().expect("result persisted");
+    let floats: Vec<f32> = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    assert_eq!(floats, vec![3.0, 6.0, 12.0]);
+
+    // REnd-stamped completion is visible in cluster_stats.
+    let stats: ClusterStats = client.cluster_stats().unwrap();
+    assert_eq!((stats.submitted, stats.completed, stats.succeeded), (1, 1, 1));
+    assert_eq!((stats.inflight, stats.failed), (0, 0));
+    assert_eq!(stats.queue.acked, 1);
+    // ... and in the gateway's metrics hub, REnd included.
+    let records = d.gateway.metrics().records();
+    assert_eq!(records.len(), 1);
+    assert!(records[0].r_end.is_some(), "REnd recorded gateway-side");
+
+    assert_eq!(client.list_runtimes().unwrap(), vec!["tinyyolo".to_string()]);
+    node.stop();
+}
+
+#[test]
+fn warm_and_cold_attribution_over_the_gateway() {
+    let d = deployment();
+    let client = RemoteClient::connect(d.gateway.addr()).unwrap();
+    let key = upload(&d, "img", &[1.0; 8]);
+    let node = remote_node(&d, "rnode-1", 1.0);
+
+    // 8 events over 4 slots: at least half must reuse warm instances,
+    // and the attribution must survive the report RPC.
+    let ids = client
+        .submit_batch((0..8).map(|_| EventSpec::new("tinyyolo", &key)).collect())
+        .unwrap();
+    assert_eq!(ids.len(), 8);
+    let mut warm = 0;
+    for id in &ids {
+        let inv = client
+            .wait(id, Duration::from_secs(60))
+            .unwrap()
+            .expect("completes");
+        assert_eq!(inv.status, Status::Succeeded);
+        if inv.warm {
+            warm += 1;
+        }
+    }
+    assert!(warm >= 2, "warm reuse must survive the wire (got {warm}/8)");
+    let stats = client.cluster_stats().unwrap();
+    assert_eq!(stats.succeeded, 8);
+    node.stop();
+}
+
+#[test]
+fn status_transitions_unknown_inflight_done() {
+    let d = deployment();
+    let client = RemoteClient::connect(d.gateway.addr()).unwrap();
+    assert_eq!(client.status("inv-ghost").unwrap(), SubmissionStatus::Unknown);
+
+    // No node yet: the submission parks in the queue as in-flight.
+    let key = upload(&d, "img", &[0.5; 4]);
+    let id = client.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+    assert_eq!(client.status(&id).unwrap(), SubmissionStatus::InFlight);
+    assert!(client.wait(&id, Duration::from_millis(200)).unwrap().is_none());
+    assert!(client.fetch_result(&id).unwrap().is_none());
+    assert_eq!(client.cluster_stats().unwrap().queue.queued, 1);
+
+    // A node joins late and drains the backlog (dynamic membership).
+    let node = remote_node(&d, "late-node", 1.0);
+    let inv = client
+        .wait(&id, Duration::from_secs(30))
+        .unwrap()
+        .expect("late node serves the parked event");
+    assert_eq!(inv.status, Status::Succeeded);
+    match client.status(&id).unwrap() {
+        SubmissionStatus::Done(done) => assert_eq!(done.id, id),
+        other => panic!("expected Done, got {other:?}"),
+    }
+    node.stop();
+}
+
+#[test]
+fn two_clients_one_gateway_share_tracking() {
+    let d = deployment();
+    let submitter = RemoteClient::connect(d.gateway.addr()).unwrap();
+    let observer = RemoteClient::connect(d.gateway.addr()).unwrap();
+    let key = upload(&d, "img", &[1.0]);
+    let node = remote_node(&d, "rnode-1", 1.0);
+
+    let id = submitter.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+    // A different connection can wait on and fetch the same invocation:
+    // tracking lives at the gateway, not in the client.
+    let inv = observer
+        .wait(&id, Duration::from_secs(30))
+        .unwrap()
+        .expect("visible across connections");
+    assert_eq!(inv.id, id);
+    assert!(observer.fetch_result(&id).unwrap().is_some());
+    node.stop();
+}

@@ -6,8 +6,12 @@
 //! must equal those computed by running the executor directly on the same
 //! image.
 //!
-//! All tests self-skip when `make artifacts` has not run.
+//! All tests self-skip when `make artifacts` has not run.  The whole
+//! file requires the `pjrt` cargo feature (the `xla` bindings).
 
+#![cfg(feature = "pjrt")]
+
+use hardless::api::HardlessClient;
 use hardless::coordinator::cluster::{Cluster, ExecutorKind};
 use hardless::events::{EventSpec, Status};
 use hardless::json::Json;
@@ -48,7 +52,10 @@ fn cluster_detections_match_direct_execution() {
     let image = golden_image();
     let dataset = cluster.upload_dataset("golden", &image).unwrap();
     let id = cluster.submit(EventSpec::new("tinyyolo", &dataset)).unwrap();
-    let inv = cluster.coordinator.wait_for(&id, Duration::from_secs(180)).unwrap();
+    let inv = cluster
+        .wait(&id, Duration::from_secs(180))
+        .unwrap()
+        .unwrap();
     assert_eq!(inv.status, Status::Succeeded, "{:?}", inv.status);
 
     // Stored result = decoded detections JSON.
