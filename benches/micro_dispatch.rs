@@ -1,6 +1,6 @@
 //! Micro-benchmark: end-to-end coordination overhead (L3 hot path).
 //!
-//! DESIGN.md §7: coordination overhead must be ≪ service time — "L3
+//! DESIGN.md §8: coordination overhead must be ≪ service time — "L3
 //! should not be the bottleneck unless the paper's contribution *is* the
 //! coordinator".  Measures, on an idle unsaturated cluster with zero-cost
 //! executors and zero-pacing profiles, the wall-clock anatomy of one

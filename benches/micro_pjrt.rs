@@ -3,7 +3,7 @@
 //! Measures, for each AOT variant: cold-start cost (client + HLO parse +
 //! XLA compile + weight upload), steady-state inference latency, and
 //! single-instance throughput.  Also reports the analytic MXU/VMEM
-//! estimates from DESIGN.md §7 (interpret-mode kernels give CPU numerics,
+//! estimates from DESIGN.md §8 (interpret-mode kernels give CPU numerics,
 //! not TPU timings — the structural estimates are the perf signal for a
 //! real deployment).
 
@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Analytic L1 kernel stats for the production GEMM shapes (DESIGN §7).
+    // Analytic L1 kernel stats for the production GEMM shapes (DESIGN §8).
     println!("\nL1 Pallas GEMM — analytic MXU/VMEM estimates per layer (real-TPU deploy):");
     println!(
         "{:<26} {:>10} {:>12} {:>10} {:>8}",

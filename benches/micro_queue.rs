@@ -1,13 +1,16 @@
 //! Micro-benchmark: invocation-queue operations (L3 hot path).
 //!
-//! DESIGN.md §7 target: queue ops ≥ 100k/s so the Bedrock substitute is
+//! DESIGN.md §8 target: queue ops ≥ 100k/s so the Bedrock substitute is
 //! never the bottleneck at the paper's tens-of-events/s scale.  Measures
-//! publish / scan-take / warm-scan / ack under empty, deep, and
-//! contended conditions.
+//! publish / scan-take / warm-scan / ack under empty, deep, mixed-class,
+//! and contended conditions, and writes the rates to `BENCH_queue.json`
+//! (flat `op name → ops/s`) so perf PRs leave a machine-readable
+//! trajectory (see EXPERIMENTS.md §Perf).
 
 mod common;
 
 use hardless::events::{EventSpec, Invocation};
+use hardless::json::Json;
 use hardless::queue::{InvocationQueue, MemQueue, TakeFilter};
 use hardless::util::clock::ScaledClock;
 use hardless::util::SimTime;
@@ -21,54 +24,118 @@ fn inv(i: usize, runtime: &str) -> Invocation {
     )
 }
 
-fn measure(name: &str, total_ops: usize, f: impl FnOnce()) -> f64 {
+fn measure(
+    results: &mut Vec<(&'static str, f64)>,
+    name: &'static str,
+    total_ops: usize,
+    f: impl FnOnce(),
+) -> f64 {
     let t0 = Instant::now();
     f();
     let dt = t0.elapsed().as_secs_f64();
     let rate = total_ops as f64 / dt;
     println!("{name:<44} {:>12.0} ops/s ({total_ops} ops in {dt:.3}s)", rate);
+    results.push((name, rate));
     rate
 }
 
 fn main() -> anyhow::Result<()> {
     common::banner("micro — invocation queue throughput (target ≥ 100k ops/s)");
     let n = 100_000;
+    let mut results: Vec<(&'static str, f64)> = Vec::new();
 
     // publish throughput
     let q = MemQueue::new(ScaledClock::realtime());
-    let publish_rate = measure("publish (empty -> deep queue)", n, || {
+    let publish_rate = measure(&mut results, "publish (empty -> deep queue)", n, || {
         for i in 0..n {
             q.publish(inv(i, "a")).unwrap();
         }
     });
 
     // take+ack throughput, FIFO match at head
-    let take_rate = measure("take+ack (head match)", n, || {
+    let take_rate = measure(&mut results, "take+ack (head match)", n, || {
         let f = TakeFilter::supporting(vec!["a".into()]);
         while let Some(lease) = q.take(&f).unwrap() {
             q.ack(&lease.invocation.id).unwrap();
         }
     });
 
-    // worst-case scan: deep queue of unmatched work, probe misses
+    // worst case for the old scan: deep queue of unmatched work.  The
+    // per-class index answers the probe from the (absent) warm lane in
+    // O(1), independent of depth — the headline number of the indexed
+    // rebuild (was a full 10k-element scan per probe).
     let q2 = MemQueue::new(ScaledClock::realtime());
     for i in 0..10_000 {
         q2.publish(inv(i, "other")).unwrap();
     }
-    let probes = 2_000;
-    let scan_rate = measure("warm-reuse probe miss (scan 10k-deep queue)", probes, || {
-        let f = TakeFilter::warm_reuse("a");
-        for _ in 0..probes {
-            assert!(q2.take(&f).unwrap().is_none());
-        }
-    });
+    let probes = 200_000;
+    let scan_rate = measure(
+        &mut results,
+        "warm-reuse probe miss (scan 10k-deep queue)",
+        probes,
+        || {
+            let f = TakeFilter::warm_reuse("a");
+            for _ in 0..probes {
+                assert!(q2.take(&f).unwrap().is_none());
+            }
+        },
+    );
+
+    // mixed-class deep queue: 10k events spread over 64 runtime classes,
+    // a node supporting 4 of them with one warm — the index must pay for
+    // candidate lanes only, never the other 60.
+    let q4 = MemQueue::new(ScaledClock::realtime());
+    let depth = 10_000;
+    for i in 0..depth {
+        q4.publish(inv(i, &format!("class-{}", i % 64))).unwrap();
+    }
+    let matched = (0..depth).filter(|i| i % 64 < 4).count();
+    let mixed_rate = measure(
+        &mut results,
+        "take+ack mixed-class (10k deep, 64 classes)",
+        matched,
+        || {
+            let f = TakeFilter::supporting((0..4).map(|c| format!("class-{c}")))
+                .with_warm(vec!["class-1".into()]);
+            let mut taken = 0;
+            while let Some(lease) = q4.take(&f).unwrap() {
+                q4.ack(&lease.invocation.id).unwrap();
+                taken += 1;
+            }
+            assert_eq!(taken, matched, "index must find exactly the 4 classes");
+        },
+    );
+
+    // batched wire-shaped path: publish_batch + take_batch + ack_batch in
+    // chunks of 256 (the shape a gateway/node pair puts on one RPC).
+    let q5 = MemQueue::new(ScaledClock::realtime());
+    let batch = 256;
+    let batch_rate = measure(
+        &mut results,
+        "publish/take/ack batched (256 per call)",
+        n,
+        || {
+            let f = TakeFilter::supporting(vec!["a".into()]);
+            let mut base = 0;
+            while base < n {
+                q5.publish_batch((base..base + batch).map(|i| inv(i, "a")).collect())
+                    .unwrap();
+                let leases = q5.take_batch(&f, batch).unwrap();
+                assert_eq!(leases.len(), batch);
+                let ids: Vec<String> =
+                    leases.into_iter().map(|l| l.invocation.id).collect();
+                q5.ack_batch(&ids).unwrap();
+                base += batch;
+            }
+        },
+    );
 
     // contended: 8 threads sharing one queue
     let q3 = std::sync::Arc::new(MemQueue::new(ScaledClock::realtime()));
     for i in 0..n {
         q3.publish(inv(i, "a")).unwrap();
     }
-    let contended_rate = measure("take+ack, 8 threads contended", n, || {
+    let contended_rate = measure(&mut results, "take+ack, 8 threads contended", n, || {
         let mut handles = Vec::new();
         for _ in 0..8 {
             let q = q3.clone();
@@ -84,15 +151,29 @@ fn main() -> anyhow::Result<()> {
         }
     });
 
-    println!();
+    // machine-readable trajectory for future perf PRs
+    let mut out = Json::obj();
+    for (name, rate) in &results {
+        out = out.set(name, *rate);
+    }
+    std::fs::write("BENCH_queue.json", format!("{out}\n"))?;
+    println!("\nwrote BENCH_queue.json ({} ops)", results.len());
+
     for (name, rate) in [
         ("publish", publish_rate),
         ("take+ack", take_rate),
+        ("mixed-class", mixed_rate),
+        ("batched", batch_rate),
         ("contended", contended_rate),
     ] {
         anyhow::ensure!(rate > 100_000.0, "{name} below 100k ops/s: {rate:.0}");
     }
-    anyhow::ensure!(scan_rate > 1_000.0, "deep-scan probes below 1k/s: {scan_rate:.0}");
+    // Indexed probe target: the old full-scan implementation managed
+    // ~10-60k probes/s here; O(1) lane lookups must clear 1M/s (≥10×).
+    anyhow::ensure!(
+        scan_rate > 1_000_000.0,
+        "deep-queue probe misses below 1M/s: {scan_rate:.0} (index regression?)"
+    );
     println!("queue throughput targets PASSED");
     Ok(())
 }

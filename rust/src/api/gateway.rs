@@ -88,11 +88,14 @@ impl GatewayServer {
                     Ok((Json::obj().set("id", id), None))
                 }
                 "submit_batch" => {
-                    let mut ids = Vec::new();
+                    // One RPC, one tracking-lock hold, one queue
+                    // publish_batch — the whole batch is amortized.
+                    let mut specs = Vec::new();
                     for spec in params.arr_of("specs")? {
-                        let id = coordinator.submit(EventSpec::from_json(spec)?)?;
-                        ids.push(Json::Str(id));
+                        specs.push(EventSpec::from_json(spec)?);
                     }
+                    let ids = coordinator.submit_batch(specs)?;
+                    let ids = ids.into_iter().map(Json::Str).collect();
                     Ok((Json::obj().set("ids", Json::Arr(ids)), None))
                 }
                 "status" => {
@@ -230,6 +233,11 @@ impl RemoteClient {
         addr: impl std::net::ToSocketAddrs + std::fmt::Debug,
     ) -> Result<RemoteClient> {
         Ok(RemoteClient { rpc: RpcClient::connect(addr)? })
+    }
+
+    /// RPC round trips issued so far (batching assertions, diagnostics).
+    pub fn rpc_calls(&self) -> u64 {
+        self.rpc.calls_issued()
     }
 }
 

@@ -17,6 +17,12 @@ impl HardlessClient for Cluster {
         self.coordinator.submit(spec)
     }
 
+    fn submit_batch(&self, specs: Vec<EventSpec>) -> Result<Vec<String>> {
+        // One tracking-lock hold + one queue publish_batch, mirroring the
+        // gateway's single-RPC path.
+        self.coordinator.submit_batch(specs)
+    }
+
     fn status(&self, id: &str) -> Result<SubmissionStatus> {
         // `lookup` reads inflight + done under one lock hold, so the
         // three states are mutually exclusive snapshots.

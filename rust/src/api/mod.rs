@@ -132,7 +132,11 @@ pub trait HardlessClient: Send + Sync {
     /// paper's async-only execution model).
     fn submit(&self, spec: EventSpec) -> Result<String>;
 
-    /// Submit many events; one round trip on remote transports.
+    /// Submit many events.  Both transports amortize the whole batch:
+    /// one RPC on [`RemoteClient`] (asserted in
+    /// `rust/tests/integration_gateway.rs`) and one queue
+    /// `publish_batch` on the local impl.  The default falls back to
+    /// per-event submit.
     fn submit_batch(&self, specs: Vec<EventSpec>) -> Result<Vec<String>> {
         specs.into_iter().map(|s| self.submit(s)).collect()
     }

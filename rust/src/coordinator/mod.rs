@@ -166,6 +166,27 @@ impl Coordinator {
         Ok(id)
     }
 
+    /// Submit many events with one tracking-lock hold and one
+    /// `publish_batch` into the queue — the server side of the gateway's
+    /// single-RPC `submit_batch`.
+    pub(crate) fn submit_batch(&self, specs: Vec<EventSpec>) -> Result<Vec<String>> {
+        let now = self.clock.now();
+        let mut ids = Vec::with_capacity(specs.len());
+        let mut invs = Vec::with_capacity(specs.len());
+        {
+            let mut t = self.tracking.lock().expect("poisoned");
+            for spec in specs {
+                let id = next_id("inv");
+                invs.push(Invocation::new(&id, spec.clone(), now));
+                t.inflight.insert(id.clone(), spec);
+                ids.push(id);
+            }
+            t.submitted += ids.len();
+        }
+        self.queue.publish_batch(invs)?;
+        Ok(ids)
+    }
+
     pub fn submitted(&self) -> usize {
         self.tracking.lock().expect("poisoned").submitted
     }
@@ -287,6 +308,30 @@ mod tests {
         let lease = queue.take(&crate::queue::TakeFilter::default()).unwrap().unwrap();
         assert_eq!(lease.invocation.id, id);
         assert_eq!(lease.invocation.stamps.r_start, Some(SimTime::from_millis(500)));
+        c.shutdown();
+    }
+
+    #[test]
+    fn submit_batch_tracks_and_publishes_in_order() {
+        let (_clock, queue, c) = setup();
+        let ids = c
+            .submit_batch(
+                (0..5).map(|i| EventSpec::new("r", format!("d{i}"))).collect(),
+            )
+            .unwrap();
+        assert_eq!(ids.len(), 5);
+        assert_eq!(c.submitted(), 5);
+        assert_eq!(c.inflight_len(), 5);
+        assert_eq!(c.queue_stats().unwrap().queued, 5);
+        // delivery follows batch order
+        for id in &ids {
+            let lease = queue
+                .take(&crate::queue::TakeFilter::default())
+                .unwrap()
+                .unwrap();
+            assert_eq!(&lease.invocation.id, id);
+            queue.ack(id).unwrap();
+        }
         c.shutdown();
     }
 

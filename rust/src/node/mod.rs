@@ -191,7 +191,7 @@ fn manager_loop(
         let wall_wait = Duration::from_secs_f64(
             cfg.poll_interval.as_secs_f64() / deps.clock.scale(),
         );
-        let lease = match deps.queue.take_timeout(&filter, wall_wait) {
+        let first = match deps.queue.take_timeout(&filter, wall_wait) {
             Ok(Some(l)) => l,
             Ok(None) => continue,
             Err(e) => {
@@ -201,45 +201,75 @@ fn manager_loop(
             }
         };
 
-        let mut inv = lease.invocation;
-        inv.node = Some(cfg.id.clone());
-        inv.stamps.n_start = Some(deps.clock.now());
-
-        // Admission (deadline policies reject without executing).
-        if let Admission::Reject(reason) = deps.policy.admit(&inv, deps.clock.now()) {
-            inv.status = crate::events::Status::Failed(reason);
-            let _ = deps.queue.ack(&inv.id);
-            if let Err(e) = deps.completions.report(inv) {
-                log::warn!("node {}: completion report failed: {e:#}", cfg.id);
+        // Amortize dispatch: with work flowing, fill every remaining free
+        // slot from a single `take_batch` round trip (one RPC on remote
+        // queues) instead of one take per manager-loop turn.
+        let mut leases = vec![first];
+        let extra = registry.free_slots().saturating_sub(1);
+        if extra > 0 {
+            match deps.queue.take_batch(&filter, extra) {
+                Ok(more) => leases.extend(more),
+                Err(e) => log::warn!("node {}: take_batch failed: {e:#}", cfg.id),
             }
-            continue;
         }
 
-        // Assign an accelerator (§IV-C: node chooses among supporting
-        // devices; ours picks the least-loaded, preferring warm-capable).
-        let Some(slot) = worker::pick_slot(&registry, &pool, &inv.spec.runtime, lease.warm_hit)
-        else {
-            // Raced out of capacity: hand the event back untouched.
-            let _ = deps.queue.release(&inv.id);
-            deps.clock.sleep(cfg.poll_interval);
-            continue;
-        };
+        // Leases that could not be placed, in lease order.  Once one
+        // fails to place, the rest of the batch is handed back too (the
+        // optimistic free-slot count was stale) — released newest-first
+        // below, so the front-requeue's descending seqs leave the oldest
+        // lease frontmost and FIFO order survives the round trip.
+        let mut unplaced: Vec<String> = Vec::new();
+        for lease in leases {
+            if !unplaced.is_empty() {
+                unplaced.push(lease.invocation.id);
+                continue;
+            }
+            let mut inv = lease.invocation;
+            inv.node = Some(cfg.id.clone());
+            inv.stamps.n_start = Some(deps.clock.now());
 
-        let ctx = worker::WorkerCtx {
-            node_id: cfg.id.clone(),
-            pool: pool.clone(),
-            queue: deps.queue.clone(),
-            store: deps.store.clone(),
-            clock: deps.clock.clone(),
-            policy: deps.policy.clone(),
-            reserve: deps.reserve.clone(),
-            completions: deps.completions.clone(),
-        };
-        let worker = std::thread::Builder::new()
-            .name(format!("worker-{}", inv.id))
-            .spawn(move || worker::run_invocations(ctx, inv, slot))
-            .expect("spawn worker");
-        workers.push(worker);
+            // Admission (deadline policies reject without executing).
+            if let Admission::Reject(reason) = deps.policy.admit(&inv, deps.clock.now()) {
+                inv.status = crate::events::Status::Failed(reason);
+                let _ = deps.queue.ack(&inv.id);
+                if let Err(e) = deps.completions.report(inv) {
+                    log::warn!("node {}: completion report failed: {e:#}", cfg.id);
+                }
+                continue;
+            }
+
+            // Assign an accelerator (§IV-C: node chooses among supporting
+            // devices; ours picks the least-loaded, preferring warm-capable).
+            let Some(slot) =
+                worker::pick_slot(&registry, &pool, &inv.spec.runtime, lease.warm_hit)
+            else {
+                // Raced out of capacity: hand the event back untouched.
+                unplaced.push(inv.id);
+                continue;
+            };
+
+            let ctx = worker::WorkerCtx {
+                node_id: cfg.id.clone(),
+                pool: pool.clone(),
+                queue: deps.queue.clone(),
+                store: deps.store.clone(),
+                clock: deps.clock.clone(),
+                policy: deps.policy.clone(),
+                reserve: deps.reserve.clone(),
+                completions: deps.completions.clone(),
+            };
+            let worker = std::thread::Builder::new()
+                .name(format!("worker-{}", inv.id))
+                .spawn(move || worker::run_invocations(ctx, inv, slot))
+                .expect("spawn worker");
+            workers.push(worker);
+        }
+        if !unplaced.is_empty() {
+            for id in unplaced.iter().rev() {
+                let _ = deps.queue.release(id);
+            }
+            deps.clock.sleep(cfg.poll_interval);
+        }
     }
     for w in workers {
         let _ = w.join();

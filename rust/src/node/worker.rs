@@ -134,6 +134,9 @@ pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
 
     let mut inv = first;
     let mut warm = pooled.warm;
+    // Built once: the §IV-D same-configuration reuse query is issued after
+    // every completion, so keep it out of the drain loop.
+    let reuse_filter = TakeFilter::warm_reuse(&runtime);
     loop {
         inv.accelerator = Some(device.id.clone());
         inv.variant = Some(variant.clone());
@@ -156,7 +159,7 @@ pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
         // query whether the queue has invocations that have the same
         // configuration so that the worker node can reuse an existing
         // runtime instance."
-        match ctx.queue.take(&TakeFilter::warm_reuse(&runtime)) {
+        match ctx.queue.take(&reuse_filter) {
             Ok(Some(lease)) => {
                 let mut next = lease.invocation;
                 next.node = Some(ctx.node_id.clone());

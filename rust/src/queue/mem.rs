@@ -1,15 +1,30 @@
-//! In-process invocation queue engine.
+//! In-process invocation queue engine, indexed by runtime class.
 //!
-//! One `Mutex<Inner>` protects all state — contention is negligible at the
-//! paper's scale (tens of invocations/second across a handful of node
-//! managers; see `benches/micro_queue.rs` for the measured six-figure
-//! op/s headroom).
+//! One `Mutex<Inner>` protects all state — contention is negligible even
+//! at deep queue depths because every operation is index-backed (see
+//! `benches/micro_queue.rs`):
+//!
+//! * `queued` is a **per-runtime-class lane map**: each lane is a FIFO of
+//!   `(seq, invocation)` where `seq` is a global monotonic sequence
+//!   number.  A `take` compares the front seq of each candidate lane
+//!   (O(|filter.warm| + |filter.runtimes|)) instead of scanning the
+//!   whole queue; cross-class FIFO falls out of the seq tiebreak.
+//! * `order` is a `BTreeMap<seq, class>` mirror of everything queued —
+//!   the global FIFO head for match-any filters in O(log n), and ordered
+//!   diagnostics.
+//! * `deadlines` is a min-heap of `(deadline, id)` so `reap_expired` is
+//!   O(expired · log n) instead of a full in-flight scan; entries for
+//!   acked or re-leased invocations are pruned lazily on pop.
+//! * `generation` counts work arrivals (publish / release / reap
+//!   requeue) so `take_timeout` parks until *new* work shows up — a deep
+//!   queue of non-matching invocations no longer busy-spins the caller.
 
 use super::{InvocationQueue, Lease, QueueStats, TakeFilter};
 use crate::events::Invocation;
 use crate::util::{Clock, SimTime};
 use anyhow::{bail, Result};
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, HashSet, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -39,10 +54,27 @@ struct InFlight {
     attempt: u32,
 }
 
-#[derive(Default)]
+/// Midpoint of the sequence space: publishes count up from here, front
+/// requeues (release / lease expiry) count down — "front of the queue"
+/// is simply "smaller seq", with no renumbering ever needed.
+const SEQ_BASE: u64 = 1 << 62;
+
 struct Inner {
-    queued: VecDeque<Invocation>,
+    /// Per-runtime-class FIFO lanes of `(seq, invocation)`.  Lanes are
+    /// removed when empty, so every present lane has a front.
+    queued: HashMap<String, VecDeque<(u64, Invocation)>>,
+    /// Global FIFO mirror: seq → runtime class of every queued
+    /// invocation.  `order.len()` is the queue depth.
+    order: BTreeMap<u64, String>,
+    /// Next seq for a back-of-queue publish (ascending from SEQ_BASE).
+    next_seq: u64,
+    /// Next seq for a front requeue (descending from SEQ_BASE).
+    front_seq: u64,
     in_flight: HashMap<String, InFlight>,
+    /// Lease deadlines, lazily pruned: an entry whose id is no longer in
+    /// flight (acked) or whose deadline no longer matches (re-leased) is
+    /// skipped on pop.
+    deadlines: BinaryHeap<Reverse<(SimTime, String)>>,
     attempts: HashMap<String, u32>,
     dead: Vec<Invocation>,
     acked: usize,
@@ -50,6 +82,75 @@ struct Inner {
     /// publish (the scan-based check was O(n) per publish and collapsed
     /// deep-queue ingest to ~2.6k ops/s; see EXPERIMENTS.md §Perf).
     live_ids: HashSet<String>,
+    /// Bumped whenever work (re)appears.  `take_timeout` waits for this
+    /// to change instead of re-probing on "queue non-empty" — which
+    /// busy-spun when the queue held only non-matching work.
+    generation: u64,
+}
+
+impl Default for Inner {
+    fn default() -> Inner {
+        Inner {
+            queued: HashMap::new(),
+            order: BTreeMap::new(),
+            next_seq: SEQ_BASE,
+            front_seq: SEQ_BASE,
+            in_flight: HashMap::new(),
+            deadlines: BinaryHeap::new(),
+            attempts: HashMap::new(),
+            dead: Vec::new(),
+            acked: 0,
+            live_ids: HashSet::new(),
+            generation: 0,
+        }
+    }
+}
+
+impl Inner {
+    fn enqueue_back(&mut self, inv: Invocation) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.insert(seq, inv, false);
+    }
+
+    fn enqueue_front(&mut self, inv: Invocation) {
+        self.front_seq -= 1;
+        let seq = self.front_seq;
+        self.insert(seq, inv, true);
+    }
+
+    fn insert(&mut self, seq: u64, inv: Invocation, front: bool) {
+        self.order.insert(seq, inv.spec.runtime.clone());
+        let lane = self.queued.entry(inv.spec.runtime.clone()).or_default();
+        if front {
+            lane.push_front((seq, inv));
+        } else {
+            lane.push_back((seq, inv));
+        }
+        self.generation += 1;
+    }
+
+    /// Smallest front seq among the given classes' lanes — one
+    /// comparison per class, independent of queue depth.
+    fn min_front<'a>(
+        &self,
+        classes: impl Iterator<Item = &'a String>,
+    ) -> Option<(u64, String)> {
+        let mut best: Option<(u64, &String)> = None;
+        for rt in classes {
+            if let Some(lane) = self.queued.get(rt) {
+                let seq = lane.front().expect("lanes are never empty").0;
+                let better = match best {
+                    None => true,
+                    Some((s, _)) => seq < s,
+                };
+                if better {
+                    best = Some((seq, rt));
+                }
+            }
+        }
+        best.map(|(seq, rt)| (seq, rt.clone()))
+    }
 }
 
 /// In-memory [`InvocationQueue`] engine.
@@ -86,45 +187,40 @@ impl MemQueue {
         self.inner
             .lock()
             .expect("queue poisoned")
-            .queued
-            .iter()
-            .map(|i| i.spec.runtime.clone())
+            .order
+            .values()
+            .cloned()
             .collect()
     }
-}
 
-impl InvocationQueue for MemQueue {
-    fn publish(&self, inv: Invocation) -> Result<()> {
-        let mut inner = self.inner.lock().expect("queue poisoned");
-        if !inner.live_ids.insert(inv.id.clone()) {
-            bail!("duplicate invocation id {}", inv.id);
+    /// The scan-and-take under an already-held lock: warm lanes first
+    /// (earliest seq wins, §IV-D), then supported lanes, then — for the
+    /// match-any diagnostics filter — the global FIFO head.
+    fn take_locked(&self, inner: &mut Inner, filter: &TakeFilter) -> Option<Lease> {
+        let mut pick = inner
+            .min_front(filter.warm.iter())
+            .map(|(seq, rt)| (seq, rt, true));
+        if pick.is_none() && !filter.warm_only {
+            pick = if filter.runtimes.is_empty() {
+                inner
+                    .order
+                    .iter()
+                    .next()
+                    .map(|(&seq, rt)| (seq, rt.clone(), false))
+            } else {
+                inner
+                    .min_front(filter.runtimes.iter())
+                    .map(|(seq, rt)| (seq, rt, false))
+            };
         }
-        inner.queued.push_back(inv);
-        drop(inner);
-        self.available.notify_all();
-        Ok(())
-    }
-
-    fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>> {
-        let mut inner = self.inner.lock().expect("queue poisoned");
-        // Scan pass 1: earliest invocation whose runtime is warm here.
-        let warm_pos = inner
-            .queued
-            .iter()
-            .position(|inv| filter.accepts_warm(&inv.spec.runtime));
-        // Scan pass 2: earliest supported invocation at all.
-        let pos = match warm_pos {
-            Some(p) => Some((p, true)),
-            None => inner
-                .queued
-                .iter()
-                .position(|inv| filter.accepts_cold(&inv.spec.runtime))
-                .map(|p| (p, false)),
-        };
-        let Some((pos, warm_hit)) = pos else {
-            return Ok(None);
-        };
-        let invocation = inner.queued.remove(pos).expect("position valid");
+        let (seq, rt, warm_hit) = pick?;
+        let lane = inner.queued.get_mut(&rt).expect("picked lane exists");
+        let (popped_seq, invocation) = lane.pop_front().expect("picked lane non-empty");
+        debug_assert_eq!(popped_seq, seq, "lane front is the lane's min seq");
+        if lane.is_empty() {
+            inner.queued.remove(&rt);
+        }
+        inner.order.remove(&seq);
         let attempt = {
             let a = inner.attempts.entry(invocation.id.clone()).or_insert(0);
             *a += 1;
@@ -133,11 +229,67 @@ impl InvocationQueue for MemQueue {
         let deadline = SimTime(
             self.clock.now().as_micros() + self.config.visibility.as_micros() as u64,
         );
+        inner
+            .deadlines
+            .push(Reverse((deadline, invocation.id.clone())));
         inner.in_flight.insert(
             invocation.id.clone(),
             InFlight { invocation: invocation.clone(), deadline, attempt },
         );
-        Ok(Some(Lease { invocation, warm_hit, attempt }))
+        Some(Lease { invocation, warm_hit, attempt })
+    }
+
+    fn publish_locked(inner: &mut Inner, inv: Invocation) -> Result<()> {
+        if !inner.live_ids.insert(inv.id.clone()) {
+            bail!("duplicate invocation id {}", inv.id);
+        }
+        inner.enqueue_back(inv);
+        Ok(())
+    }
+}
+
+impl InvocationQueue for MemQueue {
+    fn publish(&self, inv: Invocation) -> Result<()> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        Self::publish_locked(&mut inner, inv)?;
+        drop(inner);
+        self.available.notify_all();
+        Ok(())
+    }
+
+    fn publish_batch(&self, invs: Vec<Invocation>) -> Result<()> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        // All-or-nothing: validate the whole batch against live ids (and
+        // against itself) before inserting anything.
+        let mut fresh = HashSet::new();
+        for inv in &invs {
+            if inner.live_ids.contains(&inv.id) || !fresh.insert(inv.id.as_str()) {
+                bail!("duplicate invocation id {} in batch", inv.id);
+            }
+        }
+        for inv in invs {
+            Self::publish_locked(&mut inner, inv).expect("batch pre-validated");
+        }
+        drop(inner);
+        self.available.notify_all();
+        Ok(())
+    }
+
+    fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        Ok(self.take_locked(&mut inner, filter))
+    }
+
+    fn take_batch(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.take_locked(&mut inner, filter) {
+                Some(lease) => out.push(lease),
+                None => break,
+            }
+        }
+        Ok(out)
     }
 
     fn ack(&self, invocation_id: &str) -> Result<()> {
@@ -145,6 +297,7 @@ impl InvocationQueue for MemQueue {
         if inner.in_flight.remove(invocation_id).is_none() {
             bail!("ack for unknown or expired lease: {invocation_id}");
         }
+        // The deadline-heap entry is pruned lazily by reap_expired.
         inner.attempts.remove(invocation_id);
         inner.live_ids.remove(invocation_id);
         inner.acked += 1;
@@ -160,7 +313,7 @@ impl InvocationQueue for MemQueue {
         if let Some(a) = inner.attempts.get_mut(invocation_id) {
             *a = a.saturating_sub(1);
         }
-        inner.queued.push_front(inflight.invocation);
+        inner.enqueue_front(inflight.invocation);
         drop(inner);
         self.available.notify_all();
         Ok(())
@@ -169,21 +322,28 @@ impl InvocationQueue for MemQueue {
     fn reap_expired(&self) -> Result<usize> {
         let now = self.clock.now();
         let mut inner = self.inner.lock().expect("queue poisoned");
-        let expired: Vec<String> = inner
-            .in_flight
-            .iter()
-            .filter(|(_, f)| f.deadline <= now)
-            .map(|(id, _)| id.clone())
-            .collect();
-        let n = expired.len();
-        for id in expired {
-            let f = inner.in_flight.remove(&id).expect("present");
+        let mut n = 0;
+        loop {
+            match inner.deadlines.peek() {
+                Some(Reverse((deadline, _))) if *deadline <= now => {}
+                _ => break,
+            }
+            let Reverse((deadline, id)) = inner.deadlines.pop().expect("just peeked");
+            match inner.in_flight.get(&id) {
+                // Stale entries: the lease was acked, or re-leased with a
+                // later deadline (that lease has its own heap entry).
+                None => continue,
+                Some(f) if f.deadline != deadline => continue,
+                Some(_) => {}
+            }
+            let f = inner.in_flight.remove(&id).expect("just checked");
+            n += 1;
             if f.attempt >= self.config.max_attempts {
                 inner.live_ids.remove(&id);
                 inner.dead.push(f.invocation);
             } else {
                 // Lost leases go to the *front*: they are the oldest work.
-                inner.queued.push_front(f.invocation);
+                inner.enqueue_front(f.invocation);
             }
         }
         if n > 0 {
@@ -199,31 +359,35 @@ impl InvocationQueue for MemQueue {
         wall_timeout: Duration,
     ) -> Result<Option<Lease>> {
         let deadline = std::time::Instant::now() + wall_timeout;
+        let mut inner = self.inner.lock().expect("queue poisoned");
         loop {
-            if let Some(lease) = self.take(filter)? {
+            if let Some(lease) = self.take_locked(&mut inner, filter) {
                 return Ok(Some(lease));
             }
-            let left = deadline.saturating_duration_since(std::time::Instant::now());
-            if left.is_zero() {
-                return Ok(None);
+            // Park until new work arrives (publish/release/reap bump the
+            // generation) or the timeout elapses.  The probe above and
+            // the wait below happen under one continuous lock hold, so a
+            // publish cannot slip between them; spurious wakeups re-wait
+            // unless the generation moved.
+            let gen = inner.generation;
+            while inner.generation == gen {
+                let left = deadline.saturating_duration_since(std::time::Instant::now());
+                if left.is_zero() {
+                    return Ok(None);
+                }
+                let (guard, _) = self
+                    .available
+                    .wait_timeout(inner, left)
+                    .expect("queue poisoned");
+                inner = guard;
             }
-            // Park until a publish/release/reap signals new work (or the
-            // timeout elapses).  Spurious wakeups just loop.
-            let guard = self.inner.lock().expect("queue poisoned");
-            if !guard.queued.is_empty() {
-                continue; // raced with a publisher between take() and lock
-            }
-            let _ = self
-                .available
-                .wait_timeout(guard, left.min(Duration::from_millis(50)))
-                .expect("queue poisoned");
         }
     }
 
     fn stats(&self) -> Result<QueueStats> {
         let inner = self.inner.lock().expect("queue poisoned");
         Ok(QueueStats {
-            queued: inner.queued.len(),
+            queued: inner.order.len(),
             in_flight: inner.in_flight.len(),
             acked: inner.acked,
             dead: inner.dead.len(),
@@ -256,6 +420,22 @@ mod tests {
         assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "1");
         assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "2");
         assert!(q.take(&f).unwrap().is_none());
+    }
+
+    #[test]
+    fn fifo_across_classes_by_publish_order() {
+        // The seq tiebreak: with both classes supported and neither warm,
+        // delivery follows global publish order, not lane order.
+        let (_c, q) = queue();
+        q.publish(inv("1", "b")).unwrap();
+        q.publish(inv("2", "a")).unwrap();
+        q.publish(inv("3", "b")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()]);
+        let got: Vec<String> = std::iter::from_fn(|| {
+            q.take(&f).unwrap().map(|l| l.invocation.id)
+        })
+        .collect();
+        assert_eq!(got, vec!["1", "2", "3"]);
     }
 
     #[test]
@@ -321,6 +501,20 @@ mod tests {
     }
 
     #[test]
+    fn released_work_beats_every_queued_class() {
+        // Front requeue must win the cross-class seq tiebreak too.
+        let (_c, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        q.publish(inv("2", "b")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()]);
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "1");
+        q.release("1").unwrap();
+        assert_eq!(q.queued_runtimes(), vec!["a", "b"], "released to the front");
+        assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "1");
+    }
+
+    #[test]
     fn visibility_timeout_requeues() {
         let (clock, q) = queue();
         q.publish(inv("1", "a")).unwrap();
@@ -351,10 +545,76 @@ mod tests {
     }
 
     #[test]
+    fn stale_heap_entries_do_not_reap_new_leases() {
+        // ack leaves its deadline-heap entry behind; a later lease of the
+        // same id must not be reaped through the stale entry.
+        let clock = TestClock::new();
+        let q = MemQueue::with_config(
+            clock.clone(),
+            QueueConfig { visibility: Duration::from_secs(1), max_attempts: 5 },
+        );
+        q.publish(inv("1", "a")).unwrap();
+        q.take(&TakeFilter::default()).unwrap().unwrap();
+        q.ack("1").unwrap();
+        // Same id is live again (allowed after ack), leased with a fresh
+        // deadline strictly later than the stale one.
+        clock.advance(Duration::from_millis(500));
+        q.publish(inv("1", "a")).unwrap();
+        q.take(&TakeFilter::default()).unwrap().unwrap();
+        // Past the stale deadline, before the live one: nothing reaps.
+        clock.advance(Duration::from_millis(700));
+        assert_eq!(q.reap_expired().unwrap(), 0);
+        assert_eq!(q.stats().unwrap().in_flight, 1);
+        // Past the live deadline: exactly one reap.
+        clock.advance(Duration::from_secs(1));
+        assert_eq!(q.reap_expired().unwrap(), 1);
+    }
+
+    #[test]
     fn duplicate_publish_rejected() {
         let (_c, q) = queue();
         q.publish(inv("1", "a")).unwrap();
         assert!(q.publish(inv("1", "a")).is_err());
+    }
+
+    #[test]
+    fn publish_batch_is_all_or_nothing() {
+        let (_c, q) = queue();
+        q.publish(inv("1", "a")).unwrap();
+        // batch colliding with a live id: nothing from it lands
+        assert!(q
+            .publish_batch(vec![inv("2", "a"), inv("1", "a")])
+            .is_err());
+        assert_eq!(q.stats().unwrap().queued, 1);
+        // batch colliding with itself: same
+        assert!(q
+            .publish_batch(vec![inv("3", "a"), inv("3", "a")])
+            .is_err());
+        assert_eq!(q.stats().unwrap().queued, 1);
+        // clean batch lands in order
+        q.publish_batch(vec![inv("4", "a"), inv("5", "b")]).unwrap();
+        assert_eq!(q.queued_runtimes(), vec!["a", "a", "b"]);
+    }
+
+    #[test]
+    fn take_batch_matches_repeated_takes() {
+        let (_c, q) = queue();
+        for i in 0..6 {
+            q.publish(inv(&format!("i{i}"), if i % 2 == 0 { "a" } else { "b" }))
+                .unwrap();
+        }
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_warm(vec!["b".into()]);
+        // warm lane first (i1, i3, i5), then cold in order (i0, i2)
+        let leases = q.take_batch(&f, 5).unwrap();
+        let ids: Vec<&str> = leases.iter().map(|l| l.invocation.id.as_str()).collect();
+        assert_eq!(ids, vec!["i1", "i3", "i5", "i0", "i2"]);
+        assert!(leases[0].warm_hit && leases[2].warm_hit && !leases[3].warm_hit);
+        // max respected; remainder still queued
+        assert_eq!(q.stats().unwrap().queued, 1);
+        let ids: Vec<String> = leases.into_iter().map(|l| l.invocation.id).collect();
+        q.ack_batch(&ids).unwrap();
+        assert_eq!(q.stats().unwrap().acked, 5);
     }
 
     #[test]
@@ -383,6 +643,33 @@ mod tests {
         all.dedup();
         assert_eq!(all.len(), 200, "every invocation delivered exactly once");
         assert_eq!(q.stats().unwrap().acked, 200);
+    }
+
+    #[test]
+    fn take_timeout_parks_on_unmatched_backlog() {
+        // Regression for the busy-spin: a deep queue of non-matching work
+        // must park the caller (and wake it when matching work arrives),
+        // not spin-probe until the deadline.
+        let (_c, q) = queue();
+        for i in 0..100 {
+            q.publish(inv(&format!("o{i}"), "other")).unwrap();
+        }
+        let q2 = q.clone();
+        let publisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(120));
+            q2.publish(inv("match", "a")).unwrap();
+        });
+        let t0 = std::time::Instant::now();
+        let lease = q
+            .take_timeout(
+                &TakeFilter::supporting(vec!["a".into()]),
+                Duration::from_secs(5),
+            )
+            .unwrap()
+            .expect("woken by the matching publish");
+        assert_eq!(lease.invocation.id, "match");
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        publisher.join().unwrap();
     }
 
     #[test]

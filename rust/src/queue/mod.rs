@@ -15,6 +15,8 @@
 //! dynamic-membership property).
 
 pub mod mem;
+#[cfg(test)]
+mod reference;
 pub mod remote;
 
 pub use mem::{MemQueue, QueueConfig};
@@ -23,16 +25,22 @@ pub use remote::{QueueClient, QueueServer};
 use crate::events::Invocation;
 use crate::json::Json;
 use anyhow::Result;
+use std::collections::HashSet;
 
 /// The node-side take query (paper's queue-scan contract).
+///
+/// Membership sets are [`HashSet`]s: `accepts_warm`/`accepts_cold` are
+/// the innermost test of the queue's indexed `take`, and the indexed
+/// engine iterates these sets directly (one min-seq comparison per
+/// member), so both the probe and the iteration are O(1) per runtime.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TakeFilter {
     /// Runtimes this node can execute (union over its accelerators).
     /// Empty = match any (used by diagnostics/drain tooling).
-    pub runtimes: Vec<String>,
+    pub runtimes: HashSet<String>,
     /// Runtimes with a warm instance on this node: matched **first**,
     /// regardless of queue position (cold-start avoidance).
-    pub warm: Vec<String>,
+    pub warm: HashSet<String>,
     /// Only take a warm match (the completion-time reuse query §IV-D).
     pub warm_only: bool,
 }
@@ -50,23 +58,28 @@ impl TakeFilter {
     /// The paper's "same configuration" reuse query.
     pub fn warm_reuse(runtime: &str) -> TakeFilter {
         TakeFilter {
-            runtimes: vec![],
-            warm: vec![runtime.to_string()],
+            runtimes: HashSet::new(),
+            warm: HashSet::from([runtime.to_string()]),
             warm_only: true,
         }
     }
 
     pub fn accepts_cold(&self, runtime: &str) -> bool {
-        !self.warm_only
-            && (self.runtimes.is_empty() || self.runtimes.iter().any(|r| r == runtime))
+        !self.warm_only && (self.runtimes.is_empty() || self.runtimes.contains(runtime))
     }
 
     pub fn accepts_warm(&self, runtime: &str) -> bool {
-        self.warm.iter().any(|r| r == runtime)
+        self.warm.contains(runtime)
     }
 
     pub fn to_json(&self) -> Json {
-        let arr = |v: &[String]| Json::Arr(v.iter().map(|s| Json::from(s.as_str())).collect());
+        // Sorted for a deterministic wire encoding (HashSet iteration
+        // order is arbitrary).
+        let arr = |v: &HashSet<String>| {
+            let mut items: Vec<&String> = v.iter().collect();
+            items.sort();
+            Json::Arr(items.into_iter().map(|s| Json::from(s.as_str())).collect())
+        };
         Json::obj()
             .set("runtimes", arr(&self.runtimes))
             .set("warm", arr(&self.warm))
@@ -74,7 +87,7 @@ impl TakeFilter {
     }
 
     pub fn from_json(j: &Json) -> Result<TakeFilter> {
-        let strs = |key: &str| -> Vec<String> {
+        let strs = |key: &str| -> HashSet<String> {
             j.get(key)
                 .and_then(|v| v.as_arr())
                 .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
@@ -114,14 +127,54 @@ pub trait InvocationQueue: Send + Sync {
     /// Publish a new invocation (client → queue).
     fn publish(&self, inv: Invocation) -> Result<()>;
 
+    /// Publish many invocations — one RPC on remote transports, one lock
+    /// hold in-memory.  [`MemQueue`] makes this all-or-nothing on
+    /// duplicate ids; the default falls back to per-invocation publish.
+    fn publish_batch(&self, invs: Vec<Invocation>) -> Result<()> {
+        for inv in invs {
+            self.publish(inv)?;
+        }
+        Ok(())
+    }
+
     /// Scan-and-take under `filter`. Returns a lease or `None` when no
     /// visible invocation matches.  Warm matches win over queue order;
     /// within a class, FIFO.
     fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>>;
 
+    /// Take up to `max` leases under `filter` in one call — delivery
+    /// order is exactly that of `max` consecutive [`take`](Self::take)s.
+    /// One RPC on remote transports, so a node manager can fill all of
+    /// its free accelerator slots per round trip.
+    fn take_batch(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.take(filter)? {
+                Some(lease) => out.push(lease),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
     /// Acknowledge completion (success or permanent failure) of a leased
     /// invocation — removes it from the queue entirely.
     fn ack(&self, invocation_id: &str) -> Result<()>;
+
+    /// Acknowledge many leases in one call (one RPC remotely).  Every id
+    /// is attempted; the first failure is returned after all are tried.
+    fn ack_batch(&self, invocation_ids: &[String]) -> Result<()> {
+        let mut first_err = None;
+        for id in invocation_ids {
+            if let Err(e) = self.ack(id) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
 
     /// Return a leased invocation to the queue (node shutting down,
     /// artifact missing, ...). Does not count against max_attempts.

@@ -1,0 +1,244 @@
+//! Queue-semantics equivalence: the indexed engine vs a reference scan
+//! model.
+//!
+//! The reference model is the pre-index implementation, kept verbatim
+//! simple: one `VecDeque`, two linear scans per take, a full in-flight
+//! scan per reap.  A property test drives identical random
+//! publish/take/ack/release/reap sequences through both and asserts
+//! identical delivery order, warm-hit flags, attempt counts, queue
+//! order, and stats at every step — the indexed rebuild must be
+//! observationally indistinguishable.
+
+use super::{InvocationQueue, MemQueue, QueueConfig, TakeFilter};
+use crate::events::{EventSpec, Invocation};
+use crate::prop;
+use crate::util::clock::TestClock;
+use crate::util::{Clock, SimTime};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::time::Duration;
+
+struct RefInFlight {
+    invocation: Invocation,
+    deadline: SimTime,
+    attempt: u32,
+}
+
+/// The original scan-based queue semantics, as a passive model (the
+/// caller passes `now` instead of a clock).
+struct ScanModel {
+    queued: VecDeque<Invocation>,
+    in_flight: HashMap<String, RefInFlight>,
+    attempts: HashMap<String, u32>,
+    dead: Vec<Invocation>,
+    acked: usize,
+    visibility: Duration,
+    max_attempts: u32,
+}
+
+impl ScanModel {
+    fn new(visibility: Duration, max_attempts: u32) -> ScanModel {
+        ScanModel {
+            queued: VecDeque::new(),
+            in_flight: HashMap::new(),
+            attempts: HashMap::new(),
+            dead: Vec::new(),
+            acked: 0,
+            visibility,
+            max_attempts,
+        }
+    }
+
+    fn publish(&mut self, inv: Invocation) {
+        self.queued.push_back(inv);
+    }
+
+    /// Two linear passes: earliest warm match, else earliest supported.
+    fn take(&mut self, filter: &TakeFilter, now: SimTime) -> Option<(String, bool, u32)> {
+        let warm_pos = self
+            .queued
+            .iter()
+            .position(|i| filter.accepts_warm(&i.spec.runtime));
+        let pos = match warm_pos {
+            Some(p) => Some((p, true)),
+            None => self
+                .queued
+                .iter()
+                .position(|i| filter.accepts_cold(&i.spec.runtime))
+                .map(|p| (p, false)),
+        };
+        let (pos, warm_hit) = pos?;
+        let invocation = self.queued.remove(pos).expect("position valid");
+        let attempt = {
+            let a = self.attempts.entry(invocation.id.clone()).or_insert(0);
+            *a += 1;
+            *a
+        };
+        let deadline =
+            SimTime(now.as_micros() + self.visibility.as_micros() as u64);
+        let id = invocation.id.clone();
+        self.in_flight
+            .insert(id.clone(), RefInFlight { invocation, deadline, attempt });
+        Some((id, warm_hit, attempt))
+    }
+
+    fn ack(&mut self, id: &str) -> bool {
+        if self.in_flight.remove(id).is_none() {
+            return false;
+        }
+        self.attempts.remove(id);
+        self.acked += 1;
+        true
+    }
+
+    fn release(&mut self, id: &str) -> bool {
+        let Some(f) = self.in_flight.remove(id) else {
+            return false;
+        };
+        if let Some(a) = self.attempts.get_mut(id) {
+            *a = a.saturating_sub(1);
+        }
+        self.queued.push_front(f.invocation);
+        true
+    }
+
+    /// Full scan, then requeue in ascending `(deadline, id)` order — the
+    /// deterministic order the indexed engine's min-heap pops in.
+    fn reap_expired(&mut self, now: SimTime) -> usize {
+        let mut expired: Vec<(SimTime, String)> = self
+            .in_flight
+            .iter()
+            .filter(|(_, f)| f.deadline <= now)
+            .map(|(id, f)| (f.deadline, id.clone()))
+            .collect();
+        expired.sort();
+        let n = expired.len();
+        for (_, id) in expired {
+            let f = self.in_flight.remove(&id).expect("present");
+            if f.attempt >= self.max_attempts {
+                self.dead.push(f.invocation);
+            } else {
+                self.queued.push_front(f.invocation);
+            }
+        }
+        n
+    }
+
+    /// (queued, in_flight, acked, dead)
+    fn stats(&self) -> (usize, usize, usize, usize) {
+        (self.queued.len(), self.in_flight.len(), self.acked, self.dead.len())
+    }
+
+    fn queued_runtimes(&self) -> Vec<String> {
+        self.queued.iter().map(|i| i.spec.runtime.clone()).collect()
+    }
+}
+
+/// Derive a filter from three random words: `runtimes` and `warm` are
+/// bit-subsets of {r0..r3} (empty runtimes = match-any), `warm_only`
+/// occasionally.
+fn filter_from(a: u64, b: u64, c: u64) -> TakeFilter {
+    let set = |bits: u64| -> HashSet<String> {
+        (0..4).filter(|i| bits & (1 << i) != 0).map(|i| format!("r{i}")).collect()
+    };
+    TakeFilter { runtimes: set(a), warm: set(b), warm_only: c % 3 == 0 }
+}
+
+fn inv(id: &str, runtime: &str) -> Invocation {
+    Invocation::new(id, EventSpec::new(runtime, "datasets/d"), SimTime(0))
+}
+
+#[test]
+fn property_indexed_queue_equals_scan_model() {
+    // Each op is 4 random words: (kind, a, b, c).
+    prop::check(
+        "indexed-queue-equals-scan-model",
+        40,
+        |rng| {
+            (0..rng.range(5, 80))
+                .map(|_| (rng.below(6), rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .collect::<Vec<(u64, u64, u64, u64)>>()
+        },
+        |ops| {
+            let clock = TestClock::new();
+            let cfg = QueueConfig {
+                visibility: Duration::from_secs(1),
+                max_attempts: 2,
+            };
+            let indexed = MemQueue::with_config(clock.clone(), cfg.clone());
+            let mut model = ScanModel::new(cfg.visibility, cfg.max_attempts);
+            // Ids handed out by takes, in order; acks/releases pick from
+            // here (may be stale after a reap — both sides must then
+            // agree the op fails).
+            let mut outstanding: Vec<String> = Vec::new();
+            for (step, &(kind, a, b, c)) in ops.iter().enumerate() {
+                match kind {
+                    // publish (twice as likely as the other ops)
+                    0 | 1 => {
+                        let rt = format!("r{}", a % 5); // r4 matches no filter
+                        let id = format!("p{step}");
+                        indexed.publish(inv(&id, &rt)).unwrap();
+                        model.publish(inv(&id, &rt));
+                    }
+                    // take under a random filter
+                    2 => {
+                        let f = filter_from(a, b, c);
+                        let got = indexed.take(&f).unwrap();
+                        let want = model.take(&f, clock.now());
+                        match (&got, &want) {
+                            (None, None) => {}
+                            (Some(lease), Some((id, warm, attempt))) => {
+                                if &lease.invocation.id != id
+                                    || lease.warm_hit != *warm
+                                    || lease.attempt != *attempt
+                                {
+                                    return false;
+                                }
+                                outstanding.push(id.clone());
+                            }
+                            _ => return false,
+                        }
+                    }
+                    // ack a previously-delivered id
+                    3 => {
+                        if outstanding.is_empty() {
+                            continue;
+                        }
+                        let id = outstanding.remove(a as usize % outstanding.len());
+                        if indexed.ack(&id).is_ok() != model.ack(&id) {
+                            return false;
+                        }
+                    }
+                    // release a previously-delivered id
+                    4 => {
+                        if outstanding.is_empty() {
+                            continue;
+                        }
+                        let id = outstanding.remove(a as usize % outstanding.len());
+                        if indexed.release(&id).is_ok() != model.release(&id) {
+                            return false;
+                        }
+                    }
+                    // advance time and reap
+                    _ => {
+                        clock.advance(Duration::from_millis(a % 1500));
+                        let n1 = indexed.reap_expired().unwrap();
+                        let n2 = model.reap_expired(clock.now());
+                        if n1 != n2 {
+                            return false;
+                        }
+                    }
+                }
+                // After every op: identical stats and identical global
+                // queue order (runtimes by position).
+                let s = indexed.stats().unwrap();
+                if (s.queued, s.in_flight, s.acked, s.dead) != model.stats() {
+                    return false;
+                }
+                if indexed.queued_runtimes() != model.queued_runtimes() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}

@@ -47,9 +47,27 @@ impl QueueServer {
                 backend.publish(inv)?;
                 Ok((Json::obj(), None))
             }
+            "publish_batch" => {
+                let mut invs = Vec::new();
+                for j in params.arr_of("invocations")? {
+                    invs.push(Invocation::from_json(j)?);
+                }
+                backend.publish_batch(invs)?;
+                Ok((Json::obj(), None))
+            }
             "take" => {
                 let filter = TakeFilter::from_json(params.req("filter")?)?;
                 Ok((lease_to_json(backend.take(&filter)?), None))
+            }
+            "take_batch" => {
+                let filter = TakeFilter::from_json(params.req("filter")?)?;
+                let max = params.usize_of("max")?;
+                let leases: Vec<Json> = backend
+                    .take_batch(&filter, max)?
+                    .into_iter()
+                    .map(|l| lease_to_json(Some(l)))
+                    .collect();
+                Ok((Json::obj().set("leases", Json::Arr(leases)), None))
             }
             "take_timeout" => {
                 // Server-side long poll: park on the backend (condvar on
@@ -68,6 +86,15 @@ impl QueueServer {
             }
             "ack" => {
                 backend.ack(params.str_of("id")?)?;
+                Ok((Json::obj(), None))
+            }
+            "ack_batch" => {
+                let ids: Vec<String> = params
+                    .arr_of("ids")?
+                    .iter()
+                    .filter_map(|j| j.as_str().map(String::from))
+                    .collect();
+                backend.ack_batch(&ids)?;
                 Ok((Json::obj(), None))
             }
             "release" => {
@@ -112,6 +139,11 @@ impl QueueClient {
     pub fn connect(addr: impl std::net::ToSocketAddrs + std::fmt::Debug) -> Result<QueueClient> {
         Ok(QueueClient { rpc: RpcClient::connect(addr)? })
     }
+
+    /// RPC round trips issued so far (batching assertions, diagnostics).
+    pub fn rpc_calls(&self) -> u64 {
+        self.rpc.calls_issued()
+    }
 }
 
 impl InvocationQueue for QueueClient {
@@ -121,11 +153,37 @@ impl InvocationQueue for QueueClient {
         Ok(())
     }
 
+    /// N publishes, one RPC.
+    fn publish_batch(&self, invs: Vec<Invocation>) -> Result<()> {
+        let arr = invs.iter().map(|i| i.to_json()).collect();
+        self.rpc.call(
+            "publish_batch",
+            Json::obj().set("invocations", Json::Arr(arr)),
+        )?;
+        Ok(())
+    }
+
     fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>> {
         let out = self
             .rpc
             .call("take", Json::obj().set("filter", filter.to_json()))?;
         lease_from_json(&out)
+    }
+
+    /// Up to `max` leases, one RPC — lets a node manager fill every free
+    /// slot per round trip instead of paying one RPC per lease.
+    fn take_batch(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        let out = self.rpc.call(
+            "take_batch",
+            Json::obj().set("filter", filter.to_json()).set("max", max),
+        )?;
+        let mut leases = Vec::new();
+        for j in out.arr_of("leases")? {
+            if let Some(lease) = lease_from_json(j)? {
+                leases.push(lease);
+            }
+        }
+        Ok(leases)
     }
 
     /// Remote long poll: chunked server-side blocking replaces the old
@@ -149,6 +207,17 @@ impl InvocationQueue for QueueClient {
 
     fn ack(&self, invocation_id: &str) -> Result<()> {
         self.rpc.call("ack", Json::obj().set("id", invocation_id))?;
+        Ok(())
+    }
+
+    /// N acks, one RPC.
+    fn ack_batch(&self, invocation_ids: &[String]) -> Result<()> {
+        let arr = invocation_ids
+            .iter()
+            .map(|id| Json::from(id.as_str()))
+            .collect();
+        self.rpc
+            .call("ack_batch", Json::obj().set("ids", Json::Arr(arr)))?;
         Ok(())
     }
 
@@ -283,6 +352,32 @@ mod tests {
             .take_timeout(&TakeFilter::default(), Duration::ZERO)
             .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn batch_ops_are_one_rpc_each() {
+        let (_s, q) = setup();
+        let before = q.rpc_calls();
+        q.publish_batch((0..16).map(|i| inv(&format!("i{i}"), "a")).collect())
+            .unwrap();
+        assert_eq!(q.rpc_calls() - before, 1, "publish_batch = one RPC");
+
+        let before = q.rpc_calls();
+        let leases = q
+            .take_batch(&TakeFilter::supporting(vec!["a".into()]), 16)
+            .unwrap();
+        assert_eq!(leases.len(), 16);
+        assert_eq!(q.rpc_calls() - before, 1, "take_batch = one RPC");
+        // FIFO order survives the wire
+        let ids: Vec<&str> = leases.iter().map(|l| l.invocation.id.as_str()).collect();
+        assert_eq!(ids[0], "i0");
+        assert_eq!(ids[15], "i15");
+
+        let before = q.rpc_calls();
+        let ids: Vec<String> = leases.into_iter().map(|l| l.invocation.id).collect();
+        q.ack_batch(&ids).unwrap();
+        assert_eq!(q.rpc_calls() - before, 1, "ack_batch = one RPC");
+        assert_eq!(q.stats().unwrap().acked, 16);
     }
 
     #[test]

@@ -191,13 +191,17 @@ mod tests {
         pool
     }
 
+    fn set(names: &[&str]) -> std::collections::HashSet<String> {
+        names.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn warm_first_filter_contents() {
         let reg = paper_all_accel();
         let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
         let f = WarmFirst.filter(&reg, &pool);
-        assert_eq!(f.runtimes, vec!["tinyyolo".to_string()]);
-        assert_eq!(f.warm, vec!["tinyyolo".to_string()]);
+        assert_eq!(f.runtimes, set(&["tinyyolo"]));
+        assert_eq!(f.warm, set(&["tinyyolo"]));
         assert!(!f.warm_only);
     }
 
@@ -230,11 +234,14 @@ mod tests {
         let pool = InstancePool::new(4);
         let policy = KindAffinity { kind: AcceleratorKind::Vpu };
         let f = policy.filter(&reg, &pool);
-        assert_eq!(f.runtimes, vec!["tinyyolo".to_string()]);
+        assert_eq!(f.runtimes, set(&["tinyyolo"]));
         // saturate the vpu -> falls back to warm-first over all devices
         let _slot = reg.get("vpu0").unwrap().try_acquire().unwrap();
         let f = policy.filter(&reg, &pool);
-        assert_eq!(f.runtimes, reg.supported_runtimes());
+        assert_eq!(
+            f.runtimes,
+            reg.supported_runtimes().into_iter().collect::<std::collections::HashSet<_>>()
+        );
     }
 
     #[test]

@@ -129,6 +129,10 @@ impl Drop for RpcServer {
 }
 
 fn serve_conn(mut stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) -> Result<()> {
+    // Clients disable Nagle at connect; mirror it on the accept side so
+    // small response frames (leases, acks) flush immediately instead of
+    // waiting out a delayed-ACK round.
+    stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -220,6 +224,8 @@ pub struct RpcClient {
     /// Set when a call died mid-frame: request/response framing may be
     /// desynchronized, so every later call fails fast until reconnect.
     broken: AtomicBool,
+    /// Wire round trips attempted (batching assertions, diagnostics).
+    calls: std::sync::atomic::AtomicU64,
 }
 
 impl RpcClient {
@@ -239,7 +245,14 @@ impl RpcClient {
             stream: Mutex::new(stream),
             read_timeout,
             broken: AtomicBool::new(false),
+            calls: std::sync::atomic::AtomicU64::new(0),
         })
+    }
+
+    /// How many RPC round trips this client has issued on the wire
+    /// (fast-failed calls on a broken connection are not counted).
+    pub fn calls_issued(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// Issue `method(params)`; returns the result value.
@@ -261,6 +274,7 @@ impl RpcClient {
         if self.broken.load(Ordering::SeqCst) {
             bail!("rpc {method}: connection is broken after an earlier mid-call failure; reconnect");
         }
+        self.calls.fetch_add(1, Ordering::Relaxed);
         match Self::exchange(&mut stream, method, params, blob) {
             Ok(x) => x,
             Err(e) => {

@@ -169,6 +169,38 @@ fn warm_and_cold_attribution_over_the_gateway() {
 }
 
 #[test]
+fn submit_batch_is_exactly_one_rpc() {
+    let d = deployment();
+    let client = RemoteClient::connect(d.gateway.addr()).unwrap();
+    let key = upload(&d, "img", &[1.0; 4]);
+
+    let before = client.rpc_calls();
+    let ids = client
+        .submit_batch((0..32).map(|_| EventSpec::new("tinyyolo", &key)).collect())
+        .unwrap();
+    assert_eq!(ids.len(), 32);
+    assert_eq!(
+        client.rpc_calls() - before,
+        1,
+        "a 32-event batch must cost one wire round trip, not 32"
+    );
+    // All 32 landed in the shared queue through one publish_batch.
+    assert_eq!(client.cluster_stats().unwrap().queue.queued, 32);
+
+    // The batch is fully tracked: a node can drain it and every id
+    // resolves to a terminal state.
+    let node = remote_node(&d, "rnode-1", 1.0);
+    for id in &ids {
+        let inv = client
+            .wait(id, Duration::from_secs(60))
+            .unwrap()
+            .expect("batched submission completes");
+        assert_eq!(inv.status, Status::Succeeded);
+    }
+    node.stop();
+}
+
+#[test]
 fn status_transitions_unknown_inflight_done() {
     let d = deployment();
     let client = RemoteClient::connect(d.gateway.addr()).unwrap();
