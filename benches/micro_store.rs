@@ -1,0 +1,170 @@
+//! Micro-benchmark: object-store data plane (L3 hot path).
+//!
+//! DESIGN.md §9: the per-invocation data path (dataset fetch) must be an
+//! Arc clone on the warm path, and concurrent cold starts on one key must
+//! coalesce into a single backing fetch.  Measures cold (miss+insert)
+//! gets, cached gets, an 8-thread single-flight stampede, and `put_cas`
+//! over a bundle-sized payload, and writes the rates to `BENCH_store.json`
+//! (flat `op name → ops/s`, the `BENCH_queue.json` schema) so perf PRs
+//! leave a machine-readable trajectory (see EXPERIMENTS.md §Perf).
+
+mod common;
+
+use hardless::json::Json;
+use hardless::store::{Blob, CachedStore, MemStore, ObjectStore};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// MemStore wrapper counting backing fetches (single-flight assertions).
+struct CountingStore {
+    inner: MemStore,
+    gets: AtomicU64,
+}
+
+impl CountingStore {
+    fn new() -> CountingStore {
+        CountingStore { inner: MemStore::new(), gets: AtomicU64::new(0) }
+    }
+}
+
+impl ObjectStore for CountingStore {
+    fn put(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+        self.inner.put(key, data)
+    }
+    fn get(&self, key: &str) -> anyhow::Result<Blob> {
+        self.gets.fetch_add(1, Ordering::SeqCst);
+        self.inner.get(key)
+    }
+    fn exists(&self, key: &str) -> anyhow::Result<bool> {
+        self.inner.exists(key)
+    }
+    fn delete(&self, key: &str) -> anyhow::Result<()> {
+        self.inner.delete(key)
+    }
+    fn list(&self, prefix: &str) -> anyhow::Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+}
+
+fn measure(
+    results: &mut Vec<(&'static str, f64)>,
+    name: &'static str,
+    total_ops: usize,
+    f: impl FnOnce(),
+) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = total_ops as f64 / dt;
+    println!("{name:<44} {:>12.0} ops/s ({total_ops} ops in {dt:.3}s)", rate);
+    results.push((name, rate));
+    rate
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("micro — store data plane (cold/cached get, single-flight, put_cas)");
+    let mut results: Vec<(&'static str, f64)> = Vec::new();
+    const MB: usize = 1024 * 1024;
+
+    // Cold gets: distinct keys, every get runs the miss path (backing
+    // fetch + LRU insert) of a 256 MiB-budget cache over MemStore.
+    let n_cold = 50_000;
+    let inner = Arc::new(MemStore::new());
+    let payload = vec![0xA5u8; 1024];
+    for i in 0..n_cold {
+        inner.put(&format!("datasets/cold-{i}"), &payload)?;
+    }
+    let cached = CachedStore::new(inner.clone(), 256 * MB);
+    let cold_rate = measure(&mut results, "get cold (miss + insert)", n_cold, || {
+        for i in 0..n_cold {
+            cached.get(&format!("datasets/cold-{i}")).unwrap();
+        }
+    });
+
+    // Cached gets: the warm path is a lock + two Arc clones — and the
+    // returned blobs must be pointer-equal (the zero-copy property).
+    let a = cached.get("datasets/cold-0")?;
+    let b = cached.get("datasets/cold-0")?;
+    anyhow::ensure!(Blob::ptr_eq(&a, &b), "cached gets must share one buffer");
+    let n_warm = 1_000_000;
+    // keys prebuilt outside the loop: measure the hit path, not format!
+    let warm_keys: Vec<String> = (0..64).map(|i| format!("datasets/cold-{i}")).collect();
+    let warm_rate = measure(&mut results, "get cached (hit)", n_warm, || {
+        for i in 0..n_warm {
+            cached.get(&warm_keys[i % 64]).unwrap();
+        }
+    });
+
+    // Single-flight stampede: 8 threads cold-start on the same fresh key
+    // each round; the backing store must see exactly one fetch per round.
+    let rounds = 200;
+    let threads = 8;
+    let counting = Arc::new(CountingStore::new());
+    let big = vec![0x5Au8; 64 * 1024];
+    for r in 0..rounds {
+        counting.put(&format!("datasets/stamp-{r}"), &big)?;
+    }
+    let stamp_cache = Arc::new(CachedStore::new(counting.clone(), 256 * MB));
+    let stampede_rate = measure(
+        &mut results,
+        "get stampede (8 threads, 1 fetch/key)",
+        rounds * threads,
+        || {
+            let barrier = Arc::new(Barrier::new(threads));
+            let mut handles = Vec::new();
+            for _ in 0..threads {
+                let cache = stamp_cache.clone();
+                let barrier = barrier.clone();
+                handles.push(std::thread::spawn(move || {
+                    for r in 0..rounds {
+                        barrier.wait();
+                        cache.get(&format!("datasets/stamp-{r}")).unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        },
+    );
+    let fetches = counting.gets.load(Ordering::SeqCst);
+    anyhow::ensure!(
+        fetches == rounds as u64,
+        "stampede coalescing broken: {fetches} backing fetches for {rounds} keys"
+    );
+    println!(
+        "single-flight: {} concurrent gets -> {fetches} backing fetches",
+        rounds * threads
+    );
+
+    // put_cas over a bundle-sized payload: dominated by SHA-256 + the
+    // table-driven hex encode; the second and later calls dedupe.
+    let bundle = vec![0x3Cu8; MB];
+    let cas_store = CachedStore::new(Arc::new(MemStore::new()), 256 * MB);
+    let n_cas = 100;
+    let cas_rate = measure(&mut results, "put_cas 1 MiB (dedupe)", n_cas, || {
+        for _ in 0..n_cas {
+            cas_store.put_cas(&bundle).unwrap();
+        }
+    });
+
+    // machine-readable trajectory for future perf PRs
+    let mut out = Json::obj();
+    for (name, rate) in &results {
+        out = out.set(name, *rate);
+    }
+    std::fs::write("BENCH_store.json", format!("{out}\n"))?;
+    println!("\nwrote BENCH_store.json ({} ops)", results.len());
+
+    for (name, rate, floor) in [
+        ("cold get", cold_rate, 100_000.0),
+        ("cached get", warm_rate, 1_000_000.0),
+        ("stampede", stampede_rate, 10_000.0),
+        ("put_cas", cas_rate, 20.0),
+    ] {
+        anyhow::ensure!(rate > floor, "{name} below {floor:.0} ops/s: {rate:.0}");
+    }
+    println!("store data-plane targets PASSED");
+    Ok(())
+}

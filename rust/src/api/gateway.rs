@@ -17,7 +17,7 @@ use crate::json::Json;
 use crate::metrics::MetricsHub;
 use crate::node::CompletionSink;
 use crate::queue::InvocationQueue;
-use crate::store::ObjectStore;
+use crate::store::{Blob, ObjectStore};
 use crate::util::Clock;
 use crate::wire::{poll_chunked, Handler, RpcClient, RpcServer, LONG_POLL_CHUNK};
 use anyhow::{anyhow, Result};
@@ -282,16 +282,16 @@ impl HardlessClient for RemoteClient {
         })
     }
 
-    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>> {
+    fn fetch_result(&self, id: &str) -> Result<Option<Blob>> {
         let (out, blob) =
             self.rpc
                 .call_blob("fetch_result", Json::obj().set("id", id), None)?;
         if out.is_null() {
             return Ok(None);
         }
-        Ok(Some(blob.ok_or_else(|| {
+        Ok(Some(Blob::from(blob.ok_or_else(|| {
             anyhow!("gateway fetch_result returned no payload")
-        })?))
+        })?)))
     }
 
     fn cluster_stats(&self) -> Result<ClusterStats> {

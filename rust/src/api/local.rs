@@ -7,7 +7,7 @@
 use super::{ClusterStats, HardlessClient, SubmissionStatus};
 use crate::coordinator::Cluster;
 use crate::events::{EventSpec, Invocation};
-use crate::store::ObjectStore;
+use crate::store::{Blob, ObjectStore};
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::Duration;
@@ -38,7 +38,7 @@ impl HardlessClient for Cluster {
         Ok(self.coordinator.wait_for(id, timeout))
     }
 
-    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>> {
+    fn fetch_result(&self, id: &str) -> Result<Option<Blob>> {
         match self.coordinator.lookup(id).1.and_then(|i| i.result_key) {
             Some(key) => Ok(Some(self.store.get(&key)?)),
             None => Ok(None),
@@ -46,7 +46,11 @@ impl HardlessClient for Cluster {
     }
 
     fn cluster_stats(&self) -> Result<ClusterStats> {
-        ClusterStats::gather(&self.coordinator)
+        let mut stats = ClusterStats::gather(&self.coordinator)?;
+        // In-process deployments see their nodes, so the node-local
+        // store-cache counters aggregate here (a remote gateway cannot).
+        stats.cache = self.node_cache_stats();
+        Ok(stats)
     }
 
     fn list_runtimes(&self) -> Result<Vec<String>> {
@@ -89,7 +93,7 @@ impl HardlessClient for LocalClient {
         HardlessClient::wait(&*self.cluster, id, timeout)
     }
 
-    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>> {
+    fn fetch_result(&self, id: &str) -> Result<Option<Blob>> {
         HardlessClient::fetch_result(&*self.cluster, id)
     }
 

@@ -26,6 +26,7 @@ pub use local::LocalClient;
 use crate::events::{EventSpec, Invocation};
 use crate::json::Json;
 use crate::queue::QueueStats;
+use crate::store::{Blob, CacheStats};
 use anyhow::Result;
 use std::time::Duration;
 
@@ -77,6 +78,11 @@ pub struct ClusterStats {
     pub succeeded: usize,
     pub failed: usize,
     pub queue: QueueStats,
+    /// Node-local store-cache counters, aggregated over live nodes.
+    /// Node caches are node-local state: the in-process `Cluster` can
+    /// aggregate them, a distributed gateway cannot see its remote nodes'
+    /// caches and reports zeros.
+    pub cache: CacheStats,
 }
 
 impl ClusterStats {
@@ -91,6 +97,7 @@ impl ClusterStats {
             succeeded: counts.succeeded,
             failed: counts.failed,
             queue: coordinator.queue_stats()?,
+            cache: CacheStats::default(),
         })
     }
 
@@ -105,9 +112,19 @@ impl ClusterStats {
             .set("queue_in_flight", self.queue.in_flight)
             .set("acked", self.queue.acked)
             .set("dead", self.queue.dead)
+            .set("cache_hits", self.cache.hits as usize)
+            .set("cache_misses", self.cache.misses as usize)
+            .set("cache_evictions", self.cache.evictions as usize)
+            .set("cache_coalesced", self.cache.coalesced as usize)
+            .set("cache_entries", self.cache.entries as usize)
+            .set("cache_bytes", self.cache.bytes as usize)
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterStats> {
+        // Cache counters parse leniently (default 0): they were added
+        // after the wire format shipped, and a gateway without node
+        // visibility omits nothing but sends zeros anyway.
+        let cache_u64 = |k: &str| j.usize_of(k).unwrap_or(0) as u64;
         Ok(ClusterStats {
             submitted: j.usize_of("submitted")?,
             inflight: j.usize_of("inflight")?,
@@ -119,6 +136,14 @@ impl ClusterStats {
                 in_flight: j.usize_of("queue_in_flight")?,
                 acked: j.usize_of("acked")?,
                 dead: j.usize_of("dead")?,
+            },
+            cache: CacheStats {
+                hits: cache_u64("cache_hits"),
+                misses: cache_u64("cache_misses"),
+                evictions: cache_u64("cache_evictions"),
+                coalesced: cache_u64("cache_coalesced"),
+                entries: cache_u64("cache_entries"),
+                bytes: cache_u64("cache_bytes"),
             },
         })
     }
@@ -149,7 +174,9 @@ pub trait HardlessClient: Send + Sync {
 
     /// Fetch the persisted result payload of a completed invocation.
     /// `None` until the invocation is terminal with a result object.
-    fn fetch_result(&self, id: &str) -> Result<Option<Vec<u8>>>;
+    /// Returned as a shared [`Blob`]: the local transport hands out the
+    /// store's buffer without copying.
+    fn fetch_result(&self, id: &str) -> Result<Option<Blob>>;
 
     /// Aggregate counters (submissions, completions, queue gauges).
     fn cluster_stats(&self) -> Result<ClusterStats>;
@@ -185,8 +212,38 @@ mod tests {
             succeeded: 7,
             failed: 1,
             queue: QueueStats { queued: 1, in_flight: 1, acked: 8, dead: 0 },
+            cache: CacheStats {
+                hits: 90,
+                misses: 3,
+                evictions: 1,
+                coalesced: 7,
+                entries: 2,
+                bytes: 4096,
+            },
         };
         assert_eq!(ClusterStats::from_json(&stats.to_json()).unwrap(), stats);
+    }
+
+    #[test]
+    fn cluster_stats_parses_without_cache_fields() {
+        // Lenient cache parsing: a stats payload predating the cache
+        // counters (or from a gateway with no node visibility) yields
+        // zeroed cache stats, not an error.
+        let stats = ClusterStats { submitted: 1, ..ClusterStats::default() };
+        let mut j = stats.to_json();
+        for k in [
+            "cache_hits",
+            "cache_misses",
+            "cache_evictions",
+            "cache_coalesced",
+            "cache_entries",
+            "cache_bytes",
+        ] {
+            j = j.set(k, Json::Null);
+        }
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert_eq!(parsed.cache, CacheStats::default());
+        assert_eq!(parsed.submitted, 1);
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::queue::{InvocationQueue, MemQueue, QueueConfig};
 use crate::runtime::instance::MockExecutor;
 use crate::runtime::{RuntimeBundle, RuntimeInstance};
 use crate::scheduler::{Policy, WarmFirst};
-use crate::store::{MemStore, ObjectStore};
+use crate::store::{CacheStats, MemStore, ObjectStore};
 use crate::util::clock::ScaledClock;
 use crate::util::Clock;
 use anyhow::Result;
@@ -50,6 +50,7 @@ pub struct ClusterBuilder {
     executor: ExecutorKind,
     nodes: Vec<(NodeConfig, DeviceRegistry)>,
     gauge_interval: Duration,
+    node_cache_bytes: Option<usize>,
 }
 
 impl ClusterBuilder {
@@ -61,7 +62,17 @@ impl ClusterBuilder {
             executor: ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) },
             nodes: Vec::new(),
             gauge_interval: Duration::from_secs(1),
+            node_cache_bytes: None,
         }
+    }
+
+    /// Per-node cache budget in bytes (0 disables caching).  The node's
+    /// raw-object cache and decoded-input cache each get this budget, so
+    /// worst-case memory is 2× per node.  When unset, nodes use the
+    /// [`NodeConfig`] default.
+    pub fn node_cache_bytes(mut self, bytes: usize) -> Self {
+        self.node_cache_bytes = Some(bytes);
+        self
     }
 
     /// Sim-time compression factor (DESIGN.md S6).
@@ -127,8 +138,12 @@ impl ClusterBuilder {
             housekeeper: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
             gauge_interval: self.gauge_interval,
+            node_cache_bytes: self.node_cache_bytes,
         };
-        for (cfg, registry) in self.nodes {
+        for (mut cfg, registry) in self.nodes {
+            if let Some(bytes) = cluster.node_cache_bytes {
+                cfg.cache_bytes = bytes;
+            }
             cluster.spawn_node_inner(cfg, registry)?;
         }
         cluster.start_housekeeping();
@@ -155,6 +170,7 @@ pub struct Cluster {
     housekeeper: Mutex<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
     gauge_interval: Duration,
+    node_cache_bytes: Option<usize>,
 }
 
 impl Cluster {
@@ -210,7 +226,11 @@ impl Cluster {
 
     /// Add a node at runtime (elastic scale-out).
     pub fn add_node(&self, id: &str, registry: DeviceRegistry) -> Result<()> {
-        self.spawn_node_inner(NodeConfig::new(id), registry)
+        let mut cfg = NodeConfig::new(id);
+        if let Some(bytes) = self.node_cache_bytes {
+            cfg.cache_bytes = bytes;
+        }
+        self.spawn_node_inner(cfg, registry)
     }
 
     /// Remove a node by id (elastic scale-in); its queued work remains for
@@ -247,6 +267,16 @@ impl Cluster {
             .iter()
             .map(|n| (n.id.clone(), n.pool_stats()))
             .collect()
+    }
+
+    /// Aggregate node-local store-cache counters over live nodes (the
+    /// `cluster_stats` cache view).
+    pub fn node_cache_stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for n in self.nodes.lock().expect("poisoned").iter() {
+            total.add(&n.cache_stats());
+        }
+        total
     }
 
     fn start_housekeeping(&mut self) {
@@ -299,6 +329,13 @@ impl Cluster {
     // surface.  Only deployment-shaped helpers remain inherent.
 
     /// Upload a dataset object; returns its key.
+    ///
+    /// Dataset names are **write-once by protocol contract**: this writes
+    /// through the shared store, not through the nodes' local caches, so
+    /// re-uploading an existing name is not visible to nodes that already
+    /// cached it.  Use a fresh name (the paper's protocol does — every
+    /// dataset is content-stable) or `cas`-style content addressing for
+    /// mutable workflows.
     pub fn upload_dataset(&self, name: &str, values: &[f32]) -> Result<String> {
         let key = crate::store::keys::dataset(name);
         let bytes: Vec<u8> = values.iter().flat_map(|f| f.to_le_bytes()).collect();
@@ -379,6 +416,25 @@ mod tests {
             records.iter().filter_map(|r| r.accel_kind()).collect();
         assert!(kinds.contains("gpu") && kinds.contains("vpu"), "{kinds:?}");
         assert!(!cluster.metrics.gauges().is_empty(), "housekeeping sampled gauges");
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn cluster_stats_surface_node_cache_counters() {
+        let cluster = mock_cluster();
+        let key = cluster.upload_dataset("img", &[1.0; 8]).unwrap();
+        for _ in 0..10 {
+            cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+        }
+        assert_eq!(cluster.drain(Duration::from_secs(60)), 0);
+        let stats = cluster.cluster_stats().unwrap();
+        assert_eq!(stats.cache.misses, 1, "one backing fetch ({:?})", stats.cache);
+        assert_eq!(
+            stats.cache.hits + stats.cache.coalesced,
+            9,
+            "the rest were node-local ({:?})",
+            stats.cache
+        );
         cluster.shutdown();
     }
 

@@ -62,7 +62,8 @@ fn app() -> App {
                 .opt("id", "node-1", "node id")
                 .opt("policy", "warm-first", "warm-first | fifo | deadline:<ms>")
                 .opt("engine", "pjrt", "pjrt | mock (mock needs no artifacts)")
-                .opt("duration-s", "30", "how long to serve before draining"),
+                .opt("duration-s", "30", "how long to serve before draining")
+                .opt("node-cache-mb", "256", "per-cache MiB budget for the node's raw-object and decoded-input caches (worst-case memory 2x this; 0 = disabled)"),
         )
         .command(
             Command::new("submit", "submit one event through the gateway")
@@ -283,7 +284,12 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
         reserve,
         completions,
     };
-    let node = spawn_node(NodeConfig::new(m.str_req("id")), registry, deps)?;
+    // Node-local content cache: repeated dataset fetches are served from
+    // memory instead of re-crossing the store TCP link per invocation.
+    let cache_mb: usize = m.parse_num("node-cache-mb").map_err(|e| anyhow::anyhow!(e))?;
+    let mut cfg = NodeConfig::new(m.str_req("id"));
+    cfg.cache_bytes = cache_mb * 1024 * 1024;
+    let node = spawn_node(cfg, registry, deps)?;
     let secs: u64 = m.parse_num("duration-s").map_err(|e| anyhow::anyhow!(e))?;
     let deadline = std::time::Instant::now() + Duration::from_secs(secs);
     let mut served = 0usize;
@@ -299,8 +305,12 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
             );
         }
     }
+    let cache = node.cache_stats();
     node.stop();
-    println!("node served {served} invocations, exiting");
+    println!(
+        "node served {served} invocations (store cache: {} hits, {} misses, {} coalesced, {} evictions), exiting",
+        cache.hits, cache.misses, cache.coalesced, cache.evictions
+    );
     Ok(())
 }
 

@@ -25,7 +25,7 @@ use crate::events::Invocation;
 use crate::queue::InvocationQueue;
 use crate::runtime::InstancePool;
 use crate::scheduler::{Admission, Policy};
-use crate::store::ObjectStore;
+use crate::store::{CacheStats, CachedStore, DecodedCache, ObjectStore};
 use crate::util::Clock;
 use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -79,6 +79,10 @@ pub struct NodeConfig {
     pub poll_interval: Duration,
     /// Max live runtime instances on this node (warm pool capacity).
     pub pool_capacity: usize,
+    /// Bytes budget for the node-local store cache (raw objects) and the
+    /// decoded-input cache (each gets this budget).  0 disables both and
+    /// every `get` goes to the backing store.
+    pub cache_bytes: usize,
 }
 
 impl NodeConfig {
@@ -87,6 +91,7 @@ impl NodeConfig {
             id: id.into(),
             poll_interval: Duration::from_millis(50),
             pool_capacity: 8,
+            cache_bytes: 256 * 1024 * 1024,
         }
     }
 }
@@ -109,6 +114,9 @@ pub struct NodeHandle {
     thread: Option<std::thread::JoinHandle<()>>,
     pool: Arc<InstancePool>,
     registry: DeviceRegistry,
+    /// The node-local store cache (None when `cache_bytes` was 0).
+    cache: Option<Arc<CachedStore>>,
+    decoded: Arc<DecodedCache>,
 }
 
 impl NodeHandle {
@@ -130,6 +138,16 @@ impl NodeHandle {
         self.pool.stats()
     }
 
+    /// Counters of the node-local store cache (zeros when disabled).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Counters of the node's decoded-input (bytes→f32) cache.
+    pub fn decoded_stats(&self) -> CacheStats {
+        self.decoded.stats()
+    }
+
     pub fn free_slots(&self) -> usize {
         self.registry.free_slots()
     }
@@ -146,23 +164,37 @@ impl Drop for NodeHandle {
     }
 }
 
-/// Start a node manager over `registry`.
-pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, deps: NodeDeps) -> Result<NodeHandle> {
+/// Start a node manager over `registry`.  When `cfg.cache_bytes` > 0 the
+/// node's store view is wrapped in a node-local [`CachedStore`]
+/// (read-through LRU + single-flight), and workers share a
+/// [`DecodedCache`] so each dataset is decoded to f32 once per node.
+pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps) -> Result<NodeHandle> {
     let stop = Arc::new(AtomicBool::new(false));
     let pool = InstancePool::new(cfg.pool_capacity);
+    let cache = if cfg.cache_bytes > 0 {
+        let c = Arc::new(CachedStore::new(deps.store.clone(), cfg.cache_bytes));
+        deps.store = c.clone() as Arc<dyn ObjectStore>;
+        Some(c)
+    } else {
+        None
+    };
+    let decoded = Arc::new(DecodedCache::new(cfg.cache_bytes));
     let handle_pool = pool.clone();
     let handle_registry = registry.clone();
+    let handle_decoded = decoded.clone();
     let stop2 = stop.clone();
     let id = cfg.id.clone();
     let thread = std::thread::Builder::new()
         .name(format!("node-mgr-{}", cfg.id))
-        .spawn(move || manager_loop(cfg, registry, pool, deps, stop2))?;
+        .spawn(move || manager_loop(cfg, registry, pool, deps, decoded, stop2))?;
     Ok(NodeHandle {
         id,
         stop,
         thread: Some(thread),
         pool: handle_pool,
         registry: handle_registry,
+        cache,
+        decoded: handle_decoded,
     })
 }
 
@@ -171,6 +203,7 @@ fn manager_loop(
     registry: DeviceRegistry,
     pool: Arc<InstancePool>,
     deps: NodeDeps,
+    decoded: Arc<DecodedCache>,
     stop: Arc<AtomicBool>,
 ) {
     let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -253,6 +286,7 @@ fn manager_loop(
                 pool: pool.clone(),
                 queue: deps.queue.clone(),
                 store: deps.store.clone(),
+                decoded: decoded.clone(),
                 clock: deps.clock.clone(),
                 policy: deps.policy.clone(),
                 reserve: deps.reserve.clone(),
@@ -455,6 +489,88 @@ mod tests {
             "with 4 slots and 6 events, at least 2 must reuse warm instances (got {warm_count})"
         );
         r.node.stop();
+    }
+
+    #[test]
+    fn dataset_fetched_and_decoded_once_across_invocations() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0; 16]);
+        // Warm the node with one invocation first: the decoded cache has
+        // no single-flight (cold concurrent decodes race benignly), so
+        // exact-count asserts need a populated cache before the burst.
+        submit(&r, "inv-warmup", &key);
+        let first = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(first.status, Status::Succeeded);
+        let n: u64 = 12;
+        for i in 1..n {
+            submit(&r, &format!("inv-{i}"), &key);
+        }
+        for _ in 1..n {
+            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(d.status, Status::Succeeded);
+        }
+        // The node-local cache collapses n dataset fetches into one
+        // backing read (the burst is all LRU hits)...
+        let cs = r.node.cache_stats();
+        assert_eq!(cs.misses, 1, "one backing fetch for {n} invocations ({cs:?})");
+        assert_eq!(
+            cs.hits + cs.coalesced,
+            n - 1,
+            "every other invocation was served node-locally ({cs:?})"
+        );
+        // ...and the bytes→f32 pass ran once per node, not per invocation.
+        let ds = r.node.decoded_stats();
+        assert_eq!(ds.misses, 1, "one decode ({ds:?})");
+        assert_eq!(ds.hits, n - 1, "{ds:?}");
+        r.node.stop();
+    }
+
+    #[test]
+    fn cache_disabled_when_budget_zero() {
+        // A zero budget must degrade to pass-through, not break execution.
+        let clock: Arc<ScaledClock> = ScaledClock::new(100.0);
+        let queue = MemQueue::new(clock.clone());
+        let store = Arc::new(MemStore::new());
+        let reserve = InstanceReserve::new();
+        let registry = paper_dualgpu();
+        for d in registry.devices() {
+            for variant in d.profile.runtimes.values() {
+                for _ in 0..d.profile.slots {
+                    reserve.add(
+                        RuntimeInstance::start(
+                            variant.clone(),
+                            d.id.clone(),
+                            MockExecutor::factory(2.0, Duration::from_millis(1)),
+                        )
+                        .unwrap(),
+                    );
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let deps = NodeDeps {
+            queue: queue.clone(),
+            store: store.clone(),
+            clock: clock.clone(),
+            policy: Arc::new(WarmFirst),
+            reserve,
+            completions: Arc::new(tx),
+        };
+        let mut cfg = NodeConfig::new("node-nocache");
+        cfg.cache_bytes = 0;
+        let node = spawn_node(cfg, registry, deps).unwrap();
+        let bytes: Vec<u8> = [1.0f32; 4].iter().flat_map(|f| f.to_le_bytes()).collect();
+        store.put("datasets/img", &bytes).unwrap();
+        let inv = Invocation::new(
+            "inv-nc",
+            EventSpec::new("tinyyolo", "datasets/img"),
+            clock.now(),
+        );
+        queue.publish(inv).unwrap();
+        let done = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(done.status, Status::Succeeded);
+        assert_eq!(node.cache_stats(), crate::store::CacheStats::default());
+        node.stop();
     }
 
     #[test]

@@ -16,7 +16,7 @@ use crate::postprocess;
 use crate::queue::{InvocationQueue, TakeFilter};
 use crate::runtime::{InstancePool, RuntimeInstance};
 use crate::scheduler::{warm_runtimes, Admission, Policy};
-use crate::store::{keys, ObjectStore};
+use crate::store::{keys, DecodedCache, ObjectStore};
 use crate::util::{Clock, Rng};
 use anyhow::{anyhow, Context, Result};
 use std::sync::Arc;
@@ -27,7 +27,12 @@ pub struct WorkerCtx {
     pub node_id: String,
     pub pool: Arc<InstancePool>,
     pub queue: Arc<dyn InvocationQueue>,
+    /// The node's store view — a node-local [`crate::store::CachedStore`]
+    /// when the cache is enabled (see [`crate::node::spawn_node`]).
     pub store: Arc<dyn ObjectStore>,
+    /// Node-wide bytes→f32 cache: the decode pass runs once per dataset
+    /// buffer per node, not once per invocation.
+    pub decoded: Arc<DecodedCache>,
     pub clock: Arc<dyn Clock>,
     pub policy: Arc<dyn Policy>,
     pub reserve: Arc<crate::node::InstanceReserve>,
@@ -188,16 +193,16 @@ fn execute_one(
     inv: &mut Invocation,
 ) -> Result<()> {
     // Fetch the dataset (stateless workloads fetch their inputs, §IV-A).
+    // Through the node's CachedStore this is an Arc clone on the warm
+    // path, and the decoded-input cache skips the bytes→f32 pass when the
+    // same buffer was already decoded on this node.
     let data = ctx
         .store
         .get(&inv.spec.dataset)
         .with_context(|| format!("dataset {}", inv.spec.dataset))?;
-    let input: Vec<f32> = data
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
+    let input = ctx.decoded.get_or_decode(&inv.spec.dataset, &data);
 
-    // Execute on the accelerator.
+    // Execute on the accelerator (shared buffer — no per-invocation copy).
     inv.stamps.e_start = Some(ctx.clock.now());
     let outcome = instance.exec(input)?;
 

@@ -6,7 +6,7 @@
 //! fetched and opened by node managers with [`RuntimeBundle::fetch`].
 
 use crate::json::Json;
-use crate::store::{keys, ObjectStore};
+use crate::store::{keys, Blob, ObjectStore};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -51,8 +51,9 @@ pub struct RuntimeBundle {
     pub weights: Vec<WeightSpec>,
     /// HLO text per artifact name.
     pub hlo_texts: BTreeMap<String, String>,
-    /// The dense little-endian f32 weight blob.
-    pub weight_blob: Vec<u8>,
+    /// The dense little-endian f32 weight blob (shared buffer: fetching
+    /// a bundle from a cached store keeps the store's allocation).
+    pub weight_blob: Blob,
 }
 
 impl RuntimeBundle {
@@ -102,7 +103,7 @@ impl RuntimeBundle {
             artifacts,
             weights,
             hlo_texts: BTreeMap::new(),
-            weight_blob: Vec::new(),
+            weight_blob: Blob::from(Vec::new()),
         })
     }
 
@@ -124,8 +125,10 @@ impl RuntimeBundle {
             .str_of("weights_file")
             .unwrap_or("weights.bin")
             .to_string();
-        bundle.weight_blob = std::fs::read(dir.join(&weights_file))
-            .with_context(|| format!("read {weights_file}"))?;
+        bundle.weight_blob = Blob::from(
+            std::fs::read(dir.join(&weights_file))
+                .with_context(|| format!("read {weights_file}"))?,
+        );
         bundle.validate()?;
         Ok(bundle)
     }
@@ -157,10 +160,10 @@ impl RuntimeBundle {
         let mut bundle = Self::parse_manifest(name, manifest)?;
         for art in bundle.artifacts.clone() {
             let text = store.get(&format!("{base}/{}.hlo.txt", art.name))?;
-            bundle
-                .hlo_texts
-                .insert(art.name.clone(), String::from_utf8(text).context("hlo not utf-8")?);
+            let text = std::str::from_utf8(&text).context("hlo not utf-8")?.to_string();
+            bundle.hlo_texts.insert(art.name.clone(), text);
         }
+        // shared buffer straight from the store (no copy)
         bundle.weight_blob = store.get(&format!("{base}/weights.bin"))?;
         bundle.validate()?;
         Ok(bundle)
@@ -254,7 +257,7 @@ mod tests {
         .unwrap();
         let mut b = RuntimeBundle::parse_manifest("m", manifest).unwrap();
         b.hlo_texts.insert("m-gpu".into(), "HloModule fake".into());
-        b.weight_blob = blob;
+        b.weight_blob = Blob::from(blob);
         b.validate().unwrap();
         b
     }

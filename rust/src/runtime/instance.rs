@@ -28,7 +28,7 @@ pub struct ExecOutcome {
 }
 
 enum Request {
-    Exec { input: Vec<f32>, reply: mpsc::Sender<Result<ExecOutcome>> },
+    Exec { input: Arc<Vec<f32>>, reply: mpsc::Sender<Result<ExecOutcome>> },
     Stop,
 }
 
@@ -101,11 +101,15 @@ impl RuntimeInstance {
         })
     }
 
-    /// Execute one payload (blocking until the instance replies).
-    pub fn exec(&self, input: Vec<f32>) -> Result<ExecOutcome> {
+    /// Execute one payload (blocking until the instance replies).  Takes
+    /// anything convertible to a shared buffer: a plain `Vec<f32>` (owned
+    /// call sites) or an `Arc<Vec<f32>>` straight from the node's
+    /// decoded-input cache — N workers executing one dataset send the
+    /// same allocation, never copies.
+    pub fn exec(&self, input: impl Into<Arc<Vec<f32>>>) -> Result<ExecOutcome> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Request::Exec { input, reply: reply_tx })
+            .send(Request::Exec { input: input.into(), reply: reply_tx })
             .map_err(|_| anyhow!("instance {} is stopped", self.variant))?;
         let out = reply_rx
             .recv()
@@ -220,6 +224,23 @@ mod tests {
             Ok(_) => panic!("start must fail"),
         };
         assert!(format!("{err}").contains("no such artifact"));
+    }
+
+    #[test]
+    fn exec_accepts_shared_input_without_copy() {
+        let inst = RuntimeInstance::start(
+            "mock-gpu",
+            "gpu0",
+            MockExecutor::factory(2.0, Duration::ZERO),
+        )
+        .unwrap();
+        // the decoded-cache shape: one Arc'd buffer, many executions
+        let shared = Arc::new(vec![1.0f32, 2.0]);
+        let a = inst.exec(shared.clone()).unwrap();
+        let b = inst.exec(shared.clone()).unwrap();
+        assert_eq!(a.output, vec![2.0, 4.0]);
+        assert_eq!(b.output, vec![2.0, 4.0]);
+        assert_eq!(inst.executions(), 2);
     }
 
     #[test]

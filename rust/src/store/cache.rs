@@ -1,0 +1,825 @@
+//! Node-local content cache with single-flight fetch — the data-plane
+//! answer to the ship-data-to-code anti-pattern (Berkeley View §4): under
+//! the paper's protocol the same TinyYOLO input is fetched thousands of
+//! times, so every node keeps a bounded read-through cache in front of
+//! the (possibly remote) object store.
+//!
+//! * [`CachedStore`] decorates any [`ObjectStore`]: `get` is served from
+//!   a bytes-budgeted LRU of shared [`Blob`]s (a hit is an `Arc` clone —
+//!   no copy, no RPC); concurrent cold-starts on one key coalesce into
+//!   exactly one backing fetch (waiters park on a condvar); `put`/`delete`
+//!   through the decorator invalidate, and an invalidation racing an
+//!   in-flight fetch poisons it so a stale buffer is never cached.
+//!   `cas/…` keys are content-addressed and therefore immutable — they
+//!   cache pinned (evicted only when nothing unpinned is left) and
+//!   `put_cas` seeds them without a read-back.
+//! * [`DecodedCache`] sits one layer up: workers decode dataset bytes to
+//!   `Arc<Vec<f32>>` once per distinct buffer per node, keyed by object
+//!   key and verified by buffer identity, so a cache-invalidated refetch
+//!   re-decodes while steady-state invocations skip the bytes→f32 pass
+//!   entirely.
+//!
+//! Caveat (documented contract, same as the paper's Minio): invalidation
+//! is local to writes issued *through this decorator*.  Datasets and
+//! results are write-once by protocol convention; a foreign writer
+//! mutating an object behind a node's cache is out of scope.
+
+use super::{hex_sha256, Blob, ObjectStore};
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Counters a cache exposes (surfaced through `cluster_stats`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// `get`s served from the cache (includes `put_cas` dedupe hits).
+    pub hits: u64,
+    /// `get`s that went to the backing store.
+    pub misses: u64,
+    /// Entries dropped to stay under the bytes budget.
+    pub evictions: u64,
+    /// `get`s that parked on another caller's in-flight fetch instead of
+    /// issuing their own (the single-flight win).
+    pub coalesced: u64,
+    /// Current entry count (gauge).
+    pub entries: u64,
+    /// Current cached bytes (gauge).
+    pub bytes: u64,
+}
+
+impl CacheStats {
+    /// Accumulate another cache's counters (cluster-level aggregation).
+    pub fn add(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.coalesced += other.coalesced;
+        self.entries += other.entries;
+        self.bytes += other.bytes;
+    }
+}
+
+struct Entry {
+    blob: Blob,
+    tick: u64,
+    pinned: bool,
+}
+
+#[derive(Default)]
+struct CacheState {
+    map: HashMap<String, Entry>,
+    /// Eviction order for unpinned entries (tick → key).
+    lru: BTreeMap<u64, String>,
+    /// Pinned (`cas/…`) entries, evicted only when `lru` is empty.
+    pinned_lru: BTreeMap<u64, String>,
+    tick: u64,
+    bytes: usize,
+    evictions: u64,
+}
+
+impl CacheState {
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Cache lookup; bumps recency on hit.
+    fn lookup(&mut self, key: &str) -> Option<Blob> {
+        let tick = self.next_tick();
+        let entry = self.map.get_mut(key)?;
+        let order = if entry.pinned { &mut self.pinned_lru } else { &mut self.lru };
+        // reuse the removed key String — this is the per-hit hot path
+        let owned = order.remove(&entry.tick).unwrap_or_else(|| key.to_string());
+        order.insert(tick, owned);
+        entry.tick = tick;
+        Some(entry.blob.clone())
+    }
+
+    fn remove(&mut self, key: &str) {
+        if let Some(e) = self.map.remove(key) {
+            self.bytes -= e.blob.len();
+            if e.pinned {
+                self.pinned_lru.remove(&e.tick);
+            } else {
+                self.lru.remove(&e.tick);
+            }
+        }
+    }
+
+    /// Insert `blob` under `key` and evict LRU-first until the budget
+    /// holds.  Oversized objects (> budget) are not cached at all.
+    fn insert(&mut self, key: &str, blob: Blob, pinned: bool, budget: usize) {
+        if blob.len() > budget {
+            return;
+        }
+        self.remove(key);
+        let tick = self.next_tick();
+        self.bytes += blob.len();
+        let order = if pinned { &mut self.pinned_lru } else { &mut self.lru };
+        order.insert(tick, key.to_string());
+        self.map.insert(key.to_string(), Entry { blob, tick, pinned });
+        while self.bytes > budget {
+            let victim = match self.lru.keys().next().copied() {
+                Some(t) => self.lru.remove(&t).expect("lru entry"),
+                // unpinned exhausted: pinned entries go too rather than
+                // blowing the budget
+                None => match self.pinned_lru.keys().next().copied() {
+                    Some(t) => self.pinned_lru.remove(&t).expect("pinned entry"),
+                    None => break,
+                },
+            };
+            let e = self.map.remove(&victim).expect("map entry");
+            self.bytes -= e.blob.len();
+            self.evictions += 1;
+        }
+    }
+}
+
+/// One in-flight backing fetch; waiters park on `cv` until the leader
+/// publishes into `done`.
+struct Flight {
+    done: Mutex<Option<std::result::Result<Blob, String>>>,
+    cv: Condvar,
+    /// Set by an invalidation (`put`/`delete`) racing this fetch: the
+    /// fetched bytes may be stale, so the leader must not cache them.
+    poisoned: AtomicBool,
+    /// Callers parked on this flight.  Incremented under the `inflight`
+    /// lock at registration, so a publisher holding that lock reads a
+    /// final count (lets `put_cas` skip materializing a payload nobody
+    /// will read).
+    waiters: AtomicU64,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight {
+            done: Mutex::new(None),
+            cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
+            waiters: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Read-through caching decorator over any [`ObjectStore`] backend.
+///
+/// Lock order (must never be reversed): `inflight` → `state`.
+pub struct CachedStore {
+    inner: Arc<dyn ObjectStore>,
+    budget: usize,
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+    state: Mutex<CacheState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+fn is_immutable(key: &str) -> bool {
+    key.starts_with("cas/")
+}
+
+impl CachedStore {
+    /// Wrap `inner` with a cache bounded to `budget_bytes` of payload.
+    pub fn new(inner: Arc<dyn ObjectStore>, budget_bytes: usize) -> CachedStore {
+        CachedStore {
+            inner,
+            budget: budget_bytes,
+            inflight: Mutex::new(HashMap::new()),
+            state: Mutex::new(CacheState::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let state = self.state.lock().expect("cache poisoned");
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: state.evictions,
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            entries: state.map.len() as u64,
+            bytes: state.bytes as u64,
+        }
+    }
+
+    /// Drop the cached entry for `key` and poison any fetch of it that is
+    /// currently in flight.
+    fn invalidate(&self, key: &str) {
+        let inflight = self.inflight.lock().expect("inflight poisoned");
+        if let Some(f) = inflight.get(key) {
+            f.poisoned.store(true, Ordering::SeqCst);
+        }
+        self.state.lock().expect("cache poisoned").remove(key);
+    }
+}
+
+enum Role {
+    Leader(Arc<Flight>),
+    Waiter(Arc<Flight>),
+}
+
+impl ObjectStore for CachedStore {
+    fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+        self.inner.put(key, data)?;
+        self.invalidate(key);
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Blob> {
+        loop {
+            // Fast path: cache hit without touching the single-flight
+            // table.
+            if let Some(b) = self.state.lock().expect("cache poisoned").lookup(key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(b);
+            }
+            let role = {
+                let mut inflight = self.inflight.lock().expect("inflight poisoned");
+                // Re-check under the table lock: a fetch may have
+                // completed between the fast path and here.
+                if let Some(b) = self.state.lock().expect("cache poisoned").lookup(key) {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(b);
+                }
+                match inflight.get(key) {
+                    Some(f) => {
+                        f.waiters.fetch_add(1, Ordering::SeqCst);
+                        Role::Waiter(f.clone())
+                    }
+                    None => {
+                        let f = Arc::new(Flight::new());
+                        inflight.insert(key.to_string(), f.clone());
+                        Role::Leader(f)
+                    }
+                }
+            };
+            match role {
+                Role::Leader(flight) => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let fetched = self.inner.get(key);
+                    let shared = match &fetched {
+                        Ok(b) => Ok(b.clone()),
+                        Err(e) => Err(format!("{e:#}")),
+                    };
+                    {
+                        // Publish under the table lock so an invalidation
+                        // either sees us in flight (and poisons) or sees
+                        // the cached entry (and removes it) — never
+                        // neither.
+                        let mut inflight =
+                            self.inflight.lock().expect("inflight poisoned");
+                        if let Ok(b) = &fetched {
+                            if !flight.poisoned.load(Ordering::SeqCst) {
+                                self.state.lock().expect("cache poisoned").insert(
+                                    key,
+                                    b.clone(),
+                                    is_immutable(key),
+                                    self.budget,
+                                );
+                            }
+                        }
+                        inflight.remove(key);
+                    }
+                    *flight.done.lock().expect("flight poisoned") = Some(shared);
+                    flight.cv.notify_all();
+                    return fetched;
+                }
+                Role::Waiter(flight) => {
+                    self.coalesced.fetch_add(1, Ordering::Relaxed);
+                    let mut done = flight.done.lock().expect("flight poisoned");
+                    while done.is_none() {
+                        done = flight.cv.wait(done).expect("flight poisoned");
+                    }
+                    let result = done.as_ref().expect("flight published").clone();
+                    drop(done);
+                    // A write invalidated this fetch while it was in
+                    // flight: its result may predate the write, and this
+                    // caller may have arrived strictly after the write
+                    // completed — retry against the backing store rather
+                    // than hand out a stale buffer.
+                    if flight.poisoned.load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    return match result {
+                        Ok(b) => Ok(b),
+                        Err(e) => bail!("coalesced fetch of {key} failed: {e}"),
+                    };
+                }
+            }
+        }
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        if self.state.lock().expect("cache poisoned").map.contains_key(key) {
+            return Ok(true);
+        }
+        self.inner.exists(key)
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.inner.delete(key)?;
+        self.invalidate(key);
+        Ok(())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+
+    // The decorator owns the CAS key derivation (the trait default's
+    // `cas/<sha256>` scheme) instead of delegating to `inner.put_cas`:
+    // the race-closing flight below must be registered under the key
+    // *before* the backing write, and the pinning logic (`is_immutable`)
+    // is keyed to the same `cas/` prefix.  Wrapping a backend with a
+    // custom CAS layout under this decorator is unsupported.  Costs one
+    // exists+put instead of StoreClient's single put_cas RPC — once per
+    // distinct bundle publish, not a hot path.
+    fn put_cas(&self, data: &[u8]) -> Result<String> {
+        let key = format!("cas/{}", hex_sha256(data));
+        if self.state.lock().expect("cache poisoned").lookup(&key).is_some() {
+            // content-addressed: a cached entry proves the store has it
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(key);
+        }
+        // Register in the single-flight table so a racing invalidation
+        // (delete of this cas key) poisons us instead of leaving a cache
+        // entry for an object the backing store no longer has.  If a get
+        // is already fetching this key, skip seeding — its leader will
+        // populate the cache.
+        let flight = {
+            let mut inflight = self.inflight.lock().expect("inflight poisoned");
+            match inflight.get(&key) {
+                Some(_) => None,
+                None => {
+                    let f = Arc::new(Flight::new());
+                    inflight.insert(key.clone(), f.clone());
+                    Some(f)
+                }
+            }
+        };
+        let stored: Result<()> = (|| {
+            if !self.inner.exists(&key)? {
+                self.inner.put(&key, data)?;
+            }
+            Ok(())
+        })();
+        if let Some(flight) = flight {
+            let blob = {
+                let mut inflight = self.inflight.lock().expect("inflight poisoned");
+                let cacheable = stored.is_ok()
+                    && !flight.poisoned.load(Ordering::SeqCst)
+                    && data.len() <= self.budget;
+                // Waiter registration happens under the `inflight` lock,
+                // and the flight leaves the table below while we still
+                // hold it — so this count is final.  Copy the payload
+                // into a shared Blob only if the cache or a waiter will
+                // actually hold it (an oversized bundle with no waiters
+                // costs no copy).
+                let waiters = flight.waiters.load(Ordering::SeqCst);
+                let blob = if cacheable || (stored.is_ok() && waiters > 0) {
+                    Some(Blob::from(data))
+                } else {
+                    None
+                };
+                if cacheable {
+                    // Immutable, so it pin-caches for free: no read-back
+                    // fetch needed.
+                    self.state.lock().expect("cache poisoned").insert(
+                        &key,
+                        blob.clone().expect("blob built when cacheable"),
+                        true,
+                        self.budget,
+                    );
+                }
+                inflight.remove(&key);
+                blob
+            };
+            // Any get that parked on our flight receives the content we
+            // just published (or the error).
+            *flight.done.lock().expect("flight poisoned") = Some(match (&stored, blob) {
+                (Ok(()), Some(b)) => Ok(b),
+                // zero registered waiters: this value is never read
+                (Ok(()), None) => Ok(Blob::from(Vec::new())),
+                (Err(e), _) => Err(format!("{e:#}")),
+            });
+            flight.cv.notify_all();
+        }
+        stored?;
+        Ok(key)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoded-input cache
+// ---------------------------------------------------------------------------
+
+struct DecodedEntry {
+    /// The source buffer the decode came from.  Holding the `Blob` keeps
+    /// its allocation alive, so pointer identity is a sound staleness
+    /// check: a refetched (invalidated) object can never alias it.
+    src: Blob,
+    data: Arc<Vec<f32>>,
+    /// Budget charge for this entry: decoded bytes plus the pinned
+    /// source buffer (which this entry keeps alive even if the raw cache
+    /// evicts it) — so the decoded budget bounds *total* retained bytes.
+    cost: usize,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct DecodedState {
+    map: HashMap<String, DecodedEntry>,
+    lru: BTreeMap<u64, String>,
+    tick: u64,
+    bytes: usize,
+    evictions: u64,
+}
+
+/// Bytes→f32 decode cache: one decode per distinct dataset buffer per
+/// node at steady state.  Keyed by object key, validated by
+/// source-buffer identity — feeding a different `Blob` under the same
+/// key re-decodes.
+///
+/// Deliberately no single-flight here: workers released simultaneously
+/// by a cold-start stampede may race one redundant decode each (pure
+/// bounded CPU, no I/O to coalesce); last insert wins and every later
+/// invocation shares that buffer.
+pub struct DecodedCache {
+    budget: usize,
+    state: Mutex<DecodedState>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl DecodedCache {
+    /// `budget_bytes` bounds the retained bytes: decoded payloads (4
+    /// bytes per f32) *plus* each entry's pinned source `Blob`, so the
+    /// documented per-node worst case (raw budget + decoded budget)
+    /// holds even when the raw cache has evicted a source buffer.
+    pub fn new(budget_bytes: usize) -> DecodedCache {
+        DecodedCache {
+            budget: budget_bytes,
+            state: Mutex::new(DecodedState::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let state = self.state.lock().expect("decoded cache poisoned");
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: state.evictions,
+            coalesced: 0,
+            entries: state.map.len() as u64,
+            bytes: state.bytes as u64,
+        }
+    }
+
+    /// Return the decoded f32 view of `raw`, decoding at most once per
+    /// distinct buffer.  The returned `Arc` is shared with every other
+    /// worker executing the same dataset.
+    pub fn get_or_decode(&self, key: &str, raw: &Blob) -> Arc<Vec<f32>> {
+        {
+            let mut state = self.state.lock().expect("decoded cache poisoned");
+            state.tick += 1;
+            let tick = state.tick;
+            if let Some(e) = state.map.get_mut(key) {
+                if Blob::ptr_eq(&e.src, raw) {
+                    let old_tick = e.tick;
+                    e.tick = tick;
+                    let data = e.data.clone();
+                    let owned = state
+                        .lru
+                        .remove(&old_tick)
+                        .unwrap_or_else(|| key.to_string());
+                    state.lru.insert(tick, owned);
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return data;
+                }
+            }
+        } // decode outside the lock
+        let decoded: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let data = Arc::new(decoded);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let cost = data.len() * 4 + raw.len();
+        if cost <= self.budget {
+            let mut state = self.state.lock().expect("decoded cache poisoned");
+            if let Some(old) = state.map.remove(key) {
+                state.bytes -= old.cost;
+                state.lru.remove(&old.tick);
+            }
+            state.tick += 1;
+            let tick = state.tick;
+            state.bytes += cost;
+            state.lru.insert(tick, key.to_string());
+            state.map.insert(
+                key.to_string(),
+                DecodedEntry { src: raw.clone(), data: data.clone(), cost, tick },
+            );
+            while state.bytes > self.budget {
+                let Some(t) = state.lru.keys().next().copied() else { break };
+                let victim = state.lru.remove(&t).expect("lru entry");
+                let e = state.map.remove(&victim).expect("map entry");
+                state.bytes -= e.cost;
+                state.evictions += 1;
+            }
+        }
+        data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{conformance, FsStore, MemStore};
+    use std::time::Duration;
+
+    const MB: usize = 1024 * 1024;
+
+    /// Counts (and optionally delays) backing fetches — the single-flight
+    /// assertions hang off this.
+    struct CountingStore {
+        inner: MemStore,
+        gets: AtomicU64,
+        delay: Duration,
+    }
+
+    impl CountingStore {
+        fn new(delay: Duration) -> CountingStore {
+            CountingStore { inner: MemStore::new(), gets: AtomicU64::new(0), delay }
+        }
+
+        fn fetches(&self) -> u64 {
+            self.gets.load(Ordering::SeqCst)
+        }
+    }
+
+    impl ObjectStore for CountingStore {
+        fn put(&self, key: &str, data: &[u8]) -> Result<()> {
+            self.inner.put(key, data)
+        }
+        fn get(&self, key: &str) -> Result<Blob> {
+            self.gets.fetch_add(1, Ordering::SeqCst);
+            let blob = self.inner.get(key);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            blob
+        }
+        fn exists(&self, key: &str) -> Result<bool> {
+            self.inner.exists(key)
+        }
+        fn delete(&self, key: &str) -> Result<()> {
+            self.inner.delete(key)
+        }
+        fn list(&self, prefix: &str) -> Result<Vec<String>> {
+            self.inner.list(prefix)
+        }
+    }
+
+    #[test]
+    fn conformance_over_memstore() {
+        let s = CachedStore::new(Arc::new(MemStore::new()), 64 * MB);
+        conformance::run_all(&s);
+    }
+
+    #[test]
+    fn conformance_over_fsstore() {
+        let dir = std::env::temp_dir()
+            .join(format!("hardless-cachedfs-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = CachedStore::new(Arc::new(FsStore::open(&dir).unwrap()), 64 * MB);
+        conformance::run_all(&s);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn conformance_with_tiny_budget_still_correct() {
+        // A budget too small to hold anything degrades to pass-through —
+        // semantics must not depend on residency.
+        let s = CachedStore::new(Arc::new(MemStore::new()), 8);
+        conformance::run_all(&s);
+    }
+
+    #[test]
+    fn hit_returns_pointer_equal_blob_without_refetch() {
+        let inner = Arc::new(CountingStore::new(Duration::ZERO));
+        let s = CachedStore::new(inner.clone(), 64 * MB);
+        s.put("datasets/x", b"payload").unwrap();
+        let a = s.get("datasets/x").unwrap();
+        let b = s.get("datasets/x").unwrap();
+        let c = s.get("datasets/x").unwrap();
+        assert!(Blob::ptr_eq(&a, &b) && Blob::ptr_eq(&b, &c), "hits share one buffer");
+        assert_eq!(inner.fetches(), 1, "one backing fetch for three gets");
+        let st = s.stats();
+        assert_eq!((st.misses, st.hits), (1, 2));
+        assert_eq!(st.entries, 1);
+        assert_eq!(st.bytes, 7);
+    }
+
+    #[test]
+    fn stampede_issues_exactly_one_backing_fetch() {
+        let inner = Arc::new(CountingStore::new(Duration::from_millis(100)));
+        inner.put("datasets/hot", &vec![7u8; 4096]).unwrap();
+        let s = Arc::new(CachedStore::new(inner.clone(), 64 * MB));
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let s = s.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                s.get("datasets/hot").unwrap()
+            }));
+        }
+        let blobs: Vec<Blob> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(inner.fetches(), 1, "8 concurrent cold gets must coalesce");
+        for b in &blobs[1..] {
+            assert!(Blob::ptr_eq(&blobs[0], b), "all callers share one buffer");
+        }
+        let st = s.stats();
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.coalesced, 7);
+    }
+
+    #[test]
+    fn coalesced_fetch_propagates_leader_error() {
+        let inner = Arc::new(CountingStore::new(Duration::from_millis(50)));
+        let s = Arc::new(CachedStore::new(inner.clone(), MB));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || s.get("nope/missing")));
+        }
+        for h in handles {
+            assert!(h.join().unwrap().is_err());
+        }
+        // errors are not cached: the next get fetches again
+        let before = inner.fetches();
+        assert!(s.get("nope/missing").is_err());
+        assert_eq!(inner.fetches(), before + 1);
+    }
+
+    #[test]
+    fn put_and_delete_invalidate() {
+        let inner = Arc::new(CountingStore::new(Duration::ZERO));
+        let s = CachedStore::new(inner.clone(), 64 * MB);
+        s.put("datasets/k", b"v1").unwrap();
+        assert_eq!(s.get("datasets/k").unwrap(), b"v1");
+        s.put("datasets/k", b"v2").unwrap();
+        assert_eq!(s.get("datasets/k").unwrap(), b"v2", "overwrite invalidates");
+        assert_eq!(inner.fetches(), 2, "second get refetches");
+        s.delete("datasets/k").unwrap();
+        assert!(s.get("datasets/k").is_err(), "delete invalidates");
+        assert!(!s.exists("datasets/k").unwrap());
+    }
+
+    #[test]
+    fn invalidation_racing_a_fetch_poisons_it() {
+        // Leader reads v1, then sleeps inside the backing get; the
+        // overwrite lands mid-fetch.  The stale v1 buffer must not be
+        // cached, so the next get sees v2.
+        let inner = Arc::new(CountingStore::new(Duration::from_millis(100)));
+        inner.put("datasets/r", b"v1").unwrap();
+        let s = Arc::new(CachedStore::new(inner.clone(), 64 * MB));
+        let s2 = s.clone();
+        let reader = std::thread::spawn(move || s2.get("datasets/r").unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        s.put("datasets/r", b"v2").unwrap();
+        let stale = reader.join().unwrap();
+        assert_eq!(stale, b"v1", "in-flight read returns what it fetched");
+        assert_eq!(
+            s.get("datasets/r").unwrap(),
+            b"v2",
+            "poisoned fetch must not populate the cache"
+        );
+    }
+
+    #[test]
+    fn lru_eviction_respects_bytes_budget() {
+        let inner = Arc::new(CountingStore::new(Duration::ZERO));
+        let s = CachedStore::new(inner.clone(), 100);
+        for k in ["a", "b", "c"] {
+            s.put(&format!("datasets/{k}"), &[0u8; 40]).unwrap();
+            s.get(&format!("datasets/{k}")).unwrap();
+        }
+        // 3 × 40 > 100: the oldest (a) was evicted
+        let st = s.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.entries, 2);
+        assert!(st.bytes <= 100);
+        let before = inner.fetches();
+        s.get("datasets/a").unwrap(); // miss → refetch
+        assert_eq!(inner.fetches(), before + 1);
+        s.get("datasets/c").unwrap(); // still resident
+        assert_eq!(inner.fetches(), before + 1);
+    }
+
+    #[test]
+    fn oversized_objects_bypass_the_cache() {
+        let inner = Arc::new(CountingStore::new(Duration::ZERO));
+        let s = CachedStore::new(inner.clone(), 100);
+        s.put("datasets/huge", &[1u8; 500]).unwrap();
+        s.get("datasets/huge").unwrap();
+        s.get("datasets/huge").unwrap();
+        assert_eq!(inner.fetches(), 2, "never cached");
+        assert_eq!(s.stats().entries, 0);
+    }
+
+    #[test]
+    fn cas_entries_pin_and_seed_without_fetch() {
+        let inner = Arc::new(CountingStore::new(Duration::ZERO));
+        let s = CachedStore::new(inner.clone(), 200);
+        let key = s.put_cas(&[9u8; 50]).unwrap();
+        // seeded by put_cas: the first get is already a hit
+        let a = s.get(&key).unwrap();
+        let b = s.get(&key).unwrap();
+        assert!(Blob::ptr_eq(&a, &b));
+        assert_eq!(inner.fetches(), 0, "cas reads never touched the backing store");
+        // re-publishing the same content is a pure cache hit
+        assert_eq!(s.put_cas(&[9u8; 50]).unwrap(), key);
+        // churn unpinned keys well past the budget: the pinned cas entry
+        // survives while unpinned entries cycle
+        for i in 0..6 {
+            let k = format!("datasets/churn-{i}");
+            s.put(&k, &[0u8; 60]).unwrap();
+            s.get(&k).unwrap();
+        }
+        assert!(Blob::ptr_eq(&a, &s.get(&key).unwrap()), "pinned entry survived churn");
+        assert_eq!(inner.fetches(), 6, "only the churn keys fetched");
+    }
+
+    #[test]
+    fn decoded_cache_decodes_once_per_buffer() {
+        let cache = DecodedCache::new(MB);
+        let raw: Vec<u8> = [1.0f32, 2.0, 3.0].iter().flat_map(|f| f.to_le_bytes()).collect();
+        let blob = Blob::from(raw);
+        let a = cache.get_or_decode("datasets/x", &blob);
+        let b = cache.get_or_decode("datasets/x", &blob);
+        assert_eq!(*a, vec![1.0, 2.0, 3.0]);
+        assert!(Arc::ptr_eq(&a, &b), "second call reuses the decode");
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn decoded_cache_redecodes_on_new_buffer() {
+        let cache = DecodedCache::new(MB);
+        let bytes = |v: f32| -> Blob {
+            Blob::from([v].iter().flat_map(|f| f.to_le_bytes()).collect::<Vec<u8>>())
+        };
+        let b1 = bytes(1.0);
+        let b2 = bytes(2.0);
+        let a = cache.get_or_decode("datasets/x", &b1);
+        assert_eq!(*a, vec![1.0]);
+        // same key, different buffer (e.g. after an overwrite+refetch)
+        let b = cache.get_or_decode("datasets/x", &b2);
+        assert_eq!(*b, vec![2.0], "stale decode must not be served");
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn decoded_cache_eviction_bounded_by_budget() {
+        // Each entry charges decoded bytes (16) + pinned source (16) = 32.
+        let budget = 2 * 32; // room for two entries
+        let cache = DecodedCache::new(budget);
+        for i in 0..4 {
+            let raw: Vec<u8> =
+                (0..4).flat_map(|j| ((i * 4 + j) as f32).to_le_bytes()).collect();
+            cache.get_or_decode(&format!("d/{i}"), &Blob::from(raw));
+        }
+        let st = cache.stats();
+        assert!(st.bytes as usize <= budget, "budget respected ({} bytes)", st.bytes);
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.evictions, 2);
+    }
+
+    #[test]
+    fn concurrent_mixed_load_is_consistent() {
+        let inner = Arc::new(CountingStore::new(Duration::ZERO));
+        let s = Arc::new(CachedStore::new(inner, 64 * MB));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50 {
+                    let key = format!("datasets/t{}-{}", t % 4, i % 10);
+                    s.put(&key, format!("{t}:{i}").as_bytes()).unwrap();
+                    let got = s.get(&key).unwrap();
+                    assert!(!got.is_empty());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

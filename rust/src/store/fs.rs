@@ -5,7 +5,7 @@
 //! [`super::validate_key`]).  Writes are atomic (temp file + rename) so a
 //! crashed node never leaves a half-written runtime bundle for others.
 
-use super::{validate_key, ObjectStore};
+use super::{validate_key, Blob, ObjectStore};
 use anyhow::{bail, Context, Result};
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -52,12 +52,13 @@ impl ObjectStore for FsStore {
         Ok(())
     }
 
-    fn get(&self, key: &str) -> Result<Vec<u8>> {
+    fn get(&self, key: &str) -> Result<Blob> {
         let path = self.path_of(key)?;
         if !path.is_file() {
             bail!("object not found: {key}");
         }
-        fs::read(&path).with_context(|| format!("read {path:?}"))
+        let bytes = fs::read(&path).with_context(|| format!("read {path:?}"))?;
+        Ok(Blob::from(bytes))
     }
 
     fn exists(&self, key: &str) -> Result<bool> {

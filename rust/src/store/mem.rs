@@ -1,14 +1,16 @@
 //! In-memory object store backend (tests + single-process experiments).
 
-use super::{validate_key, ObjectStore};
+use super::{validate_key, Blob, ObjectStore};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 use std::sync::RwLock;
 
 /// Thread-safe in-memory blob map with the full [`ObjectStore`] contract.
+/// Values are stored as shared [`Blob`]s, so `get` is a refcount bump —
+/// N workers reading one dataset share a single allocation.
 #[derive(Default)]
 pub struct MemStore {
-    map: RwLock<BTreeMap<String, Vec<u8>>>,
+    map: RwLock<BTreeMap<String, Blob>>,
 }
 
 impl MemStore {
@@ -42,11 +44,11 @@ impl ObjectStore for MemStore {
         self.map
             .write()
             .expect("memstore poisoned")
-            .insert(key.to_string(), data.to_vec());
+            .insert(key.to_string(), Blob::from(data));
         Ok(())
     }
 
-    fn get(&self, key: &str) -> Result<Vec<u8>> {
+    fn get(&self, key: &str) -> Result<Blob> {
         validate_key(key)?;
         match self.map.read().expect("memstore poisoned").get(key) {
             Some(v) => Ok(v.clone()),
@@ -114,6 +116,20 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(s.len(), 400);
+    }
+
+    #[test]
+    fn gets_share_one_allocation() {
+        let s = MemStore::new();
+        s.put("datasets/z", b"shared-bytes").unwrap();
+        let a = s.get("datasets/z").unwrap();
+        let b = s.get("datasets/z").unwrap();
+        assert!(Blob::ptr_eq(&a, &b), "per-get copies are gone");
+        s.put("datasets/z", b"new-bytes").unwrap();
+        let c = s.get("datasets/z").unwrap();
+        assert!(!Blob::ptr_eq(&a, &c), "overwrite installs a fresh buffer");
+        assert_eq!(a, b"shared-bytes", "old readers keep their snapshot");
+        assert_eq!(c, b"new-bytes");
     }
 
     #[test]

@@ -14,16 +14,108 @@
 //! Keys are namespaced by convention: `runtimes/...`, `datasets/...`,
 //! `results/...` (helpers below).
 
+pub mod cache;
 pub mod fs;
 pub mod mem;
 pub mod remote;
 
+pub use cache::{CacheStats, CachedStore, DecodedCache};
 pub use fs::FsStore;
 pub use mem::MemStore;
 pub use remote::{StoreClient, StoreServer};
 
 use anyhow::Result;
 use sha2::{Digest, Sha256};
+use std::sync::Arc;
+
+/// An immutable, cheaply cloneable byte buffer — the unit the data plane
+/// moves around.  Backed by `Arc<[u8]>`: cloning a `Blob` is a refcount
+/// bump, so a cached dataset can be handed to N workers (and to the wire
+/// writer) without copying the payload.  `Deref<Target = [u8]>` keeps
+/// call sites byte-slice-shaped.
+#[derive(Clone)]
+pub struct Blob(Arc<[u8]>);
+
+impl Blob {
+    /// True when `a` and `b` share the same underlying allocation (the
+    /// zero-copy property tests assert on).
+    pub fn ptr_eq(a: &Blob, b: &Blob) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.0
+    }
+
+    /// Copy out an owned `Vec<u8>` (boundary crossings that need one).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.0.to_vec()
+    }
+}
+
+impl std::ops::Deref for Blob {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl AsRef<[u8]> for Blob {
+    fn as_ref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl From<Vec<u8>> for Blob {
+    fn from(v: Vec<u8>) -> Blob {
+        Blob(v.into())
+    }
+}
+
+impl From<&[u8]> for Blob {
+    fn from(v: &[u8]) -> Blob {
+        Blob(v.into())
+    }
+}
+
+impl std::fmt::Debug for Blob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let head: Vec<u8> = self.0.iter().copied().take(8).collect();
+        write!(f, "Blob({} bytes, {head:02x?}..)", self.0.len())
+    }
+}
+
+impl PartialEq for Blob {
+    fn eq(&self, other: &Blob) -> bool {
+        self.0 == other.0
+    }
+}
+
+impl Eq for Blob {}
+
+impl PartialEq<[u8]> for Blob {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.0.as_ref() == other
+    }
+}
+
+impl PartialEq<&[u8]> for Blob {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.0.as_ref() == *other
+    }
+}
+
+impl<const N: usize> PartialEq<&[u8; N]> for Blob {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.0.as_ref() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<u8>> for Blob {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.0.as_ref() == other.as_slice()
+    }
+}
 
 /// Namespace helpers (bucket conventions).
 pub mod keys {
@@ -43,8 +135,10 @@ pub trait ObjectStore: Send + Sync {
     /// Store `data` under `key` (overwrites).
     fn put(&self, key: &str, data: &[u8]) -> Result<()>;
 
-    /// Fetch the object at `key`.
-    fn get(&self, key: &str) -> Result<Vec<u8>>;
+    /// Fetch the object at `key` as a shared immutable buffer.  Backends
+    /// that hold bytes in memory ([`MemStore`], [`CachedStore`]) hand out
+    /// clones of the same allocation — no per-get copy.
+    fn get(&self, key: &str) -> Result<Blob>;
 
     fn exists(&self, key: &str) -> Result<bool>;
 
@@ -66,16 +160,20 @@ pub trait ObjectStore: Send + Sync {
     }
 }
 
-/// Lowercase hex SHA-256 of `data`.
+/// Lowercase hex SHA-256 of `data`.  Hex via a static nibble table — this
+/// runs over multi-MB bundles on every `put_cas`, so no per-byte heap
+/// formatting.
 pub fn hex_sha256(data: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
     let mut h = Sha256::new();
     h.update(data);
     let out = h.finalize();
-    let mut s = String::with_capacity(64);
+    let mut s = Vec::with_capacity(64);
     for b in out {
-        s.push_str(&format!("{b:02x}"));
+        s.push(HEX[(b >> 4) as usize]);
+        s.push(HEX[(b & 0x0f) as usize]);
     }
-    s
+    String::from_utf8(s).expect("hex is ascii")
 }
 
 /// Validate a key: non-empty, no traversal, printable ascii subset.
@@ -103,6 +201,8 @@ pub(crate) mod conformance {
     pub fn run_all(store: &dyn ObjectStore) {
         put_get_roundtrip(store);
         overwrite(store);
+        overwrite_after_read(store);
+        delete_invalidates_reads(store);
         missing_get_errors(store);
         exists_and_delete(store);
         list_by_prefix(store);
@@ -120,6 +220,26 @@ pub(crate) mod conformance {
         s.put("datasets/ow", b"v1").unwrap();
         s.put("datasets/ow", b"v2").unwrap();
         assert_eq!(s.get("datasets/ow").unwrap(), b"v2");
+    }
+
+    /// Overwrite *after* a read: a caching decorator must invalidate what
+    /// the first `get` populated, never serve the stale buffer.
+    fn overwrite_after_read(s: &dyn ObjectStore) {
+        s.put("datasets/oar", b"old").unwrap();
+        assert_eq!(s.get("datasets/oar").unwrap(), b"old");
+        s.put("datasets/oar", b"new").unwrap();
+        assert_eq!(s.get("datasets/oar").unwrap(), b"new");
+    }
+
+    /// Delete after a read: the key must become a hard miss (not a cached
+    /// hit), and a later re-put must be visible.
+    fn delete_invalidates_reads(s: &dyn ObjectStore) {
+        s.put("tmp/di", b"v1").unwrap();
+        assert_eq!(s.get("tmp/di").unwrap(), b"v1");
+        s.delete("tmp/di").unwrap();
+        assert!(s.get("tmp/di").is_err(), "deleted key must not read back");
+        s.put("tmp/di", b"v2").unwrap();
+        assert_eq!(s.get("tmp/di").unwrap(), b"v2");
     }
 
     fn missing_get_errors(s: &dyn ObjectStore) {
@@ -174,6 +294,19 @@ pub(crate) mod conformance {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn blob_clone_is_zero_copy() {
+        let b = Blob::from(vec![1u8, 2, 3]);
+        let c = b.clone();
+        assert!(Blob::ptr_eq(&b, &c), "clone must share the allocation");
+        assert_eq!(b, c);
+        assert_eq!(b, &[1u8, 2, 3][..]);
+        assert_eq!(b.len(), 3);
+        let d = Blob::from(vec![1u8, 2, 3]);
+        assert_eq!(b, d, "value equality across allocations");
+        assert!(!Blob::ptr_eq(&b, &d), "distinct allocations");
+    }
 
     #[test]
     fn sha256_known_vector() {

@@ -5,7 +5,7 @@
 //! `StoreClient`.  Payloads travel as raw blob frames (no base64 overhead)
 //! — a dataset `get` is one round trip.
 
-use super::ObjectStore;
+use super::{Blob, ObjectStore};
 use crate::json::Json;
 use crate::wire::{Handler, RpcClient, RpcServer};
 use anyhow::{anyhow, Result};
@@ -83,9 +83,10 @@ impl ObjectStore for StoreClient {
         Ok(())
     }
 
-    fn get(&self, key: &str) -> Result<Vec<u8>> {
+    fn get(&self, key: &str) -> Result<Blob> {
         let (_, blob) = self.rpc.call_blob("get", Json::obj().set("key", key), None)?;
-        blob.ok_or_else(|| anyhow!("store get returned no payload"))
+        blob.map(Blob::from)
+            .ok_or_else(|| anyhow!("store get returned no payload"))
     }
 
     fn exists(&self, key: &str) -> Result<bool> {
@@ -129,6 +130,16 @@ mod tests {
     fn conformance_suite_over_tcp() {
         let (_server, client) = server();
         conformance::run_all(&client);
+    }
+
+    #[test]
+    fn conformance_suite_cached_over_tcp() {
+        // The node-deployment shape: CachedStore in front of a TCP store
+        // client must preserve the full contract (incl. invalidation).
+        let (_server, client) = server();
+        let cached =
+            crate::store::CachedStore::new(Arc::new(client), 64 * 1024 * 1024);
+        conformance::run_all(&cached);
     }
 
     #[test]

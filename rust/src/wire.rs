@@ -9,8 +9,9 @@
 //! too slow; they use a second raw frame (see [`write_blob`]).
 
 use crate::json::Json;
+use crate::store::Blob;
 use anyhow::{anyhow, bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -24,19 +25,48 @@ pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
 // Framing
 // ---------------------------------------------------------------------------
 
-/// Write one JSON frame.
+/// Write one JSON frame (allocates a fresh serialization buffer; the RPC
+/// hot paths use [`write_frame_buf`] with a reused one).
 pub fn write_frame(stream: &mut impl Write, v: &Json) -> Result<()> {
-    write_blob(stream, v.to_string().as_bytes())
+    let mut scratch = String::new();
+    write_frame_buf(stream, v, &mut scratch)
 }
 
-/// Write one raw frame (used for dataset/result payloads).
+/// Write one JSON frame, serializing into `scratch` (cleared, then
+/// reused) — no per-message `String` allocation on persistent
+/// connections.
+pub fn write_frame_buf(stream: &mut impl Write, v: &Json, scratch: &mut String) -> Result<()> {
+    use std::fmt::Write as _;
+    scratch.clear();
+    write!(scratch, "{v}").expect("fmt to String cannot fail");
+    write_blob(stream, scratch.as_bytes())
+}
+
+/// Write one raw frame (used for dataset/result payloads).  The length
+/// prefix and payload go out in a single vectored write — one syscall
+/// per frame instead of two, and no payload copy.
 pub fn write_blob(stream: &mut impl Write, data: &[u8]) -> Result<()> {
     let len = u32::try_from(data.len()).context("frame too large")?;
     if len > MAX_FRAME {
         bail!("frame of {len} bytes exceeds MAX_FRAME");
     }
-    stream.write_all(&len.to_le_bytes())?;
-    stream.write_all(data)?;
+    let header = len.to_le_bytes();
+    let total = header.len() + data.len();
+    let mut written = 0usize;
+    while written < total {
+        let res = if written < header.len() {
+            stream.write_vectored(&[IoSlice::new(&header[written..]), IoSlice::new(data)])
+        } else {
+            stream.write(&data[written - header.len()..])
+        };
+        match res {
+            Ok(0) => bail!("connection closed mid-frame ({written}/{total} bytes written)"),
+            Ok(n) => written += n,
+            // transparent retry, as write_all did before this loop
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
     stream.flush()?;
     Ok(())
 }
@@ -67,9 +97,11 @@ pub fn read_blob(stream: &mut impl Read) -> Result<Vec<u8>> {
 
 /// Handler invoked per request: `(method, params, blob)` → `(result, blob)`.
 /// `blob` carries raw payload bytes when the request/response has any
-/// (methods set `"blob": true` in their envelope).
+/// (methods set `"blob": true` in their envelope).  The response payload
+/// is a shared [`Blob`] so a handler can return a cached/stored buffer
+/// straight to the socket writer without copying it.
 pub type Handler =
-    Arc<dyn Fn(&str, &Json, Option<Vec<u8>>) -> Result<(Json, Option<Vec<u8>>)> + Send + Sync>;
+    Arc<dyn Fn(&str, &Json, Option<Vec<u8>>) -> Result<(Json, Option<Blob>)> + Send + Sync>;
 
 /// A TCP RPC server: one thread per connection, sequential requests per
 /// connection (the node-manager clients are themselves single-threaded
@@ -91,9 +123,18 @@ impl RpcServer {
         let accept_thread = std::thread::Builder::new()
             .name(format!("rpc-accept-{local}"))
             .spawn(move || {
+                // Exponential backoff while idle: an idle cluster runs
+                // gateway + queue + store accept loops, and three threads
+                // spinning at 2 ms would burn CPU for nothing.  Reset to
+                // the floor on any accept so bursts stay responsive; the
+                // 50 ms cap also bounds shutdown-join latency.
+                const IDLE_FLOOR: Duration = Duration::from_millis(2);
+                const IDLE_CAP: Duration = Duration::from_millis(50);
+                let mut idle_wait = IDLE_FLOOR;
                 while !stop2.load(Ordering::SeqCst) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            idle_wait = IDLE_FLOOR;
                             let h = handler.clone();
                             let stop3 = stop2.clone();
                             std::thread::spawn(move || {
@@ -101,7 +142,8 @@ impl RpcServer {
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
+                            std::thread::sleep(idle_wait);
+                            idle_wait = (idle_wait * 2).min(IDLE_CAP);
                         }
                         Err(_) => break,
                     }
@@ -134,6 +176,9 @@ fn serve_conn(mut stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) ->
     // waiting out a delayed-ACK round.
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // Response-serialization buffer, reused across this connection's
+    // requests.
+    let mut scratch = String::new();
     loop {
         if stop.load(Ordering::SeqCst) {
             return Ok(());
@@ -171,14 +216,14 @@ fn serve_conn(mut stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) ->
                     .set("ok", true)
                     .set("result", result)
                     .set("blob", out_blob.is_some());
-                write_frame(&mut stream, &resp)?;
+                write_frame_buf(&mut stream, &resp, &mut scratch)?;
                 if let Some(b) = out_blob {
                     write_blob(&mut stream, &b)?;
                 }
             }
             Err(e) => {
                 let resp = Json::obj().set("ok", false).set("error", format!("{e:#}"));
-                write_frame(&mut stream, &resp)?;
+                write_frame_buf(&mut stream, &resp, &mut scratch)?;
             }
         }
     }
@@ -217,9 +262,16 @@ pub fn poll_chunked<T>(
     }
 }
 
+/// The serialized state of one client connection: the socket plus a
+/// reused request-serialization buffer (no per-call `String`).
+struct ClientConn {
+    stream: TcpStream,
+    scratch: String,
+}
+
 /// Client side: a persistent connection issuing sequential requests.
 pub struct RpcClient {
-    stream: Mutex<TcpStream>,
+    conn: Mutex<ClientConn>,
     read_timeout: Duration,
     /// Set when a call died mid-frame: request/response framing may be
     /// desynchronized, so every later call fails fast until reconnect.
@@ -242,7 +294,7 @@ impl RpcClient {
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(read_timeout))?;
         Ok(RpcClient {
-            stream: Mutex::new(stream),
+            conn: Mutex::new(ClientConn { stream, scratch: String::new() }),
             read_timeout,
             broken: AtomicBool::new(false),
             calls: std::sync::atomic::AtomicU64::new(0),
@@ -267,7 +319,7 @@ impl RpcClient {
         params: Json,
         blob: Option<&[u8]>,
     ) -> Result<(Json, Option<Vec<u8>>)> {
-        let mut stream = self.stream.lock().expect("rpc client poisoned");
+        let mut conn = self.conn.lock().expect("rpc client poisoned");
         // Checked under the lock: a caller that was blocked on the mutex
         // while another thread's call died mid-frame must not write onto
         // the now-desynchronized stream.
@@ -275,7 +327,7 @@ impl RpcClient {
             bail!("rpc {method}: connection is broken after an earlier mid-call failure; reconnect");
         }
         self.calls.fetch_add(1, Ordering::Relaxed);
-        match Self::exchange(&mut stream, method, params, blob) {
+        match Self::exchange(&mut conn, method, params, blob) {
             Ok(x) => x,
             Err(e) => {
                 // IO failed mid-frame (server died, network partition, or
@@ -308,7 +360,7 @@ impl RpcClient {
     /// (connection stays healthy).
     #[allow(clippy::type_complexity)]
     fn exchange(
-        stream: &mut TcpStream,
+        conn: &mut ClientConn,
         method: &str,
         params: Json,
         blob: Option<&[u8]>,
@@ -317,7 +369,8 @@ impl RpcClient {
             .set("method", method)
             .set("params", params)
             .set("blob", blob.is_some());
-        write_frame(stream, &req)?;
+        let stream = &mut conn.stream;
+        write_frame_buf(stream, &req, &mut conn.scratch)?;
         if let Some(b) = blob {
             write_blob(stream, b)?;
         }
@@ -343,7 +396,7 @@ mod tests {
 
     fn echo_server() -> RpcServer {
         let handler: Handler = Arc::new(|method, params, blob| match method {
-            "echo" => Ok((params.clone(), blob)),
+            "echo" => Ok((params.clone(), blob.map(Blob::from))),
             "add" => {
                 let a = params.f64_of("a")?;
                 let b = params.f64_of("b")?;
@@ -423,6 +476,28 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn write_blob_survives_partial_writes() {
+        // A writer that accepts at most 3 bytes per call exercises every
+        // resume point of the vectored header+payload write.
+        struct Dribble(Vec<u8>);
+        impl Write for Dribble {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                let n = buf.len().min(3);
+                self.0.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let mut w = Dribble(Vec::new());
+        write_blob(&mut w, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(w.0);
+        assert_eq!(read_blob(&mut cursor).unwrap(), payload);
     }
 
     #[test]
