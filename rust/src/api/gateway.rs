@@ -11,6 +11,7 @@
 //! in-process ones.
 
 use super::{ClusterStats, HardlessClient, SubmissionStatus};
+use crate::autoscale::{AdvisoryExecutor, AutoscaleConfig, Autoscaler, Signals};
 use crate::coordinator::Coordinator;
 use crate::events::{EventSpec, Invocation};
 use crate::json::Json;
@@ -41,6 +42,13 @@ pub struct GatewayConfig {
     /// Housekeeping period (sim time): lease reaping + `#queued` gauge
     /// sampling (paper §V-A).
     pub housekeeping_interval: Duration,
+    /// Run the elasticity controller in **advisory** mode: the gateway
+    /// cannot provision remote nodes, so decisions move a virtual node
+    /// count (an [`AdvisoryExecutor`]), are logged, and surface in the
+    /// `stats` RPC's `autoscale` section — an operator or external
+    /// orchestrator watching `hardless status` acts on them.  The
+    /// controller ticks on the housekeeping interval.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for GatewayConfig {
@@ -48,6 +56,7 @@ impl Default for GatewayConfig {
         GatewayConfig {
             announce_runtimes: Vec::new(),
             housekeeping_interval: Duration::from_secs(1),
+            autoscale: None,
         }
     }
 }
@@ -78,9 +87,24 @@ impl GatewayServer {
         announce.sort();
         announce.dedup();
 
+        // Advisory elasticity controller (no node provisioning from the
+        // gateway; see GatewayConfig::autoscale).
+        let autoscale: Option<(Arc<Autoscaler>, Arc<AdvisoryExecutor>)> =
+            match config.autoscale.as_ref() {
+                Some(cfg) => {
+                    cfg.validate()?;
+                    Some((
+                        Arc::new(Autoscaler::new(cfg.clone())),
+                        Arc::new(AdvisoryExecutor::new(cfg.min_nodes, cfg.min_nodes)),
+                    ))
+                }
+                None => None,
+            };
+
         let handler: Handler = {
             let coordinator = coordinator.clone();
             let store = store.clone();
+            let autoscale = autoscale.clone();
             Arc::new(move |method, params, _blob| match method {
                 "submit" => {
                     let spec = EventSpec::from_json(params.req("spec")?)?;
@@ -128,7 +152,14 @@ impl GatewayServer {
                         None => Ok((Json::Null, None)),
                     }
                 }
-                "stats" => Ok((ClusterStats::gather(&coordinator)?.to_json(), None)),
+                "stats" => {
+                    let mut stats = ClusterStats::gather(&coordinator)?;
+                    if let Some((scaler, exec)) = &autoscale {
+                        stats.autoscale = scaler.stats();
+                        stats.autoscale.nodes = exec.nodes();
+                    }
+                    Ok((stats.to_json(), None))
+                }
                 "runtimes" => {
                     let mut names = announce.clone();
                     for key in store.list("runtimes/").unwrap_or_default() {
@@ -162,7 +193,8 @@ impl GatewayServer {
         let rpc = RpcServer::serve(addr, handler)?;
 
         // Housekeeping (the coordinator-side duties the single-process
-        // Cluster runs): re-queue expired leases, sample queue gauges.
+        // Cluster runs): re-queue expired leases, sample queue gauges,
+        // and tick the advisory elasticity controller when configured.
         // Free-slot counts live on remote nodes, so the gauge records 0.
         let stop = Arc::new(AtomicBool::new(false));
         let housekeeper = {
@@ -171,12 +203,24 @@ impl GatewayServer {
             let metrics = metrics.clone();
             let clock = clock.clone();
             let interval = config.housekeeping_interval;
+            let autoscale = autoscale.clone();
             std::thread::Builder::new()
                 .name("gateway-housekeeping".into())
                 .spawn(move || {
                     while !stop.load(Ordering::SeqCst) {
                         let _ = queue.reap_expired();
                         if let Ok(stats) = queue.stats() {
+                            if let Some((scaler, exec)) = &autoscale {
+                                let signals = Signals {
+                                    queued: stats.queued,
+                                    in_flight: stats.in_flight,
+                                    classes: stats.classes.clone(),
+                                    nodes: exec.nodes(),
+                                    free_slots: 0,
+                                    warm_instances: 0,
+                                };
+                                scaler.tick(&signals, clock.now(), exec.as_ref());
+                            }
                             metrics.sample_gauge(clock.now(), stats, 0);
                         }
                         clock.sleep(interval);
@@ -482,6 +526,53 @@ mod tests {
             SubmissionStatus::Unknown
         );
         assert!(r.client.fetch_result("inv-ghost").unwrap().is_none());
+    }
+
+    #[test]
+    fn advisory_autoscale_surfaces_in_stats() {
+        let clock = ScaledClock::new(100.0);
+        let queue = MemQueue::new(clock.clone());
+        let store = Arc::new(MemStore::new());
+        let gateway = GatewayServer::serve(
+            "127.0.0.1:0",
+            queue.clone(),
+            store,
+            clock,
+            GatewayConfig {
+                announce_runtimes: vec!["tinyyolo".into()],
+                housekeeping_interval: Duration::from_millis(500),
+                autoscale: Some(AutoscaleConfig {
+                    min_nodes: 0,
+                    max_nodes: 4,
+                    ..AutoscaleConfig::default()
+                }),
+            },
+        )
+        .unwrap();
+        let client = RemoteClient::connect(gateway.addr()).unwrap();
+        // Backlog with a zero-node (virtual) fleet: the advisory
+        // controller must recommend scale-out and surface it in stats.
+        for i in 0..3 {
+            client
+                .submit(EventSpec::new("tinyyolo", format!("datasets/d{i}")))
+                .unwrap();
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let stats = loop {
+            let stats = client.cluster_stats().unwrap();
+            if stats.autoscale.scale_ups >= 1 || std::time::Instant::now() > deadline {
+                break stats;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        };
+        assert!(stats.autoscale.enabled, "{:?}", stats.autoscale);
+        assert!(stats.autoscale.scale_ups >= 1, "{:?}", stats.autoscale);
+        assert!(stats.autoscale.nodes >= 1, "virtual fleet moved: {:?}", stats.autoscale);
+        assert!(
+            !stats.queue.classes.is_empty(),
+            "per-class gauges cross the gateway wire: {:?}",
+            stats.queue
+        );
     }
 
     #[test]

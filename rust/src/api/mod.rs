@@ -23,9 +23,10 @@ pub mod local;
 pub use gateway::{GatewayConfig, GatewayServer, RemoteClient, RemoteReporter};
 pub use local::LocalClient;
 
+use crate::autoscale::AutoscaleStats;
 use crate::events::{EventSpec, Invocation};
 use crate::json::Json;
-use crate::queue::QueueStats;
+use crate::queue::{ClassStats, QueueStats};
 use crate::store::{Blob, CacheStats};
 use anyhow::Result;
 use std::time::Duration;
@@ -70,7 +71,7 @@ impl SubmissionStatus {
 
 /// One aggregate snapshot: coordinator bookkeeping + queue gauges — the
 /// client-side view of the paper's §V-A counters (`RSuccess`, `#queued`).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ClusterStats {
     pub submitted: usize,
     pub inflight: usize,
@@ -78,11 +79,15 @@ pub struct ClusterStats {
     pub succeeded: usize,
     pub failed: usize,
     pub queue: QueueStats,
-    /// Node-local store-cache counters, aggregated over live nodes.
-    /// Node caches are node-local state: the in-process `Cluster` can
-    /// aggregate them, a distributed gateway cannot see its remote nodes'
-    /// caches and reports zeros.
+    /// Node-local store-cache counters, aggregated over live nodes plus
+    /// the terminal counters of retired nodes (scale-in never makes the
+    /// totals go backwards).  Node caches are node-local state: the
+    /// in-process `Cluster` can aggregate them, a distributed gateway
+    /// cannot see its remote nodes' caches and reports zeros.
     pub cache: CacheStats,
+    /// Autoscaler section: decision counters, current/target nodes,
+    /// last action + reason.  Disabled default when no controller runs.
+    pub autoscale: AutoscaleStats,
 }
 
 impl ClusterStats {
@@ -98,10 +103,13 @@ impl ClusterStats {
             failed: counts.failed,
             queue: coordinator.queue_stats()?,
             cache: CacheStats::default(),
+            autoscale: AutoscaleStats::default(),
         })
     }
 
     pub fn to_json(&self) -> Json {
+        let classes: Vec<Json> =
+            self.queue.classes.iter().map(|c| c.to_json()).collect();
         Json::obj()
             .set("submitted", self.submitted)
             .set("inflight", self.inflight)
@@ -112,19 +120,29 @@ impl ClusterStats {
             .set("queue_in_flight", self.queue.in_flight)
             .set("acked", self.queue.acked)
             .set("dead", self.queue.dead)
+            .set("queue_classes", Json::Arr(classes))
             .set("cache_hits", self.cache.hits as usize)
             .set("cache_misses", self.cache.misses as usize)
             .set("cache_evictions", self.cache.evictions as usize)
             .set("cache_coalesced", self.cache.coalesced as usize)
             .set("cache_entries", self.cache.entries as usize)
             .set("cache_bytes", self.cache.bytes as usize)
+            .set("autoscale", self.autoscale.to_json())
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterStats> {
-        // Cache counters parse leniently (default 0): they were added
-        // after the wire format shipped, and a gateway without node
-        // visibility omits nothing but sends zeros anyway.
+        // Cache counters, per-class gauges, and the autoscale section
+        // parse leniently (defaults): they were added after the wire
+        // format shipped, and a gateway without node visibility or
+        // without a controller omits nothing but sends defaults anyway.
         let cache_u64 = |k: &str| j.usize_of(k).unwrap_or(0) as u64;
+        let classes = match j.get("queue_classes").and_then(|v| v.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .filter_map(|c| ClassStats::from_json(c).ok())
+                .collect(),
+            None => Vec::new(),
+        };
         Ok(ClusterStats {
             submitted: j.usize_of("submitted")?,
             inflight: j.usize_of("inflight")?,
@@ -136,6 +154,7 @@ impl ClusterStats {
                 in_flight: j.usize_of("queue_in_flight")?,
                 acked: j.usize_of("acked")?,
                 dead: j.usize_of("dead")?,
+                classes,
             },
             cache: CacheStats {
                 hits: cache_u64("cache_hits"),
@@ -145,6 +164,10 @@ impl ClusterStats {
                 entries: cache_u64("cache_entries"),
                 bytes: cache_u64("cache_bytes"),
             },
+            autoscale: j
+                .get("autoscale")
+                .map(AutoscaleStats::from_json)
+                .unwrap_or_default(),
         })
     }
 }
@@ -211,7 +234,17 @@ mod tests {
             completed: 8,
             succeeded: 7,
             failed: 1,
-            queue: QueueStats { queued: 1, in_flight: 1, acked: 8, dead: 0 },
+            queue: QueueStats {
+                queued: 1,
+                in_flight: 1,
+                acked: 8,
+                dead: 0,
+                classes: vec![ClassStats {
+                    runtime: "tinyyolo".into(),
+                    queued: 1,
+                    oldest_waiting_ms: 2500,
+                }],
+            },
             cache: CacheStats {
                 hits: 90,
                 misses: 3,
@@ -220,8 +253,33 @@ mod tests {
                 entries: 2,
                 bytes: 4096,
             },
+            autoscale: AutoscaleStats {
+                enabled: true,
+                nodes: 2,
+                target: 3,
+                scale_ups: 4,
+                scale_downs: 1,
+                holds: 20,
+                ticks: 25,
+                last_action: "up+1".into(),
+                last_reason: "class tinyyolo: depth 9 > 8 (4x2 nodes)".into(),
+            },
         };
         assert_eq!(ClusterStats::from_json(&stats.to_json()).unwrap(), stats);
+    }
+
+    #[test]
+    fn cluster_stats_parses_without_classes_or_autoscale() {
+        // Payloads predating the per-class gauges / autoscale section
+        // parse to defaults, not errors.
+        let stats = ClusterStats { submitted: 3, ..ClusterStats::default() };
+        let mut j = stats.to_json();
+        j = j.set("queue_classes", Json::Null).set("autoscale", Json::Null);
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert_eq!(parsed.queue.classes, Vec::new());
+        assert_eq!(parsed.autoscale, AutoscaleStats::default());
+        assert!(!parsed.autoscale.enabled);
+        assert_eq!(parsed.submitted, 3);
     }
 
     #[test]

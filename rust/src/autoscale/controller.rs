@@ -1,0 +1,512 @@
+//! The hysteresis controller — the autoscaler's pure decision core.
+//!
+//! [`AutoscaleController::evaluate`] maps one [`Signals`] sample and the
+//! current [`SimTime`] to one [`Decision`].  It is deliberately free of
+//! clocks, threads, and I/O: time is an argument, state is explicit, and
+//! the decision log is append-only — which is what makes the scenario
+//! suite (`rust/tests/autoscale_scenarios.rs`) and the property tests
+//! (`reference.rs`) fully deterministic under [`crate::util::SimClock`].
+//!
+//! State machine (DESIGN.md §10):
+//!
+//! ```text
+//!             pressure && !up-cooldown && nodes < max
+//!   Steady ────────────────────────────────────────────▶ Up(step)
+//!     ▲  ▲                                                  │
+//!     │  └──────────── work arrives (idle timer resets) ◀───┘
+//!     │ idle ≥ down_idle && !down-cooldown && nodes > min
+//!     └────────────────────────────────────────────────▶ Down(1)
+//! ```
+//!
+//! Hysteresis comes from three mechanisms: the up/down conditions use
+//! different watermarks (depth pressure vs total idleness), each
+//! direction has its own cooldown, and a scale-in is additionally gated
+//! on `cooldown_down` having elapsed since the *last scale-out* — so an
+//! up-then-down flip inside one cooldown window is impossible by
+//! construction (asserted as a property in `reference.rs`).
+
+use super::{AutoscaleConfig, AutoscaleStats, Signals};
+use crate::util::SimTime;
+
+/// What the controller wants done this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// No change (reason says why: steady, cooldown, at bound, ...).
+    Hold,
+    /// Add this many nodes.
+    Up(usize),
+    /// Retire this many (idlest-first) nodes.
+    Down(usize),
+}
+
+impl Action {
+    pub fn is_hold(&self) -> bool {
+        matches!(self, Action::Hold)
+    }
+
+    /// Canonical rendering, shared by [`Decision::describe`] and the
+    /// stats `last_action` field (tests pin both; they must not drift).
+    pub fn render(&self) -> String {
+        match self {
+            Action::Hold => "hold".to_string(),
+            Action::Up(n) => format!("up+{n}"),
+            Action::Down(n) => format!("down-{n}"),
+        }
+    }
+}
+
+/// One evaluated tick: the action, the node count it targets, and a
+/// human-readable reason (deterministic — part of the decision log).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decision {
+    /// Evaluation tick ordinal (1 = first evaluate call).
+    pub tick: u64,
+    /// Sim time of the evaluation.
+    pub at: SimTime,
+    pub action: Action,
+    /// Node count after the action is applied (= observed nodes on Hold).
+    pub target: usize,
+    pub reason: String,
+}
+
+impl Decision {
+    /// Canonical one-line rendering (the unit of the reproducibility
+    /// digest: same seed ⇒ same lines, byte for byte).
+    pub fn describe(&self) -> String {
+        format!(
+            "#{} t={}ms {} -> {} nodes: {}",
+            self.tick,
+            self.at.as_micros() / 1000,
+            self.action.render(),
+            self.target,
+            self.reason
+        )
+    }
+}
+
+/// How many decisions the log retains (a forever-running cluster must
+/// not grow without bound; the counters stay exact regardless).
+const LOG_RETENTION: usize = 4096;
+
+/// The per-runtime-class closed-loop controller state.
+pub struct AutoscaleController {
+    cfg: AutoscaleConfig,
+    /// When the system (queue + in-flight) last became empty.
+    idle_since: Option<SimTime>,
+    last_up: Option<SimTime>,
+    last_down: Option<SimTime>,
+    ticks: u64,
+    ups: u64,
+    downs: u64,
+    holds: u64,
+    log: std::collections::VecDeque<Decision>,
+    /// Last observed node count and last decision target (stats surface).
+    last_nodes: usize,
+    last_target: usize,
+}
+
+impl AutoscaleController {
+    pub fn new(cfg: AutoscaleConfig) -> AutoscaleController {
+        assert!(cfg.min_nodes <= cfg.max_nodes, "min_nodes > max_nodes");
+        AutoscaleController {
+            last_target: cfg.min_nodes,
+            cfg,
+            idle_since: None,
+            last_up: None,
+            last_down: None,
+            ticks: 0,
+            ups: 0,
+            downs: 0,
+            holds: 0,
+            log: std::collections::VecDeque::new(),
+            last_nodes: 0,
+        }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Evaluate one tick.  Pure in (signals, now, internal state); the
+    /// caller applies the returned action through its `ScaleExecutor`.
+    pub fn evaluate(&mut self, s: &Signals, now: SimTime) -> Decision {
+        self.ticks += 1;
+        // Idle tracking: the timer arms when the system empties and
+        // resets the moment any work exists (queued or leased).
+        if s.queued + s.in_flight > 0 {
+            self.idle_since = None;
+        } else if self.idle_since.is_none() {
+            self.idle_since = Some(now);
+        }
+
+        let (action, target, reason) = self.decide(s, now);
+        match action {
+            Action::Up(_) => {
+                self.last_up = Some(now);
+                self.ups += 1;
+            }
+            Action::Down(_) => {
+                self.last_down = Some(now);
+                self.downs += 1;
+            }
+            Action::Hold => self.holds += 1,
+        }
+        let decision = Decision { tick: self.ticks, at: now, action, target, reason };
+        self.last_nodes = s.nodes;
+        self.last_target = target;
+        self.log.push_back(decision.clone());
+        while self.log.len() > LOG_RETENTION {
+            self.log.pop_front();
+        }
+        decision
+    }
+
+    fn decide(&self, s: &Signals, now: SimTime) -> (Action, usize, String) {
+        let cfg = &self.cfg;
+        let nodes = s.nodes;
+
+        // --- scale-out pressure -----------------------------------------
+        let pressure = self.pressure(s);
+        if let Some(reason) = pressure {
+            if nodes >= cfg.max_nodes {
+                return (Action::Hold, nodes, format!("at max ({}); {reason}", cfg.max_nodes));
+            }
+            if let Some(t) = self.last_up {
+                let since = now.since(t);
+                if since < cfg.cooldown_up {
+                    return (
+                        Action::Hold,
+                        nodes,
+                        format!("up-cooldown ({}ms < {}ms); {reason}",
+                            since.as_millis(), cfg.cooldown_up.as_millis()),
+                    );
+                }
+            }
+            let step = self.up_step(s);
+            return (Action::Up(step), nodes + step, reason);
+        }
+
+        // --- warm-floor replenishment (lost capacity, e.g. a dead node)
+        // bypasses the pressure watermarks but not the up-cooldown.
+        if nodes < cfg.min_nodes {
+            let step = (cfg.min_nodes - nodes).min(cfg.max_step_up.max(1));
+            if let Some(t) = self.last_up {
+                let since = now.since(t);
+                if since < cfg.cooldown_up {
+                    return (
+                        Action::Hold,
+                        nodes,
+                        format!("up-cooldown ({}ms); below warm floor {}",
+                            since.as_millis(), cfg.min_nodes),
+                    );
+                }
+            }
+            return (
+                Action::Up(step),
+                nodes + step,
+                format!("below warm floor ({nodes} < {})", cfg.min_nodes),
+            );
+        }
+
+        // --- scale-in ---------------------------------------------------
+        if nodes > cfg.min_nodes {
+            let Some(since) = self.idle_since else {
+                return (Action::Hold, nodes, "steady (work in flight)".to_string());
+            };
+            let idle = now.since(since);
+            if idle < cfg.down_idle {
+                return (
+                    Action::Hold,
+                    nodes,
+                    format!("idle {}ms < {}ms", idle.as_millis(), cfg.down_idle.as_millis()),
+                );
+            }
+            // Flip protection: no scale-in inside `cooldown_down` of the
+            // last action in *either* direction.
+            for (label, last) in [("up", self.last_up), ("down", self.last_down)] {
+                if let Some(t) = last {
+                    let since_action = now.since(t);
+                    if since_action < cfg.cooldown_down {
+                        return (
+                            Action::Hold,
+                            nodes,
+                            format!("down-cooldown after {label} ({}ms < {}ms)",
+                                since_action.as_millis(), cfg.cooldown_down.as_millis()),
+                        );
+                    }
+                }
+            }
+            return (
+                Action::Down(1),
+                nodes - 1,
+                format!("idle {}ms >= {}ms", idle.as_millis(), cfg.down_idle.as_millis()),
+            );
+        }
+
+        let reason = if nodes == cfg.min_nodes && cfg.min_nodes > 0 {
+            format!("at warm floor ({})", cfg.min_nodes)
+        } else {
+            "steady".to_string()
+        };
+        (Action::Hold, nodes, reason)
+    }
+
+    /// The per-class scan: O(|classes|) comparisons against the two high
+    /// watermarks, plus the scale-from-zero guard.  Returns the first
+    /// (deterministic — classes arrive sorted) triggering reason.
+    fn pressure(&self, s: &Signals) -> Option<String> {
+        let cfg = &self.cfg;
+        if s.nodes == 0 && s.queued + s.in_flight > 0 {
+            return Some(format!(
+                "work with zero nodes (queued {}, in-flight {})",
+                s.queued, s.in_flight
+            ));
+        }
+        let depth_limit = cfg.up_depth_per_node * s.nodes.max(1);
+        let age_limit_ms = cfg.up_oldest.as_millis() as u64;
+        for c in &s.classes {
+            if c.queued > depth_limit {
+                return Some(format!(
+                    "class {}: depth {} > {} ({}x{} nodes)",
+                    c.runtime,
+                    c.queued,
+                    depth_limit,
+                    cfg.up_depth_per_node,
+                    s.nodes.max(1)
+                ));
+            }
+            if c.queued > 0 && c.oldest_waiting_ms >= age_limit_ms {
+                return Some(format!(
+                    "class {}: oldest waiting {}ms >= {}ms",
+                    c.runtime, c.oldest_waiting_ms, age_limit_ms
+                ));
+            }
+        }
+        None
+    }
+
+    /// Size the scale-out to the backlog the current free slots cannot
+    /// absorb, in units of `node_slots_hint`, clamped to
+    /// `[1, max_step_up]` and the max-nodes bound.
+    fn up_step(&self, s: &Signals) -> usize {
+        let cfg = &self.cfg;
+        let hint = cfg.node_slots_hint.max(1);
+        let deficit = s.queued.saturating_sub(s.free_slots);
+        let wanted = deficit.div_ceil(hint);
+        wanted
+            .min(cfg.max_step_up.max(1))
+            .min(cfg.max_nodes - s.nodes)
+            .max(1)
+    }
+
+    /// Retained decisions, oldest first.
+    pub fn decisions(&self) -> Vec<Decision> {
+        self.log.iter().cloned().collect()
+    }
+
+    /// The reproducibility digest: every retained decision rendered by
+    /// [`Decision::describe`], newline-joined.  Two runs over the same
+    /// trace must produce identical digests, byte for byte.
+    pub fn log_digest(&self) -> String {
+        let mut out = String::new();
+        for d in &self.log {
+            out.push_str(&d.describe());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn stats(&self) -> AutoscaleStats {
+        let last = self.log.back();
+        AutoscaleStats {
+            enabled: true,
+            nodes: self.last_nodes,
+            target: self.last_target,
+            scale_ups: self.ups,
+            scale_downs: self.downs,
+            holds: self.holds,
+            ticks: self.ticks,
+            last_action: last.map(|d| d.action.render()).unwrap_or_default(),
+            last_reason: last.map(|d| d.reason.clone()).unwrap_or_default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queue::ClassStats;
+    use crate::util::clock::SimClock;
+    use crate::util::Clock;
+    use std::time::Duration;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_nodes: 0,
+            max_nodes: 4,
+            up_depth_per_node: 4,
+            up_oldest: Duration::from_secs(10),
+            down_idle: Duration::from_secs(5),
+            cooldown_up: Duration::from_secs(2),
+            cooldown_down: Duration::from_secs(8),
+            node_slots_hint: 4,
+            max_step_up: 2,
+            tick: Duration::from_secs(1),
+        }
+    }
+
+    fn signals(nodes: usize, queued: usize, oldest_ms: u64) -> Signals {
+        Signals {
+            queued,
+            in_flight: 0,
+            classes: if queued > 0 {
+                vec![ClassStats {
+                    runtime: "tinyyolo".into(),
+                    queued,
+                    oldest_waiting_ms: oldest_ms,
+                }]
+            } else {
+                Vec::new()
+            },
+            nodes,
+            free_slots: 0,
+            warm_instances: 0,
+        }
+    }
+
+    #[test]
+    fn scales_up_from_zero_on_any_work() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        let d = c.evaluate(&signals(0, 1, 0), clock.now());
+        assert_eq!(d.action, Action::Up(1), "{d:?}");
+        assert_eq!(d.target, 1);
+        assert!(d.reason.contains("zero nodes"), "{}", d.reason);
+    }
+
+    #[test]
+    fn depth_watermark_scales_with_node_count() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        // 2 nodes, depth 8 = 4/node x 2: at the watermark, not above it.
+        let d = c.evaluate(&signals(2, 8, 0), clock.now());
+        assert!(d.action.is_hold(), "{d:?}");
+        // depth 9 crosses it.
+        clock.advance(Duration::from_secs(3));
+        let d = c.evaluate(&signals(2, 9, 0), clock.now());
+        assert_eq!(d.action, Action::Up(2), "deficit 9 over hint 4 -> 2 (capped): {d:?}");
+    }
+
+    #[test]
+    fn oldest_age_triggers_even_at_shallow_depth() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        let d = c.evaluate(&signals(2, 1, 10_000), clock.now());
+        assert_eq!(d.action, Action::Up(1), "{d:?}");
+        assert!(d.reason.contains("oldest waiting"), "{}", d.reason);
+    }
+
+    #[test]
+    fn up_cooldown_holds_then_releases() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        assert_eq!(c.evaluate(&signals(0, 9, 0), clock.now()).action, Action::Up(2));
+        clock.advance(Duration::from_secs(1));
+        let d = c.evaluate(&signals(2, 9, 0), clock.now());
+        assert!(d.action.is_hold(), "inside cooldown_up: {d:?}");
+        assert!(d.reason.contains("up-cooldown"), "{}", d.reason);
+        clock.advance(Duration::from_secs(1));
+        let d = c.evaluate(&signals(2, 20, 0), clock.now());
+        assert_eq!(d.action, Action::Up(2), "cooldown elapsed: {d:?}");
+    }
+
+    #[test]
+    fn never_targets_above_max() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        let d = c.evaluate(&signals(4, 500, 60_000), clock.now());
+        assert!(d.action.is_hold(), "{d:?}");
+        assert!(d.reason.contains("at max"), "{}", d.reason);
+        assert_eq!(d.target, 4);
+    }
+
+    #[test]
+    fn scale_to_zero_after_idle_and_cooldowns() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        // Busy, then empty: the idle timer arms on the first empty tick.
+        c.evaluate(&signals(1, 2, 0), clock.now());
+        clock.advance(Duration::from_secs(3));
+        let d = c.evaluate(&signals(1, 0, 0), clock.now());
+        assert!(d.action.is_hold(), "idle timer just armed: {d:?}");
+        // 5s idle but still < cooldown_down=8s... no prior up/down action
+        // besides none, so only idle gates.
+        clock.advance(Duration::from_secs(5));
+        let d = c.evaluate(&signals(1, 0, 0), clock.now());
+        assert_eq!(d.action, Action::Down(1), "{d:?}");
+        assert_eq!(d.target, 0, "scale-to-zero with min_nodes = 0");
+    }
+
+    #[test]
+    fn warm_floor_blocks_scale_in_and_replenishes() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(AutoscaleConfig { min_nodes: 1, ..cfg() });
+        // At the floor, long idle: hold, not down.
+        clock.advance(Duration::from_secs(60));
+        let d = c.evaluate(&signals(1, 0, 0), clock.now());
+        assert!(d.action.is_hold(), "{d:?}");
+        assert!(d.reason.contains("warm floor"), "{}", d.reason);
+        // Below the floor (node died): replenish without pressure.
+        clock.advance(Duration::from_secs(1));
+        let d = c.evaluate(&signals(0, 0, 0), clock.now());
+        assert_eq!(d.action, Action::Up(1), "{d:?}");
+        assert!(d.reason.contains("below warm floor"), "{}", d.reason);
+    }
+
+    #[test]
+    fn idle_timer_resets_on_new_work() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        c.evaluate(&signals(1, 0, 0), clock.now()); // idle arms at t=0
+        clock.advance(Duration::from_secs(4));
+        c.evaluate(&signals(1, 1, 0), clock.now()); // work: timer resets
+        clock.advance(Duration::from_secs(4));
+        // 4s since the queue emptied again (at most) — below down_idle.
+        let d = c.evaluate(&signals(1, 0, 0), clock.now());
+        assert!(d.action.is_hold(), "{d:?}");
+    }
+
+    #[test]
+    fn down_cooldown_spaces_successive_scale_ins() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        clock.advance(Duration::from_secs(10));
+        assert_eq!(c.evaluate(&signals(3, 0, 0), clock.now()).action, Action::Hold);
+        clock.advance(Duration::from_secs(10));
+        assert_eq!(c.evaluate(&signals(3, 0, 0), clock.now()).action, Action::Down(1));
+        clock.advance(Duration::from_secs(2));
+        let d = c.evaluate(&signals(2, 0, 0), clock.now());
+        assert!(d.action.is_hold(), "{d:?}");
+        assert!(d.reason.contains("down-cooldown"), "{}", d.reason);
+        clock.advance(Duration::from_secs(8));
+        assert_eq!(c.evaluate(&signals(2, 0, 0), clock.now()).action, Action::Down(1));
+    }
+
+    #[test]
+    fn stats_and_digest_reflect_the_log() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        c.evaluate(&signals(0, 9, 0), clock.now());
+        clock.advance(Duration::from_secs(5));
+        c.evaluate(&signals(2, 0, 0), clock.now());
+        let s = c.stats();
+        assert!(s.enabled);
+        assert_eq!(s.ticks, 2);
+        assert_eq!(s.scale_ups, 1);
+        assert_eq!(s.holds, 1);
+        assert_eq!(s.nodes, 2);
+        let digest = c.log_digest();
+        assert_eq!(digest.lines().count(), 2, "{digest}");
+        assert!(digest.starts_with("#1 t=0ms up+2 -> 2 nodes:"), "{digest}");
+    }
+}

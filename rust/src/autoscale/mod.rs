@@ -1,0 +1,372 @@
+//! Closed-loop elasticity — the serverless promise the paper leaves to
+//! the platform operator, automated.
+//!
+//! HARDLESS claims accelerator workloads get the *fully automated
+//! elastic* experience of CPU serverless (§I, §IV); the Berkeley View
+//! makes auto-scaling (including scale-to-zero) the defining property of
+//! serverless.  This module closes the loop the coordinator leaves open:
+//! a controller samples per-runtime-class signals — queue depth,
+//! oldest-waiting age, free slots, warm-pool occupancy — and issues
+//! `add_node` / `remove_node` decisions through a [`ScaleExecutor`],
+//! with hysteresis watermarks, per-direction cooldowns, min/max node
+//! bounds, and scale-to-zero above a configurable warm floor.
+//!
+//! Layering:
+//!
+//! * [`controller::AutoscaleController`] — the pure decision core
+//!   (signals + sim-time in, decision out; no clocks, threads, or I/O).
+//! * [`Autoscaler`] — a thread-safe handle pairing the controller with a
+//!   [`ScaleExecutor`]; whoever owns the loop (the in-process
+//!   `Cluster`'s autoscale thread, the gateway's housekeeping tick, a
+//!   test harness) calls [`Autoscaler::tick`] at its own cadence.
+//! * [`SignalSource`] / [`ScaleExecutor`] — the two seams to the rest of
+//!   the system; `coordinator::Cluster` implements both for real nodes,
+//!   [`AdvisoryExecutor`] stands in where provisioning is external.
+//!
+//! Every timestamp flows through [`crate::util::Clock`], so the whole
+//! subsystem is reproducible under [`crate::util::SimClock`]: the
+//! scenario suite (`rust/tests/autoscale_scenarios.rs`) replays bursts,
+//! ramps, and idle tails with zero wall-clock sleeps, and the same seed
+//! reproduces the same decision log byte for byte.
+
+pub mod controller;
+#[cfg(test)]
+mod reference;
+
+pub use controller::{Action, AutoscaleController, Decision};
+
+use crate::json::Json;
+use crate::queue::ClassStats;
+use crate::util::SimTime;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Controller tunables (all durations are sim time).
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Warm floor: scale-in never goes below this many nodes (0 = full
+    /// scale-to-zero), and lost capacity below it is replenished.
+    pub min_nodes: usize,
+    /// Hard ceiling on the fleet.
+    pub max_nodes: usize,
+    /// High watermark: scale out when any class's queue depth exceeds
+    /// `up_depth_per_node × live nodes`.
+    pub up_depth_per_node: usize,
+    /// ...or when any class's oldest queued invocation has waited this
+    /// long (latency guard for shallow-but-stuck lanes).
+    pub up_oldest: Duration,
+    /// Low watermark: scale in one node only after the whole system
+    /// (queued + in-flight) has been empty this long.
+    pub down_idle: Duration,
+    /// Minimum spacing between successive scale-outs.
+    pub cooldown_up: Duration,
+    /// Minimum spacing between a scale-in and the last action in either
+    /// direction (flip protection: no up-then-down inside this window).
+    pub cooldown_down: Duration,
+    /// Capacity one template node is expected to add (sizes the
+    /// backlog-proportional scale-out step).
+    pub node_slots_hint: usize,
+    /// Cap on nodes added by a single decision.
+    pub max_step_up: usize,
+    /// Evaluation period for loop owners that honor it (the in-process
+    /// cluster's autoscale thread; the gateway ticks on housekeeping).
+    pub tick: Duration,
+}
+
+impl AutoscaleConfig {
+    /// Bounds sanity for Result-returning entry points
+    /// (`Cluster::start_autoscale`, `GatewayServer::serve`) — the
+    /// controller itself asserts the same invariant.
+    pub fn validate(&self) -> Result<()> {
+        if self.min_nodes > self.max_nodes {
+            anyhow::bail!(
+                "autoscale min_nodes {} exceeds max_nodes {}",
+                self.min_nodes,
+                self.max_nodes
+            );
+        }
+        Ok(())
+    }
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> AutoscaleConfig {
+        AutoscaleConfig {
+            min_nodes: 0,
+            max_nodes: 8,
+            up_depth_per_node: 4,
+            up_oldest: Duration::from_secs(10),
+            down_idle: Duration::from_secs(30),
+            cooldown_up: Duration::from_secs(15),
+            cooldown_down: Duration::from_secs(60),
+            node_slots_hint: 4,
+            max_step_up: 4,
+            tick: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One controller input sample: the cluster's load/capacity state at an
+/// instant, as cheap gauges (everything here is O(nodes + classes) to
+/// collect — see DESIGN.md §10).
+#[derive(Debug, Clone, Default)]
+pub struct Signals {
+    /// Total queued (not leased) invocations.
+    pub queued: usize,
+    /// Leased, not yet acked.
+    pub in_flight: usize,
+    /// Per-runtime-class depth/age (sorted by runtime).
+    pub classes: Vec<ClassStats>,
+    /// Live node count.
+    pub nodes: usize,
+    /// Free accelerator slots across live nodes.
+    pub free_slots: usize,
+    /// Live warm runtime instances across node pools.
+    pub warm_instances: usize,
+}
+
+/// Where scale decisions land.  The in-process `Cluster` stamps real
+/// nodes from its `NodeTemplate`; distributed deployments may translate
+/// these into provisioning calls, or use [`AdvisoryExecutor`].
+pub trait ScaleExecutor: Send + Sync {
+    /// Add `count` nodes; returns their ids.
+    fn scale_up(&self, count: usize) -> Result<Vec<String>>;
+
+    /// Gracefully retire up to `count` idlest nodes (stop taking new
+    /// leases, drain, then stop); returns the retired ids.
+    fn scale_down(&self, count: usize) -> Result<Vec<String>>;
+}
+
+/// Where the controller's input sample comes from.
+pub trait SignalSource: Send + Sync {
+    fn sample(&self) -> Signals;
+}
+
+/// Counters surfaced through `cluster_stats` (the `autoscale` section).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AutoscaleStats {
+    pub enabled: bool,
+    /// Node count at the last evaluation.
+    pub nodes: usize,
+    /// Node count the last decision targeted.
+    pub target: usize,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub holds: u64,
+    pub ticks: u64,
+    /// Last decision, rendered (`up+2`, `down-1`, `hold`, "" before the
+    /// first tick).
+    pub last_action: String,
+    pub last_reason: String,
+}
+
+impl AutoscaleStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("enabled", self.enabled)
+            .set("nodes", self.nodes)
+            .set("target", self.target)
+            .set("scale_ups", self.scale_ups)
+            .set("scale_downs", self.scale_downs)
+            .set("holds", self.holds)
+            .set("ticks", self.ticks)
+            .set("last_action", self.last_action.as_str())
+            .set("last_reason", self.last_reason.as_str())
+    }
+
+    /// Lenient parse: a stats payload from a deployment without the
+    /// autoscaler (or predating it) yields the disabled default.
+    pub fn from_json(j: &Json) -> AutoscaleStats {
+        let num = |k: &str| j.u64_of(k).unwrap_or(0);
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .unwrap_or_default()
+        };
+        AutoscaleStats {
+            enabled: j.get("enabled").and_then(|v| v.as_bool()).unwrap_or(false),
+            nodes: num("nodes") as usize,
+            target: num("target") as usize,
+            scale_ups: num("scale_ups"),
+            scale_downs: num("scale_downs"),
+            holds: num("holds"),
+            ticks: num("ticks"),
+            last_action: s("last_action"),
+            last_reason: s("last_reason"),
+        }
+    }
+}
+
+/// Thread-safe controller + executor pairing.  The loop owner samples
+/// signals and calls [`tick`](Autoscaler::tick); this evaluates the
+/// controller and applies any resulting action.
+pub struct Autoscaler {
+    controller: Mutex<AutoscaleController>,
+    /// Executor failures (e.g. template exhausted) — the decision stays
+    /// logged, the fleet is simply smaller than targeted.
+    exec_errors: AtomicU64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        Autoscaler {
+            controller: Mutex::new(AutoscaleController::new(cfg)),
+            exec_errors: AtomicU64::new(0),
+        }
+    }
+
+    /// One control-loop turn: evaluate, then apply through `exec`.
+    pub fn tick(&self, signals: &Signals, now: SimTime, exec: &dyn ScaleExecutor) -> Decision {
+        let decision = self
+            .controller
+            .lock()
+            .expect("autoscaler poisoned")
+            .evaluate(signals, now);
+        let result = match decision.action {
+            Action::Hold => Ok(Vec::new()),
+            Action::Up(n) => exec.scale_up(n),
+            Action::Down(n) => exec.scale_down(n),
+        };
+        match result {
+            Ok(ids) if !ids.is_empty() => {
+                log::info!("autoscale: {} -> {:?}", decision.describe(), ids)
+            }
+            Ok(_) => {}
+            Err(e) => {
+                self.exec_errors.fetch_add(1, Ordering::Relaxed);
+                log::warn!("autoscale: {} failed: {e:#}", decision.describe());
+            }
+        }
+        decision
+    }
+
+    pub fn stats(&self) -> AutoscaleStats {
+        self.controller.lock().expect("autoscaler poisoned").stats()
+    }
+
+    pub fn decisions(&self) -> Vec<Decision> {
+        self.controller
+            .lock()
+            .expect("autoscaler poisoned")
+            .decisions()
+    }
+
+    pub fn log_digest(&self) -> String {
+        self.controller
+            .lock()
+            .expect("autoscaler poisoned")
+            .log_digest()
+    }
+
+    pub fn exec_errors(&self) -> u64 {
+        self.exec_errors.load(Ordering::Relaxed)
+    }
+}
+
+/// Advisory executor for deployments whose nodes are provisioned
+/// externally (`hardless serve`): decisions move a *virtual* node count
+/// and are logged + surfaced through `cluster_stats`, telling the
+/// operator (or an external orchestrator watching `hardless status`)
+/// what the fleet should look like.
+pub struct AdvisoryExecutor {
+    nodes: AtomicUsize,
+    floor: usize,
+}
+
+impl AdvisoryExecutor {
+    pub fn new(initial: usize, floor: usize) -> AdvisoryExecutor {
+        AdvisoryExecutor { nodes: AtomicUsize::new(initial), floor }
+    }
+
+    /// The advisory (virtual) node count decisions have accumulated to.
+    pub fn nodes(&self) -> usize {
+        self.nodes.load(Ordering::SeqCst)
+    }
+}
+
+impl ScaleExecutor for AdvisoryExecutor {
+    fn scale_up(&self, count: usize) -> Result<Vec<String>> {
+        let after = self.nodes.fetch_add(count, Ordering::SeqCst) + count;
+        Ok((after - count + 1..=after)
+            .map(|i| format!("advisory-{i}"))
+            .collect())
+    }
+
+    fn scale_down(&self, count: usize) -> Result<Vec<String>> {
+        let mut removed = Vec::new();
+        for _ in 0..count {
+            let prev = self
+                .nodes
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| {
+                    (n > self.floor).then_some(n - 1)
+                });
+            match prev {
+                Ok(n) => removed.push(format!("advisory-{n}")),
+                Err(_) => break,
+            }
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::SimClock;
+    use crate::util::Clock;
+
+    #[test]
+    fn autoscale_stats_json_roundtrip() {
+        let stats = AutoscaleStats {
+            enabled: true,
+            nodes: 3,
+            target: 4,
+            scale_ups: 7,
+            scale_downs: 2,
+            holds: 40,
+            ticks: 49,
+            last_action: "up+1".into(),
+            last_reason: "class tinyyolo: depth 9 > 8 (4x2 nodes)".into(),
+        };
+        assert_eq!(AutoscaleStats::from_json(&stats.to_json()), stats);
+    }
+
+    #[test]
+    fn autoscale_stats_parse_lenient_on_missing() {
+        let parsed = AutoscaleStats::from_json(&Json::obj());
+        assert_eq!(parsed, AutoscaleStats::default());
+        assert!(!parsed.enabled);
+    }
+
+    #[test]
+    fn advisory_executor_moves_virtual_fleet_within_floor() {
+        let exec = AdvisoryExecutor::new(1, 1);
+        assert_eq!(exec.scale_up(2).unwrap().len(), 2);
+        assert_eq!(exec.nodes(), 3);
+        assert_eq!(exec.scale_down(1).unwrap().len(), 1);
+        assert_eq!(exec.nodes(), 2);
+        // Floor stops the virtual fleet, even when asked for more.
+        assert_eq!(exec.scale_down(5).unwrap().len(), 1);
+        assert_eq!(exec.nodes(), 1);
+        assert!(exec.scale_down(1).unwrap().is_empty());
+    }
+
+    #[test]
+    fn tick_applies_decisions_through_the_executor() {
+        let clock = SimClock::new();
+        let scaler = Autoscaler::new(AutoscaleConfig {
+            max_nodes: 4,
+            ..AutoscaleConfig::default()
+        });
+        let exec = AdvisoryExecutor::new(0, 0);
+        let signals = Signals { queued: 3, nodes: 0, ..Signals::default() };
+        let d = scaler.tick(&signals, clock.now(), &exec);
+        assert_eq!(d.action, Action::Up(1));
+        assert_eq!(exec.nodes(), 1, "decision applied");
+        assert_eq!(scaler.stats().scale_ups, 1);
+        assert_eq!(scaler.exec_errors(), 0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Autoscaler property tests — random load traces through the
+//! controller, in the style of `queue/reference.rs`: a small passive
+//! fleet model drives [`AutoscaleController`] with randomized arrival
+//! traces and asserts the invariants that make the controller safe to
+//! run unattended:
+//!
+//! * decisions never target a fleet outside `[min_nodes, max_nodes]`,
+//!   and the applied node count never leaves those bounds;
+//! * no up-then-down flip inside a `cooldown_down` window (and no two
+//!   scale-outs inside `cooldown_up`);
+//! * the same seed reproduces the same decision log, byte for byte
+//!   (the [`crate::util::Rng`] trace generator and the controller are
+//!   both deterministic).
+
+use super::controller::{Action, AutoscaleController};
+use super::{AutoscaleConfig, Signals};
+use crate::prop;
+use crate::queue::ClassStats;
+use crate::util::clock::SimClock;
+use crate::util::{Clock, SimTime};
+use std::collections::VecDeque;
+use std::time::Duration;
+
+/// Passive single-class fleet model: per tick, each node serves up to
+/// `slots` queued invocations (oldest first), then the controller sees
+/// the resulting gauges.  Arrivals come from the random trace.
+struct FleetModel {
+    /// Enqueue times of queued invocations, oldest first.
+    queued: VecDeque<SimTime>,
+    nodes: usize,
+    slots: usize,
+}
+
+impl FleetModel {
+    fn step(&mut self, arrivals: usize, now: SimTime) -> Signals {
+        let capacity = self.nodes * self.slots;
+        for _ in 0..capacity.min(self.queued.len()) {
+            self.queued.pop_front();
+        }
+        for _ in 0..arrivals {
+            self.queued.push_back(now);
+        }
+        let classes = if self.queued.is_empty() {
+            Vec::new()
+        } else {
+            vec![ClassStats {
+                runtime: "tinyyolo".into(),
+                queued: self.queued.len(),
+                oldest_waiting_ms: now.since(self.queued[0]).as_millis() as u64,
+            }]
+        };
+        Signals {
+            queued: self.queued.len(),
+            in_flight: 0,
+            classes,
+            nodes: self.nodes,
+            free_slots: self.nodes * self.slots,
+            warm_instances: 0,
+        }
+    }
+
+    fn apply(&mut self, action: Action) {
+        match action {
+            Action::Hold => {}
+            Action::Up(n) => self.nodes += n,
+            Action::Down(n) => self.nodes = self.nodes.saturating_sub(n),
+        }
+    }
+}
+
+/// One full run over a trace; returns the controller for inspection.
+fn run_trace(cfg: &AutoscaleConfig, trace: &[usize]) -> AutoscaleController {
+    let clock = SimClock::new();
+    let mut controller = AutoscaleController::new(cfg.clone());
+    let mut fleet = FleetModel { queued: VecDeque::new(), nodes: cfg.min_nodes, slots: cfg.node_slots_hint };
+    for &arrivals in trace {
+        clock.advance(cfg.tick);
+        let signals = fleet.step(arrivals, clock.now());
+        let decision = controller.evaluate(&signals, clock.now());
+        fleet.apply(decision.action);
+    }
+    controller
+}
+
+fn prop_cfg(min_nodes: usize) -> AutoscaleConfig {
+    AutoscaleConfig {
+        min_nodes,
+        max_nodes: 6,
+        up_depth_per_node: 4,
+        up_oldest: Duration::from_secs(8),
+        down_idle: Duration::from_secs(6),
+        cooldown_up: Duration::from_secs(3),
+        cooldown_down: Duration::from_secs(10),
+        node_slots_hint: 3,
+        max_step_up: 3,
+        tick: Duration::from_secs(1),
+    }
+}
+
+#[test]
+fn property_targets_never_leave_bounds() {
+    prop::check(
+        "autoscale-bounds",
+        60,
+        |rng| {
+            let min = rng.below(3) as usize;
+            // Bursty trace: mostly quiet, occasional heavy ticks.
+            let trace: Vec<usize> = (0..rng.range(10, 120))
+                .map(|_| if rng.chance(0.25) { rng.below(40) as usize } else { 0 })
+                .collect();
+            (min, trace)
+        },
+        |(min, trace)| {
+            let cfg = prop_cfg(*min);
+            let controller = run_trace(&cfg, trace);
+            // Replay the applied node counts from the decision log.
+            let mut nodes = cfg.min_nodes;
+            for d in controller.decisions() {
+                if d.target < cfg.min_nodes || d.target > cfg.max_nodes {
+                    return false;
+                }
+                match d.action {
+                    Action::Hold => {}
+                    Action::Up(n) => nodes += n,
+                    Action::Down(n) => {
+                        if nodes < n {
+                            return false;
+                        }
+                        nodes -= n;
+                    }
+                }
+                if nodes != d.target || nodes > cfg.max_nodes || nodes < cfg.min_nodes {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn property_no_flip_inside_cooldown_windows() {
+    prop::check(
+        "autoscale-no-flip",
+        60,
+        |rng| {
+            (0..rng.range(20, 150))
+                .map(|_| if rng.chance(0.3) { rng.below(30) as usize } else { 0 })
+                .collect::<Vec<usize>>()
+        },
+        |trace| {
+            let cfg = prop_cfg(0);
+            let controller = run_trace(&cfg, trace);
+            let decisions = controller.decisions();
+            for (i, d) in decisions.iter().enumerate() {
+                match d.action {
+                    // A scale-in must be at least cooldown_down after the
+                    // most recent action in either direction.
+                    Action::Down(_) => {
+                        for prev in &decisions[..i] {
+                            if !prev.action.is_hold()
+                                && d.at.since(prev.at) < cfg.cooldown_down
+                            {
+                                return false;
+                            }
+                        }
+                    }
+                    // Successive scale-outs are spaced by cooldown_up.
+                    Action::Up(_) => {
+                        for prev in &decisions[..i] {
+                            if matches!(prev.action, Action::Up(_))
+                                && d.at.since(prev.at) < cfg.cooldown_up
+                            {
+                                return false;
+                            }
+                        }
+                    }
+                    Action::Hold => {}
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn property_same_seed_same_decision_log() {
+    prop::check(
+        "autoscale-deterministic",
+        30,
+        |rng| {
+            (0..rng.range(10, 100))
+                .map(|_| rng.below(20) as usize)
+                .collect::<Vec<usize>>()
+        },
+        |trace| {
+            let cfg = prop_cfg(1);
+            let a = run_trace(&cfg, trace);
+            let b = run_trace(&cfg, trace);
+            a.log_digest() == b.log_digest() && !a.log_digest().is_empty()
+        },
+    );
+}

@@ -8,21 +8,29 @@
 //!
 //! Nodes can be added and removed while the cluster runs (§IV-C dynamic
 //! membership): `add_node` starts polling immediately, `remove_node`
-//! drains that node and leaves queued work for the others.
+//! decommissions that node (no new leases), drains it, and folds its
+//! terminal counters into the cluster totals.  With a [`NodeTemplate`]
+//! registered, [`Cluster::start_autoscale`] closes the elasticity loop:
+//! a controller thread samples per-runtime-class queue signals and
+//! stamps out / retires nodes by itself (DESIGN.md §10).
 
 use super::Coordinator;
 use crate::accel::DeviceRegistry;
+use crate::autoscale::{
+    Autoscaler, AutoscaleConfig, AutoscaleStats, ScaleExecutor, SignalSource, Signals,
+};
 use crate::metrics::MetricsHub;
 use crate::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps, NodeHandle};
 use crate::queue::{InvocationQueue, MemQueue, QueueConfig};
 use crate::runtime::instance::MockExecutor;
+use crate::runtime::pool::PoolStats;
 use crate::runtime::{RuntimeBundle, RuntimeInstance};
 use crate::scheduler::{Policy, WarmFirst};
 use crate::store::{CacheStats, MemStore, ObjectStore};
 use crate::util::clock::ScaledClock;
 use crate::util::Clock;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -42,6 +50,87 @@ pub enum ExecutorKind {
     },
 }
 
+/// Recipe the autoscaler stamps nodes from: an id prefix plus a factory
+/// producing a **fresh** [`DeviceRegistry`] per node.  A factory (not a
+/// prototype registry) because devices carry live slot occupancy — two
+/// nodes sharing one registry would share slot accounting.
+pub struct NodeTemplate {
+    prefix: String,
+    registry: Box<dyn Fn() -> DeviceRegistry + Send + Sync>,
+}
+
+impl NodeTemplate {
+    pub fn new(
+        prefix: impl Into<String>,
+        registry: impl Fn() -> DeviceRegistry + Send + Sync + 'static,
+    ) -> NodeTemplate {
+        NodeTemplate { prefix: prefix.into(), registry: Box::new(registry) }
+    }
+}
+
+/// Spawns a ready node from (config, devices) — shared by the builder,
+/// `add_node`, and the autoscaler's scale-out path.  Captures the
+/// cluster services (queue, store, clock, policy, executor spec,
+/// completion sink) by `Arc`.
+type NodeSpawner = Arc<dyn Fn(NodeConfig, DeviceRegistry) -> Result<NodeHandle> + Send + Sync>;
+
+/// Terminal counters of retired nodes.  Folded into the cluster totals
+/// so scale-in never makes `cluster_stats` go backwards (regression:
+/// `remove_node` used to drop the retired node's cache/pool counters).
+#[derive(Default)]
+struct RetiredCounters {
+    cache: CacheStats,
+    pool: PoolStats,
+}
+
+fn add_pool(total: &mut PoolStats, p: &PoolStats) {
+    total.live += p.live;
+    total.busy += p.busy;
+    total.cold_starts += p.cold_starts;
+    total.warm_hits += p.warm_hits;
+    total.evictions += p.evictions;
+}
+
+/// Gracefully retire a node and fold its terminal counters in.
+fn retire_into(node: NodeHandle, retired: &Mutex<RetiredCounters>) {
+    let (cache, pool) = node.retire();
+    let mut r = retired.lock().expect("poisoned");
+    r.cache.add(&cache);
+    add_pool(&mut r.pool, &pool);
+}
+
+/// Build a node's instance reserve for the given executor kind.
+fn build_reserve(executor: &ExecutorKind, registry: &DeviceRegistry) -> Result<Arc<InstanceReserve>> {
+    let reserve = InstanceReserve::new();
+    match executor {
+        ExecutorKind::Pjrt(bundle) => {
+            let built = reserve.prewarm_pjrt(registry, bundle)?;
+            log::info!("prewarmed {built} PJRT instances");
+        }
+        ExecutorKind::PjrtMulti(bundles) => {
+            let mut built = 0;
+            for b in bundles {
+                built += reserve.prewarm_pjrt(registry, b)?;
+            }
+            log::info!("prewarmed {built} PJRT instances ({} bundles)", bundles.len());
+        }
+        ExecutorKind::Mock { scale, delay } => {
+            for d in registry.devices() {
+                for variant in d.profile.runtimes.values() {
+                    for _ in 0..d.profile.slots {
+                        reserve.add(RuntimeInstance::start(
+                            variant.clone(),
+                            d.id.clone(),
+                            MockExecutor::factory(*scale, *delay),
+                        )?);
+                    }
+                }
+            }
+        }
+    }
+    Ok(reserve)
+}
+
 /// Builder for [`Cluster`].
 pub struct ClusterBuilder {
     time_scale: f64,
@@ -51,6 +140,8 @@ pub struct ClusterBuilder {
     nodes: Vec<(NodeConfig, DeviceRegistry)>,
     gauge_interval: Duration,
     node_cache_bytes: Option<usize>,
+    template: Option<NodeTemplate>,
+    autoscale: Option<AutoscaleConfig>,
 }
 
 impl ClusterBuilder {
@@ -63,6 +154,8 @@ impl ClusterBuilder {
             nodes: Vec::new(),
             gauge_interval: Duration::from_secs(1),
             node_cache_bytes: None,
+            template: None,
+            autoscale: None,
         }
     }
 
@@ -102,6 +195,18 @@ impl ClusterBuilder {
         self
     }
 
+    /// Register the recipe the autoscaler stamps nodes from.
+    pub fn node_template(mut self, template: NodeTemplate) -> Self {
+        self.template = Some(template);
+        self
+    }
+
+    /// Enable the closed-loop autoscaler (requires a node template).
+    pub fn autoscale(mut self, cfg: AutoscaleConfig) -> Self {
+        self.autoscale = Some(cfg);
+        self
+    }
+
     /// Gauge sampling period in sim time (paper samples #queued periodically).
     pub fn gauge_interval(mut self, d: Duration) -> Self {
         self.gauge_interval = d;
@@ -126,15 +231,41 @@ impl ClusterBuilder {
             ExecutorKind::Mock { .. } => {}
         }
 
+        let executor = Arc::new(self.executor);
+        let spawner: NodeSpawner = {
+            let queue = queue.clone();
+            let store = store.clone();
+            let clock = clock.clone();
+            let policy = self.policy.clone();
+            let executor = executor.clone();
+            let completions = coordinator.completion_sink();
+            Arc::new(move |cfg: NodeConfig, registry: DeviceRegistry| {
+                let reserve = build_reserve(&executor, &registry)?;
+                let deps = NodeDeps {
+                    queue: queue.clone() as Arc<dyn InvocationQueue>,
+                    store: store.clone() as Arc<dyn ObjectStore>,
+                    clock: clock.clone() as Arc<dyn Clock>,
+                    policy: policy.clone(),
+                    reserve,
+                    completions: completions.clone(),
+                };
+                spawn_node(cfg, registry, deps)
+            })
+        };
+
         let mut cluster = Cluster {
             clock: clock.clone(),
             queue,
             store,
             metrics,
             coordinator,
-            policy: self.policy,
-            executor: self.executor,
+            spawner,
             nodes: Arc::new(Mutex::new(Vec::new())),
+            template: Arc::new(Mutex::new(self.template)),
+            retired: Arc::new(Mutex::new(RetiredCounters::default())),
+            autoscaler: Mutex::new(None),
+            autoscale_thread: Mutex::new(None),
+            auto_seq: Arc::new(AtomicU64::new(0)),
             housekeeper: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
             gauge_interval: self.gauge_interval,
@@ -147,6 +278,9 @@ impl ClusterBuilder {
             cluster.spawn_node_inner(cfg, registry)?;
         }
         cluster.start_housekeeping();
+        if let Some(cfg) = self.autoscale {
+            cluster.start_autoscale(cfg)?;
+        }
         Ok(cluster)
     }
 }
@@ -164,13 +298,113 @@ pub struct Cluster {
     pub store: Arc<MemStore>,
     pub metrics: Arc<MetricsHub>,
     pub coordinator: Arc<Coordinator>,
-    policy: Arc<dyn Policy>,
-    executor: ExecutorKind,
+    spawner: NodeSpawner,
     nodes: Arc<Mutex<Vec<NodeHandle>>>,
+    template: Arc<Mutex<Option<NodeTemplate>>>,
+    retired: Arc<Mutex<RetiredCounters>>,
+    autoscaler: Mutex<Option<Arc<Autoscaler>>>,
+    autoscale_thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    auto_seq: Arc<AtomicU64>,
     housekeeper: Mutex<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
     gauge_interval: Duration,
     node_cache_bytes: Option<usize>,
+}
+
+/// The autoscaler's view of the cluster: signal sampling + scale
+/// execution over the shared node list, template, and spawner.  A
+/// separate (Arc-composed) struct so the control thread owns no `&Cluster`.
+struct ScalePlane {
+    nodes: Arc<Mutex<Vec<NodeHandle>>>,
+    queue: Arc<MemQueue>,
+    template: Arc<Mutex<Option<NodeTemplate>>>,
+    retired: Arc<Mutex<RetiredCounters>>,
+    spawner: NodeSpawner,
+    auto_seq: Arc<AtomicU64>,
+    node_cache_bytes: Option<usize>,
+}
+
+impl SignalSource for ScalePlane {
+    fn sample(&self) -> Signals {
+        let q = self.queue.stats().unwrap_or_default();
+        let nodes = self.nodes.lock().expect("poisoned");
+        Signals {
+            queued: q.queued,
+            in_flight: q.in_flight,
+            classes: q.classes,
+            nodes: nodes.len(),
+            free_slots: nodes.iter().map(|n| n.free_slots()).sum(),
+            warm_instances: nodes.iter().map(|n| n.pool_stats().live).sum(),
+        }
+    }
+}
+
+impl ScalePlane {
+    /// Stamp out one node from the template; returns its id.
+    fn spawn_one(&self) -> Result<String> {
+        let (registry, prefix) = {
+            let guard = self.template.lock().expect("poisoned");
+            let Some(t) = guard.as_ref() else {
+                anyhow::bail!("no node template registered");
+            };
+            ((t.registry)(), t.prefix.clone())
+        };
+        let id = format!("{prefix}-{}", self.auto_seq.fetch_add(1, Ordering::SeqCst) + 1);
+        let mut cfg = NodeConfig::new(&id);
+        if let Some(bytes) = self.node_cache_bytes {
+            cfg.cache_bytes = bytes;
+        }
+        let handle = (self.spawner)(cfg, registry)?;
+        self.nodes.lock().expect("poisoned").push(handle);
+        Ok(id)
+    }
+}
+
+impl ScaleExecutor for ScalePlane {
+    fn scale_up(&self, count: usize) -> Result<Vec<String>> {
+        let mut added = Vec::new();
+        for _ in 0..count {
+            match self.spawn_one() {
+                Ok(id) => added.push(id),
+                // Nodes that did join must stay accounted for: a partial
+                // scale-out returns Ok(partial ids) so the decision log
+                // matches the real fleet; an all-or-nothing failure errs.
+                Err(e) if added.is_empty() => return Err(e),
+                Err(e) => {
+                    log::warn!(
+                        "autoscale: partial scale-out ({}/{count} nodes joined): {e:#}",
+                        added.len()
+                    );
+                    break;
+                }
+            }
+        }
+        Ok(added)
+    }
+
+    fn scale_down(&self, count: usize) -> Result<Vec<String>> {
+        let mut removed = Vec::new();
+        for _ in 0..count {
+            let node = {
+                let mut nodes = self.nodes.lock().expect("poisoned");
+                if nodes.is_empty() {
+                    break;
+                }
+                // Idlest node wins; ties go to the newest (keep
+                // long-lived nodes and their warm pools).
+                let mut best = 0;
+                for (i, n) in nodes.iter().enumerate() {
+                    if n.free_slots() >= nodes[best].free_slots() {
+                        best = i;
+                    }
+                }
+                nodes.remove(best)
+            };
+            removed.push(node.id.clone());
+            retire_into(node, &self.retired);
+        }
+        Ok(removed)
+    }
 }
 
 impl Cluster {
@@ -178,48 +412,8 @@ impl Cluster {
         ClusterBuilder::new()
     }
 
-    fn build_reserve(&self, registry: &DeviceRegistry) -> Result<Arc<InstanceReserve>> {
-        let reserve = InstanceReserve::new();
-        match &self.executor {
-            ExecutorKind::Pjrt(bundle) => {
-                let built = reserve.prewarm_pjrt(registry, bundle)?;
-                log::info!("prewarmed {built} PJRT instances");
-            }
-            ExecutorKind::PjrtMulti(bundles) => {
-                let mut built = 0;
-                for b in bundles {
-                    built += reserve.prewarm_pjrt(registry, b)?;
-                }
-                log::info!("prewarmed {built} PJRT instances ({} bundles)", bundles.len());
-            }
-            ExecutorKind::Mock { scale, delay } => {
-                for d in registry.devices() {
-                    for variant in d.profile.runtimes.values() {
-                        for _ in 0..d.profile.slots {
-                            reserve.add(RuntimeInstance::start(
-                                variant.clone(),
-                                d.id.clone(),
-                                MockExecutor::factory(*scale, *delay),
-                            )?);
-                        }
-                    }
-                }
-            }
-        }
-        Ok(reserve)
-    }
-
     fn spawn_node_inner(&self, cfg: NodeConfig, registry: DeviceRegistry) -> Result<()> {
-        let reserve = self.build_reserve(&registry)?;
-        let deps = NodeDeps {
-            queue: self.queue.clone() as Arc<dyn InvocationQueue>,
-            store: self.store.clone() as Arc<dyn ObjectStore>,
-            clock: self.clock.clone() as Arc<dyn Clock>,
-            policy: self.policy.clone(),
-            reserve,
-            completions: self.coordinator.completion_sink(),
-        };
-        let handle = spawn_node(cfg, registry, deps)?;
+        let handle = (self.spawner)(cfg, registry)?;
         self.nodes.lock().expect("poisoned").push(handle);
         Ok(())
     }
@@ -233,17 +427,84 @@ impl Cluster {
         self.spawn_node_inner(cfg, registry)
     }
 
-    /// Remove a node by id (elastic scale-in); its queued work remains for
-    /// the other nodes.  Returns false if no such node.
+    /// Remove a node by id (elastic scale-in): decommission (no new
+    /// leases), drain in-flight work, and fold the node's terminal
+    /// cache/pool counters into the cluster totals.  Its queued work
+    /// remains for the other nodes.  Returns false if no such node.
     pub fn remove_node(&self, id: &str) -> bool {
         let mut nodes = self.nodes.lock().expect("poisoned");
         if let Some(pos) = nodes.iter().position(|n| n.id == id) {
             let node = nodes.remove(pos);
             drop(nodes); // don't hold the lock while draining
-            node.stop();
+            retire_into(node, &self.retired);
             true
         } else {
             false
+        }
+    }
+
+    /// Register (or replace) the autoscaler's node recipe at runtime.
+    pub fn set_node_template(&self, template: NodeTemplate) {
+        *self.template.lock().expect("poisoned") = Some(template);
+    }
+
+    /// Start the closed-loop autoscaler: a control thread samples
+    /// per-runtime-class queue signals every `cfg.tick` (sim time) and
+    /// applies scale decisions through the cluster's node template.
+    /// Fails if no template is registered or a controller already runs.
+    pub fn start_autoscale(&self, cfg: AutoscaleConfig) -> Result<()> {
+        cfg.validate()?;
+        if self.template.lock().expect("poisoned").is_none() {
+            anyhow::bail!("autoscale requires a node template (ClusterBuilder::node_template)");
+        }
+        let mut slot = self.autoscaler.lock().expect("poisoned");
+        if slot.is_some() {
+            anyhow::bail!("autoscaler already running");
+        }
+        let autoscaler = Arc::new(Autoscaler::new(cfg.clone()));
+        *slot = Some(autoscaler.clone());
+        drop(slot);
+
+        let plane = Arc::new(ScalePlane {
+            nodes: self.nodes.clone(),
+            queue: self.queue.clone(),
+            template: self.template.clone(),
+            retired: self.retired.clone(),
+            spawner: self.spawner.clone(),
+            auto_seq: self.auto_seq.clone(),
+            node_cache_bytes: self.node_cache_bytes,
+        });
+        let clock = self.clock.clone();
+        let stop = self.stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("autoscale".into())
+            .spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let signals = plane.sample();
+                    autoscaler.tick(&signals, clock.now(), plane.as_ref());
+                    clock.sleep(cfg.tick);
+                }
+            })
+            .expect("spawn autoscale");
+        *self.autoscale_thread.lock().expect("poisoned") = Some(handle);
+        Ok(())
+    }
+
+    /// The running autoscaler's handle (decision log, counters), if any.
+    pub fn autoscaler(&self) -> Option<Arc<Autoscaler>> {
+        self.autoscaler.lock().expect("poisoned").clone()
+    }
+
+    /// The `cluster_stats` autoscale section (disabled default when no
+    /// controller runs; node count refreshed from the live fleet).
+    pub fn autoscale_stats(&self) -> AutoscaleStats {
+        match self.autoscaler.lock().expect("poisoned").as_ref() {
+            Some(a) => {
+                let mut stats = a.stats();
+                stats.nodes = self.node_count();
+                stats
+            }
+            None => AutoscaleStats::default(),
         }
     }
 
@@ -269,10 +530,22 @@ impl Cluster {
             .collect()
     }
 
-    /// Aggregate node-local store-cache counters over live nodes (the
-    /// `cluster_stats` cache view).
+    /// Aggregate warm-pool counters: live nodes plus retired nodes'
+    /// terminal counters (cold starts / warm hits survive scale-in; the
+    /// `live`/`busy` gauges count live nodes only).
+    pub fn pool_totals(&self) -> PoolStats {
+        let mut total = self.retired.lock().expect("poisoned").pool;
+        for n in self.nodes.lock().expect("poisoned").iter() {
+            add_pool(&mut total, &n.pool_stats());
+        }
+        total
+    }
+
+    /// Aggregate node-local store-cache counters (the `cluster_stats`
+    /// cache view): live nodes plus the terminal counters of every
+    /// retired node — scale-in must not make the totals go backwards.
     pub fn node_cache_stats(&self) -> CacheStats {
-        let mut total = CacheStats::default();
+        let mut total = self.retired.lock().expect("poisoned").cache;
         for n in self.nodes.lock().expect("poisoned").iter() {
             total.add(&n.cache_stats());
         }
@@ -348,15 +621,19 @@ impl Cluster {
         self.coordinator.drain(timeout)
     }
 
-    /// Stop everything: nodes first (drain workers), then housekeeping and
-    /// the coordinator collector.
+    /// Stop everything: the autoscale thread first (it may otherwise
+    /// stamp out nodes mid-shutdown), then nodes (drain workers), then
+    /// housekeeping and the coordinator collector.
     pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.autoscale_thread.lock().expect("poisoned").take() {
+            let _ = h.join();
+        }
         let nodes: Vec<NodeHandle> =
             std::mem::take(&mut *self.nodes.lock().expect("poisoned"));
         for n in nodes {
             n.stop();
         }
-        self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.housekeeper.lock().expect("poisoned").take() {
             let _ = h.join();
         }
@@ -480,6 +757,109 @@ mod tests {
         // scale back out: the queued event is picked up
         cluster.add_node("node-2", paper_dualgpu()).unwrap();
         assert_eq!(cluster.drain(Duration::from_secs(20)), 0);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn retired_node_counters_fold_into_cluster_totals() {
+        // Regression: remove_node used to drop the retired node's
+        // cache/pool counters from cluster_stats entirely.
+        let cluster = Cluster::builder()
+            .time_scale(200.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .node("node-1", paper_dualgpu())
+            .build()
+            .unwrap();
+        let key = cluster.upload_dataset("img", &[1.0; 8]).unwrap();
+        for _ in 0..6 {
+            cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+        }
+        assert_eq!(cluster.drain(Duration::from_secs(30)), 0);
+        let before = cluster.node_cache_stats();
+        assert!(before.misses >= 1, "node fetched the dataset: {before:?}");
+        let pool_before = cluster.pool_totals();
+        assert!(pool_before.cold_starts >= 1, "{pool_before:?}");
+
+        assert!(cluster.remove_node("node-1"));
+        assert_eq!(cluster.node_count(), 0);
+        let after = cluster.node_cache_stats();
+        assert_eq!(
+            (after.hits, after.misses, after.coalesced),
+            (before.hits, before.misses, before.coalesced),
+            "scale-in must not lose cache counters ({after:?})"
+        );
+        let pool_after = cluster.pool_totals();
+        assert_eq!(pool_after.cold_starts, pool_before.cold_starts);
+        assert_eq!(pool_after.warm_hits, pool_before.warm_hits);
+        assert_eq!((pool_after.live, pool_after.busy), (0, 0), "gauges die with the node");
+        // ...and the client-facing stats see the same totals.
+        let stats = cluster.cluster_stats().unwrap();
+        assert_eq!(stats.cache.misses, before.misses, "{:?}", stats.cache);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn autoscaler_requires_template() {
+        let cluster = Cluster::builder()
+            .time_scale(200.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .build()
+            .unwrap();
+        let err = cluster.start_autoscale(AutoscaleConfig::default());
+        assert!(err.is_err(), "no template -> refuse to start");
+        assert!(!cluster.autoscale_stats().enabled);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn autoscaler_scales_out_from_zero_and_back_to_floor() {
+        let cluster = Cluster::builder()
+            .time_scale(500.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .node_template(NodeTemplate::new("auto", paper_dualgpu))
+            .autoscale(AutoscaleConfig {
+                min_nodes: 0,
+                max_nodes: 2,
+                up_depth_per_node: 2,
+                up_oldest: Duration::from_secs(5),
+                down_idle: Duration::from_secs(3),
+                cooldown_up: Duration::from_millis(500),
+                cooldown_down: Duration::from_secs(4),
+                node_slots_hint: 4,
+                max_step_up: 1,
+                tick: Duration::from_millis(250),
+            })
+            .build()
+            .unwrap();
+        assert_eq!(cluster.node_count(), 0, "starts at zero");
+        let key = cluster.upload_dataset("img", &[1.0; 4]).unwrap();
+        let ids: Vec<String> = (0..8)
+            .map(|_| cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap())
+            .collect();
+        // Backlog with zero nodes: the controller must stamp out capacity
+        // and the fleet must serve every event.
+        assert_eq!(cluster.drain(Duration::from_secs(30)), 0, "autoscaled fleet serves");
+        for id in &ids {
+            let inv = cluster.wait(id, Duration::from_secs(5)).unwrap().expect("done");
+            assert_eq!(inv.status, Status::Succeeded);
+            assert!(
+                inv.node.as_deref().unwrap_or("").starts_with("auto-"),
+                "served by a templated node: {:?}",
+                inv.node
+            );
+        }
+        let stats = cluster.autoscale_stats();
+        assert!(stats.enabled);
+        assert!(stats.scale_ups >= 1, "{stats:?}");
+        // Idle tail: eventually back to the warm floor (zero).
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        while cluster.node_count() > 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert_eq!(cluster.node_count(), 0, "scale-to-zero after idle");
+        assert!(cluster.autoscale_stats().scale_downs >= 1);
+        // Terminal counters of the autoscaled nodes survived scale-in.
+        assert!(cluster.node_cache_stats().misses >= 1);
         cluster.shutdown();
     }
 }

@@ -12,7 +12,7 @@
 
 pub mod cluster;
 
-pub use cluster::{Cluster, ClusterBuilder};
+pub use cluster::{Cluster, ClusterBuilder, NodeTemplate};
 
 use crate::events::{EventSpec, Invocation, Status};
 use crate::metrics::MetricsHub;

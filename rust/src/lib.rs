@@ -51,6 +51,7 @@
 //! experiment index, and `EXPERIMENTS.md` for reproduced results.
 
 pub mod api;
+pub mod autoscale;
 pub mod bench;
 pub mod cli;
 pub mod config;

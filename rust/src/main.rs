@@ -51,7 +51,15 @@ fn app() -> App {
                 .opt("queue-addr", "127.0.0.1:7401", "queue bind address")
                 .opt("store-addr", "127.0.0.1:7402", "store bind address")
                 .opt("store-dir", "", "object store directory (empty = in-memory)")
-                .opt("runtimes", "tinyyolo", "comma-separated runtimes to announce"),
+                .opt("runtimes", "tinyyolo", "comma-separated runtimes to announce")
+                .flag("autoscale", "run the elasticity controller (advisory: decisions are logged and surfaced in `hardless status`; node provisioning stays external)")
+                .opt("autoscale-min", "0", "warm floor (scale-in never goes below this many nodes)")
+                .opt("autoscale-max", "8", "fleet ceiling")
+                .opt("autoscale-up-depth", "4", "scale out when a runtime class queues more than this per node")
+                .opt("autoscale-up-oldest-ms", "10000", "...or when a class's oldest queued event has waited this long")
+                .opt("autoscale-idle-ms", "30000", "scale in one node after the system has been empty this long")
+                .opt("autoscale-cooldown-up-ms", "15000", "minimum spacing between scale-outs")
+                .opt("autoscale-cooldown-down-ms", "60000", "minimum spacing between a scale-in and the last action"),
         )
         .command(
             Command::new("node", "run a worker node against a running `serve`")
@@ -173,6 +181,35 @@ fn cmd_serve(m: &hardless::cli::Matches) -> anyhow::Result<()> {
         .filter(|s| !s.is_empty())
         .map(String::from)
         .collect();
+    let autoscale = if m.flag("autoscale") {
+        let ms = |name: &str| -> anyhow::Result<Duration> {
+            Ok(Duration::from_millis(
+                m.parse_num::<u64>(name).map_err(|e| anyhow::anyhow!(e))?,
+            ))
+        };
+        let cfg = hardless::autoscale::AutoscaleConfig {
+            min_nodes: m.parse_num("autoscale-min").map_err(|e| anyhow::anyhow!(e))?,
+            max_nodes: m.parse_num("autoscale-max").map_err(|e| anyhow::anyhow!(e))?,
+            up_depth_per_node: m
+                .parse_num("autoscale-up-depth")
+                .map_err(|e| anyhow::anyhow!(e))?,
+            up_oldest: ms("autoscale-up-oldest-ms")?,
+            down_idle: ms("autoscale-idle-ms")?,
+            cooldown_up: ms("autoscale-cooldown-up-ms")?,
+            cooldown_down: ms("autoscale-cooldown-down-ms")?,
+            ..hardless::autoscale::AutoscaleConfig::default()
+        };
+        if cfg.min_nodes > cfg.max_nodes {
+            anyhow::bail!(
+                "--autoscale-min {} exceeds --autoscale-max {}",
+                cfg.min_nodes,
+                cfg.max_nodes
+            );
+        }
+        Some(cfg)
+    } else {
+        None
+    };
     let qs = QueueServer::serve(m.str_req("queue-addr"), queue.clone())?;
     let ss = StoreServer::serve(m.str_req("store-addr"), store.clone())?;
     let gw = GatewayServer::serve(
@@ -180,8 +217,18 @@ fn cmd_serve(m: &hardless::cli::Matches) -> anyhow::Result<()> {
         queue.clone() as Arc<dyn InvocationQueue>,
         store,
         clock,
-        GatewayConfig { announce_runtimes: announce, ..GatewayConfig::default() },
+        GatewayConfig { announce_runtimes: announce, autoscale: autoscale.clone(), ..GatewayConfig::default() },
     )?;
+    if let Some(cfg) = &autoscale {
+        println!(
+            "autoscale (advisory): nodes {}..{}, up at depth>{}/node or oldest>={}ms, in after {}ms idle",
+            cfg.min_nodes,
+            cfg.max_nodes,
+            cfg.up_depth_per_node,
+            cfg.up_oldest.as_millis(),
+            cfg.down_idle.as_millis()
+        );
+    }
     println!("gateway listening on {}  (submit/status/wait/results)", gw.addr());
     println!("queue   listening on {}  (node managers take work here)", qs.addr());
     println!("store   listening on {}  (datasets, bundles, results)", ss.addr());

@@ -111,6 +111,9 @@ pub struct NodeDeps {
 pub struct NodeHandle {
     pub id: String,
     stop: Arc<AtomicBool>,
+    /// Decommission flag: set, the manager (and its workers' warm
+    /// re-take path) stops taking new leases while in-flight work drains.
+    draining: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<()>>,
     pool: Arc<InstancePool>,
     registry: DeviceRegistry,
@@ -125,6 +128,33 @@ impl NodeHandle {
     /// shared queue untouched (dynamic membership, §IV-C).
     pub fn stop(mut self) {
         self.stop_inner();
+    }
+
+    /// Begin graceful scale-in: the node stops taking new leases (both
+    /// the manager poll and the workers' same-config re-take) but keeps
+    /// serving whatever it already leased.  Call [`stop`](Self::stop) —
+    /// or [`retire`](Self::retire) — afterwards to drain and join.
+    pub fn decommission(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Graceful scale-in, end to end: decommission, drain, stop, and
+    /// hand back the node's terminal cache/pool counters so the cluster
+    /// can fold them into its totals (counters must survive scale-in —
+    /// `cluster_stats` never goes backwards).  The returned pool gauges
+    /// (`live`/`busy`) are zeroed: those instances die with the node.
+    pub fn retire(mut self) -> (CacheStats, crate::runtime::pool::PoolStats) {
+        self.decommission();
+        self.stop_inner();
+        let cache = self.cache_stats();
+        let mut pool = self.pool.stats();
+        pool.live = 0;
+        pool.busy = 0;
+        (cache, pool)
     }
 
     fn stop_inner(&mut self) {
@@ -170,6 +200,7 @@ impl Drop for NodeHandle {
 /// [`DecodedCache`] so each dataset is decoded to f32 once per node.
 pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps) -> Result<NodeHandle> {
     let stop = Arc::new(AtomicBool::new(false));
+    let draining = Arc::new(AtomicBool::new(false));
     let pool = InstancePool::new(cfg.pool_capacity);
     let cache = if cfg.cache_bytes > 0 {
         let c = Arc::new(CachedStore::new(deps.store.clone(), cfg.cache_bytes));
@@ -183,13 +214,15 @@ pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps)
     let handle_registry = registry.clone();
     let handle_decoded = decoded.clone();
     let stop2 = stop.clone();
+    let draining2 = draining.clone();
     let id = cfg.id.clone();
     let thread = std::thread::Builder::new()
         .name(format!("node-mgr-{}", cfg.id))
-        .spawn(move || manager_loop(cfg, registry, pool, deps, decoded, stop2))?;
+        .spawn(move || manager_loop(cfg, registry, pool, deps, decoded, stop2, draining2))?;
     Ok(NodeHandle {
         id,
         stop,
+        draining,
         thread: Some(thread),
         pool: handle_pool,
         registry: handle_registry,
@@ -205,10 +238,19 @@ fn manager_loop(
     deps: NodeDeps,
     decoded: Arc<DecodedCache>,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
 ) {
     let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         workers.retain(|w| !w.is_finished());
+
+        // Decommissioned: in-flight workers run to completion, but no
+        // new lease is taken (graceful scale-in, the autoscaler's
+        // remove path).
+        if draining.load(Ordering::SeqCst) {
+            deps.clock.sleep(cfg.poll_interval);
+            continue;
+        }
 
         // Backpressure: never take work we have no slot for.
         if registry.free_slots() == 0 {
@@ -291,6 +333,7 @@ fn manager_loop(
                 policy: deps.policy.clone(),
                 reserve: deps.reserve.clone(),
                 completions: deps.completions.clone(),
+                draining: draining.clone(),
             };
             let worker = std::thread::Builder::new()
                 .name(format!("worker-{}", inv.id))
@@ -585,6 +628,39 @@ mod tests {
         r.queue.publish(inv).unwrap();
         std::thread::sleep(Duration::from_millis(100));
         assert_eq!(r.queue.stats().unwrap().queued, 1);
+    }
+
+    #[test]
+    fn decommission_stops_new_leases_but_serves_inflight() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0; 4]);
+        submit(&r, "inv-before", &key);
+        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(done.status, Status::Succeeded);
+        // Decommission: the node stays alive but must take nothing new —
+        // neither via the manager poll nor the workers' warm re-take.
+        r.node.decommission();
+        assert!(r.node.is_draining());
+        // Let the manager cycle past the flag (a take entered just
+        // before the flag flipped could otherwise race the publish).
+        std::thread::sleep(Duration::from_millis(50));
+        submit(&r, "inv-after", &key);
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(
+            r.queue.stats().unwrap().queued,
+            1,
+            "decommissioned node must not take new leases"
+        );
+        assert!(
+            r.completions.try_recv().is_err(),
+            "nothing served after decommission"
+        );
+        // retire() drains + joins and hands back terminal counters.
+        let (cache, pool) = r.node.retire();
+        assert!(cache.misses >= 1, "served one dataset fetch: {cache:?}");
+        assert_eq!((pool.live, pool.busy), (0, 0), "gauges zeroed on retire");
+        assert!(pool.cold_starts >= 1, "{pool:?}");
+        assert_eq!(r.queue.stats().unwrap().queued, 1, "queued work untouched");
     }
 
     #[test]

@@ -37,6 +37,10 @@ pub struct WorkerCtx {
     pub policy: Arc<dyn Policy>,
     pub reserve: Arc<crate::node::InstanceReserve>,
     pub completions: Arc<dyn CompletionSink>,
+    /// Node decommission flag: set, workers finish their current
+    /// invocation but skip the §IV-D warm re-take (graceful scale-in
+    /// must stop *all* lease-taking paths, not just the manager poll).
+    pub draining: Arc<std::sync::atomic::AtomicBool>,
 }
 
 /// Pick a device + slot for `runtime`.  When the lease was a warm hit,
@@ -158,6 +162,12 @@ pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
         let _ = ctx.queue.ack(&inv.id);
         if let Err(e) = ctx.completions.report(inv) {
             log::warn!("node {}: completion report failed: {e:#}", ctx.node_id);
+        }
+
+        // Decommissioned mid-drain: the lease just served is done; no
+        // further work may be taken on this node.
+        if ctx.draining.load(std::sync::atomic::Ordering::SeqCst) {
+            break;
         }
 
         // §IV-D: "When an already running invocation is finished, they

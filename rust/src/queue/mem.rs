@@ -385,12 +385,35 @@ impl InvocationQueue for MemQueue {
     }
 
     fn stats(&self) -> Result<QueueStats> {
+        let now = self.clock.now();
         let inner = self.inner.lock().expect("queue poisoned");
+        // Per-class probe: one lane-front read per present class —
+        // O(|classes|), independent of queue depth (every lane is a FIFO
+        // whose front is its oldest member, front requeues included).
+        let mut classes: Vec<super::ClassStats> = inner
+            .queued
+            .iter()
+            .map(|(rt, lane)| {
+                let (_, front) = lane.front().expect("lanes are never empty");
+                let oldest_waiting_ms = front
+                    .stamps
+                    .r_start
+                    .map(|t| now.since(t).as_millis() as u64)
+                    .unwrap_or(0);
+                super::ClassStats {
+                    runtime: rt.clone(),
+                    queued: lane.len(),
+                    oldest_waiting_ms,
+                }
+            })
+            .collect();
+        classes.sort_by(|a, b| a.runtime.cmp(&b.runtime));
         Ok(QueueStats {
             queued: inner.order.len(),
             in_flight: inner.in_flight.len(),
             acked: inner.acked,
             dead: inner.dead.len(),
+            classes,
         })
     }
 }
@@ -568,6 +591,46 @@ mod tests {
         // Past the live deadline: exactly one reap.
         clock.advance(Duration::from_secs(1));
         assert_eq!(q.reap_expired().unwrap(), 1);
+    }
+
+    #[test]
+    fn stats_expose_per_class_depth_and_age() {
+        let (clock, q) = queue();
+        // Two classes: "a" has depth 2 (oldest published at t=0), "b"
+        // depth 1 (published at t=4s).
+        q.publish(inv("a1", "a")).unwrap();
+        q.publish(inv("a2", "a")).unwrap();
+        clock.advance(Duration::from_secs(4));
+        q.publish(
+            Invocation::new("b1", EventSpec::new("b", "datasets/d"), clock.now()),
+        )
+        .unwrap();
+        clock.advance(Duration::from_secs(1));
+        let s = q.stats().unwrap();
+        assert_eq!(s.queued, 3);
+        assert_eq!(s.classes.len(), 2, "{:?}", s.classes);
+        assert_eq!(s.classes[0].runtime, "a", "sorted by runtime");
+        assert_eq!(s.classes[0].queued, 2);
+        assert_eq!(s.classes[0].oldest_waiting_ms, 5000, "front of lane a is a1 (t=0)");
+        assert_eq!(s.classes[1].runtime, "b");
+        assert_eq!(s.classes[1].queued, 1);
+        assert_eq!(s.classes[1].oldest_waiting_ms, 1000);
+        // Taking the lane front shifts the class gauge to the next item;
+        // draining a lane removes its class entirely.
+        let f = TakeFilter::supporting(vec!["a".into()]);
+        q.take(&f).unwrap().unwrap();
+        q.take(&f).unwrap().unwrap();
+        let s = q.stats().unwrap();
+        assert_eq!(s.classes.len(), 1, "lane a drained: {:?}", s.classes);
+        assert_eq!(s.classes[0].runtime, "b");
+        // An expired lease requeued at the front restores the class with
+        // its original age.
+        clock.advance(Duration::from_secs(31));
+        q.reap_expired().unwrap();
+        let s = q.stats().unwrap();
+        let a = s.classes.iter().find(|c| c.runtime == "a").expect("requeued");
+        assert_eq!(a.queued, 2);
+        assert_eq!(a.oldest_waiting_ms, 36_000, "age measured from RStart");
     }
 
     #[test]

@@ -113,13 +113,47 @@ pub struct Lease {
     pub attempt: u32,
 }
 
+/// Per-runtime-class gauge: the queue depth of one lane and the age of
+/// its frontmost (oldest) invocation.  These are the autoscaler's two
+/// primary pressure signals — a class whose lane is deep or whose head
+/// has waited too long needs capacity regardless of global depth.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ClassStats {
+    pub runtime: String,
+    /// Invocations queued (not leased) in this class's lane.
+    pub queued: usize,
+    /// Sim-time age of the lane front (now − `RStart`), milliseconds.
+    pub oldest_waiting_ms: u64,
+}
+
+impl ClassStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("runtime", self.runtime.as_str())
+            .set("queued", self.queued)
+            .set("oldest_waiting_ms", self.oldest_waiting_ms)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClassStats> {
+        Ok(ClassStats {
+            runtime: j.str_of("runtime")?.to_string(),
+            queued: j.usize_of("queued")?,
+            oldest_waiting_ms: j.u64_of("oldest_waiting_ms").unwrap_or(0),
+        })
+    }
+}
+
 /// Queue gauge snapshot (the paper samples `#queued` periodically).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct QueueStats {
     pub queued: usize,
     pub in_flight: usize,
     pub acked: usize,
     pub dead: usize,
+    /// Per-runtime-class depth/age, sorted by runtime name (deterministic
+    /// for wire encoding and decision-log reproducibility).  Backends
+    /// that cannot compute it cheaply may leave it empty.
+    pub classes: Vec<ClassStats>,
 }
 
 /// The shared invocation queue interface (in-memory and TCP deployments).

@@ -107,12 +107,15 @@ impl QueueServer {
             )),
             "stats" => {
                 let s = backend.stats()?;
+                let classes: Vec<Json> =
+                    s.classes.iter().map(|c| c.to_json()).collect();
                 Ok((
                     Json::obj()
                         .set("queued", s.queued)
                         .set("in_flight", s.in_flight)
                         .set("acked", s.acked)
-                        .set("dead", s.dead),
+                        .set("dead", s.dead)
+                        .set("classes", Json::Arr(classes)),
                     None,
                 ))
             }
@@ -233,11 +236,21 @@ impl InvocationQueue for QueueClient {
 
     fn stats(&self) -> Result<QueueStats> {
         let out = self.rpc.call("stats", Json::obj())?;
+        // `classes` parses leniently (absent → empty): the scalar gauges
+        // predate the per-class probe.
+        let classes = match out.get("classes").and_then(|j| j.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .filter_map(|j| super::ClassStats::from_json(j).ok())
+                .collect(),
+            None => Vec::new(),
+        };
         Ok(QueueStats {
             queued: out.usize_of("queued")?,
             in_flight: out.usize_of("in_flight")?,
             acked: out.usize_of("acked")?,
             dead: out.usize_of("dead")?,
+            classes,
         })
     }
 }
@@ -276,6 +289,20 @@ mod tests {
         );
         q.ack("1").unwrap();
         assert_eq!(q.stats().unwrap().acked, 1);
+    }
+
+    #[test]
+    fn per_class_stats_survive_the_wire() {
+        let (_s, q) = setup();
+        q.publish(inv("1", "tinyyolo")).unwrap();
+        q.publish(inv("2", "tinyyolo")).unwrap();
+        q.publish(inv("3", "bert")).unwrap();
+        let s = q.stats().unwrap();
+        assert_eq!(s.classes.len(), 2, "{:?}", s.classes);
+        assert_eq!(s.classes[0].runtime, "bert");
+        assert_eq!(s.classes[0].queued, 1);
+        assert_eq!(s.classes[1].runtime, "tinyyolo");
+        assert_eq!(s.classes[1].queued, 2);
     }
 
     #[test]

@@ -104,15 +104,22 @@ impl Clock for ScaledClock {
     }
 }
 
-/// Fully virtual clock for unit tests: time only moves when told to.
-/// `sleep` advances the virtual time without blocking the thread.
-pub struct TestClock {
+/// Fully virtual clock: time only moves when told to.  `sleep` advances
+/// the virtual time without blocking the thread, so anything driven by a
+/// `SimClock` — unit tests, the autoscaler scenario suite — is
+/// deterministic and wall-clock-free: the same inputs replay the same
+/// timeline byte for byte.
+pub struct SimClock {
     micros: std::sync::atomic::AtomicU64,
 }
 
-impl TestClock {
-    pub fn new() -> Arc<TestClock> {
-        Arc::new(TestClock { micros: 0.into() })
+/// Historical name for [`SimClock`] (the unit-test clock predates the
+/// autoscaler's deterministic scenario harness).
+pub type TestClock = SimClock;
+
+impl SimClock {
+    pub fn new() -> Arc<SimClock> {
+        Arc::new(SimClock { micros: 0.into() })
     }
 
     pub fn advance(&self, d: Duration) {
@@ -125,7 +132,7 @@ impl TestClock {
     }
 }
 
-impl Clock for TestClock {
+impl Clock for SimClock {
     fn now(&self) -> SimTime {
         SimTime(self.micros.load(std::sync::atomic::Ordering::SeqCst))
     }
@@ -169,8 +176,8 @@ mod tests {
     }
 
     #[test]
-    fn test_clock_manual() {
-        let c = TestClock::new();
+    fn sim_clock_manual() {
+        let c = SimClock::new();
         assert_eq!(c.now(), SimTime(0));
         c.advance(Duration::from_millis(10));
         assert_eq!(c.now(), SimTime::from_millis(10));

@@ -7,7 +7,7 @@ pub mod hist;
 pub mod rng;
 pub mod window;
 
-pub use clock::{Clock, ScaledClock, SimTime};
+pub use clock::{Clock, ScaledClock, SimClock, SimTime};
 pub use hist::Histogram;
 pub use rng::Rng;
 pub use window::MovingWindow;

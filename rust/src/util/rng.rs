@@ -25,12 +25,20 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
-    /// Entropy-seeded generator (uses the OS RNG).
+    /// Entropy-seeded generator.  `std`'s `RandomState` is seeded from
+    /// the OS RNG, so hashing a timestamp through it yields a fresh
+    /// 64-bit seed without an external `getrandom` dependency (this
+    /// crate builds offline with std only).
     pub fn from_entropy() -> Rng {
-        let mut buf = [0u8; 8];
-        // getrandom failure is unrecoverable and indicates a broken platform.
-        getrandom::fill(&mut buf).expect("os entropy");
-        Rng::new(u64::from_le_bytes(buf))
+        use std::collections::hash_map::RandomState;
+        use std::hash::{BuildHasher, Hasher};
+        let mut h = RandomState::new().build_hasher();
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        h.write_u64(nanos);
+        Rng::new(h.finish())
     }
 
     /// Next raw 64-bit value (xoshiro256++).

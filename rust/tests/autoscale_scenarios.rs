@@ -1,0 +1,268 @@
+//! Deterministic autoscaler scenario tests — burst, ramp, and idle load
+//! traces driven entirely under [`SimClock`].
+//!
+//! The container this repo grows in has no way to run a live cluster at
+//! test time, so elasticity is pinned the only way that is reviewable
+//! and reproducible: a virtual fleet model advances in fixed sim-time
+//! ticks, the controller sees exactly the gauges a real cluster would
+//! publish, and every assertion is about the **decision sequence** —
+//! reaction bounds, monotone ramps, scale-to-zero, and byte-for-byte
+//! reproducibility.  Zero wall-clock sleeps anywhere in this file.
+
+use hardless::autoscale::{Action, AutoscaleConfig, AutoscaleController, Decision, Signals};
+use hardless::queue::ClassStats;
+use hardless::util::clock::SimClock;
+use hardless::util::{Clock, SimTime};
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Virtual single-class fleet: every tick, each node serves up to
+/// `slots` queued invocations oldest-first, then new arrivals land.
+struct SimFleet {
+    clock: Arc<SimClock>,
+    controller: AutoscaleController,
+    queued: VecDeque<SimTime>,
+    nodes: usize,
+    slots: usize,
+    /// Applied node count after every tick (assertion material).
+    node_history: Vec<usize>,
+}
+
+impl SimFleet {
+    fn new(cfg: AutoscaleConfig) -> SimFleet {
+        let nodes = cfg.min_nodes;
+        let slots = cfg.node_slots_hint;
+        SimFleet {
+            clock: SimClock::new(),
+            controller: AutoscaleController::new(cfg),
+            queued: VecDeque::new(),
+            nodes,
+            slots,
+            node_history: Vec::new(),
+        }
+    }
+
+    /// Advance one tick with `arrivals` new invocations; returns the
+    /// controller's decision for the tick.
+    fn tick(&mut self, arrivals: usize) -> Decision {
+        let tick = self.controller.config().tick;
+        self.clock.advance(tick);
+        let now = self.clock.now();
+        let capacity = self.nodes * self.slots;
+        for _ in 0..capacity.min(self.queued.len()) {
+            self.queued.pop_front();
+        }
+        for _ in 0..arrivals {
+            self.queued.push_back(now);
+        }
+        let classes = if self.queued.is_empty() {
+            Vec::new()
+        } else {
+            vec![ClassStats {
+                runtime: "tinyyolo".into(),
+                queued: self.queued.len(),
+                oldest_waiting_ms: now.since(self.queued[0]).as_millis() as u64,
+            }]
+        };
+        let signals = Signals {
+            queued: self.queued.len(),
+            in_flight: 0,
+            classes,
+            nodes: self.nodes,
+            free_slots: self.nodes * self.slots,
+            warm_instances: 0,
+        };
+        let decision = self.controller.evaluate(&signals, now);
+        match decision.action {
+            Action::Hold => {}
+            Action::Up(n) => self.nodes += n,
+            Action::Down(n) => self.nodes -= n,
+        }
+        self.node_history.push(self.nodes);
+        decision
+    }
+
+    fn run(&mut self, trace: &[usize]) -> Vec<Decision> {
+        trace.iter().map(|&a| self.tick(a)).collect()
+    }
+}
+
+fn cfg(min_nodes: usize) -> AutoscaleConfig {
+    AutoscaleConfig {
+        min_nodes,
+        max_nodes: 4,
+        up_depth_per_node: 4,
+        up_oldest: Duration::from_secs(10),
+        down_idle: Duration::from_secs(5),
+        cooldown_up: Duration::from_secs(2),
+        cooldown_down: Duration::from_secs(8),
+        node_slots_hint: 4,
+        max_step_up: 2,
+        tick: Duration::from_secs(1),
+    }
+}
+
+/// A 40-tick ramp: arrivals grow 1, 2, 3, ... then stop.
+fn ramp_trace() -> Vec<usize> {
+    let mut t: Vec<usize> = (1..=12).collect();
+    t.extend([12usize; 8]);
+    t.extend([0usize; 20]);
+    t
+}
+
+#[test]
+fn burst_scale_up_reacts_within_one_tick() {
+    // Quiet, then a 40-event burst at tick 4 onto a zero-node fleet.
+    let mut fleet = SimFleet::new(cfg(0));
+    for _ in 0..3 {
+        let d = fleet.tick(0);
+        assert_eq!(d.action, Action::Hold, "quiet fleet holds: {d:?}");
+    }
+    let d = fleet.tick(40);
+    // Reaction bound: the very tick that sees the burst scales out.
+    assert_eq!(d.action, Action::Up(2), "burst seen at tick 4: {d:?}");
+    assert_eq!(d.target, 2);
+    assert!(d.reason.contains("zero nodes"), "{}", d.reason);
+    // Cooldown (2s = 2 ticks) gates the next step; pressure persists
+    // (40 queued vs 8 slots), so the controller steps again right after.
+    let d = fleet.tick(0);
+    assert_eq!(d.action, Action::Hold, "up-cooldown: {d:?}");
+    let d = fleet.tick(0);
+    assert_eq!(d.action, Action::Up(2), "second step at cooldown expiry: {d:?}");
+    assert_eq!(fleet.nodes, 4, "reached max_nodes");
+    // At max, the controller can only hold while the backlog drains.
+    let d = fleet.tick(0);
+    assert!(d.action.is_hold(), "{d:?}");
+    assert_eq!(fleet.nodes, 4);
+}
+
+#[test]
+fn ramp_scales_monotonically_and_never_exceeds_bounds() {
+    let mut fleet = SimFleet::new(cfg(0));
+    let decisions = fleet.run(&ramp_trace());
+    // While arrivals grow, the node count never decreases.
+    let growth_phase = &fleet.node_history[..20];
+    for w in growth_phase.windows(2) {
+        assert!(w[1] >= w[0], "no scale-in during the ramp: {growth_phase:?}");
+    }
+    // Bounds hold at every applied step and every decision target.
+    assert!(fleet.node_history.iter().all(|&n| n <= 4), "{:?}", fleet.node_history);
+    assert!(decisions.iter().all(|d| d.target <= 4));
+    // The ramp actually demanded capacity.
+    assert!(
+        decisions.iter().any(|d| matches!(d.action, Action::Up(_))),
+        "ramp triggered scale-out"
+    );
+}
+
+#[test]
+fn idle_tail_scales_to_zero() {
+    // Burst, drain, then a long idle tail: the fleet must return to the
+    // warm floor (here zero), one spaced step at a time.
+    let mut fleet = SimFleet::new(cfg(0));
+    let mut trace = vec![0, 40];
+    trace.extend([0usize; 60]);
+    let decisions = fleet.run(&trace);
+    assert_eq!(fleet.nodes, 0, "scale-to-zero: {:?}", fleet.node_history);
+    let downs: Vec<&Decision> = decisions
+        .iter()
+        .filter(|d| matches!(d.action, Action::Down(_)))
+        .collect();
+    assert!(!downs.is_empty());
+    // Scale-ins arrive one node at a time, spaced by cooldown_down.
+    for d in &downs {
+        assert_eq!(d.action, Action::Down(1));
+    }
+    for w in downs.windows(2) {
+        assert!(
+            w[1].at.since(w[0].at) >= Duration::from_secs(8),
+            "{} then {}",
+            w[0].describe(),
+            w[1].describe()
+        );
+    }
+}
+
+#[test]
+fn warm_floor_is_respected_on_the_way_down() {
+    let mut fleet = SimFleet::new(cfg(1));
+    assert_eq!(fleet.nodes, 1, "fleet starts at the floor");
+    let mut trace = vec![0, 40];
+    trace.extend([0usize; 60]);
+    fleet.run(&trace);
+    assert_eq!(fleet.nodes, 1, "idle fleet rests at the warm floor");
+    assert!(fleet.node_history.iter().all(|&n| n >= 1), "{:?}", fleet.node_history);
+}
+
+#[test]
+fn oldest_age_rescues_a_shallow_stuck_lane() {
+    // One queued invocation on a one-node fleet never crosses the depth
+    // watermark — but a lane whose head waits past up_oldest must
+    // trigger anyway.  (Model a stuck lane: capacity exists but the item
+    // stays queued, as with a runtime class the node cannot serve.)
+    let mut fleet = SimFleet::new(cfg(1));
+    fleet.slots = 0; // the node cannot serve this class
+    let mut saw_up = None;
+    fleet.tick(1);
+    for t in 0..12 {
+        let d = fleet.tick(0);
+        if matches!(d.action, Action::Up(_)) {
+            saw_up = Some((t, d));
+            break;
+        }
+    }
+    let (t, d) = saw_up.expect("age watermark fired");
+    assert!(d.reason.contains("oldest waiting"), "{}", d.reason);
+    assert!(t >= 8, "not before the 10s age bound: fired at tick {t}");
+}
+
+#[test]
+fn exact_decision_sequence_for_a_small_trace() {
+    // The full (tick, action, target) sequence for a 12-tick trace is
+    // pinned exactly — any controller change that alters scheduling
+    // shows up here as a diff, not as a flaky threshold.
+    let mut fleet = SimFleet::new(cfg(0));
+    let decisions = fleet.run(&[0, 9, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+    let got: Vec<(u64, Action, usize)> =
+        decisions.iter().map(|d| (d.tick, d.action, d.target)).collect();
+    let want = vec![
+        (1, Action::Hold, 0),    // quiet
+        (2, Action::Up(2), 2),   // 9 queued, zero nodes -> up (deficit 9 / hint 4, capped)
+        (3, Action::Hold, 2),    // up-cooldown (1s < 2s); backlog draining
+        (4, Action::Hold, 2),    // queue empty (8 slots served it): idle timer arms
+        (5, Action::Hold, 2),    // idle 1s < 5s
+        (6, Action::Hold, 2),    // idle 2s
+        (7, Action::Hold, 2),    // idle 3s
+        (8, Action::Hold, 2),    // idle 4s
+        (9, Action::Hold, 2),    // idle 5s but down-cooldown after up (7s < 8s)
+        (10, Action::Down(1), 1), // 8s since the up: first scale-in
+        (11, Action::Hold, 1),   // down-cooldown
+        (12, Action::Hold, 1),   // down-cooldown
+    ];
+    assert_eq!(got, want, "{}", fleet.controller.log_digest());
+}
+
+#[test]
+fn same_trace_reproduces_the_decision_log_byte_for_byte() {
+    let trace = ramp_trace();
+    let mut a = SimFleet::new(cfg(1));
+    let mut b = SimFleet::new(cfg(1));
+    a.run(&trace);
+    b.run(&trace);
+    let (da, db) = (a.controller.log_digest(), b.controller.log_digest());
+    assert!(!da.is_empty());
+    assert_eq!(da, db, "identical traces must replay identically");
+    // And through the seeded generator: the same seed yields the same
+    // trace, hence the same digest (the property suite drives this
+    // harder; this is the end-to-end smoke).
+    let mk = |seed: u64| -> String {
+        let mut rng = hardless::util::Rng::new(seed);
+        let trace: Vec<usize> = (0..50).map(|_| rng.below(12) as usize).collect();
+        let mut fleet = SimFleet::new(cfg(0));
+        fleet.run(&trace);
+        fleet.controller.log_digest()
+    };
+    assert_eq!(mk(42), mk(42));
+    assert_ne!(mk(42), mk(43), "different seeds explore different traces");
+}

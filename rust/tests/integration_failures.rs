@@ -8,10 +8,11 @@
 
 use hardless::accel::{paper_dualgpu, AcceleratorProfile, Device, DeviceRegistry};
 use hardless::api::HardlessClient;
-use hardless::coordinator::cluster::{Cluster, ExecutorKind};
+use hardless::autoscale::AutoscaleConfig;
+use hardless::coordinator::cluster::{Cluster, ExecutorKind, NodeTemplate};
 use hardless::events::{EventSpec, Status};
 use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps};
-use hardless::queue::{InvocationQueue, MemQueue};
+use hardless::queue::{InvocationQueue, MemQueue, QueueConfig, TakeFilter};
 use hardless::runtime::instance::{Executor, MockExecutor};
 use hardless::runtime::RuntimeInstance;
 use hardless::scheduler::WarmFirst;
@@ -174,6 +175,76 @@ fn reserve_exhaustion_is_reported_not_hung() {
     assert!(ok >= 1, "the provisioned instance serves");
     assert!(ok + err == 2, "{outcomes:?}");
     node.stop();
+}
+
+#[test]
+fn node_death_mid_lease_redelivers_and_autoscaler_replaces_capacity() {
+    // A "node" dies holding a lease: the visibility timeout must
+    // redeliver the invocation, and the autoscaler must replace the lost
+    // capacity within one evaluation tick — the event completes on a
+    // freshly stamped node with no operator involvement.
+    let cluster = Cluster::builder()
+        .time_scale(200.0)
+        .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+        .queue_config(QueueConfig {
+            visibility: Duration::from_secs(2),
+            max_attempts: 5,
+        })
+        .node_template(NodeTemplate::new("auto", paper_dualgpu))
+        .build()
+        .unwrap();
+    assert_eq!(cluster.node_count(), 0, "starts with no nodes");
+    let key = cluster.upload_dataset("img", &[1.0; 4]).unwrap();
+    let id = cluster.submit(EventSpec::new("tinyyolo", &key)).unwrap();
+
+    // Pose as the doomed node: lease the invocation and die without
+    // acking.  (No real node exists yet, so the steal cannot race.)
+    let lease = cluster
+        .queue
+        .take(&TakeFilter::default())
+        .unwrap()
+        .expect("the submitted event");
+    assert_eq!(lease.invocation.id, id);
+    assert_eq!(lease.attempt, 1);
+
+    // Now close the loop.  The autoscaler sees in-flight work with zero
+    // nodes (lost capacity) and stamps out a replacement; housekeeping
+    // reaps the dead node's lease after the visibility window and the
+    // replacement serves the redelivery.
+    cluster
+        .start_autoscale(AutoscaleConfig {
+            min_nodes: 0,
+            max_nodes: 2,
+            up_depth_per_node: 1,
+            up_oldest: Duration::from_secs(1),
+            down_idle: Duration::from_secs(60),
+            cooldown_up: Duration::from_millis(500),
+            cooldown_down: Duration::from_secs(60),
+            node_slots_hint: 4,
+            max_step_up: 1,
+            tick: Duration::from_millis(250),
+        })
+        .unwrap();
+
+    let inv = cluster
+        .wait(&id, Duration::from_secs(30))
+        .unwrap()
+        .expect("redelivered and completed");
+    assert_eq!(inv.status, Status::Succeeded);
+    assert!(
+        inv.node.as_deref().unwrap_or("").starts_with("auto-"),
+        "served by the autoscaled replacement: {:?}",
+        inv.node
+    );
+    let qs = cluster.queue.stats().unwrap();
+    assert_eq!(qs.acked, 1, "the redelivery acked; the dead lease never did");
+    assert_eq!(qs.dead, 0, "redelivered, not dead-lettered");
+    assert_eq!(qs.in_flight, 0);
+    let autoscale = cluster.autoscale_stats();
+    assert!(autoscale.enabled);
+    assert!(autoscale.scale_ups >= 1, "lost capacity replaced: {autoscale:?}");
+    assert!(cluster.node_count() >= 1);
+    cluster.shutdown();
 }
 
 #[test]
