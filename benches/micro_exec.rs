@@ -1,0 +1,119 @@
+//! Micro-benchmark: the execution hot path, serial vs micro-batched.
+//!
+//! DESIGN.md §11: N same-variant invocations must cost one
+//! instance-thread hop and one device dispatch.  On the mock engine the
+//! per-dispatch delay models accelerator dispatch overhead, so the
+//! batched rates measure exactly the amortization micro-batching buys;
+//! the zero-delay rows isolate the channel/demux overhead the instance
+//! layer itself amortizes.  Rates land in `BENCH_exec.json` (flat
+//! `op name → ops/s`, the `BENCH_queue.json` schema) so perf PRs leave a
+//! machine-readable trajectory (EXPERIMENTS.md §Perf).
+
+mod common;
+
+use hardless::json::Json;
+use hardless::runtime::instance::MockExecutor;
+use hardless::runtime::RuntimeInstance;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn measure(
+    results: &mut Vec<(&'static str, f64)>,
+    name: &'static str,
+    total_ops: usize,
+    f: impl FnOnce(),
+) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = total_ops as f64 / dt;
+    println!("{name:<44} {:>12.0} ops/s ({total_ops} ops in {dt:.3}s)", rate);
+    results.push((name, rate));
+    rate
+}
+
+fn instance(delay: Duration) -> RuntimeInstance {
+    RuntimeInstance::start("bench", "gpu0", MockExecutor::factory(1.0, delay))
+        .expect("start mock instance")
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("micro — execution path (serial vs micro-batch on the mock engine)");
+    let mut results: Vec<(&'static str, f64)> = Vec::new();
+    let input = Arc::new(vec![0.5f32; 64]);
+
+    // Dispatch-overhead regime: 100 µs per device dispatch (a modest
+    // overhead for a PJRT/driver round trip).  Serial pays it per
+    // invocation; batch=k pays it per k invocations.
+    let delay = Duration::from_micros(100);
+    let n_serial = 2_000;
+    let inst = instance(delay);
+    let serial_rate = measure(&mut results, "exec serial (100us dispatch)", n_serial, || {
+        for _ in 0..n_serial {
+            inst.exec(input.clone()).unwrap();
+        }
+    });
+    let n8 = 4_096;
+    let batch8_rate = measure(&mut results, "exec batch=8 (100us dispatch)", n8, || {
+        for _ in 0..n8 / 8 {
+            inst.exec_batch(vec![input.clone(); 8]).unwrap();
+        }
+    });
+    let n32 = 8_192;
+    let batch32_rate = measure(&mut results, "exec batch=32 (100us dispatch)", n32, || {
+        for _ in 0..n32 / 32 {
+            inst.exec_batch(vec![input.clone(); 32]).unwrap();
+        }
+    });
+    assert_eq!(inst.executions() as usize, n_serial + n8 + n32);
+    drop(inst);
+
+    // Zero-delay regime: the instance layer itself (one channel + one
+    // thread hop per batch instead of per invocation).
+    let inst0 = instance(Duration::ZERO);
+    let n0 = 100_000;
+    let serial0_rate = measure(&mut results, "exec serial (no dispatch delay)", n0, || {
+        for _ in 0..n0 {
+            inst0.exec(input.clone()).unwrap();
+        }
+    });
+    let batch0_rate = measure(&mut results, "exec batch=32 (no dispatch delay)", n0, || {
+        for _ in 0..n0 / 32 {
+            inst0.exec_batch(vec![input.clone(); 32]).unwrap();
+        }
+        // remainder so the op count is exact
+        for _ in 0..n0 % 32 {
+            inst0.exec(input.clone()).unwrap();
+        }
+    });
+    drop(inst0);
+
+    // machine-readable trajectory for future perf PRs
+    let mut out = Json::obj();
+    for (name, rate) in &results {
+        out = out.set(name, *rate);
+    }
+    std::fs::write("BENCH_exec.json", format!("{out}\n"))?;
+    println!("\nwrote BENCH_exec.json ({} ops)", results.len());
+
+    // The acceptance floor: batch=32 must beat serial by >= 5x in the
+    // dispatch-overhead regime (it should approach 32x), and batching
+    // must never be slower than serial even with nothing to amortize.
+    let speedup32 = batch32_rate / serial_rate;
+    let speedup8 = batch8_rate / serial_rate;
+    println!("speedup vs serial: batch=8 {speedup8:.1}x, batch=32 {speedup32:.1}x");
+    anyhow::ensure!(
+        speedup32 >= 5.0,
+        "batch=32 speedup below 5x: {speedup32:.2}x ({batch32_rate:.0} vs {serial_rate:.0} ops/s)"
+    );
+    anyhow::ensure!(
+        speedup8 >= 3.0,
+        "batch=8 speedup below 3x: {speedup8:.2}x"
+    );
+    anyhow::ensure!(
+        batch0_rate >= serial0_rate * 0.9,
+        "zero-overhead batching regressed the instance layer: {batch0_rate:.0} vs {serial0_rate:.0} ops/s"
+    );
+    println!("execution micro-batch targets PASSED");
+    Ok(())
+}

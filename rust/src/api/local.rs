@@ -48,10 +48,12 @@ impl HardlessClient for Cluster {
     fn cluster_stats(&self) -> Result<ClusterStats> {
         let mut stats = ClusterStats::gather(&self.coordinator)?;
         // In-process deployments see their nodes, so the node-local
-        // store-cache counters aggregate here (a remote gateway cannot),
-        // and the autoscale section comes straight from the controller.
+        // store-cache and micro-batch counters aggregate here (a remote
+        // gateway cannot), and the autoscale section comes straight from
+        // the controller.
         stats.cache = self.node_cache_stats();
         stats.autoscale = self.autoscale_stats();
+        stats.batch = self.batch_totals();
         Ok(stats)
     }
 

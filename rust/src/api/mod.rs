@@ -26,6 +26,7 @@ pub use local::LocalClient;
 use crate::autoscale::AutoscaleStats;
 use crate::events::{EventSpec, Invocation};
 use crate::json::Json;
+use crate::node::VariantBatchStats;
 use crate::queue::{ClassStats, QueueStats};
 use crate::store::{Blob, CacheStats};
 use anyhow::Result;
@@ -88,6 +89,11 @@ pub struct ClusterStats {
     /// Autoscaler section: decision counters, current/target nodes,
     /// last action + reason.  Disabled default when no controller runs.
     pub autoscale: AutoscaleStats,
+    /// Per-variant micro-batch counters (dispatches, mean batch size,
+    /// linger hits, size distribution), aggregated like `cache`: the
+    /// in-process `Cluster` sees its nodes (live + retired), a
+    /// distributed gateway cannot and reports an empty list.
+    pub batch: Vec<VariantBatchStats>,
 }
 
 impl ClusterStats {
@@ -104,12 +110,14 @@ impl ClusterStats {
             queue: coordinator.queue_stats()?,
             cache: CacheStats::default(),
             autoscale: AutoscaleStats::default(),
+            batch: Vec::new(),
         })
     }
 
     pub fn to_json(&self) -> Json {
         let classes: Vec<Json> =
             self.queue.classes.iter().map(|c| c.to_json()).collect();
+        let batch: Vec<Json> = self.batch.iter().map(|b| b.to_json()).collect();
         Json::obj()
             .set("submitted", self.submitted)
             .set("inflight", self.inflight)
@@ -128,6 +136,7 @@ impl ClusterStats {
             .set("cache_entries", self.cache.entries as usize)
             .set("cache_bytes", self.cache.bytes as usize)
             .set("autoscale", self.autoscale.to_json())
+            .set("batch", Json::Arr(batch))
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterStats> {
@@ -168,6 +177,15 @@ impl ClusterStats {
                 .get("autoscale")
                 .map(AutoscaleStats::from_json)
                 .unwrap_or_default(),
+            // Lenient like the cache counters: the batch section
+            // postdates the stats wire format.
+            batch: match j.get("batch").and_then(|v| v.as_arr()) {
+                Some(arr) => arr
+                    .iter()
+                    .filter_map(|b| VariantBatchStats::from_json(b).ok())
+                    .collect(),
+                None => Vec::new(),
+            },
         })
     }
 }
@@ -264,8 +282,28 @@ mod tests {
                 last_action: "up+1".into(),
                 last_reason: "class tinyyolo: depth 9 > 8 (4x2 nodes)".into(),
             },
+            batch: vec![VariantBatchStats {
+                variant: "tinyyolo-gpu".into(),
+                batches: 5,
+                invocations: 24,
+                full: 2,
+                lingered: 1,
+                size_hist: [1, 0, 2, 2, 0, 0, 0],
+                queue_to_device_us: 310,
+            }],
         };
         assert_eq!(ClusterStats::from_json(&stats.to_json()).unwrap(), stats);
+    }
+
+    #[test]
+    fn cluster_stats_parses_without_batch_section() {
+        // Payloads predating the micro-batch counters parse to an empty
+        // list, not an error.
+        let stats = ClusterStats { submitted: 2, ..ClusterStats::default() };
+        let j = stats.to_json().set("batch", Json::Null);
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert!(parsed.batch.is_empty());
+        assert_eq!(parsed.submitted, 2);
     }
 
     #[test]

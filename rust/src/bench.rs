@@ -116,6 +116,7 @@ pub fn run_experiment(name: &str, cfg: &Config, engine: Engine) -> Result<Experi
         .time_scale(cfg.time_scale)
         .policy(parse_policy(&cfg.policy)?)
         .executors(executor)
+        .node_batch(cfg.batch_config())
         .gauge_interval(Duration::from_secs(1));
     for node in &cfg.nodes {
         builder = builder.node(&node.id, node.registry());

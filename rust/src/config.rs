@@ -39,6 +39,10 @@ pub struct Config {
     pub policy: String,
     /// Distinct synthetic datasets to upload.
     pub dataset_count: usize,
+    /// Node micro-batching: device batch cap (1 = serial execution).
+    pub max_batch: usize,
+    /// Adaptive linger ceiling for forming batches, sim-ms.
+    pub max_linger_ms: u64,
 }
 
 impl Config {
@@ -57,6 +61,8 @@ impl Config {
             workload: Workload::paper_protocol("tinyyolo", 1.0, 4.0, 0.1),
             policy: "warm-first".into(),
             dataset_count: 8,
+            max_batch: crate::node::BatchConfig::default().max_batch,
+            max_linger_ms: crate::node::BatchConfig::default().max_linger.as_millis() as u64,
         }
     }
 
@@ -156,6 +162,19 @@ impl Config {
                 .get("dataset_count")
                 .and_then(|d| d.as_usize())
                 .unwrap_or(8),
+            // Micro-batching knobs parse leniently (configs predating
+            // them get the defaults); max_batch 0 is rejected.
+            max_batch: match j.get("max_batch").and_then(|v| v.as_usize()) {
+                Some(0) => bail!("max_batch must be >= 1"),
+                Some(n) => n,
+                None => crate::node::BatchConfig::default().max_batch,
+            },
+            max_linger_ms: j
+                .get("max_linger_ms")
+                .and_then(|v| v.as_u64())
+                .unwrap_or_else(|| {
+                    crate::node::BatchConfig::default().max_linger.as_millis() as u64
+                }),
         })
     }
 
@@ -185,6 +204,17 @@ impl Config {
             .set("workload", self.workload.to_json())
             .set("policy", self.policy.as_str())
             .set("dataset_count", self.dataset_count)
+            .set("max_batch", self.max_batch)
+            .set("max_linger_ms", self.max_linger_ms)
+    }
+
+    /// The node-level batching knobs as a [`crate::node::BatchConfig`].
+    pub fn batch_config(&self) -> crate::node::BatchConfig {
+        crate::node::BatchConfig {
+            max_batch: self.max_batch,
+            max_linger: Duration::from_millis(self.max_linger_ms),
+            ..crate::node::BatchConfig::default()
+        }
     }
 
     pub fn total_slots(&self) -> usize {
@@ -243,6 +273,22 @@ mod tests {
         let cfg = Config::from_json(&j).unwrap();
         assert_eq!(cfg.total_slots(), 3);
         assert_eq!(cfg.policy, "warm-first");
+        // batching knobs default leniently when absent
+        assert_eq!(cfg.max_batch, crate::node::BatchConfig::default().max_batch);
+        assert_eq!(cfg.batch_config().max_batch, cfg.max_batch);
+    }
+
+    #[test]
+    fn batching_knobs_roundtrip_and_validate() {
+        let mut cfg = Config::paper_dualgpu();
+        cfg.max_batch = 16;
+        cfg.max_linger_ms = 2;
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.max_batch, 16);
+        assert_eq!(back.max_linger_ms, 2);
+        assert_eq!(back.batch_config().max_linger, Duration::from_millis(2));
+        let j = cfg.to_json().set("max_batch", 0usize);
+        assert!(Config::from_json(&j).is_err(), "max_batch 0 rejected");
     }
 
     #[test]

@@ -20,7 +20,11 @@ use crate::autoscale::{
     Autoscaler, AutoscaleConfig, AutoscaleStats, ScaleExecutor, SignalSource, Signals,
 };
 use crate::metrics::MetricsHub;
-use crate::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps, NodeHandle};
+use crate::node::batch::merge_variant_stats;
+use crate::node::{
+    spawn_node, BatchConfig, InstanceReserve, NodeConfig, NodeDeps, NodeHandle,
+    VariantBatchStats,
+};
 use crate::queue::{InvocationQueue, MemQueue, QueueConfig};
 use crate::runtime::instance::MockExecutor;
 use crate::runtime::pool::PoolStats;
@@ -81,6 +85,7 @@ type NodeSpawner = Arc<dyn Fn(NodeConfig, DeviceRegistry) -> Result<NodeHandle> 
 struct RetiredCounters {
     cache: CacheStats,
     pool: PoolStats,
+    batch: Vec<VariantBatchStats>,
 }
 
 fn add_pool(total: &mut PoolStats, p: &PoolStats) {
@@ -93,10 +98,11 @@ fn add_pool(total: &mut PoolStats, p: &PoolStats) {
 
 /// Gracefully retire a node and fold its terminal counters in.
 fn retire_into(node: NodeHandle, retired: &Mutex<RetiredCounters>) {
-    let (cache, pool) = node.retire();
+    let (cache, pool, batch) = node.retire();
     let mut r = retired.lock().expect("poisoned");
     r.cache.add(&cache);
     add_pool(&mut r.pool, &pool);
+    merge_variant_stats(&mut r.batch, &batch);
 }
 
 /// Build a node's instance reserve for the given executor kind.
@@ -140,6 +146,7 @@ pub struct ClusterBuilder {
     nodes: Vec<(NodeConfig, DeviceRegistry)>,
     gauge_interval: Duration,
     node_cache_bytes: Option<usize>,
+    node_batch: Option<BatchConfig>,
     template: Option<NodeTemplate>,
     autoscale: Option<AutoscaleConfig>,
 }
@@ -154,6 +161,7 @@ impl ClusterBuilder {
             nodes: Vec::new(),
             gauge_interval: Duration::from_secs(1),
             node_cache_bytes: None,
+            node_batch: None,
             template: None,
             autoscale: None,
         }
@@ -165,6 +173,15 @@ impl ClusterBuilder {
     /// [`NodeConfig`] default.
     pub fn node_cache_bytes(mut self, bytes: usize) -> Self {
         self.node_cache_bytes = Some(bytes);
+        self
+    }
+
+    /// Per-node micro-batching knobs (device batch cap + linger ceiling).
+    /// `max_batch: 1` restores serial execution; unset = [`BatchConfig`]
+    /// defaults.  Applied to every node, including autoscaler-stamped
+    /// ones.
+    pub fn node_batch(mut self, cfg: BatchConfig) -> Self {
+        self.node_batch = Some(cfg);
         self
     }
 
@@ -270,10 +287,14 @@ impl ClusterBuilder {
             stop: Arc::new(AtomicBool::new(false)),
             gauge_interval: self.gauge_interval,
             node_cache_bytes: self.node_cache_bytes,
+            node_batch: self.node_batch,
         };
         for (mut cfg, registry) in self.nodes {
             if let Some(bytes) = cluster.node_cache_bytes {
                 cfg.cache_bytes = bytes;
+            }
+            if let Some(batch) = &cluster.node_batch {
+                cfg.batch = batch.clone();
             }
             cluster.spawn_node_inner(cfg, registry)?;
         }
@@ -309,6 +330,7 @@ pub struct Cluster {
     stop: Arc<AtomicBool>,
     gauge_interval: Duration,
     node_cache_bytes: Option<usize>,
+    node_batch: Option<BatchConfig>,
 }
 
 /// The autoscaler's view of the cluster: signal sampling + scale
@@ -322,6 +344,7 @@ struct ScalePlane {
     spawner: NodeSpawner,
     auto_seq: Arc<AtomicU64>,
     node_cache_bytes: Option<usize>,
+    node_batch: Option<BatchConfig>,
 }
 
 impl SignalSource for ScalePlane {
@@ -353,6 +376,9 @@ impl ScalePlane {
         let mut cfg = NodeConfig::new(&id);
         if let Some(bytes) = self.node_cache_bytes {
             cfg.cache_bytes = bytes;
+        }
+        if let Some(batch) = &self.node_batch {
+            cfg.batch = batch.clone();
         }
         let handle = (self.spawner)(cfg, registry)?;
         self.nodes.lock().expect("poisoned").push(handle);
@@ -424,6 +450,9 @@ impl Cluster {
         if let Some(bytes) = self.node_cache_bytes {
             cfg.cache_bytes = bytes;
         }
+        if let Some(batch) = &self.node_batch {
+            cfg.batch = batch.clone();
+        }
         self.spawn_node_inner(cfg, registry)
     }
 
@@ -473,6 +502,7 @@ impl Cluster {
             spawner: self.spawner.clone(),
             auto_seq: self.auto_seq.clone(),
             node_cache_bytes: self.node_cache_bytes,
+            node_batch: self.node_batch.clone(),
         });
         let clock = self.clock.clone();
         let stop = self.stop.clone();
@@ -548,6 +578,17 @@ impl Cluster {
         let mut total = self.retired.lock().expect("poisoned").cache;
         for n in self.nodes.lock().expect("poisoned").iter() {
             total.add(&n.cache_stats());
+        }
+        total
+    }
+
+    /// Aggregate per-variant micro-batch counters (the `cluster_stats`
+    /// batch view): live nodes plus the terminal counters of retired
+    /// nodes — scale-in must not make the totals go backwards.
+    pub fn batch_totals(&self) -> Vec<VariantBatchStats> {
+        let mut total = self.retired.lock().expect("poisoned").batch.clone();
+        for n in self.nodes.lock().expect("poisoned").iter() {
+            merge_variant_stats(&mut total, &n.batch_stats());
         }
         total
     }
@@ -712,6 +753,35 @@ mod tests {
             "the rest were node-local ({:?})",
             stats.cache
         );
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn cluster_stats_surface_batch_counters_and_survive_retire() {
+        let cluster = Cluster::builder()
+            .time_scale(200.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .node("node-1", paper_dualgpu())
+            .node_batch(crate::node::BatchConfig {
+                max_batch: 8,
+                max_linger: Duration::from_millis(5),
+                ..crate::node::BatchConfig::default()
+            })
+            .build()
+            .unwrap();
+        let key = cluster.upload_dataset("img", &[1.0; 8]).unwrap();
+        let specs = (0..10).map(|_| EventSpec::new("tinyyolo", &key)).collect();
+        cluster.submit_batch(specs).unwrap();
+        assert_eq!(cluster.drain(Duration::from_secs(60)), 0);
+        let stats = cluster.cluster_stats().unwrap();
+        assert_eq!(stats.batch.len(), 1, "{:?}", stats.batch);
+        assert_eq!(stats.batch[0].variant, "tinyyolo-gpu");
+        assert_eq!(stats.batch[0].invocations, 10);
+        assert!(stats.batch[0].batches <= 10, "{:?}", stats.batch);
+        // Scale-in folds the retired node's batch counters into totals.
+        assert!(cluster.remove_node("node-1"));
+        let after = cluster.batch_totals();
+        assert_eq!(after, stats.batch, "retire must not lose batch counters");
         cluster.shutdown();
     }
 

@@ -71,7 +71,9 @@ fn app() -> App {
                 .opt("policy", "warm-first", "warm-first | fifo | deadline:<ms>")
                 .opt("engine", "pjrt", "pjrt | mock (mock needs no artifacts)")
                 .opt("duration-s", "30", "how long to serve before draining")
-                .opt("node-cache-mb", "256", "per-cache MiB budget for the node's raw-object and decoded-input caches (worst-case memory 2x this; 0 = disabled)"),
+                .opt("node-cache-mb", "256", "per-cache MiB budget for the node's raw-object and decoded-input caches (worst-case memory 2x this; 0 = disabled)")
+                .opt("max-batch", "8", "device micro-batch cap: same-runtime invocations coalesced into one accelerator dispatch (1 = serial execution)")
+                .opt("max-linger-ms", "5", "adaptive linger ceiling in ms: how long a forming batch may wait for more same-runtime work (scaled down automatically at low load; 0 = never wait)"),
         )
         .command(
             Command::new("submit", "submit one event through the gateway")
@@ -336,6 +338,18 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     let cache_mb: usize = m.parse_num("node-cache-mb").map_err(|e| anyhow::anyhow!(e))?;
     let mut cfg = NodeConfig::new(m.str_req("id"));
     cfg.cache_bytes = cache_mb * 1024 * 1024;
+    // Micro-batching: N same-runtime invocations per device dispatch,
+    // with an adaptive linger window (DESIGN.md §11).
+    cfg.batch = hardless::node::BatchConfig {
+        max_batch: m.parse_num("max-batch").map_err(|e| anyhow::anyhow!(e))?,
+        max_linger: Duration::from_millis(
+            m.parse_num("max-linger-ms").map_err(|e| anyhow::anyhow!(e))?,
+        ),
+        ..hardless::node::BatchConfig::default()
+    };
+    if cfg.batch.max_batch == 0 {
+        anyhow::bail!("--max-batch must be >= 1");
+    }
     let node = spawn_node(cfg, registry, deps)?;
     let secs: u64 = m.parse_num("duration-s").map_err(|e| anyhow::anyhow!(e))?;
     let deadline = std::time::Instant::now() + Duration::from_secs(secs);
@@ -353,11 +367,23 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
         }
     }
     let cache = node.cache_stats();
+    let batch = node.batch_stats();
     node.stop();
     println!(
         "node served {served} invocations (store cache: {} hits, {} misses, {} coalesced, {} evictions), exiting",
         cache.hits, cache.misses, cache.coalesced, cache.evictions
     );
+    for b in batch {
+        println!(
+            "  batch [{}]: {} invocations in {} dispatches (mean {:.1}, {} full, {} lingered)",
+            b.variant,
+            b.invocations,
+            b.batches,
+            b.mean_size(),
+            b.full,
+            b.lingered
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,545 @@
+//! Adaptive micro-batch aggregation — the node's answer to per-dispatch
+//! accelerator overhead.
+//!
+//! Production accelerator serving wins an order of magnitude of
+//! throughput by coalescing concurrent requests into one device
+//! execution; both the in-storage DSA serverless work and the Berkeley
+//! serverless view (PAPERS.md) identify per-invocation dispatch overhead
+//! as the dominant tax on accelerated FaaS.  PR 2 batched the wire
+//! (`take_batch`), PR 3 shared the inputs (`Blob`/`DecodedCache`) — this
+//! module carries the batch the last hop: N same-variant invocations
+//! become **one instance-thread hop and one device dispatch**
+//! (`RuntimeInstance::exec_batch`).
+//!
+//! ## Aggregator state machine (DESIGN.md §11)
+//!
+//! Per `(variant, device)` lane the aggregator is a two-state machine:
+//!
+//! * **Forming** — a batch has ≥ 1 invocation but is not full.  The
+//!   worker may *linger* (park on the queue) for more same-variant work,
+//!   up to an adaptive budget.
+//! * **Dispatch** — the batch is full (`max_batch`), the linger budget is
+//!   exhausted, or lingering is off.  One `exec_batch` runs the batch.
+//!
+//! ## Linger adaptation
+//!
+//! The linger ceiling is `max_linger` (sim time), but the *effective*
+//! budget scales with how full this lane's recent batches ran relative
+//! to the lane's effective dispatch cap (`max_batch`, lease-clamped per
+//! device by [`BatchAggregator::dispatch_cap`]):
+//!
+//! ```text
+//! effective_linger = max_linger × clamp(ewma_fill / cap, 0, 1)
+//! ```
+//!
+//! where `ewma_fill` is an exponentially weighted average of observed
+//! batch sizes (α = 0.25, seeded at 1).  A shallow queue keeps
+//! `ewma_fill ≈ 1`, so a lone invocation waits at most
+//! `max_linger / cap` (sub-millisecond at the defaults) and p50
+//! latency does not regress at low load; a sustained backlog drives the
+//! average toward the cap and the lane earns its full linger window —
+//! including on lanes whose cap is hold-clamped below `max_batch`.
+//! The rule is pure arithmetic over explicit `waited` durations, so it is
+//! pinned exactly under `SimClock` with zero wall sleeps.
+
+use crate::json::Json;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Micro-batching knobs (sim time, like every node duration).
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Device batch-size cap.  1 disables batching entirely (serial
+    /// execution, the pre-batching behaviour).
+    pub max_batch: usize,
+    /// Linger ceiling: how long a *forming* batch may wait for more
+    /// same-variant work before dispatching.  The effective budget
+    /// adapts downward at low load (module docs).  Zero disables linger
+    /// (batches still form from backlog, but never wait).
+    pub max_linger: Duration,
+    /// Lease-safety ceiling on one dispatch's device occupancy (sim
+    /// time): a dispatch holds its members' leases for the **summed**
+    /// service pacing, which must finish inside the queue's visibility
+    /// window (30 s default) or mid-execution redelivery duplicates
+    /// work.  The worker caps members per dispatch at
+    /// `max_hold / service_median` for its device
+    /// ([`BatchAggregator::dispatch_cap`]); the manager sizes chunks
+    /// under the worst device's cap, and a worker handed more releases
+    /// the excess back to the queue rather than holding leases across
+    /// sequential dispatches.
+    pub max_hold: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> BatchConfig {
+        BatchConfig {
+            max_batch: 8,
+            // ~0.3% of the paper's ~1.6 s service times at full depth,
+            // and 8× less than that for a lone invocation.
+            max_linger: Duration::from_millis(5),
+            // Half the default queue visibility: paper-calibrated
+            // devices (~1.6 s median) cap out near 9 members even when
+            // `max_batch` asks for 32.
+            max_hold: Duration::from_secs(15),
+        }
+    }
+}
+
+/// Batch-size histogram buckets: ≤1, ≤2, ≤4, ≤8, ≤16, ≤32, >32.
+pub const SIZE_BUCKETS: usize = 7;
+
+fn size_bucket(size: usize) -> usize {
+    match size {
+        0..=1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        17..=32 => 5,
+        _ => 6,
+    }
+}
+
+/// Per-variant batching counters (surfaced through `cluster_stats` and
+/// `hardless status`, lenient JSON like the cache counters).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct VariantBatchStats {
+    pub variant: String,
+    /// Device dispatches (one `exec_batch` each).
+    pub batches: u64,
+    /// Invocations served across those dispatches.
+    pub invocations: u64,
+    /// Dispatches that went out full (`size == max_batch`).
+    pub full: u64,
+    /// Dispatches that waited a linger window before going out.
+    pub lingered: u64,
+    /// Batch-size distribution (≤1, ≤2, ≤4, ≤8, ≤16, ≤32, >32).
+    pub size_hist: [u64; SIZE_BUCKETS],
+    /// Sum over invocations of the queue→device wait (`EStart − NStart`)
+    /// in µs — the latency split batching is allowed to spend.  Kept in
+    /// µs because the interesting waits (the adaptive linger window) are
+    /// sub-millisecond and would truncate to zero.
+    pub queue_to_device_us: u64,
+}
+
+impl VariantBatchStats {
+    /// Mean invocations per device dispatch.
+    pub fn mean_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.invocations as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean queue→device wait per invocation, ms.
+    pub fn mean_queue_to_device_ms(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.queue_to_device_us as f64 / 1e3 / self.invocations as f64
+        }
+    }
+
+    /// Fold another lane/node's counters for the same variant in.
+    pub fn add(&mut self, other: &VariantBatchStats) {
+        self.batches += other.batches;
+        self.invocations += other.invocations;
+        self.full += other.full;
+        self.lingered += other.lingered;
+        for (a, b) in self.size_hist.iter_mut().zip(other.size_hist.iter()) {
+            *a += b;
+        }
+        self.queue_to_device_us += other.queue_to_device_us;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let hist: Vec<Json> =
+            self.size_hist.iter().map(|&n| Json::from(n as usize)).collect();
+        Json::obj()
+            .set("variant", self.variant.as_str())
+            .set("batches", self.batches as usize)
+            .set("invocations", self.invocations as usize)
+            .set("full", self.full as usize)
+            .set("lingered", self.lingered as usize)
+            .set("mean_size", self.mean_size())
+            .set("size_hist", Json::Arr(hist))
+            .set("queue_to_device_us", self.queue_to_device_us as usize)
+    }
+
+    /// Lenient parse: every counter defaults to zero (the section
+    /// postdates the stats wire format).
+    pub fn from_json(j: &Json) -> Result<VariantBatchStats> {
+        let n = |key: &str| j.usize_of(key).unwrap_or(0) as u64;
+        let mut size_hist = [0u64; SIZE_BUCKETS];
+        if let Some(arr) = j.get("size_hist").and_then(|v| v.as_arr()) {
+            for (slot, v) in size_hist.iter_mut().zip(arr.iter()) {
+                *slot = v.as_usize().unwrap_or(0) as u64;
+            }
+        }
+        Ok(VariantBatchStats {
+            variant: j.str_of("variant")?.to_string(),
+            batches: n("batches"),
+            invocations: n("invocations"),
+            full: n("full"),
+            lingered: n("lingered"),
+            size_hist,
+            queue_to_device_us: n("queue_to_device_us"),
+        })
+    }
+}
+
+/// Merge per-lane/per-node stats into a per-variant list sorted by
+/// variant name (deterministic for wire encoding and tests).
+pub fn merge_variant_stats(
+    into: &mut Vec<VariantBatchStats>,
+    more: &[VariantBatchStats],
+) {
+    for s in more {
+        match into.iter_mut().find(|t| t.variant == s.variant) {
+            Some(t) => t.add(s),
+            None => into.push(s.clone()),
+        }
+    }
+    into.sort_by(|a, b| a.variant.cmp(&b.variant));
+}
+
+struct LaneState {
+    /// EWMA of observed batch sizes (α = 0.25), seeded at 1.0 so a cold
+    /// lane behaves like a shallow one.
+    ewma_fill: f64,
+    stats: VariantBatchStats,
+}
+
+/// Get-or-seed the lane entry (shared by every observe path so the
+/// seeding stays in one place).
+fn lane_mut<'a>(
+    lanes: &'a mut HashMap<(String, String), LaneState>,
+    variant: &str,
+    device_id: &str,
+) -> &'a mut LaneState {
+    lanes
+        .entry((variant.to_string(), device_id.to_string()))
+        .or_insert_with(|| LaneState {
+            ewma_fill: 1.0,
+            stats: VariantBatchStats {
+                variant: variant.to_string(),
+                ..VariantBatchStats::default()
+            },
+        })
+}
+
+/// Per-`(variant, device)` batch former shared by a node's workers.
+pub struct BatchAggregator {
+    cfg: BatchConfig,
+    lanes: Mutex<HashMap<(String, String), LaneState>>,
+}
+
+impl BatchAggregator {
+    pub fn new(cfg: BatchConfig) -> Arc<BatchAggregator> {
+        Arc::new(BatchAggregator { cfg, lanes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.cfg.max_batch.max(1)
+    }
+
+    /// Device-aware per-dispatch member cap: `max_batch`, further capped
+    /// so the dispatch's summed service pacing
+    /// (`members × service_median`) stays within `max_hold` — leases
+    /// must never outlive the queue's visibility window mid-execution.
+    pub fn dispatch_cap(&self, service_median_ms: f64) -> usize {
+        if service_median_ms <= 0.0 {
+            return self.max_batch();
+        }
+        let by_hold =
+            (self.cfg.max_hold.as_secs_f64() * 1e3 / service_median_ms) as usize;
+        by_hold.clamp(1, self.max_batch())
+    }
+
+    /// Snapshot a lane's fill EWMA (one lock + lookup).  Workers take it
+    /// once per gather round and feed it to
+    /// [`linger_budget_at`](Self::linger_budget_at), keeping the
+    /// per-lease budget probe allocation- and lock-free.  Sibling
+    /// workers on a multi-slot device may `observe` the lane mid-gather;
+    /// a one-gather-stale snapshot is fine — the budget rule is monotone
+    /// in fill and always bounded by `max_linger`.
+    pub fn lane_fill(&self, variant: &str, device_id: &str) -> f64 {
+        let lanes = self.lanes.lock().expect("batcher poisoned");
+        lanes
+            .get(&(variant.to_string(), device_id.to_string()))
+            .map(|l| l.ewma_fill)
+            .unwrap_or(1.0)
+    }
+
+    /// The pure linger rule over a snapshot `fill`: remaining budget for
+    /// a forming batch of `have` invocations that has already waited
+    /// `waited` (sim time), on a lane whose effective dispatch cap is
+    /// `cap` (`max_batch`, lease-clamped per device — fill is judged
+    /// against what this lane can actually coalesce).  `None` = dispatch
+    /// now — the batch is full, lingering is disabled, or the adaptive
+    /// budget is spent.
+    pub fn linger_budget_at(
+        &self,
+        fill: f64,
+        cap: usize,
+        have: usize,
+        waited: Duration,
+    ) -> Option<Duration> {
+        let cap = cap.clamp(1, self.max_batch());
+        if have >= cap || cap <= 1 || self.cfg.max_linger.is_zero() {
+            return None;
+        }
+        let ratio = (fill / cap as f64).clamp(0.0, 1.0);
+        let effective = self.cfg.max_linger.mul_f64(ratio);
+        let remaining = effective.saturating_sub(waited);
+        if remaining.is_zero() {
+            None
+        } else {
+            Some(remaining)
+        }
+    }
+
+    /// Snapshot + rule in one call at the unclamped cap (tests and
+    /// one-shot probes).
+    pub fn linger_budget(
+        &self,
+        variant: &str,
+        device_id: &str,
+        have: usize,
+        waited: Duration,
+    ) -> Option<Duration> {
+        self.linger_budget_at(
+            self.lane_fill(variant, device_id),
+            self.max_batch(),
+            have,
+            waited,
+        )
+    }
+
+    /// Record one dispatched batch: feeds the linger adaptation (EWMA of
+    /// fill) and the per-variant counters.  `cap` is the lane's
+    /// effective dispatch cap — a dispatch that leaves at its
+    /// lease-clamped cap counts as full.
+    pub fn observe(
+        &self,
+        variant: &str,
+        device_id: &str,
+        size: usize,
+        cap: usize,
+        lingered: bool,
+        queue_to_device_us: u64,
+    ) {
+        let mut lanes = self.lanes.lock().expect("batcher poisoned");
+        let lane = lane_mut(&mut lanes, variant, device_id);
+        lane.ewma_fill = 0.75 * lane.ewma_fill + 0.25 * size as f64;
+        lane.stats.batches += 1;
+        lane.stats.invocations += size as u64;
+        if size >= cap.clamp(1, self.max_batch()) {
+            lane.stats.full += 1;
+        }
+        if lingered {
+            lane.stats.lingered += 1;
+        }
+        lane.stats.size_hist[size_bucket(size)] += 1;
+        lane.stats.queue_to_device_us += queue_to_device_us;
+    }
+
+    /// Record an isolation-fallback round: the coalesced dispatch failed
+    /// and `n` members re-ran as serial dispatches of one.  Feeding the
+    /// EWMA and histogram what actually happened keeps the adaptive
+    /// linger window from lengthening on a lane that is executing
+    /// serially.
+    pub fn observe_serial(
+        &self,
+        variant: &str,
+        device_id: &str,
+        n: usize,
+        lingered: bool,
+        queue_to_device_us: u64,
+    ) {
+        let mut lanes = self.lanes.lock().expect("batcher poisoned");
+        let lane = lane_mut(&mut lanes, variant, device_id);
+        for _ in 0..n {
+            lane.ewma_fill = 0.75 * lane.ewma_fill + 0.25;
+        }
+        lane.stats.batches += n as u64;
+        lane.stats.invocations += n as u64;
+        if lingered {
+            // The gather did wait a linger window; the fallback does not
+            // erase that from the linger hit rate.
+            lane.stats.lingered += 1;
+        }
+        lane.stats.size_hist[size_bucket(1)] += n as u64;
+        lane.stats.queue_to_device_us += queue_to_device_us;
+    }
+
+    /// Per-variant counters, lanes merged, sorted by variant.
+    pub fn stats(&self) -> Vec<VariantBatchStats> {
+        let lanes = self.lanes.lock().expect("batcher poisoned");
+        let mut out: Vec<VariantBatchStats> = Vec::new();
+        for lane in lanes.values() {
+            merge_variant_stats(&mut out, std::slice::from_ref(&lane.stats));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn agg(max_batch: usize, linger_ms: u64) -> Arc<BatchAggregator> {
+        BatchAggregator::new(BatchConfig {
+            max_batch,
+            max_linger: Duration::from_millis(linger_ms),
+            ..BatchConfig::default()
+        })
+    }
+
+    #[test]
+    fn linger_adaptation_pins_shallow_vs_deep() {
+        // The acceptance-pinned rule: effective = max_linger · ewma/max.
+        let a = agg(8, 8);
+        // Cold lane (ewma = 1): a lone invocation may wait at most
+        // max_linger / max_batch = 1 ms — p50 at shallow depth is safe.
+        let cold = a
+            .linger_budget("v", "gpu0", 1, Duration::ZERO)
+            .expect("forming batch gets some budget");
+        assert_eq!(cold, Duration::from_millis(1), "shallow budget = ceiling / max_batch");
+        // Budget is a deadline, not a reset: waiting it out exhausts it.
+        assert_eq!(
+            a.linger_budget("v", "gpu0", 1, Duration::from_millis(1)),
+            None,
+            "spent budget dispatches"
+        );
+        // Sustained full batches drive ewma -> max_batch and the lane
+        // earns (asymptotically) the full ceiling.
+        for _ in 0..32 {
+            a.observe("v", "gpu0", 8, 8, false, 0);
+        }
+        let deep = a.linger_budget("v", "gpu0", 1, Duration::ZERO).unwrap();
+        assert!(
+            deep > Duration::from_millis(7),
+            "deep lane approaches the 8 ms ceiling: {deep:?}"
+        );
+        // ...and the budget decreases monotonically with time waited.
+        let later = a
+            .linger_budget("v", "gpu0", 1, Duration::from_millis(5))
+            .unwrap();
+        assert!(later < deep);
+        // Load drops again -> singles pull the ewma (and the budget) back
+        // down; a quiet period can never leave the linger stuck high.
+        for _ in 0..32 {
+            a.observe("v", "gpu0", 1, 8, false, 0);
+        }
+        let shallow_again = a.linger_budget("v", "gpu0", 1, Duration::ZERO).unwrap();
+        assert!(shallow_again <= Duration::from_millis(2), "{shallow_again:?}");
+    }
+
+    #[test]
+    fn dispatch_cap_bounds_lease_hold() {
+        // max_hold 15 s over the K600's 1675 ms median: 8 members max,
+        // no matter how large max_batch is configured.
+        let a = BatchAggregator::new(BatchConfig {
+            max_batch: 32,
+            max_linger: Duration::from_millis(5),
+            max_hold: Duration::from_secs(15),
+        });
+        assert_eq!(a.dispatch_cap(1675.0), 8);
+        assert_eq!(a.dispatch_cap(1577.0), 9, "VPU median caps at 9");
+        // Cheap device: max_batch is the binding limit.
+        assert_eq!(a.dispatch_cap(10.0), 32);
+        // A service time longer than max_hold still allows one member.
+        assert_eq!(a.dispatch_cap(60_000.0), 1);
+        // Degenerate median: fall back to max_batch.
+        assert_eq!(a.dispatch_cap(0.0), 32);
+    }
+
+    #[test]
+    fn hold_capped_lane_earns_full_window_and_counts_full() {
+        // max_batch 32 but the device's lease-safe cap is 8: batches of
+        // 8 ARE full for this lane — the EWMA saturates at 8 and the
+        // lane earns the whole linger ceiling, and `full` counts.
+        let a = agg(32, 8);
+        for _ in 0..32 {
+            a.observe("v", "gpu0", 8, 8, false, 0);
+        }
+        let fill = a.lane_fill("v", "gpu0");
+        let budget = a.linger_budget_at(fill, 8, 1, Duration::ZERO).unwrap();
+        assert!(
+            budget > Duration::from_millis(7),
+            "cap-relative adaptation reaches the ceiling: {budget:?}"
+        );
+        let stats = a.stats();
+        assert_eq!(stats[0].full, 32, "cap-sized dispatches count as full");
+        // have >= cap dispatches immediately even though < max_batch.
+        assert_eq!(a.linger_budget_at(fill, 8, 8, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn linger_disabled_cases() {
+        // Full batch never lingers.
+        let a = agg(4, 10);
+        assert_eq!(a.linger_budget("v", "d", 4, Duration::ZERO), None);
+        // max_batch = 1 = batching off.
+        let serial = agg(1, 10);
+        assert_eq!(serial.linger_budget("v", "d", 1, Duration::ZERO), None);
+        // Zero ceiling = linger off even while forming.
+        let nolinger = agg(8, 0);
+        assert_eq!(nolinger.linger_budget("v", "d", 1, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn lanes_adapt_independently() {
+        let a = agg(8, 8);
+        for _ in 0..32 {
+            a.observe("v", "gpu0", 8, 8, false, 0);
+        }
+        let hot = a.linger_budget("v", "gpu0", 1, Duration::ZERO).unwrap();
+        let cold = a.linger_budget("v", "gpu1", 1, Duration::ZERO).unwrap();
+        assert!(hot > cold, "per-(variant,device) adaptation: {hot:?} vs {cold:?}");
+    }
+
+    #[test]
+    fn stats_merge_lanes_per_variant_and_roundtrip_json() {
+        let a = agg(8, 5);
+        a.observe("tinyyolo-gpu", "gpu0", 8, 8, true, 40);
+        a.observe("tinyyolo-gpu", "gpu1", 4, 8, false, 12);
+        a.observe("tinyyolo-vpu", "vpu0", 1, 8, false, 3);
+        let stats = a.stats();
+        assert_eq!(stats.len(), 2, "{stats:?}");
+        assert_eq!(stats[0].variant, "tinyyolo-gpu", "sorted by variant");
+        assert_eq!(stats[0].batches, 2);
+        assert_eq!(stats[0].invocations, 12);
+        assert_eq!(stats[0].full, 1);
+        assert_eq!(stats[0].lingered, 1);
+        assert_eq!(stats[0].mean_size(), 6.0);
+        assert_eq!(stats[0].queue_to_device_us, 52);
+        assert_eq!(stats[0].size_hist[3], 1, "size 8 bucket");
+        assert_eq!(stats[0].size_hist[2], 1, "size 4 bucket");
+        assert_eq!(stats[1].variant, "tinyyolo-vpu");
+        assert_eq!(stats[1].size_hist[0], 1);
+        // JSON roundtrip + lenient parse of a bare payload
+        for s in &stats {
+            assert_eq!(VariantBatchStats::from_json(&s.to_json()).unwrap(), *s);
+        }
+        let bare = Json::obj().set("variant", "x");
+        let parsed = VariantBatchStats::from_json(&bare).unwrap();
+        assert_eq!(parsed.batches, 0);
+        assert_eq!(parsed.size_hist, [0; SIZE_BUCKETS]);
+    }
+
+    #[test]
+    fn size_buckets_cover_range() {
+        assert_eq!(size_bucket(1), 0);
+        assert_eq!(size_bucket(2), 1);
+        assert_eq!(size_bucket(4), 2);
+        assert_eq!(size_bucket(8), 3);
+        assert_eq!(size_bucket(16), 4);
+        assert_eq!(size_bucket(32), 5);
+        assert_eq!(size_bucket(33), 6);
+    }
+}

@@ -7,24 +7,28 @@
 //! get invocations and object storage to fetch data."*
 //!
 //! One manager thread polls the shared queue with the policy-built
-//! [`TakeFilter`]; for every lease it assigns an accelerator slot and
-//! hands the invocation to a worker thread.  Workers drive a (warm or
-//! cold-started) [`RuntimeInstance`], pace execution to the device's
-//! calibrated service time, persist the decoded result, ack the queue,
-//! signal completion — and then issue the paper's *same-configuration
-//! re-take* so a warm instance drains matching work without returning to
-//! the scheduler.
+//! [`TakeFilter`]; work is taken in **variant-grouped micro-batch
+//! chunks** (`take_batch_grouped`) sized to keep every accelerator slot
+//! busy, each chunk handed to one worker thread.  Workers drive a (warm
+//! or cold-started) [`RuntimeInstance`], execute the whole chunk in one
+//! device dispatch (`exec_batch`), pace to the device's calibrated
+//! service time, persist the decoded results, `ack_batch` the queue,
+//! signal completions — and then issue the paper's *same-configuration
+//! re-take* (batched, with an adaptive linger window) so a warm instance
+//! drains matching work without returning to the scheduler.
 
+pub mod batch;
 pub mod reserve;
 pub mod worker;
 
+pub use batch::{BatchAggregator, BatchConfig, VariantBatchStats};
 pub use reserve::InstanceReserve;
 
 use crate::accel::DeviceRegistry;
 use crate::events::Invocation;
-use crate::queue::InvocationQueue;
+use crate::queue::{InvocationQueue, Lease, TakeFilter};
 use crate::runtime::InstancePool;
-use crate::scheduler::{Admission, Policy};
+use crate::scheduler::{Admission, BatchAware, Policy};
 use crate::store::{CacheStats, CachedStore, DecodedCache, ObjectStore};
 use crate::util::Clock;
 use anyhow::Result;
@@ -83,6 +87,9 @@ pub struct NodeConfig {
     /// decoded-input cache (each gets this budget).  0 disables both and
     /// every `get` goes to the backing store.
     pub cache_bytes: usize,
+    /// Micro-batching knobs (device batch cap + adaptive linger ceiling).
+    /// `max_batch: 1` restores serial per-invocation execution.
+    pub batch: BatchConfig,
 }
 
 impl NodeConfig {
@@ -92,6 +99,7 @@ impl NodeConfig {
             poll_interval: Duration::from_millis(50),
             pool_capacity: 8,
             cache_bytes: 256 * 1024 * 1024,
+            batch: BatchConfig::default(),
         }
     }
 }
@@ -120,6 +128,7 @@ pub struct NodeHandle {
     /// The node-local store cache (None when `cache_bytes` was 0).
     cache: Option<Arc<CachedStore>>,
     decoded: Arc<DecodedCache>,
+    batcher: Arc<BatchAggregator>,
 }
 
 impl NodeHandle {
@@ -143,18 +152,22 @@ impl NodeHandle {
     }
 
     /// Graceful scale-in, end to end: decommission, drain, stop, and
-    /// hand back the node's terminal cache/pool counters so the cluster
-    /// can fold them into its totals (counters must survive scale-in —
-    /// `cluster_stats` never goes backwards).  The returned pool gauges
-    /// (`live`/`busy`) are zeroed: those instances die with the node.
-    pub fn retire(mut self) -> (CacheStats, crate::runtime::pool::PoolStats) {
+    /// hand back the node's terminal cache/pool/batch counters so the
+    /// cluster can fold them into its totals (counters must survive
+    /// scale-in — `cluster_stats` never goes backwards).  The returned
+    /// pool gauges (`live`/`busy`) are zeroed: those instances die with
+    /// the node.
+    pub fn retire(
+        mut self,
+    ) -> (CacheStats, crate::runtime::pool::PoolStats, Vec<VariantBatchStats>) {
         self.decommission();
         self.stop_inner();
         let cache = self.cache_stats();
         let mut pool = self.pool.stats();
         pool.live = 0;
         pool.busy = 0;
-        (cache, pool)
+        let batch = self.batch_stats();
+        (cache, pool, batch)
     }
 
     fn stop_inner(&mut self) {
@@ -178,6 +191,12 @@ impl NodeHandle {
         self.decoded.stats()
     }
 
+    /// Per-variant micro-batch counters (dispatches, mean size, linger
+    /// hits, size distribution) — the `cluster_stats.batch` section.
+    pub fn batch_stats(&self) -> Vec<VariantBatchStats> {
+        self.batcher.stats()
+    }
+
     pub fn free_slots(&self) -> usize {
         self.registry.free_slots()
     }
@@ -198,6 +217,9 @@ impl Drop for NodeHandle {
 /// node's store view is wrapped in a node-local [`CachedStore`]
 /// (read-through LRU + single-flight), and workers share a
 /// [`DecodedCache`] so each dataset is decoded to f32 once per node.
+/// When `cfg.batch.max_batch` > 1 the policy is wrapped in
+/// [`BatchAware`] (deep-lane grouped takes) and workers execute
+/// micro-batches through a shared [`BatchAggregator`].
 pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps) -> Result<NodeHandle> {
     let stop = Arc::new(AtomicBool::new(false));
     let draining = Arc::new(AtomicBool::new(false));
@@ -210,15 +232,22 @@ pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps)
         None
     };
     let decoded = Arc::new(DecodedCache::new(cfg.cache_bytes));
+    let batcher = BatchAggregator::new(cfg.batch.clone());
+    if cfg.batch.max_batch > 1 {
+        deps.policy = Arc::new(BatchAware { inner: deps.policy });
+    }
     let handle_pool = pool.clone();
     let handle_registry = registry.clone();
     let handle_decoded = decoded.clone();
+    let handle_batcher = batcher.clone();
     let stop2 = stop.clone();
     let draining2 = draining.clone();
     let id = cfg.id.clone();
     let thread = std::thread::Builder::new()
         .name(format!("node-mgr-{}", cfg.id))
-        .spawn(move || manager_loop(cfg, registry, pool, deps, decoded, stop2, draining2))?;
+        .spawn(move || {
+            manager_loop(cfg, registry, pool, deps, decoded, batcher, stop2, draining2)
+        })?;
     Ok(NodeHandle {
         id,
         stop,
@@ -228,19 +257,52 @@ pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps)
         registry: handle_registry,
         cache,
         decoded: handle_decoded,
+        batcher: handle_batcher,
     })
 }
 
+/// Chunk size for this dispatch round: deep backlogs fill batches up to
+/// the cap, shallow ones spread across the given parallelism so devices
+/// (local and on peer nodes sharing the queue) stay busy rather than a
+/// few lopsided batches hoarding the backlog.  `parallelism` is the
+/// caller's slot budget for this round (the manager passes twice its
+/// free slots to leave headroom for peers).
+fn chunk_cap(matching_depth: usize, parallelism: usize, max_batch: usize) -> usize {
+    matching_depth
+        .div_ceil(parallelism.max(1))
+        .clamp(1, max_batch.max(1))
+}
+
+#[allow(clippy::too_many_arguments)]
 fn manager_loop(
     cfg: NodeConfig,
     registry: DeviceRegistry,
     pool: Arc<InstancePool>,
     deps: NodeDeps,
     decoded: Arc<DecodedCache>,
+    batcher: Arc<BatchAggregator>,
     stop: Arc<AtomicBool>,
     draining: Arc<AtomicBool>,
 ) {
     let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // Chunk ceiling: `max_batch`, clamped by the *most permissive*
+    // device's lease-safe dispatch cap — one slow accelerator must not
+    // serialise unrelated fast lanes node-wide.  A chunk that lands on a
+    // slower device is trimmed by the worker (its own device-cap check
+    // releases the excess), and that churn is bounded: dispatch rounds
+    // are service-time paced, not spinning.
+    let max_batch = registry
+        .devices()
+        .iter()
+        .map(|d| batcher.dispatch_cap(d.profile.service.median_ms))
+        .max()
+        .unwrap_or(1);
+    // Chunk-deepening gate: the per-round depth probe (a stats RPC on
+    // remote queues) is only paid after a round that filled every free
+    // slot — shallow traffic keeps PR 2's one-round-trip dispatch cost,
+    // and a burst pays one slots-wide serial round before batching kicks
+    // in (the workers' batched warm re-take absorbs most of it anyway).
+    let mut last_round_saturated = false;
     while !stop.load(Ordering::SeqCst) {
         workers.retain(|w| !w.is_finished());
 
@@ -276,50 +338,132 @@ fn manager_loop(
             }
         };
 
-        // Amortize dispatch: with work flowing, fill every remaining free
-        // slot from a single `take_batch` round trip (one RPC on remote
-        // queues) instead of one take per manager-loop turn.
-        let mut leases = vec![first];
-        let extra = registry.free_slots().saturating_sub(1);
-        if extra > 0 {
-            match deps.queue.take_batch(&filter, extra) {
-                Ok(more) => leases.extend(more),
-                Err(e) => log::warn!("node {}: take_batch failed: {e:#}", cfg.id),
+        // Size this round's chunks from the still-queued matching depth
+        // (one O(|classes|) stats probe) so batches deepen exactly when
+        // backlog exceeds slot parallelism.  The divisor doubles this
+        // node's free slots: the queue is shared, so peer nodes must be
+        // able to take their share of a deep backlog — under-batching
+        // costs us one immediate extra manager round (or a warm
+        // re-take), over-batching starves peers for a whole service
+        // time.
+        let free = registry.free_slots();
+        let cap = if max_batch > 1 && last_round_saturated {
+            let depth: usize = match deps.queue.stats() {
+                Ok(s) => s
+                    .classes
+                    .iter()
+                    .filter(|c| {
+                        filter.accepts_cold(&c.runtime) || filter.accepts_warm(&c.runtime)
+                    })
+                    .map(|c| c.queued)
+                    .sum(),
+                Err(_) => 0,
+            };
+            chunk_cap(depth + 1, free * 2, max_batch)
+        } else {
+            1
+        };
+
+        // Gather same-runtime chunks.  With batching off (or a chunk cap
+        // of 1) keep PR 2's path: fill every remaining free slot from a
+        // single `take_batch` round trip, one lease per chunk.  With
+        // batching on, deepen the first lease's class, then one
+        // variant-grouped take per remaining free slot (each a single
+        // RPC on remote queues).  Every chunk is one device dispatch
+        // downstream.
+        let mut chunks: Vec<Vec<Lease>>;
+        if cap <= 1 {
+            chunks = vec![vec![first]];
+            let extra = free.saturating_sub(1);
+            if extra > 0 {
+                match deps.queue.take_batch(&filter, extra) {
+                    Ok(more) => chunks.extend(more.into_iter().map(|l| vec![l])),
+                    Err(e) => log::warn!("node {}: take_batch failed: {e:#}", cfg.id),
+                }
+            }
+        } else {
+            let rt0 = first.invocation.spec.runtime.clone();
+            // Runtime-aware refinement: chunk0's class is known, so size
+            // it under its slowest candidate device's lease-safe cap —
+            // no worker-side trim churn on the known-runtime path.
+            let rt0_cap = registry
+                .candidates(&rt0)
+                .iter()
+                .map(|d| batcher.dispatch_cap(d.profile.service.median_ms))
+                .min()
+                .unwrap_or(1);
+            let cap0 = cap.min(rt0_cap);
+            let mut chunk0 = vec![first];
+            if cap0 > 1 {
+                let class = TakeFilter::same_class(&rt0, filter.accepts_warm(&rt0));
+                match deps.queue.take_batch(&class, cap0 - 1) {
+                    Ok(more) => chunk0.extend(more),
+                    Err(e) => log::warn!("node {}: take_batch failed: {e:#}", cfg.id),
+                }
+            }
+            chunks = vec![chunk0];
+            while chunks.len() < free {
+                match deps.queue.take_batch_grouped(&filter, cap) {
+                    Ok(group) if !group.is_empty() => chunks.push(group),
+                    Ok(_) => break,
+                    Err(e) => {
+                        log::warn!("node {}: take_batch_grouped failed: {e:#}", cfg.id);
+                        break;
+                    }
+                }
             }
         }
 
+        let taken: usize = chunks.iter().map(|c| c.len()).sum();
+        last_round_saturated = taken >= free.max(1);
+
         // Leases that could not be placed, in lease order.  Once one
-        // fails to place, the rest of the batch is handed back too (the
+        // chunk fails to place, the rest are handed back too (the
         // optimistic free-slot count was stale) — released newest-first
         // below, so the front-requeue's descending seqs leave the oldest
         // lease frontmost and FIFO order survives the round trip.
         let mut unplaced: Vec<String> = Vec::new();
-        for lease in leases {
+        for chunk in chunks {
             if !unplaced.is_empty() {
-                unplaced.push(lease.invocation.id);
+                unplaced.extend(chunk.into_iter().map(|l| l.invocation.id));
                 continue;
             }
-            let mut inv = lease.invocation;
-            inv.node = Some(cfg.id.clone());
-            inv.stamps.n_start = Some(deps.clock.now());
+            let runtime = chunk[0].invocation.spec.runtime.clone();
+            let warm_hint = chunk.iter().any(|l| l.warm_hit);
 
             // Admission (deadline policies reject without executing).
-            if let Admission::Reject(reason) = deps.policy.admit(&inv, deps.clock.now()) {
-                inv.status = crate::events::Status::Failed(reason);
-                let _ = deps.queue.ack(&inv.id);
-                if let Err(e) = deps.completions.report(inv) {
-                    log::warn!("node {}: completion report failed: {e:#}", cfg.id);
+            // Rejections ack in one batched round trip.
+            let mut batch: Vec<Invocation> = Vec::with_capacity(chunk.len());
+            let mut rejected: Vec<Invocation> = Vec::new();
+            for lease in chunk {
+                let mut inv = lease.invocation;
+                inv.node = Some(cfg.id.clone());
+                inv.stamps.n_start = Some(deps.clock.now());
+                if let Admission::Reject(reason) =
+                    deps.policy.admit(&inv, deps.clock.now())
+                {
+                    inv.status = crate::events::Status::Failed(reason);
+                    rejected.push(inv);
+                    continue;
                 }
+                batch.push(inv);
+            }
+            worker::ack_and_report_rejected(
+                deps.queue.as_ref(),
+                deps.completions.as_ref(),
+                &cfg.id,
+                rejected,
+            );
+            if batch.is_empty() {
                 continue;
             }
 
             // Assign an accelerator (§IV-C: node chooses among supporting
             // devices; ours picks the least-loaded, preferring warm-capable).
-            let Some(slot) =
-                worker::pick_slot(&registry, &pool, &inv.spec.runtime, lease.warm_hit)
+            let Some(slot) = worker::pick_slot(&registry, &pool, &runtime, warm_hint)
             else {
-                // Raced out of capacity: hand the event back untouched.
-                unplaced.push(inv.id);
+                // Raced out of capacity: hand the events back untouched.
+                unplaced.extend(batch.into_iter().map(|inv| inv.id));
                 continue;
             };
 
@@ -333,11 +477,13 @@ fn manager_loop(
                 policy: deps.policy.clone(),
                 reserve: deps.reserve.clone(),
                 completions: deps.completions.clone(),
+                batcher: batcher.clone(),
                 draining: draining.clone(),
             };
+            let name = format!("worker-{}", batch[0].id);
             let worker = std::thread::Builder::new()
-                .name(format!("worker-{}", inv.id))
-                .spawn(move || worker::run_invocations(ctx, inv, slot))
+                .name(name)
+                .spawn(move || worker::run_invocations(ctx, batch, slot))
                 .expect("spawn worker");
             workers.push(worker);
         }
@@ -376,6 +522,10 @@ mod tests {
     }
 
     fn rig(registry: DeviceRegistry) -> Rig {
+        rig_with_batch(registry, BatchConfig::default())
+    }
+
+    fn rig_with_batch(registry: DeviceRegistry, batch: BatchConfig) -> Rig {
         // 100x compression: mock delays of sim-ms become wall-µs.
         let clock: Arc<ScaledClock> = ScaledClock::new(100.0);
         let queue = MemQueue::new(clock.clone());
@@ -407,6 +557,7 @@ mod tests {
         };
         let mut cfg = NodeConfig::new("node-1");
         cfg.poll_interval = Duration::from_millis(20);
+        cfg.batch = batch;
         let node = spawn_node(cfg, registry, deps).unwrap();
         Rig { queue, store, clock, completions: rx, node }
     }
@@ -656,11 +807,238 @@ mod tests {
             "nothing served after decommission"
         );
         // retire() drains + joins and hands back terminal counters.
-        let (cache, pool) = r.node.retire();
+        let (cache, pool, _batch) = r.node.retire();
         assert!(cache.misses >= 1, "served one dataset fetch: {cache:?}");
         assert_eq!((pool.live, pool.busy), (0, 0), "gauges zeroed on retire");
         assert!(pool.cold_starts >= 1, "{pool:?}");
         assert_eq!(r.queue.stats().unwrap().queued, 1, "queued work untouched");
+    }
+
+    #[test]
+    fn deep_backlog_forms_batches_and_counts_stats() {
+        // 12 invocations over 4 slots (dual-GPU): the first round is
+        // slots-wide serial (the depth probe is gated on a saturated
+        // previous round), and the remaining 8 drain through batched
+        // warm re-takes — strictly fewer device dispatches than
+        // invocations.
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0; 8]);
+        let invs: Vec<Invocation> = (0..12)
+            .map(|i| {
+                Invocation::new(
+                    format!("inv-{i}"),
+                    EventSpec::new("tinyyolo", &key),
+                    r.clock.now(),
+                )
+            })
+            .collect();
+        r.queue.publish_batch(invs).unwrap();
+        for _ in 0..12 {
+            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(d.status, Status::Succeeded);
+        }
+        let stats = r.node.batch_stats();
+        assert_eq!(stats.len(), 1, "{stats:?}");
+        let s = &stats[0];
+        assert_eq!(s.variant, "tinyyolo-gpu");
+        assert_eq!(s.invocations, 12);
+        assert!(
+            s.batches <= 8,
+            "12 invocations must coalesce into fewer dispatches: {s:?}"
+        );
+        assert!(s.mean_size() >= 1.5, "{s:?}");
+        let qs = r.queue.stats().unwrap();
+        assert_eq!((qs.queued, qs.in_flight, qs.acked), (0, 0, 12));
+        r.node.stop();
+    }
+
+    #[test]
+    fn malformed_input_fails_alone_not_its_batch() {
+        // One poisoned input fails the whole device dispatch
+        // (all-or-nothing executor contract); the worker must isolate it
+        // by re-running members individually — its well-formed
+        // neighbours keep the outcome serial execution would have given
+        // them.
+        struct PoisonExec;
+        impl crate::runtime::Executor for PoisonExec {
+            fn infer(&mut self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+                if input.first() == Some(&-1.0) {
+                    anyhow::bail!("malformed input");
+                }
+                Ok(input.iter().map(|x| x * 2.0).collect())
+            }
+        }
+        let clock: Arc<ScaledClock> = ScaledClock::new(100.0);
+        let queue = MemQueue::new(clock.clone());
+        let store = Arc::new(MemStore::new());
+        let reserve = InstanceReserve::new();
+        let registry = paper_dualgpu();
+        for d in registry.devices() {
+            for variant in d.profile.runtimes.values() {
+                for _ in 0..d.profile.slots {
+                    reserve.add(
+                        RuntimeInstance::start(variant.clone(), d.id.clone(), {
+                            Box::new(|| {
+                                Ok(Box::new(PoisonExec)
+                                    as Box<dyn crate::runtime::Executor>)
+                            })
+                        })
+                        .unwrap(),
+                    );
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let deps = NodeDeps {
+            queue: queue.clone(),
+            store: store.clone(),
+            clock,
+            policy: Arc::new(WarmFirst),
+            reserve,
+            completions: Arc::new(tx),
+        };
+        let node = spawn_node(NodeConfig::new("node-poison"), registry, deps).unwrap();
+        let good = dataset(&store, "good", &[1.0; 4]);
+        let bad = dataset(&store, "bad", &[-1.0; 4]);
+        let invs: Vec<Invocation> = (0..16)
+            .map(|i| {
+                let key = if i == 5 { &bad } else { &good };
+                Invocation::new(
+                    format!("inv-{i}"),
+                    EventSpec::new("tinyyolo", key),
+                    SimTime(0),
+                )
+            })
+            .collect();
+        queue.publish_batch(invs).unwrap();
+        let mut failed = Vec::new();
+        let mut ok = 0;
+        for _ in 0..16 {
+            let d = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            match d.status {
+                Status::Succeeded => ok += 1,
+                Status::Failed(_) => failed.push(d.id),
+                ref s => panic!("non-terminal completion {s:?}"),
+            }
+        }
+        assert_eq!(failed, vec!["inv-5".to_string()], "only the poisoned input fails");
+        assert_eq!(ok, 15);
+        node.stop();
+    }
+
+    #[test]
+    fn max_batch_one_restores_serial_execution() {
+        let r = rig_with_batch(
+            paper_dualgpu(),
+            BatchConfig { max_batch: 1, max_linger: Duration::from_millis(5), ..BatchConfig::default() },
+        );
+        let key = dataset(&r.store, "img", &[1.0; 4]);
+        let invs: Vec<Invocation> = (0..6)
+            .map(|i| {
+                Invocation::new(
+                    format!("inv-{i}"),
+                    EventSpec::new("tinyyolo", &key),
+                    r.clock.now(),
+                )
+            })
+            .collect();
+        r.queue.publish_batch(invs).unwrap();
+        for _ in 0..6 {
+            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(d.status, Status::Succeeded);
+        }
+        let stats = r.node.batch_stats();
+        assert_eq!(stats.len(), 1, "{stats:?}");
+        assert_eq!(stats[0].batches, stats[0].invocations, "every dispatch is size 1");
+        assert_eq!(stats[0].size_hist[0], stats[0].batches);
+        assert_eq!(stats[0].lingered, 0, "serial mode never lingers");
+        r.node.stop();
+    }
+
+    #[test]
+    fn property_batched_execution_is_semantically_invisible() {
+        use crate::prop;
+        // The acceptance property: identical invocation streams through
+        // batched and serial nodes produce byte-identical per-invocation
+        // results, identical statuses, and identical ack/completion
+        // counts — batching may only change how many device dispatches
+        // happen, never what the client observes.
+        prop::check(
+            "batched-vs-serial-equivalence",
+            5,
+            |rng| {
+                let n = rng.range(1, 13) as usize;
+                let datasets: Vec<Vec<f32>> = (0..3)
+                    .map(|_| {
+                        (0..rng.range(1, 9))
+                            .map(|_| (rng.below(1000) as f32) / 100.0)
+                            .collect()
+                    })
+                    .collect();
+                // Each invocation: dataset 0..2, or 3 = missing dataset
+                // (per-invocation failures must stay per-invocation).
+                let picks: Vec<u64> = (0..n).map(|_| rng.below(4)).collect();
+                (datasets, picks)
+            },
+            |(datasets, picks)| {
+                let run = |batch: BatchConfig| {
+                    let r = rig_with_batch(paper_dualgpu(), batch);
+                    let keys: Vec<String> = datasets
+                        .iter()
+                        .enumerate()
+                        .map(|(i, vals)| dataset(&r.store, &format!("d{i}"), vals))
+                        .collect();
+                    let invs: Vec<Invocation> = picks
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &p)| {
+                            let key = keys
+                                .get(p as usize)
+                                .cloned()
+                                .unwrap_or_else(|| "datasets/missing".into());
+                            Invocation::new(
+                                format!("inv-{i}"),
+                                EventSpec::new("tinyyolo", key),
+                                r.clock.now(),
+                            )
+                        })
+                        .collect();
+                    r.queue.publish_batch(invs).unwrap();
+                    let mut done: Vec<Invocation> = (0..picks.len())
+                        .map(|_| {
+                            r.completions
+                                .recv_timeout(Duration::from_secs(30))
+                                .expect("all invocations complete")
+                        })
+                        .collect();
+                    done.sort_by(|a, b| a.id.cmp(&b.id));
+                    let observed: Vec<(String, Status, Option<Vec<u8>>)> = done
+                        .into_iter()
+                        .map(|d| {
+                            let body = d
+                                .result_key
+                                .as_deref()
+                                .map(|k| r.store.get(k).unwrap().to_vec());
+                            (d.id, d.status, body)
+                        })
+                        .collect();
+                    let acked = r.queue.stats().unwrap().acked;
+                    r.node.stop();
+                    (observed, acked)
+                };
+                let serial = run(BatchConfig {
+                    max_batch: 1,
+                    max_linger: Duration::from_millis(5),
+                    ..BatchConfig::default()
+                });
+                let batched = run(BatchConfig {
+                    max_batch: 8,
+                    max_linger: Duration::from_millis(5),
+                    ..BatchConfig::default()
+                });
+                serial == batched
+            },
+        );
     }
 
     #[test]

@@ -1,24 +1,34 @@
-//! Per-invocation worker: the node's execution path.
+//! Per-batch worker: the node's execution path.
 //!
 //! A worker owns one accelerator slot for its lifetime.  It checks out a
 //! runtime instance (warm from the pool, or cold-started from the
-//! reserve with the profile's cold-start pacing), then loops:
+//! reserve with the profile's cold-start pacing), then loops over
+//! **micro-batches** of same-runtime invocations:
 //!
-//!   fetch dataset → execute via PJRT → pace to the device's service
-//!   time → postprocess + persist result → ack → signal completion →
-//!   same-config re-take (§IV-D warm reuse) → repeat until the queue has
-//!   no matching work.
+//!   fetch datasets → one `exec_batch` device dispatch → pace once to the
+//!   device's service time → postprocess + persist each result →
+//!   `ack_batch` → signal completions → same-config re-take (§IV-D warm
+//!   reuse, up to `max_batch` at a time with an adaptive linger window) →
+//!   repeat until the queue has no matching work.
+//!
+//! Batching is semantically invisible: per-invocation outputs, acks, and
+//! completion reports are identical to serial execution (pinned by the
+//! equivalence property test in `crate::node`); only the dispatch count
+//! changes — N same-variant invocations cost one instance-thread hop and
+//! one device execution.
 
 use crate::accel::{Device, DeviceRegistry, SlotGuard};
 use crate::events::{Invocation, Status};
+use crate::node::batch::BatchAggregator;
 use crate::node::CompletionSink;
 use crate::postprocess;
-use crate::queue::{InvocationQueue, TakeFilter};
+use crate::queue::{InvocationQueue, Lease, TakeFilter};
 use crate::runtime::{InstancePool, RuntimeInstance};
 use crate::scheduler::{warm_runtimes, Admission, Policy};
 use crate::store::{keys, DecodedCache, ObjectStore};
 use crate::util::{Clock, Rng};
 use anyhow::{anyhow, Context, Result};
+use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -37,8 +47,11 @@ pub struct WorkerCtx {
     pub policy: Arc<dyn Policy>,
     pub reserve: Arc<crate::node::InstanceReserve>,
     pub completions: Arc<dyn CompletionSink>,
+    /// Per-(variant, device) micro-batch former: linger budgets and the
+    /// per-variant batch-size distribution (`cluster_stats.batch`).
+    pub batcher: Arc<BatchAggregator>,
     /// Node decommission flag: set, workers finish their current
-    /// invocation but skip the §IV-D warm re-take (graceful scale-in
+    /// batch but skip the §IV-D warm re-take (graceful scale-in
     /// must stop *all* lease-taking paths, not just the manager poll).
     pub draining: Arc<std::sync::atomic::AtomicBool>,
 }
@@ -79,15 +92,23 @@ fn rng_for(invocation_id: &str) -> Rng {
     Rng::new(h)
 }
 
-/// Entry point for a worker thread: run the leased invocation, then drain
-/// same-config work while the instance is hot.
-pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
+/// Entry point for a worker thread: run the leased batch (same logical
+/// runtime throughout), then drain same-config work while the instance
+/// is hot.  `first` is non-empty; the invocations' `warm` flags are
+/// assigned here (lead = the pool checkout's warm/cold outcome, riders
+/// = warm) — callers need not set them.  Warm *placement* is the
+/// manager's job via [`pick_slot`]'s `warm_hit` argument.
+pub fn run_invocations(ctx: WorkerCtx, first: Vec<Invocation>, slot: SlotGuard) {
     let device = slot.device().clone();
-    let runtime = first.spec.runtime.clone();
+    let Some(lead) = first.first() else {
+        return;
+    };
+    let runtime = lead.spec.runtime.clone();
 
     // Resolve the accelerator-specific implementation variant.
     let Some(variant) = device.profile.variant_for(&runtime).map(String::from) else {
-        fail(&ctx, first, format!("device {} does not implement {runtime}", device.id));
+        let reason = format!("device {} does not implement {runtime}", device.id);
+        fail_batch(&ctx, first, &reason);
         return;
     };
 
@@ -129,127 +150,422 @@ pub fn run_invocations(ctx: WorkerCtx, first: Invocation, slot: SlotGuard) {
     let pooled = match pooled {
         Some(p) => p,
         None => {
-            fail(
-                &ctx,
-                first,
-                format!(
-                    "cold start failed after retries: {:#}",
-                    last_err.unwrap_or_else(|| anyhow!("unknown"))
-                ),
+            let reason = format!(
+                "cold start failed after retries: {:#}",
+                last_err.unwrap_or_else(|| anyhow!("unknown"))
             );
+            fail_batch(&ctx, first, &reason);
             return;
         }
     };
 
-    let mut inv = first;
+    // Device-aware per-dispatch cap (lease safety): one dispatch paces
+    // to the *sum* of its members' service times, which must finish
+    // inside the queue's visibility window — at most
+    // `max_hold / service_median` members for this device.  The
+    // manager's chunk ceiling is sized for the node's most permissive
+    // device, so a chunk placed on a slower one can exceed this cap;
+    // the excess is handed straight back rather than held across
+    // sequential dispatches — a worker never holds more leases than one
+    // dispatch serves.
+    let cap = ctx
+        .batcher
+        .dispatch_cap(device.profile.service.median_ms)
+        .max(1);
+    let mut batch = first;
+    if batch.len() > cap {
+        let overflow = batch.split_off(cap);
+        // Released newest-first so the front-requeue's descending seqs
+        // keep the oldest frontmost (FIFO survives the round trip).
+        for inv in overflow.iter().rev() {
+            let _ = ctx.queue.release(&inv.id);
+        }
+    }
     let mut warm = pooled.warm;
-    // Built once: the §IV-D same-configuration reuse query is issued after
-    // every completion, so keep it out of the drain loop.
+    let mut lingered = false;
+    // Built once: the §IV-D same-configuration reuse query runs after
+    // every dispatch, so keep it out of the drain loop.
     let reuse_filter = TakeFilter::warm_reuse(&runtime);
     loop {
-        inv.accelerator = Some(device.id.clone());
-        inv.variant = Some(variant.clone());
-        inv.warm = warm;
-        match execute_one(&ctx, &device, &pooled.instance, &mut inv) {
-            Ok(()) => {
-                inv.status = Status::Succeeded;
-            }
-            Err(e) => {
-                inv.status = Status::Failed(format!("{e:#}"));
+        for (i, inv) in batch.iter_mut().enumerate() {
+            inv.accelerator = Some(device.id.clone());
+            inv.variant = Some(variant.clone());
+            // Within a batch only the lead invocation can be a cold
+            // start; the rest ride the (now hot) instance.
+            inv.warm = warm || i > 0;
+        }
+        let (dispatched, fallback) =
+            execute_batch(&ctx, &device, &pooled.instance, &mut batch);
+        let n_end = ctx.clock.now();
+        // Accumulate in µs: the waits this metric exists to expose (the
+        // sub-ms adaptive linger window) would truncate to 0 in ms.
+        let mut q2d_us = 0u64;
+        for inv in batch.iter_mut() {
+            inv.stamps.n_end = Some(n_end);
+            if let (Some(n_start), Some(e_start)) =
+                (inv.stamps.n_start, inv.stamps.e_start)
+            {
+                q2d_us += e_start.since(n_start).as_micros() as u64;
             }
         }
-        inv.stamps.n_end = Some(ctx.clock.now());
-        let _ = ctx.queue.ack(&inv.id);
-        if let Err(e) = ctx.completions.report(inv) {
-            log::warn!("node {}: completion report failed: {e:#}", ctx.node_id);
+        // One ack round trip for the whole batch, then per-invocation
+        // completion reports (the coordinator's contract is per-event).
+        // Fetch-failed members were already acked + reported inside
+        // execute_batch (fast-fail), so `batch` may have shrunk.
+        if !batch.is_empty() {
+            let ids: Vec<String> = batch.iter().map(|i| i.id.clone()).collect();
+            if let Err(e) = ctx.queue.ack_batch(&ids) {
+                log::warn!("node {}: ack_batch failed: {e:#}", ctx.node_id);
+            }
+        }
+        // Only real device dispatches feed the stats and the linger
+        // EWMA — a batch whose every member failed its dataset fetch
+        // executed nothing, and an isolation fallback ran serially.
+        if dispatched > 0 {
+            if fallback {
+                ctx.batcher
+                    .observe_serial(&variant, &device.id, dispatched, lingered, q2d_us);
+            } else {
+                ctx.batcher
+                    .observe(&variant, &device.id, dispatched, cap, lingered, q2d_us);
+            }
+        }
+        for inv in batch.drain(..) {
+            if let Err(e) = ctx.completions.report(inv) {
+                log::warn!("node {}: completion report failed: {e:#}", ctx.node_id);
+            }
         }
 
-        // Decommissioned mid-drain: the lease just served is done; no
+        // Decommissioned mid-drain: the batch just served is done; no
         // further work may be taken on this node.
         if ctx.draining.load(std::sync::atomic::Ordering::SeqCst) {
             break;
         }
 
+        warm = true; // instance is hot after the first dispatch
+
         // §IV-D: "When an already running invocation is finished, they
         // query whether the queue has invocations that have the same
         // configuration so that the worker node can reuse an existing
-        // runtime instance."
-        match ctx.queue.take(&reuse_filter) {
-            Ok(Some(lease)) => {
-                let mut next = lease.invocation;
-                next.node = Some(ctx.node_id.clone());
+        // runtime instance." — batched: take up to `cap` matching
+        // invocations, lingering (adaptively) for stragglers.
+        let (leases, did_linger) =
+            gather_reuse(&ctx, &reuse_filter, &variant, &device.id, cap);
+        if leases.is_empty() {
+            break;
+        }
+        lingered = did_linger;
+        batch.clear();
+        let mut rejected: Vec<Invocation> = Vec::new();
+        for lease in leases {
+            let mut next = lease.invocation;
+            next.node = Some(ctx.node_id.clone());
+            // `NStart` was stamped at lease-take time inside
+            // gather_reuse, so the linger wait lands in the
+            // queue→device split instead of vanishing.
+            if next.stamps.n_start.is_none() {
                 next.stamps.n_start = Some(ctx.clock.now());
-                if let Admission::Reject(reason) = ctx.policy.admit(&next, ctx.clock.now()) {
-                    next.status = Status::Failed(reason);
-                    let _ = ctx.queue.ack(&next.id);
-                    let _ = ctx.completions.report(next);
-                    break;
-                }
-                inv = next;
-                warm = true; // instance is hot by construction
             }
-            _ => break,
+            if let Admission::Reject(reason) = ctx.policy.admit(&next, ctx.clock.now()) {
+                next.status = Status::Failed(reason);
+                rejected.push(next);
+                continue;
+            }
+            batch.push(next);
+        }
+        ack_and_report_rejected(
+            ctx.queue.as_ref(),
+            ctx.completions.as_ref(),
+            &ctx.node_id,
+            rejected,
+        );
+        if batch.is_empty() {
+            break;
         }
     }
     drop(pooled);
     drop(slot);
 }
 
-/// One execution: fetch → infer → pace → persist.
-fn execute_one(
+/// The warm-reuse re-take, batched: grab whatever same-runtime work is
+/// queued (up to the batch cap), then linger — park on the queue's
+/// condvar/long-poll — for more while the aggregator's adaptive budget
+/// lasts.  Returns the leases and whether any linger wait happened.
+fn gather_reuse(
+    ctx: &WorkerCtx,
+    reuse: &TakeFilter,
+    variant: &str,
+    device_id: &str,
+    max: usize,
+) -> (Vec<Lease>, bool) {
+    // Each lease gets `NStart` at its take time: invocations gathered
+    // before a linger wait carry that wait in their queue→device split.
+    let stamp = |ls: &mut [Lease], now: crate::util::SimTime| {
+        for l in ls {
+            l.invocation.stamps.n_start = Some(now);
+        }
+    };
+    let mut leases = match ctx.queue.take_batch(reuse, max) {
+        Ok(l) => l,
+        Err(e) => {
+            log::warn!("node {}: reuse take_batch failed: {e:#}", ctx.node_id);
+            return (Vec::new(), false);
+        }
+    };
+    stamp(&mut leases, ctx.clock.now());
+    if leases.is_empty() {
+        return (leases, false);
+    }
+    // One lane snapshot per gather keeps the per-lease budget probe
+    // allocation- and lock-free; a sibling worker on a multi-slot device
+    // may move the EWMA mid-gather, which is fine (see `lane_fill`).
+    let fill = ctx.batcher.lane_fill(variant, device_id);
+    let mut lingered = false;
+    let mut waited = Duration::ZERO;
+    while leases.len() < max {
+        let Some(budget) =
+            ctx.batcher.linger_budget_at(fill, max, leases.len(), waited)
+        else {
+            break;
+        };
+        lingered = true;
+        // Budget is sim time; the queue parks in wall time.
+        let wall = Duration::from_secs_f64(budget.as_secs_f64() / ctx.clock.scale());
+        let t0 = std::time::Instant::now();
+        let got = ctx.queue.take_timeout(reuse, wall);
+        waited += Duration::from_secs_f64(t0.elapsed().as_secs_f64() * ctx.clock.scale());
+        match got {
+            Ok(Some(lease)) => {
+                let from = leases.len();
+                leases.push(lease);
+                if leases.len() < max {
+                    if let Ok(more) = ctx.queue.take_batch(reuse, max - leases.len()) {
+                        leases.extend(more);
+                    }
+                }
+                stamp(&mut leases[from..], ctx.clock.now());
+            }
+            // Timed out (budget spent) or errored: dispatch what we have.
+            _ => break,
+        }
+    }
+    (leases, lingered)
+}
+
+/// One device dispatch for the whole batch: fetch each dataset, run
+/// `exec_batch` once, pace to the summed per-invocation service times,
+/// persist each result.  Per-invocation fetch failures (missing
+/// dataset) are removed from the batch and **fast-failed immediately**
+/// (one `ack_batch` + reports) — the serial path never made them wait
+/// for neighbours' pacing; an executor error fails the dispatch (the
+/// all-or-nothing contract of
+/// [`crate::runtime::Executor::infer_batch`]) and the members are then
+/// re-run individually so one malformed input cannot poison its
+/// neighbours.  Returns how many invocations actually reached the
+/// device (0 = no dispatch ran) and whether the serial isolation
+/// fallback ran (stats must then record serial dispatches).
+fn execute_batch(
     ctx: &WorkerCtx,
     device: &Arc<Device>,
     instance: &Arc<RuntimeInstance>,
-    inv: &mut Invocation,
-) -> Result<()> {
-    // Fetch the dataset (stateless workloads fetch their inputs, §IV-A).
+    batch: &mut Vec<Invocation>,
+) -> (usize, bool) {
+    // Fetch the datasets (stateless workloads fetch their inputs, §IV-A).
     // Through the node's CachedStore this is an Arc clone on the warm
     // path, and the decoded-input cache skips the bytes→f32 pass when the
-    // same buffer was already decoded on this node.
-    let data = ctx
-        .store
-        .get(&inv.spec.dataset)
-        .with_context(|| format!("dataset {}", inv.spec.dataset))?;
-    let input = ctx.decoded.get_or_decode(&inv.spec.dataset, &data);
-
-    // Execute on the accelerator (shared buffer — no per-invocation copy).
-    inv.stamps.e_start = Some(ctx.clock.now());
-    let outcome = instance.exec(input)?;
-
-    // Pace to the device's calibrated service time: the real PJRT compute
-    // already consumed `compute_wall * scale` sim-ms; sleep the remainder
-    // of the sampled lognormal service time (DESIGN.md S1).
-    let mut rng = rng_for(&inv.id);
-    let target_ms = device.profile.service.sample_ms(&mut rng);
-    let spent_ms = outcome.compute_wall.as_secs_f64() * 1e3 * ctx.clock.scale();
-    if target_ms > spent_ms {
-        ctx.clock
-            .sleep(Duration::from_secs_f64((target_ms - spent_ms) / 1e3));
+    // same buffer was already decoded on this node — a batch over one
+    // dataset sends the same allocation N times, never copies.
+    let mut inputs = Vec::with_capacity(batch.len());
+    let mut kept: Vec<Invocation> = Vec::with_capacity(batch.len());
+    let mut fetch_failed: Vec<Invocation> = Vec::new();
+    for mut inv in batch.drain(..) {
+        let fetched = ctx
+            .store
+            .get(&inv.spec.dataset)
+            .with_context(|| format!("dataset {}", inv.spec.dataset));
+        match fetched {
+            Ok(data) => {
+                inputs.push(ctx.decoded.get_or_decode(&inv.spec.dataset, &data));
+                kept.push(inv);
+            }
+            Err(e) => {
+                inv.status = Status::Failed(format!("{e:#}"));
+                inv.stamps.n_end = Some(ctx.clock.now());
+                fetch_failed.push(inv);
+            }
+        }
     }
-    inv.stamps.e_end = Some(ctx.clock.now());
+    *batch = kept;
+    ack_and_report_rejected(
+        ctx.queue.as_ref(),
+        ctx.completions.as_ref(),
+        &ctx.node_id,
+        fetch_failed,
+    );
+    if batch.is_empty() {
+        return (0, false);
+    }
+    // Every remaining batch entry is a device-batch member, index-aligned
+    // with `inputs`.
 
-    // Persist the result before terminating (§IV-A).  Detection-shaped
-    // outputs (. * 125 grid channels) are decoded + NMS'd; anything else
-    // is stored raw (mock executors, foreign runtimes).
+    // Execute on the accelerator: one instance-thread hop, one dispatch.
+    // Inputs are kept (Arc clones) for the failure-isolation fallback.
+    let e_start = ctx.clock.now();
+    for inv in batch.iter_mut() {
+        inv.stamps.e_start = Some(e_start);
+    }
+    let outcome = instance.exec_batch(inputs.clone());
+
+    // Pace to the device's calibrated service times: batching amortizes
+    // *dispatch overhead*, never modeled device compute — each
+    // invocation keeps its own lognormal sample (seeded from its own
+    // id, exactly as the serial path sampled it) and the dispatch
+    // occupies the device for the **sum** (DESIGN.md S1/§11).  The real
+    // compute already consumed `compute_wall * scale` sim-ms; sleep the
+    // remainder once.  `EEnd` stamps stagger cumulatively (the device
+    // serves the batch members serially within the dispatch), stretched
+    // proportionally when real compute overran the sampled total so the
+    // stamps never claim the window ended before it did.
+    let targets_ms: Vec<f64> = batch
+        .iter()
+        .map(|inv| {
+            let mut rng = rng_for(&inv.id);
+            device.profile.service.sample_ms(&mut rng)
+        })
+        .collect();
+    let total_ms: f64 = targets_ms.iter().sum();
+    let mut fallback = false;
+    match outcome {
+        Ok(out) => {
+            let spent_ms = out.compute_wall.as_secs_f64() * 1e3 * ctx.clock.scale();
+            if total_ms > spent_ms {
+                ctx.clock
+                    .sleep(Duration::from_secs_f64((total_ms - spent_ms) / 1e3));
+            }
+            let stretch = if spent_ms > total_ms && total_ms > 0.0 {
+                spent_ms / total_ms
+            } else {
+                1.0
+            };
+            let mut elapsed_ms = 0.0;
+            for (i, inv) in batch.iter_mut().enumerate() {
+                elapsed_ms += targets_ms[i];
+                let e_end = crate::util::SimTime(
+                    e_start.as_micros() + (elapsed_ms * stretch * 1e3) as u64,
+                );
+                // Turbofish pins the otherwise-unconstrained error type
+                // of the generic result parameter.
+                complete_member(ctx, inv, Ok::<_, anyhow::Error>(&out.outputs[i]), e_end);
+            }
+        }
+        Err(e) if batch.len() == 1 => {
+            let now = ctx.clock.now();
+            complete_member(ctx, &mut batch[0], Err(e), now);
+        }
+        Err(_) => {
+            // The dispatch is all-or-nothing, so one malformed input
+            // failed the whole batch — isolate the culprit(s) by
+            // re-running every member individually (exactly the
+            // `max_batch = 1` serial path, pacing included), so
+            // well-formed neighbours keep the outcome they would have
+            // had without batching.
+            fallback = true;
+            for (i, inv) in batch.iter_mut().enumerate() {
+                // Re-stamp EStart per re-run: the wait for preceding
+                // members belongs to the queue→device split, not this
+                // member's execution window.
+                inv.stamps.e_start = Some(ctx.clock.now());
+                let single = instance.exec(inputs[i].clone());
+                if let Ok(one) = &single {
+                    let spent_ms =
+                        one.compute_wall.as_secs_f64() * 1e3 * ctx.clock.scale();
+                    if targets_ms[i] > spent_ms {
+                        ctx.clock.sleep(Duration::from_secs_f64(
+                            (targets_ms[i] - spent_ms) / 1e3,
+                        ));
+                    }
+                }
+                let now = ctx.clock.now();
+                complete_member(
+                    ctx,
+                    inv,
+                    single.as_ref().map(|one| one.output.as_slice()),
+                    now,
+                );
+            }
+        }
+    }
+    (batch.len(), fallback)
+}
+
+/// Terminal bookkeeping for one member — `EEnd` stamp, result
+/// persistence, status — shared by the batched success path, the
+/// single-member error path, and the isolation fallback, so the
+/// serial-identical contract is structural rather than copy-kept.
+fn complete_member(
+    ctx: &WorkerCtx,
+    inv: &mut Invocation,
+    result: std::result::Result<&[f32], impl std::fmt::Display>,
+    e_end: crate::util::SimTime,
+) {
+    match result {
+        Ok(output) => {
+            inv.stamps.e_end = Some(e_end);
+            match persist_result(ctx, inv, output) {
+                Ok(()) => inv.status = Status::Succeeded,
+                Err(e) => inv.status = Status::Failed(format!("{e:#}")),
+            }
+        }
+        // No `EEnd` on an executor failure — the device produced
+        // nothing, and a stamp here would feed ~0 ms ELat samples into
+        // the latency histograms (the serial path never stamped it).
+        // `{:#}` keeps anyhow's cause chain, matching the serial path.
+        Err(e) => inv.status = Status::Failed(format!("{e:#}")),
+    }
+}
+
+/// Batched admission-rejection epilogue shared by the manager's dispatch
+/// loop and the worker's warm re-take: one `ack_batch` round trip, then
+/// per-invocation completion reports.
+pub(crate) fn ack_and_report_rejected(
+    queue: &dyn InvocationQueue,
+    completions: &dyn CompletionSink,
+    node_id: &str,
+    rejected: Vec<Invocation>,
+) {
+    if rejected.is_empty() {
+        return;
+    }
+    let ids: Vec<String> = rejected.iter().map(|i| i.id.clone()).collect();
+    if let Err(e) = queue.ack_batch(&ids) {
+        log::warn!("node {node_id}: reject ack_batch failed: {e:#}");
+    }
+    for inv in rejected {
+        if let Err(e) = completions.report(inv) {
+            log::warn!("node {node_id}: completion report failed: {e:#}");
+        }
+    }
+}
+
+/// Persist one invocation's output before terminating (§IV-A).
+/// Detection-shaped outputs (. * 125 grid channels) are decoded + NMS'd;
+/// anything else is stored raw (mock executors, foreign runtimes).
+fn persist_result(ctx: &WorkerCtx, inv: &mut Invocation, output: &[f32]) -> Result<()> {
     let result_key = keys::result(&inv.id);
     let cfg = postprocess::DecodeConfig::default();
     let per_cell = cfg.anchors.len() * cfg.stride();
-    let body: Vec<u8> = if outcome.output.len() >= per_cell
-        && outcome.output.len() % per_cell == 0
-        && is_square(outcome.output.len() / per_cell)
+    let body: Vec<u8> = if output.len() >= per_cell
+        && output.len() % per_cell == 0
+        && is_square(output.len() / per_cell)
     {
-        let cells = outcome.output.len() / per_cell;
+        let cells = output.len() / per_cell;
         let g = (cells as f64).sqrt() as usize;
-        let dets = postprocess::postprocess(&outcome.output, g, g, &cfg);
+        let dets = postprocess::postprocess(output, g, g, &cfg);
         postprocess::detections_to_json(&dets)
             .to_string()
             .into_bytes()
     } else {
-        outcome
-            .output
-            .iter()
-            .flat_map(|f| f.to_le_bytes())
-            .collect()
+        output.iter().flat_map(|f| f.to_le_bytes()).collect()
     };
     ctx.store.put(&result_key, &body)?;
     inv.result_key = Some(result_key);
@@ -261,15 +577,30 @@ fn is_square(n: usize) -> bool {
     r * r == n
 }
 
-fn fail(ctx: &WorkerCtx, mut inv: Invocation, reason: String) {
-    inv.status = Status::Failed(reason);
-    inv.stamps.n_end = Some(ctx.clock.now());
-    let _ = ctx.queue.ack(&inv.id);
-    let _ = ctx.completions.report(inv);
+/// Fail a whole leased batch before execution (variant miss, cold-start
+/// exhaustion): one `ack_batch` round trip, per-invocation reports.
+fn fail_batch(ctx: &WorkerCtx, invs: Vec<Invocation>, reason: &str) {
+    let now = ctx.clock.now();
+    let failed: Vec<Invocation> = invs
+        .into_iter()
+        .map(|mut inv| {
+            inv.status = Status::Failed(reason.to_string());
+            inv.stamps.n_end = Some(now);
+            inv
+        })
+        .collect();
+    ack_and_report_rejected(
+        ctx.queue.as_ref(),
+        ctx.completions.as_ref(),
+        &ctx.node_id,
+        failed,
+    );
 }
 
-/// Exposed for scheduler integration tests.
-pub fn warm_set(registry: &DeviceRegistry, pool: &InstancePool) -> Vec<String> {
+/// Exposed for scheduler integration tests.  A borrowed-through
+/// [`HashSet`] end to end: no `Vec` rebuild between the pool probe and
+/// the [`TakeFilter`] it feeds.
+pub fn warm_set(registry: &DeviceRegistry, pool: &InstancePool) -> HashSet<String> {
     warm_runtimes(registry, pool)
 }
 
@@ -294,6 +625,27 @@ mod tests {
         assert!(is_square(4));
         assert!(!is_square(2));
         assert!(!is_square(8));
+    }
+
+    #[test]
+    fn warm_set_is_a_set() {
+        let reg = paper_all_accel();
+        let pool = InstancePool::new(8);
+        assert!(warm_set(&reg, &pool).is_empty());
+        drop(
+            pool.acquire_or_start("tinyyolo-gpu", "gpu1", || {
+                RuntimeInstance::start(
+                    "tinyyolo-gpu",
+                    "gpu1",
+                    MockExecutor::factory(1.0, Duration::ZERO),
+                )
+            })
+            .unwrap(),
+        );
+        assert_eq!(
+            warm_set(&reg, &pool),
+            HashSet::from(["tinyyolo".to_string()])
+        );
     }
 
     #[test]

@@ -130,26 +130,52 @@ impl Inner {
         self.generation += 1;
     }
 
-    /// Smallest front seq among the given classes' lanes — one
-    /// comparison per class, independent of queue depth.
+    /// One scan over the given classes' lane fronts — one probe per
+    /// class, independent of queue depth.  The best lane is the one with
+    /// the smallest front seq (plain FIFO), or — under `prefer_deep` —
+    /// the **deepest** lane (ties broken by older front seq, the
+    /// micro-batching preference).  Shared by `take_locked`'s FIFO pick
+    /// and the grouped takes, so the two selection paths cannot drift.
+    fn best_lane<'a>(
+        &self,
+        classes: impl Iterator<Item = &'a String>,
+        prefer_deep: bool,
+    ) -> Option<(u64, String)> {
+        let mut best: Option<(u64, usize, &String)> = None;
+        for rt in classes {
+            if let Some(lane) = self.queued.get(rt) {
+                let front = lane.front().expect("lanes are never empty").0;
+                let depth = lane.len();
+                let better = match &best {
+                    None => true,
+                    Some((bf, bd, _)) if prefer_deep => {
+                        depth > *bd || (depth == *bd && front < *bf)
+                    }
+                    Some((bf, _, _)) => front < *bf,
+                };
+                if better {
+                    best = Some((front, depth, rt));
+                }
+            }
+        }
+        best.map(|(front, _, rt)| (front, rt.clone()))
+    }
+
+    /// Smallest front seq among the given classes' lanes.
     fn min_front<'a>(
         &self,
         classes: impl Iterator<Item = &'a String>,
     ) -> Option<(u64, String)> {
-        let mut best: Option<(u64, &String)> = None;
-        for rt in classes {
-            if let Some(lane) = self.queued.get(rt) {
-                let seq = lane.front().expect("lanes are never empty").0;
-                let better = match best {
-                    None => true,
-                    Some((s, _)) => seq < s,
-                };
-                if better {
-                    best = Some((seq, rt));
-                }
-            }
-        }
-        best.map(|(seq, rt)| (seq, rt.clone()))
+        self.best_lane(classes, false)
+    }
+
+    /// Lane choice for a grouped take (see [`Inner::best_lane`]).
+    fn pick_lane<'a>(
+        &self,
+        classes: impl Iterator<Item = &'a String>,
+        prefer_deep: bool,
+    ) -> Option<String> {
+        self.best_lane(classes, prefer_deep).map(|(_, rt)| rt)
     }
 }
 
@@ -285,6 +311,51 @@ impl InvocationQueue for MemQueue {
         let mut out = Vec::new();
         while out.len() < max {
             match self.take_locked(&mut inner, filter) {
+                Some(lease) => out.push(lease),
+                None => break,
+            }
+        }
+        Ok(out)
+    }
+
+    /// One lock hold: pick the lane (warm classes first; deepest when the
+    /// filter prefers deep, oldest-front otherwise) and drain up to `max`
+    /// leases from it in FIFO order.
+    fn take_batch_grouped(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        if max == 0 {
+            return Ok(Vec::new());
+        }
+        let pick = inner
+            .pick_lane(filter.warm.iter(), filter.prefer_deep)
+            .map(|rt| (rt, true))
+            .or_else(|| {
+                if filter.warm_only {
+                    None
+                } else if filter.runtimes.is_empty() {
+                    inner
+                        .pick_lane(inner.queued.keys(), filter.prefer_deep)
+                        .map(|rt| (rt, false))
+                } else {
+                    inner
+                        .pick_lane(filter.runtimes.iter(), filter.prefer_deep)
+                        .map(|rt| (rt, false))
+                }
+            });
+        let Some((rt, warm_hit)) = pick else {
+            return Ok(Vec::new());
+        };
+        // Single-class filter whose warm/cold split reproduces the pick,
+        // so each lease carries the right `warm_hit`.
+        let lane_filter = TakeFilter {
+            runtimes: HashSet::from([rt.clone()]),
+            warm: if warm_hit { HashSet::from([rt]) } else { HashSet::new() },
+            warm_only: warm_hit,
+            prefer_deep: false,
+        };
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.take_locked(&mut inner, &lane_filter) {
                 Some(lease) => out.push(lease),
                 None => break,
             }
@@ -681,6 +752,54 @@ mod tests {
     }
 
     #[test]
+    fn take_batch_grouped_is_single_class_fifo() {
+        let (_c, q) = queue();
+        q.publish(inv("a1", "a")).unwrap();
+        q.publish(inv("b1", "b")).unwrap();
+        q.publish(inv("a2", "a")).unwrap();
+        q.publish(inv("b2", "b")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()]);
+        // plain pick: lane of the oldest front (a1), drained FIFO, b untouched
+        let leases = q.take_batch_grouped(&f, 8).unwrap();
+        let ids: Vec<&str> = leases.iter().map(|l| l.invocation.id.as_str()).collect();
+        assert_eq!(ids, vec!["a1", "a2"]);
+        assert!(leases.iter().all(|l| !l.warm_hit));
+        assert_eq!(q.stats().unwrap().queued, 2, "other class untouched");
+        // max respected
+        let leases = q.take_batch_grouped(&f, 1).unwrap();
+        assert_eq!(leases[0].invocation.id, "b1");
+        // nothing matching -> empty
+        assert!(q
+            .take_batch_grouped(&TakeFilter::supporting(vec!["z".into()]), 4)
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn take_batch_grouped_prefer_deep_coalesces_deepest_lane() {
+        let (_c, q) = queue();
+        q.publish(inv("a1", "a")).unwrap(); // older but shallow
+        for i in 0..4 {
+            q.publish(inv(&format!("b{i}"), "b")).unwrap();
+        }
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()]).preferring_deep(true);
+        let leases = q.take_batch_grouped(&f, 8).unwrap();
+        let ids: Vec<&str> = leases.iter().map(|l| l.invocation.id.as_str()).collect();
+        assert_eq!(ids, vec!["b0", "b1", "b2", "b3"], "deepest lane wins");
+        // warm lanes still beat depth: a is warm, the deep b lane is not
+        for i in 0..3 {
+            q.publish(inv(&format!("c{i}"), "b")).unwrap();
+        }
+        let warm_f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_warm(vec!["a".into()])
+            .preferring_deep(true);
+        let leases = q.take_batch_grouped(&warm_f, 8).unwrap();
+        let ids: Vec<&str> = leases.iter().map(|l| l.invocation.id.as_str()).collect();
+        assert_eq!(ids, vec!["a1"], "warm class preferred over deeper cold lane");
+        assert!(leases[0].warm_hit);
+    }
+
+    #[test]
     fn concurrent_takers_no_double_delivery() {
         let (_c, q) = queue();
         for i in 0..200 {
@@ -769,6 +888,130 @@ mod tests {
                         return false;
                     }
                     q.ack(&lease.invocation.id).unwrap();
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn property_grouped_take_matches_default_and_deep_invariants() {
+        use crate::prop;
+        // The hand-written MemQueue::take_batch_grouped fast path must
+        // stay equivalent to the trait default (built purely from the
+        // property-verified take/take_batch primitives) whenever
+        // `prefer_deep` is off — same ids, same order, same warm flags.
+        // With `prefer_deep` on, the invariants are: one class per call,
+        // FIFO within the class, warm classes win, and the chosen class
+        // is a deepest matching lane.
+        struct DefaultGrouped(Arc<MemQueue>);
+        impl InvocationQueue for DefaultGrouped {
+            fn publish(&self, i: Invocation) -> Result<()> {
+                self.0.publish(i)
+            }
+            fn take(&self, f: &TakeFilter) -> Result<Option<Lease>> {
+                self.0.take(f)
+            }
+            fn take_batch(&self, f: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+                self.0.take_batch(f, max)
+            }
+            // take_batch_grouped NOT overridden: the trait default runs.
+            fn ack(&self, id: &str) -> Result<()> {
+                self.0.ack(id)
+            }
+            fn release(&self, id: &str) -> Result<()> {
+                self.0.release(id)
+            }
+            fn reap_expired(&self) -> Result<usize> {
+                self.0.reap_expired()
+            }
+            fn stats(&self) -> Result<QueueStats> {
+                self.0.stats()
+            }
+        }
+        prop::check(
+            "grouped-take-equivalence",
+            40,
+            |rng| {
+                let publishes: Vec<u64> =
+                    (0..rng.range(0, 24)).map(|_| rng.below(5)).collect();
+                let supported: Vec<u64> = (0..rng.range(1, 4)).map(|_| rng.below(6)).collect();
+                let warm: Vec<u64> = (0..rng.below(3)).map(|_| rng.below(6)).collect();
+                let max = rng.range(1, 6) as usize;
+                (publishes, supported, warm, max)
+            },
+            |(publishes, supported, warm, max)| {
+                let filter = TakeFilter::supporting(
+                    supported.iter().map(|c| format!("r{c}")),
+                )
+                .with_warm(warm.iter().map(|c| format!("r{c}")));
+                let fast = MemQueue::new(TestClock::new());
+                let slow = DefaultGrouped(MemQueue::new(TestClock::new()));
+                for (i, c) in publishes.iter().enumerate() {
+                    fast.publish(inv(&format!("p{i}"), &format!("r{c}"))).unwrap();
+                    slow.publish(inv(&format!("p{i}"), &format!("r{c}"))).unwrap();
+                }
+                // prefer_deep off: byte-for-byte equivalent delivery
+                loop {
+                    let a = fast.take_batch_grouped(&filter, *max).unwrap();
+                    let b = slow.take_batch_grouped(&filter, *max).unwrap();
+                    let sig = |ls: &[Lease]| -> Vec<(String, bool)> {
+                        ls.iter()
+                            .map(|l| (l.invocation.id.clone(), l.warm_hit))
+                            .collect()
+                    };
+                    if sig(&a) != sig(&b) {
+                        return false;
+                    }
+                    if a.is_empty() {
+                        break;
+                    }
+                }
+                // prefer_deep on: structural invariants on a fresh queue
+                let deep_filter = filter.clone().preferring_deep(true);
+                let q = MemQueue::new(TestClock::new());
+                for (i, c) in publishes.iter().enumerate() {
+                    q.publish(inv(&format!("p{i}"), &format!("r{c}"))).unwrap();
+                }
+                loop {
+                    let before = q.stats().unwrap();
+                    let depth_of = |rt: &str| {
+                        before
+                            .classes
+                            .iter()
+                            .find(|c| c.runtime == rt)
+                            .map(|c| c.queued)
+                            .unwrap_or(0)
+                    };
+                    let got = q.take_batch_grouped(&deep_filter, *max).unwrap();
+                    if got.is_empty() {
+                        break;
+                    }
+                    let rt = got[0].invocation.spec.runtime.clone();
+                    // one class per call, warm flags consistent
+                    if !got.iter().all(|l| l.invocation.spec.runtime == rt) {
+                        return false;
+                    }
+                    let is_warm = deep_filter.accepts_warm(&rt);
+                    if !got.iter().all(|l| l.warm_hit == is_warm) {
+                        return false;
+                    }
+                    // deepest matching lane (warm beats cold; within the
+                    // chosen tier nothing matching was deeper)
+                    let tier: Vec<&String> = if is_warm {
+                        deep_filter.warm.iter().collect()
+                    } else {
+                        deep_filter.runtimes.iter().collect()
+                    };
+                    let max_tier_depth =
+                        tier.iter().map(|r| depth_of(r)).max().unwrap_or(0);
+                    if depth_of(&rt) < max_tier_depth.min(*max) {
+                        return false;
+                    }
+                    // count respected
+                    if got.len() > *max || got.len() < depth_of(&rt).min(*max) {
+                        return false;
+                    }
                 }
                 true
             },

@@ -43,6 +43,13 @@ pub struct TakeFilter {
     pub warm: HashSet<String>,
     /// Only take a warm match (the completion-time reuse query §IV-D).
     pub warm_only: bool,
+    /// Batch-aware lane preference: grouped takes
+    /// ([`InvocationQueue::take_batch_grouped`]) should pick the
+    /// **deepest** matching lane instead of the globally oldest front, so
+    /// a micro-batching node coalesces the most same-variant work per
+    /// device dispatch.  Warm preference still wins first; plain `take`
+    /// and `take_batch` ignore the flag (FIFO fairness is theirs).
+    pub prefer_deep: bool,
 }
 
 impl TakeFilter {
@@ -61,6 +68,30 @@ impl TakeFilter {
             runtimes: HashSet::new(),
             warm: HashSet::from([runtime.to_string()]),
             warm_only: true,
+            ..TakeFilter::default()
+        }
+    }
+
+    /// Set the batch-aware deep-lane preference (see `prefer_deep`).
+    pub fn preferring_deep(mut self, on: bool) -> TakeFilter {
+        self.prefer_deep = on;
+        self
+    }
+
+    /// Follow-up filter for deepening a same-class chunk: only `runtime`,
+    /// classified warm iff the originating take was.  The single source
+    /// of the warm/cold split rule for grouped continuation takes (used
+    /// by [`InvocationQueue::take_batch_grouped`]'s default and the node
+    /// manager's first-chunk deepening).
+    pub fn same_class(runtime: &str, warm: bool) -> TakeFilter {
+        TakeFilter {
+            runtimes: HashSet::from([runtime.to_string()]),
+            warm: if warm {
+                HashSet::from([runtime.to_string()])
+            } else {
+                HashSet::new()
+            },
+            ..TakeFilter::default()
         }
     }
 
@@ -84,6 +115,7 @@ impl TakeFilter {
             .set("runtimes", arr(&self.runtimes))
             .set("warm", arr(&self.warm))
             .set("warm_only", self.warm_only)
+            .set("prefer_deep", self.prefer_deep)
     }
 
     pub fn from_json(j: &Json) -> Result<TakeFilter> {
@@ -97,6 +129,11 @@ impl TakeFilter {
             runtimes: strs("runtimes"),
             warm: strs("warm"),
             warm_only: j.get("warm_only").and_then(|b| b.as_bool()).unwrap_or(false),
+            // Lenient: the flag postdates the wire format; absent = off.
+            prefer_deep: j
+                .get("prefer_deep")
+                .and_then(|b| b.as_bool())
+                .unwrap_or(false),
         })
     }
 }
@@ -191,6 +228,36 @@ pub trait InvocationQueue: Send + Sync {
         Ok(out)
     }
 
+    /// Take up to `max` leases **all of one runtime class** in one call —
+    /// the micro-batching node's query: a chunk of same-variant work that
+    /// one device dispatch can serve.  Class choice honors the filter's
+    /// warm preference first; with [`TakeFilter::prefer_deep`] backends
+    /// pick the deepest matching lane (max coalescing), otherwise the
+    /// lane of the globally oldest matching invocation.  Within the
+    /// class, delivery is FIFO.  The default composes `take` + a
+    /// same-class `take_batch` (correct everywhere, two round trips
+    /// remotely); [`MemQueue`] answers in one lock hold and the queue RPC
+    /// service exposes it as a single round trip.
+    fn take_batch_grouped(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        if max == 0 {
+            return Ok(Vec::new());
+        }
+        let Some(first) = self.take(filter)? else {
+            return Ok(Vec::new());
+        };
+        let runtime = first.invocation.spec.runtime.clone();
+        let same = TakeFilter::same_class(&runtime, filter.accepts_warm(&runtime));
+        let mut out = vec![first];
+        // `first` is already leased: a failed follow-up take must not
+        // drop it (it would sit invisible until the visibility timeout),
+        // so degrade to a chunk of one instead of propagating.
+        match self.take_batch(&same, max - 1) {
+            Ok(more) => out.extend(more),
+            Err(e) => log::warn!("take_batch_grouped follow-up failed: {e:#}"),
+        }
+        Ok(out)
+    }
+
     /// Acknowledge completion (success or permanent failure) of a leased
     /// invocation — removes it from the queue entirely.
     fn ack(&self, invocation_id: &str) -> Result<()>;
@@ -269,5 +336,18 @@ mod tests {
             .with_warm(vec!["x".into(), "y".into()]);
         let back = TakeFilter::from_json(&f.to_json()).unwrap();
         assert_eq!(back, f);
+        // ...including the batch-aware lane preference
+        let deep = f.preferring_deep(true);
+        let back = TakeFilter::from_json(&deep.to_json()).unwrap();
+        assert!(back.prefer_deep);
+        assert_eq!(back, deep);
+    }
+
+    #[test]
+    fn prefer_deep_parses_leniently_when_absent() {
+        // Wire payloads predating the flag must parse to off, not error.
+        let mut j = TakeFilter::default().to_json();
+        j = j.set("prefer_deep", crate::json::Json::Null);
+        assert!(!TakeFilter::from_json(&j).unwrap().prefer_deep);
     }
 }

@@ -140,7 +140,7 @@ fn filter_from(a: u64, b: u64, c: u64) -> TakeFilter {
     let set = |bits: u64| -> HashSet<String> {
         (0..4).filter(|i| bits & (1 << i) != 0).map(|i| format!("r{i}")).collect()
     };
-    TakeFilter { runtimes: set(a), warm: set(b), warm_only: c % 3 == 0 }
+    TakeFilter { runtimes: set(a), warm: set(b), warm_only: c % 3 == 0, ..TakeFilter::default() }
 }
 
 fn inv(id: &str, runtime: &str) -> Invocation {

@@ -69,6 +69,16 @@ impl QueueServer {
                     .collect();
                 Ok((Json::obj().set("leases", Json::Arr(leases)), None))
             }
+            "take_batch_grouped" => {
+                let filter = TakeFilter::from_json(params.req("filter")?)?;
+                let max = params.usize_of("max")?;
+                let leases: Vec<Json> = backend
+                    .take_batch_grouped(&filter, max)?
+                    .into_iter()
+                    .map(|l| lease_to_json(Some(l)))
+                    .collect();
+                Ok((Json::obj().set("leases", Json::Arr(leases)), None))
+            }
             "take_timeout" => {
                 // Server-side long poll: park on the backend (condvar on
                 // MemQueue) so remote node managers are notification-
@@ -178,6 +188,22 @@ impl InvocationQueue for QueueClient {
     fn take_batch(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
         let out = self.rpc.call(
             "take_batch",
+            Json::obj().set("filter", filter.to_json()).set("max", max),
+        )?;
+        let mut leases = Vec::new();
+        for j in out.arr_of("leases")? {
+            if let Some(lease) = lease_from_json(j)? {
+                leases.push(lease);
+            }
+        }
+        Ok(leases)
+    }
+
+    /// One same-class chunk, one RPC — the server picks the lane (warm
+    /// first, deepest under `prefer_deep`) and drains it under one lock.
+    fn take_batch_grouped(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        let out = self.rpc.call(
+            "take_batch_grouped",
             Json::obj().set("filter", filter.to_json()).set("max", max),
         )?;
         let mut leases = Vec::new();
@@ -405,6 +431,21 @@ mod tests {
         q.ack_batch(&ids).unwrap();
         assert_eq!(q.rpc_calls() - before, 1, "ack_batch = one RPC");
         assert_eq!(q.stats().unwrap().acked, 16);
+    }
+
+    #[test]
+    fn grouped_take_is_one_rpc_and_prefer_deep_survives_the_wire() {
+        let (_s, q) = setup();
+        q.publish(inv("a1", "a")).unwrap();
+        for i in 0..5 {
+            q.publish(inv(&format!("b{i}"), "b")).unwrap();
+        }
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()]).preferring_deep(true);
+        let before = q.rpc_calls();
+        let leases = q.take_batch_grouped(&f, 8).unwrap();
+        assert_eq!(q.rpc_calls() - before, 1, "take_batch_grouped = one RPC");
+        let ids: Vec<&str> = leases.iter().map(|l| l.invocation.id.as_str()).collect();
+        assert_eq!(ids, vec!["b0", "b1", "b2", "b3", "b4"], "deep lane chosen server-side");
     }
 
     #[test]

@@ -17,6 +17,20 @@ use std::time::{Duration, Instant};
 pub trait Executor {
     /// Run one invocation payload (flattened f32 image) to its output.
     fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>>;
+
+    /// Run a micro-batch of payloads in one device dispatch, returning
+    /// one output per input (same order).  The default loops [`infer`]
+    /// so every executor is batch-correct from day one; engines whose
+    /// dispatch overhead dominates (the whole point of micro-batching)
+    /// specialize it to pay that overhead once per batch.
+    ///
+    /// Contract: all-or-nothing.  An error fails the whole batch — the
+    /// caller demultiplexes it to every invocation in the batch.
+    ///
+    /// [`infer`]: Executor::infer
+    fn infer_batch(&mut self, inputs: &[Arc<Vec<f32>>]) -> Result<Vec<Vec<f32>>> {
+        inputs.iter().map(|input| self.infer(input)).collect()
+    }
 }
 
 /// Result of one execution, with the instance-side wall time (the real
@@ -27,8 +41,19 @@ pub struct ExecOutcome {
     pub compute_wall: Duration,
 }
 
+/// Result of one batched execution: per-invocation outputs (input order)
+/// plus the wall time of the single device dispatch that produced them.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    pub outputs: Vec<Vec<f32>>,
+    pub compute_wall: Duration,
+}
+
 enum Request {
-    Exec { input: Arc<Vec<f32>>, reply: mpsc::Sender<Result<ExecOutcome>> },
+    /// One device dispatch for N invocations.  A single reply channel per
+    /// batch — the caller demuxes outputs by index — instead of the old
+    /// one-channel-per-invocation allocation.
+    Exec { inputs: Vec<Arc<Vec<f32>>>, reply: mpsc::Sender<Result<BatchOutcome>> },
     Stop,
 }
 
@@ -75,11 +100,17 @@ impl RuntimeInstance {
                 };
                 while let Ok(req) = rx.recv() {
                     match req {
-                        Request::Exec { input, reply } => {
+                        Request::Exec { inputs, reply } => {
                             let t = Instant::now();
-                            let result = exec.infer(&input).map(|output| ExecOutcome {
-                                output,
-                                compute_wall: t.elapsed(),
+                            let n = inputs.len();
+                            let result = exec.infer_batch(&inputs).and_then(|outputs| {
+                                if outputs.len() != n {
+                                    return Err(anyhow!(
+                                        "executor returned {} outputs for a batch of {n}",
+                                        outputs.len()
+                                    ));
+                                }
+                                Ok(BatchOutcome { outputs, compute_wall: t.elapsed() })
                             });
                             let _ = reply.send(result);
                         }
@@ -107,15 +138,32 @@ impl RuntimeInstance {
     /// decoded-input cache — N workers executing one dataset send the
     /// same allocation, never copies.
     pub fn exec(&self, input: impl Into<Arc<Vec<f32>>>) -> Result<ExecOutcome> {
+        let mut batch = self.exec_batch(vec![input.into()])?;
+        Ok(ExecOutcome {
+            output: batch.outputs.pop().expect("batch of one has one output"),
+            compute_wall: batch.compute_wall,
+        })
+    }
+
+    /// Execute a micro-batch in one instance-thread hop and one device
+    /// dispatch.  Outputs come back in input order; the whole batch
+    /// shares one reply channel (demuxed by index by the caller) instead
+    /// of paying a channel allocation per invocation.  An executor error
+    /// fails the whole batch.
+    pub fn exec_batch(&self, inputs: Vec<Arc<Vec<f32>>>) -> Result<BatchOutcome> {
+        if inputs.is_empty() {
+            return Err(anyhow!("empty batch for instance {}", self.variant));
+        }
+        let n = inputs.len() as u64;
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Request::Exec { input: input.into(), reply: reply_tx })
+            .send(Request::Exec { inputs, reply: reply_tx })
             .map_err(|_| anyhow!("instance {} is stopped", self.variant))?;
         let out = reply_rx
             .recv()
             .map_err(|_| anyhow!("instance {} died mid-execution", self.variant))??;
         self.executions
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            .fetch_add(n, std::sync::atomic::Ordering::Relaxed);
         Ok(out)
     }
 
@@ -195,6 +243,42 @@ impl Executor for MockExecutor {
         }
         Ok(input.iter().map(|x| x * self.scale).collect())
     }
+
+    /// Batched mock semantics: `delay` models per-dispatch overhead, so a
+    /// successful batch pays it **once** (the amortization
+    /// micro-batching exists for), and — mirroring [`infer`]'s
+    /// check-then-sleep order — a failed batch pays it not at all.  The
+    /// call counter advances for **every** member of the dispatch (no
+    /// short-circuit), then the first injected failure fails the batch.
+    /// Note that call-count-based failure injection is inherently
+    /// batching-sensitive — the node's isolation fallback re-runs
+    /// members individually, advancing the counter again — so
+    /// batched-vs-serial equivalence tests must use *input-dependent*
+    /// failures, not `fail_after`.
+    ///
+    /// [`infer`]: Executor::infer
+    fn infer_batch(&mut self, inputs: &[Arc<Vec<f32>>]) -> Result<Vec<Vec<f32>>> {
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut first_err = None;
+        for input in inputs {
+            self.count += 1;
+            if let Some(n) = self.fail_after {
+                if self.count > n {
+                    first_err
+                        .get_or_insert_with(|| anyhow!("mock executor failure injection"));
+                    continue;
+                }
+            }
+            outputs.push(input.iter().map(|x| x * self.scale).collect());
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(outputs)
+    }
 }
 
 #[cfg(test)]
@@ -241,6 +325,69 @@ mod tests {
         assert_eq!(a.output, vec![2.0, 4.0]);
         assert_eq!(b.output, vec![2.0, 4.0]);
         assert_eq!(inst.executions(), 2);
+    }
+
+    #[test]
+    fn exec_batch_returns_per_input_outputs_in_order() {
+        let inst = RuntimeInstance::start(
+            "mock-gpu",
+            "gpu0",
+            MockExecutor::factory(2.0, Duration::ZERO),
+        )
+        .unwrap();
+        let inputs: Vec<Arc<Vec<f32>>> =
+            (0..5).map(|i| Arc::new(vec![i as f32, 10.0 + i as f32])).collect();
+        let out = inst.exec_batch(inputs).unwrap();
+        assert_eq!(out.outputs.len(), 5);
+        for (i, o) in out.outputs.iter().enumerate() {
+            assert_eq!(o, &vec![2.0 * i as f32, 2.0 * (10.0 + i as f32)]);
+        }
+        assert_eq!(inst.executions(), 5, "counter advances per invocation");
+    }
+
+    #[test]
+    fn exec_batch_amortizes_dispatch_delay() {
+        // Mock delay models per-dispatch overhead: a batch of 8 pays it
+        // once (~30 ms), not 8 times (~240 ms).  Generous bound for CI.
+        let inst = RuntimeInstance::start(
+            "mock",
+            "gpu0",
+            MockExecutor::factory(1.0, Duration::from_millis(30)),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let out = inst
+            .exec_batch((0..8).map(|i| Arc::new(vec![i as f32])).collect())
+            .unwrap();
+        assert_eq!(out.outputs.len(), 8);
+        assert!(
+            t0.elapsed() < Duration::from_millis(150),
+            "batch of 8 must not pay 8 dispatch delays: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn exec_batch_rejects_empty_and_demuxes_errors() {
+        let inst = RuntimeInstance::start(
+            "mock",
+            "gpu0",
+            MockExecutor::factory(1.0, Duration::ZERO),
+        )
+        .unwrap();
+        assert!(inst.exec_batch(Vec::new()).is_err(), "empty batch rejected");
+        // A failing executor fails the whole batch (all-or-nothing), and
+        // the instance survives to serve the next request.
+        let factory: crate::runtime::ExecutorFactory = Box::new(|| {
+            Ok(Box::new(MockExecutor::new(1.0).failing_after(2)) as Box<dyn Executor>)
+        });
+        let flaky = RuntimeInstance::start("flaky", "gpu0", factory).unwrap();
+        let err = flaky
+            .exec_batch((0..4).map(|_| Arc::new(vec![1.0])).collect())
+            .unwrap_err();
+        assert!(format!("{err}").contains("failure injection"));
+        assert_eq!(flaky.executions(), 0, "failed batch counts no executions");
+        assert!(flaky.exec_batch(vec![Arc::new(vec![1.0])]).is_err());
     }
 
     #[test]

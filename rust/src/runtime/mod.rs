@@ -25,7 +25,7 @@ pub mod pjrt;
 pub mod pool;
 
 pub use bundle::{ArtifactSpec, RuntimeBundle, WeightSpec};
-pub use instance::{ExecOutcome, Executor, RuntimeInstance};
+pub use instance::{BatchOutcome, ExecOutcome, Executor, RuntimeInstance};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtExecutor;
 pub use pool::InstancePool;

@@ -120,6 +120,26 @@ impl Executor for PjrtExecutor {
         }
         Ok(values)
     }
+
+    /// Batched PJRT execution: the AOT modules are compiled for batch
+    /// dimension 1, so the device still runs once per input — but shape
+    /// validation happens once up front (all-or-nothing, before any
+    /// compute is spent) and the batch shares one instance-thread hop.
+    /// True batched HLO (N > 1 leading dimension) is a compile-time
+    /// artifact change tracked in ROADMAP.md.
+    fn infer_batch(&mut self, inputs: &[std::sync::Arc<Vec<f32>>]) -> Result<Vec<Vec<f32>>> {
+        for input in inputs {
+            if input.len() != self.input_len {
+                bail!(
+                    "batched input of {} f32s, variant {} expects {}",
+                    input.len(),
+                    self.variant,
+                    self.input_len
+                );
+            }
+        }
+        inputs.iter().map(|input| self.infer(input)).collect()
+    }
 }
 
 #[cfg(test)]

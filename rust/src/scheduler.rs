@@ -19,6 +19,7 @@ use crate::events::Invocation;
 use crate::queue::TakeFilter;
 use crate::runtime::InstancePool;
 use crate::util::SimTime;
+use std::collections::HashSet;
 use std::time::Duration;
 
 /// Decision for a leased event before execution.
@@ -46,9 +47,11 @@ pub trait Policy: Send + Sync {
 
 /// Runtimes that are warm *somewhere usable*: an idle instance exists for
 /// (variant, device) where the device implements the logical runtime via
-/// that variant and has a free slot.
-pub fn warm_runtimes(registry: &DeviceRegistry, pool: &InstancePool) -> Vec<String> {
-    let mut out = Vec::new();
+/// that variant and has a free slot.  Returned as a [`HashSet`] so it
+/// moves straight into [`TakeFilter::warm`] — no per-poll `Vec` rebuild
+/// and re-collect (the sets are rebuilt every manager poll).
+pub fn warm_runtimes(registry: &DeviceRegistry, pool: &InstancePool) -> HashSet<String> {
+    let mut out = HashSet::new();
     for rt in registry.supported_runtimes() {
         let usable = registry.devices().iter().any(|d| {
             d.free_slots() > 0
@@ -58,7 +61,7 @@ pub fn warm_runtimes(registry: &DeviceRegistry, pool: &InstancePool) -> Vec<Stri
                     .unwrap_or(false)
         });
         if usable {
-            out.push(rt);
+            out.insert(rt);
         }
     }
     out
@@ -70,12 +73,38 @@ pub struct WarmFirst;
 
 impl Policy for WarmFirst {
     fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
-        TakeFilter::supporting(registry.supported_runtimes())
-            .with_warm(warm_runtimes(registry, pool))
+        TakeFilter {
+            runtimes: registry.supported_runtimes().into_iter().collect(),
+            warm: warm_runtimes(registry, pool),
+            ..TakeFilter::default()
+        }
     }
 
     fn name(&self) -> &'static str {
         "warm-first"
+    }
+}
+
+/// Batch-aware decorator: the inner policy's take set, with the filter's
+/// deep-lane preference switched on so the queue's grouped takes coalesce
+/// the deepest same-variant lane (feeding the node's micro-batch
+/// aggregator the biggest chunks).  Applied by the node manager whenever
+/// its [`crate::node::BatchConfig`] allows batches > 1.
+pub struct BatchAware {
+    pub inner: std::sync::Arc<dyn Policy>,
+}
+
+impl Policy for BatchAware {
+    fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
+        self.inner.filter(registry, pool).preferring_deep(true)
+    }
+
+    fn admit(&self, inv: &Invocation, now: SimTime) -> Admission {
+        self.inner.admit(inv, now)
+    }
+
+    fn name(&self) -> &'static str {
+        "batch-aware"
     }
 }
 
@@ -102,7 +131,7 @@ pub struct KindAffinity {
 
 impl Policy for KindAffinity {
     fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
-        let preferred: Vec<String> = registry
+        let preferred: HashSet<String> = registry
             .devices()
             .iter()
             .filter(|d| d.profile.kind == self.kind && d.free_slots() > 0)
@@ -111,7 +140,11 @@ impl Policy for KindAffinity {
         if preferred.is_empty() {
             WarmFirst.filter(registry, pool)
         } else {
-            TakeFilter::supporting(preferred).with_warm(warm_runtimes(registry, pool))
+            TakeFilter {
+                runtimes: preferred,
+                warm: warm_runtimes(registry, pool),
+                ..TakeFilter::default()
+            }
         }
     }
 
@@ -215,7 +248,7 @@ mod tests {
         assert!(warm_runtimes(&reg, &pool).is_empty());
         // saturate vpu0's only slot: a warm vpu instance becomes unusable
         let pool = pool_with_warm("tinyyolo-vpu", "vpu0");
-        assert_eq!(warm_runtimes(&reg, &pool), vec!["tinyyolo".to_string()]);
+        assert_eq!(warm_runtimes(&reg, &pool), set(&["tinyyolo"]));
         let _slot = reg.get("vpu0").unwrap().try_acquire().unwrap();
         assert!(warm_runtimes(&reg, &pool).is_empty());
     }
@@ -242,6 +275,25 @@ mod tests {
             f.runtimes,
             reg.supported_runtimes().into_iter().collect::<std::collections::HashSet<_>>()
         );
+    }
+
+    #[test]
+    fn batch_aware_sets_deep_preference_and_delegates() {
+        let reg = paper_all_accel();
+        let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
+        let inner: std::sync::Arc<dyn Policy> =
+            std::sync::Arc::new(DeadlineFilter { deadline: Duration::from_millis(500) });
+        let policy = BatchAware { inner };
+        let f = policy.filter(&reg, &pool);
+        assert!(f.prefer_deep, "grouped takes must coalesce deep lanes");
+        assert_eq!(f.runtimes, set(&["tinyyolo"]), "take set comes from the inner policy");
+        assert_eq!(f.warm, set(&["tinyyolo"]));
+        // admission delegates (deadline still enforced under batching)
+        let inv = Invocation::new("1", EventSpec::new("r", "d"), SimTime::from_millis(0));
+        assert!(matches!(
+            policy.admit(&inv, SimTime::from_millis(900)),
+            Admission::Reject(_)
+        ));
     }
 
     #[test]

@@ -253,7 +253,16 @@ pub fn poll_chunked<T>(
     loop {
         let remaining = deadline.saturating_duration_since(Instant::now());
         let chunk = remaining.min(LONG_POLL_CHUNK);
-        if let Some(v) = call(chunk.as_millis() as u64)? {
+        // Sub-ms budgets round UP to one server-side millisecond: the
+        // wire carries whole ms, and truncating to 0 would turn a short
+        // park (the micro-batch linger window) into a non-blocking
+        // probe.
+        let chunk_ms = if chunk.is_zero() {
+            0
+        } else {
+            (chunk.as_millis() as u64).max(1)
+        };
+        if let Some(v) = call(chunk_ms)? {
             return Ok(Some(v));
         }
         if remaining <= chunk {
