@@ -1,0 +1,299 @@
+//! Micro-benchmark: invocation pipelines + QoS lanes (L3 data plane).
+//!
+//! Two questions from DESIGN.md §12, answered with numbers:
+//!
+//! 1. What does coordinator-side stage chaining buy over a client driving
+//!    the same 3-stage flow by hand?  Chained: one submit RPC, every
+//!    intermediate moves node → store → node.  Client-driven: per stage a
+//!    submit + wait + result fetch, plus a re-upload of the intermediate
+//!    — the payload crosses the client link twice per hop.  Both run over
+//!    real TCP against the same mock-engine node.
+//! 2. What do the weighted QoS lanes buy an interactive client during a
+//!    batch flood?  A deterministic consumer drains a queue seeded with a
+//!    400-event batch flood plus 100 interactive arrivals, lanes on
+//!    (interactive_burst = 3) vs off (0 = pure FIFO), and compares the
+//!    interactive p99 wait.
+//!
+//! Writes `BENCH_pipeline.json` (flat `metric → value`) so perf PRs leave
+//! a machine-readable trajectory (see EXPERIMENTS.md §Pipelines & QoS).
+
+mod common;
+
+use hardless::api::{GatewayConfig, GatewayServer, HardlessClient, RemoteClient, RemoteReporter};
+use hardless::events::{EventSpec, Invocation, Priority, Status};
+use hardless::json::Json;
+use hardless::node::{spawn_node, InstanceReserve, NodeConfig, NodeDeps, NodeHandle};
+use hardless::pipeline::{PipelineSpec, PipelineState, StageSpec};
+use hardless::queue::{InvocationQueue, MemQueue, QueueClient, QueueConfig, QueueServer, TakeFilter};
+use hardless::runtime::instance::MockExecutor;
+use hardless::runtime::RuntimeInstance;
+use hardless::scheduler::WarmFirst;
+use hardless::store::{MemStore, ObjectStore, StoreClient, StoreServer};
+use hardless::util::clock::ScaledClock;
+use hardless::util::SimTime;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ROUNDS: usize = 20;
+const PAYLOAD_FLOATS: usize = 16 * 1024; // 64 KiB per intermediate
+
+struct Deployment {
+    gateway: GatewayServer,
+    queue_srv: QueueServer,
+    store_srv: StoreServer,
+    clock: Arc<ScaledClock>,
+}
+
+fn deployment() -> Deployment {
+    let clock = ScaledClock::new(120.0);
+    let queue = MemQueue::new(clock.clone());
+    let store = Arc::new(MemStore::new());
+    let queue_srv = QueueServer::serve("127.0.0.1:0", queue.clone()).unwrap();
+    let store_srv = StoreServer::serve("127.0.0.1:0", store.clone()).unwrap();
+    let gateway = GatewayServer::serve(
+        "127.0.0.1:0",
+        queue,
+        store,
+        clock.clone(),
+        GatewayConfig {
+            announce_runtimes: vec!["tinyyolo".into()],
+            ..GatewayConfig::default()
+        },
+    )
+    .unwrap();
+    Deployment { gateway, queue_srv, store_srv, clock }
+}
+
+fn remote_node(d: &Deployment) -> NodeHandle {
+    let registry = hardless::accel::paper_dualgpu();
+    let reserve = InstanceReserve::new();
+    for dev in registry.devices() {
+        for variant in dev.profile.runtimes.values() {
+            for _ in 0..dev.profile.slots {
+                reserve.add(
+                    RuntimeInstance::start(
+                        variant.clone(),
+                        dev.id.clone(),
+                        MockExecutor::factory(2.0, Duration::from_millis(1)),
+                    )
+                    .unwrap(),
+                );
+            }
+        }
+    }
+    let deps = NodeDeps {
+        queue: Arc::new(QueueClient::connect(d.queue_srv.addr()).unwrap()),
+        store: Arc::new(StoreClient::connect(d.store_srv.addr()).unwrap()),
+        clock: d.clock.clone(),
+        policy: Arc::new(WarmFirst),
+        reserve,
+        completions: Arc::new(RemoteReporter::connect(d.gateway.addr()).unwrap()),
+    };
+    spawn_node(NodeConfig::new("bench-node"), registry, deps).unwrap()
+}
+
+fn payload_bytes() -> Vec<u8> {
+    (0..PAYLOAD_FLOATS)
+        .flat_map(|i| (i as f32).to_le_bytes())
+        .collect()
+}
+
+/// Chained: one submit_pipeline RPC, then control-plane polls only.
+fn run_chained(d: &Deployment) -> anyhow::Result<(f64, u64)> {
+    let client = RemoteClient::connect(d.gateway.addr())?;
+    let store = StoreClient::connect(d.store_srv.addr())?;
+    let mut total = Duration::ZERO;
+    let mut submit_rpcs = 0u64;
+    for round in 0..ROUNDS {
+        let key = format!("datasets/chained-{round}");
+        store.put(&key, &payload_bytes())?;
+        let t0 = Instant::now();
+        let before = client.rpc_calls();
+        let pid = client.submit_pipeline(
+            PipelineSpec::new(&key)
+                .stage(StageSpec::new("decode", "tinyyolo"))
+                .stage(StageSpec::new("classify", "tinyyolo").after(["decode"]))
+                .stage(StageSpec::new("post", "tinyyolo").after(["classify"])),
+        )?;
+        submit_rpcs += client.rpc_calls() - before;
+        let st = loop {
+            let st = client
+                .pipeline_status(&pid)?
+                .ok_or_else(|| anyhow::anyhow!("{pid} untracked"))?;
+            if st.state != PipelineState::Running {
+                break st;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        };
+        anyhow::ensure!(st.state == PipelineState::Succeeded, "chained failed: {st:?}");
+        let last = st.stages[2].invocation_id.clone().unwrap();
+        let body = client.fetch_result(&last)?.expect("final result");
+        total += t0.elapsed();
+        anyhow::ensure!(
+            body.len() == PAYLOAD_FLOATS * 4,
+            "result size drifted: {}",
+            body.len()
+        );
+        // Mock engine doubles per stage: spot-check ×8 end to end.
+        let f1 = f32::from_le_bytes([body[4], body[5], body[6], body[7]]);
+        anyhow::ensure!(f1 == 8.0, "expected 1.0 x 8, got {f1}");
+    }
+    Ok((total.as_secs_f64() * 1e3 / ROUNDS as f64, submit_rpcs))
+}
+
+/// Client-driven: the client runs the DAG by hand — submit, wait, fetch
+/// the intermediate, re-upload it as the next stage's dataset.
+fn run_client_driven(d: &Deployment) -> anyhow::Result<(f64, u64)> {
+    let client = RemoteClient::connect(d.gateway.addr())?;
+    let store = StoreClient::connect(d.store_srv.addr())?;
+    let mut total = Duration::ZERO;
+    let mut gateway_rpcs = 0u64;
+    for round in 0..ROUNDS {
+        let mut key = format!("datasets/driven-{round}");
+        store.put(&key, &payload_bytes())?;
+        let t0 = Instant::now();
+        let before = client.rpc_calls();
+        let mut body: Option<Vec<u8>> = None;
+        for stage in 0..3 {
+            if let Some(b) = body.take() {
+                key = format!("datasets/driven-{round}-{stage}");
+                store.put(&key, &b)?; // intermediate re-crosses the client link
+            }
+            let id = client.submit(EventSpec::new("tinyyolo", &key))?;
+            let inv = client
+                .wait(&id, Duration::from_secs(60))?
+                .expect("stage completes");
+            anyhow::ensure!(inv.status == Status::Succeeded, "stage failed: {inv:?}");
+            body = Some(client.fetch_result(&id)?.expect("stage result").to_vec());
+        }
+        gateway_rpcs += client.rpc_calls() - before;
+        total += t0.elapsed();
+        let body = body.unwrap();
+        let f1 = f32::from_le_bytes([body[4], body[5], body[6], body[7]]);
+        anyhow::ensure!(f1 == 8.0, "expected 1.0 x 8, got {f1}");
+    }
+    Ok((total.as_secs_f64() * 1e3 / ROUNDS as f64, gateway_rpcs / ROUNDS as u64))
+}
+
+/// Deterministic QoS drain: 400 batch + 100 interactive events, one
+/// consumer serving one event per 10 ms step.  Returns the interactive
+/// p99 wait (ms) and how many batch events were served before the last
+/// interactive one (starvation-freedom both ways).
+fn flood_drain(interactive_burst: u32) -> (u64, usize) {
+    const BATCH: usize = 400;
+    const INTERACTIVE: usize = 100;
+    const SERVICE_MS: u64 = 10;
+    let queue = MemQueue::with_config(
+        ScaledClock::realtime(),
+        QueueConfig { interactive_burst, ..QueueConfig::default() },
+    );
+    for i in 0..BATCH {
+        queue
+            .publish(Invocation::new(
+                format!("b-{i}"),
+                EventSpec::new("a", "datasets/d").with_priority(Priority::Batch),
+                SimTime(0),
+            ))
+            .unwrap();
+    }
+    for i in 0..INTERACTIVE {
+        queue
+            .publish(Invocation::new(
+                format!("i-{i}"),
+                EventSpec::new("a", "datasets/d").with_priority(Priority::Interactive),
+                SimTime(0),
+            ))
+            .unwrap();
+    }
+    let f = TakeFilter::default();
+    let mut interactive_waits: Vec<u64> = Vec::new();
+    let mut batch_before_last_interactive = 0;
+    let mut batch_so_far = 0;
+    let mut pops = 0u64;
+    while let Some(lease) = queue.take(&f).unwrap() {
+        pops += 1;
+        if lease.invocation.id.starts_with("i-") {
+            interactive_waits.push(pops * SERVICE_MS);
+            batch_before_last_interactive = batch_so_far;
+        } else {
+            batch_so_far += 1;
+        }
+        queue.ack(&lease.invocation.id).unwrap();
+    }
+    assert_eq!(pops as usize, BATCH + INTERACTIVE, "drained everything");
+    interactive_waits.sort_unstable();
+    let idx = (interactive_waits.len() * 99).div_ceil(100) - 1;
+    (interactive_waits[idx], batch_before_last_interactive)
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("micro — pipelines (chained vs client-driven) + QoS lanes");
+
+    let d = deployment();
+    let node = remote_node(&d);
+    let (chained_ms, chained_submit_rpcs) = run_chained(&d)?;
+    let (driven_ms, driven_rpcs) = run_client_driven(&d)?;
+    node.stop();
+    println!(
+        "{:<52} {chained_ms:>9.2} ms  ({} submit RPCs / {ROUNDS} pipelines)",
+        "chained 3-stage pipeline, mean latency", chained_submit_rpcs
+    );
+    println!(
+        "{:<52} {driven_ms:>9.2} ms  ({driven_rpcs} gateway RPCs per pipeline)",
+        "client-driven 3-stage flow, mean latency"
+    );
+
+    let (p99_on, batch_progress_on) = flood_drain(QueueConfig::default().interactive_burst);
+    let (p99_off, _) = flood_drain(0);
+    println!(
+        "{:<52} {p99_on:>7} ms  ({batch_progress_on} batch served meanwhile)",
+        "interactive p99 wait under batch flood, lanes ON"
+    );
+    println!(
+        "{:<52} {p99_off:>7} ms",
+        "interactive p99 wait under batch flood, lanes OFF"
+    );
+
+    let out = Json::obj()
+        .set("chained 3-stage: mean latency ms", chained_ms)
+        .set(
+            "chained 3-stage: submit RPCs per pipeline",
+            chained_submit_rpcs as f64 / ROUNDS as f64,
+        )
+        .set("client-driven 3-stage: mean latency ms", driven_ms)
+        .set("client-driven 3-stage: gateway RPCs per pipeline", driven_rpcs as usize)
+        .set("interactive p99 wait ms under batch flood (lanes on)", p99_on as usize)
+        .set("interactive p99 wait ms under batch flood (lanes off)", p99_off as usize)
+        .set("batch events served before last interactive (lanes on)", batch_progress_on);
+    std::fs::write("BENCH_pipeline.json", format!("{out}\n"))?;
+    println!("\nwrote BENCH_pipeline.json");
+
+    // Structural gates (deterministic): the whole DAG costs one submit
+    // RPC chained, while the hand-driven flow pays per stage; the QoS
+    // lanes must at least halve the interactive p99 yet never park batch
+    // work entirely.
+    anyhow::ensure!(
+        chained_submit_rpcs == ROUNDS as u64,
+        "chained submit must be exactly one RPC per pipeline: {chained_submit_rpcs}"
+    );
+    anyhow::ensure!(
+        driven_rpcs >= 9,
+        "client-driven 3-stage flow should cost >= 9 gateway RPCs, saw {driven_rpcs}"
+    );
+    anyhow::ensure!(
+        p99_on * 2 <= p99_off,
+        "lanes must at least halve interactive p99: on {p99_on} vs off {p99_off}"
+    );
+    anyhow::ensure!(
+        batch_progress_on > 0,
+        "weighted take must keep batch progressing during interactive backlog"
+    );
+    // Latency sanity (not a perf gate — CI machines vary): chaining must
+    // never be pathologically slower than driving the DAG by hand.
+    anyhow::ensure!(
+        chained_ms < driven_ms * 1.5,
+        "chained {chained_ms:.2} ms vs client-driven {driven_ms:.2} ms"
+    );
+    println!("pipeline/QoS targets PASSED");
+    Ok(())
+}

@@ -17,6 +17,7 @@ use crate::events::{EventSpec, Invocation};
 use crate::json::Json;
 use crate::metrics::MetricsHub;
 use crate::node::CompletionSink;
+use crate::pipeline::{PipelineSpec, PipelineStatus};
 use crate::queue::InvocationQueue;
 use crate::store::{Blob, ObjectStore};
 use crate::util::Clock;
@@ -81,7 +82,12 @@ impl GatewayServer {
         config: GatewayConfig,
     ) -> Result<GatewayServer> {
         let metrics = Arc::new(MetricsHub::new());
-        let coordinator = Coordinator::new(queue.clone(), clock.clone(), metrics.clone());
+        let coordinator = Coordinator::new(
+            queue.clone(),
+            clock.clone(),
+            metrics.clone(),
+            Some(store.clone()),
+        );
         let completions = coordinator.completion_sender();
         let mut announce = config.announce_runtimes.clone();
         announce.sort();
@@ -123,13 +129,23 @@ impl GatewayServer {
                     Ok((Json::obj().set("ids", Json::Arr(ids)), None))
                 }
                 "status" => {
-                    let (inflight, done) = coordinator.lookup(params.str_of("id")?);
-                    let status = match done {
-                        Some(inv) => SubmissionStatus::Done(inv),
-                        None if inflight => SubmissionStatus::InFlight,
-                        None => SubmissionStatus::Unknown,
-                    };
+                    let status =
+                        SubmissionStatus::resolve(&coordinator, params.str_of("id")?);
                     Ok((status.to_json(), None))
+                }
+                "submit_pipeline" => {
+                    // One RPC for the whole DAG: the coordinator chains
+                    // every successor stage server-side off completion
+                    // reports — no further client round trips.
+                    let spec = PipelineSpec::from_json(params.req("pipeline")?)?;
+                    let id = coordinator.submit_pipeline(spec)?;
+                    Ok((Json::obj().set("id", id), None))
+                }
+                "pipeline_status" => {
+                    match coordinator.pipeline_status(params.str_of("id")?) {
+                        Some(status) => Ok((status.to_json(), None)),
+                        None => Ok((Json::Null, None)),
+                    }
                 }
                 "wait" => {
                     let id = params.str_of("id")?;
@@ -350,6 +366,22 @@ impl HardlessClient for RemoteClient {
             .filter_map(|j| j.as_str().map(String::from))
             .collect())
     }
+
+    fn submit_pipeline(&self, spec: PipelineSpec) -> Result<String> {
+        let out = self
+            .rpc
+            .call("submit_pipeline", Json::obj().set("pipeline", spec.to_json()))?;
+        Ok(out.str_of("id")?.to_string())
+    }
+
+    fn pipeline_status(&self, id: &str) -> Result<Option<PipelineStatus>> {
+        let out = self.rpc.call("pipeline_status", Json::obj().set("id", id))?;
+        if out.is_null() {
+            Ok(None)
+        } else {
+            Ok(Some(PipelineStatus::from_json(&out)?))
+        }
+    }
 }
 
 /// Node-side completion reporting over RPC — the distributed counterpart
@@ -526,6 +558,107 @@ mod tests {
             SubmissionStatus::Unknown
         );
         assert!(r.client.fetch_result("inv-ghost").unwrap().is_none());
+    }
+
+    #[test]
+    fn pipeline_rpcs_chain_stages_server_side() {
+        use crate::pipeline::{PipelineState, StageSpec};
+        let r = rig();
+        assert!(r.client.pipeline_status("pipe-ghost").unwrap().is_none());
+        let pid = r
+            .client
+            .submit_pipeline(
+                PipelineSpec::new("datasets/x")
+                    .stage(StageSpec::new("a", "tinyyolo"))
+                    .stage(StageSpec::new("b", "tinyyolo").after(["a"])),
+            )
+            .unwrap();
+        // Play both stage executions by hand: stage b only appears in the
+        // queue after the gateway's collector processes stage a's report.
+        for _ in 0..2 {
+            let lease = {
+                let deadline = Instant::now() + Duration::from_secs(10);
+                loop {
+                    if let Some(l) = r.queue.take(&TakeFilter::default()).unwrap() {
+                        break l;
+                    }
+                    assert!(Instant::now() < deadline, "stage never published");
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            };
+            let mut inv = lease.invocation;
+            let key = crate::store::keys::result(&inv.id);
+            crate::store::ObjectStore::put(r.store.as_ref(), &key, b"x").unwrap();
+            inv.result_key = Some(key);
+            inv.status = Status::Succeeded;
+            r.queue.ack(&inv.id).unwrap();
+            RemoteReporter::connect(r.gateway.addr())
+                .unwrap()
+                .report(inv)
+                .unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let st = loop {
+            let st = r.client.pipeline_status(&pid).unwrap().expect("tracked");
+            if st.state == PipelineState::Succeeded {
+                break st;
+            }
+            assert!(Instant::now() < deadline, "stuck: {st:?}");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // The chain survived the wire: stage b's dataset is stage a's
+        // result key.
+        let a_inv = st.stages[0].invocation_id.clone().unwrap();
+        assert_eq!(
+            st.stages[1].dataset.as_deref(),
+            Some(crate::store::keys::result(&a_inv).as_str())
+        );
+        let stats = r.client.cluster_stats().unwrap();
+        assert_eq!(stats.pipelines, 1);
+    }
+
+    #[test]
+    fn evicted_submissions_read_expired_over_the_wire() {
+        let r = rig();
+        r.gateway.coordinator().set_retention(1);
+        let first = r
+            .client
+            .submit(EventSpec::new("tinyyolo", "datasets/a"))
+            .unwrap();
+        complete_as_node(&r, b"r1");
+        r.client.wait(&first, Duration::from_secs(10)).unwrap().unwrap();
+        let second = r
+            .client
+            .submit(EventSpec::new("tinyyolo", "datasets/b"))
+            .unwrap();
+        complete_as_node(&r, b"r2");
+        r.client.wait(&second, Duration::from_secs(10)).unwrap().unwrap();
+        // `first` was evicted by the retention window of 1: Expired, not
+        // Unknown — and its result object was GC'd.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let st = r.client.status(&first).unwrap();
+            if st == SubmissionStatus::Expired {
+                break;
+            }
+            assert!(Instant::now() < deadline, "still {st:?}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!r
+            .store
+            .exists(&crate::store::keys::result(&first))
+            .unwrap());
+        let stats = r.client.cluster_stats().unwrap();
+        assert_eq!(stats.gc_deleted, 1);
+        assert_eq!(stats.gc_reclaimed_bytes, 2);
+        assert_eq!(
+            r.client.status("inv-99999").unwrap(),
+            SubmissionStatus::Unknown
+        );
+        assert!(matches!(
+            r.client.status(&second).unwrap(),
+            SubmissionStatus::Done(_)
+        ));
     }
 
     #[test]

@@ -24,14 +24,7 @@ impl HardlessClient for Cluster {
     }
 
     fn status(&self, id: &str) -> Result<SubmissionStatus> {
-        // `lookup` reads inflight + done under one lock hold, so the
-        // three states are mutually exclusive snapshots.
-        let (inflight, done) = self.coordinator.lookup(id);
-        Ok(match done {
-            Some(inv) => SubmissionStatus::Done(inv),
-            None if inflight => SubmissionStatus::InFlight,
-            None => SubmissionStatus::Unknown,
-        })
+        Ok(SubmissionStatus::resolve(&self.coordinator, id))
     }
 
     fn wait(&self, id: &str, timeout: Duration) -> Result<Option<Invocation>> {
@@ -59,6 +52,14 @@ impl HardlessClient for Cluster {
 
     fn list_runtimes(&self) -> Result<Vec<String>> {
         Ok(self.supported_runtimes())
+    }
+
+    fn submit_pipeline(&self, spec: crate::pipeline::PipelineSpec) -> Result<String> {
+        self.coordinator.submit_pipeline(spec)
+    }
+
+    fn pipeline_status(&self, id: &str) -> Result<Option<crate::pipeline::PipelineStatus>> {
+        Ok(self.coordinator.pipeline_status(id))
     }
 }
 
@@ -107,6 +108,14 @@ impl HardlessClient for LocalClient {
 
     fn list_runtimes(&self) -> Result<Vec<String>> {
         HardlessClient::list_runtimes(&*self.cluster)
+    }
+
+    fn submit_pipeline(&self, spec: crate::pipeline::PipelineSpec) -> Result<String> {
+        HardlessClient::submit_pipeline(&*self.cluster, spec)
+    }
+
+    fn pipeline_status(&self, id: &str) -> Result<Option<crate::pipeline::PipelineStatus>> {
+        HardlessClient::pipeline_status(&*self.cluster, id)
     }
 }
 
@@ -184,6 +193,50 @@ mod tests {
             assert_eq!(inv.status, Status::Succeeded);
         }
         assert_eq!(client.cluster_stats().unwrap().succeeded, 5);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn pipeline_chains_results_through_the_store() {
+        use crate::pipeline::{PipelineSpec, PipelineState, StageSpec};
+        // Two chained stages on the mock executor (output = input × 2):
+        // stage 2 consumes stage 1's *result object* as its dataset, so
+        // the final result is input × 4 — proof the intermediate flowed
+        // node→store→node, never through this client.
+        let cluster = mock_cluster();
+        let client = LocalClient::new(cluster.clone());
+        assert!(client.pipeline_status("pipe-nope").unwrap().is_none());
+        let key = cluster.upload_dataset("img", &[1.0, 2.0, 3.0]).unwrap();
+        let pid = client
+            .submit_pipeline(
+                PipelineSpec::new(&key)
+                    .stage(StageSpec::new("double", "tinyyolo"))
+                    .stage(StageSpec::new("quad", "tinyyolo").after(["double"])),
+            )
+            .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(20);
+        let st = loop {
+            let st = client.pipeline_status(&pid).unwrap().expect("tracked");
+            if st.state != PipelineState::Running {
+                break st;
+            }
+            assert!(std::time::Instant::now() < deadline, "stuck: {st:?}");
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        assert_eq!(st.state, PipelineState::Succeeded);
+        let first = st.stages[0].invocation_id.clone().unwrap();
+        assert_eq!(
+            st.stages[1].dataset.as_deref(),
+            Some(crate::store::keys::result(&first).as_str()),
+            "stage 2 ran on stage 1's result key"
+        );
+        let last = st.stages[1].invocation_id.clone().unwrap();
+        let body = client.fetch_result(&last).unwrap().expect("final result");
+        let floats: Vec<f32> = body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(floats, vec![4.0, 8.0, 12.0], "×2 twice");
         cluster.shutdown();
     }
 

@@ -41,6 +41,12 @@ pub enum SubmissionStatus {
     InFlight,
     /// Terminal; carries the full invocation (stamps, placement, result key).
     Done(Invocation),
+    /// Completed long enough ago that the bounded retention window (and
+    /// result GC) dropped it: the id is inside the coordinator's
+    /// monotonic submitted range, but the invocation and its result are
+    /// gone.  Distinct from [`SubmissionStatus::Unknown`], which means
+    /// the id was never submitted at all.
+    Expired,
 }
 
 impl SubmissionStatus {
@@ -55,6 +61,7 @@ impl SubmissionStatus {
             SubmissionStatus::Done(inv) => Json::obj()
                 .set("state", "done")
                 .set("invocation", inv.to_json()),
+            SubmissionStatus::Expired => Json::obj().set("state", "expired"),
         }
     }
 
@@ -65,7 +72,19 @@ impl SubmissionStatus {
             "done" => Ok(SubmissionStatus::Done(Invocation::from_json(
                 j.req("invocation")?,
             )?)),
+            "expired" => Ok(SubmissionStatus::Expired),
             other => anyhow::bail!("unknown submission state '{other}'"),
+        }
+    }
+
+    /// The one status-resolution rule both transports share: retained
+    /// terminal > in flight > evicted-but-was-submitted > never seen.
+    pub fn resolve(coordinator: &crate::coordinator::Coordinator, id: &str) -> SubmissionStatus {
+        match coordinator.lookup(id) {
+            (_, Some(inv)) => SubmissionStatus::Done(inv),
+            (true, None) => SubmissionStatus::InFlight,
+            (false, None) if coordinator.was_submitted(id) => SubmissionStatus::Expired,
+            (false, None) => SubmissionStatus::Unknown,
         }
     }
 }
@@ -94,6 +113,12 @@ pub struct ClusterStats {
     /// in-process `Cluster` sees its nodes (live + retired), a
     /// distributed gateway cannot and reports an empty list.
     pub batch: Vec<VariantBatchStats>,
+    /// Result objects deleted by the coordinator's retention GC, and the
+    /// bytes they occupied (DESIGN.md §12).
+    pub gc_deleted: usize,
+    pub gc_reclaimed_bytes: u64,
+    /// Pipelines the coordinator is tracking.
+    pub pipelines: usize,
 }
 
 impl ClusterStats {
@@ -111,6 +136,9 @@ impl ClusterStats {
             cache: CacheStats::default(),
             autoscale: AutoscaleStats::default(),
             batch: Vec::new(),
+            gc_deleted: counts.gc_deleted,
+            gc_reclaimed_bytes: counts.gc_reclaimed_bytes,
+            pipelines: coordinator.pipelines_tracked(),
         })
     }
 
@@ -137,6 +165,9 @@ impl ClusterStats {
             .set("cache_bytes", self.cache.bytes as usize)
             .set("autoscale", self.autoscale.to_json())
             .set("batch", Json::Arr(batch))
+            .set("gc_deleted", self.gc_deleted)
+            .set("gc_reclaimed_bytes", self.gc_reclaimed_bytes as usize)
+            .set("pipelines", self.pipelines)
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterStats> {
@@ -186,6 +217,10 @@ impl ClusterStats {
                     .collect(),
                 None => Vec::new(),
             },
+            // GC + pipeline gauges postdate the wire format too.
+            gc_deleted: j.usize_of("gc_deleted").unwrap_or(0),
+            gc_reclaimed_bytes: j.usize_of("gc_reclaimed_bytes").unwrap_or(0) as u64,
+            pipelines: j.usize_of("pipelines").unwrap_or(0),
         })
     }
 }
@@ -224,6 +259,17 @@ pub trait HardlessClient: Send + Sync {
 
     /// Logical runtimes the deployment advertises.
     fn list_runtimes(&self) -> Result<Vec<String>>;
+
+    /// Submit a stage DAG in one call; returns the pipeline id
+    /// immediately.  The coordinator publishes root stages right away
+    /// and chains successors off completion reports — the client makes
+    /// zero further round trips while the pipeline runs (one RPC total
+    /// on [`RemoteClient`], asserted in
+    /// `rust/tests/integration_gateway.rs`).
+    fn submit_pipeline(&self, spec: crate::pipeline::PipelineSpec) -> Result<String>;
+
+    /// Non-blocking snapshot of a submitted pipeline (`None`: unknown id).
+    fn pipeline_status(&self, id: &str) -> Result<Option<crate::pipeline::PipelineStatus>>;
 }
 
 #[cfg(test)]
@@ -239,6 +285,7 @@ mod tests {
             SubmissionStatus::Unknown,
             SubmissionStatus::InFlight,
             SubmissionStatus::Done(inv),
+            SubmissionStatus::Expired,
         ] {
             assert_eq!(SubmissionStatus::from_json(&st.to_json()).unwrap(), st);
         }
@@ -261,6 +308,8 @@ mod tests {
                     runtime: "tinyyolo".into(),
                     queued: 1,
                     oldest_waiting_ms: 2500,
+                    interactive_queued: 1,
+                    interactive_oldest_ms: 800,
                 }],
             },
             cache: CacheStats {
@@ -291,6 +340,9 @@ mod tests {
                 size_hist: [1, 0, 2, 2, 0, 0, 0],
                 queue_to_device_us: 310,
             }],
+            gc_deleted: 12,
+            gc_reclaimed_bytes: 98304,
+            pipelines: 2,
         };
         assert_eq!(ClusterStats::from_json(&stats.to_json()).unwrap(), stats);
     }
@@ -340,6 +392,76 @@ mod tests {
         let parsed = ClusterStats::from_json(&j).unwrap();
         assert_eq!(parsed.cache, CacheStats::default());
         assert_eq!(parsed.submitted, 1);
+    }
+
+    #[test]
+    fn cluster_stats_parses_without_gc_or_pipeline_fields() {
+        // Payloads from gateways predating result GC / pipelines.
+        let stats = ClusterStats { submitted: 4, ..ClusterStats::default() };
+        let mut j = stats.to_json();
+        for k in ["gc_deleted", "gc_reclaimed_bytes", "pipelines"] {
+            j = j.set(k, Json::Null);
+        }
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert_eq!((parsed.gc_deleted, parsed.gc_reclaimed_bytes, parsed.pipelines), (0, 0, 0));
+        assert_eq!(parsed.submitted, 4);
+    }
+
+    #[test]
+    fn wire_payloads_tolerate_unknown_fields_from_newer_peers() {
+        // Old-peer simulation, the other direction: a *newer* gateway
+        // sends fields this build has never heard of.  Every wire struct
+        // must ignore them and round-trip the fields it does know.
+        // ClusterStats (QueueStats travels flattened inside it, plus a
+        // per-class entry with an injected unknown field):
+        let stats = ClusterStats {
+            submitted: 9,
+            queue: QueueStats {
+                queued: 3,
+                in_flight: 1,
+                acked: 5,
+                dead: 0,
+                classes: vec![ClassStats { runtime: "r".into(), queued: 3, ..ClassStats::default() }],
+            },
+            ..ClusterStats::default()
+        };
+        let mut j = stats.to_json().set("zzz_future_counter", 42u64).set(
+            "zzz_future_section",
+            Json::obj().set("nested", true),
+        );
+        if let Json::Obj(m) = &mut j {
+            let classes = m.get_mut("queue_classes").unwrap();
+            if let Json::Arr(a) = classes {
+                a[0] = a[0].clone().set("zzz_future_gauge", 7u64);
+            }
+        }
+        assert_eq!(ClusterStats::from_json(&j).unwrap(), stats);
+
+        // Invocation:
+        let mut inv = Invocation::new("inv-3", EventSpec::new("r", "d"), SimTime(4));
+        inv.status = crate::events::Status::Succeeded;
+        inv.result_key = Some("results/inv-3".into());
+        let ij = inv.to_json().set("zzz_future_stamp", 123u64);
+        assert_eq!(Invocation::from_json(&ij).unwrap(), inv);
+    }
+
+    #[test]
+    fn invocation_parses_without_optional_sections() {
+        // Legacy payload: no warm flag, no result key, no priority —
+        // everything optional defaults instead of erroring.
+        let inv = Invocation::new("inv-7", EventSpec::new("r", "d"), SimTime(0));
+        let mut j = inv.to_json();
+        for k in ["warm", "result_key"] {
+            j = j.set(k, Json::Null);
+        }
+        if let Some(Json::Obj(_)) = j.get("spec") {
+            let spec = j.get("spec").unwrap().clone().set("priority", Json::Null);
+            j = j.set("spec", spec);
+        }
+        let parsed = Invocation::from_json(&j).unwrap();
+        assert!(!parsed.warm);
+        assert!(parsed.result_key.is_none());
+        assert_eq!(parsed.spec.priority, crate::events::Priority::Interactive);
     }
 
     #[test]

@@ -251,9 +251,12 @@ impl AutoscaleController {
         (Action::Hold, nodes, reason)
     }
 
-    /// The per-class scan: O(|classes|) comparisons against the two high
-    /// watermarks, plus the scale-from-zero guard.  Returns the first
-    /// (deterministic — classes arrive sorted) triggering reason.
+    /// The per-class scan: the scale-from-zero guard, then the two
+    /// *interactive* high watermarks (tighter, checked first so
+    /// latency-class backlog drives scale-out before raw batch depth),
+    /// then the two general ones — O(|classes|) comparisons total.
+    /// Returns the first (deterministic — classes arrive sorted)
+    /// triggering reason.
     fn pressure(&self, s: &Signals) -> Option<String> {
         let cfg = &self.cfg;
         if s.nodes == 0 && s.queued + s.in_flight > 0 {
@@ -261,6 +264,32 @@ impl AutoscaleController {
                 "work with zero nodes (queued {}, in-flight {})",
                 s.queued, s.in_flight
             ));
+        }
+        // Interactive watermarks: guarded on interactive_queued > 0, so
+        // batch-only traffic is judged purely by the general watermarks
+        // below (and pre-QoS peers, whose stats parse to 0, are inert).
+        let i_depth_limit = cfg.up_interactive_depth_per_node * s.nodes.max(1);
+        let i_age_limit_ms = cfg.up_interactive_oldest.as_millis() as u64;
+        for c in &s.classes {
+            if c.interactive_queued == 0 {
+                continue;
+            }
+            if c.interactive_queued > i_depth_limit {
+                return Some(format!(
+                    "class {}: interactive depth {} > {} ({}x{} nodes)",
+                    c.runtime,
+                    c.interactive_queued,
+                    i_depth_limit,
+                    cfg.up_interactive_depth_per_node,
+                    s.nodes.max(1)
+                ));
+            }
+            if c.interactive_oldest_ms >= i_age_limit_ms {
+                return Some(format!(
+                    "class {}: interactive oldest waiting {}ms >= {}ms",
+                    c.runtime, c.interactive_oldest_ms, i_age_limit_ms
+                ));
+            }
         }
         let depth_limit = cfg.up_depth_per_node * s.nodes.max(1);
         let age_limit_ms = cfg.up_oldest.as_millis() as u64;
@@ -346,6 +375,8 @@ mod tests {
             max_nodes: 4,
             up_depth_per_node: 4,
             up_oldest: Duration::from_secs(10),
+            up_interactive_depth_per_node: 2,
+            up_interactive_oldest: Duration::from_secs(3),
             down_idle: Duration::from_secs(5),
             cooldown_up: Duration::from_secs(2),
             cooldown_down: Duration::from_secs(8),
@@ -364,6 +395,8 @@ mod tests {
                     runtime: "tinyyolo".into(),
                     queued,
                     oldest_waiting_ms: oldest_ms,
+                    interactive_queued: 0,
+                    interactive_oldest_ms: 0,
                 }]
             } else {
                 Vec::new()
@@ -395,6 +428,41 @@ mod tests {
         clock.advance(Duration::from_secs(3));
         let d = c.evaluate(&signals(2, 9, 0), clock.now());
         assert_eq!(d.action, Action::Up(2), "deficit 9 over hint 4 -> 2 (capped): {d:?}");
+    }
+
+    #[test]
+    fn interactive_depth_triggers_below_the_general_watermark() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        // 2 nodes: general limit 4x2=8, interactive limit 2x2=4.  Total
+        // depth 6 is under the general watermark — batch-only holds...
+        let d = c.evaluate(&signals(2, 6, 0), clock.now());
+        assert!(d.action.is_hold(), "{d:?}");
+        // ...but the same depth with 5 interactive crosses the tighter
+        // interactive watermark.
+        let mut c = AutoscaleController::new(cfg());
+        let mut s = signals(2, 6, 0);
+        s.classes[0].interactive_queued = 5;
+        let d = c.evaluate(&s, clock.now());
+        assert!(matches!(d.action, Action::Up(_)), "{d:?}");
+        assert!(d.reason.contains("interactive depth"), "{}", d.reason);
+    }
+
+    #[test]
+    fn interactive_age_triggers_below_the_general_age_bound() {
+        let clock = SimClock::new();
+        let mut c = AutoscaleController::new(cfg());
+        // 3s-old head: far under up_oldest (10s) — holds as batch...
+        let d = c.evaluate(&signals(2, 1, 3_000), clock.now());
+        assert!(d.action.is_hold(), "{d:?}");
+        // ...but 3s of *interactive* waiting hits up_interactive_oldest.
+        let mut c = AutoscaleController::new(cfg());
+        let mut s = signals(2, 1, 3_000);
+        s.classes[0].interactive_queued = 1;
+        s.classes[0].interactive_oldest_ms = 3_000;
+        let d = c.evaluate(&s, clock.now());
+        assert!(matches!(d.action, Action::Up(_)), "{d:?}");
+        assert!(d.reason.contains("interactive oldest"), "{}", d.reason);
     }
 
     #[test]

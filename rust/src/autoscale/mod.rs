@@ -57,6 +57,16 @@ pub struct AutoscaleConfig {
     /// ...or when any class's oldest queued invocation has waited this
     /// long (latency guard for shallow-but-stuck lanes).
     pub up_oldest: Duration,
+    /// Interactive high watermark: scale out when any class's
+    /// *interactive* backlog exceeds `up_interactive_depth_per_node ×
+    /// live nodes`.  Tighter than `up_depth_per_node`, so latency-class
+    /// pressure drives capacity before raw batch depth would (checked
+    /// first in the pressure scan; inert while no interactive work is
+    /// queued).
+    pub up_interactive_depth_per_node: usize,
+    /// ...or when the oldest queued *interactive* invocation has waited
+    /// this long.  Tighter than `up_oldest` for the same reason.
+    pub up_interactive_oldest: Duration,
     /// Low watermark: scale in one node only after the whole system
     /// (queued + in-flight) has been empty this long.
     pub down_idle: Duration,
@@ -98,6 +108,8 @@ impl Default for AutoscaleConfig {
             max_nodes: 8,
             up_depth_per_node: 4,
             up_oldest: Duration::from_secs(10),
+            up_interactive_depth_per_node: 2,
+            up_interactive_oldest: Duration::from_secs(3),
             down_idle: Duration::from_secs(30),
             cooldown_up: Duration::from_secs(15),
             cooldown_down: Duration::from_secs(60),

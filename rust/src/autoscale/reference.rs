@@ -47,6 +47,7 @@ impl FleetModel {
                 runtime: "tinyyolo".into(),
                 queued: self.queued.len(),
                 oldest_waiting_ms: now.since(self.queued[0]).as_millis() as u64,
+                ..ClassStats::default()
             }]
         };
         Signals {
@@ -88,6 +89,8 @@ fn prop_cfg(min_nodes: usize) -> AutoscaleConfig {
         max_nodes: 6,
         up_depth_per_node: 4,
         up_oldest: Duration::from_secs(8),
+        up_interactive_depth_per_node: 2,
+        up_interactive_oldest: Duration::from_secs(3),
         down_idle: Duration::from_secs(6),
         cooldown_up: Duration::from_secs(3),
         cooldown_down: Duration::from_secs(10),

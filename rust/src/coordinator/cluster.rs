@@ -235,7 +235,12 @@ impl ClusterBuilder {
         let queue: Arc<MemQueue> = MemQueue::with_config(clock.clone(), self.queue_config);
         let store: Arc<MemStore> = Arc::new(MemStore::new());
         let metrics = Arc::new(MetricsHub::new());
-        let coordinator = Coordinator::new(queue.clone(), clock.clone(), metrics.clone());
+        let coordinator = Coordinator::new(
+            queue.clone(),
+            clock.clone(),
+            metrics.clone(),
+            Some(store.clone() as Arc<dyn ObjectStore>),
+        );
 
         // Publish the runtime bundle(s) like a user deploying workloads.
         match &self.executor {
@@ -892,6 +897,8 @@ mod tests {
                 max_nodes: 2,
                 up_depth_per_node: 2,
                 up_oldest: Duration::from_secs(5),
+                up_interactive_depth_per_node: 1,
+                up_interactive_oldest: Duration::from_secs(2),
                 down_idle: Duration::from_secs(3),
                 cooldown_up: Duration::from_millis(500),
                 cooldown_down: Duration::from_secs(4),

@@ -17,11 +17,13 @@ pub use cluster::{Cluster, ClusterBuilder, NodeTemplate};
 use crate::events::{EventSpec, Invocation, Status};
 use crate::metrics::MetricsHub;
 use crate::node::CompletionSink;
+use crate::pipeline::{DagTracker, PipelineSpec, PipelineStatus};
 use crate::queue::{InvocationQueue, QueueStats};
+use crate::store::ObjectStore;
 use crate::util::{next_id, Clock};
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -33,14 +35,24 @@ pub struct TrackingCounts {
     pub completed: usize,
     pub succeeded: usize,
     pub failed: usize,
+    /// Result objects deleted by retention GC (see [`Coordinator::new`]).
+    pub gc_deleted: usize,
+    /// Bytes those deleted result objects occupied.
+    pub gc_reclaimed_bytes: u64,
 }
 
 /// How many terminal invocations the coordinator retains for
 /// `status`/`wait`/`fetch_result`.  A gateway is a forever-running
 /// process, so the retained window is bounded; the counters stay exact
-/// regardless, and evicted ids simply read as `Unknown`.  Generous vs
-/// the paper's ~4 events/s (≈ 7 hours of lookback).
+/// regardless, and evicted ids read as `Expired` (distinct from
+/// `Unknown`: their numeric suffix falls inside the monotonic submitted
+/// range).  Generous vs the paper's ~4 events/s (≈ 7 hours of lookback).
 const COMPLETED_RETENTION: usize = 100_000;
+
+/// Numeric suffix of a coordinator-issued invocation id (`inv-N`).
+fn inv_suffix(id: &str) -> Option<u64> {
+    id.strip_prefix("inv-")?.parse().ok()
+}
 
 #[derive(Default)]
 struct Tracking {
@@ -56,6 +68,23 @@ struct Tracking {
     /// Monotonic counters, unaffected by retention eviction.
     completed_total: usize,
     succeeded_total: usize,
+    /// Inclusive numeric-suffix range of ids this coordinator has issued
+    /// (`0` lo = none yet; `next_id` starts at 1).  An id inside the
+    /// range that is neither in flight nor retained was evicted —
+    /// `Expired`, not `Unknown`.
+    id_lo: u64,
+    id_hi: u64,
+}
+
+impl Tracking {
+    fn note_issued(&mut self, id: &str) {
+        if let Some(n) = inv_suffix(id) {
+            if self.id_lo == 0 {
+                self.id_lo = n;
+            }
+            self.id_hi = self.id_hi.max(n);
+        }
+    }
 }
 
 /// The event gateway + completion sink.
@@ -63,11 +92,22 @@ pub struct Coordinator {
     queue: Arc<dyn InvocationQueue>,
     clock: Arc<dyn Clock>,
     pub metrics: Arc<MetricsHub>,
+    /// Result-object GC target: when retention evicts a terminal
+    /// invocation, its `results/...` object is deleted here.  `None`
+    /// disables GC (tracking-only deployments).
+    store: Option<Arc<dyn ObjectStore>>,
+    /// Coordinator-tracked invocation pipelines (DESIGN.md §12).
+    dag: DagTracker,
     tracking: Mutex<Tracking>,
     done_cv: Condvar,
     completions_tx: mpsc::Sender<Invocation>,
     collector: Mutex<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
+    /// Retained-window size; [`COMPLETED_RETENTION`] unless overridden
+    /// via [`Coordinator::set_retention`].
+    retention: AtomicUsize,
+    gc_deleted: AtomicUsize,
+    gc_reclaimed_bytes: AtomicU64,
 }
 
 impl Coordinator {
@@ -75,17 +115,23 @@ impl Coordinator {
         queue: Arc<dyn InvocationQueue>,
         clock: Arc<dyn Clock>,
         metrics: Arc<MetricsHub>,
+        store: Option<Arc<dyn ObjectStore>>,
     ) -> Arc<Coordinator> {
         let (tx, rx) = mpsc::channel::<Invocation>();
         let coordinator = Arc::new(Coordinator {
             queue,
             clock,
             metrics,
+            store,
+            dag: DagTracker::new(),
             tracking: Mutex::new(Tracking::default()),
             done_cv: Condvar::new(),
             completions_tx: tx,
             collector: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
+            retention: AtomicUsize::new(COMPLETED_RETENTION),
+            gc_deleted: AtomicUsize::new(0),
+            gc_reclaimed_bytes: AtomicU64::new(0),
         });
         let c2 = coordinator.clone();
         let collector = std::thread::Builder::new()
@@ -124,19 +170,55 @@ impl Coordinator {
                     if let std::collections::hash_map::Entry::Vacant(slot) =
                         t.done.entry(id.clone())
                     {
-                        slot.insert(inv);
+                        slot.insert(inv.clone());
                         t.done_order.push_back(id);
                         t.completed_total += 1;
                         if succeeded {
                             t.succeeded_total += 1;
                         }
                     }
-                    while t.done_order.len() > COMPLETED_RETENTION {
+                    // Retention eviction + result GC: the evicted
+                    // invocation's result object is deleted (outside the
+                    // lock — store IO).  `cas/` and `datasets/` keys stay
+                    // pinned: they are content-addressed/user inputs, not
+                    // per-invocation garbage.
+                    let retention = self.retention.load(Ordering::Relaxed);
+                    let mut evicted_results: Vec<String> = Vec::new();
+                    while t.done_order.len() > retention {
                         if let Some(old) = t.done_order.pop_front() {
-                            t.done.remove(&old);
+                            if let Some(gone) = t.done.remove(&old) {
+                                if let Some(key) = gone.result_key {
+                                    if !key.starts_with("cas/")
+                                        && !key.starts_with("datasets/")
+                                    {
+                                        evicted_results.push(key);
+                                    }
+                                }
+                            }
                         }
                     }
                     drop(t);
+                    if let (Some(store), false) =
+                        (&self.store, evicted_results.is_empty())
+                    {
+                        let mut bytes = 0u64;
+                        for key in &evicted_results {
+                            if let Ok(blob) = store.get(key) {
+                                bytes += blob.len() as u64;
+                            }
+                            // Idempotent delete; a missing object (never
+                            // persisted, or raced) just reclaims 0 bytes.
+                            let _ = store.delete(key);
+                        }
+                        self.gc_deleted
+                            .fetch_add(evicted_results.len(), Ordering::Relaxed);
+                        self.gc_reclaimed_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    }
+                    // Advance any pipeline this invocation belongs to
+                    // *before* waking waiters: once `wait_for` returns for
+                    // a stage, its successors are already published (lock
+                    // order is always dag → tracking, never the reverse).
+                    self.dag.on_completion(&inv, |spec| self.submit(spec));
                     self.done_cv.notify_all();
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -161,6 +243,7 @@ impl Coordinator {
             let mut t = self.tracking.lock().expect("poisoned");
             t.inflight.insert(id.clone(), spec);
             t.submitted += 1;
+            t.note_issued(&id);
         }
         self.queue.publish(inv)?;
         Ok(id)
@@ -179,6 +262,7 @@ impl Coordinator {
                 let id = next_id("inv");
                 invs.push(Invocation::new(&id, spec.clone(), now));
                 t.inflight.insert(id.clone(), spec);
+                t.note_issued(&id);
                 ids.push(id);
             }
             t.submitted += ids.len();
@@ -222,7 +306,51 @@ impl Coordinator {
             completed: t.completed_total,
             succeeded: t.succeeded_total,
             failed: t.completed_total - t.succeeded_total,
+            gc_deleted: self.gc_deleted.load(Ordering::Relaxed),
+            gc_reclaimed_bytes: self.gc_reclaimed_bytes.load(Ordering::Relaxed),
         }
+    }
+
+    /// Whether `id` falls inside the monotonic range of invocation ids
+    /// this coordinator has issued.  Combined with a negative
+    /// [`Coordinator::lookup`], this distinguishes *evicted* submissions
+    /// (`Expired`) from ids that were never submitted (`Unknown`).
+    pub fn was_submitted(&self, id: &str) -> bool {
+        let Some(n) = inv_suffix(id) else {
+            return false;
+        };
+        let t = self.tracking.lock().expect("poisoned");
+        t.id_lo != 0 && n >= t.id_lo && n <= t.id_hi
+    }
+
+    /// Override the retained-window size (tests, memory-constrained
+    /// deployments).  Takes effect on the next completion.
+    pub fn set_retention(&self, n: usize) {
+        self.retention.store(n, Ordering::Relaxed);
+    }
+
+    /// Submit a whole invocation pipeline: validates the DAG, publishes
+    /// its root stages immediately, and returns the pipeline id.
+    /// Successor stages are published by the collector as parents
+    /// complete, with the parent's result key as their dataset — the
+    /// intermediate data never transits the client (DESIGN.md §12).
+    ///
+    /// Crate-private like [`Coordinator::submit`]: user code goes through
+    /// [`crate::api::HardlessClient::submit_pipeline`].
+    pub(crate) fn submit_pipeline(&self, spec: PipelineSpec) -> Result<String> {
+        let id = next_id("pipe");
+        self.dag.submit(&id, spec, |stage| self.submit(stage))?;
+        Ok(id)
+    }
+
+    /// Snapshot one tracked pipeline.
+    pub fn pipeline_status(&self, id: &str) -> Option<PipelineStatus> {
+        self.dag.status(id)
+    }
+
+    /// Number of tracked pipelines (`ClusterStats` gauge).
+    pub fn pipelines_tracked(&self) -> usize {
+        self.dag.len()
     }
 
     /// Gauge snapshot of the queue this coordinator publishes into.
@@ -293,8 +421,12 @@ mod tests {
         crate::util::reset_ids();
         let clock = TestClock::new();
         let queue = MemQueue::new(clock.clone());
-        let coordinator =
-            Coordinator::new(queue.clone(), clock.clone(), Arc::new(MetricsHub::new()));
+        let coordinator = Coordinator::new(
+            queue.clone(),
+            clock.clone(),
+            Arc::new(MetricsHub::new()),
+            None,
+        );
         (clock, queue, coordinator)
     }
 
@@ -456,6 +588,147 @@ mod tests {
         assert_eq!(counts.completed, THREADS * PER_THREAD);
         assert_eq!(counts.succeeded, THREADS * PER_THREAD);
         assert_eq!((counts.inflight, counts.failed), (0, 0));
+        c.shutdown();
+    }
+
+    /// Complete `id` with the given status and a persisted result object.
+    fn complete_with_result(
+        c: &Coordinator,
+        store: &dyn crate::store::ObjectStore,
+        id: &str,
+        payload: &[u8],
+    ) {
+        let key = crate::store::keys::result(id);
+        store.put(&key, payload).unwrap();
+        let mut inv = Invocation::new(id, EventSpec::new("r", "d"), SimTime(0));
+        inv.status = Status::Succeeded;
+        inv.result_key = Some(key);
+        c.completion_sender().send(inv).unwrap();
+        c.wait_for(id, Duration::from_secs(5)).unwrap();
+    }
+
+    #[test]
+    fn retention_gc_deletes_evicted_results_and_counts_bytes() {
+        crate::util::reset_ids();
+        let clock = TestClock::new();
+        let queue = MemQueue::new(clock.clone());
+        let store = Arc::new(crate::store::MemStore::new());
+        let c = Coordinator::new(
+            queue,
+            clock,
+            Arc::new(MetricsHub::new()),
+            Some(store.clone()),
+        );
+        c.set_retention(2);
+        let ids: Vec<String> = (0..3)
+            .map(|_| c.submit(EventSpec::new("r", "d")).unwrap())
+            .collect();
+        complete_with_result(&c, store.as_ref(), &ids[0], b"eight by");
+        complete_with_result(&c, store.as_ref(), &ids[1], b"8 bytes!");
+        assert!(store.exists(&crate::store::keys::result(&ids[0])).unwrap());
+        // Third completion pushes the window past 2: ids[0] is evicted
+        // and its result object deleted; the other two stay.
+        complete_with_result(&c, store.as_ref(), &ids[2], b"8 bytes!");
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.counts().gc_deleted == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!store.exists(&crate::store::keys::result(&ids[0])).unwrap());
+        assert!(store.exists(&crate::store::keys::result(&ids[1])).unwrap());
+        assert!(store.exists(&crate::store::keys::result(&ids[2])).unwrap());
+        let counts = c.counts();
+        assert_eq!(counts.gc_deleted, 1);
+        assert_eq!(counts.gc_reclaimed_bytes, 8);
+        // The monotonic counters are untouched by eviction.
+        assert_eq!((counts.completed, counts.succeeded), (3, 3));
+        c.shutdown();
+    }
+
+    #[test]
+    fn evicted_ids_read_as_submitted_never_submitted_ids_do_not() {
+        let (_clock, _queue, c) = setup();
+        c.set_retention(1);
+        let ids: Vec<String> = (0..2)
+            .map(|_| c.submit(EventSpec::new("r", "d")).unwrap())
+            .collect();
+        for id in &ids {
+            let mut inv = Invocation::new(id, EventSpec::new("r", "d"), SimTime(0));
+            inv.status = Status::Succeeded;
+            c.completion_sender().send(inv).unwrap();
+            c.wait_for(id, Duration::from_secs(5)).unwrap();
+        }
+        // ids[0] was evicted: not in flight, not retained — but its
+        // suffix is inside the issued range, so it reads as *expired*
+        // rather than never-submitted.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.lookup(&ids[0]).1.is_some() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(c.lookup(&ids[0]), (false, None));
+        assert!(c.was_submitted(&ids[0]), "evicted id is inside the range");
+        assert!(c.lookup(&ids[1]).1.is_some(), "newest completion retained");
+        assert!(!c.was_submitted("inv-999"), "never issued");
+        assert!(!c.was_submitted("bogus"), "not an inv id at all");
+        c.shutdown();
+    }
+
+    #[test]
+    fn pipeline_three_stage_chain_latency_is_sum_of_stage_times() {
+        use crate::pipeline::{PipelineSpec, PipelineState, StageSpec};
+        // SimClock-style scenario: a mock worker advances the test clock
+        // by each stage's service time.  Because successor stages are
+        // published coordinator-side the moment a parent completes, the
+        // pipeline's end-to-end sim latency is *exactly* the sum of the
+        // three service times — a client-driven chain would add a
+        // submit/wait round-trip of wall latency per stage.
+        let (clock, queue, c) = setup();
+        let spec = PipelineSpec::new("datasets/in")
+            .stage(StageSpec::new("decode", "dec"))
+            .stage(StageSpec::new("classify", "cls").after(["decode"]))
+            .stage(StageSpec::new("post", "pp").after(["classify"]));
+        let t0 = clock.now();
+        let pid = c.submit_pipeline(spec).unwrap();
+        for _ in 0..3 {
+            // Poll: the successor appears only after the collector
+            // processes the previous completion.
+            let lease = loop {
+                match queue.take(&crate::queue::TakeFilter::default()).unwrap() {
+                    Some(l) => break l,
+                    None => std::thread::sleep(Duration::from_millis(1)),
+                }
+            };
+            clock.advance(Duration::from_millis(100)); // stage service time
+            let mut inv = lease.invocation;
+            inv.status = Status::Succeeded;
+            inv.result_key = Some(crate::store::keys::result(&inv.id));
+            queue.ack(&inv.id).unwrap();
+            c.completion_sender().send(inv).unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let st = loop {
+            let st = c.pipeline_status(&pid).unwrap();
+            if st.state == PipelineState::Succeeded {
+                break st;
+            }
+            assert!(Instant::now() < deadline, "pipeline stuck: {st:?}");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        // Zero coordination overhead in sim time: 3 × 100ms, nothing else.
+        assert_eq!(clock.now().as_micros() - t0.as_micros(), 300_000);
+        // The CAS chain: each stage consumed its parent's result key.
+        let inv_id = |i: usize| st.stages[i].invocation_id.clone().unwrap();
+        assert_eq!(st.stages[0].dataset.as_deref(), Some("datasets/in"));
+        assert_eq!(
+            st.stages[1].dataset.as_deref(),
+            Some(crate::store::keys::result(&inv_id(0)).as_str())
+        );
+        assert_eq!(
+            st.stages[2].dataset.as_deref(),
+            Some(crate::store::keys::result(&inv_id(1)).as_str())
+        );
+        // All three stage invocations were tracked like any submission.
+        assert_eq!(c.submitted(), 3);
+        assert_eq!(c.pipelines_tracked(), 1);
         c.shutdown();
     }
 

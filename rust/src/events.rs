@@ -14,6 +14,39 @@
 use crate::json::{Json, JsonError};
 use crate::util::SimTime;
 
+/// QoS class of an invocation: which queue lane it rides.
+///
+/// `Interactive` is the default (single-invocation clients, the paper's
+/// benchmark protocol); `Batch` marks bulk/offline work that must never
+/// starve interactive traffic — the queue's weighted take rule
+/// (`queue::mem`) and the autoscaler's per-priority watermarks both key
+/// off this.  Serialized leniently: an absent field parses as
+/// `Interactive`, so pre-priority peers interoperate unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a priority name (CLI/config/wire). Unknown names error.
+    pub fn parse(s: &str) -> Result<Priority, String> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(format!("unknown priority '{other}' (expected interactive | batch)")),
+        }
+    }
+}
+
 /// What the user submits: runtime + dataset reference + run config.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EventSpec {
@@ -24,6 +57,8 @@ pub struct EventSpec {
     pub dataset: String,
     /// Free-form run configuration (forwarded to the runtime).
     pub config: Json,
+    /// QoS lane this invocation rides (default `Interactive`).
+    pub priority: Priority,
 }
 
 impl EventSpec {
@@ -32,6 +67,7 @@ impl EventSpec {
             runtime: runtime.into(),
             dataset: dataset.into(),
             config: Json::obj(),
+            priority: Priority::default(),
         }
     }
 
@@ -40,18 +76,32 @@ impl EventSpec {
         self
     }
 
+    pub fn with_priority(mut self, priority: Priority) -> EventSpec {
+        self.priority = priority;
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("runtime", self.runtime.as_str())
             .set("dataset", self.dataset.as_str())
             .set("config", self.config.clone())
+            .set("priority", self.priority.as_str())
     }
 
     pub fn from_json(j: &Json) -> Result<EventSpec, JsonError> {
+        // `priority` parses leniently (absent/unknown -> Interactive):
+        // peers that predate the QoS lanes must interoperate.
+        let priority = j
+            .get("priority")
+            .and_then(|v| v.as_str())
+            .and_then(|s| Priority::parse(s).ok())
+            .unwrap_or_default();
         Ok(EventSpec {
             runtime: j.str_of("runtime")?.to_string(),
             dataset: j.str_of("dataset")?.to_string(),
             config: j.get("config").cloned().unwrap_or(Json::Null),
+            priority,
         })
     }
 }
@@ -247,6 +297,26 @@ mod tests {
             .with_config(Json::obj().set("threshold", 0.5));
         let back = EventSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn priority_roundtrip_and_lenient_default() {
+        let spec = EventSpec::new("tinyyolo", "datasets/d").with_priority(Priority::Batch);
+        let back = EventSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.priority, Priority::Batch);
+        // Old-peer simulation: a spec serialized before the priority
+        // field existed parses as Interactive, never errors.
+        let old = Json::obj()
+            .set("runtime", "tinyyolo")
+            .set("dataset", "datasets/d")
+            .set("config", Json::obj());
+        let back = EventSpec::from_json(&old).unwrap();
+        assert_eq!(back.priority, Priority::Interactive);
+        // Unknown priority values degrade to the default too.
+        let odd = old.set("priority", "realtime-v2");
+        assert_eq!(EventSpec::from_json(&odd).unwrap().priority, Priority::Interactive);
+        assert!(Priority::parse("batch").is_ok());
+        assert!(Priority::parse("zzz").is_err());
     }
 
     #[test]

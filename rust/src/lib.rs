@@ -59,6 +59,7 @@ pub mod coordinator;
 pub mod events;
 pub mod metrics;
 pub mod node;
+pub mod pipeline;
 pub mod postprocess;
 pub mod json;
 pub mod prop;

@@ -68,7 +68,7 @@ fn app() -> App {
                 .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address for completion reporting (empty = node-local only)")
                 .opt("devices", "paper-all", "device preset: paper-dualgpu | paper-all")
                 .opt("id", "node-1", "node id")
-                .opt("policy", "warm-first", "warm-first | fifo | deadline:<ms>")
+                .opt("policy", "warm-first", "warm-first | fifo | deadline:<ms> | priority:interactive | priority:batch")
                 .opt("engine", "pjrt", "pjrt | mock (mock needs no artifacts)")
                 .opt("duration-s", "30", "how long to serve before draining")
                 .opt("node-cache-mb", "256", "per-cache MiB budget for the node's raw-object and decoded-input caches (worst-case memory 2x this; 0 = disabled)")
@@ -79,6 +79,7 @@ fn app() -> App {
             Command::new("submit", "submit one event through the gateway")
                 .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address")
                 .opt("runtime", "tinyyolo", "logical runtime name")
+                .opt("priority", "interactive", "QoS lane: interactive | batch")
                 .opt("timeout-s", "120", "wait timeout (with --wait)")
                 .flag("wait", "block until the result arrives; print latencies")
                 .req("dataset", "dataset object key"),
@@ -87,6 +88,17 @@ fn app() -> App {
             Command::new("status", "inspect one invocation or the whole cluster")
                 .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address")
                 .opt("id", "", "invocation id (empty = cluster stats + runtimes)"),
+        )
+        .command(
+            Command::new("pipeline", "submit or inspect a multi-stage invocation pipeline")
+                .pos("action", "submit | status")
+                .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address")
+                .opt("stages", "", "comma-separated stages as name:runtime[:parent+parent], e.g. 'decode:tinyyolo,post:tinyyolo:decode' (submit)")
+                .opt("dataset", "", "input dataset key for the root stages (submit)")
+                .opt("priority", "interactive", "QoS lane for every stage: interactive | batch (submit)")
+                .opt("id", "", "pipeline id (status)")
+                .opt("timeout-s", "120", "wait timeout in seconds (with --wait)")
+                .flag("wait", "block until the pipeline is terminal; print the stage table"),
         )
         .command(
             Command::new("inspect", "print AOT bundle information")
@@ -111,6 +123,7 @@ fn main() {
         "node" => cmd_node(&m),
         "submit" => cmd_submit(&m),
         "status" => cmd_status(&m),
+        "pipeline" => cmd_pipeline(&m),
         "inspect" => cmd_inspect(&m),
         other => {
             eprintln!("unhandled command {other}");
@@ -390,10 +403,11 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
 fn cmd_submit(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     let gateway_addr = m.str_req("gateway-addr");
     let client = RemoteClient::connect(gateway_addr)?;
-    let id = client.submit(EventSpec::new(
-        m.str_req("runtime"),
-        m.str_req("dataset"),
-    ))?;
+    let priority = hardless::events::Priority::parse(m.str_req("priority"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let id = client.submit(
+        EventSpec::new(m.str_req("runtime"), m.str_req("dataset")).with_priority(priority),
+    )?;
     println!("submitted {id} via gateway {gateway_addr}");
     if !m.flag("wait") {
         println!("poll with: hardless status --id {id}");
@@ -443,11 +457,95 @@ fn cmd_status(m: &hardless::cli::Matches) -> anyhow::Result<()> {
         }
         id => match client.status(id)? {
             SubmissionStatus::Unknown => println!("{id}: unknown to this gateway"),
+            SubmissionStatus::Expired => println!(
+                "{id}: expired (completed, but evicted from the tracking window; \
+                 its result object has been garbage-collected)"
+            ),
             SubmissionStatus::InFlight => println!("{id}: in flight (queued or running)"),
             SubmissionStatus::Done(inv) => println!("{}", inv.to_json().to_pretty()),
         },
     }
     Ok(())
+}
+
+/// One `--stages` element: `name:runtime[:parent+parent]`.
+fn parse_stage(part: &str) -> anyhow::Result<hardless::pipeline::StageSpec> {
+    let fields: Vec<&str> = part.split(':').collect();
+    let stage = match fields.as_slice() {
+        [name, runtime] => hardless::pipeline::StageSpec::new(*name, *runtime),
+        [name, runtime, parents] => hardless::pipeline::StageSpec::new(*name, *runtime)
+            .after(parents.split('+').map(str::trim).filter(|p| !p.is_empty())),
+        _ => anyhow::bail!(
+            "bad stage '{part}' (expected name:runtime or name:runtime:parent+parent)"
+        ),
+    };
+    Ok(stage)
+}
+
+fn cmd_pipeline(m: &hardless::cli::Matches) -> anyhow::Result<()> {
+    use hardless::pipeline::{PipelineSpec, PipelineState};
+    let client = RemoteClient::connect(m.str_req("gateway-addr"))?;
+    match m.pos("action") {
+        Some("submit") => {
+            let dataset = m.str_req("dataset");
+            if dataset.is_empty() {
+                anyhow::bail!("--dataset is required for pipeline submit");
+            }
+            let priority = hardless::events::Priority::parse(m.str_req("priority"))
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let mut spec = PipelineSpec::new(dataset).with_priority(priority);
+            for part in m
+                .str_req("stages")
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+            {
+                spec = spec.stage(parse_stage(part)?);
+            }
+            // Validate client-side so a malformed DAG fails before the RPC.
+            spec.validate()?;
+            let id = client.submit_pipeline(spec)?;
+            println!("submitted pipeline {id}");
+            if !m.flag("wait") {
+                println!("poll with: hardless pipeline status --id {id}");
+                return Ok(());
+            }
+            let timeout_s: u64 = m.parse_num("timeout-s").map_err(|e| anyhow::anyhow!(e))?;
+            let deadline = std::time::Instant::now() + Duration::from_secs(timeout_s);
+            loop {
+                let st = client
+                    .pipeline_status(&id)?
+                    .ok_or_else(|| anyhow::anyhow!("{id} vanished from the gateway"))?;
+                if st.state != PipelineState::Running {
+                    println!("{}", st.describe());
+                    if st.state == PipelineState::PartialFailure {
+                        anyhow::bail!("pipeline {id} finished with failed stages");
+                    }
+                    return Ok(());
+                }
+                if std::time::Instant::now() >= deadline {
+                    println!("{}", st.describe());
+                    anyhow::bail!("{id} not terminal after {timeout_s}s");
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+        Some("status") => {
+            let id = m.str_req("id");
+            if id.is_empty() {
+                anyhow::bail!("--id is required for pipeline status");
+            }
+            match client.pipeline_status(id)? {
+                Some(st) => println!("{}", st.describe()),
+                None => println!("{id}: unknown to this gateway"),
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown pipeline action {:?} (expected submit | status)",
+            other.unwrap_or("")
+        ),
+    }
 }
 
 fn cmd_inspect(m: &hardless::cli::Matches) -> anyhow::Result<()> {

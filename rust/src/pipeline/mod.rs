@@ -1,0 +1,1065 @@
+//! Invocation pipelines: coordinator-tracked DAGs with CAS result
+//! chaining.
+//!
+//! The paper's programming model (§IV) stops at independent single
+//! invocations, but real accelerator applications are pipelines — decode
+//! → classify → postprocess.  The Berkeley serverless critique
+//! (PAPERS.md, arxiv 1902.03383) names the forced round-trip of
+//! intermediate data through the client as a core FaaS limitation;
+//! Hardless already has both halves of the fix: a content-addressed
+//! store with node-local caching (DESIGN.md §9) and per-runtime-class
+//! queue lanes (§7).  A [`PipelineSpec`] names stages (each with its own
+//! runtime class and free-form config) and `after` edges; the
+//! coordinator-side [`DagTracker`] publishes each stage the moment its
+//! parents complete, with the completed parent's **result key as the
+//! stage's dataset** — intermediate data flows node-to-node through the
+//! store/cache and never back through the client, and cache affinity
+//! keeps it warm (zero gateway round trips between stages; pinned by
+//! `rust/tests/integration_gateway.rs`).
+//!
+//! Fan-in stages receive the first-listed parent's result as `dataset`
+//! and *every* parent's result under `config.inputs` (stage name →
+//! result key).  A failed stage fails exactly its descendants — other
+//! branches keep running — and the pipeline reports `PartialFailure`.
+
+use crate::events::{EventSpec, Invocation, Priority, Status};
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// One stage of a pipeline: a runtime class plus DAG edges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    /// Stage name, unique within the pipeline (the DAG node id).
+    pub name: String,
+    /// Runtime class the stage's invocation rides (queue lane).
+    pub runtime: String,
+    /// Parent stage names.  Empty = root stage (runs on the pipeline's
+    /// input dataset).  Order matters: the first-listed parent's result
+    /// becomes this stage's `dataset`.
+    pub after: Vec<String>,
+    /// Free-form run configuration forwarded to the runtime.  Parented
+    /// stages additionally receive `config.inputs` (parent name →
+    /// result key) at launch time.
+    pub config: Json,
+}
+
+impl StageSpec {
+    pub fn new(name: impl Into<String>, runtime: impl Into<String>) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            runtime: runtime.into(),
+            after: Vec::new(),
+            config: Json::obj(),
+        }
+    }
+
+    pub fn after(mut self, parents: impl IntoIterator<Item = impl Into<String>>) -> StageSpec {
+        self.after = parents.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn with_config(mut self, config: Json) -> StageSpec {
+        self.config = config;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("runtime", self.runtime.as_str())
+            .set(
+                "after",
+                Json::Arr(self.after.iter().map(|p| Json::from(p.as_str())).collect()),
+            )
+            .set("config", self.config.clone())
+    }
+
+    pub fn from_json(j: &Json) -> Result<StageSpec> {
+        let after = j
+            .get("after")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(StageSpec {
+            name: j.str_of("name")?.to_string(),
+            runtime: j.str_of("runtime")?.to_string(),
+            after,
+            config: j.get("config").cloned().unwrap_or_else(Json::obj),
+        })
+    }
+}
+
+/// A whole pipeline submission: the DAG, its input, and its QoS class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    pub stages: Vec<StageSpec>,
+    /// Object-store key of the input dataset fed to every root stage.
+    pub dataset: String,
+    /// QoS lane every stage invocation rides (see [`Priority`]).
+    pub priority: Priority,
+}
+
+impl PipelineSpec {
+    pub fn new(dataset: impl Into<String>) -> PipelineSpec {
+        PipelineSpec {
+            stages: Vec::new(),
+            dataset: dataset.into(),
+            priority: Priority::default(),
+        }
+    }
+
+    pub fn stage(mut self, stage: StageSpec) -> PipelineSpec {
+        self.stages.push(stage);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> PipelineSpec {
+        self.priority = priority;
+        self
+    }
+
+    /// Structural validation: non-empty, unique stage names, every
+    /// parent exists (and isn't the stage itself), and the edge set is
+    /// acyclic.  Returns each stage's parent indices (in `after` order).
+    pub fn validate(&self) -> Result<Vec<Vec<usize>>> {
+        if self.stages.is_empty() {
+            bail!("pipeline has no stages");
+        }
+        let mut index: HashMap<&str, usize> = HashMap::new();
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.name.is_empty() {
+                bail!("stage {i} has an empty name");
+            }
+            if index.insert(s.name.as_str(), i).is_some() {
+                bail!("duplicate stage name '{}'", s.name);
+            }
+        }
+        let mut parents: Vec<Vec<usize>> = Vec::with_capacity(self.stages.len());
+        for (i, s) in self.stages.iter().enumerate() {
+            let mut ps = Vec::with_capacity(s.after.len());
+            for p in &s.after {
+                let &pi = index
+                    .get(p.as_str())
+                    .with_context(|| format!("stage '{}': unknown parent '{p}'", s.name))?;
+                if pi == i {
+                    bail!("stage '{}' lists itself as a parent", s.name);
+                }
+                if ps.contains(&pi) {
+                    bail!("stage '{}' lists parent '{p}' twice", s.name);
+                }
+                ps.push(pi);
+            }
+            parents.push(ps);
+        }
+        // Kahn's algorithm: every stage must be reachable from the roots.
+        let n = self.stages.len();
+        let mut indegree: Vec<usize> = parents.iter().map(|p| p.len()).collect();
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, ps) in parents.iter().enumerate() {
+            for &p in ps {
+                children[p].push(i);
+            }
+        }
+        let mut ready: Vec<usize> =
+            (0..n).filter(|&i| indegree[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = ready.pop() {
+            seen += 1;
+            for &c in &children[i] {
+                indegree[c] -= 1;
+                if indegree[c] == 0 {
+                    ready.push(c);
+                }
+            }
+        }
+        if seen != n {
+            bail!("pipeline stage graph has a cycle");
+        }
+        Ok(parents)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "stages",
+                Json::Arr(self.stages.iter().map(|s| s.to_json()).collect()),
+            )
+            .set("dataset", self.dataset.as_str())
+            .set("priority", self.priority.as_str())
+    }
+
+    pub fn from_json(j: &Json) -> Result<PipelineSpec> {
+        let stages = j
+            .get("stages")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().map(StageSpec::from_json).collect::<Result<Vec<_>>>())
+            .transpose()?
+            .unwrap_or_default();
+        Ok(PipelineSpec {
+            stages,
+            dataset: j.str_of("dataset")?.to_string(),
+            // Lenient: absent/unknown = Interactive (pre-QoS peers).
+            priority: j
+                .get("priority")
+                .and_then(|v| v.as_str())
+                .and_then(|s| Priority::parse(s).ok())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// Lifecycle of one stage inside a tracked pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageStatus {
+    /// Waiting on parents.
+    Pending,
+    /// Invocation published (queued or executing somewhere).
+    Running,
+    Succeeded,
+    Failed(String),
+    /// Never ran: an ancestor failed.
+    Skipped,
+}
+
+impl StageStatus {
+    pub fn as_str(&self) -> &str {
+        match self {
+            StageStatus::Pending => "pending",
+            StageStatus::Running => "running",
+            StageStatus::Succeeded => "succeeded",
+            StageStatus::Failed(_) => "failed",
+            StageStatus::Skipped => "skipped",
+        }
+    }
+
+    fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            StageStatus::Succeeded | StageStatus::Failed(_) | StageStatus::Skipped
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            StageStatus::Failed(reason) => Json::obj().set("failed", reason.as_str()),
+            s => Json::Str(s.as_str().to_string()),
+        }
+    }
+
+    fn from_json(j: &Json) -> StageStatus {
+        match j {
+            Json::Str(s) => match s.as_str() {
+                "pending" => StageStatus::Pending,
+                "running" => StageStatus::Running,
+                "succeeded" => StageStatus::Succeeded,
+                "skipped" => StageStatus::Skipped,
+                other => StageStatus::Failed(format!("unknown stage status {other}")),
+            },
+            obj => StageStatus::Failed(
+                obj.str_of("failed").unwrap_or("unknown").to_string(),
+            ),
+        }
+    }
+}
+
+/// Aggregate pipeline state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PipelineState {
+    Running,
+    Succeeded,
+    /// All stages settled, at least one failed or was skipped.
+    PartialFailure,
+}
+
+impl PipelineState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PipelineState::Running => "running",
+            PipelineState::Succeeded => "succeeded",
+            PipelineState::PartialFailure => "partial_failure",
+        }
+    }
+}
+
+/// Per-stage view in a [`PipelineStatus`] report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageReport {
+    pub name: String,
+    pub runtime: String,
+    pub status: StageStatus,
+    /// Invocation id once the stage launched.
+    pub invocation_id: Option<String>,
+    /// Resolved input key the stage ran on (the CAS chaining evidence).
+    pub dataset: Option<String>,
+    /// Result key once the stage succeeded.
+    pub result_key: Option<String>,
+}
+
+/// Client-facing pipeline snapshot (travels the gateway wire as JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineStatus {
+    pub id: String,
+    pub state: PipelineState,
+    pub stages: Vec<StageReport>,
+}
+
+impl PipelineStatus {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", self.id.as_str())
+            .set("state", self.state.as_str())
+            .set(
+                "stages",
+                Json::Arr(
+                    self.stages
+                        .iter()
+                        .map(|s| {
+                            let opt = |v: &Option<String>| {
+                                v.as_ref()
+                                    .map(|s| Json::from(s.as_str()))
+                                    .unwrap_or(Json::Null)
+                            };
+                            Json::obj()
+                                .set("name", s.name.as_str())
+                                .set("runtime", s.runtime.as_str())
+                                .set("status", s.status.to_json())
+                                .set("invocation_id", opt(&s.invocation_id))
+                                .set("dataset", opt(&s.dataset))
+                                .set("result_key", opt(&s.result_key))
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<PipelineStatus> {
+        let state = match j.str_of("state")? {
+            "succeeded" => PipelineState::Succeeded,
+            "partial_failure" => PipelineState::PartialFailure,
+            // Lenient: unknown states from newer peers read as running.
+            _ => PipelineState::Running,
+        };
+        let stages = j
+            .get("stages")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .map(|s| {
+                        let opt = |k: &str| {
+                            s.get(k).and_then(|v| v.as_str()).map(String::from)
+                        };
+                        Ok(StageReport {
+                            name: s.str_of("name")?.to_string(),
+                            runtime: s.str_of("runtime")?.to_string(),
+                            status: s
+                                .get("status")
+                                .map(StageStatus::from_json)
+                                .unwrap_or(StageStatus::Pending),
+                            invocation_id: opt("invocation_id"),
+                            dataset: opt("dataset"),
+                            result_key: opt("result_key"),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+            })
+            .transpose()?
+            .unwrap_or_default();
+        Ok(PipelineStatus { id: j.str_of("id")?.to_string(), state, stages })
+    }
+
+    /// One line per stage, for the CLI.
+    pub fn describe(&self) -> String {
+        let mut out = format!("{} [{}]", self.id, self.state.as_str());
+        for s in &self.stages {
+            out.push_str(&format!(
+                "\n  {:<16} {:<10} {}{}",
+                s.name,
+                s.status.as_str(),
+                s.invocation_id.as_deref().unwrap_or("-"),
+                s.dataset
+                    .as_deref()
+                    .map(|d| format!(" <- {d}"))
+                    .unwrap_or_default(),
+            ));
+        }
+        out
+    }
+}
+
+struct StageRun {
+    spec: StageSpec,
+    parents: Vec<usize>,
+    children: Vec<usize>,
+    remaining_parents: usize,
+    status: StageStatus,
+    invocation_id: Option<String>,
+    dataset: Option<String>,
+    result_key: Option<String>,
+}
+
+struct PipelineRun {
+    dataset: String,
+    priority: Priority,
+    stages: Vec<StageRun>,
+}
+
+#[derive(Default)]
+struct Inner {
+    runs: HashMap<String, PipelineRun>,
+    /// In-flight stage invocations: invocation id → (pipeline, stage).
+    /// Entries are removed on terminal completion, which also makes
+    /// duplicate completion reports idempotent.
+    by_invocation: HashMap<String, (String, usize)>,
+}
+
+/// Coordinator-side DAG tracker.
+///
+/// The tracker owns the DAG bookkeeping only; actually *submitting* a
+/// stage is the caller's business, passed in as a `launch` closure
+/// (`EventSpec -> invocation id`).  Both [`DagTracker::submit`] and
+/// [`DagTracker::on_completion`] run their launches under the tracker
+/// lock, so a stage's invocation-id mapping is always registered before
+/// any completion for it can be processed — no lost-advance race even
+/// with instantaneous workers.
+#[derive(Default)]
+pub struct DagTracker {
+    inner: Mutex<Inner>,
+}
+
+impl DagTracker {
+    pub fn new() -> DagTracker {
+        DagTracker::default()
+    }
+
+    /// Validate `spec`, register the pipeline under `id`, and launch its
+    /// root stages.
+    pub fn submit(
+        &self,
+        id: &str,
+        spec: PipelineSpec,
+        mut launch: impl FnMut(EventSpec) -> Result<String>,
+    ) -> Result<()> {
+        let parents = spec.validate()?;
+        let n = spec.stages.len();
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, ps) in parents.iter().enumerate() {
+            for &p in ps {
+                children[p].push(i);
+            }
+        }
+        let mut run = PipelineRun {
+            dataset: spec.dataset,
+            priority: spec.priority,
+            stages: spec
+                .stages
+                .into_iter()
+                .zip(parents)
+                .enumerate()
+                .map(|(i, (s, ps))| StageRun {
+                    remaining_parents: ps.len(),
+                    parents: ps,
+                    children: std::mem::take(&mut children[i]),
+                    spec: s,
+                    status: StageStatus::Pending,
+                    invocation_id: None,
+                    dataset: None,
+                    result_key: None,
+                })
+                .collect(),
+        };
+        let mut inner = self.inner.lock().expect("dag tracker poisoned");
+        if inner.runs.contains_key(id) {
+            bail!("duplicate pipeline id {id}");
+        }
+        let roots: Vec<usize> = (0..n).filter(|&i| run.stages[i].parents.is_empty()).collect();
+        for i in roots {
+            launch_stage(id, &mut run, i, &mut inner.by_invocation, &mut launch);
+        }
+        inner.runs.insert(id.to_string(), run);
+        Ok(())
+    }
+
+    /// Advance the DAG on a terminal invocation: mark the stage, launch
+    /// children whose parents are all done, cascade-skip descendants of
+    /// a failure.  Non-pipeline invocations are ignored; duplicate
+    /// reports are no-ops.
+    pub fn on_completion(
+        &self,
+        inv: &Invocation,
+        mut launch: impl FnMut(EventSpec) -> Result<String>,
+    ) {
+        if !inv.is_terminal() {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("dag tracker poisoned");
+        let Inner { runs, by_invocation } = &mut *inner;
+        let Some((pid, idx)) = by_invocation.remove(&inv.id) else {
+            return;
+        };
+        let Some(run) = runs.get_mut(&pid) else {
+            return;
+        };
+        match &inv.status {
+            Status::Succeeded => {
+                // Workers persist results under `results/<invocation id>`
+                // (`store::keys::result`); fall back to that convention
+                // if a reporter omitted the key.
+                let key = inv
+                    .result_key
+                    .clone()
+                    .unwrap_or_else(|| crate::store::keys::result(&inv.id));
+                run.stages[idx].status = StageStatus::Succeeded;
+                run.stages[idx].result_key = Some(key);
+                let children = run.stages[idx].children.clone();
+                for c in children {
+                    run.stages[c].remaining_parents -= 1;
+                    if run.stages[c].remaining_parents == 0
+                        && run.stages[c].status == StageStatus::Pending
+                    {
+                        launch_stage(&pid, run, c, by_invocation, &mut launch);
+                    }
+                }
+            }
+            Status::Failed(reason) => {
+                run.stages[idx].status = StageStatus::Failed(reason.clone());
+                skip_descendants(run, idx);
+            }
+            _ => unreachable!("guarded by is_terminal"),
+        }
+    }
+
+    /// Snapshot one pipeline.
+    pub fn status(&self, id: &str) -> Option<PipelineStatus> {
+        let inner = self.inner.lock().expect("dag tracker poisoned");
+        let run = inner.runs.get(id)?;
+        let stages: Vec<StageReport> = run
+            .stages
+            .iter()
+            .map(|s| StageReport {
+                name: s.spec.name.clone(),
+                runtime: s.spec.runtime.clone(),
+                status: s.status.clone(),
+                invocation_id: s.invocation_id.clone(),
+                dataset: s.dataset.clone(),
+                result_key: s.result_key.clone(),
+            })
+            .collect();
+        let state = if stages.iter().all(|s| s.status == StageStatus::Succeeded) {
+            PipelineState::Succeeded
+        } else if stages.iter().all(|s| s.status.is_terminal()) {
+            PipelineState::PartialFailure
+        } else {
+            PipelineState::Running
+        };
+        Some(PipelineStatus { id: id.to_string(), state, stages })
+    }
+
+    /// Number of tracked pipelines (gauge for `ClusterStats`).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("dag tracker poisoned").runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Resolve a ready stage's input and publish it: `dataset` is the
+/// first-listed parent's result key (the CAS chain link — the pipeline's
+/// own input for roots); fan-in stages also get every parent's result
+/// under `config.inputs`.  A launch error fails the stage and skips its
+/// descendants (other branches keep running).
+fn launch_stage(
+    pipeline_id: &str,
+    run: &mut PipelineRun,
+    idx: usize,
+    by_invocation: &mut HashMap<String, (String, usize)>,
+    launch: &mut impl FnMut(EventSpec) -> Result<String>,
+) {
+    let parents = run.stages[idx].parents.clone();
+    let dataset = match parents.first() {
+        None => run.dataset.clone(),
+        Some(&p) => run.stages[p]
+            .result_key
+            .clone()
+            .expect("launch_stage only called once every parent succeeded"),
+    };
+    let mut config = match &run.stages[idx].spec.config {
+        Json::Obj(_) => run.stages[idx].spec.config.clone(),
+        _ => Json::obj(),
+    };
+    if !parents.is_empty() {
+        let mut inputs = Json::obj();
+        for &p in &parents {
+            let key = run.stages[p].result_key.clone().unwrap_or_default();
+            inputs = inputs.set(&run.stages[p].spec.name, key.as_str());
+        }
+        config = config.set("inputs", inputs);
+    }
+    let spec = EventSpec::new(&run.stages[idx].spec.runtime, &dataset)
+        .with_config(config)
+        .with_priority(run.priority);
+    run.stages[idx].dataset = Some(dataset);
+    match launch(spec) {
+        Ok(inv_id) => {
+            by_invocation.insert(inv_id.clone(), (pipeline_id.to_string(), idx));
+            run.stages[idx].status = StageStatus::Running;
+            run.stages[idx].invocation_id = Some(inv_id);
+        }
+        Err(e) => {
+            run.stages[idx].status = StageStatus::Failed(format!("launch failed: {e:#}"));
+            skip_descendants(run, idx);
+        }
+    }
+}
+
+/// Mark every not-yet-launched descendant of `idx` as [`StageStatus::Skipped`].
+fn skip_descendants(run: &mut PipelineRun, idx: usize) {
+    let mut stack = run.stages[idx].children.clone();
+    while let Some(c) = stack.pop() {
+        if run.stages[c].status == StageStatus::Pending {
+            run.stages[c].status = StageStatus::Skipped;
+        }
+        // Recurse regardless of state: a diamond may reach a node first
+        // through an already-skipped sibling path.
+        let mut grand = run.stages[c].children.clone();
+        stack.append(&mut grand);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::keys;
+    use std::collections::HashSet;
+
+    fn chain3() -> PipelineSpec {
+        PipelineSpec::new("datasets/in")
+            .stage(StageSpec::new("decode", "dec"))
+            .stage(StageSpec::new("classify", "cls").after(["decode"]))
+            .stage(StageSpec::new("post", "pp").after(["classify"]))
+    }
+
+    /// A tiny deterministic harness: `launch` hands out inv-ids and
+    /// records specs; `complete` reports a terminal invocation back.
+    struct Sim {
+        tracker: DagTracker,
+        next: u64,
+        /// Launched-but-uncompleted invocation ids.
+        pending: Vec<String>,
+        specs: HashMap<String, EventSpec>,
+    }
+
+    impl Sim {
+        fn new() -> Sim {
+            Sim {
+                tracker: DagTracker::new(),
+                next: 0,
+                pending: Vec::new(),
+                specs: HashMap::new(),
+            }
+        }
+
+        fn submit(&mut self, id: &str, spec: PipelineSpec) -> Result<()> {
+            let (next, pending, specs) = (&mut self.next, &mut self.pending, &mut self.specs);
+            self.tracker.submit(id, spec, |s| {
+                let iid = format!("inv-{}", *next);
+                *next += 1;
+                pending.push(iid.clone());
+                specs.insert(iid.clone(), s);
+                Ok(iid)
+            })
+        }
+
+        /// Complete `iid` (success unless `fail`), advancing the DAG.
+        fn complete(&mut self, iid: &str, fail: bool) {
+            let spec = self.specs[iid].clone();
+            let mut inv = Invocation::new(iid, spec, crate::util::SimTime(0));
+            if fail {
+                inv.status = Status::Failed("boom".into());
+            } else {
+                inv.status = Status::Succeeded;
+                inv.result_key = Some(keys::result(iid));
+            }
+            self.pending.retain(|p| p != iid);
+            let (next, pending, specs) = (&mut self.next, &mut self.pending, &mut self.specs);
+            self.tracker.on_completion(&inv, |s| {
+                let iid = format!("inv-{}", *next);
+                *next += 1;
+                pending.push(iid.clone());
+                specs.insert(iid.clone(), s);
+                Ok(iid)
+            });
+        }
+    }
+
+    #[test]
+    fn validation_rejects_malformed_dags() {
+        assert!(PipelineSpec::new("d").validate().is_err(), "empty");
+        let dup = PipelineSpec::new("d")
+            .stage(StageSpec::new("a", "r"))
+            .stage(StageSpec::new("a", "r"));
+        assert!(dup.validate().unwrap_err().to_string().contains("duplicate"));
+        let ghost = PipelineSpec::new("d").stage(StageSpec::new("a", "r").after(["zzz"]));
+        assert!(ghost.validate().unwrap_err().to_string().contains("unknown parent"));
+        let selfloop = PipelineSpec::new("d").stage(StageSpec::new("a", "r").after(["a"]));
+        assert!(selfloop.validate().is_err());
+        let cycle = PipelineSpec::new("d")
+            .stage(StageSpec::new("a", "r").after(["b"]))
+            .stage(StageSpec::new("b", "r").after(["a"]));
+        assert!(cycle.validate().unwrap_err().to_string().contains("cycle"));
+        assert!(chain3().validate().is_ok());
+    }
+
+    #[test]
+    fn spec_json_roundtrip_and_lenient_priority() {
+        let spec = chain3().with_priority(Priority::Batch);
+        let back = PipelineSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // Old-peer payload without a priority field: Interactive.
+        let mut j = chain3().to_json();
+        j = j.set("priority", Json::Null);
+        assert_eq!(
+            PipelineSpec::from_json(&j).unwrap().priority,
+            Priority::Interactive
+        );
+    }
+
+    #[test]
+    fn linear_chain_links_datasets_through_result_keys() {
+        let mut sim = Sim::new();
+        sim.submit("pipe-1", chain3()).unwrap();
+        // Only the root launches, on the pipeline's own dataset.
+        assert_eq!(sim.pending, vec!["inv-0"]);
+        assert_eq!(sim.specs["inv-0"].dataset, "datasets/in");
+        assert_eq!(sim.specs["inv-0"].runtime, "dec");
+
+        sim.complete("inv-0", false);
+        assert_eq!(sim.pending, vec!["inv-1"]);
+        // The CAS chain link: stage N+1's dataset is stage N's result key.
+        assert_eq!(sim.specs["inv-1"].dataset, keys::result("inv-0"));
+        sim.complete("inv-1", false);
+        assert_eq!(sim.specs["inv-2"].dataset, keys::result("inv-1"));
+        sim.complete("inv-2", false);
+
+        let st = sim.tracker.status("pipe-1").unwrap();
+        assert_eq!(st.state, PipelineState::Succeeded);
+        assert!(st.stages.iter().all(|s| s.status == StageStatus::Succeeded));
+        assert_eq!(st.stages[1].dataset.as_deref(), Some("results/inv-0"));
+        assert!(sim.pending.is_empty());
+    }
+
+    #[test]
+    fn fan_in_receives_all_parent_results_in_config_inputs() {
+        // Diamond: src -> (left, right) -> join.
+        let spec = PipelineSpec::new("datasets/in")
+            .stage(StageSpec::new("src", "r"))
+            .stage(StageSpec::new("left", "r").after(["src"]))
+            .stage(StageSpec::new("right", "r").after(["src"]))
+            .stage(StageSpec::new("join", "r").after(["left", "right"]));
+        let mut sim = Sim::new();
+        sim.submit("pipe-1", spec).unwrap();
+        sim.complete("inv-0", false); // src -> left + right launch
+        assert_eq!(sim.pending.len(), 2, "fan-out: both branches launch");
+        let branches = sim.pending.clone();
+        // Joining needs *both* parents: completing one is not enough.
+        sim.complete(&branches[0], false);
+        assert_eq!(sim.pending.len(), 1, "join still waiting on the other branch");
+        sim.complete(&branches[1], false);
+        assert_eq!(sim.pending.len(), 1, "join launched");
+        let join_id = sim.pending[0].clone();
+        let join_spec = &sim.specs[&join_id];
+        // dataset = first-listed parent's result; inputs = all parents.
+        let st = sim.tracker.status("pipe-1").unwrap();
+        let inv_of = |name: &str| {
+            st.stages
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap()
+                .invocation_id
+                .clone()
+                .unwrap()
+        };
+        assert_eq!(join_spec.dataset, keys::result(&inv_of("left")));
+        let inputs = join_spec.config.get("inputs").expect("fan-in inputs");
+        assert_eq!(
+            inputs.str_of("left").unwrap(),
+            keys::result(&inv_of("left"))
+        );
+        assert_eq!(
+            inputs.str_of("right").unwrap(),
+            keys::result(&inv_of("right"))
+        );
+        sim.complete(&join_id, false);
+        assert_eq!(
+            sim.tracker.status("pipe-1").unwrap().state,
+            PipelineState::Succeeded
+        );
+    }
+
+    #[test]
+    fn failure_skips_exactly_the_descendants() {
+        // src -> (bad, good); bad -> tail.  Failing `bad` must skip only
+        // `tail`; `good` still runs; state = PartialFailure.
+        let spec = PipelineSpec::new("datasets/in")
+            .stage(StageSpec::new("src", "r"))
+            .stage(StageSpec::new("bad", "r").after(["src"]))
+            .stage(StageSpec::new("good", "r").after(["src"]))
+            .stage(StageSpec::new("tail", "r").after(["bad"]));
+        let mut sim = Sim::new();
+        sim.submit("pipe-1", spec).unwrap();
+        sim.complete("inv-0", false);
+        let st = sim.tracker.status("pipe-1").unwrap();
+        let bad_id = st.stages[1].invocation_id.clone().unwrap();
+        let good_id = st.stages[2].invocation_id.clone().unwrap();
+        sim.complete(&bad_id, true);
+        sim.complete(&good_id, false);
+        let st = sim.tracker.status("pipe-1").unwrap();
+        assert_eq!(st.state, PipelineState::PartialFailure);
+        assert_eq!(st.stages[0].status, StageStatus::Succeeded);
+        assert_eq!(st.stages[1].status, StageStatus::Failed("boom".into()));
+        assert_eq!(st.stages[2].status, StageStatus::Succeeded);
+        assert_eq!(st.stages[3].status, StageStatus::Skipped);
+        assert!(st.stages[3].invocation_id.is_none(), "skipped stages never launch");
+        assert!(sim.pending.is_empty());
+    }
+
+    #[test]
+    fn duplicate_completion_reports_are_idempotent() {
+        let mut sim = Sim::new();
+        sim.submit("pipe-1", chain3()).unwrap();
+        sim.complete("inv-0", false);
+        assert_eq!(sim.pending, vec!["inv-1"]);
+        // A node retrying its report RPC delivers inv-0 again: no effect.
+        sim.complete("inv-0", false);
+        assert_eq!(sim.pending, vec!["inv-1"], "no double-launch of classify");
+        // Foreign (non-pipeline) completions are ignored outright.
+        let mut foreign =
+            Invocation::new("inv-999", EventSpec::new("r", "d"), crate::util::SimTime(0));
+        foreign.status = Status::Succeeded;
+        sim.tracker.on_completion(&foreign, |_| unreachable!("no launches"));
+    }
+
+    #[test]
+    fn status_json_roundtrip() {
+        let mut sim = Sim::new();
+        sim.submit("pipe-1", chain3()).unwrap();
+        sim.complete("inv-0", false);
+        let st = sim.tracker.status("pipe-1").unwrap();
+        let back = PipelineStatus::from_json(&st.to_json()).unwrap();
+        assert_eq!(back, st);
+        assert!(back.describe().contains("decode"));
+        // Failed stage reasons survive the wire too.
+        let inv_id = st.stages[1].invocation_id.clone().unwrap();
+        sim.complete(&inv_id, true);
+        let st = sim.tracker.status("pipe-1").unwrap();
+        let back = PipelineStatus::from_json(&st.to_json()).unwrap();
+        assert_eq!(back, st);
+        assert_eq!(back.state, PipelineState::PartialFailure);
+    }
+
+    /// Random DAGs: every stage runs exactly once, only after all its
+    /// parents, with `dataset` = first parent's result key and a correct
+    /// `inputs` map; completion order is randomized.
+    #[test]
+    fn property_random_dags_run_every_stage_once_after_parents() {
+        crate::prop::check(
+            "dag-runs-once-after-parents",
+            40,
+            |rng| {
+                let n = rng.range(1, 10) as usize;
+                // Each stage picks parents among its predecessors.
+                let parents: Vec<Vec<u64>> = (0..n)
+                    .map(|i| {
+                        (0..i as u64)
+                            .filter(|_| rng.below(3) == 0)
+                            .collect()
+                    })
+                    .collect();
+                let order_seed = rng.next_u64();
+                (parents, order_seed)
+            },
+            |(parents, order_seed)| {
+                let mut spec = PipelineSpec::new("datasets/in");
+                for (i, ps) in parents.iter().enumerate() {
+                    spec = spec.stage(
+                        StageSpec::new(format!("s{i}"), format!("r{}", i % 3))
+                            .after(ps.iter().map(|p| format!("s{p}"))),
+                    );
+                }
+                let mut sim = Sim::new();
+                sim.submit("pipe-1", spec).unwrap();
+                let mut order_rng = crate::util::Rng::new(*order_seed);
+                let mut completed: HashSet<String> = HashSet::new();
+                let mut launched_total = sim.pending.len();
+                while !sim.pending.is_empty() {
+                    let pick = order_rng.below(sim.pending.len() as u64) as usize;
+                    let iid = sim.pending[pick].clone();
+                    // Check launch-time invariants before completing.
+                    let st = sim.tracker.status("pipe-1").unwrap();
+                    let stage = st
+                        .stages
+                        .iter()
+                        .position(|s| s.invocation_id.as_deref() == Some(iid.as_str()))
+                        .expect("launched invocation maps to a stage");
+                    let ps = &parents[stage];
+                    for p in ps {
+                        let pname = format!("s{p}");
+                        let pstage =
+                            st.stages.iter().find(|s| s.name == pname).unwrap();
+                        if pstage.status != StageStatus::Succeeded {
+                            return false; // launched before a parent finished
+                        }
+                    }
+                    let espec = &sim.specs[&iid];
+                    let want_dataset = match ps.first() {
+                        None => "datasets/in".to_string(),
+                        Some(p) => {
+                            let pinv = st.stages[*p as usize]
+                                .invocation_id
+                                .clone()
+                                .unwrap();
+                            keys::result(&pinv)
+                        }
+                    };
+                    if espec.dataset != want_dataset {
+                        return false;
+                    }
+                    if !ps.is_empty() {
+                        let Some(inputs) = espec.config.get("inputs") else {
+                            return false;
+                        };
+                        for p in ps {
+                            let pinv = st.stages[*p as usize]
+                                .invocation_id
+                                .clone()
+                                .unwrap();
+                            if inputs.str_of(&format!("s{p}")).ok()
+                                != Some(keys::result(&pinv).as_str())
+                            {
+                                return false;
+                            }
+                        }
+                    }
+                    if !completed.insert(iid.clone()) {
+                        return false; // ran twice
+                    }
+                    let before = sim.pending.len();
+                    sim.complete(&iid, false);
+                    launched_total += sim.pending.len() + 1 - before;
+                }
+                // Every stage ran exactly once and succeeded.
+                let st = sim.tracker.status("pipe-1").unwrap();
+                st.state == PipelineState::Succeeded
+                    && launched_total == parents.len()
+                    && st.stages.iter().all(|s| s.status == StageStatus::Succeeded)
+            },
+        );
+    }
+
+    /// Random DAGs with one failing stage: exactly its descendants are
+    /// skipped, everything else succeeds, state = PartialFailure.
+    #[test]
+    fn property_failure_cascades_to_exactly_the_descendants() {
+        crate::prop::check(
+            "dag-failure-exact-descendants",
+            40,
+            |rng| {
+                let n = rng.range(2, 10) as usize;
+                let parents: Vec<Vec<u64>> = (0..n)
+                    .map(|i| (0..i as u64).filter(|_| rng.below(3) == 0).collect())
+                    .collect();
+                let fail = rng.below(n as u64) as usize;
+                let order_seed = rng.next_u64();
+                (parents, fail, order_seed)
+            },
+            |(parents, fail, order_seed)| {
+                // Expected skip set: transitive descendants of `fail`.
+                let n = parents.len();
+                let mut descendants: HashSet<usize> = HashSet::new();
+                loop {
+                    let before = descendants.len();
+                    for i in 0..n {
+                        if parents[i].iter().any(|&p| {
+                            p as usize == *fail || descendants.contains(&(p as usize))
+                        }) {
+                            descendants.insert(i);
+                        }
+                    }
+                    if descendants.len() == before {
+                        break;
+                    }
+                }
+                let mut spec = PipelineSpec::new("datasets/in");
+                for (i, ps) in parents.iter().enumerate() {
+                    spec = spec.stage(
+                        StageSpec::new(format!("s{i}"), "r")
+                            .after(ps.iter().map(|p| format!("s{p}"))),
+                    );
+                }
+                let mut sim = Sim::new();
+                sim.submit("pipe-1", spec).unwrap();
+                let mut order_rng = crate::util::Rng::new(*order_seed);
+                while !sim.pending.is_empty() {
+                    let pick = order_rng.below(sim.pending.len() as u64) as usize;
+                    let iid = sim.pending[pick].clone();
+                    let st = sim.tracker.status("pipe-1").unwrap();
+                    let stage = st
+                        .stages
+                        .iter()
+                        .position(|s| s.invocation_id.as_deref() == Some(iid.as_str()))
+                        .unwrap();
+                    sim.complete(&iid, stage == *fail);
+                }
+                let st = sim.tracker.status("pipe-1").unwrap();
+                if st.state != PipelineState::PartialFailure {
+                    return false;
+                }
+                st.stages.iter().enumerate().all(|(i, s)| {
+                    if i == *fail {
+                        matches!(s.status, StageStatus::Failed(_))
+                    } else if descendants.contains(&i) {
+                        s.status == StageStatus::Skipped
+                    } else {
+                        s.status == StageStatus::Succeeded
+                    }
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn duplicate_pipeline_id_rejected() {
+        let sim_tracker = DagTracker::new();
+        let mut n = 0u64;
+        let mut launch = |_: EventSpec| {
+            n += 1;
+            Ok(format!("inv-{n}"))
+        };
+        sim_tracker.submit("pipe-1", chain3(), &mut launch).unwrap();
+        assert!(sim_tracker.submit("pipe-1", chain3(), &mut launch).is_err());
+        assert_eq!(sim_tracker.len(), 1);
+    }
+
+    #[test]
+    fn launch_failure_fails_stage_and_skips_descendants() {
+        // The queue refuses the root launch: the stage reads Failed, its
+        // chain is skipped, and the pipeline settles as PartialFailure
+        // instead of hanging forever.
+        let tracker = DagTracker::new();
+        tracker
+            .submit("pipe-1", chain3(), |_| bail!("queue unavailable"))
+            .unwrap();
+        let st = tracker.status("pipe-1").unwrap();
+        assert_eq!(st.state, PipelineState::PartialFailure);
+        assert!(matches!(st.stages[0].status, StageStatus::Failed(_)));
+        assert_eq!(st.stages[1].status, StageStatus::Skipped);
+        assert_eq!(st.stages[2].status, StageStatus::Skipped);
+    }
+}

@@ -22,7 +22,7 @@ pub mod remote;
 pub use mem::{MemQueue, QueueConfig};
 pub use remote::{QueueClient, QueueServer};
 
-use crate::events::Invocation;
+use crate::events::{Invocation, Priority};
 use crate::json::Json;
 use anyhow::Result;
 use std::collections::HashSet;
@@ -50,6 +50,11 @@ pub struct TakeFilter {
     /// device dispatch.  Warm preference still wins first; plain `take`
     /// and `take_batch` ignore the flag (FIFO fairness is theirs).
     pub prefer_deep: bool,
+    /// Restrict the take to one QoS lane (`None` = either).  With `None`
+    /// the queue's weighted-take rule decides which lane of a class pops
+    /// (see `queue::mem`); with `Some` the other lane is invisible —
+    /// drain tooling and priority-pinned schedulers use this.
+    pub priority: Option<Priority>,
 }
 
 impl TakeFilter {
@@ -78,6 +83,12 @@ impl TakeFilter {
         self
     }
 
+    /// Restrict (or un-restrict) the take to one QoS lane.
+    pub fn for_priority(mut self, priority: Option<Priority>) -> TakeFilter {
+        self.priority = priority;
+        self
+    }
+
     /// Follow-up filter for deepening a same-class chunk: only `runtime`,
     /// classified warm iff the originating take was.  The single source
     /// of the warm/cold split rule for grouped continuation takes (used
@@ -103,6 +114,11 @@ impl TakeFilter {
         self.warm.contains(runtime)
     }
 
+    /// Whether this filter may deliver an invocation of `priority`.
+    pub fn accepts_priority(&self, priority: Priority) -> bool {
+        self.priority.map(|p| p == priority).unwrap_or(true)
+    }
+
     pub fn to_json(&self) -> Json {
         // Sorted for a deterministic wire encoding (HashSet iteration
         // order is arbitrary).
@@ -111,11 +127,17 @@ impl TakeFilter {
             items.sort();
             Json::Arr(items.into_iter().map(|s| Json::from(s.as_str())).collect())
         };
-        Json::obj()
+        let j = Json::obj()
             .set("runtimes", arr(&self.runtimes))
             .set("warm", arr(&self.warm))
             .set("warm_only", self.warm_only)
-            .set("prefer_deep", self.prefer_deep)
+            .set("prefer_deep", self.prefer_deep);
+        match self.priority {
+            // Omitted when unrestricted: pre-priority peers see exactly
+            // the wire shape they always did.
+            None => j,
+            Some(p) => j.set("priority", p.as_str()),
+        }
     }
 
     pub fn from_json(j: &Json) -> Result<TakeFilter> {
@@ -134,6 +156,11 @@ impl TakeFilter {
                 .get("prefer_deep")
                 .and_then(|b| b.as_bool())
                 .unwrap_or(false),
+            // Lenient: absent or unrecognized = unrestricted.
+            priority: j
+                .get("priority")
+                .and_then(|v| v.as_str())
+                .and_then(|s| Priority::parse(s).ok()),
         })
     }
 }
@@ -161,6 +188,13 @@ pub struct ClassStats {
     pub queued: usize,
     /// Sim-time age of the lane front (now − `RStart`), milliseconds.
     pub oldest_waiting_ms: u64,
+    /// Of `queued`, how many ride the interactive QoS lane.  The
+    /// autoscaler's per-priority watermarks key off this: interactive
+    /// backlog must drive scale-out before raw batch depth does.
+    pub interactive_queued: usize,
+    /// Age of the oldest **interactive** invocation in this class,
+    /// milliseconds (0 when none are queued).
+    pub interactive_oldest_ms: u64,
 }
 
 impl ClassStats {
@@ -169,6 +203,8 @@ impl ClassStats {
             .set("runtime", self.runtime.as_str())
             .set("queued", self.queued)
             .set("oldest_waiting_ms", self.oldest_waiting_ms)
+            .set("interactive_queued", self.interactive_queued)
+            .set("interactive_oldest_ms", self.interactive_oldest_ms)
     }
 
     pub fn from_json(j: &Json) -> Result<ClassStats> {
@@ -176,6 +212,9 @@ impl ClassStats {
             runtime: j.str_of("runtime")?.to_string(),
             queued: j.usize_of("queued")?,
             oldest_waiting_ms: j.u64_of("oldest_waiting_ms").unwrap_or(0),
+            // Lenient: pre-priority peers don't send the QoS split.
+            interactive_queued: j.usize_of("interactive_queued").unwrap_or(0),
+            interactive_oldest_ms: j.u64_of("interactive_oldest_ms").unwrap_or(0),
         })
     }
 }
@@ -246,7 +285,8 @@ pub trait InvocationQueue: Send + Sync {
             return Ok(Vec::new());
         };
         let runtime = first.invocation.spec.runtime.clone();
-        let same = TakeFilter::same_class(&runtime, filter.accepts_warm(&runtime));
+        let same = TakeFilter::same_class(&runtime, filter.accepts_warm(&runtime))
+            .for_priority(filter.priority);
         let mut out = vec![first];
         // `first` is already leased: a failed follow-up take must not
         // drop it (it would sit invisible until the visibility timeout),
@@ -349,5 +389,47 @@ mod tests {
         let mut j = TakeFilter::default().to_json();
         j = j.set("prefer_deep", crate::json::Json::Null);
         assert!(!TakeFilter::from_json(&j).unwrap().prefer_deep);
+    }
+
+    #[test]
+    fn priority_filter_roundtrip_and_matching() {
+        let f = TakeFilter::supporting(vec!["a".into()])
+            .for_priority(Some(Priority::Interactive));
+        assert!(f.accepts_priority(Priority::Interactive));
+        assert!(!f.accepts_priority(Priority::Batch));
+        let back = TakeFilter::from_json(&f.to_json()).unwrap();
+        assert_eq!(back, f);
+
+        // Unrestricted filters match either lane and omit the field on
+        // the wire (pre-priority peers see the legacy shape).
+        let any = TakeFilter::default();
+        assert!(any.accepts_priority(Priority::Interactive));
+        assert!(any.accepts_priority(Priority::Batch));
+        assert!(any.to_json().get("priority").is_none());
+        assert_eq!(TakeFilter::from_json(&any.to_json()).unwrap().priority, None);
+
+        // Unknown lane names from newer peers degrade to unrestricted.
+        let j = any.to_json().set("priority", "realtime-v2");
+        assert_eq!(TakeFilter::from_json(&j).unwrap().priority, None);
+    }
+
+    #[test]
+    fn class_stats_qos_split_parses_leniently() {
+        let full = ClassStats {
+            runtime: "a".into(),
+            queued: 7,
+            oldest_waiting_ms: 40,
+            interactive_queued: 3,
+            interactive_oldest_ms: 12,
+        };
+        assert_eq!(ClassStats::from_json(&full.to_json()).unwrap(), full);
+        // An old peer's payload has no QoS split: parse to zeroes.
+        let legacy = crate::json::Json::obj()
+            .set("runtime", "a")
+            .set("queued", 7u64)
+            .set("oldest_waiting_ms", 40u64);
+        let back = ClassStats::from_json(&legacy).unwrap();
+        assert_eq!((back.interactive_queued, back.interactive_oldest_ms), (0, 0));
+        assert_eq!(back.queued, 7);
     }
 }

@@ -10,7 +10,7 @@
 //! observationally indistinguishable.
 
 use super::{InvocationQueue, MemQueue, QueueConfig, TakeFilter};
-use crate::events::{EventSpec, Invocation};
+use crate::events::{EventSpec, Invocation, Priority};
 use crate::prop;
 use crate::util::clock::TestClock;
 use crate::util::{Clock, SimTime};
@@ -163,6 +163,7 @@ fn property_indexed_queue_equals_scan_model() {
             let cfg = QueueConfig {
                 visibility: Duration::from_secs(1),
                 max_attempts: 2,
+                ..QueueConfig::default()
             };
             let indexed = MemQueue::with_config(clock.clone(), cfg.clone());
             let mut model = ScanModel::new(cfg.visibility, cfg.max_attempts);
@@ -233,6 +234,69 @@ fn property_indexed_queue_equals_scan_model() {
                 let s = indexed.stats().unwrap();
                 if (s.queued, s.in_flight, s.acked, s.dead) != model.stats() {
                     return false;
+                }
+                if indexed.queued_runtimes() != model.queued_runtimes() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn property_lanes_off_mixed_priorities_equal_scan_model() {
+    // With `interactive_burst == 0` the QoS lanes are an exact no-op:
+    // even under mixed priorities, delivery must stay byte-identical to
+    // the priority-unaware scan model (the pre-QoS semantics).  This is
+    // the ablation mode `benches/micro_pipeline.rs` compares against.
+    prop::check(
+        "lanes-off-equals-scan-model",
+        40,
+        |rng| {
+            (0..rng.range(5, 60))
+                .map(|_| (rng.below(4), rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .collect::<Vec<(u64, u64, u64, u64)>>()
+        },
+        |ops| {
+            let clock = TestClock::new();
+            let cfg = QueueConfig { interactive_burst: 0, ..QueueConfig::default() };
+            let indexed = MemQueue::with_config(clock.clone(), cfg.clone());
+            let mut model = ScanModel::new(cfg.visibility, cfg.max_attempts);
+            for (step, &(kind, a, b, c)) in ops.iter().enumerate() {
+                match kind {
+                    0 | 1 => {
+                        let rt = format!("r{}", a % 4);
+                        let priority =
+                            if b % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+                        let id = format!("p{step}");
+                        let mk = || {
+                            Invocation::new(
+                                &id,
+                                EventSpec::new(&rt, "datasets/d").with_priority(priority),
+                                SimTime(0),
+                            )
+                        };
+                        indexed.publish(mk()).unwrap();
+                        model.publish(mk());
+                    }
+                    _ => {
+                        let f = filter_from(a, b, c);
+                        let got = indexed.take(&f).unwrap();
+                        let want = model.take(&f, clock.now());
+                        match (&got, &want) {
+                            (None, None) => {}
+                            (Some(lease), Some((id, warm, attempt))) => {
+                                if &lease.invocation.id != id
+                                    || lease.warm_hit != *warm
+                                    || lease.attempt != *attempt
+                                {
+                                    return false;
+                                }
+                            }
+                            _ => return false,
+                        }
+                    }
                 }
                 if indexed.queued_runtimes() != model.queued_runtimes() {
                     return false;

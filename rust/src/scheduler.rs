@@ -153,6 +153,32 @@ impl Policy for KindAffinity {
     }
 }
 
+/// Priority-pinned decorator: warm-first take sets restricted to one QoS
+/// lane.  A node running `priority:interactive` serves only the
+/// interactive lane (dedicated low-latency capacity); `priority:batch`
+/// makes a node invisible to interactive traffic (bulk offload).  Nodes
+/// without the pin see both lanes through the queue's weighted-take rule.
+#[derive(Debug)]
+pub struct PriorityLane {
+    pub lane: crate::events::Priority,
+}
+
+impl Policy for PriorityLane {
+    fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
+        TakeFilter {
+            priority: Some(self.lane),
+            ..WarmFirst.filter(registry, pool)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.lane {
+            crate::events::Priority::Interactive => "priority-interactive",
+            crate::events::Priority::Batch => "priority-batch",
+        }
+    }
+}
+
 /// Warm-first + deadline admission: events that already waited longer than
 /// `deadline` are rejected instead of executed (fail-fast semantics for
 /// the paper's "customers might want specific latency guarantees").
@@ -195,8 +221,14 @@ pub fn parse_policy(name: &str) -> anyhow::Result<std::sync::Arc<dyn Policy>> {
                 deadline: Duration::from_millis(ms),
             }))
         }
+        s if s.starts_with("priority:") => {
+            let lane = crate::events::Priority::parse(&s["priority:".len()..])
+                .map_err(|e| anyhow::anyhow!("bad lane in '{s}': {e}"))?;
+            Ok(std::sync::Arc::new(PriorityLane { lane }))
+        }
         other => anyhow::bail!(
-            "unknown policy '{other}' (expected warm-first | fifo | deadline:<ms>)"
+            "unknown policy '{other}' (expected warm-first | fifo | deadline:<ms> | \
+             priority:interactive | priority:batch)"
         ),
     }
 }
@@ -312,7 +344,24 @@ mod tests {
         assert_eq!(parse_policy("warm-first").unwrap().name(), "warm-first");
         assert_eq!(parse_policy("fifo").unwrap().name(), "fifo");
         assert_eq!(parse_policy("deadline:2000").unwrap().name(), "deadline-filter");
+        assert_eq!(
+            parse_policy("priority:interactive").unwrap().name(),
+            "priority-interactive"
+        );
+        assert_eq!(parse_policy("priority:batch").unwrap().name(), "priority-batch");
+        assert!(parse_policy("priority:urgent").is_err());
         assert!(parse_policy("deadline:xx").is_err());
         assert!(parse_policy("zzz").is_err());
+    }
+
+    #[test]
+    fn priority_lane_pins_the_filter_and_keeps_warm_sets() {
+        let reg = paper_all_accel();
+        let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
+        let f = PriorityLane { lane: crate::events::Priority::Interactive }
+            .filter(&reg, &pool);
+        assert_eq!(f.priority, Some(crate::events::Priority::Interactive));
+        assert_eq!(f.runtimes, set(&["tinyyolo"]), "take set is warm-first's");
+        assert_eq!(f.warm, set(&["tinyyolo"]));
     }
 }

@@ -63,6 +63,7 @@ impl SimFleet {
                 runtime: "tinyyolo".into(),
                 queued: self.queued.len(),
                 oldest_waiting_ms: now.since(self.queued[0]).as_millis() as u64,
+                ..ClassStats::default()
             }]
         };
         let signals = Signals {
@@ -94,6 +95,8 @@ fn cfg(min_nodes: usize) -> AutoscaleConfig {
         max_nodes: 4,
         up_depth_per_node: 4,
         up_oldest: Duration::from_secs(10),
+        up_interactive_depth_per_node: 2,
+        up_interactive_oldest: Duration::from_secs(3),
         down_idle: Duration::from_secs(5),
         cooldown_up: Duration::from_secs(2),
         cooldown_down: Duration::from_secs(8),
@@ -215,6 +218,72 @@ fn oldest_age_rescues_a_shallow_stuck_lane() {
     let (t, d) = saw_up.expect("age watermark fired");
     assert!(d.reason.contains("oldest waiting"), "{}", d.reason);
     assert!(t >= 8, "not before the 10s age bound: fired at tick {t}");
+}
+
+#[test]
+fn interactive_backlog_scales_out_before_batch_depth_would() {
+    // Two identical 2-node fleets see the same total depth (6 queued —
+    // under the general 4x2=8 watermark).  The batch-only fleet holds;
+    // the one whose backlog is mostly interactive crosses the tighter
+    // 2x2=4 interactive watermark and scales out on the same tick.
+    let clock = SimClock::new();
+    clock.advance(Duration::from_secs(1));
+    let mk_signals = |interactive: usize| Signals {
+        queued: 6,
+        in_flight: 0,
+        classes: vec![ClassStats {
+            runtime: "tinyyolo".into(),
+            queued: 6,
+            oldest_waiting_ms: 500,
+            interactive_queued: interactive,
+            interactive_oldest_ms: if interactive > 0 { 500 } else { 0 },
+        }],
+        nodes: 2,
+        free_slots: 0,
+        warm_instances: 0,
+    };
+    let mut batch_only = AutoscaleController::new(cfg(0));
+    let d = batch_only.evaluate(&mk_signals(0), clock.now());
+    assert_eq!(d.action, Action::Hold, "batch depth 6 <= 8: {d:?}");
+
+    let mut with_interactive = AutoscaleController::new(cfg(0));
+    let d = with_interactive.evaluate(&mk_signals(5), clock.now());
+    assert!(matches!(d.action, Action::Up(_)), "{d:?}");
+    assert!(
+        d.reason.contains("interactive depth 5 > 4"),
+        "the interactive watermark, not the general one, fired: {}",
+        d.reason
+    );
+}
+
+#[test]
+fn interactive_age_rescues_a_head_the_general_bound_would_ignore() {
+    // A single interactive invocation stuck 3s: below up_oldest (10s),
+    // at up_interactive_oldest (3s).  Batch holds, interactive scales.
+    let clock = SimClock::new();
+    clock.advance(Duration::from_secs(4));
+    let mk_signals = |interactive: usize| Signals {
+        queued: 1,
+        in_flight: 0,
+        classes: vec![ClassStats {
+            runtime: "tinyyolo".into(),
+            queued: 1,
+            oldest_waiting_ms: 3_000,
+            interactive_queued: interactive,
+            interactive_oldest_ms: if interactive > 0 { 3_000 } else { 0 },
+        }],
+        nodes: 1,
+        free_slots: 0,
+        warm_instances: 0,
+    };
+    let mut batch_only = AutoscaleController::new(cfg(0));
+    let d = batch_only.evaluate(&mk_signals(0), clock.now());
+    assert_eq!(d.action, Action::Hold, "3s < up_oldest 10s: {d:?}");
+
+    let mut with_interactive = AutoscaleController::new(cfg(0));
+    let d = with_interactive.evaluate(&mk_signals(1), clock.now());
+    assert!(matches!(d.action, Action::Up(_)), "{d:?}");
+    assert!(d.reason.contains("interactive oldest"), "{}", d.reason);
 }
 
 #[test]

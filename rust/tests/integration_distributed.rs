@@ -138,6 +138,7 @@ fn node_crash_redelivers_via_visibility_timeout() {
         hardless::queue::QueueConfig {
             visibility: Duration::from_secs(5),
             max_attempts: 3,
+            ..hardless::queue::QueueConfig::default()
         },
     );
     let srv = QueueServer::serve("127.0.0.1:0", backend).unwrap();

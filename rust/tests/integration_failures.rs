@@ -195,6 +195,7 @@ fn node_death_mid_lease_redelivers_and_autoscaler_replaces_capacity() {
         .queue_config(QueueConfig {
             visibility: Duration::from_secs(2),
             max_attempts: 5,
+            ..QueueConfig::default()
         })
         .node_template(NodeTemplate::new("auto", paper_dualgpu))
         .build()
@@ -223,6 +224,8 @@ fn node_death_mid_lease_redelivers_and_autoscaler_replaces_capacity() {
             max_nodes: 2,
             up_depth_per_node: 1,
             up_oldest: Duration::from_secs(1),
+            up_interactive_depth_per_node: 1,
+            up_interactive_oldest: Duration::from_secs(1),
             down_idle: Duration::from_secs(60),
             cooldown_up: Duration::from_millis(500),
             cooldown_down: Duration::from_secs(60),

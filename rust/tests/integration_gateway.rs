@@ -229,6 +229,70 @@ fn status_transitions_unknown_inflight_done() {
 }
 
 #[test]
+fn three_stage_pipeline_chains_through_the_store_not_the_client() {
+    use hardless::pipeline::{PipelineSpec, PipelineState, StageSpec};
+    let d = deployment();
+    let client = RemoteClient::connect(d.gateway.addr()).unwrap();
+    let key = upload(&d, "img", &[1.0, 2.0]);
+    let node = remote_node(&d, "rnode-1", 2.0);
+
+    // Submitting a whole 3-stage DAG costs exactly one wire round trip;
+    // every successor launch happens coordinator-side on completion
+    // reports, with zero client involvement.
+    let before = client.rpc_calls();
+    let pid = client
+        .submit_pipeline(
+            PipelineSpec::new(&key)
+                .stage(StageSpec::new("decode", "tinyyolo"))
+                .stage(StageSpec::new("classify", "tinyyolo").after(["decode"]))
+                .stage(StageSpec::new("post", "tinyyolo").after(["classify"])),
+        )
+        .unwrap();
+    assert_eq!(client.rpc_calls() - before, 1, "one RPC for the whole DAG");
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let st = loop {
+        let st = client.pipeline_status(&pid).unwrap().expect("tracked");
+        if st.state != PipelineState::Running {
+            break st;
+        }
+        assert!(std::time::Instant::now() < deadline, "stuck: {st:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(st.state, PipelineState::Succeeded, "{st:?}");
+
+    // The acceptance assertion: each stage ran on its predecessor's
+    // result CAS key — the intermediates moved node → store → node and
+    // never crossed the client connection.
+    assert_eq!(st.stages[0].dataset.as_deref(), Some(key.as_str()));
+    for w in st.stages.windows(2) {
+        let parent_inv = w[0].invocation_id.as_deref().expect("ran");
+        assert_eq!(
+            w[1].dataset.as_deref(),
+            Some(hardless::store::keys::result(parent_inv).as_str()),
+            "stage '{}' must consume stage '{}'s result key",
+            w[1].name,
+            w[0].name
+        );
+        assert_eq!(w[0].result_key.as_deref(), w[1].dataset.as_deref());
+    }
+
+    // Mock engine doubles per stage: ×2 three times.
+    let last = st.stages[2].invocation_id.as_deref().unwrap();
+    let body = client.fetch_result(last).unwrap().expect("final result");
+    let floats: Vec<f32> = body
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    assert_eq!(floats, vec![8.0, 16.0], "x2 per stage across 3 stages");
+
+    let stats = client.cluster_stats().unwrap();
+    assert_eq!(stats.submitted, 3, "three stage invocations, all tracked");
+    assert_eq!(stats.pipelines, 1);
+    node.stop();
+}
+
+#[test]
 fn two_clients_one_gateway_share_tracking() {
     let d = deployment();
     let submitter = RemoteClient::connect(d.gateway.addr()).unwrap();
