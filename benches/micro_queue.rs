@@ -11,7 +11,7 @@ mod common;
 
 use hardless::events::{EventSpec, Invocation};
 use hardless::json::Json;
-use hardless::queue::{InvocationQueue, MemQueue, TakeFilter};
+use hardless::queue::{InvocationQueue, MemQueue, ShardedQueue, TakeFilter};
 use hardless::util::clock::ScaledClock;
 use hardless::util::SimTime;
 use std::time::Instant;
@@ -151,13 +151,70 @@ fn main() -> anyhow::Result<()> {
         }
     });
 
+    // sharded contention grid (DESIGN.md §13): 8 threads, 16 runtime
+    // classes, each thread alternating publish / take+ack on its own
+    // two classes.  At 1 shard the single engine lock is the ceiling;
+    // rendezvous-split class lanes let up to M operations hold disjoint
+    // locks, so aggregate mixed-class throughput should scale with the
+    // shard count until it reaches the thread count.
+    let threads = 8;
+    let per_thread = 20_000;
+    let mut grid: Vec<(usize, f64)> = Vec::new();
+    let mut grid_rows: Vec<(&'static str, f64)> = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let q = ShardedQueue::new(ScaledClock::realtime(), shards);
+        let name = match shards {
+            1 => "sharded publish+take, 8 threads (1 shard)",
+            2 => "sharded publish+take, 8 threads (2 shards)",
+            4 => "sharded publish+take, 8 threads (4 shards)",
+            _ => "sharded publish+take, 8 threads (8 shards)",
+        };
+        // publish + take per iteration = the two contended lock holds
+        let total = threads * per_thread * 2;
+        let rate = measure(&mut grid_rows, name, total, || {
+            let mut handles = Vec::new();
+            for t in 0..threads {
+                let q = q.clone();
+                handles.push(std::thread::spawn(move || {
+                    let classes =
+                        [format!("class-{}", 2 * t), format!("class-{}", 2 * t + 1)];
+                    let f = TakeFilter::supporting(classes.iter().cloned());
+                    for i in 0..per_thread {
+                        let inv = Invocation::new(
+                            format!("g{shards}-t{t}-i{i}"),
+                            EventSpec::new(&classes[i % 2], "datasets/d"),
+                            SimTime(0),
+                        );
+                        q.publish(inv).unwrap();
+                        let lease =
+                            q.take(&f).unwrap().expect("own classes are non-empty");
+                        q.ack(&lease.invocation.id).unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        grid.push((shards, rate));
+    }
+
     // machine-readable trajectory for future perf PRs
     let mut out = Json::obj();
     for (name, rate) in &results {
         out = out.set(name, *rate);
     }
+    let mut sg = Json::obj().set("min_ratio_8x_vs_1x", 3.0);
+    for (shards, rate) in &grid {
+        sg = sg.set(&format!("shards_{shards}"), *rate);
+    }
+    out = out.set("shard_grid", sg);
     std::fs::write("BENCH_queue.json", format!("{out}\n"))?;
-    println!("\nwrote BENCH_queue.json ({} ops)", results.len());
+    println!(
+        "\nwrote BENCH_queue.json ({} ops + {}-point shard grid)",
+        results.len(),
+        grid.len()
+    );
 
     for (name, rate) in [
         ("publish", publish_rate),
@@ -173,6 +230,20 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         scan_rate > 1_000_000.0,
         "deep-queue probe misses below 1M/s: {scan_rate:.0} (index regression?)"
+    );
+    // Shard scaling gate (DESIGN.md §13): every grid point clears the
+    // global floor, and 8 shards must buy ≥3× the 1-shard aggregate
+    // under the same 8-thread mixed-class contention.
+    for (shards, rate) in &grid {
+        anyhow::ensure!(
+            *rate > 100_000.0,
+            "sharded ({shards} shards) below 100k ops/s: {rate:.0}"
+        );
+    }
+    let (r1, r8) = (grid[0].1, grid[3].1);
+    anyhow::ensure!(
+        r8 >= 3.0 * r1,
+        "8-shard aggregate must be >= 3x 1-shard under contention: {r8:.0} vs {r1:.0}"
     );
     println!("queue throughput targets PASSED");
     Ok(())

@@ -709,6 +709,103 @@ mod tests {
     }
 
     #[test]
+    fn two_sharded_gateways_compose_into_one_fleet_view() {
+        use crate::coordinator::Membership;
+        use crate::queue::ShardedQueue;
+        let clock = ScaledClock::new(100.0);
+        let store = Arc::new(MemStore::new());
+        let queues = [
+            ShardedQueue::new(clock.clone(), 2),
+            ShardedQueue::new(clock.clone(), 2),
+        ];
+        let gateways: Vec<GatewayServer> = queues
+            .iter()
+            .map(|q| {
+                GatewayServer::serve(
+                    "127.0.0.1:0",
+                    q.clone(),
+                    store.clone(),
+                    clock.clone(),
+                    GatewayConfig::default(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let clients: Vec<RemoteClient> = gateways
+            .iter()
+            .map(|g| RemoteClient::connect(g.addr()).unwrap())
+            .collect();
+
+        // Submits route by class through the same rendezvous registry
+        // the queue shards use — every class lives wholly behind one
+        // gateway, so the fleet merge never double-counts anything.
+        let members = Membership::new(["gw-a".into(), "gw-b".into()]);
+        let classes = ["bert", "t5", "clip", "deeplab"];
+        let mut expected = std::collections::BTreeMap::new();
+        for (i, class) in classes.iter().enumerate() {
+            let owner = members.index_of(class).unwrap();
+            for j in 0..=i {
+                clients[owner]
+                    .submit(EventSpec::new(*class, format!("datasets/d{j}")))
+                    .unwrap();
+            }
+            expected.insert(*class, (owner, i + 1));
+        }
+        // Sanity: these four classes really spread over both gateways.
+        let owners: std::collections::BTreeSet<usize> =
+            expected.values().map(|(o, _)| *o).collect();
+        assert_eq!(owners.len(), 2, "classes split across gateways: {expected:?}");
+
+        // Play a node behind the gateway owning `bert`: take, ack,
+        // report — the completion lands on that gateway's coordinator.
+        let (bert_owner, _) = expected["bert"];
+        let lease = queues[bert_owner]
+            .take(&TakeFilter::supporting(vec!["bert".into()]))
+            .unwrap()
+            .unwrap();
+        let mut inv = lease.invocation;
+        inv.status = Status::Succeeded;
+        queues[bert_owner].ack(&inv.id).unwrap();
+        let id = inv.id.clone();
+        RemoteReporter::connect(gateways[bert_owner].addr())
+            .unwrap()
+            .report(inv)
+            .unwrap();
+        clients[bert_owner].wait(&id, Duration::from_secs(10)).unwrap().unwrap();
+
+        let fleet = ClusterStats::merge(
+            clients.iter().map(|c| c.cluster_stats().unwrap()),
+        );
+        let total = 1 + 2 + 3 + 4;
+        assert_eq!(fleet.submitted, total);
+        assert_eq!(fleet.completed, 1);
+        assert_eq!(fleet.inflight, total - 1);
+        assert_eq!(fleet.queue.queued + fleet.queue.acked, total);
+        // Both gateways' shard sections concatenate: 2 shards each.
+        assert_eq!(fleet.queue.shards.len(), 4);
+        assert_eq!(
+            fleet.queue.shards.iter().map(|s| s.queued).sum::<usize>(),
+            fleet.queue.queued
+        );
+        // Every still-queued class appears exactly once with its full
+        // depth, sorted by runtime (bert drained, so its lane is gone).
+        let got: Vec<(&str, usize)> = fleet
+            .queue
+            .classes
+            .iter()
+            .map(|c| (c.runtime.as_str(), c.queued))
+            .collect();
+        let want: Vec<(&str, usize)> = expected
+            .iter()
+            .filter(|(class, _)| **class != "bert")
+            .map(|(class, (_, n))| (*class, *n))
+            .collect();
+        assert_eq!(got, want);
+        // The fleet view survives the stats wire format round trip.
+        assert_eq!(ClusterStats::from_json(&fleet.to_json()).unwrap(), fleet);
+    }
+
+    #[test]
     fn runtimes_union_announced_and_published() {
         let r = rig();
         crate::store::ObjectStore::put(

@@ -27,9 +27,10 @@ use crate::autoscale::AutoscaleStats;
 use crate::events::{EventSpec, Invocation};
 use crate::json::Json;
 use crate::node::VariantBatchStats;
-use crate::queue::{ClassStats, QueueStats};
+use crate::queue::{ClassStats, QueueStats, ShardStats};
 use crate::store::{Blob, CacheStats};
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 /// Client-visible lifecycle of one submission.
@@ -146,7 +147,7 @@ impl ClusterStats {
         let classes: Vec<Json> =
             self.queue.classes.iter().map(|c| c.to_json()).collect();
         let batch: Vec<Json> = self.batch.iter().map(|b| b.to_json()).collect();
-        Json::obj()
+        let j = Json::obj()
             .set("submitted", self.submitted)
             .set("inflight", self.inflight)
             .set("completed", self.completed)
@@ -167,7 +168,17 @@ impl ClusterStats {
             .set("batch", Json::Arr(batch))
             .set("gc_deleted", self.gc_deleted)
             .set("gc_reclaimed_bytes", self.gc_reclaimed_bytes as usize)
-            .set("pipelines", self.pipelines)
+            .set("pipelines", self.pipelines);
+        // Omitted when single-shard: pre-shard peers see the exact wire
+        // shape they always did (QueueStats travels flattened here, so
+        // the shard section flattens alongside `queue_classes`).
+        if self.queue.shards.is_empty() {
+            j
+        } else {
+            let shards: Vec<Json> =
+                self.queue.shards.iter().map(|s| s.to_json()).collect();
+            j.set("queue_shards", Json::Arr(shards))
+        }
     }
 
     pub fn from_json(j: &Json) -> Result<ClusterStats> {
@@ -195,6 +206,14 @@ impl ClusterStats {
                 acked: j.usize_of("acked")?,
                 dead: j.usize_of("dead")?,
                 classes,
+                // Lenient: absent section = single-shard (pre-shard) peer.
+                shards: match j.get("queue_shards").and_then(|v| v.as_arr()) {
+                    Some(arr) => arr
+                        .iter()
+                        .filter_map(|s| ShardStats::from_json(s).ok())
+                        .collect(),
+                    None => Vec::new(),
+                },
             },
             cache: CacheStats {
                 hits: cache_u64("cache_hits"),
@@ -222,6 +241,64 @@ impl ClusterStats {
             gc_reclaimed_bytes: j.usize_of("gc_reclaimed_bytes").unwrap_or(0) as u64,
             pipelines: j.usize_of("pipelines").unwrap_or(0),
         })
+    }
+
+    /// Fold per-gateway snapshots into one fleet view (DESIGN.md §13).
+    ///
+    /// Each gateway in a multi-gateway deployment owns a disjoint slice
+    /// of the coordination plane — its own classes, queue (or queue
+    /// shards), nodes, and tracking — so counters *sum* without double
+    /// counting.  Per-class gauges merge by runtime (depths sum, ages
+    /// take the max — the fleet's oldest waiter is what the autoscaler
+    /// cares about), shard sections concatenate, and the autoscale
+    /// narrative fields keep the last gateway that reported one.
+    pub fn merge(parts: impl IntoIterator<Item = ClusterStats>) -> ClusterStats {
+        let mut out = ClusterStats::default();
+        let mut classes: BTreeMap<String, ClassStats> = BTreeMap::new();
+        for p in parts {
+            out.submitted += p.submitted;
+            out.inflight += p.inflight;
+            out.completed += p.completed;
+            out.succeeded += p.succeeded;
+            out.failed += p.failed;
+            out.queue.queued += p.queue.queued;
+            out.queue.in_flight += p.queue.in_flight;
+            out.queue.acked += p.queue.acked;
+            out.queue.dead += p.queue.dead;
+            for c in p.queue.classes {
+                let e = classes.entry(c.runtime.clone()).or_default();
+                e.runtime = c.runtime;
+                e.queued += c.queued;
+                e.oldest_waiting_ms = e.oldest_waiting_ms.max(c.oldest_waiting_ms);
+                e.interactive_queued += c.interactive_queued;
+                e.interactive_oldest_ms =
+                    e.interactive_oldest_ms.max(c.interactive_oldest_ms);
+            }
+            out.queue.shards.extend(p.queue.shards);
+            out.cache.hits += p.cache.hits;
+            out.cache.misses += p.cache.misses;
+            out.cache.evictions += p.cache.evictions;
+            out.cache.coalesced += p.cache.coalesced;
+            out.cache.entries += p.cache.entries;
+            out.cache.bytes += p.cache.bytes;
+            out.autoscale.enabled |= p.autoscale.enabled;
+            out.autoscale.nodes += p.autoscale.nodes;
+            out.autoscale.target += p.autoscale.target;
+            out.autoscale.scale_ups += p.autoscale.scale_ups;
+            out.autoscale.scale_downs += p.autoscale.scale_downs;
+            out.autoscale.holds += p.autoscale.holds;
+            out.autoscale.ticks += p.autoscale.ticks;
+            if !p.autoscale.last_action.is_empty() {
+                out.autoscale.last_action = p.autoscale.last_action;
+                out.autoscale.last_reason = p.autoscale.last_reason;
+            }
+            out.batch.extend(p.batch);
+            out.gc_deleted += p.gc_deleted;
+            out.gc_reclaimed_bytes += p.gc_reclaimed_bytes;
+            out.pipelines += p.pipelines;
+        }
+        out.queue.classes = classes.into_values().collect();
+        out
     }
 }
 
@@ -311,6 +388,24 @@ mod tests {
                     interactive_queued: 1,
                     interactive_oldest_ms: 800,
                 }],
+                shards: vec![
+                    ShardStats {
+                        shard: "shard-0".into(),
+                        queued: 1,
+                        in_flight: 0,
+                        acked: 3,
+                        dead: 0,
+                        classes: vec!["tinyyolo".into()],
+                    },
+                    ShardStats {
+                        shard: "shard-1".into(),
+                        queued: 0,
+                        in_flight: 1,
+                        acked: 5,
+                        dead: 0,
+                        classes: vec![],
+                    },
+                ],
             },
             cache: CacheStats {
                 hits: 90,
@@ -422,6 +517,7 @@ mod tests {
                 acked: 5,
                 dead: 0,
                 classes: vec![ClassStats { runtime: "r".into(), queued: 3, ..ClassStats::default() }],
+                shards: Vec::new(),
             },
             ..ClusterStats::default()
         };
@@ -443,6 +539,125 @@ mod tests {
         inv.result_key = Some("results/inv-3".into());
         let ij = inv.to_json().set("zzz_future_stamp", 123u64);
         assert_eq!(Invocation::from_json(&ij).unwrap(), inv);
+    }
+
+    #[test]
+    fn cluster_stats_parses_without_shard_section() {
+        // A pre-shard (single-queue) gateway omits `queue_shards`
+        // entirely — the merged fleet view defaults to no shard
+        // breakdown, exactly the single-shard reading.
+        let stats = ClusterStats { submitted: 5, ..ClusterStats::default() };
+        let j = stats.to_json();
+        assert!(j.get("queue_shards").is_none(), "single-shard omits the key");
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert!(parsed.queue.shards.is_empty());
+        assert_eq!(parsed.submitted, 5);
+        // And a null section (peer sent the key but no data) is equally
+        // fine.
+        let parsed =
+            ClusterStats::from_json(&stats.to_json().set("queue_shards", Json::Null))
+                .unwrap();
+        assert!(parsed.queue.shards.is_empty());
+    }
+
+    #[test]
+    fn shard_section_tolerates_unknown_fields_from_newer_peers() {
+        // A newer sharded gateway decorates each shard entry with fields
+        // this build has never heard of; parsing keeps the known ones.
+        let stats = ClusterStats {
+            submitted: 1,
+            queue: QueueStats {
+                shards: vec![ShardStats {
+                    shard: "shard-0".into(),
+                    queued: 4,
+                    ..ShardStats::default()
+                }],
+                ..QueueStats::default()
+            },
+            ..ClusterStats::default()
+        };
+        let mut j = stats.to_json();
+        if let Json::Obj(m) = &mut j {
+            if let Some(Json::Arr(a)) = m.get_mut("queue_shards") {
+                a[0] = a[0].clone().set("zzz_future_load_factor", 2u64);
+            }
+        }
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert_eq!(parsed, stats);
+    }
+
+    #[test]
+    fn merge_composes_disjoint_gateways_into_one_fleet_view() {
+        // Two gateways owning disjoint class slices (and a pre-shard
+        // third peer) fold into one fleet view: counters sum, per-class
+        // gauges merge by runtime, shard sections concatenate.
+        let g1 = ClusterStats {
+            submitted: 10,
+            inflight: 2,
+            completed: 8,
+            succeeded: 8,
+            queue: QueueStats {
+                queued: 2,
+                acked: 8,
+                classes: vec![ClassStats {
+                    runtime: "bert".into(),
+                    queued: 2,
+                    oldest_waiting_ms: 900,
+                    ..ClassStats::default()
+                }],
+                shards: vec![ShardStats {
+                    shard: "shard-0".into(),
+                    queued: 2,
+                    ..ShardStats::default()
+                }],
+                ..QueueStats::default()
+            },
+            pipelines: 1,
+            ..ClusterStats::default()
+        };
+        let g2 = ClusterStats {
+            submitted: 4,
+            inflight: 1,
+            completed: 3,
+            succeeded: 2,
+            failed: 1,
+            queue: QueueStats {
+                queued: 1,
+                acked: 3,
+                // Same class seen behind the other gateway too (e.g. a
+                // drain tool double-homed): depths sum, ages take max.
+                classes: vec![
+                    ClassStats {
+                        runtime: "bert".into(),
+                        queued: 1,
+                        oldest_waiting_ms: 400,
+                        ..ClassStats::default()
+                    },
+                    ClassStats {
+                        runtime: "tinyyolo".into(),
+                        queued: 0,
+                        ..ClassStats::default()
+                    },
+                ],
+                ..QueueStats::default()
+            },
+            ..ClusterStats::default()
+        };
+        let old_peer = ClusterStats { submitted: 1, ..ClusterStats::default() };
+        let fleet = ClusterStats::merge([g1, g2, old_peer]);
+        assert_eq!(fleet.submitted, 15);
+        assert_eq!(fleet.inflight, 3);
+        assert_eq!((fleet.completed, fleet.succeeded, fleet.failed), (11, 10, 1));
+        assert_eq!((fleet.queue.queued, fleet.queue.acked), (3, 11));
+        assert_eq!(fleet.queue.classes.len(), 2);
+        assert_eq!(fleet.queue.classes[0].runtime, "bert");
+        assert_eq!(fleet.queue.classes[0].queued, 3);
+        assert_eq!(fleet.queue.classes[0].oldest_waiting_ms, 900, "max age wins");
+        assert_eq!(fleet.queue.classes[1].runtime, "tinyyolo");
+        assert_eq!(fleet.queue.shards.len(), 1);
+        assert_eq!(fleet.pipelines, 1);
+        // The fleet view round-trips the wire like any snapshot.
+        assert_eq!(ClusterStats::from_json(&fleet.to_json()).unwrap(), fleet);
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Shard / gateway membership with rendezvous (HRW) hashing.
+//!
+//! The sharded coordination plane (DESIGN.md §13) routes every runtime
+//! class to exactly one owner — a queue shard, or a gateway instance in a
+//! multi-gateway fleet.  The registry is the same shape in both roles:
+//! a set of named members, and a deterministic `owner_of(key)` map that
+//! is **stable under join/leave** — when a member joins or leaves, only
+//! the keys that member owns (≈ its `1/n` share) move; every other
+//! key keeps its owner.  That is the rendezvous-hashing property
+//! (highest-random-weight, Thaler & Ravishankar 1998), the same scheme
+//! RisingWave's `WorkerNodeManager` uses for fragment placement — and it
+//! is what lets a shard count change or a gateway restart reshuffle a
+//! share of the classes instead of all of them (no consistent-hash ring
+//! or token state to persist).
+//!
+//! The hash is hand-rolled (the crate builds offline: no `rand`, no
+//! hashing crates): FNV-1a over `member ⊕ key` bytes, finished with a
+//! splitmix64 avalanche so single-bit key differences decorrelate the
+//! per-member weights.
+
+/// A named membership set with rendezvous-hashed key ownership.
+///
+/// Members are kept sorted and deduplicated, so ownership depends only on
+/// the *set* of members, never on join order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Membership {
+    members: Vec<String>,
+}
+
+impl Membership {
+    /// Registry over an explicit member set (gateway fleet view).
+    pub fn new(members: impl IntoIterator<Item = String>) -> Membership {
+        let mut m = Membership { members: members.into_iter().collect() };
+        m.normalize();
+        m
+    }
+
+    /// Registry over `n` queue shards named `shard-0 .. shard-{n-1}`.
+    /// Zero is clamped to one: a queue always has at least one shard.
+    pub fn shards(n: usize) -> Membership {
+        Membership::new((0..n.max(1)).map(|i| format!("shard-{i}")))
+    }
+
+    fn normalize(&mut self) {
+        self.members.sort();
+        self.members.dedup();
+    }
+
+    /// Add a member; returns `false` if it was already present.
+    pub fn join(&mut self, name: impl Into<String>) -> bool {
+        let name = name.into();
+        if self.members.contains(&name) {
+            return false;
+        }
+        self.members.push(name);
+        self.normalize();
+        true
+    }
+
+    /// Remove a member; returns `false` if it was not present.
+    pub fn leave(&mut self, name: &str) -> bool {
+        let before = self.members.len();
+        self.members.retain(|m| m != name);
+        self.members.len() != before
+    }
+
+    /// Sorted member names.
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Rendezvous weight of `(member, key)` — the per-pair score whose
+    /// argmax is the owner.  Deterministic across processes and runs.
+    pub fn weight(member: &str, key: &str) -> u64 {
+        // FNV-1a 64 over member bytes, a separator that cannot appear in
+        // UTF-8 text, then key bytes — so ("ab","c") and ("a","bc")
+        // hash differently.
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        eat(member.as_bytes());
+        eat(&[0xff]);
+        eat(key.as_bytes());
+        // splitmix64 finalizer: FNV alone avalanches poorly on short
+        // suffix changes ("class-1" vs "class-2"), which would skew the
+        // per-member share.
+        let mut z = h.wrapping_add(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// The member owning `key`: highest rendezvous weight, ties broken
+    /// toward the lexicographically smaller member name (deterministic;
+    /// 64-bit ties are vanishingly rare anyway).  `None` only when the
+    /// membership is empty.
+    pub fn owner_of(&self, key: &str) -> Option<&str> {
+        let mut best: Option<(&str, u64)> = None;
+        // Members are sorted ascending, so keeping the first maximum
+        // breaks ties toward the smaller name.
+        for m in &self.members {
+            let w = Membership::weight(m, key);
+            let better = match best {
+                None => true,
+                Some((_, bw)) => w > bw,
+            };
+            if better {
+                best = Some((m.as_str(), w));
+            }
+        }
+        best.map(|(m, _)| m)
+    }
+
+    /// Index (into [`Membership::members`]) of the owner of `key`.
+    /// `None` only when the membership is empty.
+    pub fn index_of(&self, key: &str) -> Option<usize> {
+        let owner = self.owner_of(key)?;
+        self.members.iter().position(|m| m == owner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    #[test]
+    fn ownership_is_deterministic_and_join_order_independent() {
+        let a = Membership::new(["g1".into(), "g2".into(), "g3".into()]);
+        let mut b = Membership::new(["g3".into()]);
+        b.join("g1");
+        b.join("g2");
+        assert_eq!(a, b);
+        for key in ["tinyyolo", "bert", "class-17", ""] {
+            assert_eq!(a.owner_of(key), b.owner_of(key));
+        }
+    }
+
+    #[test]
+    fn empty_membership_owns_nothing() {
+        let m = Membership::default();
+        assert!(m.is_empty());
+        assert_eq!(m.owner_of("x"), None);
+        assert_eq!(m.index_of("x"), None);
+    }
+
+    #[test]
+    fn shards_clamp_zero_to_one() {
+        assert_eq!(Membership::shards(0).members(), &["shard-0".to_string()]);
+        assert_eq!(Membership::shards(3).len(), 3);
+    }
+
+    #[test]
+    fn join_and_leave_report_membership_changes() {
+        let mut m = Membership::shards(2);
+        assert!(!m.join("shard-0"), "already present");
+        assert!(m.join("shard-2"));
+        assert!(m.leave("shard-2"));
+        assert!(!m.leave("shard-2"), "already gone");
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn shares_are_roughly_balanced() {
+        // 4 members, 8k keys: each member should own ~25%. HRW has no
+        // virtual-node tuning, so allow a generous band.
+        let m = Membership::shards(4);
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        let n = 8_000;
+        for i in 0..n {
+            *counts.entry(m.owner_of(&format!("class-{i}")).unwrap()).or_default() += 1;
+        }
+        for member in m.members() {
+            let share = counts[member.as_str()] as f64 / n as f64;
+            assert!((0.18..0.32).contains(&share), "{member}: share {share}");
+        }
+    }
+
+    /// Satellite: the rendezvous stability property.  On leave, exactly
+    /// the departing member's keys move (everything else keeps its
+    /// owner); on join, the only keys that move are those the new member
+    /// claims — so a membership change reshuffles ≈ 1/n of the keyspace,
+    /// never all of it.
+    #[test]
+    fn property_join_leave_moves_only_the_affected_share() {
+        crate::prop::check(
+            "hrw-stability",
+            60,
+            |rng: &mut Rng| {
+                let members = 2 + rng.below(7) as usize;
+                let keys = 20 + rng.below(180) as usize;
+                let salt = rng.next_u64();
+                let victim = rng.below(members as u64) as usize;
+                (members, keys, salt, victim)
+            },
+            |&(members, keys, salt, victim)| {
+                let mut m = Membership::new(
+                    (0..members).map(|i| format!("m{salt:x}-{i}")),
+                );
+                let keys: Vec<String> =
+                    (0..keys).map(|k| format!("class-{salt:x}-{k}")).collect();
+                let before: Vec<String> = keys
+                    .iter()
+                    .map(|k| m.owner_of(k).unwrap().to_string())
+                    .collect();
+                let victim_name = m.members()[victim].clone();
+
+                // Leave: every key NOT owned by the victim keeps its owner.
+                m.leave(&victim_name);
+                let after_leave: Vec<Option<String>> =
+                    keys.iter().map(|k| m.owner_of(k).map(String::from)).collect();
+                for (i, owner) in before.iter().enumerate() {
+                    if owner != &victim_name
+                        && after_leave[i].as_deref() != Some(owner.as_str())
+                    {
+                        return false;
+                    }
+                }
+
+                // Join (the same member returns): the keyspace must map
+                // exactly as before — and relative to the reduced set,
+                // the only keys that moved are those the joiner claims.
+                m.join(victim_name.clone());
+                for (i, k) in keys.iter().enumerate() {
+                    let now = m.owner_of(k).unwrap();
+                    if now != before[i] {
+                        return false;
+                    }
+                    // A key that didn't go to the joiner must have kept
+                    // its reduced-set owner (no third-party reshuffle).
+                    if now != victim_name && after_leave[i].as_deref() != Some(now) {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -11,8 +11,10 @@
 //! `hardless` binary wires the same pieces over TCP for distributed runs.
 
 pub mod cluster;
+pub mod membership;
 
 pub use cluster::{Cluster, ClusterBuilder, NodeTemplate};
+pub use membership::Membership;
 
 use crate::events::{EventSpec, Invocation, Status};
 use crate::metrics::MetricsHub;
@@ -27,7 +29,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Snapshot of the coordinator's submission bookkeeping (one lock hold).
+/// Snapshot of the coordinator's submission bookkeeping (lock-free
+/// counters plus one brief lock per tracking shard for the gauge).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TrackingCounts {
     pub submitted: usize,
@@ -54,37 +57,29 @@ fn inv_suffix(id: &str) -> Option<u64> {
     id.strip_prefix("inv-")?.parse().ok()
 }
 
+/// Number of tracking-map shards.  Like the queue (DESIGN.md §13), the
+/// coordinator's submission bookkeeping is sharded so concurrent
+/// submitters, the collector, and `status`/`wait_for` probes for
+/// different invocations never contend on one mutex.  Ids hash to a
+/// shard by numeric suffix, so a submit and its completion always meet
+/// on the same shard (and the same condvar).
+const TRACKING_SHARDS: usize = 8;
+
+/// One tracking shard's maps (its own mutex; per-shard condvar wakes
+/// `wait_for` probes for ids this shard owns).
 #[derive(Default)]
-struct Tracking {
+struct TrackState {
     /// Submitted and not yet completed.
     inflight: HashMap<String, EventSpec>,
     /// Terminal invocations by id — O(1) `status`/`wait_for` probes
     /// (bounded by [`COMPLETED_RETENTION`]).
     done: HashMap<String, Invocation>,
-    /// Completion order of the retained window (drives eviction and
-    /// ordered snapshots).
-    done_order: VecDeque<String>,
-    submitted: usize,
-    /// Monotonic counters, unaffected by retention eviction.
-    completed_total: usize,
-    succeeded_total: usize,
-    /// Inclusive numeric-suffix range of ids this coordinator has issued
-    /// (`0` lo = none yet; `next_id` starts at 1).  An id inside the
-    /// range that is neither in flight nor retained was evicted —
-    /// `Expired`, not `Unknown`.
-    id_lo: u64,
-    id_hi: u64,
 }
 
-impl Tracking {
-    fn note_issued(&mut self, id: &str) {
-        if let Some(n) = inv_suffix(id) {
-            if self.id_lo == 0 {
-                self.id_lo = n;
-            }
-            self.id_hi = self.id_hi.max(n);
-        }
-    }
+#[derive(Default)]
+struct TrackShard {
+    state: Mutex<TrackState>,
+    cv: Condvar,
 }
 
 /// The event gateway + completion sink.
@@ -98,8 +93,29 @@ pub struct Coordinator {
     store: Option<Arc<dyn ObjectStore>>,
     /// Coordinator-tracked invocation pipelines (DESIGN.md §12).
     dag: DagTracker,
-    tracking: Mutex<Tracking>,
-    done_cv: Condvar,
+    /// [`TRACKING_SHARDS`]-way sharded submission bookkeeping.
+    shards: Vec<TrackShard>,
+    /// Global completion order of the retained window.  Retention must
+    /// evict the *globally* oldest completion first regardless of which
+    /// shard owns it, so the order queue is the one unsharded piece.
+    /// Lock order: a shard mutex is never held while taking
+    /// `done_order`; the evictor takes `done_order` first, then victim
+    /// shards — acyclic either way.
+    done_order: Mutex<VecDeque<String>>,
+    /// Parking spot for [`Coordinator::drain`] (completions land on
+    /// arbitrary shards, so fleet-wide waiters get their own condvar).
+    drain_gate: Mutex<()>,
+    drain_cv: Condvar,
+    /// Monotonic counters, unaffected by retention eviction.
+    submitted: AtomicUsize,
+    completed_total: AtomicUsize,
+    succeeded_total: AtomicUsize,
+    /// Inclusive numeric-suffix range of ids this coordinator has issued
+    /// (`0` lo = none yet; `next_id` starts at 1).  An id inside the
+    /// range that is neither in flight nor retained was evicted —
+    /// `Expired`, not `Unknown`.
+    id_lo: AtomicU64,
+    id_hi: AtomicU64,
     completions_tx: mpsc::Sender<Invocation>,
     collector: Mutex<Option<std::thread::JoinHandle<()>>>,
     stop: Arc<AtomicBool>,
@@ -124,8 +140,15 @@ impl Coordinator {
             metrics,
             store,
             dag: DagTracker::new(),
-            tracking: Mutex::new(Tracking::default()),
-            done_cv: Condvar::new(),
+            shards: (0..TRACKING_SHARDS).map(|_| TrackShard::default()).collect(),
+            done_order: Mutex::new(VecDeque::new()),
+            drain_gate: Mutex::new(()),
+            drain_cv: Condvar::new(),
+            submitted: AtomicUsize::new(0),
+            completed_total: AtomicUsize::new(0),
+            succeeded_total: AtomicUsize::new(0),
+            id_lo: AtomicU64::new(0),
+            id_hi: AtomicU64::new(0),
             completions_tx: tx,
             collector: Mutex::new(None),
             stop: Arc::new(AtomicBool::new(false)),
@@ -152,6 +175,31 @@ impl Coordinator {
         Arc::new(self.completions_tx.clone())
     }
 
+    /// The tracking shard owning `id` (suffix-hashed; non-`inv-N` ids —
+    /// foreign completions — land on shard 0).
+    fn shard(&self, id: &str) -> &TrackShard {
+        let n = inv_suffix(id).unwrap_or(0);
+        &self.shards[(n as usize) % TRACKING_SHARDS]
+    }
+
+    /// Fold `id` into the issued-suffix range — lock-free min/max.
+    fn note_issued(&self, id: &str) {
+        let Some(n) = inv_suffix(id) else { return };
+        let mut lo = self.id_lo.load(Ordering::Relaxed);
+        while lo == 0 || n < lo {
+            match self.id_lo.compare_exchange_weak(
+                lo,
+                n,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(cur) => lo = cur,
+            }
+        }
+        self.id_hi.fetch_max(n, Ordering::Relaxed);
+    }
+
     fn collect_loop(self: Arc<Coordinator>, rx: mpsc::Receiver<Invocation>) {
         loop {
             match rx.recv_timeout(Duration::from_millis(100)) {
@@ -163,41 +211,58 @@ impl Coordinator {
                     self.metrics.record_completion(&inv);
                     let id = inv.id.clone();
                     let succeeded = inv.status == Status::Succeeded;
-                    let mut t = self.tracking.lock().expect("poisoned");
-                    t.inflight.remove(&id);
-                    // Duplicate reports (e.g. a node retrying a report
-                    // RPC) are idempotent: the first terminal state wins.
-                    if let std::collections::hash_map::Entry::Vacant(slot) =
-                        t.done.entry(id.clone())
-                    {
-                        slot.insert(inv.clone());
-                        t.done_order.push_back(id);
-                        t.completed_total += 1;
-                        if succeeded {
-                            t.succeeded_total += 1;
+                    // Only the owning shard's lock is held: completions
+                    // for ids on other shards proceed in parallel.
+                    let newly_done = {
+                        let shard = self.shard(&id);
+                        let mut s = shard.state.lock().expect("poisoned");
+                        s.inflight.remove(&id);
+                        // Duplicate reports (e.g. a node retrying a report
+                        // RPC) are idempotent: the first terminal state
+                        // wins.
+                        if let std::collections::hash_map::Entry::Vacant(slot) =
+                            s.done.entry(id.clone())
+                        {
+                            slot.insert(inv.clone());
+                            true
+                        } else {
+                            false
                         }
-                    }
+                    };
                     // Retention eviction + result GC: the evicted
                     // invocation's result object is deleted (outside the
-                    // lock — store IO).  `cas/` and `datasets/` keys stay
+                    // locks — store IO).  `cas/` and `datasets/` keys stay
                     // pinned: they are content-addressed/user inputs, not
-                    // per-invocation garbage.
-                    let retention = self.retention.load(Ordering::Relaxed);
+                    // per-invocation garbage.  Eviction order is *global*
+                    // completion order across shards (see `done_order`).
                     let mut evicted_results: Vec<String> = Vec::new();
-                    while t.done_order.len() > retention {
-                        if let Some(old) = t.done_order.pop_front() {
-                            if let Some(gone) = t.done.remove(&old) {
-                                if let Some(key) = gone.result_key {
-                                    if !key.starts_with("cas/")
-                                        && !key.starts_with("datasets/")
-                                    {
-                                        evicted_results.push(key);
+                    if newly_done {
+                        self.completed_total.fetch_add(1, Ordering::Relaxed);
+                        if succeeded {
+                            self.succeeded_total.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let retention = self.retention.load(Ordering::Relaxed);
+                        let mut order = self.done_order.lock().expect("poisoned");
+                        order.push_back(id.clone());
+                        while order.len() > retention {
+                            if let Some(old) = order.pop_front() {
+                                let mut s = self
+                                    .shard(&old)
+                                    .state
+                                    .lock()
+                                    .expect("poisoned");
+                                if let Some(gone) = s.done.remove(&old) {
+                                    if let Some(key) = gone.result_key {
+                                        if !key.starts_with("cas/")
+                                            && !key.starts_with("datasets/")
+                                        {
+                                            evicted_results.push(key);
+                                        }
                                     }
                                 }
                             }
                         }
                     }
-                    drop(t);
                     if let (Some(store), false) =
                         (&self.store, evicted_results.is_empty())
                     {
@@ -219,7 +284,8 @@ impl Coordinator {
                     // a stage, its successors are already published (lock
                     // order is always dag → tracking, never the reverse).
                     self.dag.on_completion(&inv, |spec| self.submit(spec));
-                    self.done_cv.notify_all();
+                    self.shard(&id).cv.notify_all();
+                    self.drain_cv.notify_all();
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     if self.stop.load(Ordering::SeqCst) {
@@ -240,72 +306,94 @@ impl Coordinator {
         let id = next_id("inv");
         let inv = Invocation::new(&id, spec.clone(), self.clock.now());
         {
-            let mut t = self.tracking.lock().expect("poisoned");
-            t.inflight.insert(id.clone(), spec);
-            t.submitted += 1;
-            t.note_issued(&id);
+            let mut s = self.shard(&id).state.lock().expect("poisoned");
+            s.inflight.insert(id.clone(), spec);
         }
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.note_issued(&id);
         self.queue.publish(inv)?;
         Ok(id)
     }
 
-    /// Submit many events with one tracking-lock hold and one
-    /// `publish_batch` into the queue — the server side of the gateway's
-    /// single-RPC `submit_batch`.
+    /// Submit many events with one lock hold per touched tracking shard
+    /// and one `publish_batch` into the queue — the server side of the
+    /// gateway's single-RPC `submit_batch`.
     pub(crate) fn submit_batch(&self, specs: Vec<EventSpec>) -> Result<Vec<String>> {
         let now = self.clock.now();
         let mut ids = Vec::with_capacity(specs.len());
         let mut invs = Vec::with_capacity(specs.len());
-        {
-            let mut t = self.tracking.lock().expect("poisoned");
-            for spec in specs {
-                let id = next_id("inv");
-                invs.push(Invocation::new(&id, spec.clone(), now));
-                t.inflight.insert(id.clone(), spec);
-                t.note_issued(&id);
-                ids.push(id);
-            }
-            t.submitted += ids.len();
+        let mut per_shard: Vec<Vec<(String, EventSpec)>> =
+            vec![Vec::new(); TRACKING_SHARDS];
+        for spec in specs {
+            let id = next_id("inv");
+            invs.push(Invocation::new(&id, spec.clone(), now));
+            self.note_issued(&id);
+            let shard = (inv_suffix(&id).unwrap_or(0) as usize) % TRACKING_SHARDS;
+            per_shard[shard].push((id.clone(), spec));
+            ids.push(id);
         }
+        for (shard, entries) in per_shard.into_iter().enumerate() {
+            if entries.is_empty() {
+                continue;
+            }
+            let mut s = self.shards[shard].state.lock().expect("poisoned");
+            for (id, spec) in entries {
+                s.inflight.insert(id, spec);
+            }
+        }
+        self.submitted.fetch_add(ids.len(), Ordering::Relaxed);
         self.queue.publish_batch(invs)?;
         Ok(ids)
     }
 
     pub fn submitted(&self) -> usize {
-        self.tracking.lock().expect("poisoned").submitted
+        self.submitted.load(Ordering::Relaxed)
     }
 
-    /// Retained terminal invocations in completion order (the full
-    /// history up to [`COMPLETED_RETENTION`]).
+    /// Retained terminal invocations in global completion order (the
+    /// full history up to [`COMPLETED_RETENTION`]).
     pub fn completed(&self) -> Vec<Invocation> {
-        let t = self.tracking.lock().expect("poisoned");
-        t.done_order
-            .iter()
-            .filter_map(|id| t.done.get(id).cloned())
+        let ids: Vec<String> = {
+            let order = self.done_order.lock().expect("poisoned");
+            order.iter().cloned().collect()
+        };
+        ids.iter()
+            .filter_map(|id| {
+                self.shard(id).state.lock().expect("poisoned").done.get(id).cloned()
+            })
             .collect()
     }
 
     pub fn inflight_len(&self) -> usize {
-        self.tracking.lock().expect("poisoned").inflight.len()
+        self.shards
+            .iter()
+            .map(|s| s.state.lock().expect("poisoned").inflight.len())
+            .sum()
     }
 
     /// One-lock lookup for the client `status` call: whether `id` is still
-    /// in flight, and its terminal invocation if it has completed.
+    /// in flight, and its terminal invocation if it has completed — only
+    /// the owning shard's lock is taken.
     pub fn lookup(&self, id: &str) -> (bool, Option<Invocation>) {
-        let t = self.tracking.lock().expect("poisoned");
-        (t.inflight.contains_key(id), t.done.get(id).cloned())
+        let s = self.shard(id).state.lock().expect("poisoned");
+        (s.inflight.contains_key(id), s.done.get(id).cloned())
     }
 
-    /// Submission counters under a single lock hold (the gateway `stats`
-    /// call) — O(1), exact regardless of retention eviction.
+    /// Submission counters for the gateway `stats` call — the monotonic
+    /// counters are lock-free; only the in-flight gauge sums the shards.
+    /// Exact regardless of retention eviction.
     pub fn counts(&self) -> TrackingCounts {
-        let t = self.tracking.lock().expect("poisoned");
+        // `succeeded` is read before `completed`: the collector bumps
+        // completed first, so this order can never observe more
+        // successes than completions.
+        let succeeded = self.succeeded_total.load(Ordering::Relaxed);
+        let completed = self.completed_total.load(Ordering::Relaxed);
         TrackingCounts {
-            submitted: t.submitted,
-            inflight: t.inflight.len(),
-            completed: t.completed_total,
-            succeeded: t.succeeded_total,
-            failed: t.completed_total - t.succeeded_total,
+            submitted: self.submitted.load(Ordering::Relaxed),
+            inflight: self.inflight_len(),
+            completed,
+            succeeded,
+            failed: completed.saturating_sub(succeeded),
             gc_deleted: self.gc_deleted.load(Ordering::Relaxed),
             gc_reclaimed_bytes: self.gc_reclaimed_bytes.load(Ordering::Relaxed),
         }
@@ -319,8 +407,8 @@ impl Coordinator {
         let Some(n) = inv_suffix(id) else {
             return false;
         };
-        let t = self.tracking.lock().expect("poisoned");
-        t.id_lo != 0 && n >= t.id_lo && n <= t.id_hi
+        let lo = self.id_lo.load(Ordering::Relaxed);
+        lo != 0 && n >= lo && n <= self.id_hi.load(Ordering::Relaxed)
     }
 
     /// Override the retained-window size (tests, memory-constrained
@@ -360,46 +448,51 @@ impl Coordinator {
 
     /// Block until every submitted invocation is terminal, or `timeout`
     /// (wall clock) elapses.  Returns the number still in flight.
+    /// Completions land on arbitrary shards, so the fleet-wide wait
+    /// parks on the drain condvar (≤100ms chunks bound any missed
+    /// notification, exactly as before sharding).
     pub fn drain(&self, timeout: Duration) -> usize {
         let deadline = Instant::now() + timeout;
-        let mut t = self.tracking.lock().expect("poisoned");
-        while !t.inflight.is_empty() {
+        loop {
+            let inflight = self.inflight_len();
             let left = deadline.saturating_duration_since(Instant::now());
-            if left.is_zero() {
-                break;
+            if inflight == 0 || left.is_zero() {
+                return inflight;
             }
-            let (guard, _) = self
-                .done_cv
-                .wait_timeout(t, left.min(Duration::from_millis(100)))
+            let gate = self.drain_gate.lock().expect("poisoned");
+            let _ = self
+                .drain_cv
+                .wait_timeout(gate, left.min(Duration::from_millis(100)))
                 .expect("poisoned");
-            t = guard;
         }
-        t.inflight.len()
     }
 
-    /// Wait for one specific invocation to complete.
+    /// Wait for one specific invocation to complete — parks on the
+    /// owning shard's condvar, so waiters for different invocations
+    /// never share a wakeup storm.
     pub fn wait_for(&self, id: &str, timeout: Duration) -> Option<Invocation> {
         let deadline = Instant::now() + timeout;
-        let mut t = self.tracking.lock().expect("poisoned");
+        let shard = self.shard(id);
+        let mut s = shard.state.lock().expect("poisoned");
         loop {
-            if let Some(inv) = t.done.get(id) {
+            if let Some(inv) = s.done.get(id) {
                 return Some(inv.clone());
             }
             let left = deadline.saturating_duration_since(Instant::now());
             if left.is_zero() {
                 return None;
             }
-            let (guard, _) = self
-                .done_cv
-                .wait_timeout(t, left.min(Duration::from_millis(100)))
+            let (guard, _) = shard
+                .cv
+                .wait_timeout(s, left.min(Duration::from_millis(100)))
                 .expect("poisoned");
-            t = guard;
+            s = guard;
         }
     }
 
     /// `RSuccess` so far (paper §V-A).
     pub fn successes(&self) -> usize {
-        self.tracking.lock().expect("poisoned").succeeded_total
+        self.succeeded_total.load(Ordering::Relaxed)
     }
 
     pub fn shutdown(&self) {
@@ -729,6 +822,34 @@ mod tests {
         // All three stage invocations were tracked like any submission.
         assert_eq!(c.submitted(), 3);
         assert_eq!(c.pipelines_tracked(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn completed_snapshot_is_global_completion_order_across_shards() {
+        // Sequential ids land on consecutive tracking shards; completing
+        // them in a scrambled order must still read back in *completion*
+        // order — the unsharded `done_order` queue, not per-shard state,
+        // defines the snapshot and retention eviction order.
+        let (_clock, _queue, c) = setup();
+        let ids: Vec<String> = (0..12)
+            .map(|_| c.submit(EventSpec::new("r", "d")).unwrap())
+            .collect();
+        let scrambled: Vec<&String> =
+            ids.iter().rev().step_by(2).chain(ids.iter().step_by(2)).collect();
+        for id in &scrambled {
+            let mut inv = Invocation::new(id, EventSpec::new("r", "d"), SimTime(0));
+            inv.status = Status::Succeeded;
+            c.completion_sender().send(inv).unwrap();
+            c.wait_for(id, Duration::from_secs(5)).unwrap();
+        }
+        let snapshot: Vec<String> =
+            c.completed().into_iter().map(|i| i.id).collect();
+        let expected: Vec<String> =
+            scrambled.iter().map(|s| s.to_string()).collect();
+        assert_eq!(snapshot, expected);
+        let counts = c.counts();
+        assert_eq!((counts.completed, counts.inflight), (12, 0));
         c.shutdown();
     }
 

@@ -53,8 +53,15 @@ pub struct EventSpec {
     /// Logical runtime name (e.g. `tinyyolo`). Nodes map this onto a
     /// per-accelerator implementation variant at execution time.
     pub runtime: String,
-    /// Object-store key of the input dataset (`datasets/...`).
+    /// Object-store key of the primary input dataset (`datasets/...`).
+    /// Always equal to `datasets[0]` — kept as its own field so the wire
+    /// shape and single-input callers predating fan-in stay unchanged.
     pub dataset: String,
+    /// Ordered input list.  Single-input events carry `[dataset]`;
+    /// pipeline join stages carry every parent's result key in `after`
+    /// order.  Serialized leniently: an absent/empty `datasets` array
+    /// parses as `[dataset]`, so pre-fan-in peers interoperate.
+    pub datasets: Vec<String>,
     /// Free-form run configuration (forwarded to the runtime).
     pub config: Json,
     /// QoS lane this invocation rides (default `Interactive`).
@@ -63,9 +70,11 @@ pub struct EventSpec {
 
 impl EventSpec {
     pub fn new(runtime: impl Into<String>, dataset: impl Into<String>) -> EventSpec {
+        let dataset = dataset.into();
         EventSpec {
             runtime: runtime.into(),
-            dataset: dataset.into(),
+            datasets: vec![dataset.clone()],
+            dataset,
             config: Json::obj(),
             priority: Priority::default(),
         }
@@ -81,10 +90,30 @@ impl EventSpec {
         self
     }
 
+    /// Replace the input list with an ordered set of dataset keys (used
+    /// by pipeline fan-in stages).  `dataset` mirrors the first entry so
+    /// execution and pre-fan-in peers keep working unchanged; an empty
+    /// iterator is a no-op.
+    pub fn with_datasets(
+        mut self,
+        keys: impl IntoIterator<Item = impl Into<String>>,
+    ) -> EventSpec {
+        let keys: Vec<String> = keys.into_iter().map(Into::into).collect();
+        if let Some(first) = keys.first() {
+            self.dataset = first.clone();
+            self.datasets = keys;
+        }
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("runtime", self.runtime.as_str())
             .set("dataset", self.dataset.as_str())
+            .set(
+                "datasets",
+                Json::Arr(self.datasets.iter().map(|d| Json::from(d.as_str())).collect()),
+            )
             .set("config", self.config.clone())
             .set("priority", self.priority.as_str())
     }
@@ -97,9 +126,23 @@ impl EventSpec {
             .and_then(|v| v.as_str())
             .and_then(|s| Priority::parse(s).ok())
             .unwrap_or_default();
+        let dataset = j.str_of("dataset")?.to_string();
+        // `datasets` parses leniently too: absent or empty (pre-fan-in
+        // peers) collapses to the single primary input.
+        let datasets = j
+            .get("datasets")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(String::from))
+                    .collect::<Vec<_>>()
+            })
+            .filter(|v| !v.is_empty())
+            .unwrap_or_else(|| vec![dataset.clone()]);
         Ok(EventSpec {
             runtime: j.str_of("runtime")?.to_string(),
-            dataset: j.str_of("dataset")?.to_string(),
+            dataset,
+            datasets,
             config: j.get("config").cloned().unwrap_or(Json::Null),
             priority,
         })
@@ -317,6 +360,36 @@ mod tests {
         assert_eq!(EventSpec::from_json(&odd).unwrap().priority, Priority::Interactive);
         assert!(Priority::parse("batch").is_ok());
         assert!(Priority::parse("zzz").is_err());
+    }
+
+    #[test]
+    fn datasets_list_roundtrips_and_parses_leniently() {
+        // Single-input events carry the primary key as a one-entry list.
+        let spec = EventSpec::new("tinyyolo", "datasets/d");
+        assert_eq!(spec.datasets, vec!["datasets/d".to_string()]);
+        // Fan-in: the ordered list wins and `dataset` mirrors its head.
+        let spec = spec.with_datasets(["results/inv-a", "results/inv-b"]);
+        assert_eq!(spec.dataset, "results/inv-a");
+        assert_eq!(
+            spec.datasets,
+            vec!["results/inv-a".to_string(), "results/inv-b".to_string()]
+        );
+        let back = EventSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // An empty replacement is a no-op, never an invalid spec.
+        let same = spec.clone().with_datasets(Vec::<String>::new());
+        assert_eq!(same, spec);
+        // Old-peer payload without a datasets array: `[dataset]`.
+        let old = Json::obj()
+            .set("runtime", "tinyyolo")
+            .set("dataset", "datasets/d")
+            .set("config", Json::obj());
+        let back = EventSpec::from_json(&old).unwrap();
+        assert_eq!(back.datasets, vec!["datasets/d".to_string()]);
+        // An explicitly empty array degrades the same way.
+        let odd = old.set("datasets", Json::Arr(Vec::new()));
+        let back = EventSpec::from_json(&odd).unwrap();
+        assert_eq!(back.datasets, vec!["datasets/d".to_string()]);
     }
 
     #[test]

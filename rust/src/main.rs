@@ -49,6 +49,7 @@ fn app() -> App {
             Command::new("serve", "serve the gateway + shared queue + object store over TCP")
                 .opt("gateway-addr", DEFAULT_GATEWAY, "gateway (client API) bind address")
                 .opt("queue-addr", "127.0.0.1:7401", "queue bind address")
+                .opt("queue-shards", "1", "queue shard count: >1 serves an M-way sharded queue with rendezvous-hashed class lanes (1 = single indexed engine)")
                 .opt("store-addr", "127.0.0.1:7402", "store bind address")
                 .opt("store-dir", "", "object store directory (empty = in-memory)")
                 .opt("runtimes", "tinyyolo", "comma-separated runtimes to announce")
@@ -178,13 +179,21 @@ fn cmd_figures(m: &hardless::cli::Matches) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(m: &hardless::cli::Matches) -> anyhow::Result<()> {
-    use hardless::queue::{InvocationQueue, MemQueue, QueueServer};
+    use hardless::queue::{InvocationQueue, MemQueue, QueueServer, ShardedQueue};
     use hardless::store::{FsStore, MemStore, ObjectStore, StoreServer};
     use hardless::util::clock::ScaledClock;
     use std::sync::Arc;
 
     let clock = ScaledClock::realtime();
-    let queue = MemQueue::new(clock.clone());
+    let shards: usize = m.parse_num("queue-shards").map_err(|e| anyhow::anyhow!(e))?;
+    // Shard count 1 keeps the single indexed engine (no per-shard stats
+    // section on the wire); >1 partitions the runtime classes over M
+    // independently-locked engines via rendezvous hashing (DESIGN.md §13).
+    let queue: Arc<dyn InvocationQueue> = if shards <= 1 {
+        MemQueue::new(clock.clone())
+    } else {
+        ShardedQueue::new(clock.clone(), shards)
+    };
     let store: Arc<dyn ObjectStore> = match m.str_req("store-dir") {
         "" => Arc::new(MemStore::new()),
         dir => Arc::new(FsStore::open(dir)?),
@@ -229,7 +238,7 @@ fn cmd_serve(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     let ss = StoreServer::serve(m.str_req("store-addr"), store.clone())?;
     let gw = GatewayServer::serve(
         m.str_req("gateway-addr"),
-        queue.clone() as Arc<dyn InvocationQueue>,
+        queue.clone(),
         store,
         clock,
         GatewayConfig { announce_runtimes: announce, autoscale: autoscale.clone(), ..GatewayConfig::default() },
@@ -245,7 +254,11 @@ fn cmd_serve(m: &hardless::cli::Matches) -> anyhow::Result<()> {
         );
     }
     println!("gateway listening on {}  (submit/status/wait/results)", gw.addr());
-    println!("queue   listening on {}  (node managers take work here)", qs.addr());
+    if shards > 1 {
+        println!("queue   listening on {}  ({} shards, node managers take work here)", qs.addr(), shards);
+    } else {
+        println!("queue   listening on {}  (node managers take work here)", qs.addr());
+    }
     println!("store   listening on {}  (datasets, bundles, results)", ss.addr());
     println!("start nodes (`hardless node`), then submit (`hardless submit --wait`); ctrl-c to stop");
     loop {

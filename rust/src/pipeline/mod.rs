@@ -17,9 +17,11 @@
 //! keeps it warm (zero gateway round trips between stages; pinned by
 //! `rust/tests/integration_gateway.rs`).
 //!
-//! Fan-in stages receive the first-listed parent's result as `dataset`
-//! and *every* parent's result under `config.inputs` (stage name →
-//! result key).  A failed stage fails exactly its descendants — other
+//! Fan-in stages receive *every* parent's result key as an ordered
+//! dataset list (`EventSpec::datasets`, in `after` order — the legacy
+//! `dataset` field mirrors the first entry) and, redundantly, under
+//! `config.inputs` (stage name → result key) for runtimes that want
+//! named lookup.  A failed stage fails exactly its descendants — other
 //! branches keep running — and the pipeline reports `PartialFailure`.
 
 use crate::events::{EventSpec, Invocation, Priority, Status};
@@ -36,8 +38,10 @@ pub struct StageSpec {
     /// Runtime class the stage's invocation rides (queue lane).
     pub runtime: String,
     /// Parent stage names.  Empty = root stage (runs on the pipeline's
-    /// input dataset).  Order matters: the first-listed parent's result
-    /// becomes this stage's `dataset`.
+    /// input dataset).  Order matters: the stage's ordered input list
+    /// (`EventSpec::datasets`) is the parents' result keys in exactly
+    /// this order, and the first-listed parent's result doubles as the
+    /// legacy single `dataset`.
     pub after: Vec<String>,
     /// Free-form run configuration forwarded to the runtime.  Parented
     /// stages additionally receive `config.inputs` (parent name →
@@ -570,11 +574,13 @@ impl DagTracker {
     }
 }
 
-/// Resolve a ready stage's input and publish it: `dataset` is the
-/// first-listed parent's result key (the CAS chain link — the pipeline's
-/// own input for roots); fan-in stages also get every parent's result
-/// under `config.inputs`.  A launch error fails the stage and skips its
-/// descendants (other branches keep running).
+/// Resolve a ready stage's inputs and publish it: the stage's ordered
+/// dataset list is every parent's result key in `after` order (the CAS
+/// chain links — the pipeline's own input for roots), with the legacy
+/// single `dataset` mirroring the first entry; fan-in stages also get
+/// every parent's result under `config.inputs` for named lookup.  A
+/// launch error fails the stage and skips its descendants (other
+/// branches keep running).
 fn launch_stage(
     pipeline_id: &str,
     run: &mut PipelineRun,
@@ -583,12 +589,18 @@ fn launch_stage(
     launch: &mut impl FnMut(EventSpec) -> Result<String>,
 ) {
     let parents = run.stages[idx].parents.clone();
-    let dataset = match parents.first() {
-        None => run.dataset.clone(),
-        Some(&p) => run.stages[p]
-            .result_key
-            .clone()
-            .expect("launch_stage only called once every parent succeeded"),
+    let datasets: Vec<String> = if parents.is_empty() {
+        vec![run.dataset.clone()]
+    } else {
+        parents
+            .iter()
+            .map(|&p| {
+                run.stages[p]
+                    .result_key
+                    .clone()
+                    .expect("launch_stage only called once every parent succeeded")
+            })
+            .collect()
     };
     let mut config = match &run.stages[idx].spec.config {
         Json::Obj(_) => run.stages[idx].spec.config.clone(),
@@ -602,10 +614,11 @@ fn launch_stage(
         }
         config = config.set("inputs", inputs);
     }
-    let spec = EventSpec::new(&run.stages[idx].spec.runtime, &dataset)
+    let spec = EventSpec::new(&run.stages[idx].spec.runtime, &datasets[0])
+        .with_datasets(datasets.clone())
         .with_config(config)
         .with_priority(run.priority);
-    run.stages[idx].dataset = Some(dataset);
+    run.stages[idx].dataset = Some(datasets[0].clone());
     match launch(spec) {
         Ok(inv_id) => {
             by_invocation.insert(inv_id.clone(), (pipeline_id.to_string(), idx));
@@ -787,6 +800,12 @@ mod tests {
                 .unwrap()
         };
         assert_eq!(join_spec.dataset, keys::result(&inv_of("left")));
+        // The ordered input list carries BOTH parents' result keys, in
+        // `after` order — not just the first parent.
+        assert_eq!(
+            join_spec.datasets,
+            vec![keys::result(&inv_of("left")), keys::result(&inv_of("right"))]
+        );
         let inputs = join_spec.config.get("inputs").expect("fan-in inputs");
         assert_eq!(
             inputs.str_of("left").unwrap(),
@@ -801,6 +820,52 @@ mod tests {
             sim.tracker.status("pipe-1").unwrap().state,
             PipelineState::Succeeded
         );
+    }
+
+    /// Regression: a join stage's dataset list must follow the stage's
+    /// `after` order (and survive the EventSpec wire roundtrip), even
+    /// when that order disagrees with name sort or completion order.
+    /// The old behavior delivered only one parent's key as `dataset` and
+    /// buried the rest in stage config.
+    #[test]
+    fn fan_in_datasets_follow_after_order_not_completion_order() {
+        let spec = PipelineSpec::new("datasets/in")
+            .stage(StageSpec::new("src", "r"))
+            .stage(StageSpec::new("a-early", "r").after(["src"]))
+            .stage(StageSpec::new("z-late", "r").after(["src"]))
+            // `after` deliberately lists the lexicographically-later
+            // stage first.
+            .stage(StageSpec::new("join", "r").after(["z-late", "a-early"]));
+        let mut sim = Sim::new();
+        sim.submit("pipe-1", spec).unwrap();
+        sim.complete("inv-0", false);
+        // Complete the branches in the OPPOSITE of `after` order.
+        let st = sim.tracker.status("pipe-1").unwrap();
+        let inv_of = |st: &PipelineStatus, name: &str| {
+            st.stages
+                .iter()
+                .find(|s| s.name == name)
+                .unwrap()
+                .invocation_id
+                .clone()
+                .unwrap()
+        };
+        let early = inv_of(&st, "a-early");
+        let late = inv_of(&st, "z-late");
+        sim.complete(&early, false);
+        sim.complete(&late, false);
+        let st = sim.tracker.status("pipe-1").unwrap();
+        let join_id = inv_of(&st, "join");
+        let join_spec = &sim.specs[&join_id];
+        let want = vec![keys::result(&late), keys::result(&early)];
+        assert_eq!(join_spec.datasets, want, "after-order, not completion/name order");
+        assert_eq!(join_spec.dataset, want[0], "legacy field mirrors the head");
+        // Roots carry the pipeline input as a one-entry list.
+        assert_eq!(sim.specs["inv-0"].datasets, vec!["datasets/in".to_string()]);
+        // And the ordered list survives serialization (what a node-side
+        // peer actually sees across the gateway wire).
+        let back = EventSpec::from_json(&join_spec.to_json()).unwrap();
+        assert_eq!(back.datasets, want);
     }
 
     #[test]
@@ -929,6 +994,24 @@ mod tests {
                         }
                     };
                     if espec.dataset != want_dataset {
+                        return false;
+                    }
+                    // The ordered input list is every parent's result
+                    // key in `after` order (roots: the pipeline input).
+                    let want_datasets: Vec<String> = if ps.is_empty() {
+                        vec!["datasets/in".to_string()]
+                    } else {
+                        ps.iter()
+                            .map(|p| {
+                                let pinv = st.stages[*p as usize]
+                                    .invocation_id
+                                    .clone()
+                                    .unwrap();
+                                keys::result(&pinv)
+                            })
+                            .collect()
+                    };
+                    if espec.datasets != want_datasets {
                         return false;
                     }
                     if !ps.is_empty() {

@@ -620,6 +620,7 @@ impl InvocationQueue for MemQueue {
             acked: inner.acked,
             dead: inner.dead.len(),
             classes,
+            shards: Vec::new(),
         })
     }
 }

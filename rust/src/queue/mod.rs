@@ -18,9 +18,11 @@ pub mod mem;
 #[cfg(test)]
 mod reference;
 pub mod remote;
+pub mod sharded;
 
 pub use mem::{MemQueue, QueueConfig};
 pub use remote::{QueueClient, QueueServer};
+pub use sharded::ShardedQueue;
 
 use crate::events::{Invocation, Priority};
 use crate::json::Json;
@@ -219,6 +221,59 @@ impl ClassStats {
     }
 }
 
+/// Per-shard gauge section of a sharded queue's stats (DESIGN.md §13).
+/// Single-shard backends leave the section out entirely; it is lenient
+/// on the wire in both directions (unknown fields ignored, absent
+/// section = single-shard engine).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ShardStats {
+    /// Shard member name from the rendezvous registry (`shard-0`, ...).
+    pub shard: String,
+    pub queued: usize,
+    pub in_flight: usize,
+    pub acked: usize,
+    pub dead: usize,
+    /// Runtime classes currently queued on this shard, sorted.  Shards
+    /// partition the classes, so across a snapshot each class appears in
+    /// at most one shard's list.
+    pub classes: Vec<String>,
+}
+
+impl ShardStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("shard", self.shard.as_str())
+            .set("queued", self.queued)
+            .set("in_flight", self.in_flight)
+            .set("acked", self.acked)
+            .set("dead", self.dead)
+            .set(
+                "classes",
+                Json::Arr(self.classes.iter().map(|c| Json::from(c.as_str())).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardStats> {
+        Ok(ShardStats {
+            shard: j.str_of("shard")?.to_string(),
+            queued: j.usize_of("queued")?,
+            in_flight: j.usize_of("in_flight").unwrap_or(0),
+            acked: j.usize_of("acked").unwrap_or(0),
+            dead: j.usize_of("dead").unwrap_or(0),
+            // Lenient: a peer that doesn't enumerate classes still merges.
+            classes: j
+                .get("classes")
+                .and_then(|c| c.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|s| s.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+}
+
 /// Queue gauge snapshot (the paper samples `#queued` periodically).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct QueueStats {
@@ -230,6 +285,9 @@ pub struct QueueStats {
     /// for wire encoding and decision-log reproducibility).  Backends
     /// that cannot compute it cheaply may leave it empty.
     pub classes: Vec<ClassStats>,
+    /// Per-shard breakdown — empty for single-shard backends (the wire
+    /// omits the section entirely, and pre-shard peers parse unchanged).
+    pub shards: Vec<ShardStats>,
 }
 
 /// The shared invocation queue interface (in-memory and TCP deployments).

@@ -8,8 +8,15 @@
 //! identical delivery order, warm-hit flags, attempt counts, queue
 //! order, and stats at every step — the indexed rebuild must be
 //! observationally indistinguishable.
+//!
+//! The sharded engine ([`ShardedQueue`], DESIGN.md §13) deliberately
+//! relaxes *cross-class* global order (classes on different shards
+//! drain independently), so its contract is **per-class** equivalence:
+//! under class-restricted takes it must replay byte-identical delivery
+//! (ids, warm hits, attempt counts), totals, and per-class gauges
+//! against the single-shard engine — with the QoS lanes on *and* off.
 
-use super::{InvocationQueue, MemQueue, QueueConfig, TakeFilter};
+use super::{InvocationQueue, MemQueue, QueueConfig, ShardedQueue, TakeFilter};
 use crate::events::{EventSpec, Invocation, Priority};
 use crate::prop;
 use crate::util::clock::TestClock;
@@ -237,6 +244,232 @@ fn property_indexed_queue_equals_scan_model() {
                 }
                 if indexed.queued_runtimes() != model.queued_runtimes() {
                     return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Single-class filter over `r{a%4}`: the restriction under which the
+/// sharded engine promises byte-identical replay (a class lives wholly
+/// on one shard, so cross-shard reordering cannot be observed).  `b`
+/// toggles the warm set, `c` mixes in warm-only probes and QoS pins.
+fn class_filter(a: u64, b: u64, c: u64) -> (String, TakeFilter) {
+    let rt = format!("r{}", a % 4);
+    let warm: HashSet<String> = if b % 2 == 0 {
+        HashSet::from([rt.clone()])
+    } else {
+        HashSet::new()
+    };
+    let priority = match c % 7 {
+        0 => Some(Priority::Interactive),
+        1 => Some(Priority::Batch),
+        _ => None,
+    };
+    let filter = TakeFilter {
+        runtimes: HashSet::from([rt.clone()]),
+        warm,
+        warm_only: c % 5 == 0,
+        priority,
+        ..TakeFilter::default()
+    };
+    (rt, filter)
+}
+
+fn inv_pri(id: &str, runtime: &str, b: u64) -> Invocation {
+    let priority = if b % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+    Invocation::new(
+        id,
+        EventSpec::new(runtime, "datasets/d").with_priority(priority),
+        SimTime(0),
+    )
+}
+
+/// The tentpole acceptance property: a 4-shard [`ShardedQueue`] against
+/// the single-shard engine, QoS lanes ON (default burst), mixed
+/// priorities, class-restricted takes, acks, releases, and expiry reaps
+/// — identical per-class delivery (id, warm hit, attempt), identical
+/// totals, identical per-class gauges, identical dead letters, at every
+/// step.  PR 6's burst:1 interleave is part of the replay: the per-lane
+/// streak state must evolve identically inside whichever shard owns the
+/// class.
+#[test]
+fn property_sharded_queue_equals_single_shard_per_class() {
+    prop::check(
+        "sharded-equals-single-shard-per-class",
+        40,
+        |rng| {
+            (0..rng.range(5, 80))
+                .map(|_| (rng.below(6), rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .collect::<Vec<(u64, u64, u64, u64)>>()
+        },
+        |ops| {
+            let clock = TestClock::new();
+            let cfg = QueueConfig {
+                visibility: Duration::from_secs(1),
+                max_attempts: 2,
+                ..QueueConfig::default()
+            };
+            let sharded = ShardedQueue::with_config(clock.clone(), cfg.clone(), 4);
+            let single = MemQueue::with_config(clock.clone(), cfg.clone());
+            let mut outstanding: Vec<String> = Vec::new();
+            for (step, &(kind, a, b, c)) in ops.iter().enumerate() {
+                match kind {
+                    // publish (twice as likely), mixed QoS priorities
+                    0 | 1 => {
+                        let rt = format!("r{}", a % 4);
+                        let id = format!("p{step}");
+                        sharded.publish(inv_pri(&id, &rt, b)).unwrap();
+                        single.publish(inv_pri(&id, &rt, b)).unwrap();
+                    }
+                    // class-restricted take under a random filter
+                    2 => {
+                        let (_, f) = class_filter(a, b, c);
+                        let got = sharded.take(&f).unwrap();
+                        let want = single.take(&f).unwrap();
+                        match (&got, &want) {
+                            (None, None) => {}
+                            (Some(g), Some(w)) => {
+                                if g.invocation.id != w.invocation.id
+                                    || g.warm_hit != w.warm_hit
+                                    || g.attempt != w.attempt
+                                {
+                                    return false;
+                                }
+                                outstanding.push(g.invocation.id.clone());
+                            }
+                            _ => return false,
+                        }
+                    }
+                    // ack a previously-delivered id
+                    3 => {
+                        if outstanding.is_empty() {
+                            continue;
+                        }
+                        let id = outstanding.remove(a as usize % outstanding.len());
+                        if sharded.ack(&id).is_ok() != single.ack(&id).is_ok() {
+                            return false;
+                        }
+                    }
+                    // release a previously-delivered id
+                    4 => {
+                        if outstanding.is_empty() {
+                            continue;
+                        }
+                        let id = outstanding.remove(a as usize % outstanding.len());
+                        if sharded.release(&id).is_ok() != single.release(&id).is_ok() {
+                            return false;
+                        }
+                    }
+                    // advance time and reap: same expiries on both sides
+                    _ => {
+                        clock.advance(Duration::from_millis(a % 1500));
+                        if sharded.reap_expired().unwrap() != single.reap_expired().unwrap() {
+                            return false;
+                        }
+                    }
+                }
+                // After every op: identical totals and identical
+                // per-class gauges (depths, QoS splits, front ages).
+                let s = sharded.stats().unwrap();
+                let m = single.stats().unwrap();
+                if (s.queued, s.in_flight, s.acked, s.dead)
+                    != (m.queued, m.in_flight, m.acked, m.dead)
+                {
+                    return false;
+                }
+                if s.classes != m.classes {
+                    return false;
+                }
+                // The shard sections must account for the totals exactly.
+                if s.shards.len() != 4
+                    || s.shards.iter().map(|x| x.queued).sum::<usize>() != m.queued
+                    || s.shards.iter().map(|x| x.in_flight).sum::<usize>() != m.in_flight
+                {
+                    return false;
+                }
+                // Dead letters agree as a set (cross-shard concat order
+                // vs global order is the one allowed difference).
+                let mut d1: Vec<String> =
+                    sharded.dead_letters().into_iter().map(|i| i.id).collect();
+                let mut d2: Vec<String> =
+                    single.dead_letters().into_iter().map(|i| i.id).collect();
+                d1.sort();
+                d2.sort();
+                if d1 != d2 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Lanes OFF (`interactive_burst == 0`): per class, the sharded engine
+/// must match the priority-unaware *scan model* directly — composing
+/// the shard split with the pre-QoS, pre-index semantics end to end.
+#[test]
+fn property_sharded_lanes_off_equals_scan_model_per_class() {
+    prop::check(
+        "sharded-lanes-off-equals-scan-model-per-class",
+        40,
+        |rng| {
+            (0..rng.range(5, 60))
+                .map(|_| (rng.below(4), rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .collect::<Vec<(u64, u64, u64, u64)>>()
+        },
+        |ops| {
+            let clock = TestClock::new();
+            let cfg = QueueConfig { interactive_burst: 0, ..QueueConfig::default() };
+            let sharded = ShardedQueue::with_config(clock.clone(), cfg.clone(), 4);
+            let mut model = ScanModel::new(cfg.visibility, cfg.max_attempts);
+            for (step, &(kind, a, b, c)) in ops.iter().enumerate() {
+                match kind {
+                    0 | 1 => {
+                        let rt = format!("r{}", a % 4);
+                        let id = format!("p{step}");
+                        sharded.publish(inv_pri(&id, &rt, b)).unwrap();
+                        model.publish(inv_pri(&id, &rt, b));
+                    }
+                    _ => {
+                        // QoS pins would be invisible to the model; the
+                        // lanes-off contract is about unpinned takes.
+                        // (5 keeps warm-only probes in play, 2 is a
+                        // plain cold-capable take — neither pins.)
+                        let (_, f) = class_filter(a, b, if c % 2 == 0 { 2 } else { 5 });
+                        let got = sharded.take(&f).unwrap();
+                        let want = model.take(&f, clock.now());
+                        match (&got, &want) {
+                            (None, None) => {}
+                            (Some(lease), Some((id, warm, attempt))) => {
+                                if &lease.invocation.id != id
+                                    || lease.warm_hit != *warm
+                                    || lease.attempt != *attempt
+                                {
+                                    return false;
+                                }
+                            }
+                            _ => return false,
+                        }
+                    }
+                }
+                let s = sharded.stats().unwrap();
+                let (mq, mf, ma, md) = model.stats();
+                if (s.queued, s.in_flight, s.acked, s.dead) != (mq, mf, ma, md) {
+                    return false;
+                }
+                // Per-class depth projection of the model's global order
+                // must match the sharded per-class gauges.
+                for cs in &s.classes {
+                    let want = model
+                        .queued_runtimes()
+                        .iter()
+                        .filter(|r| **r == cs.runtime)
+                        .count();
+                    if cs.queued != want {
+                        return false;
+                    }
                 }
             }
             true

@@ -119,15 +119,20 @@ impl QueueServer {
                 let s = backend.stats()?;
                 let classes: Vec<Json> =
                     s.classes.iter().map(|c| c.to_json()).collect();
-                Ok((
-                    Json::obj()
-                        .set("queued", s.queued)
-                        .set("in_flight", s.in_flight)
-                        .set("acked", s.acked)
-                        .set("dead", s.dead)
-                        .set("classes", Json::Arr(classes)),
-                    None,
-                ))
+                let mut out = Json::obj()
+                    .set("queued", s.queued)
+                    .set("in_flight", s.in_flight)
+                    .set("acked", s.acked)
+                    .set("dead", s.dead)
+                    .set("classes", Json::Arr(classes));
+                // Omitted entirely for single-shard backends: pre-shard
+                // peers see the exact wire shape they always did.
+                if !s.shards.is_empty() {
+                    let shards: Vec<Json> =
+                        s.shards.iter().map(|x| x.to_json()).collect();
+                    out = out.set("shards", Json::Arr(shards));
+                }
+                Ok((out, None))
             }
             other => Err(anyhow!("unknown queue method {other}")),
         });
@@ -271,12 +276,21 @@ impl InvocationQueue for QueueClient {
                 .collect(),
             None => Vec::new(),
         };
+        // `shards` is equally lenient: absent = single-shard peer.
+        let shards = match out.get("shards").and_then(|j| j.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .filter_map(|j| super::ShardStats::from_json(j).ok())
+                .collect(),
+            None => Vec::new(),
+        };
         Ok(QueueStats {
             queued: out.usize_of("queued")?,
             in_flight: out.usize_of("in_flight")?,
             acked: out.usize_of("acked")?,
             dead: out.usize_of("dead")?,
             classes,
+            shards,
         })
     }
 }
@@ -315,6 +329,54 @@ mod tests {
         );
         q.ack("1").unwrap();
         assert_eq!(q.stats().unwrap().acked, 1);
+    }
+
+    #[test]
+    fn shard_sections_survive_the_wire_and_default_to_empty() {
+        // A sharded backend behind the same RPC server: the per-shard
+        // breakdown rides the stats payload.
+        let backend = crate::queue::ShardedQueue::new(TestClock::new(), 4);
+        let server = QueueServer::serve("127.0.0.1:0", backend).unwrap();
+        let q = QueueClient::connect(server.addr()).unwrap();
+        q.publish(inv("1", "tinyyolo")).unwrap();
+        q.publish(inv("2", "bert")).unwrap();
+        let s = q.stats().unwrap();
+        assert_eq!(s.queued, 2);
+        assert_eq!(s.shards.len(), 4, "{:?}", s.shards);
+        assert_eq!(s.shards.iter().map(|x| x.queued).sum::<usize>(), 2);
+        assert!(s.shards.iter().any(|x| x.classes.contains(&"bert".into())));
+
+        // A single-shard backend omits the section; pre-shard clients
+        // (and this one) parse the payload unchanged.
+        let (_s2, q2) = setup();
+        q2.publish(inv("1", "tinyyolo")).unwrap();
+        let s2 = q2.stats().unwrap();
+        assert_eq!(s2.queued, 1);
+        assert!(s2.shards.is_empty(), "absent shards section = single-shard");
+    }
+
+    #[test]
+    fn shard_stats_json_is_lenient_to_unknown_and_missing_fields() {
+        let full = crate::queue::ShardStats {
+            shard: "shard-3".into(),
+            queued: 5,
+            in_flight: 2,
+            acked: 9,
+            dead: 1,
+            classes: vec!["bert".into(), "tinyyolo".into()],
+        };
+        let back = crate::queue::ShardStats::from_json(&full.to_json()).unwrap();
+        assert_eq!(back, full);
+        // A newer peer's extra keys are ignored; optional gauges default.
+        let sparse = Json::obj()
+            .set("shard", "shard-0")
+            .set("queued", 3usize)
+            .set("zzz_future_field", "ignored");
+        let back = crate::queue::ShardStats::from_json(&sparse).unwrap();
+        assert_eq!(back.shard, "shard-0");
+        assert_eq!(back.queued, 3);
+        assert_eq!((back.in_flight, back.acked, back.dead), (0, 0, 0));
+        assert!(back.classes.is_empty());
     }
 
     #[test]

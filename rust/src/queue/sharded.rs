@@ -1,0 +1,750 @@
+//! M-way sharded invocation queue: independent [`MemQueue`] shards with
+//! rendezvous-hashed class lanes (DESIGN.md §13).
+//!
+//! One `MemQueue` mutex serializes every publish/take/ack in the fleet —
+//! fine for one node manager, a ceiling for many.  [`ShardedQueue`]
+//! splits the queue into M fully independent shards (each with its own
+//! lock, condvar generation counter, and lease-reap heap) and routes
+//! every runtime class to exactly one shard via the rendezvous-hashed
+//! [`Membership`] registry.  Because a class lives wholly in one shard,
+//! the invariants that matter ride along unchanged:
+//!
+//! * **per-class FIFO** and the QoS `burst:1` interleave are whatever the
+//!   owning `MemQueue` shard does — byte-identical to the single-shard
+//!   engine (property-tested against the PR 2 scan model in
+//!   `queue::reference`);
+//! * **warm-first** holds globally: a take's warm classes name their
+//!   shards, and the warm pass probes exactly those shards (warm-only)
+//!   before any cold work is considered;
+//! * cross-*class* global arrival order is **not** preserved across
+//!   shards (each shard numbers its own sequence space) — the same
+//!   relaxation every partitioned queue makes.
+//!
+//! Shard selection is lock-free: the membership set is immutable after
+//! construction, so `class → shard` is a pure hash with no shared state
+//! touched until the single owning shard's lock.
+//!
+//! **Cross-shard long-poll.**  A `take_timeout` waiter must not miss work
+//! landing on *any* shard while it parks.  The queue keeps one shared
+//! generation counter: every work arrival (publish, release, reap
+//! requeue) bumps it *after* the shard insert and notifies.  A waiter
+//! snapshots the generation **before** probing, probes all candidate
+//! shards, and only parks while the generation is unchanged — so a
+//! publish that lands between probe and park flips the generation first
+//! and the wait loop falls through to re-probe.  No registration can be
+//! lost (proof sketch in DESIGN.md §13).
+
+use super::{InvocationQueue, Lease, MemQueue, QueueConfig, QueueStats, ShardStats, TakeFilter};
+use crate::coordinator::membership::Membership;
+use crate::events::Invocation;
+use crate::util::Clock;
+use anyhow::{bail, Result};
+use std::collections::{BTreeSet, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// An [`InvocationQueue`] over M independent [`MemQueue`] shards.
+pub struct ShardedQueue {
+    shards: Vec<Arc<MemQueue>>,
+    /// Shard membership (`shard-0 .. shard-{M-1}`), fixed at construction;
+    /// `class → shard` routing is a pure function of it.
+    membership: Membership,
+    /// Work-arrival generation across *all* shards — the cross-shard
+    /// long-poll wakeup channel (see module docs).
+    generation: Mutex<u64>,
+    available: Condvar,
+}
+
+impl ShardedQueue {
+    /// `n` shards with default [`QueueConfig`] (`n = 0` is clamped to 1).
+    pub fn new(clock: Arc<dyn Clock>, n: usize) -> Arc<ShardedQueue> {
+        ShardedQueue::with_config(clock, QueueConfig::default(), n)
+    }
+
+    /// `n` shards sharing one [`QueueConfig`] (visibility, max attempts,
+    /// and the QoS burst rule apply identically within every shard).
+    pub fn with_config(
+        clock: Arc<dyn Clock>,
+        config: QueueConfig,
+        n: usize,
+    ) -> Arc<ShardedQueue> {
+        let membership = Membership::shards(n);
+        let shards = (0..membership.len())
+            .map(|_| MemQueue::with_config(clock.clone(), config.clone()))
+            .collect();
+        Arc::new(ShardedQueue {
+            shards,
+            membership,
+            generation: Mutex::new(0),
+            available: Condvar::new(),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard member names, aligned with shard indices.
+    pub fn shard_names(&self) -> &[String] {
+        self.membership.members()
+    }
+
+    /// The shard owning `runtime` — lock-free (pure rendezvous hash over
+    /// the immutable membership).
+    pub fn shard_for(&self, runtime: &str) -> usize {
+        self.membership.index_of(runtime).unwrap_or(0)
+    }
+
+    /// Queued runtime classes across all shards (shard-major order,
+    /// seq-ordered within each shard) — diagnostics and the reference
+    /// rig's per-class projections.
+    pub fn queued_runtimes(&self) -> Vec<String> {
+        self.shards.iter().flat_map(|s| s.queued_runtimes()).collect()
+    }
+
+    /// Dead-lettered invocations across all shards.
+    pub fn dead_letters(&self) -> Vec<Invocation> {
+        self.shards.iter().flat_map(|s| s.dead_letters()).collect()
+    }
+
+    /// Per-shard gauge sections (the `shards` stats payload).
+    fn gather_shard_stats(&self) -> Result<Vec<ShardStats>> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        for (i, shard) in self.shards.iter().enumerate() {
+            let s = shard.stats()?;
+            let classes: BTreeSet<String> = shard.queued_runtimes().into_iter().collect();
+            out.push(ShardStats {
+                shard: self.membership.members()[i].clone(),
+                queued: s.queued,
+                in_flight: s.in_flight,
+                acked: s.acked,
+                dead: s.dead,
+                classes: classes.into_iter().collect(),
+            });
+        }
+        Ok(out)
+    }
+
+    /// Work arrived somewhere: flip the shared generation and wake every
+    /// parked long-poll.  Always *after* the owning shard's insert, so a
+    /// woken waiter's re-probe finds the work.
+    fn bump(&self) {
+        *self.generation.lock().expect("poisoned") += 1;
+        self.available.notify_all();
+    }
+
+    /// Sorted, deduplicated shard indices owning any class in `classes`.
+    fn shards_of(&self, classes: &HashSet<String>) -> Vec<usize> {
+        let set: BTreeSet<usize> =
+            classes.iter().map(|c| self.shard_for(c)).collect();
+        set.into_iter().collect()
+    }
+
+    /// Shards a cold take under `filter` must consider: the owners of the
+    /// named classes, or every shard for a match-any filter.
+    fn cold_shards(&self, filter: &TakeFilter) -> Vec<usize> {
+        if filter.runtimes.is_empty() {
+            (0..self.shards.len()).collect()
+        } else {
+            self.shards_of(&filter.runtimes)
+        }
+    }
+}
+
+impl InvocationQueue for ShardedQueue {
+    fn publish(&self, inv: Invocation) -> Result<()> {
+        let shard = self.shard_for(&inv.spec.runtime);
+        self.shards[shard].publish(inv)?;
+        self.bump();
+        Ok(())
+    }
+
+    /// Split by owning shard, one `publish_batch` per shard (per-class
+    /// order within the batch is preserved — a class maps to one shard
+    /// and the per-shard sub-batches keep batch order).  In-batch
+    /// duplicate ids are rejected before anything publishes; a duplicate
+    /// against an *already live* id fails that shard's sub-batch
+    /// all-or-nothing after earlier shards have published (ids are
+    /// coordinator-issued and globally unique in every real deployment).
+    fn publish_batch(&self, invs: Vec<Invocation>) -> Result<()> {
+        let mut fresh: HashSet<String> = HashSet::with_capacity(invs.len());
+        for inv in &invs {
+            if !fresh.insert(inv.id.clone()) {
+                bail!("duplicate invocation id {} in batch", inv.id);
+            }
+        }
+        let mut per_shard: Vec<Vec<Invocation>> = vec![Vec::new(); self.shards.len()];
+        for inv in invs {
+            per_shard[self.shard_for(&inv.spec.runtime)].push(inv);
+        }
+        let mut published_any = false;
+        for (shard, batch) in per_shard.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            if let Err(e) = self.shards[shard].publish_batch(batch) {
+                if published_any {
+                    self.bump();
+                }
+                return Err(e);
+            }
+            published_any = true;
+        }
+        if published_any {
+            self.bump();
+        }
+        Ok(())
+    }
+
+    fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>> {
+        // Warm pass: warm classes name their shards; probing those
+        // shards warm-only preserves global warm-over-cold precedence.
+        if !filter.warm.is_empty() {
+            let warm_probe = TakeFilter { warm_only: true, ..filter.clone() };
+            for shard in self.shards_of(&filter.warm) {
+                if let Some(lease) = self.shards[shard].take(&warm_probe)? {
+                    return Ok(Some(lease));
+                }
+            }
+        }
+        if filter.warm_only {
+            return Ok(None);
+        }
+        for shard in self.cold_shards(filter) {
+            if let Some(lease) = self.shards[shard].take(filter)? {
+                return Ok(Some(lease));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Equivalent to `max` consecutive takes (warm shards drain before
+    /// cold ones, shards in index order), but pays O(shards) lock
+    /// acquisitions instead of O(leases).
+    fn take_batch(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        let mut out = Vec::new();
+        if !filter.warm.is_empty() {
+            let warm_probe = TakeFilter { warm_only: true, ..filter.clone() };
+            for shard in self.shards_of(&filter.warm) {
+                if out.len() >= max {
+                    return Ok(out);
+                }
+                out.extend(self.shards[shard].take_batch(&warm_probe, max - out.len())?);
+            }
+        }
+        if filter.warm_only {
+            return Ok(out);
+        }
+        for shard in self.cold_shards(filter) {
+            if out.len() >= max {
+                break;
+            }
+            out.extend(self.shards[shard].take_batch(filter, max - out.len())?);
+        }
+        Ok(out)
+    }
+
+    /// Lock-free shard selection, then one single-shard grouped drain
+    /// under that shard's lock ([`MemQueue::take_batch_grouped`] picks
+    /// the lane and drains it in one hold).
+    fn take_batch_grouped(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
+        if max == 0 {
+            return Ok(Vec::new());
+        }
+        if !filter.warm.is_empty() {
+            let warm_probe = TakeFilter { warm_only: true, ..filter.clone() };
+            for shard in self.shards_of(&filter.warm) {
+                let chunk = self.shards[shard].take_batch_grouped(&warm_probe, max)?;
+                if !chunk.is_empty() {
+                    return Ok(chunk);
+                }
+            }
+        }
+        if filter.warm_only {
+            return Ok(Vec::new());
+        }
+        for shard in self.cold_shards(filter) {
+            let chunk = self.shards[shard].take_batch_grouped(filter, max)?;
+            if !chunk.is_empty() {
+                return Ok(chunk);
+            }
+        }
+        Ok(Vec::new())
+    }
+
+    /// An ack carries only the invocation id (class unknown), so it is
+    /// offered to each shard; exactly one holds the lease.  O(M) lock
+    /// acquisitions with M small and each miss O(1).
+    fn ack(&self, invocation_id: &str) -> Result<()> {
+        let mut last = None;
+        for shard in &self.shards {
+            match shard.ack(invocation_id) {
+                Ok(()) => return Ok(()),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            anyhow::anyhow!("ack for unknown or expired lease: {invocation_id}")
+        }))
+    }
+
+    fn release(&self, invocation_id: &str) -> Result<()> {
+        let mut last = None;
+        for shard in &self.shards {
+            match shard.release(invocation_id) {
+                Ok(()) => {
+                    self.bump();
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| anyhow::anyhow!("release for unknown lease: {invocation_id}")))
+    }
+
+    fn reap_expired(&self) -> Result<usize> {
+        let mut n = 0;
+        for shard in &self.shards {
+            n += shard.reap_expired()?;
+        }
+        if n > 0 {
+            self.bump();
+        }
+        Ok(n)
+    }
+
+    /// Merged gauges: counters sum, per-class entries concatenate (class
+    /// sets are disjoint across shards) and re-sort by runtime, and the
+    /// per-shard breakdown rides in [`QueueStats::shards`].
+    fn stats(&self) -> Result<QueueStats> {
+        let mut merged = QueueStats::default();
+        for shard in &self.shards {
+            let s = shard.stats()?;
+            merged.queued += s.queued;
+            merged.in_flight += s.in_flight;
+            merged.acked += s.acked;
+            merged.dead += s.dead;
+            merged.classes.extend(s.classes);
+        }
+        merged.classes.sort_by(|a, b| a.runtime.cmp(&b.runtime));
+        merged.shards = self.gather_shard_stats()?;
+        Ok(merged)
+    }
+
+    /// Cross-shard long poll that cannot lose a registration: snapshot
+    /// the shared generation **before** probing, probe every candidate
+    /// shard, and park only while the generation is unchanged.  Work
+    /// landing on any shard after the snapshot bumps the generation, so
+    /// either the probe saw it or the wait falls through immediately.
+    fn take_timeout(
+        &self,
+        filter: &TakeFilter,
+        wall_timeout: Duration,
+    ) -> Result<Option<Lease>> {
+        let deadline = Instant::now() + wall_timeout;
+        loop {
+            let gen_before = *self.generation.lock().expect("poisoned");
+            if let Some(lease) = self.take(filter)? {
+                return Ok(Some(lease));
+            }
+            let mut gen = self.generation.lock().expect("poisoned");
+            while *gen == gen_before {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Ok(None);
+                }
+                let (guard, _) = self
+                    .available
+                    .wait_timeout(gen, left)
+                    .expect("poisoned");
+                gen = guard;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{EventSpec, Priority};
+    use crate::util::clock::TestClock;
+    use crate::util::SimTime;
+
+    fn inv(id: &str, runtime: &str) -> Invocation {
+        Invocation::new(id, EventSpec::new(runtime, "datasets/d"), SimTime(0))
+    }
+
+    fn inv_pri(id: &str, runtime: &str, p: Priority) -> Invocation {
+        Invocation::new(
+            id,
+            EventSpec::new(runtime, "datasets/d").with_priority(p),
+            SimTime(0),
+        )
+    }
+
+    #[test]
+    fn classes_partition_and_fifo_within_class() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        let classes = ["alpha", "beta", "gamma", "delta", "epsilon"];
+        for i in 0..20 {
+            let class = classes[i % classes.len()];
+            q.publish(inv(&format!("{class}-{i}"), class)).unwrap();
+        }
+        // Every class routes to exactly one shard, and per-class delivery
+        // is FIFO no matter which shard owns it.
+        for class in classes {
+            let f = TakeFilter::supporting(vec![class.to_string()]);
+            let mut prev = None;
+            while let Some(lease) = q.take(&f).unwrap() {
+                assert_eq!(lease.invocation.spec.runtime, class);
+                let n: usize = lease
+                    .invocation
+                    .id
+                    .rsplit('-')
+                    .next()
+                    .unwrap()
+                    .parse()
+                    .unwrap();
+                if let Some(p) = prev {
+                    assert!(n > p, "per-class FIFO broken: {n} after {p}");
+                }
+                prev = Some(n);
+                q.ack(&lease.invocation.id).unwrap();
+            }
+        }
+        let s = q.stats().unwrap();
+        assert_eq!((s.queued, s.in_flight, s.acked), (0, 0, 20));
+    }
+
+    #[test]
+    fn match_any_take_drains_every_shard() {
+        let q = ShardedQueue::new(TestClock::new(), 8);
+        for i in 0..40 {
+            q.publish(inv(&format!("i{i}"), &format!("class-{}", i % 10))).unwrap();
+        }
+        let mut got = HashSet::new();
+        while let Some(lease) = q.take(&TakeFilter::default()).unwrap() {
+            got.insert(lease.invocation.id.clone());
+            q.ack(&lease.invocation.id).unwrap();
+        }
+        assert_eq!(got.len(), 40, "match-any must reach every shard");
+    }
+
+    #[test]
+    fn warm_preference_wins_across_shards() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        // Find two classes owned by different shards.
+        let (mut a, mut b) = ("c0".to_string(), String::new());
+        for i in 1..64 {
+            let c = format!("c{i}");
+            if q.shard_for(&c) != q.shard_for(&a) {
+                b = c;
+                break;
+            }
+        }
+        assert!(!b.is_empty(), "no second shard found");
+        q.publish(inv("cold-first", &a)).unwrap();
+        q.publish(inv("warm-later", &b)).unwrap();
+        let f = TakeFilter::supporting(vec![a.clone(), b.clone()])
+            .with_warm(vec![b.clone()]);
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "warm-later", "warm beats older cold work");
+        assert!(lease.warm_hit);
+        // Warm drained: the cold invocation is next.
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "cold-first");
+        assert!(!lease.warm_hit);
+    }
+
+    #[test]
+    fn warm_only_filter_never_returns_cold() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        q.publish(inv("1", "a")).unwrap();
+        assert!(q.take(&TakeFilter::warm_reuse("a")).unwrap().is_none());
+        assert!(q.take(&TakeFilter::warm_reuse("b")).unwrap().is_none());
+    }
+
+    #[test]
+    fn grouped_take_drains_one_class_from_one_shard() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        for i in 0..3 {
+            q.publish(inv(&format!("a{i}"), "aaa")).unwrap();
+        }
+        for i in 0..2 {
+            q.publish(inv(&format!("b{i}"), "bbb")).unwrap();
+        }
+        let chunk = q.take_batch_grouped(&TakeFilter::default(), 10).unwrap();
+        assert!(!chunk.is_empty());
+        let class = chunk[0].invocation.spec.runtime.clone();
+        assert!(
+            chunk.iter().all(|l| l.invocation.spec.runtime == class),
+            "grouped chunk must be single-class"
+        );
+        let counts = if class == "aaa" { 3 } else { 2 };
+        assert_eq!(chunk.len(), counts, "whole lane drained in one call");
+    }
+
+    #[test]
+    fn take_batch_equals_consecutive_takes() {
+        let mk = || {
+            let q = ShardedQueue::new(TestClock::new(), 4);
+            for i in 0..30 {
+                q.publish(inv(&format!("i{i}"), &format!("class-{}", i % 6))).unwrap();
+            }
+            q
+        };
+        let f = TakeFilter::supporting((0..6).map(|c| format!("class-{c}")))
+            .with_warm(vec!["class-3".into()]);
+        let batched: Vec<String> = mk()
+            .take_batch(&f, 30)
+            .unwrap()
+            .into_iter()
+            .map(|l| l.invocation.id)
+            .collect();
+        let q = mk();
+        let mut looped = Vec::new();
+        while let Some(lease) = q.take(&f).unwrap() {
+            looped.push(lease.invocation.id);
+        }
+        assert_eq!(batched, looped);
+    }
+
+    #[test]
+    fn publish_batch_splits_by_shard_preserving_class_order() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        let invs: Vec<Invocation> = (0..12)
+            .map(|i| inv(&format!("i{i}"), &format!("class-{}", i % 3)))
+            .collect();
+        q.publish_batch(invs).unwrap();
+        assert_eq!(q.stats().unwrap().queued, 12);
+        for class in ["class-0", "class-1", "class-2"] {
+            let f = TakeFilter::supporting(vec![class.to_string()]);
+            let mut prev = None;
+            while let Some(lease) = q.take(&f).unwrap() {
+                let n: usize =
+                    lease.invocation.id.strip_prefix('i').unwrap().parse().unwrap();
+                if let Some(p) = prev {
+                    assert!(n > p, "batch order within class broken");
+                }
+                prev = Some(n);
+            }
+        }
+    }
+
+    #[test]
+    fn publish_batch_rejects_in_batch_duplicates_before_any_publish() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        let err = q
+            .publish_batch(vec![inv("dup", "a"), inv("x", "b"), inv("dup", "c")])
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate invocation id dup"), "{err:#}");
+        assert_eq!(q.stats().unwrap().queued, 0, "nothing partially published");
+    }
+
+    #[test]
+    fn ack_and_release_route_to_the_owning_shard() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        q.publish(inv("1", "aaa")).unwrap();
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(lease.attempt, 1);
+        q.release("1").unwrap();
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        assert_eq!(lease.attempt, 1, "release does not burn an attempt");
+        q.ack("1").unwrap();
+        assert!(q.ack("1").is_err(), "double ack");
+        assert!(q.ack("ghost").is_err());
+        assert!(q.release("ghost").is_err());
+        assert_eq!(q.stats().unwrap().acked, 1);
+    }
+
+    #[test]
+    fn reap_sums_across_shards_and_dead_letters_merge() {
+        let clock = TestClock::new();
+        let q = ShardedQueue::with_config(
+            clock.clone(),
+            QueueConfig {
+                visibility: Duration::from_millis(100),
+                max_attempts: 1,
+                ..QueueConfig::default()
+            },
+            4,
+        );
+        for i in 0..6 {
+            q.publish(inv(&format!("i{i}"), &format!("class-{i}"))).unwrap();
+        }
+        while q.take(&TakeFilter::default()).unwrap().is_some() {}
+        clock.advance(Duration::from_millis(200));
+        assert_eq!(q.reap_expired().unwrap(), 6, "expiries summed across shards");
+        assert_eq!(q.dead_letters().len(), 6, "max_attempts=1 dead-letters all");
+        assert_eq!(q.stats().unwrap().dead, 6);
+    }
+
+    #[test]
+    fn merged_stats_carry_per_shard_sections_that_sum_to_totals() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        for i in 0..24 {
+            q.publish(inv(&format!("i{i}"), &format!("class-{}", i % 8))).unwrap();
+        }
+        let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+        let s = q.stats().unwrap();
+        assert_eq!(s.queued, 23);
+        assert_eq!(s.in_flight, 1);
+        assert_eq!(s.shards.len(), 4);
+        assert_eq!(s.shards.iter().map(|x| x.queued).sum::<usize>(), 23);
+        assert_eq!(s.shards.iter().map(|x| x.in_flight).sum::<usize>(), 1);
+        // Shard names align with the membership registry, and every
+        // queued class appears in exactly one shard's class list.
+        let names: Vec<&str> = s.shards.iter().map(|x| x.shard.as_str()).collect();
+        assert_eq!(names, vec!["shard-0", "shard-1", "shard-2", "shard-3"]);
+        let mut seen = HashSet::new();
+        for shard in &s.shards {
+            for class in &shard.classes {
+                assert!(seen.insert(class.clone()), "{class} in two shards");
+            }
+        }
+        // Classes merged and sorted for the fleet view.
+        let merged: Vec<&str> = s.classes.iter().map(|c| c.runtime.as_str()).collect();
+        let mut sorted = merged.clone();
+        sorted.sort();
+        assert_eq!(merged, sorted);
+        assert_eq!(s.classes.iter().map(|c| c.queued).sum::<usize>(), 23);
+        drop(lease);
+    }
+
+    #[test]
+    fn qos_burst_rule_holds_within_every_shard() {
+        // burst=1: strict interleave interactive/batch within a class.
+        let q = ShardedQueue::with_config(
+            TestClock::new(),
+            QueueConfig { interactive_burst: 1, ..QueueConfig::default() },
+            4,
+        );
+        for i in 0..3 {
+            q.publish(inv_pri(&format!("b{i}"), "cls", Priority::Batch)).unwrap();
+        }
+        for i in 0..3 {
+            q.publish(inv_pri(&format!("i{i}"), "cls", Priority::Interactive))
+                .unwrap();
+        }
+        let f = TakeFilter::supporting(vec!["cls".into()]);
+        let order: Vec<String> = std::iter::from_fn(|| {
+            q.take(&f).unwrap().map(|l| l.invocation.id)
+        })
+        .collect();
+        assert_eq!(order, vec!["i0", "b0", "i1", "b1", "i2", "b2"]);
+    }
+
+    #[test]
+    fn take_timeout_wakes_when_work_lands_on_another_shard() {
+        // The lost-wakeup regression: the waiter's filter names a class
+        // on one shard; a publish to a *different* class (and shard)
+        // first must wake + re-park it without losing the registration,
+        // and the matching publish must then deliver promptly.
+        let q = ShardedQueue::new(TestClock::new(), 8);
+        let (want, mut other) = ("w0".to_string(), String::new());
+        for i in 1..64 {
+            let c = format!("w{i}");
+            if q.shard_for(&c) != q.shard_for(&want) {
+                other = c;
+                break;
+            }
+        }
+        assert!(!other.is_empty());
+        let q2 = q.clone();
+        let want2 = want.clone();
+        let t0 = Instant::now();
+        let publisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            q2.publish(inv("decoy", &other)).unwrap(); // wrong shard: re-park
+            std::thread::sleep(Duration::from_millis(60));
+            q2.publish(inv("target", &want2)).unwrap();
+        });
+        let lease = q
+            .take_timeout(
+                &TakeFilter::supporting(vec![want.clone()]),
+                Duration::from_secs(10),
+            )
+            .unwrap()
+            .expect("woken by the cross-shard publish, not the timeout");
+        assert_eq!(lease.invocation.id, "target");
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(100), "{waited:?}");
+        assert!(waited < Duration::from_secs(5), "{waited:?}");
+        publisher.join().unwrap();
+    }
+
+    #[test]
+    fn take_timeout_match_any_wakes_from_any_shard() {
+        let q = ShardedQueue::new(TestClock::new(), 8);
+        let q2 = q.clone();
+        let publisher = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(80));
+            q2.publish(inv("late", "some-class")).unwrap();
+        });
+        let lease = q
+            .take_timeout(&TakeFilter::default(), Duration::from_secs(10))
+            .unwrap()
+            .expect("match-any waiter must see work on any shard");
+        assert_eq!(lease.invocation.id, "late");
+        publisher.join().unwrap();
+    }
+
+    #[test]
+    fn take_timeout_times_out_and_zero_is_a_probe() {
+        let q = ShardedQueue::new(TestClock::new(), 4);
+        let t0 = Instant::now();
+        assert!(q
+            .take_timeout(&TakeFilter::default(), Duration::from_millis(120))
+            .unwrap()
+            .is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(100));
+        q.publish(inv("1", "a")).unwrap();
+        assert!(q
+            .take_timeout(&TakeFilter::default(), Duration::ZERO)
+            .unwrap()
+            .is_some());
+        assert!(q
+            .take_timeout(&TakeFilter::default(), Duration::ZERO)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn concurrent_takers_conserve_invocations_across_shards() {
+        let q = ShardedQueue::new(TestClock::new(), 8);
+        let n = 400;
+        for i in 0..n {
+            q.publish(inv(&format!("i{i}"), &format!("class-{}", i % 16))).unwrap();
+        }
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut taken = 0;
+                while let Some(lease) = q.take(&TakeFilter::default()).unwrap() {
+                    q.ack(&lease.invocation.id).unwrap();
+                    taken += 1;
+                }
+                taken
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, n, "every invocation delivered exactly once");
+        assert_eq!(q.stats().unwrap().acked, n);
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_memqueue_behavior() {
+        let q = ShardedQueue::new(TestClock::new(), 1);
+        assert_eq!(q.shard_count(), 1);
+        for i in 0..5 {
+            q.publish(inv(&format!("i{i}"), &format!("c{i}"))).unwrap();
+        }
+        // One shard: global FIFO across classes holds like MemQueue.
+        for i in 0..5 {
+            let lease = q.take(&TakeFilter::default()).unwrap().unwrap();
+            assert_eq!(lease.invocation.id, format!("i{i}"));
+        }
+    }
+}

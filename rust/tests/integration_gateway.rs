@@ -293,6 +293,69 @@ fn three_stage_pipeline_chains_through_the_store_not_the_client() {
 }
 
 #[test]
+fn fan_in_join_receives_every_parent_result_as_ordered_datasets() {
+    use hardless::pipeline::{PipelineSpec, PipelineState, StageSpec};
+    let d = deployment();
+    let client = RemoteClient::connect(d.gateway.addr()).unwrap();
+    let key = upload(&d, "img", &[1.0, 3.0]);
+    let node = remote_node(&d, "rnode-1", 2.0);
+
+    // Diamond: src -> (left, right) -> join.  The join's `after` order
+    // is [right, left] on purpose — the ordered dataset list must follow
+    // it, not stage declaration order or completion order.
+    let pid = client
+        .submit_pipeline(
+            PipelineSpec::new(&key)
+                .stage(StageSpec::new("src", "tinyyolo"))
+                .stage(StageSpec::new("left", "tinyyolo").after(["src"]))
+                .stage(StageSpec::new("right", "tinyyolo").after(["src"]))
+                .stage(StageSpec::new("join", "tinyyolo").after(["right", "left"])),
+        )
+        .unwrap();
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let st = loop {
+        let st = client.pipeline_status(&pid).unwrap().expect("tracked");
+        if st.state != PipelineState::Running {
+            break st;
+        }
+        assert!(std::time::Instant::now() < deadline, "stuck: {st:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(st.state, PipelineState::Succeeded, "{st:?}");
+
+    let inv_of = |name: &str| {
+        st.stages
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap()
+            .invocation_id
+            .clone()
+            .unwrap()
+    };
+    // The join invocation made the full round trip (gateway -> queue
+    // wire -> node -> completion report RPC); the spec the tracker holds
+    // is the one the node actually executed.  Its ordered input list
+    // must carry BOTH parents' result CAS keys, in `after` order.
+    let join_id = inv_of("join");
+    let inv = match client.status(&join_id).unwrap() {
+        SubmissionStatus::Done(inv) => inv,
+        other => panic!("expected Done, got {other:?}"),
+    };
+    let want = vec![
+        hardless::store::keys::result(&inv_of("right")),
+        hardless::store::keys::result(&inv_of("left")),
+    ];
+    assert_eq!(inv.spec.datasets, want, "ordered fan-in list over the wire");
+    assert_eq!(inv.spec.dataset, want[0], "legacy field mirrors the head");
+    // Named lookup rides config.inputs alongside the ordered list.
+    let inputs = inv.spec.config.get("inputs").expect("fan-in inputs");
+    assert_eq!(inputs.str_of("left").unwrap(), want[1].as_str());
+    assert_eq!(inputs.str_of("right").unwrap(), want[0].as_str());
+    node.stop();
+}
+
+#[test]
 fn two_clients_one_gateway_share_tracking() {
     let d = deployment();
     let submitter = RemoteClient::connect(d.gateway.addr()).unwrap();
