@@ -1,0 +1,262 @@
+//! Micro-benchmark: RPC plane throughput (reactor transport, L2 wire).
+//!
+//! DESIGN.md §14: the reactor must make connection count cheap (threads
+//! bounded by the worker pool, not by sockets) and make pipelining /
+//! multiplexing pay (one socket carrying many in-flight calls beats
+//! strict request-response).  This bench drives a conns × in-flight grid
+//! with raw pipelined frames, parks 512 long-polls to show the thread
+//! bound, and races a mux client against the sequential legacy client.
+//! Rates land in `BENCH_rpc.json` (see EXPERIMENTS.md §RPC scalability).
+
+mod common;
+
+use anyhow::{anyhow, bail, ensure, Result};
+use hardless::json::Json;
+use hardless::wire::{
+    append_frame, parse_frame, DeferHandler, FrameBuf, Outcome, Park, RpcClient, RpcConfig,
+    RpcServer,
+};
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Bounded handler pool under test everywhere in this bench.
+const WORKERS: usize = 4;
+
+fn serve() -> Result<RpcServer> {
+    let handler: DeferHandler = Arc::new(|method, params, _blob| match method {
+        "ping" => Ok(Outcome::Ready(
+            Json::obj().set("n", params.u64_of("n").unwrap_or(0)),
+            None,
+        )),
+        // A long-poll that never resolves: parks until the deadline.
+        "park" => {
+            let ms = params.u64_of("ms").unwrap_or(30_000);
+            let deadline = Instant::now() + Duration::from_millis(ms);
+            Ok(Outcome::Park(Park::new(deadline, move || Ok(None))))
+        }
+        other => Err(anyhow!("unknown method {other}")),
+    });
+    RpcServer::serve_deferrable(
+        "127.0.0.1:0",
+        handler,
+        RpcConfig { workers: WORKERS, ..RpcConfig::default() },
+    )
+}
+
+fn measure(
+    results: &mut Vec<(&'static str, f64)>,
+    name: &'static str,
+    total_ops: usize,
+    f: impl FnOnce(),
+) -> f64 {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    let rate = total_ops as f64 / dt;
+    println!("{name:<44} {:>12.0} ops/s ({total_ops} ops in {dt:.3}s)", rate);
+    results.push((name, rate));
+    rate
+}
+
+/// Serialize one id-tagged request envelope onto `batch`.
+fn stage_req(batch: &mut Vec<u8>, scratch: &mut String, id: u64, method: &str, params: Json) {
+    use std::fmt::Write as _;
+    let req = Json::obj()
+        .set("method", method)
+        .set("params", params)
+        .set("blob", false)
+        .set("id", id);
+    scratch.clear();
+    write!(scratch, "{req}").expect("fmt to String cannot fail");
+    append_frame(batch, scratch.as_bytes()).expect("request frame under MAX_FRAME");
+}
+
+/// One grid connection: keep up to `window` id-tagged pings in flight
+/// until `per_conn` round trips complete.  Raw frames, no client layer —
+/// this measures the server transport, not `RpcClient`.
+fn pump(addr: SocketAddr, per_conn: usize, window: usize) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let mut rd = stream.try_clone()?;
+    let mut fb = FrameBuf::new();
+    let mut scratch = String::new();
+    let mut batch: Vec<u8> = Vec::new();
+    let (mut sent, mut recvd) = (0usize, 0usize);
+    while recvd < per_conn {
+        batch.clear();
+        while sent < per_conn && sent - recvd < window {
+            stage_req(&mut batch, &mut scratch, sent as u64, "ping", Json::obj().set("n", sent as u64));
+            sent += 1;
+        }
+        if !batch.is_empty() {
+            stream.write_all(&batch)?;
+        }
+        // Block for at least one response, then drain whatever arrived.
+        loop {
+            if let Some(f) = fb.try_frame()? {
+                let resp = parse_frame(f)?;
+                ensure!(
+                    resp.get("ok").and_then(|b| b.as_bool()).unwrap_or(false),
+                    "rpc error response: {resp}"
+                );
+                recvd += 1;
+                break;
+            }
+            if fb.read_from(&mut rd)? == 0 {
+                bail!("server closed the connection mid-bench");
+            }
+        }
+        while let Some(f) = fb.try_frame()? {
+            parse_frame(f)?;
+            recvd += 1;
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    common::banner("micro — RPC plane throughput (reactor transport, DESIGN.md §14)");
+    let mut results: Vec<(&'static str, f64)> = Vec::new();
+
+    // conns × in-flight grid: raw pipelined frames against one server.
+    // Wire volume is fixed per row (~40k round trips) and split across
+    // the connections, so rows compare transport efficiency, not volume.
+    let grid_spec: &[(&'static str, usize, usize)] = &[
+        ("pipelined 1 conn x 1 in-flight", 1, 1),
+        ("pipelined 1 conn x 16 in-flight", 1, 16),
+        ("pipelined 1 conn x 64 in-flight", 1, 64),
+        ("pipelined 64 conns x 1 in-flight", 64, 1),
+        ("pipelined 64 conns x 16 in-flight", 64, 16),
+        ("pipelined 64 conns x 64 in-flight", 64, 64),
+        ("pipelined 512 conns x 1 in-flight", 512, 1),
+        ("pipelined 512 conns x 16 in-flight", 512, 16),
+        ("pipelined 512 conns x 64 in-flight", 512, 64),
+    ];
+    let server = serve()?;
+    let addr = server.addr();
+    let mut grid: Vec<(usize, usize, f64)> = Vec::new();
+    for &(name, conns, window) in grid_spec {
+        let per_conn = (40_000 / conns).max(50);
+        let total = per_conn * conns;
+        let rate = measure(&mut results, name, total, || {
+            let mut handles = Vec::new();
+            for _ in 0..conns {
+                handles.push(std::thread::spawn(move || pump(addr, per_conn, window)));
+            }
+            for h in handles {
+                h.join().expect("pump thread panicked").unwrap();
+            }
+        });
+        grid.push((conns, window, rate));
+    }
+
+    // Idle-cost row: 512 parked long-polls must hold zero worker threads
+    // — the reactor keeps them as deadline registrations.  Recorded as a
+    // thread count, not a rate.
+    let idle_conns = 512;
+    let mut parked: Vec<TcpStream> = Vec::new();
+    let mut scratch = String::new();
+    for i in 0..idle_conns {
+        let mut s = TcpStream::connect(addr)?;
+        let mut batch = Vec::new();
+        stage_req(&mut batch, &mut scratch, i as u64, "park", Json::obj().set("ms", 60_000u64));
+        s.write_all(&batch)?;
+        parked.push(s);
+    }
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while server.stats().parked < idle_conns as u64 {
+        ensure!(Instant::now() < deadline, "parks never registered: {:?}", server.stats());
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let stats = server.stats();
+    println!(
+        "{:<44} {:>12} threads ({} conns parked, backend {})",
+        "idle cost: 512 parked long-polls", stats.threads, stats.parked, stats.backend
+    );
+    drop(parked);
+
+    // Mux vs sequential: same socket count (one), same call volume, the
+    // only difference is id-tagged multiplexing with 64 caller threads
+    // against the legacy one-at-a-time client.
+    let seq_calls = 20_000;
+    let seq_client = RpcClient::connect(addr)?;
+    let seq_rate = measure(&mut results, "sequential client, 1 caller", seq_calls, || {
+        for i in 0..seq_calls {
+            seq_client.call("ping", Json::obj().set("n", i as u64)).unwrap();
+        }
+    });
+    let mux_threads = 64;
+    let per_thread = seq_calls / mux_threads;
+    let mux_client = Arc::new(RpcClient::connect_mux(addr)?);
+    let mux_rate = measure(
+        &mut results,
+        "mux client, 64 callers one socket",
+        per_thread * mux_threads,
+        || {
+            let mut handles = Vec::new();
+            for t in 0..mux_threads {
+                let c = mux_client.clone();
+                handles.push(std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        c.call("ping", Json::obj().set("n", (t * per_thread + i) as u64)).unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        },
+    );
+
+    // machine-readable trajectory for future perf PRs
+    let mut out = Json::obj();
+    for (name, rate) in &results {
+        out = out.set(name, *rate);
+    }
+    let mut g = Json::obj();
+    for (conns, window, rate) in &grid {
+        g = g.set(&format!("conns_{conns}_inflight_{window}"), *rate);
+    }
+    out = out
+        .set("rpc_grid", g)
+        .set("idle_parked_conns", idle_conns as u64)
+        .set("idle_parked_threads", stats.threads)
+        .set("workers", WORKERS as u64)
+        .set("backend", stats.backend.clone());
+    std::fs::write("BENCH_rpc.json", format!("{out}\n"))?;
+    println!("\nwrote BENCH_rpc.json ({} rows + {}-cell grid)", results.len(), grid.len());
+
+    // Gates — conservative floors any dev machine or CI runner clears.
+    for (conns, window, rate) in &grid {
+        ensure!(
+            *rate > 2_000.0,
+            "grid cell {conns} conns x {window} in-flight below 2k ops/s: {rate:.0}"
+        );
+    }
+    // Pipelining must pay: 64 in-flight on one conn ≥ 2× strict
+    // request-response on that conn (syscall batching + no idle RTT).
+    let (r1, r64) = (grid[0].2, grid[2].2);
+    ensure!(
+        r64 >= 2.0 * r1,
+        "pipelining won nothing on one conn: {r64:.0} vs {r1:.0} ops/s"
+    );
+    // Parked long-polls may not cost threads (reactor backends only; the
+    // threaded fallback is explicitly thread-per-conn).
+    if stats.backend != "threaded" {
+        ensure!(
+            stats.threads <= 2 + WORKERS as u64,
+            "512 parked polls leaked threads: {} > 2 + {WORKERS}",
+            stats.threads
+        );
+    }
+    // Mux with 64 concurrent callers must beat one sequential caller on
+    // the same single socket.
+    ensure!(
+        mux_rate >= 1.5 * seq_rate,
+        "mux buys too little over sequential: {mux_rate:.0} vs {seq_rate:.0} ops/s"
+    );
+    println!("rpc transport targets PASSED");
+    Ok(())
+}

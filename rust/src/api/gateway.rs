@@ -21,12 +21,15 @@ use crate::pipeline::{PipelineSpec, PipelineStatus};
 use crate::queue::InvocationQueue;
 use crate::store::{Blob, ObjectStore};
 use crate::util::Clock;
-use crate::wire::{poll_chunked, Handler, RpcClient, RpcServer, LONG_POLL_CHUNK};
+use crate::wire::{
+    poll_chunked, ClientConfig, DeferHandler, Outcome, Park, RpcClient, RpcConfig, RpcCounters,
+    RpcServer, LONG_POLL_CHUNK,
+};
 use anyhow::{anyhow, Result};
 use std::net::ToSocketAddrs;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Server-side cap on one blocking `wait` chunk.  Clients loop over
 /// chunks until their own deadline ([`poll_chunked`]), so this only
@@ -50,6 +53,9 @@ pub struct GatewayConfig {
     /// orchestrator watching `hardless status` acts on them.  The
     /// controller ticks on the housekeeping interval.
     pub autoscale: Option<AutoscaleConfig>,
+    /// RPC transport tuning (backend selection, worker pool size) for
+    /// the gateway's own server.
+    pub rpc: RpcConfig,
 }
 
 impl Default for GatewayConfig {
@@ -58,6 +64,7 @@ impl Default for GatewayConfig {
             announce_runtimes: Vec::new(),
             housekeeping_interval: Duration::from_secs(1),
             autoscale: None,
+            rpc: RpcConfig::default(),
         }
     }
 }
@@ -107,15 +114,22 @@ impl GatewayServer {
                 None => None,
             };
 
-        let handler: Handler = {
+        // One shared counter block: the transport updates it, and the
+        // gateway's own `stats` handler snapshots it into
+        // `ClusterStats.rpc` — the server reporting on the server it
+        // runs inside.
+        let rpc_counters = config.rpc.counters.clone().unwrap_or_default();
+
+        let handler: DeferHandler = {
             let coordinator = coordinator.clone();
             let store = store.clone();
             let autoscale = autoscale.clone();
+            let rpc_counters = rpc_counters.clone();
             Arc::new(move |method, params, _blob| match method {
                 "submit" => {
                     let spec = EventSpec::from_json(params.req("spec")?)?;
                     let id = coordinator.submit(spec)?;
-                    Ok((Json::obj().set("id", id), None))
+                    Ok(Outcome::Ready(Json::obj().set("id", id), None))
                 }
                 "submit_batch" => {
                     // One RPC, one tracking-lock hold, one queue
@@ -126,12 +140,12 @@ impl GatewayServer {
                     }
                     let ids = coordinator.submit_batch(specs)?;
                     let ids = ids.into_iter().map(Json::Str).collect();
-                    Ok((Json::obj().set("ids", Json::Arr(ids)), None))
+                    Ok(Outcome::Ready(Json::obj().set("ids", Json::Arr(ids)), None))
                 }
                 "status" => {
                     let status =
                         SubmissionStatus::resolve(&coordinator, params.str_of("id")?);
-                    Ok((status.to_json(), None))
+                    Ok(Outcome::Ready(status.to_json(), None))
                 }
                 "submit_pipeline" => {
                     // One RPC for the whole DAG: the coordinator chains
@@ -139,33 +153,47 @@ impl GatewayServer {
                     // reports — no further client round trips.
                     let spec = PipelineSpec::from_json(params.req("pipeline")?)?;
                     let id = coordinator.submit_pipeline(spec)?;
-                    Ok((Json::obj().set("id", id), None))
+                    Ok(Outcome::Ready(Json::obj().set("id", id), None))
                 }
                 "pipeline_status" => {
                     match coordinator.pipeline_status(params.str_of("id")?) {
-                        Some(status) => Ok((status.to_json(), None)),
-                        None => Ok((Json::Null, None)),
+                        Some(status) => Ok(Outcome::Ready(status.to_json(), None)),
+                        None => Ok(Outcome::Ready(Json::Null, None)),
                     }
                 }
                 "wait" => {
-                    let id = params.str_of("id")?;
+                    // Server-side blocking wait, reactor edition: probe
+                    // the coordinator now, and if the result isn't in
+                    // yet park the request as a reactor registration —
+                    // a waiting benchmark client costs a waiter entry,
+                    // not a connection thread.
+                    let id = params.str_of("id")?.to_string();
                     let ms = params
                         .u64_of("timeout_ms")
                         .unwrap_or(0)
                         .min(WAIT_CHUNK.as_millis() as u64);
-                    match coordinator.wait_for(id, Duration::from_millis(ms)) {
-                        Some(inv) => Ok((inv.to_json(), None)),
-                        None => Ok((Json::Null, None)),
+                    if let Some(inv) = coordinator.wait_for(&id, Duration::ZERO) {
+                        return Ok(Outcome::Ready(inv.to_json(), None));
                     }
+                    if ms == 0 {
+                        return Ok(Outcome::Ready(Json::Null, None));
+                    }
+                    let deadline = Instant::now() + Duration::from_millis(ms);
+                    let coordinator = coordinator.clone();
+                    Ok(Outcome::Park(Park::new(deadline, move || {
+                        Ok(coordinator
+                            .wait_for(&id, Duration::ZERO)
+                            .map(|inv| (inv.to_json(), None)))
+                    })))
                 }
                 "fetch_result" => {
                     let id = params.str_of("id")?;
                     match coordinator.lookup(id).1.and_then(|i| i.result_key) {
                         Some(key) => {
                             let data = store.get(&key)?;
-                            Ok((Json::obj().set("len", data.len()), Some(data)))
+                            Ok(Outcome::Ready(Json::obj().set("len", data.len()), Some(data)))
                         }
-                        None => Ok((Json::Null, None)),
+                        None => Ok(Outcome::Ready(Json::Null, None)),
                     }
                 }
                 "stats" => {
@@ -174,7 +202,8 @@ impl GatewayServer {
                         stats.autoscale = scaler.stats();
                         stats.autoscale.nodes = exec.nodes();
                     }
-                    Ok((stats.to_json(), None))
+                    stats.rpc = rpc_counters.snapshot();
+                    Ok(Outcome::Ready(stats.to_json(), None))
                 }
                 "runtimes" => {
                     let mut names = announce.clone();
@@ -191,7 +220,7 @@ impl GatewayServer {
                     names.sort();
                     names.dedup();
                     let arr = names.into_iter().map(Json::Str).collect();
-                    Ok((Json::obj().set("runtimes", Json::Arr(arr)), None))
+                    Ok(Outcome::Ready(Json::obj().set("runtimes", Json::Arr(arr)), None))
                 }
                 "report" => {
                     // Node → gateway completion path.  The collector
@@ -201,12 +230,13 @@ impl GatewayServer {
                     completions
                         .send(inv)
                         .map_err(|_| anyhow!("gateway coordinator is shut down"))?;
-                    Ok((Json::obj(), None))
+                    Ok(Outcome::Ready(Json::obj(), None))
                 }
                 other => Err(anyhow!("unknown gateway method {other}")),
             })
         };
-        let rpc = RpcServer::serve(addr, handler)?;
+        let rpc_cfg = RpcConfig { counters: Some(rpc_counters), ..config.rpc.clone() };
+        let rpc = RpcServer::serve_deferrable(addr, handler, rpc_cfg)?;
 
         // Housekeeping (the coordinator-side duties the single-process
         // Cluster runs): re-queue expired leases, sample queue gauges,
@@ -292,7 +322,12 @@ impl RemoteClient {
     pub fn connect(
         addr: impl std::net::ToSocketAddrs + std::fmt::Debug,
     ) -> Result<RemoteClient> {
-        Ok(RemoteClient { rpc: RpcClient::connect(addr)? })
+        // Multiplexed: many waiters share one socket (a benchmark client
+        // waiting on hundreds of submissions is the common case), and a
+        // restarted gateway is re-reached by redialing instead of
+        // wedging every future call.
+        let cfg = ClientConfig { mux: true, reconnect: true, ..ClientConfig::default() };
+        Ok(RemoteClient { rpc: RpcClient::connect_with(addr, cfg)? })
     }
 
     /// RPC round trips issued so far (batching assertions, diagnostics).
@@ -322,7 +357,7 @@ impl HardlessClient for RemoteClient {
     }
 
     fn status(&self, id: &str) -> Result<SubmissionStatus> {
-        SubmissionStatus::from_json(&self.rpc.call("status", Json::obj().set("id", id))?)
+        SubmissionStatus::from_json(&self.rpc.call_idem("status", Json::obj().set("id", id))?)
     }
 
     fn wait(&self, id: &str, timeout: Duration) -> Result<Option<Invocation>> {
@@ -330,7 +365,7 @@ impl HardlessClient for RemoteClient {
         // at most WAIT_CHUNK, far below the client read timeout, so a
         // long wait never looks like a dead server.
         poll_chunked(timeout, |chunk_ms| {
-            let out = self.rpc.call(
+            let out = self.rpc.call_idem(
                 "wait",
                 Json::obj().set("id", id).set("timeout_ms", chunk_ms),
             )?;
@@ -355,11 +390,11 @@ impl HardlessClient for RemoteClient {
     }
 
     fn cluster_stats(&self) -> Result<ClusterStats> {
-        ClusterStats::from_json(&self.rpc.call("stats", Json::obj())?)
+        ClusterStats::from_json(&self.rpc.call_idem("stats", Json::obj())?)
     }
 
     fn list_runtimes(&self) -> Result<Vec<String>> {
-        let out = self.rpc.call("runtimes", Json::obj())?;
+        let out = self.rpc.call_idem("runtimes", Json::obj())?;
         Ok(out
             .arr_of("runtimes")?
             .iter()
@@ -375,7 +410,7 @@ impl HardlessClient for RemoteClient {
     }
 
     fn pipeline_status(&self, id: &str) -> Result<Option<PipelineStatus>> {
-        let out = self.rpc.call("pipeline_status", Json::obj().set("id", id))?;
+        let out = self.rpc.call_idem("pipeline_status", Json::obj().set("id", id))?;
         if out.is_null() {
             Ok(None)
         } else {
@@ -548,6 +583,57 @@ mod tests {
         let got = r.client.wait(&id, Duration::from_millis(300)).unwrap();
         assert!(got.is_none());
         assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn rpc_transport_stats_surface_in_cluster_stats() {
+        let r = rig();
+        r.client
+            .submit(EventSpec::new("tinyyolo", "datasets/x"))
+            .unwrap();
+        let stats = r.client.cluster_stats().unwrap();
+        assert!(
+            !stats.rpc.backend.is_empty(),
+            "gateway reports its own transport: {:?}",
+            stats.rpc
+        );
+        assert!(stats.rpc.requests >= 2, "submit + stats counted: {:?}", stats.rpc);
+        assert!(stats.rpc.conns_accepted >= 1);
+        // The snapshot is taken mid-request: the stats response itself is
+        // not yet written, so compare against the *received* frames.
+        assert!(stats.rpc.frames_in >= stats.rpc.requests);
+    }
+
+    #[test]
+    fn client_survives_a_gateway_restart() {
+        // A long-lived benchmark client must re-reach a restarted
+        // gateway: idempotent calls redial + retry instead of failing
+        // fast forever on the poisoned channel.
+        let clock = ScaledClock::new(100.0);
+        let queue = MemQueue::new(clock.clone());
+        let store = Arc::new(MemStore::new());
+        let serve = |q: Arc<MemQueue>, s: Arc<MemStore>, c: Arc<ScaledClock>, addr: &str| {
+            GatewayServer::serve(addr, q, s, c, GatewayConfig::default())
+        };
+        let mut gw = serve(queue.clone(), store.clone(), clock.clone(), "127.0.0.1:0").unwrap();
+        let addr = gw.addr().to_string();
+        let client = RemoteClient::connect(gw.addr()).unwrap();
+        client.cluster_stats().unwrap();
+        gw.shutdown();
+        // nothing listening: even the retry cannot save this call
+        assert!(client.cluster_stats().is_err());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let _gw2 = loop {
+            match serve(queue.clone(), store.clone(), clock.clone(), &addr) {
+                Ok(g) => break g,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "could not rebind {addr}: {e:#}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        let stats = client.cluster_stats().unwrap();
+        assert_eq!(stats.submitted, 0, "fresh coordinator behind the same address");
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::json::Json;
 use crate::node::VariantBatchStats;
 use crate::queue::{ClassStats, QueueStats, ShardStats};
 use crate::store::{Blob, CacheStats};
+use crate::wire::RpcStats;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -120,6 +121,11 @@ pub struct ClusterStats {
     pub gc_reclaimed_bytes: u64,
     /// Pipelines the coordinator is tracking.
     pub pipelines: usize,
+    /// The gateway's own RPC transport counters (backend, connections,
+    /// frames, parked long-polls, worker saturation).  Defaults when the
+    /// snapshot comes from an in-process cluster (no RPC server) or a
+    /// pre-reactor gateway.
+    pub rpc: RpcStats,
 }
 
 impl ClusterStats {
@@ -140,6 +146,7 @@ impl ClusterStats {
             gc_deleted: counts.gc_deleted,
             gc_reclaimed_bytes: counts.gc_reclaimed_bytes,
             pipelines: coordinator.pipelines_tracked(),
+            rpc: RpcStats::default(),
         })
     }
 
@@ -168,7 +175,8 @@ impl ClusterStats {
             .set("batch", Json::Arr(batch))
             .set("gc_deleted", self.gc_deleted)
             .set("gc_reclaimed_bytes", self.gc_reclaimed_bytes as usize)
-            .set("pipelines", self.pipelines);
+            .set("pipelines", self.pipelines)
+            .set("rpc", self.rpc.to_json());
         // Omitted when single-shard: pre-shard peers see the exact wire
         // shape they always did (QueueStats travels flattened here, so
         // the shard section flattens alongside `queue_classes`).
@@ -240,6 +248,12 @@ impl ClusterStats {
             gc_deleted: j.usize_of("gc_deleted").unwrap_or(0),
             gc_reclaimed_bytes: j.usize_of("gc_reclaimed_bytes").unwrap_or(0) as u64,
             pipelines: j.usize_of("pipelines").unwrap_or(0),
+            // Lenient: the RPC transport section postdates the wire
+            // format; pre-reactor gateways omit it entirely.
+            rpc: j
+                .get("rpc")
+                .and_then(|v| RpcStats::from_json(v).ok())
+                .unwrap_or_default(),
         })
     }
 
@@ -296,6 +310,7 @@ impl ClusterStats {
             out.gc_deleted += p.gc_deleted;
             out.gc_reclaimed_bytes += p.gc_reclaimed_bytes;
             out.pipelines += p.pipelines;
+            out.rpc.merge(&p.rpc);
         }
         out.queue.classes = classes.into_values().collect();
         out
@@ -438,8 +453,34 @@ mod tests {
             gc_deleted: 12,
             gc_reclaimed_bytes: 98304,
             pipelines: 2,
+            rpc: RpcStats {
+                backend: "epoll".into(),
+                workers: 4,
+                threads: 5,
+                conns_accepted: 30,
+                conns_active: 6,
+                requests: 1200,
+                parked: 3,
+                frames_in: 1230,
+                frames_out: 1210,
+                bytes_in: 1 << 16,
+                bytes_out: 1 << 17,
+                ..RpcStats::default()
+            },
         };
         assert_eq!(ClusterStats::from_json(&stats.to_json()).unwrap(), stats);
+    }
+
+    #[test]
+    fn cluster_stats_parses_without_rpc_section() {
+        // Payloads from pre-reactor gateways carry no rpc section:
+        // defaults, not an error — and a malformed one degrades the
+        // same way.
+        let stats = ClusterStats { submitted: 4, ..ClusterStats::default() };
+        let j = stats.to_json().set("rpc", Json::Null);
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert_eq!(parsed.rpc, RpcStats::default());
+        assert_eq!(parsed.submitted, 4);
     }
 
     #[test]

@@ -53,6 +53,8 @@ fn app() -> App {
                 .opt("store-addr", "127.0.0.1:7402", "store bind address")
                 .opt("store-dir", "", "object store directory (empty = in-memory)")
                 .opt("runtimes", "tinyyolo", "comma-separated runtimes to announce")
+                .opt("rpc-workers", "4", "bounded RPC handler pool size per server (reactor backends)")
+                .opt("rpc-backend", "auto", "RPC transport: auto | epoll | uring | threaded (uring falls back to epoll if the kernel probe fails)")
                 .flag("autoscale", "run the elasticity controller (advisory: decisions are logged and surfaced in `hardless status`; node provisioning stays external)")
                 .opt("autoscale-min", "0", "warm floor (scale-in never goes below this many nodes)")
                 .opt("autoscale-max", "8", "fleet ceiling")
@@ -234,14 +236,24 @@ fn cmd_serve(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     } else {
         None
     };
-    let qs = QueueServer::serve(m.str_req("queue-addr"), queue.clone())?;
-    let ss = StoreServer::serve(m.str_req("store-addr"), store.clone())?;
+    let rpc = hardless::wire::RpcConfig {
+        backend: m.str_req("rpc-backend").parse()?,
+        workers: m.parse_num("rpc-workers").map_err(|e| anyhow::anyhow!(e))?,
+        ..hardless::wire::RpcConfig::default()
+    };
+    let qs = QueueServer::serve_with(m.str_req("queue-addr"), queue.clone(), rpc.clone())?;
+    let ss = StoreServer::serve_with(m.str_req("store-addr"), store.clone(), rpc.clone())?;
     let gw = GatewayServer::serve(
         m.str_req("gateway-addr"),
         queue.clone(),
         store,
         clock,
-        GatewayConfig { announce_runtimes: announce, autoscale: autoscale.clone(), ..GatewayConfig::default() },
+        GatewayConfig {
+            announce_runtimes: announce,
+            autoscale: autoscale.clone(),
+            rpc: rpc.clone(),
+            ..GatewayConfig::default()
+        },
     )?;
     if let Some(cfg) = &autoscale {
         println!(
@@ -456,7 +468,8 @@ fn cmd_status(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     let client = RemoteClient::connect(m.str_req("gateway-addr"))?;
     match m.str_req("id") {
         "" => {
-            let out = client.cluster_stats()?.to_json().set(
+            let stats = client.cluster_stats()?;
+            let out = stats.to_json().set(
                 "runtimes",
                 Json::Arr(
                     client
@@ -467,6 +480,18 @@ fn cmd_status(m: &hardless::cli::Matches) -> anyhow::Result<()> {
                 ),
             );
             println!("{}", out.to_pretty());
+            if !stats.rpc.backend.is_empty() {
+                println!(
+                    "rpc: {} backend | {} conns ({} parked) | {} busy of {} workers | {} requests ({} saturated)",
+                    stats.rpc.backend,
+                    stats.rpc.conns_active,
+                    stats.rpc.parked,
+                    stats.rpc.worker_busy,
+                    stats.rpc.workers,
+                    stats.rpc.requests,
+                    stats.rpc.saturated
+                );
+            }
         }
         id => match client.status(id)? {
             SubmissionStatus::Unknown => println!("{id}: unknown to this gateway"),

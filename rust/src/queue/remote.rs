@@ -8,10 +8,13 @@
 use super::{InvocationQueue, Lease, QueueStats, TakeFilter};
 use crate::events::Invocation;
 use crate::json::Json;
-use crate::wire::{poll_chunked, Handler, RpcClient, RpcServer, LONG_POLL_CHUNK};
+use crate::wire::{
+    poll_chunked, ClientConfig, DeferHandler, Outcome, Park, RpcClient, RpcConfig, RpcServer,
+    LONG_POLL_CHUNK,
+};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn lease_to_json(lease: Option<Lease>) -> Json {
     match lease {
@@ -41,11 +44,19 @@ pub struct QueueServer {
 
 impl QueueServer {
     pub fn serve(addr: &str, backend: Arc<dyn InvocationQueue>) -> Result<QueueServer> {
-        let handler: Handler = Arc::new(move |method, params, _blob| match method {
+        QueueServer::serve_with(addr, backend, RpcConfig::default())
+    }
+
+    pub fn serve_with(
+        addr: &str,
+        backend: Arc<dyn InvocationQueue>,
+        rpc: RpcConfig,
+    ) -> Result<QueueServer> {
+        let handler: DeferHandler = Arc::new(move |method, params, _blob| match method {
             "publish" => {
                 let inv = Invocation::from_json(params.req("invocation")?)?;
                 backend.publish(inv)?;
-                Ok((Json::obj(), None))
+                Ok(Outcome::Ready(Json::obj(), None))
             }
             "publish_batch" => {
                 let mut invs = Vec::new();
@@ -53,11 +64,11 @@ impl QueueServer {
                     invs.push(Invocation::from_json(j)?);
                 }
                 backend.publish_batch(invs)?;
-                Ok((Json::obj(), None))
+                Ok(Outcome::Ready(Json::obj(), None))
             }
             "take" => {
                 let filter = TakeFilter::from_json(params.req("filter")?)?;
-                Ok((lease_to_json(backend.take(&filter)?), None))
+                Ok(Outcome::Ready(lease_to_json(backend.take(&filter)?), None))
             }
             "take_batch" => {
                 let filter = TakeFilter::from_json(params.req("filter")?)?;
@@ -67,7 +78,7 @@ impl QueueServer {
                     .into_iter()
                     .map(|l| lease_to_json(Some(l)))
                     .collect();
-                Ok((Json::obj().set("leases", Json::Arr(leases)), None))
+                Ok(Outcome::Ready(Json::obj().set("leases", Json::Arr(leases)), None))
             }
             "take_batch_grouped" => {
                 let filter = TakeFilter::from_json(params.req("filter")?)?;
@@ -77,26 +88,36 @@ impl QueueServer {
                     .into_iter()
                     .map(|l| lease_to_json(Some(l)))
                     .collect();
-                Ok((Json::obj().set("leases", Json::Arr(leases)), None))
+                Ok(Outcome::Ready(Json::obj().set("leases", Json::Arr(leases)), None))
             }
             "take_timeout" => {
-                // Server-side long poll: park on the backend (condvar on
-                // MemQueue) so remote node managers are notification-
-                // bound rather than poll-interval-bound.  One chunk per
-                // RPC; the connection thread is dedicated, so blocking
-                // here starves no one.
+                // Server-side long poll, reactor edition: probe once,
+                // and if the queue is dry park the request as a reactor
+                // registration.  An idle node manager now costs a waiter
+                // entry, not a blocked thread — the property that lets
+                // one queue server carry hundreds of pollers on a
+                // handful of OS threads.
                 let filter = TakeFilter::from_json(params.req("filter")?)?;
                 let ms = params
                     .u64_of("timeout_ms")
                     .unwrap_or(0)
                     .min(LONG_POLL_CHUNK.as_millis() as u64);
-                let lease =
-                    backend.take_timeout(&filter, Duration::from_millis(ms))?;
-                Ok((lease_to_json(lease), None))
+                if let Some(lease) = backend.take(&filter)? {
+                    return Ok(Outcome::Ready(lease_to_json(Some(lease)), None));
+                }
+                if ms == 0 {
+                    // non-blocking probe: answer empty now
+                    return Ok(Outcome::Ready(Json::Null, None));
+                }
+                let deadline = Instant::now() + Duration::from_millis(ms);
+                let backend = backend.clone();
+                Ok(Outcome::Park(Park::new(deadline, move || {
+                    Ok(backend.take(&filter)?.map(|l| (lease_to_json(Some(l)), None)))
+                })))
             }
             "ack" => {
                 backend.ack(params.str_of("id")?)?;
-                Ok((Json::obj(), None))
+                Ok(Outcome::Ready(Json::obj(), None))
             }
             "ack_batch" => {
                 let ids: Vec<String> = params
@@ -105,13 +126,13 @@ impl QueueServer {
                     .filter_map(|j| j.as_str().map(String::from))
                     .collect();
                 backend.ack_batch(&ids)?;
-                Ok((Json::obj(), None))
+                Ok(Outcome::Ready(Json::obj(), None))
             }
             "release" => {
                 backend.release(params.str_of("id")?)?;
-                Ok((Json::obj(), None))
+                Ok(Outcome::Ready(Json::obj(), None))
             }
-            "reap" => Ok((
+            "reap" => Ok(Outcome::Ready(
                 Json::obj().set("reaped", backend.reap_expired()?),
                 None,
             )),
@@ -132,11 +153,11 @@ impl QueueServer {
                         s.shards.iter().map(|x| x.to_json()).collect();
                     out = out.set("shards", Json::Arr(shards));
                 }
-                Ok((out, None))
+                Ok(Outcome::Ready(out, None))
             }
             other => Err(anyhow!("unknown queue method {other}")),
         });
-        Ok(QueueServer { inner: RpcServer::serve(addr, handler)? })
+        Ok(QueueServer { inner: RpcServer::serve_deferrable(addr, handler, rpc)? })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
@@ -155,7 +176,11 @@ pub struct QueueClient {
 
 impl QueueClient {
     pub fn connect(addr: impl std::net::ToSocketAddrs + std::fmt::Debug) -> Result<QueueClient> {
-        Ok(QueueClient { rpc: RpcClient::connect(addr)? })
+        // Node managers are long-lived; ride out a queue-server restart
+        // by redialing (and retrying idempotent polls once) instead of
+        // wedging on a broken channel.
+        let cfg = ClientConfig { reconnect: true, ..ClientConfig::default() };
+        Ok(QueueClient { rpc: RpcClient::connect_with(addr, cfg)? })
     }
 
     /// RPC round trips issued so far (batching assertions, diagnostics).
@@ -182,16 +207,19 @@ impl InvocationQueue for QueueClient {
     }
 
     fn take(&self, filter: &TakeFilter) -> Result<Option<Lease>> {
+        // Takes are idempotent at the protocol level: a lease lost to a
+        // mid-call crash is re-delivered by lease expiry, so the retry
+        // can only cost a duplicate attempt, never a lost invocation.
         let out = self
             .rpc
-            .call("take", Json::obj().set("filter", filter.to_json()))?;
+            .call_idem("take", Json::obj().set("filter", filter.to_json()))?;
         lease_from_json(&out)
     }
 
     /// Up to `max` leases, one RPC — lets a node manager fill every free
     /// slot per round trip instead of paying one RPC per lease.
     fn take_batch(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
-        let out = self.rpc.call(
+        let out = self.rpc.call_idem(
             "take_batch",
             Json::obj().set("filter", filter.to_json()).set("max", max),
         )?;
@@ -207,7 +235,7 @@ impl InvocationQueue for QueueClient {
     /// One same-class chunk, one RPC — the server picks the lane (warm
     /// first, deepest under `prefer_deep`) and drains it under one lock.
     fn take_batch_grouped(&self, filter: &TakeFilter, max: usize) -> Result<Vec<Lease>> {
-        let out = self.rpc.call(
+        let out = self.rpc.call_idem(
             "take_batch_grouped",
             Json::obj().set("filter", filter.to_json()).set("max", max),
         )?;
@@ -229,7 +257,7 @@ impl InvocationQueue for QueueClient {
         wall_timeout: Duration,
     ) -> Result<Option<Lease>> {
         poll_chunked(wall_timeout, |chunk_ms| {
-            let out = self.rpc.call(
+            let out = self.rpc.call_idem(
                 "take_timeout",
                 Json::obj()
                     .set("filter", filter.to_json())
@@ -261,12 +289,12 @@ impl InvocationQueue for QueueClient {
     }
 
     fn reap_expired(&self) -> Result<usize> {
-        let out = self.rpc.call("reap", Json::obj())?;
+        let out = self.rpc.call_idem("reap", Json::obj())?;
         Ok(out.usize_of("reaped")?)
     }
 
     fn stats(&self) -> Result<QueueStats> {
-        let out = self.rpc.call("stats", Json::obj())?;
+        let out = self.rpc.call_idem("stats", Json::obj())?;
         // `classes` parses leniently (absent → empty): the scalar gauges
         // predate the per-class probe.
         let classes = match out.get("classes").and_then(|j| j.as_arr()) {
@@ -467,6 +495,33 @@ mod tests {
             .take_timeout(&TakeFilter::default(), Duration::ZERO)
             .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn parked_long_polls_release_the_worker_pool() {
+        // Two concurrent long-polls against a server with ONE worker:
+        // if parking held the worker, the second poll (and the publish
+        // that wakes them) could never be served.
+        let backend = MemQueue::new(TestClock::new());
+        let rpc = RpcConfig { workers: 1, ..RpcConfig::default() };
+        let server = QueueServer::serve_with("127.0.0.1:0", backend, rpc).unwrap();
+        let addr = server.addr();
+        let mut pollers = Vec::new();
+        for _ in 0..2 {
+            pollers.push(std::thread::spawn(move || {
+                let c = QueueClient::connect(addr).unwrap();
+                c.take_timeout(&TakeFilter::default(), Duration::from_secs(10)).unwrap()
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(150));
+        let publisher = QueueClient::connect(addr).unwrap();
+        publisher.publish(inv("wake-1", "a")).unwrap();
+        publisher.publish(inv("wake-2", "a")).unwrap();
+        let got: Vec<_> = pollers.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(
+            got.iter().all(|l| l.is_some()),
+            "both parked pollers woke on one worker: {got:?}"
+        );
     }
 
     #[test]

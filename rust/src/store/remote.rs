@@ -7,7 +7,7 @@
 
 use super::{Blob, ObjectStore};
 use crate::json::Json;
-use crate::wire::{Handler, RpcClient, RpcServer};
+use crate::wire::{Handler, RpcClient, RpcConfig, RpcServer};
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
@@ -18,6 +18,14 @@ pub struct StoreServer {
 
 impl StoreServer {
     pub fn serve(addr: &str, backend: Arc<dyn ObjectStore>) -> Result<StoreServer> {
+        StoreServer::serve_with(addr, backend, RpcConfig::default())
+    }
+
+    pub fn serve_with(
+        addr: &str,
+        backend: Arc<dyn ObjectStore>,
+        rpc: RpcConfig,
+    ) -> Result<StoreServer> {
         let handler: Handler = Arc::new(move |method, params, blob| {
             let key = || -> Result<String> { Ok(params.str_of("key")?.to_string()) };
             match method {
@@ -52,7 +60,7 @@ impl StoreServer {
                 other => Err(anyhow!("unknown store method {other}")),
             }
         });
-        Ok(StoreServer { inner: RpcServer::serve(addr, handler)? })
+        Ok(StoreServer { inner: RpcServer::serve_with(addr, handler, rpc)? })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {

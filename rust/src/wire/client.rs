@@ -1,0 +1,493 @@
+//! RPC client: persistent connections in two flavors.
+//!
+//! *Sequential* (the default) is byte-identical to the pre-reactor wire:
+//! one in-flight call at a time, no `id` field, so it interops with old
+//! peers.  *Multiplexed* tags every request envelope with a `u64` id and
+//! runs a demux reader thread, letting one socket carry many concurrent
+//! in-flight calls.  Either flavor can opt into transparent reconnect:
+//! a broken channel is redialed on the next call, and *idempotent* calls
+//! (`call_idem`) additionally retry once after a mid-call transport
+//! failure — non-idempotent ones (publish, ack) never retry, since the
+//! server may have applied them before the connection died.
+
+use super::frame::{read_blob, read_frame_buf, write_blob, write_frame_buf};
+use super::DEFAULT_READ_TIMEOUT;
+use crate::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// Connection behavior knobs; [`ClientConfig::default`] reproduces the
+/// legacy client exactly (sequential, fail-fast on a broken channel).
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    pub read_timeout: Duration,
+    /// Redial a broken channel on the next call instead of failing fast
+    /// forever; `call_idem` additionally retries once after reconnect.
+    pub reconnect: bool,
+    /// Multiplex calls over one socket with id-tagged envelopes.
+    pub mux: bool,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig { read_timeout: DEFAULT_READ_TIMEOUT, reconnect: false, mux: false }
+    }
+}
+
+/// Client side: a persistent connection issuing RPCs.
+pub struct RpcClient {
+    /// Resolved at connect so reconnect can redial without re-resolving.
+    peers: Vec<SocketAddr>,
+    desc: String,
+    cfg: ClientConfig,
+    chan: RwLock<Arc<Channel>>,
+    /// Wire round trips attempted (batching assertions, diagnostics).
+    calls: AtomicU64,
+}
+
+impl RpcClient {
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RpcClient> {
+        RpcClient::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with an explicit per-read timeout (tests, impatient CLIs).
+    pub fn connect_with_timeout(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        read_timeout: Duration,
+    ) -> Result<RpcClient> {
+        RpcClient::connect_with(addr, ClientConfig { read_timeout, ..ClientConfig::default() })
+    }
+
+    /// Connect a multiplexed client (many in-flight calls, one socket).
+    pub fn connect_mux(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<RpcClient> {
+        RpcClient::connect_with(addr, ClientConfig { mux: true, ..ClientConfig::default() })
+    }
+
+    pub fn connect_with(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        cfg: ClientConfig,
+    ) -> Result<RpcClient> {
+        let desc = format!("{addr:?}");
+        let peers: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolve {desc}"))?
+            .collect();
+        if peers.is_empty() {
+            bail!("no addresses for {desc}");
+        }
+        let chan = Arc::new(dial(&peers, &desc, &cfg)?);
+        Ok(RpcClient {
+            peers,
+            desc,
+            cfg,
+            chan: RwLock::new(chan),
+            calls: AtomicU64::new(0),
+        })
+    }
+
+    /// How many RPC round trips this client has issued on the wire
+    /// (fast-failed calls on a broken connection are not counted).
+    pub fn calls_issued(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Issue `method(params)`; returns the result value.
+    pub fn call(&self, method: &str, params: Json) -> Result<Json> {
+        Ok(self.call_inner(method, &params, None, false)?.0)
+    }
+
+    /// Issue a call that may carry / return a raw payload.
+    pub fn call_blob(
+        &self,
+        method: &str,
+        params: Json,
+        blob: Option<&[u8]>,
+    ) -> Result<(Json, Option<Vec<u8>>)> {
+        self.call_inner(method, &params, blob, false)
+    }
+
+    /// Issue an *idempotent* call: with `reconnect` enabled, a transport
+    /// failure redials and retries exactly once.  Only safe for methods
+    /// whose duplicate delivery is harmless (stats, status, take polls).
+    pub fn call_idem(&self, method: &str, params: Json) -> Result<Json> {
+        Ok(self.call_inner(method, &params, None, true)?.0)
+    }
+
+    fn call_inner(
+        &self,
+        method: &str,
+        params: &Json,
+        blob: Option<&[u8]>,
+        idem: bool,
+    ) -> Result<(Json, Option<Vec<u8>>)> {
+        let mut retried = false;
+        loop {
+            let chan = self.chan.read().expect("rpc channel lock poisoned").clone();
+            if chan.is_broken() {
+                if !self.cfg.reconnect {
+                    bail!(
+                        "rpc {method}: connection is broken after an earlier mid-call failure; reconnect"
+                    );
+                }
+                self.redial(&chan)?;
+                continue;
+            }
+            match chan.exchange(method, params, blob, self.cfg.read_timeout, &self.calls) {
+                Ok(Ok(x)) => return Ok(x),
+                // server-reported error: the connection stays healthy
+                Ok(Err(server_err)) => return Err(server_err),
+                Err(Xfail::Preflight) => {
+                    // another thread broke the channel while we waited on
+                    // its lock; same recovery as the entry check
+                    if !self.cfg.reconnect {
+                        bail!(
+                            "rpc {method}: connection is broken after an earlier mid-call failure; reconnect"
+                        );
+                    }
+                    self.redial(&chan)?;
+                    continue;
+                }
+                Err(Xfail::Transport(e)) => {
+                    let decorated = decorate(e, method, self.cfg.read_timeout);
+                    if self.cfg.reconnect && idem && !retried && self.redial(&chan).is_ok() {
+                        retried = true;
+                        continue;
+                    }
+                    return Err(decorated);
+                }
+            }
+        }
+    }
+
+    /// Replace the broken channel with a fresh dial — unless another
+    /// caller already did (pointer-compare under the write lock).
+    fn redial(&self, old: &Arc<Channel>) -> Result<()> {
+        let mut g = self.chan.write().expect("rpc channel lock poisoned");
+        if !Arc::ptr_eq(&g, old) {
+            return Ok(());
+        }
+        let fresh = dial(&self.peers, &self.desc, &self.cfg)
+            .with_context(|| format!("rpc reconnect to {}", self.desc))?;
+        *g = Arc::new(fresh);
+        Ok(())
+    }
+}
+
+/// Why an exchange failed without producing a server response.
+enum Xfail {
+    /// The channel was already broken when we reached its lock — nothing
+    /// was sent, the call is not counted.
+    Preflight,
+    /// IO died mid-call; the channel marked itself broken.
+    Transport(anyhow::Error),
+}
+
+fn decorate(e: anyhow::Error, method: &str, read_timeout: Duration) -> anyhow::Error {
+    let timed_out = e
+        .downcast_ref::<std::io::Error>()
+        .map(|ioe| {
+            matches!(ioe.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+        })
+        .unwrap_or(false);
+    if timed_out {
+        e.context(format!(
+            "rpc {method}: no response within {read_timeout:?} — server down or unreachable"
+        ))
+    } else {
+        e.context(format!("rpc {method}: connection failed"))
+    }
+}
+
+fn dial(peers: &[SocketAddr], desc: &str, cfg: &ClientConfig) -> Result<Channel> {
+    let stream = TcpStream::connect(peers).with_context(|| format!("connect {desc}"))?;
+    stream.set_nodelay(true)?;
+    if !cfg.mux {
+        stream.set_read_timeout(Some(cfg.read_timeout))?;
+        return Ok(Channel::Seq(SeqChan {
+            io: Mutex::new(SeqIo { stream, scratch: String::new(), rbuf: Vec::new() }),
+            broken: AtomicBool::new(false),
+        }));
+    }
+    // Mux: the reader blocks with no read timeout; liveness is enforced
+    // per-call by recv_timeout, and Drop unblocks the reader by shutting
+    // the socket down.
+    stream.set_read_timeout(None)?;
+    let reader_stream = stream.try_clone().context("clone mux stream")?;
+    let shared = Arc::new(MuxShared {
+        pending: Mutex::new(HashMap::new()),
+        broken: AtomicBool::new(false),
+    });
+    let shared2 = shared.clone();
+    let reader = std::thread::Builder::new()
+        .name(format!("rpc-mux-reader-{desc}"))
+        .spawn(move || mux_reader(reader_stream, &shared2))?;
+    Ok(Channel::Mux(MuxChan {
+        writer: Mutex::new(MuxWriter {
+            stream: stream.try_clone().context("clone mux stream")?,
+            scratch: String::new(),
+            next_id: 0,
+        }),
+        shared,
+        stream,
+        reader: Mutex::new(Some(reader)),
+    }))
+}
+
+enum Channel {
+    Seq(SeqChan),
+    Mux(MuxChan),
+}
+
+type ExchangeResult = std::result::Result<Result<(Json, Option<Vec<u8>>)>, Xfail>;
+
+impl Channel {
+    fn is_broken(&self) -> bool {
+        match self {
+            Channel::Seq(c) => c.broken.load(Ordering::SeqCst),
+            Channel::Mux(c) => c.shared.broken.load(Ordering::SeqCst),
+        }
+    }
+
+    /// One request/response exchange.  `Err(Xfail)` = transport-level
+    /// failure; `Ok(Err)` = server-reported error (connection healthy);
+    /// `Ok(Ok)` = result + optional payload.
+    fn exchange(
+        &self,
+        method: &str,
+        params: &Json,
+        blob: Option<&[u8]>,
+        timeout: Duration,
+        calls: &AtomicU64,
+    ) -> ExchangeResult {
+        match self {
+            Channel::Seq(c) => c.exchange(method, params, blob, calls),
+            Channel::Mux(c) => c.exchange(method, params, blob, timeout, calls),
+        }
+    }
+}
+
+/// The serialized state of one sequential connection: the socket plus
+/// reused request-serialization and receive buffers (no per-call
+/// allocation).
+struct SeqIo {
+    stream: TcpStream,
+    scratch: String,
+    rbuf: Vec<u8>,
+}
+
+struct SeqChan {
+    io: Mutex<SeqIo>,
+    /// Set when a call died mid-frame: request/response framing may be
+    /// desynchronized, so every later call fails fast (or redials).
+    broken: AtomicBool,
+}
+
+impl SeqChan {
+    fn exchange(
+        &self,
+        method: &str,
+        params: &Json,
+        blob: Option<&[u8]>,
+        calls: &AtomicU64,
+    ) -> ExchangeResult {
+        let mut io = self.io.lock().expect("rpc client poisoned");
+        // Checked under the lock: a caller that was blocked on the mutex
+        // while another thread's call died mid-frame must not write onto
+        // the now-desynchronized stream.
+        if self.broken.load(Ordering::SeqCst) {
+            return Err(Xfail::Preflight);
+        }
+        calls.fetch_add(1, Ordering::Relaxed);
+        match seq_roundtrip(&mut io, method, params, blob) {
+            Ok(inner) => Ok(inner),
+            Err(e) => {
+                self.broken.store(true, Ordering::SeqCst);
+                Err(Xfail::Transport(e))
+            }
+        }
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn seq_roundtrip(
+    io: &mut SeqIo,
+    method: &str,
+    params: &Json,
+    blob: Option<&[u8]>,
+) -> Result<Result<(Json, Option<Vec<u8>>)>> {
+    let req = Json::obj()
+        .set("method", method)
+        .set("params", params.clone())
+        .set("blob", blob.is_some());
+    write_frame_buf(&mut io.stream, &req, &mut io.scratch)?;
+    if let Some(b) = blob {
+        write_blob(&mut io.stream, b)?;
+    }
+    let resp = read_frame_buf(&mut io.stream, &mut io.rbuf)?;
+    if !resp.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+        return Ok(Err(anyhow!(
+            "rpc {method} failed: {}",
+            resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown")
+        )));
+    }
+    let out_blob = if resp.get("blob").and_then(|b| b.as_bool()).unwrap_or(false) {
+        Some(read_blob(&mut io.stream)?)
+    } else {
+        None
+    };
+    Ok(Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob)))
+}
+
+type MuxReply = std::result::Result<(Json, Option<Vec<u8>>), MuxErr>;
+
+enum MuxErr {
+    Server(String),
+    Transport(String),
+}
+
+struct MuxShared {
+    pending: Mutex<HashMap<u64, mpsc::Sender<MuxReply>>>,
+    broken: AtomicBool,
+}
+
+struct MuxWriter {
+    stream: TcpStream,
+    scratch: String,
+    next_id: u64,
+}
+
+struct MuxChan {
+    writer: Mutex<MuxWriter>,
+    shared: Arc<MuxShared>,
+    /// Original socket handle, kept to shut the reader down on drop.
+    stream: TcpStream,
+    reader: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl MuxChan {
+    fn exchange(
+        &self,
+        method: &str,
+        params: &Json,
+        blob: Option<&[u8]>,
+        timeout: Duration,
+        calls: &AtomicU64,
+    ) -> ExchangeResult {
+        let (tx, rx) = mpsc::channel::<MuxReply>();
+        let id;
+        {
+            let mut w = self.writer.lock().expect("mux writer poisoned");
+            if self.shared.broken.load(Ordering::SeqCst) {
+                return Err(Xfail::Preflight);
+            }
+            id = w.next_id;
+            w.next_id += 1;
+            // register before writing so the reader can never race the
+            // response past us
+            self.shared.pending.lock().expect("mux pending poisoned").insert(id, tx);
+            calls.fetch_add(1, Ordering::Relaxed);
+            let req = Json::obj()
+                .set("method", method)
+                .set("params", params.clone())
+                .set("blob", blob.is_some())
+                .set("id", id);
+            let sent = write_frame_buf(&mut w.stream, &req, &mut w.scratch).and_then(|()| {
+                match blob {
+                    Some(b) => write_blob(&mut w.stream, b),
+                    None => Ok(()),
+                }
+            });
+            if let Err(e) = sent {
+                self.shared.pending.lock().expect("mux pending poisoned").remove(&id);
+                self.shared.broken.store(true, Ordering::SeqCst);
+                return Err(Xfail::Transport(e));
+            }
+        }
+        match rx.recv_timeout(timeout) {
+            Ok(Ok(x)) => Ok(Ok(x)),
+            Ok(Err(MuxErr::Server(msg))) => Ok(Err(anyhow!("rpc {method} failed: {msg}"))),
+            Ok(Err(MuxErr::Transport(msg))) => {
+                Err(Xfail::Transport(anyhow!("mux connection failed: {msg}")))
+            }
+            Err(_) => {
+                // our response never came; the socket may still be
+                // delivering other calls, but this caller's contract is
+                // the same as a sequential read timeout
+                self.shared.pending.lock().expect("mux pending poisoned").remove(&id);
+                self.shared.broken.store(true, Ordering::SeqCst);
+                Err(Xfail::Transport(anyhow::Error::new(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    "mux response timed out",
+                ))))
+            }
+        }
+    }
+}
+
+impl Drop for MuxChan {
+    fn drop(&mut self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        let handle = self.reader.lock().ok().and_then(|mut g| g.take());
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Demux loop: route each id-tagged response (and its optional blob
+/// frame, which the server always sends back-to-back) to its waiter.  On
+/// any transport error every in-flight waiter fails and the channel is
+/// marked broken.
+fn mux_reader(mut stream: TcpStream, shared: &MuxShared) {
+    let mut rbuf: Vec<u8> = Vec::new();
+    loop {
+        let resp = match read_frame_buf(&mut stream, &mut rbuf) {
+            Ok(r) => r,
+            Err(e) => {
+                fail_all(shared, &format!("{e:#}"));
+                return;
+            }
+        };
+        let Some(id) = resp.get("id").and_then(|v| v.as_u64()) else {
+            // a mux client only ever sends id-tagged requests, so an
+            // id-less response means the stream is not ours to trust
+            fail_all(shared, "response missing mux id");
+            return;
+        };
+        let reply: MuxReply = if resp.get("ok").and_then(|b| b.as_bool()).unwrap_or(false) {
+            let out_blob = if resp.get("blob").and_then(|b| b.as_bool()).unwrap_or(false) {
+                match read_blob(&mut stream) {
+                    Ok(b) => Some(b),
+                    Err(e) => {
+                        fail_all(shared, &format!("{e:#}"));
+                        return;
+                    }
+                }
+            } else {
+                None
+            };
+            Ok((resp.get("result").cloned().unwrap_or(Json::Null), out_blob))
+        } else {
+            Err(MuxErr::Server(
+                resp.get("error").and_then(|e| e.as_str()).unwrap_or("unknown").to_string(),
+            ))
+        };
+        let waiter = shared.pending.lock().expect("mux pending poisoned").remove(&id);
+        if let Some(tx) = waiter {
+            // the waiter may have timed out and gone; that's fine
+            let _ = tx.send(reply);
+        }
+    }
+}
+
+fn fail_all(shared: &MuxShared, msg: &str) {
+    shared.broken.store(true, Ordering::SeqCst);
+    let mut pending = shared.pending.lock().expect("mux pending poisoned");
+    for (_, tx) in pending.drain() {
+        let _ = tx.send(Err(MuxErr::Transport(msg.to_string())));
+    }
+}

@@ -1,0 +1,799 @@
+//! Readiness reactor: one event-loop thread owns every socket.
+//!
+//! The reactor thread multiplexes the listener plus all accepted
+//! connections through a [`Poller`] (epoll, or io_uring in poll mode).
+//! Sockets are nonblocking; bytes accumulate in per-connection
+//! [`FrameBuf`]s and responses drain through per-connection write queues,
+//! so a connection costs two buffers and an epoll interest — never a
+//! thread.  Handlers run on a bounded worker pool fed over a channel;
+//! the reactor itself never blocks on one.  Deferred outcomes
+//! ([`Outcome::Park`] — queue long-polls, gateway waits) live in a
+//! retry registry that is re-driven whenever a completion lands (a
+//! publish on the same server resolves a parked take within the same
+//! loop iteration) and on a short fallback tick.
+
+use super::frame::{append_frame, parse_frame, FrameBuf, MAX_FRAME};
+use super::stats::RpcCounters;
+use super::sys;
+use super::{DeferHandler, Outcome, Park, RetryFn};
+use crate::json::Json;
+use crate::store::Blob;
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Poll tick while parks are registered vs. fully idle.
+const TICK_PARKED_MS: i32 = 5;
+const TICK_IDLE_MS: i32 = 500;
+
+// -- poller abstraction -----------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PollEvent {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Readiness source the reactor runs on.  Implemented by epoll here and
+/// by the io_uring poll-mode ring in `wire/uring.rs`; both present
+/// identical level-style semantics to the loop above them.
+pub(crate) trait Poller: Send {
+    fn name(&self) -> &'static str;
+    fn add(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()>;
+    fn modify(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()>;
+    fn remove(&mut self, fd: RawFd) -> Result<()>;
+    /// Blocks up to `timeout_ms`; fills `events` with ready tokens.
+    fn wait(&mut self, events: &mut Vec<PollEvent>, timeout_ms: i32) -> Result<()>;
+}
+
+pub(crate) struct EpollPoller {
+    epfd: c_int,
+    buf: Vec<sys::epoll_event>,
+}
+
+impl EpollPoller {
+    pub(crate) fn new() -> Result<EpollPoller> {
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(sys::os_err("epoll_create1"));
+        }
+        Ok(EpollPoller {
+            epfd,
+            buf: vec![sys::epoll_event { events: 0, data: 0 }; 256],
+        })
+    }
+
+    fn ctl(&mut self, op: c_int, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+        let mut ev = sys::epoll_event {
+            events: interest_mask(readable, writable),
+            data: token,
+        };
+        if unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+            return Err(sys::os_err("epoll_ctl"));
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn interest_mask(readable: bool, writable: bool) -> u32 {
+    let mut m = sys::EPOLLRDHUP;
+    if readable {
+        m |= sys::EPOLLIN;
+    }
+    if writable {
+        m |= sys::EPOLLOUT;
+    }
+    m
+}
+
+impl Poller for EpollPoller {
+    fn name(&self) -> &'static str {
+        "epoll"
+    }
+
+    fn add(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, readable, writable)
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, readable, writable)
+    }
+
+    fn remove(&mut self, fd: RawFd) -> Result<()> {
+        // The event argument is ignored for DEL but must be non-null on
+        // old kernels.
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, false, false)
+    }
+
+    fn wait(&mut self, events: &mut Vec<PollEvent>, timeout_ms: i32) -> Result<()> {
+        events.clear();
+        let n = unsafe {
+            sys::epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as c_int, timeout_ms)
+        };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(anyhow::Error::new(e).context("epoll_wait"));
+        }
+        for i in 0..n as usize {
+            // copy packed fields out by value; never reference them
+            let raw = self.buf[i];
+            let bits = raw.events;
+            events.push(PollEvent {
+                token: raw.data,
+                readable: bits & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLERR | sys::EPOLLRDHUP)
+                    != 0,
+                writable: bits & (sys::EPOLLOUT | sys::EPOLLERR | sys::EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+// -- wakeup + completion board ----------------------------------------------
+
+/// Nonblocking eventfd the workers (and shutdown) use to interrupt a
+/// sleeping `Poller::wait`.
+pub(crate) struct Wake {
+    fd: c_int,
+}
+
+impl Wake {
+    pub(crate) fn new() -> Result<Wake> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(sys::os_err("eventfd"));
+        }
+        Ok(Wake { fd })
+    }
+
+    pub(crate) fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    pub(crate) fn wake(&self) {
+        let one: u64 = 1;
+        unsafe { sys::write(self.fd, &one as *const u64 as *const c_void, 8) };
+    }
+
+    pub(crate) fn drain(&self) {
+        let mut val: u64 = 0;
+        unsafe { sys::read(self.fd, &mut val as *mut u64 as *mut c_void, 8) };
+    }
+}
+
+impl Drop for Wake {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+type RpcBody = std::result::Result<(Json, Option<Blob>), String>;
+
+enum Completion {
+    Respond {
+        token: u64,
+        req_id: Option<u64>,
+        body: RpcBody,
+    },
+    Park {
+        token: u64,
+        req_id: Option<u64>,
+        park: Park,
+    },
+}
+
+/// Where workers drop finished handler outcomes for the reactor to pick
+/// up; every push tickles the wake eventfd.
+struct Board {
+    completions: Mutex<Vec<Completion>>,
+    wake: Wake,
+}
+
+impl Board {
+    fn push(&self, c: Completion) {
+        self.completions.lock().expect("completion board poisoned").push(c);
+        self.wake.wake();
+    }
+}
+
+// -- reactor ----------------------------------------------------------------
+
+struct Job {
+    token: u64,
+    req_id: Option<u64>,
+    method: String,
+    params: Json,
+    blob: Option<Vec<u8>>,
+}
+
+enum WBuf {
+    Owned(Vec<u8>),
+    /// Blob payload shared straight from the handler — zero-copy out.
+    Shared(Blob),
+}
+
+struct WriteChunk {
+    buf: WBuf,
+    off: usize,
+}
+
+impl WriteChunk {
+    fn rest(&self) -> &[u8] {
+        match &self.buf {
+            WBuf::Owned(v) => &v[self.off..],
+            WBuf::Shared(b) => &b[self.off..],
+        }
+    }
+}
+
+struct Conn {
+    stream: TcpStream,
+    rbuf: FrameBuf,
+    wq: VecDeque<WriteChunk>,
+    /// Envelope awaiting its blob frame (requests with `"blob": true`).
+    pending_env: Option<Json>,
+    /// An id-less (strict sequential) request is in flight; stop parsing
+    /// further frames until it is answered — legacy pipelining semantics.
+    busy: bool,
+    /// EPOLLOUT currently armed because the last flush hit `WouldBlock`.
+    wants_write: bool,
+}
+
+struct Deferred {
+    token: u64,
+    req_id: Option<u64>,
+    deadline: Instant,
+    retry: RetryFn,
+}
+
+struct Reactor {
+    listener: TcpListener,
+    poller: Box<dyn Poller>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    jobs: mpsc::Sender<Job>,
+    board: Arc<Board>,
+    deferred: Vec<Deferred>,
+    counters: Arc<RpcCounters>,
+    stop: Arc<AtomicBool>,
+    workers: usize,
+}
+
+pub(crate) struct ReactorServer {
+    stop: Arc<AtomicBool>,
+    board: Arc<Board>,
+    reactor_thread: Option<std::thread::JoinHandle<()>>,
+    worker_threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ReactorServer {
+    pub(crate) fn serve(
+        listener: TcpListener,
+        handler: DeferHandler,
+        counters: Arc<RpcCounters>,
+        workers: usize,
+        poller: Box<dyn Poller>,
+    ) -> Result<ReactorServer> {
+        let workers = workers.max(1);
+        counters.set_backend(poller.name());
+        counters.workers.store(workers as u64, Ordering::Relaxed);
+        counters.threads.store(1 + workers as u64, Ordering::Relaxed);
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let board = Arc::new(Board {
+            completions: Mutex::new(Vec::new()),
+            wake: Wake::new()?,
+        });
+        let (jobs_tx, jobs_rx) = mpsc::channel::<Job>();
+        let jobs_rx = Arc::new(Mutex::new(jobs_rx));
+
+        let mut worker_threads = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = jobs_rx.clone();
+            let handler = handler.clone();
+            let board = board.clone();
+            let counters = counters.clone();
+            worker_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("rpc-worker-{w}"))
+                    .spawn(move || worker_loop(&rx, &handler, &board, &counters))?,
+            );
+        }
+
+        let mut reactor = Reactor {
+            listener,
+            poller,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            jobs: jobs_tx,
+            board: board.clone(),
+            deferred: Vec::new(),
+            counters,
+            stop: stop.clone(),
+            workers,
+        };
+        reactor
+            .poller
+            .add(reactor.listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+        reactor
+            .poller
+            .add(reactor.board.wake.fd(), TOKEN_WAKE, true, false)?;
+        let local = reactor.listener.local_addr()?;
+        let reactor_thread = std::thread::Builder::new()
+            .name(format!("rpc-reactor-{local}"))
+            .spawn(move || reactor.run())?;
+
+        Ok(ReactorServer {
+            stop,
+            board,
+            reactor_thread: Some(reactor_thread),
+            worker_threads,
+        })
+    }
+
+    pub(crate) fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.board.wake.wake();
+        // Joining the reactor drops the job sender, which in turn lets
+        // every worker's recv() fail and its thread exit.
+        if let Some(t) = self.reactor_thread.take() {
+            let _ = t.join();
+        }
+        for t in self.worker_threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<Job>>,
+    handler: &DeferHandler,
+    board: &Board,
+    counters: &RpcCounters,
+) {
+    loop {
+        // Hold the lock across recv: exactly one worker sleeps in recv
+        // while the rest queue on the mutex — the standard shared-receiver
+        // pattern without an MPMC channel.
+        let job = match rx.lock() {
+            Ok(g) => g.recv(),
+            Err(_) => return,
+        };
+        let Ok(job) = job else { return };
+        counters.worker_queue_depth.fetch_sub(1, Ordering::Relaxed);
+        counters.worker_busy.fetch_add(1, Ordering::Relaxed);
+        let Job { token, req_id, method, params, blob } = job;
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handler(&method, &params, blob)
+        }));
+        counters.worker_busy.fetch_sub(1, Ordering::Relaxed);
+        let completion = match out {
+            Ok(Ok(Outcome::Ready(result, out_blob))) => Completion::Respond {
+                token,
+                req_id,
+                body: Ok((result, out_blob)),
+            },
+            Ok(Ok(Outcome::Park(park))) => Completion::Park { token, req_id, park },
+            Ok(Err(e)) => Completion::Respond { token, req_id, body: Err(format!("{e:#}")) },
+            Err(_) => Completion::Respond {
+                token,
+                req_id,
+                body: Err(format!("rpc {method}: handler panicked")),
+            },
+        };
+        board.push(completion);
+    }
+}
+
+impl Reactor {
+    fn run(&mut self) {
+        let mut events: Vec<PollEvent> = Vec::new();
+        while !self.stop.load(Ordering::SeqCst) {
+            let timeout = if self.deferred.is_empty() { TICK_IDLE_MS } else { TICK_PARKED_MS };
+            if self.poller.wait(&mut events, timeout).is_err() {
+                break;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.board.wake.drain(),
+                    token => self.conn_ready(token, ev.readable, ev.writable),
+                }
+            }
+            self.drain_completions();
+            self.retry_deferred();
+        }
+        // Deterministic shutdown: close every live connection now rather
+        // than letting peers discover a dead server by timeout.
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.close_conn(t);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() || stream.set_nodelay(true).is_err() {
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.add(stream.as_raw_fd(), token, true, false).is_err() {
+                        continue;
+                    }
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            rbuf: FrameBuf::new(),
+                            wq: VecDeque::new(),
+                            pending_env: None,
+                            busy: false,
+                            wants_write: false,
+                        },
+                    );
+                    self.counters.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                    self.counters.conns_active.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn conn_ready(&mut self, token: u64, readable: bool, writable: bool) {
+        if writable && !self.flush_writes(token) {
+            self.close_conn(token);
+            return;
+        }
+        if !readable {
+            return;
+        }
+        let mut closed = false;
+        {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            loop {
+                match conn.rbuf.read_from(&mut conn.stream) {
+                    Ok(0) => {
+                        closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        self.counters.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if closed || !self.parse_conn(token) {
+            self.close_conn(token);
+        }
+    }
+
+    /// Lift complete frames out of a connection's receive buffer into
+    /// worker jobs.  Returns false when the stream can never realign
+    /// (oversized frame, bad JSON, malformed id) and must be dropped.
+    fn parse_conn(&mut self, token: u64) -> bool {
+        let mut jobs: Vec<Job> = Vec::new();
+        let keep = 'parse: {
+            let Some(conn) = self.conns.get_mut(&token) else { break 'parse true };
+            loop {
+                if conn.busy {
+                    break 'parse true;
+                }
+                let frame = match conn.rbuf.try_frame() {
+                    Ok(Some(f)) => f,
+                    Ok(None) => break 'parse true,
+                    Err(_) => break 'parse false,
+                };
+                self.counters.frames_in.fetch_add(1, Ordering::Relaxed);
+                if let Some(env) = conn.pending_env.take() {
+                    // this frame is the blob payload for the parked envelope
+                    let blob = frame.to_vec();
+                    if !stage(&mut jobs, conn, token, env, Some(blob)) {
+                        break 'parse false;
+                    }
+                    continue;
+                }
+                let Ok(env) = parse_frame(frame) else { break 'parse false };
+                if env.get("blob").and_then(|b| b.as_bool()).unwrap_or(false) {
+                    conn.pending_env = Some(env);
+                    continue;
+                }
+                if !stage(&mut jobs, conn, token, env, None) {
+                    break 'parse false;
+                }
+            }
+        };
+        for job in jobs {
+            self.dispatch(job);
+        }
+        keep
+    }
+
+    fn dispatch(&mut self, job: Job) {
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        self.counters.in_flight.fetch_add(1, Ordering::Relaxed);
+        let depth = self.counters.worker_queue_depth.fetch_add(1, Ordering::Relaxed);
+        if depth >= self.workers as u64 {
+            self.counters.saturated.fetch_add(1, Ordering::Relaxed);
+        }
+        // send fails only when workers are gone, i.e. during shutdown
+        let _ = self.jobs.send(job);
+    }
+
+    fn drain_completions(&mut self) {
+        let pending: Vec<Completion> = {
+            let mut g = self.board.completions.lock().expect("completion board poisoned");
+            std::mem::take(&mut *g)
+        };
+        for c in pending {
+            match c {
+                Completion::Respond { token, req_id, body } => self.respond(token, req_id, body),
+                Completion::Park { token, req_id, park } => {
+                    if self.conns.contains_key(&token) {
+                        self.counters.parked.fetch_add(1, Ordering::Relaxed);
+                        let Park { deadline, retry } = park;
+                        self.deferred.push(Deferred { token, req_id, deadline, retry });
+                    } else {
+                        // connection vanished while the handler ran; the
+                        // request still leaves the in-flight gauge
+                        self.counters.in_flight.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+
+    fn retry_deferred(&mut self) {
+        if self.deferred.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let stopping = self.stop.load(Ordering::SeqCst);
+        let mut deferred = std::mem::take(&mut self.deferred);
+        let mut i = 0;
+        while i < deferred.len() {
+            if !self.conns.contains_key(&deferred[i].token) {
+                deferred.swap_remove(i);
+                self.counters.parked.fetch_sub(1, Ordering::Relaxed);
+                self.counters.in_flight.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            let outcome: Option<RpcBody> = match (deferred[i].retry)() {
+                Ok(Some(x)) => Some(Ok(x)),
+                Err(e) => Some(Err(format!("{e:#}"))),
+                Ok(None) if now >= deferred[i].deadline || stopping => {
+                    Some(Ok((Json::Null, None)))
+                }
+                Ok(None) => None,
+            };
+            match outcome {
+                Some(body) => {
+                    let d = deferred.swap_remove(i);
+                    self.counters.parked.fetch_sub(1, Ordering::Relaxed);
+                    self.respond(d.token, d.req_id, body);
+                }
+                None => i += 1,
+            }
+        }
+        deferred.append(&mut self.deferred);
+        self.deferred = deferred;
+    }
+
+    fn respond(&mut self, token: u64, req_id: Option<u64>, body: RpcBody) {
+        self.counters.in_flight.fetch_sub(1, Ordering::Relaxed);
+        let seq = req_id.is_none();
+        let staged = {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            let body = match body {
+                Ok((_, Some(b))) if b.len() as u64 > MAX_FRAME as u64 => {
+                    Err("response blob exceeds MAX_FRAME".to_string())
+                }
+                x => x,
+            };
+            let (resp, out_blob) = match body {
+                Ok((result, b)) => (
+                    Json::obj().set("ok", true).set("result", result).set("blob", b.is_some()),
+                    b,
+                ),
+                Err(msg) => (Json::obj().set("ok", false).set("error", msg), None),
+            };
+            let resp = match req_id {
+                Some(id) => resp.set("id", id),
+                None => resp,
+            };
+            let text = resp.to_string();
+            let mut head = Vec::with_capacity(text.len() + 8);
+            if append_frame(&mut head, text.as_bytes()).is_err() {
+                // envelope itself oversized — replace with a small error
+                let err = Json::obj().set("ok", false).set("error", "response exceeds MAX_FRAME");
+                let err = match req_id {
+                    Some(id) => err.set("id", id),
+                    None => err,
+                };
+                head.clear();
+                append_frame(&mut head, err.to_string().as_bytes())
+                    .expect("error envelope fits any frame limit");
+                conn.wq.push_back(WriteChunk { buf: WBuf::Owned(head), off: 0 });
+                self.counters.frames_out.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.counters.frames_out.fetch_add(1, Ordering::Relaxed);
+                if let Some(b) = out_blob {
+                    // blob frame: its length prefix rides the owned chunk,
+                    // the payload is shared zero-copy
+                    head.extend_from_slice(&(b.len() as u32).to_le_bytes());
+                    conn.wq.push_back(WriteChunk { buf: WBuf::Owned(head), off: 0 });
+                    conn.wq.push_back(WriteChunk { buf: WBuf::Shared(b), off: 0 });
+                    self.counters.frames_out.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    conn.wq.push_back(WriteChunk { buf: WBuf::Owned(head), off: 0 });
+                }
+            }
+            if seq {
+                conn.busy = false;
+            }
+            true
+        };
+        if !staged {
+            return;
+        }
+        if !self.flush_writes(token) {
+            self.close_conn(token);
+            return;
+        }
+        // A sequential connection may have the next request already
+        // buffered; parse it now that the slot is free.
+        if seq && !self.parse_conn(token) {
+            self.close_conn(token);
+        }
+    }
+
+    /// Drain a connection's write queue as far as the socket allows.
+    /// Arms EPOLLOUT on WouldBlock, disarms once the queue empties.
+    /// Returns false when the connection is dead.
+    fn flush_writes(&mut self, token: u64) -> bool {
+        let fd: RawFd = match self.conns.get(&token) {
+            Some(c) => c.stream.as_raw_fd(),
+            None => return true,
+        };
+        let mut rearm: Option<bool> = None;
+        let alive = {
+            let Some(conn) = self.conns.get_mut(&token) else { return true };
+            'flush: {
+                loop {
+                    let Some(chunk) = conn.wq.front_mut() else { break };
+                    let rest = chunk.rest();
+                    if rest.is_empty() {
+                        conn.wq.pop_front();
+                        continue;
+                    }
+                    match conn.stream.write(rest) {
+                        Ok(0) => break 'flush false,
+                        Ok(n) => {
+                            chunk.off += n;
+                            self.counters.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+                            if chunk.rest().is_empty() {
+                                conn.wq.pop_front();
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            if !conn.wants_write {
+                                conn.wants_write = true;
+                                rearm = Some(true);
+                            }
+                            break;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => break 'flush false,
+                    }
+                }
+                if conn.wq.is_empty() && conn.wants_write {
+                    conn.wants_write = false;
+                    rearm = Some(false);
+                }
+                true
+            }
+        };
+        if alive {
+            if let Some(w) = rearm {
+                if self.poller.modify(fd, token, true, w).is_err() {
+                    return false;
+                }
+            }
+        }
+        alive
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        let Some(conn) = self.conns.remove(&token) else { return };
+        let _ = self.poller.remove(conn.stream.as_raw_fd());
+        let _ = conn.stream.shutdown(Shutdown::Both);
+        self.counters.conns_active.fetch_sub(1, Ordering::Relaxed);
+        let mut i = 0;
+        while i < self.deferred.len() {
+            if self.deferred[i].token == token {
+                self.deferred.swap_remove(i);
+                self.counters.parked.fetch_sub(1, Ordering::Relaxed);
+                self.counters.in_flight.fetch_sub(1, Ordering::Relaxed);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Turn a parsed envelope (+ optional blob payload) into a staged job.
+/// Returns false on a malformed id — the stream is suspect, drop it.
+fn stage(jobs: &mut Vec<Job>, conn: &mut Conn, token: u64, env: Json, blob: Option<Vec<u8>>) -> bool {
+    let req_id = match env.get("id") {
+        None => None,
+        Some(v) => match v.as_u64() {
+            Some(id) => Some(id),
+            None => return false,
+        },
+    };
+    if req_id.is_none() {
+        conn.busy = true;
+    }
+    jobs.push(Job {
+        token,
+        req_id,
+        method: env.str_of("method").unwrap_or("").to_string(),
+        params: env.get("params").cloned().unwrap_or(Json::Null),
+        blob,
+    });
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoll_poller_reports_eventfd_readability() {
+        let mut p = EpollPoller::new().unwrap();
+        let wake = Wake::new().unwrap();
+        p.add(wake.fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        p.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "nothing written yet");
+        wake.wake();
+        p.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        wake.drain();
+        p.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "drained eventfd is quiet again");
+    }
+}

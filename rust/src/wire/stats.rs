@@ -1,0 +1,215 @@
+//! RPC-plane observability: live per-server counters and their wire
+//! snapshot.
+//!
+//! [`RpcCounters`] is the shared atomic block every transport backend
+//! updates; [`RpcStats`] is the snapshot that rides `ClusterStats.rpc`
+//! over the stats RPC (lenient JSON, `merge`-able across gateways like
+//! every other stats section).
+
+use crate::json::Json;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Live counters, shared between the serving backend and whoever reports
+/// stats (the gateway injects one via `RpcConfig::counters` so its own
+/// `stats` handler can snapshot the server it runs inside).
+#[derive(Debug, Default)]
+pub struct RpcCounters {
+    /// Transport backend name, recorded by the server at startup so any
+    /// holder of the counters can produce a complete snapshot.
+    backend: Mutex<String>,
+    pub conns_accepted: AtomicU64,
+    pub conns_active: AtomicU64,
+    pub requests: AtomicU64,
+    pub in_flight: AtomicU64,
+    pub parked: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub worker_queue_depth: AtomicU64,
+    pub worker_busy: AtomicU64,
+    pub saturated: AtomicU64,
+    pub threads: AtomicU64,
+    pub workers: AtomicU64,
+}
+
+impl RpcCounters {
+    pub fn set_backend(&self, name: &str) {
+        *self.backend.lock().expect("backend name poisoned") = name.to_string();
+    }
+
+    pub fn snapshot(&self) -> RpcStats {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        RpcStats {
+            backend: self.backend.lock().expect("backend name poisoned").clone(),
+            workers: g(&self.workers),
+            threads: g(&self.threads),
+            conns_accepted: g(&self.conns_accepted),
+            conns_active: g(&self.conns_active),
+            requests: g(&self.requests),
+            in_flight: g(&self.in_flight),
+            parked: g(&self.parked),
+            frames_in: g(&self.frames_in),
+            frames_out: g(&self.frames_out),
+            bytes_in: g(&self.bytes_in),
+            bytes_out: g(&self.bytes_out),
+            worker_queue_depth: g(&self.worker_queue_depth),
+            worker_busy: g(&self.worker_busy),
+            saturated: g(&self.saturated),
+        }
+    }
+}
+
+/// Snapshot of one RPC server's counters (or a fleet's, after
+/// [`RpcStats::merge`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RpcStats {
+    /// Transport backend actually serving ("epoll", "uring", "threaded";
+    /// empty when no RPC server reported).
+    pub backend: String,
+    /// Bounded handler pool size.
+    pub workers: u64,
+    /// OS threads the server owns (reactor + workers) — the number that
+    /// stays flat as connections grow.
+    pub threads: u64,
+    pub conns_accepted: u64,
+    pub conns_active: u64,
+    pub requests: u64,
+    pub in_flight: u64,
+    /// Long-polls currently parked as reactor registrations (costing a
+    /// waiter entry, not a thread).
+    pub parked: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub worker_queue_depth: u64,
+    pub worker_busy: u64,
+    /// Requests enqueued while every worker was already busy — a rising
+    /// rate means the pool (`--rpc-workers`) is the bottleneck.
+    pub saturated: u64,
+}
+
+impl RpcStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("backend", self.backend.as_str())
+            .set("workers", self.workers)
+            .set("threads", self.threads)
+            .set("conns_accepted", self.conns_accepted)
+            .set("conns_active", self.conns_active)
+            .set("requests", self.requests)
+            .set("in_flight", self.in_flight)
+            .set("parked", self.parked)
+            .set("frames_in", self.frames_in)
+            .set("frames_out", self.frames_out)
+            .set("bytes_in", self.bytes_in)
+            .set("bytes_out", self.bytes_out)
+            .set("worker_queue_depth", self.worker_queue_depth)
+            .set("worker_busy", self.worker_busy)
+            .set("saturated", self.saturated)
+    }
+
+    /// Lenient parse: absent or malformed fields default (the section
+    /// postdates the stats wire format), unknown fields are ignored.
+    pub fn from_json(j: &Json) -> Result<RpcStats> {
+        let g = |k: &str| j.u64_of(k).unwrap_or(0);
+        Ok(RpcStats {
+            backend: j.str_of("backend").unwrap_or_default().to_string(),
+            workers: g("workers"),
+            threads: g("threads"),
+            conns_accepted: g("conns_accepted"),
+            conns_active: g("conns_active"),
+            requests: g("requests"),
+            in_flight: g("in_flight"),
+            parked: g("parked"),
+            frames_in: g("frames_in"),
+            frames_out: g("frames_out"),
+            bytes_in: g("bytes_in"),
+            bytes_out: g("bytes_out"),
+            worker_queue_depth: g("worker_queue_depth"),
+            worker_busy: g("worker_busy"),
+            saturated: g("saturated"),
+        })
+    }
+
+    /// Fold another server's snapshot in: counters sum, the backend name
+    /// keeps the last non-empty reporter (mixed fleets are visible in
+    /// per-gateway views, not the merged one).
+    pub fn merge(&mut self, other: &RpcStats) {
+        if !other.backend.is_empty() {
+            self.backend = other.backend.clone();
+        }
+        self.workers += other.workers;
+        self.threads += other.threads;
+        self.conns_accepted += other.conns_accepted;
+        self.conns_active += other.conns_active;
+        self.requests += other.requests;
+        self.in_flight += other.in_flight;
+        self.parked += other.parked;
+        self.frames_in += other.frames_in;
+        self.frames_out += other.frames_out;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        self.worker_queue_depth += other.worker_queue_depth;
+        self.worker_busy += other.worker_busy;
+        self.saturated += other.saturated;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RpcStats {
+        RpcStats {
+            backend: "epoll".into(),
+            workers: 4,
+            threads: 5,
+            conns_accepted: 100,
+            conns_active: 12,
+            requests: 5000,
+            in_flight: 3,
+            parked: 9,
+            frames_in: 5100,
+            frames_out: 5050,
+            bytes_in: 1 << 20,
+            bytes_out: 2 << 20,
+            worker_queue_depth: 1,
+            worker_busy: 2,
+            saturated: 17,
+        }
+    }
+
+    #[test]
+    fn rpc_stats_json_roundtrip() {
+        let s = sample();
+        assert_eq!(RpcStats::from_json(&s.to_json()).unwrap(), s);
+    }
+
+    #[test]
+    fn rpc_stats_parse_is_lenient() {
+        // Absent fields default; unknown fields from newer peers are
+        // ignored — the lenient-wire convention every stats section
+        // follows.
+        let parsed = RpcStats::from_json(&Json::obj().set("zzz_future", 7u64)).unwrap();
+        assert_eq!(parsed, RpcStats::default());
+        let j = sample().to_json().set("zzz_future", Json::obj().set("nested", true));
+        assert_eq!(RpcStats::from_json(&j).unwrap(), sample());
+    }
+
+    #[test]
+    fn rpc_stats_merge_sums_counters_and_keeps_last_backend() {
+        let mut fleet = RpcStats::default();
+        fleet.merge(&sample());
+        let mut other = sample();
+        other.backend = String::new(); // an old peer reporting no backend
+        fleet.merge(&other);
+        assert_eq!(fleet.backend, "epoll", "empty backend never overwrites");
+        assert_eq!(fleet.requests, 10000);
+        assert_eq!(fleet.conns_active, 24);
+        assert_eq!(fleet.threads, 10);
+    }
+}

@@ -1,0 +1,205 @@
+//! Raw Linux syscall bindings for the reactor.
+//!
+//! The dependency closure has no `libc` crate, so the handful of calls
+//! the event loop needs — epoll, eventfd, io_uring setup/enter, mmap —
+//! are declared by hand.  Everything here is Linux-only and gated at the
+//! module level (`wire/mod.rs`); other platforms fall back to the
+//! threaded transport.  Errno is read through
+//! `std::io::Error::last_os_error()`, which shares the same thread-local
+//! the C library sets.
+#![allow(dead_code)]
+#![allow(non_camel_case_types)]
+
+use std::os::raw::{c_int, c_long, c_uint, c_void};
+
+// -- epoll ------------------------------------------------------------------
+
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+pub const EPOLL_CTL_ADD: c_int = 1;
+pub const EPOLL_CTL_DEL: c_int = 2;
+pub const EPOLL_CTL_MOD: c_int = 3;
+pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+/// The kernel packs this struct on x86-64 only (a 12-byte layout); other
+/// architectures use natural alignment.  Mirrors the libc definition —
+/// always copy fields out by value, never take references into it.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+pub struct epoll_event {
+    pub events: u32,
+    pub data: u64,
+}
+
+// -- eventfd ----------------------------------------------------------------
+
+pub const EFD_CLOEXEC: c_int = 0o2000000;
+pub const EFD_NONBLOCK: c_int = 0o4000;
+
+// -- io_uring ---------------------------------------------------------------
+//
+// Syscall numbers are from the unified (asm-generic) table, identical on
+// x86-64 and aarch64 — the only kernels CI and deployments run on.
+
+pub const SYS_IO_URING_SETUP: c_long = 425;
+pub const SYS_IO_URING_ENTER: c_long = 426;
+
+pub const IORING_OP_POLL_ADD: u8 = 6;
+pub const IORING_OP_POLL_REMOVE: u8 = 7;
+pub const IORING_OP_TIMEOUT: u8 = 11;
+
+pub const IORING_ENTER_GETEVENTS: c_uint = 1;
+pub const IORING_FEAT_SINGLE_MMAP: u32 = 1;
+
+pub const IORING_OFF_SQ_RING: i64 = 0;
+pub const IORING_OFF_SQES: i64 = 0x1000_0000;
+
+pub const PROT_READ: c_int = 0x1;
+pub const PROT_WRITE: c_int = 0x2;
+pub const MAP_SHARED: c_int = 0x01;
+pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_sqring_offsets {
+    pub head: u32,
+    pub tail: u32,
+    pub ring_mask: u32,
+    pub ring_entries: u32,
+    pub flags: u32,
+    pub dropped: u32,
+    pub array: u32,
+    pub resv1: u32,
+    pub resv2: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_cqring_offsets {
+    pub head: u32,
+    pub tail: u32,
+    pub ring_mask: u32,
+    pub ring_entries: u32,
+    pub overflow: u32,
+    pub cqes: u32,
+    pub flags: u32,
+    pub resv1: u32,
+    pub resv2: u64,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_uring_params {
+    pub sq_entries: u32,
+    pub cq_entries: u32,
+    pub flags: u32,
+    pub sq_thread_cpu: u32,
+    pub sq_thread_idle: u32,
+    pub features: u32,
+    pub wq_fd: u32,
+    pub resv: [u32; 3],
+    pub sq_off: io_sqring_offsets,
+    pub cq_off: io_cqring_offsets,
+}
+
+/// One submission-queue entry (64 bytes).  The trailing union soup of
+/// the kernel header collapses to the fields the poll/timeout opcodes
+/// use plus padding.
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_uring_sqe {
+    pub opcode: u8,
+    pub flags: u8,
+    pub ioprio: u16,
+    pub fd: i32,
+    pub off: u64,
+    pub addr: u64,
+    pub len: u32,
+    pub op_flags: u32,
+    pub user_data: u64,
+    pub pad: [u64; 3],
+}
+
+/// One completion-queue entry (16 bytes).
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct io_uring_cqe {
+    pub user_data: u64,
+    pub res: i32,
+    pub flags: u32,
+}
+
+#[repr(C)]
+#[derive(Clone, Copy, Default)]
+pub struct kernel_timespec {
+    pub tv_sec: i64,
+    pub tv_nsec: i64,
+}
+
+// -- bindings ---------------------------------------------------------------
+
+extern "C" {
+    pub fn epoll_create1(flags: c_int) -> c_int;
+    pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut epoll_event) -> c_int;
+    pub fn epoll_wait(
+        epfd: c_int,
+        events: *mut epoll_event,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+    pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    pub fn close(fd: c_int) -> c_int;
+    pub fn syscall(num: c_long, ...) -> c_long;
+    pub fn mmap(
+        addr: *mut c_void,
+        len: usize,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: i64,
+    ) -> *mut c_void;
+    pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+}
+
+/// The current thread's errno as an `io::Error`.
+pub fn os_err(what: &str) -> anyhow::Error {
+    anyhow::Error::new(std::io::Error::last_os_error()).context(what.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binding_struct_layouts_match_the_abi() {
+        assert_eq!(std::mem::size_of::<io_uring_sqe>(), 64);
+        assert_eq!(std::mem::size_of::<io_uring_cqe>(), 16);
+        assert_eq!(std::mem::size_of::<io_uring_params>(), 120);
+        assert_eq!(std::mem::size_of::<kernel_timespec>(), 16);
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(std::mem::size_of::<epoll_event>(), 12);
+    }
+
+    #[test]
+    fn eventfd_write_read_roundtrip() {
+        unsafe {
+            let fd = eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK);
+            assert!(fd >= 0, "eventfd: {}", std::io::Error::last_os_error());
+            let one: u64 = 1;
+            let n = write(fd, &one as *const u64 as *const c_void, 8);
+            assert_eq!(n, 8);
+            let mut val: u64 = 0;
+            let n = read(fd, &mut val as *mut u64 as *mut c_void, 8);
+            assert_eq!(n, 8);
+            assert_eq!(val, 1);
+            close(fd);
+        }
+    }
+}

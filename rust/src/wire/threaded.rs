@@ -1,0 +1,228 @@
+//! Thread-per-connection transport: the portable fallback backend.
+//!
+//! This is the pre-reactor serving model (one blocking OS thread per
+//! accepted socket), kept as an explicit backend for non-Linux hosts and
+//! as a behavioral reference: both backends run the identical test
+//! suite.  Deferred handlers ([`Outcome::Park`]) are resolved with a
+//! millisecond retry loop — on this backend a parked long-poll *does*
+//! cost its connection thread, which is exactly the scaling wall the
+//! reactor removes.
+
+use super::frame::{read_blob, read_frame_buf, write_blob, write_frame_buf};
+use super::stats::RpcCounters;
+use super::{DeferHandler, Outcome};
+use crate::json::Json;
+use crate::store::Blob;
+use anyhow::Result;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+pub(crate) struct ThreadedServer {
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    /// Duplicated handles of every accepted socket, so shutdown can close
+    /// live connections deterministically instead of waiting out their
+    /// next 200 ms timeout poll.
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    conn_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl ThreadedServer {
+    pub(crate) fn serve(
+        listener: TcpListener,
+        handler: DeferHandler,
+        counters: Arc<RpcCounters>,
+    ) -> Result<ThreadedServer> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let conn_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        counters.threads.store(1, Ordering::Relaxed);
+        let accept_thread = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let conn_threads = conn_threads.clone();
+            let local = listener.local_addr()?;
+            std::thread::Builder::new()
+                .name(format!("rpc-accept-{local}"))
+                .spawn(move || {
+                    // Exponential backoff while idle: an idle cluster runs
+                    // gateway + queue + store accept loops, and three
+                    // threads spinning at 2 ms would burn CPU for nothing.
+                    const IDLE_FLOOR: Duration = Duration::from_millis(2);
+                    const IDLE_CAP: Duration = Duration::from_millis(50);
+                    let mut idle_wait = IDLE_FLOOR;
+                    while !stop.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                idle_wait = IDLE_FLOOR;
+                                if let Ok(dup) = stream.try_clone() {
+                                    conns.lock().expect("conn registry poisoned").push(dup);
+                                }
+                                counters.conns_accepted.fetch_add(1, Ordering::Relaxed);
+                                counters.conns_active.fetch_add(1, Ordering::Relaxed);
+                                counters.threads.fetch_add(1, Ordering::Relaxed);
+                                let h = handler.clone();
+                                let stop2 = stop.clone();
+                                let counters2 = counters.clone();
+                                let t = std::thread::spawn(move || {
+                                    let _ = serve_conn(stream, h, stop2, &counters2);
+                                    counters2.conns_active.fetch_sub(1, Ordering::Relaxed);
+                                    counters2.threads.fetch_sub(1, Ordering::Relaxed);
+                                });
+                                conn_threads.lock().expect("threads poisoned").push(t);
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                std::thread::sleep(idle_wait);
+                                idle_wait = (idle_wait * 2).min(IDLE_CAP);
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                })?
+        };
+        Ok(ThreadedServer {
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+            conn_threads,
+        })
+    }
+
+    pub(crate) fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Close live sockets so connection threads unblock immediately.
+        for c in self.conns.lock().expect("conn registry poisoned").drain(..) {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let threads: Vec<_> =
+            self.conn_threads.lock().expect("threads poisoned").drain(..).collect();
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    handler: DeferHandler,
+    stop: Arc<AtomicBool>,
+    counters: &RpcCounters,
+) -> Result<()> {
+    // Clients disable Nagle at connect; mirror it on the accept side so
+    // small response frames (leases, acks) flush immediately instead of
+    // waiting out a delayed-ACK round.
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    // Serialization + receive buffers, reused across this connection's
+    // requests (no per-frame allocation on the hot path).
+    let mut scratch = String::new();
+    let mut rbuf: Vec<u8> = Vec::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let req = match read_frame_buf(&mut stream, &mut rbuf) {
+            Ok(r) => r,
+            Err(e) => {
+                // timeouts poll the stop flag; EOF/parse errors end the conn
+                if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                    if matches!(
+                        ioe.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) {
+                        continue;
+                    }
+                }
+                return Ok(());
+            }
+        };
+        counters.frames_in.fetch_add(1, Ordering::Relaxed);
+        counters.bytes_in.fetch_add(rbuf.len() as u64 + 4, Ordering::Relaxed);
+        let method = req.str_of("method").unwrap_or("").to_string();
+        let params = req.get("params").cloned().unwrap_or(Json::Null);
+        let req_id = req.get("id").and_then(|v| v.as_u64());
+        let has_blob = req.get("blob").and_then(|b| b.as_bool()).unwrap_or(false);
+        let blob = if has_blob {
+            // blob frames follow the envelope immediately; block until read
+            stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+            let b = read_blob(&mut stream)?;
+            stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+            counters.frames_in.fetch_add(1, Ordering::Relaxed);
+            counters.bytes_in.fetch_add(b.len() as u64 + 4, Ordering::Relaxed);
+            Some(b)
+        } else {
+            None
+        };
+        counters.requests.fetch_add(1, Ordering::Relaxed);
+        counters.in_flight.fetch_add(1, Ordering::Relaxed);
+        let resolved = resolve(handler(&method, &params, blob), &stop, counters);
+        counters.in_flight.fetch_sub(1, Ordering::Relaxed);
+        respond(&mut stream, &mut scratch, req_id, resolved, counters)?;
+    }
+}
+
+/// Run a handler outcome to completion.  Parked outcomes retry on a
+/// millisecond loop until they produce a value, error, or expire — this
+/// backend has no reactor to register with, so the park rides the
+/// connection thread it already owns.
+fn resolve(
+    outcome: Result<Outcome>,
+    stop: &AtomicBool,
+    counters: &RpcCounters,
+) -> Result<(Json, Option<Blob>)> {
+    match outcome {
+        Ok(Outcome::Ready(result, blob)) => Ok((result, blob)),
+        Ok(Outcome::Park(mut park)) => {
+            counters.parked.fetch_add(1, Ordering::Relaxed);
+            let out = loop {
+                match (park.retry)() {
+                    Ok(Some(x)) => break Ok(x),
+                    Ok(None) => {
+                        if Instant::now() >= park.deadline || stop.load(Ordering::SeqCst) {
+                            break Ok((Json::Null, None));
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(e) => break Err(e),
+                }
+            };
+            counters.parked.fetch_sub(1, Ordering::Relaxed);
+            out
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    scratch: &mut String,
+    req_id: Option<u64>,
+    resolved: Result<(Json, Option<Blob>)>,
+    counters: &RpcCounters,
+) -> Result<()> {
+    let (mut resp, out_blob) = match resolved {
+        Ok((result, out_blob)) => (
+            Json::obj().set("ok", true).set("result", result).set("blob", out_blob.is_some()),
+            out_blob,
+        ),
+        Err(e) => (Json::obj().set("ok", false).set("error", format!("{e:#}")), None),
+    };
+    if let Some(id) = req_id {
+        resp = resp.set("id", id);
+    }
+    write_frame_buf(stream, &resp, scratch)?;
+    counters.frames_out.fetch_add(1, Ordering::Relaxed);
+    counters.bytes_out.fetch_add(scratch.len() as u64 + 4, Ordering::Relaxed);
+    if let Some(b) = out_blob {
+        write_blob(stream, &b)?;
+        counters.frames_out.fetch_add(1, Ordering::Relaxed);
+        counters.bytes_out.fetch_add(b.len() as u64 + 4, Ordering::Relaxed);
+    }
+    Ok(())
+}

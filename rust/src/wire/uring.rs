@@ -1,0 +1,396 @@
+//! io_uring transport backend, in poll mode.
+//!
+//! Implements the reactor's [`Poller`] trait on a raw io_uring: each
+//! interest is a one-shot `IORING_OP_POLL_ADD` re-armed at the top of
+//! every wait, timed waits ride an `IORING_OP_TIMEOUT` sqe (a plain
+//! blocking enter would sleep forever on an idle server), and the sq/cq
+//! rings are driven through hand-rolled mmap + atomics — no liburing in
+//! the dependency closure.  `probe()` decides at runtime whether this
+//! backend exists at all: setup or a self-test failing for ANY reason
+//! (ENOSYS on old kernels, seccomp, missing features) falls back to
+//! epoll, which is exactly the graceful degradation the `auto` backend
+//! promises.
+//!
+//! Poll event bits share epoll's numeric values on Linux, so the
+//! `EPOLL*` constants double as `POLL*` masks here.
+
+use super::reactor::{interest_mask, PollEvent, Poller, Wake};
+use super::sys;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::os::raw::{c_int, c_long, c_void};
+use std::os::unix::io::RawFd;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// cqe user_data sentinels; real polls carry their fd (small, no clash).
+const TIMEOUT_TOKEN: u64 = u64::MAX;
+const REMOVE_TOKEN: u64 = u64::MAX - 1;
+
+const ENTRIES: u32 = 256;
+
+struct Interest {
+    token: u64,
+    readable: bool,
+    writable: bool,
+    /// A POLL_ADD for this fd is currently registered with the kernel.
+    armed: bool,
+}
+
+pub(crate) struct UringPoller {
+    ring_fd: c_int,
+    ring: *mut u8,
+    ring_len: usize,
+    sqes: *mut sys::io_uring_sqe,
+    sqes_len: usize,
+    sq_head: *const AtomicU32,
+    sq_tail: *const AtomicU32,
+    sq_mask: u32,
+    sq_entries: u32,
+    sq_array: *mut u32,
+    cq_head: *const AtomicU32,
+    cq_tail: *const AtomicU32,
+    cq_mask: u32,
+    cqes: *const sys::io_uring_cqe,
+    to_submit: u32,
+    ts: sys::kernel_timespec,
+    interests: HashMap<RawFd, Interest>,
+}
+
+// The rings are only ever touched by the single thread that owns the
+// poller (the reactor); the raw pointers make the type !Send by default.
+unsafe impl Send for UringPoller {}
+
+impl UringPoller {
+    /// Runtime probe: build a ring and pass a poll self-test, or report
+    /// that this kernel can't (caller falls back to epoll).
+    /// `force_fail` exercises the fallback path deterministically in CI.
+    pub(crate) fn probe(force_fail: bool) -> Option<UringPoller> {
+        if force_fail {
+            return None;
+        }
+        let mut p = UringPoller::new().ok()?;
+        p.self_test().ok()?;
+        Some(p)
+    }
+
+    fn new() -> Result<UringPoller> {
+        let mut params = sys::io_uring_params::default();
+        let ring_fd = unsafe {
+            sys::syscall(
+                sys::SYS_IO_URING_SETUP,
+                ENTRIES as c_long,
+                &mut params as *mut sys::io_uring_params as c_long,
+            )
+        } as c_int;
+        if ring_fd < 0 {
+            return Err(sys::os_err("io_uring_setup"));
+        }
+        if params.features & sys::IORING_FEAT_SINGLE_MMAP == 0 {
+            unsafe { sys::close(ring_fd) };
+            bail!("io_uring lacks IORING_FEAT_SINGLE_MMAP (pre-5.4 kernel)");
+        }
+        let sq_len = params.sq_off.array as usize + params.sq_entries as usize * 4;
+        let cq_len = params.cq_off.cqes as usize
+            + params.cq_entries as usize * std::mem::size_of::<sys::io_uring_cqe>();
+        let ring_len = sq_len.max(cq_len);
+        let ring = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                ring_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                ring_fd,
+                sys::IORING_OFF_SQ_RING,
+            )
+        };
+        if ring == sys::MAP_FAILED {
+            let e = sys::os_err("mmap sq/cq ring");
+            unsafe { sys::close(ring_fd) };
+            return Err(e);
+        }
+        let sqes_len = params.sq_entries as usize * std::mem::size_of::<sys::io_uring_sqe>();
+        let sqes = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                sqes_len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                ring_fd,
+                sys::IORING_OFF_SQES,
+            )
+        };
+        if sqes == sys::MAP_FAILED {
+            let e = sys::os_err("mmap sqes");
+            unsafe {
+                sys::munmap(ring, ring_len);
+                sys::close(ring_fd);
+            }
+            return Err(e);
+        }
+        let ring = ring as *mut u8;
+        let at = |off: u32| unsafe { ring.add(off as usize) };
+        let sq_mask = unsafe { *(at(params.sq_off.ring_mask) as *const u32) };
+        let cq_mask = unsafe { *(at(params.cq_off.ring_mask) as *const u32) };
+        Ok(UringPoller {
+            ring_fd,
+            ring,
+            ring_len,
+            sqes: sqes as *mut sys::io_uring_sqe,
+            sqes_len,
+            sq_head: at(params.sq_off.head) as *const AtomicU32,
+            sq_tail: at(params.sq_off.tail) as *const AtomicU32,
+            sq_mask,
+            sq_entries: params.sq_entries,
+            sq_array: at(params.sq_off.array) as *mut u32,
+            cq_head: at(params.cq_off.head) as *const AtomicU32,
+            cq_tail: at(params.cq_off.tail) as *const AtomicU32,
+            cq_mask,
+            cqes: at(params.cq_off.cqes) as *const sys::io_uring_cqe,
+            to_submit: 0,
+            ts: sys::kernel_timespec::default(),
+            interests: HashMap::new(),
+        })
+    }
+
+    /// End-to-end check that polls actually complete on this kernel: arm
+    /// an eventfd, fire it, expect the readiness cqe back.
+    fn self_test(&mut self) -> Result<()> {
+        let wake = Wake::new()?;
+        self.add(wake.fd(), 42, true, false)?;
+        wake.wake();
+        let mut events = Vec::new();
+        self.wait(&mut events, 1000)?;
+        ensure!(
+            events.iter().any(|e| e.token == 42 && e.readable),
+            "io_uring self-test: poll completion never arrived"
+        );
+        self.remove(wake.fd())?;
+        let mut scratch = Vec::new();
+        let _ = self.wait(&mut scratch, 0); // reap the cancellation cqe
+        Ok(())
+    }
+
+    fn enter(&self, to_submit: u32, min_complete: u32, flags: u32) -> c_long {
+        unsafe {
+            sys::syscall(
+                sys::SYS_IO_URING_ENTER,
+                self.ring_fd as c_long,
+                to_submit as c_long,
+                min_complete as c_long,
+                flags as c_long,
+                0 as c_long,
+                0 as c_long,
+            )
+        }
+    }
+
+    /// Hand pending sqes to the kernel without waiting for completions.
+    fn flush(&mut self) -> Result<()> {
+        while self.to_submit > 0 {
+            let r = self.enter(self.to_submit, 0, 0);
+            if r < 0 {
+                let e = std::io::Error::last_os_error();
+                if e.kind() == std::io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(anyhow::Error::new(e).context("io_uring_enter (submit)"));
+            }
+            self.to_submit -= (r as u32).min(self.to_submit);
+        }
+        Ok(())
+    }
+
+    fn push_sqe(&mut self, sqe: sys::io_uring_sqe) -> Result<()> {
+        loop {
+            let head = unsafe { (*self.sq_head).load(Ordering::Acquire) };
+            let tail = unsafe { (*self.sq_tail).load(Ordering::Relaxed) };
+            if tail.wrapping_sub(head) < self.sq_entries {
+                let idx = tail & self.sq_mask;
+                unsafe {
+                    *self.sqes.add(idx as usize) = sqe;
+                    *self.sq_array.add(idx as usize) = idx;
+                    (*self.sq_tail).store(tail.wrapping_add(1), Ordering::Release);
+                }
+                self.to_submit += 1;
+                return Ok(());
+            }
+            self.flush()?;
+        }
+    }
+
+    fn push_poll(&mut self, fd: RawFd, readable: bool, writable: bool) -> Result<()> {
+        let sqe = sys::io_uring_sqe {
+            opcode: sys::IORING_OP_POLL_ADD,
+            fd,
+            op_flags: interest_mask(readable, writable),
+            user_data: fd as u64,
+            ..Default::default()
+        };
+        self.push_sqe(sqe)
+    }
+
+    fn push_cancel(&mut self, fd: RawFd) -> Result<()> {
+        let sqe = sys::io_uring_sqe {
+            opcode: sys::IORING_OP_POLL_REMOVE,
+            fd: -1,
+            addr: fd as u64,
+            user_data: REMOVE_TOKEN,
+            ..Default::default()
+        };
+        self.push_sqe(sqe)
+    }
+
+    fn drain_cqes(&mut self, events: &mut Vec<PollEvent>) {
+        let tail = unsafe { (*self.cq_tail).load(Ordering::Acquire) };
+        let mut head = unsafe { (*self.cq_head).load(Ordering::Relaxed) };
+        while head != tail {
+            let cqe = unsafe { *self.cqes.add((head & self.cq_mask) as usize) };
+            head = head.wrapping_add(1);
+            self.handle_cqe(cqe, events);
+        }
+        unsafe { (*self.cq_head).store(head, Ordering::Release) };
+    }
+
+    fn handle_cqe(&mut self, cqe: sys::io_uring_cqe, events: &mut Vec<PollEvent>) {
+        if cqe.user_data == TIMEOUT_TOKEN || cqe.user_data == REMOVE_TOKEN {
+            return;
+        }
+        let fd = cqe.user_data as RawFd;
+        let Some(interest) = self.interests.get_mut(&fd) else { return };
+        // one-shot poll consumed (completed or cancelled) either way
+        interest.armed = false;
+        if cqe.res < 0 {
+            return;
+        }
+        let bits = cqe.res as u32;
+        let readable =
+            bits & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLERR | sys::EPOLLRDHUP) != 0;
+        let writable = bits & (sys::EPOLLOUT | sys::EPOLLERR | sys::EPOLLHUP) != 0;
+        if readable || writable {
+            events.push(PollEvent { token: interest.token, readable, writable });
+        }
+    }
+}
+
+impl Poller for UringPoller {
+    fn name(&self) -> &'static str {
+        "uring"
+    }
+
+    fn add(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+        self.interests.insert(fd, Interest { token, readable, writable, armed: false });
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+        let armed = match self.interests.get_mut(&fd) {
+            Some(i) => {
+                let was = i.armed;
+                i.token = token;
+                i.readable = readable;
+                i.writable = writable;
+                i.armed = false;
+                was
+            }
+            None => {
+                self.interests.insert(fd, Interest { token, readable, writable, armed: false });
+                false
+            }
+        };
+        if armed {
+            // cancel the stale-mask poll; the new mask re-arms next wait
+            self.push_cancel(fd)?;
+        }
+        Ok(())
+    }
+
+    fn remove(&mut self, fd: RawFd) -> Result<()> {
+        if let Some(i) = self.interests.remove(&fd) {
+            if i.armed {
+                self.push_cancel(fd)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, events: &mut Vec<PollEvent>, timeout_ms: i32) -> Result<()> {
+        events.clear();
+        // re-arm every interest whose one-shot poll was consumed
+        let unarmed: Vec<(RawFd, bool, bool)> = self
+            .interests
+            .iter()
+            .filter(|(_, i)| !i.armed)
+            .map(|(fd, i)| (*fd, i.readable, i.writable))
+            .collect();
+        for (fd, r, w) in unarmed {
+            self.push_poll(fd, r, w)?;
+            if let Some(i) = self.interests.get_mut(&fd) {
+                i.armed = true;
+            }
+        }
+        self.drain_cqes(events);
+        if !events.is_empty() {
+            self.flush()?;
+            return Ok(());
+        }
+        // Nothing ready: sleep in the kernel under a count-1 timeout so
+        // either the first completion or the deadline wakes us.
+        let ms = timeout_ms.max(0) as i64;
+        self.ts = sys::kernel_timespec {
+            tv_sec: ms / 1000,
+            tv_nsec: (ms % 1000) * 1_000_000,
+        };
+        let sqe = sys::io_uring_sqe {
+            opcode: sys::IORING_OP_TIMEOUT,
+            fd: -1,
+            addr: &self.ts as *const sys::kernel_timespec as u64,
+            len: 1,
+            off: 1, // count: complete after 1 cqe or when the timer fires
+            user_data: TIMEOUT_TOKEN,
+            ..Default::default()
+        };
+        self.push_sqe(sqe)?;
+        let r = self.enter(self.to_submit, 1, sys::IORING_ENTER_GETEVENTS);
+        if r < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(anyhow::Error::new(e).context("io_uring_enter (wait)"));
+        }
+        self.to_submit -= (r as u32).min(self.to_submit);
+        self.drain_cqes(events);
+        Ok(())
+    }
+}
+
+impl Drop for UringPoller {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ring as *mut c_void, self.ring_len);
+            sys::munmap(self.sqes as *mut c_void, self.sqes_len);
+            sys::close(self.ring_fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uring_probe_passes_its_self_test_or_skips_cleanly() {
+        // On uring-capable kernels this exercises setup + poll + cancel
+        // end to end; elsewhere the probe declining IS the correct
+        // behavior (the auto backend falls back to epoll).
+        match UringPoller::probe(false) {
+            Some(p) => assert_eq!(p.name(), "uring"),
+            None => eprintln!("io_uring unavailable here; probe declined (fallback path)"),
+        }
+    }
+
+    #[test]
+    fn forced_probe_failure_declines_without_touching_the_kernel() {
+        assert!(UringPoller::probe(true).is_none());
+    }
+}
