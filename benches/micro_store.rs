@@ -149,6 +149,82 @@ fn main() -> anyhow::Result<()> {
         }
     });
 
+    // Hot-set summary extraction (DESIGN.md §15): the top-K LRU scan a
+    // node runs on every completion report to gossip its cache
+    // contents.  Must stay cheap enough to stamp on every report.
+    let n_hot = 200_000;
+    let hot_rate = measure(
+        &mut results,
+        "hot-set summary (top-16 of warm cache)",
+        n_hot,
+        || {
+            for _ in 0..n_hot {
+                let (keys, _gen) = cached.hot_keys(16);
+                assert_eq!(keys.len(), 16);
+            }
+        },
+    );
+
+    // Affinity fleet row (ROADMAP): a repeated-dataset trace through a
+    // 2-node mock cluster, cache-affinity policy on vs off.  Reports
+    // end-to-end dispatch throughput for both and asserts the affinity
+    // run converges to >=90% cache-hit dispatches (every node re-serves
+    // data it already holds; misses are bounded by nodes x datasets).
+    let fleet = |affinity: bool| -> anyhow::Result<(f64, f64)> {
+        use hardless::accel::paper_dualgpu;
+        use hardless::api::HardlessClient;
+        use hardless::coordinator::cluster::ExecutorKind;
+        use hardless::events::EventSpec;
+        use hardless::scheduler::{CacheAffinity, Policy, WarmFirst};
+        use std::time::Duration;
+
+        let policy: Arc<dyn Policy> = if affinity {
+            Arc::new(CacheAffinity::over(Arc::new(WarmFirst)))
+        } else {
+            Arc::new(WarmFirst)
+        };
+        let cluster = hardless::coordinator::Cluster::builder()
+            .time_scale(500.0)
+            .executors(ExecutorKind::Mock { scale: 2.0, delay: Duration::from_millis(1) })
+            .policy(policy)
+            .node("bench-n1", paper_dualgpu())
+            .node("bench-n2", paper_dualgpu())
+            .build()?;
+        let ka = cluster.upload_dataset("bench-a", &[1.0; 64])?;
+        let kb = cluster.upload_dataset("bench-b", &[2.0; 64])?;
+        let n_inv = 200usize;
+        let specs: Vec<EventSpec> = (0..n_inv)
+            .map(|i| EventSpec::new("tinyyolo", if i % 2 == 0 { &ka } else { &kb }))
+            .collect();
+        let t0 = Instant::now();
+        let ids = cluster.submit_batch(specs)?;
+        for id in &ids {
+            cluster
+                .wait(id, Duration::from_secs(120))?
+                .ok_or_else(|| anyhow::anyhow!("{id} timed out"))?;
+        }
+        let rate = n_inv as f64 / t0.elapsed().as_secs_f64();
+        let aff = cluster.affinity_totals();
+        let hit_frac = aff.hits as f64 / (aff.hits + aff.misses).max(1) as f64;
+        cluster.shutdown();
+        Ok((rate, hit_frac))
+    };
+    let (rate_on, frac_on) = fleet(true)?;
+    let (rate_off, frac_off) = fleet(false)?;
+    println!(
+        "fleet dispatch: affinity on {rate_on:.0} inv/s ({:.0}% cache-hit) | off {rate_off:.0} inv/s ({:.0}% cache-hit)",
+        frac_on * 100.0,
+        frac_off * 100.0
+    );
+    results.push(("fleet dispatch (affinity on)", rate_on));
+    results.push(("fleet dispatch (warm-first)", rate_off));
+    results.push(("fleet cache-hit dispatch fraction (affinity on)", frac_on));
+    results.push(("fleet cache-hit dispatch fraction (warm-first)", frac_off));
+    anyhow::ensure!(
+        frac_on >= 0.9,
+        "affinity fleet below 90% cache-hit dispatches: {frac_on:.2}"
+    );
+
     // machine-readable trajectory for future perf PRs
     let mut out = Json::obj();
     for (name, rate) in &results {
@@ -162,6 +238,7 @@ fn main() -> anyhow::Result<()> {
         ("cached get", warm_rate, 1_000_000.0),
         ("stampede", stampede_rate, 10_000.0),
         ("put_cas", cas_rate, 20.0),
+        ("hot-set summary", hot_rate, 100_000.0),
     ] {
         anyhow::ensure!(rate > floor, "{name} below {floor:.0} ops/s: {rate:.0}");
     }

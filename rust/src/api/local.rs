@@ -45,6 +45,7 @@ impl HardlessClient for Cluster {
         // gateway cannot), and the autoscale section comes straight from
         // the controller.
         stats.cache = self.node_cache_stats();
+        stats.affinity = self.affinity_totals();
         stats.autoscale = self.autoscale_stats();
         stats.batch = self.batch_totals();
         Ok(stats)

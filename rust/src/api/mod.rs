@@ -26,7 +26,7 @@ pub use local::LocalClient;
 use crate::autoscale::AutoscaleStats;
 use crate::events::{EventSpec, Invocation};
 use crate::json::Json;
-use crate::node::VariantBatchStats;
+use crate::node::{AffinityStats, VariantBatchStats};
 use crate::queue::{ClassStats, QueueStats, ShardStats};
 use crate::store::{Blob, CacheStats};
 use crate::wire::RpcStats;
@@ -107,6 +107,12 @@ pub struct ClusterStats {
     /// in-process `Cluster` can aggregate them, a distributed gateway
     /// cannot see its remote nodes' caches and reports zeros.
     pub cache: CacheStats,
+    /// Data-locality counters (DESIGN.md §15): dataset fetches that
+    /// found their object already resident in the serving node's cache
+    /// (hits) vs fetched from backing (misses).  Aggregated like
+    /// `cache`: node-local state, so a distributed gateway reports
+    /// zeros.
+    pub affinity: AffinityStats,
     /// Autoscaler section: decision counters, current/target nodes,
     /// last action + reason.  Disabled default when no controller runs.
     pub autoscale: AutoscaleStats,
@@ -141,6 +147,7 @@ impl ClusterStats {
             failed: counts.failed,
             queue: coordinator.queue_stats()?,
             cache: CacheStats::default(),
+            affinity: AffinityStats::default(),
             autoscale: AutoscaleStats::default(),
             batch: Vec::new(),
             gc_deleted: counts.gc_deleted,
@@ -171,6 +178,8 @@ impl ClusterStats {
             .set("cache_coalesced", self.cache.coalesced as usize)
             .set("cache_entries", self.cache.entries as usize)
             .set("cache_bytes", self.cache.bytes as usize)
+            .set("affinity_hits", self.affinity.hits as usize)
+            .set("affinity_misses", self.affinity.misses as usize)
             .set("autoscale", self.autoscale.to_json())
             .set("batch", Json::Arr(batch))
             .set("gc_deleted", self.gc_deleted)
@@ -231,6 +240,12 @@ impl ClusterStats {
                 entries: cache_u64("cache_entries"),
                 bytes: cache_u64("cache_bytes"),
             },
+            // Lenient like the cache counters: the affinity pair
+            // postdates the wire format (pre-affinity peers omit it).
+            affinity: AffinityStats {
+                hits: cache_u64("affinity_hits"),
+                misses: cache_u64("affinity_misses"),
+            },
             autoscale: j
                 .get("autoscale")
                 .map(AutoscaleStats::from_json)
@@ -264,11 +279,14 @@ impl ClusterStats {
     /// shards), nodes, and tracking — so counters *sum* without double
     /// counting.  Per-class gauges merge by runtime (depths sum, ages
     /// take the max — the fleet's oldest waiter is what the autoscaler
-    /// cares about), shard sections concatenate, and the autoscale
+    /// cares about), shard sections merge by shard name (counters sum,
+    /// class lanes union — gateways fronting the same sharded queue
+    /// must not list a shard once per gateway), and the autoscale
     /// narrative fields keep the last gateway that reported one.
     pub fn merge(parts: impl IntoIterator<Item = ClusterStats>) -> ClusterStats {
         let mut out = ClusterStats::default();
         let mut classes: BTreeMap<String, ClassStats> = BTreeMap::new();
+        let mut shards: BTreeMap<String, ShardStats> = BTreeMap::new();
         for p in parts {
             out.submitted += p.submitted;
             out.inflight += p.inflight;
@@ -288,13 +306,26 @@ impl ClusterStats {
                 e.interactive_oldest_ms =
                     e.interactive_oldest_ms.max(c.interactive_oldest_ms);
             }
-            out.queue.shards.extend(p.queue.shards);
+            for s in p.queue.shards {
+                let e = shards.entry(s.shard.clone()).or_default();
+                e.shard = s.shard;
+                e.queued += s.queued;
+                e.in_flight += s.in_flight;
+                e.acked += s.acked;
+                e.dead += s.dead;
+                for class in s.classes {
+                    if !e.classes.contains(&class) {
+                        e.classes.push(class);
+                    }
+                }
+            }
             out.cache.hits += p.cache.hits;
             out.cache.misses += p.cache.misses;
             out.cache.evictions += p.cache.evictions;
             out.cache.coalesced += p.cache.coalesced;
             out.cache.entries += p.cache.entries;
             out.cache.bytes += p.cache.bytes;
+            out.affinity.absorb(&p.affinity);
             out.autoscale.enabled |= p.autoscale.enabled;
             out.autoscale.nodes += p.autoscale.nodes;
             out.autoscale.target += p.autoscale.target;
@@ -313,6 +344,13 @@ impl ClusterStats {
             out.rpc.merge(&p.rpc);
         }
         out.queue.classes = classes.into_values().collect();
+        out.queue.shards = shards
+            .into_values()
+            .map(|mut s| {
+                s.classes.sort();
+                s
+            })
+            .collect();
         out
     }
 }
@@ -430,6 +468,7 @@ mod tests {
                 entries: 2,
                 bytes: 4096,
             },
+            affinity: AffinityStats { hits: 40, misses: 5 },
             autoscale: AutoscaleStats {
                 enabled: true,
                 nodes: 2,
@@ -631,7 +670,7 @@ mod tests {
     fn merge_composes_disjoint_gateways_into_one_fleet_view() {
         // Two gateways owning disjoint class slices (and a pre-shard
         // third peer) fold into one fleet view: counters sum, per-class
-        // gauges merge by runtime, shard sections concatenate.
+        // gauges merge by runtime, shard sections merge by shard name.
         let g1 = ClusterStats {
             submitted: 10,
             inflight: 2,
@@ -699,6 +738,68 @@ mod tests {
         assert_eq!(fleet.pipelines, 1);
         // The fleet view round-trips the wire like any snapshot.
         assert_eq!(ClusterStats::from_json(&fleet.to_json()).unwrap(), fleet);
+    }
+
+    #[test]
+    fn merge_folds_shared_queue_shards_by_name() {
+        // Regression: two gateways fronting the *same* sharded queue
+        // used to concatenate their shard sections, so the fleet view
+        // listed every shared shard once per gateway.  Same-named
+        // shards must fold into one row (counters sum, class lanes
+        // union) — mirroring the per-class merge above.
+        let shard = |name: &str, queued: usize, acked: usize, classes: &[&str]| ShardStats {
+            shard: name.into(),
+            queued,
+            acked,
+            classes: classes.iter().map(|c| c.to_string()).collect(),
+            ..ShardStats::default()
+        };
+        let g1 = ClusterStats {
+            queue: QueueStats {
+                shards: vec![
+                    shard("shard-0", 2, 5, &["bert"]),
+                    shard("shard-1", 1, 3, &[]),
+                ],
+                ..QueueStats::default()
+            },
+            affinity: AffinityStats { hits: 9, misses: 1 },
+            ..ClusterStats::default()
+        };
+        let g2 = ClusterStats {
+            queue: QueueStats {
+                shards: vec![
+                    shard("shard-1", 4, 2, &["tinyyolo"]),
+                    shard("shard-2", 0, 9, &[]),
+                ],
+                ..QueueStats::default()
+            },
+            affinity: AffinityStats { hits: 1, misses: 2 },
+            ..ClusterStats::default()
+        };
+        let fleet = ClusterStats::merge([g1, g2]);
+        let names: Vec<&str> =
+            fleet.queue.shards.iter().map(|s| s.shard.as_str()).collect();
+        assert_eq!(names, ["shard-0", "shard-1", "shard-2"], "one row per shard");
+        let s1 = &fleet.queue.shards[1];
+        assert_eq!((s1.queued, s1.acked), (5, 5), "same-name counters sum");
+        assert_eq!(s1.classes, vec!["tinyyolo".to_string()]);
+        // Affinity counters sum across gateways like the cache section.
+        assert_eq!(fleet.affinity, AffinityStats { hits: 10, misses: 3 });
+        assert_eq!(ClusterStats::from_json(&fleet.to_json()).unwrap(), fleet);
+    }
+
+    #[test]
+    fn cluster_stats_parses_without_affinity_fields() {
+        // Pre-affinity gateways omit the pair entirely: defaults, not
+        // an error — and a null value degrades the same way.
+        let stats = ClusterStats { submitted: 6, ..ClusterStats::default() };
+        let mut j = stats.to_json();
+        for k in ["affinity_hits", "affinity_misses"] {
+            j = j.set(k, Json::Null);
+        }
+        let parsed = ClusterStats::from_json(&j).unwrap();
+        assert_eq!(parsed.affinity, AffinityStats::default());
+        assert_eq!(parsed.submitted, 6);
     }
 
     #[test]

@@ -22,8 +22,8 @@ use crate::autoscale::{
 use crate::metrics::MetricsHub;
 use crate::node::batch::merge_variant_stats;
 use crate::node::{
-    spawn_node, BatchConfig, InstanceReserve, NodeConfig, NodeDeps, NodeHandle,
-    VariantBatchStats,
+    spawn_node, AffinityStats, BatchConfig, InstanceReserve, NodeConfig, NodeDeps,
+    NodeHandle, VariantBatchStats,
 };
 use crate::queue::{InvocationQueue, MemQueue, QueueConfig};
 use crate::runtime::instance::MockExecutor;
@@ -86,6 +86,7 @@ struct RetiredCounters {
     cache: CacheStats,
     pool: PoolStats,
     batch: Vec<VariantBatchStats>,
+    affinity: AffinityStats,
 }
 
 fn add_pool(total: &mut PoolStats, p: &PoolStats) {
@@ -98,11 +99,12 @@ fn add_pool(total: &mut PoolStats, p: &PoolStats) {
 
 /// Gracefully retire a node and fold its terminal counters in.
 fn retire_into(node: NodeHandle, retired: &Mutex<RetiredCounters>) {
-    let (cache, pool, batch) = node.retire();
+    let (cache, pool, batch, affinity) = node.retire();
     let mut r = retired.lock().expect("poisoned");
     r.cache.add(&cache);
     add_pool(&mut r.pool, &pool);
     merge_variant_stats(&mut r.batch, &batch);
+    r.affinity.absorb(&affinity);
 }
 
 /// Build a node's instance reserve for the given executor kind.
@@ -587,6 +589,17 @@ impl Cluster {
         total
     }
 
+    /// Aggregate data-locality counters (the `cluster_stats` affinity
+    /// view): live nodes plus the terminal counters of retired nodes —
+    /// scale-in must not make the totals go backwards.
+    pub fn affinity_totals(&self) -> AffinityStats {
+        let mut total = self.retired.lock().expect("poisoned").affinity;
+        for n in self.nodes.lock().expect("poisoned").iter() {
+            total.absorb(&n.affinity_stats());
+        }
+        total
+    }
+
     /// Aggregate per-variant micro-batch counters (the `cluster_stats`
     /// batch view): live nodes plus the terminal counters of retired
     /// nodes — scale-in must not make the totals go backwards.
@@ -870,6 +883,44 @@ mod tests {
         // ...and the client-facing stats see the same totals.
         let stats = cluster.cluster_stats().unwrap();
         assert_eq!(stats.cache.misses, before.misses, "{:?}", stats.cache);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn affinity_cluster_converges_to_cache_hit_dispatches() {
+        use crate::scheduler::CacheAffinity;
+        // The acceptance scenario: a repeated-dataset trace on a
+        // multi-node cluster.  Every miss makes the fetching node hot
+        // for that dataset, so the fleet pays at most one backing fetch
+        // per (node, dataset) and converges to cache-hit dispatches —
+        // the queue-level steering itself is pinned by the MemQueue
+        // hot-tier unit tests.
+        let cluster = Cluster::builder()
+            .time_scale(500.0)
+            .executors(ExecutorKind::Mock { scale: 1.0, delay: Duration::from_millis(1) })
+            .policy(Arc::new(CacheAffinity::over(Arc::new(WarmFirst))))
+            .node("node-1", paper_dualgpu())
+            .node("node-2", paper_dualgpu())
+            .build()
+            .unwrap();
+        let a = cluster.upload_dataset("a", &[1.0; 8]).unwrap();
+        let b = cluster.upload_dataset("b", &[2.0; 8]).unwrap();
+        let specs: Vec<EventSpec> = (0..100)
+            .map(|i| EventSpec::new("tinyyolo", if i % 2 == 0 { &a } else { &b }))
+            .collect();
+        cluster.submit_batch(specs).unwrap();
+        assert_eq!(cluster.drain(Duration::from_secs(120)), 0);
+        let aff = cluster.affinity_totals();
+        assert_eq!(aff.hits + aff.misses, 100, "{aff:?}");
+        assert!(aff.misses <= 4, "≤1 backing fetch per (node, dataset): {aff:?}");
+        assert!(aff.hits >= 90, "≥90% cache-hit dispatches: {aff:?}");
+        // Both nodes gossiped their hot sets to the coordinator.
+        let sets = cluster.coordinator.node_hot_sets();
+        assert_eq!(sets.len(), 2, "{sets:?}");
+        for (generation, keys) in sets.values() {
+            assert!(*generation >= 1);
+            assert!(!keys.is_empty());
+        }
         cluster.shutdown();
     }
 

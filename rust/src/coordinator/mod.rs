@@ -93,6 +93,11 @@ pub struct Coordinator {
     store: Option<Arc<dyn ObjectStore>>,
     /// Coordinator-tracked invocation pipelines (DESIGN.md §12).
     dag: DagTracker,
+    /// Per-node hot-set gossip table (DESIGN.md §15): the freshest
+    /// `(generation, hot keys)` summary each node has piggybacked on its
+    /// completion reports.  Generation-ordered — a late report cannot
+    /// roll a node's entry back.
+    hot_sets: Mutex<HashMap<String, (u64, Vec<String>)>>,
     /// [`TRACKING_SHARDS`]-way sharded submission bookkeeping.
     shards: Vec<TrackShard>,
     /// Global completion order of the retained window.  Retention must
@@ -140,6 +145,7 @@ impl Coordinator {
             metrics,
             store,
             dag: DagTracker::new(),
+            hot_sets: Mutex::new(HashMap::new()),
             shards: (0..TRACKING_SHARDS).map(|_| TrackShard::default()).collect(),
             done_order: Mutex::new(VecDeque::new()),
             drain_gate: Mutex::new(()),
@@ -208,6 +214,25 @@ impl Coordinator {
                     // event generator (paper: "when the result is received
                     // by the benchmark client").
                     inv.stamps.r_end = Some(self.clock.now());
+                    // §15 gossip: fold the reporting node's hot-set
+                    // summary into the table, then strip the piggyback —
+                    // clients never see transport metadata.
+                    if inv.hot_generation > 0 {
+                        if let Some(node) = inv.node.clone() {
+                            let mut table =
+                                self.hot_sets.lock().expect("poisoned");
+                            let slot =
+                                table.entry(node).or_insert((0, Vec::new()));
+                            if inv.hot_generation >= slot.0 {
+                                *slot = (
+                                    inv.hot_generation,
+                                    std::mem::take(&mut inv.hot_keys),
+                                );
+                            }
+                        }
+                        inv.hot_keys = Vec::new();
+                        inv.hot_generation = 0;
+                    }
                     self.metrics.record_completion(&inv);
                     let id = inv.id.clone();
                     let succeeded = inv.status == Status::Succeeded;
@@ -444,6 +469,14 @@ impl Coordinator {
     /// Gauge snapshot of the queue this coordinator publishes into.
     pub fn queue_stats(&self) -> Result<QueueStats> {
         self.queue.stats()
+    }
+
+    /// The freshest hot-set summary each node has gossiped:
+    /// node id → `(generation, hot keys)`.  Observability only — nodes
+    /// steer themselves from their own caches; this is the fleet-wide
+    /// data-placement view for operators.
+    pub fn node_hot_sets(&self) -> HashMap<String, (u64, Vec<String>)> {
+        self.hot_sets.lock().expect("poisoned").clone()
     }
 
     /// Block until every submitted invocation is terminal, or `timeout`
@@ -822,6 +855,39 @@ mod tests {
         // All three stage invocations were tracked like any submission.
         assert_eq!(c.submitted(), 3);
         assert_eq!(c.pipelines_tracked(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn hot_set_gossip_is_tabled_and_stripped_from_clients() {
+        let (_clock, _queue, c) = setup();
+        let id = c.submit(EventSpec::new("r", "d")).unwrap();
+        let mut inv = Invocation::new(&id, EventSpec::new("r", "d"), SimTime(0));
+        inv.status = Status::Succeeded;
+        inv.node = Some("node-1".into());
+        inv.hot_keys = vec!["datasets/a".into()];
+        inv.hot_generation = 3;
+        c.completion_sender().send(inv).unwrap();
+        let done = c.wait_for(&id, Duration::from_secs(5)).unwrap();
+        assert!(done.hot_keys.is_empty(), "gossip stripped from the client copy");
+        assert_eq!(done.hot_generation, 0);
+        let sets = c.node_hot_sets();
+        assert_eq!(sets["node-1"], (3, vec!["datasets/a".to_string()]));
+        // A stale (lower-generation) report cannot roll the table back.
+        let id2 = c.submit(EventSpec::new("r", "d")).unwrap();
+        let mut inv = Invocation::new(&id2, EventSpec::new("r", "d"), SimTime(0));
+        inv.status = Status::Succeeded;
+        inv.node = Some("node-1".into());
+        inv.hot_keys = vec!["datasets/old".into()];
+        inv.hot_generation = 2;
+        c.completion_sender().send(inv).unwrap();
+        c.wait_for(&id2, Duration::from_secs(5)).unwrap();
+        let sets = c.node_hot_sets();
+        assert_eq!(
+            sets["node-1"],
+            (3, vec!["datasets/a".to_string()]),
+            "generation order wins over arrival order"
+        );
         c.shutdown();
     }
 

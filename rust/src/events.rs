@@ -258,6 +258,16 @@ pub struct Invocation {
     pub warm: bool,
     /// Object-store key of the persisted result, once succeeded.
     pub result_key: Option<String>,
+    /// Cache-affinity gossip, piggybacked on the completion report
+    /// (DESIGN.md §15): the reporting node's current hot-set summary —
+    /// the dataset keys it holds in its local content cache.  Empty for
+    /// invocations that never passed through a caching node (and on the
+    /// client-facing copy, which the coordinator strips).  Serialized
+    /// leniently: omitted when empty, ignored by pre-affinity peers.
+    pub hot_keys: Vec<String>,
+    /// Generation counter of the reporting node's cache at summary time —
+    /// lets a consumer drop out-of-order summaries.  0 = no summary.
+    pub hot_generation: u64,
 }
 
 impl Invocation {
@@ -272,6 +282,8 @@ impl Invocation {
             variant: None,
             warm: false,
             result_key: None,
+            hot_keys: Vec::new(),
+            hot_generation: 0,
         }
     }
 
@@ -287,7 +299,7 @@ impl Invocation {
         let opt_s = |v: &Option<String>| {
             v.as_ref().map(|s| Json::from(s.as_str())).unwrap_or(Json::Null)
         };
-        Json::obj()
+        let mut j = Json::obj()
             .set("id", self.id.as_str())
             .set("spec", self.spec.to_json())
             .set("status", status)
@@ -296,7 +308,19 @@ impl Invocation {
             .set("accelerator", opt_s(&self.accelerator))
             .set("variant", opt_s(&self.variant))
             .set("warm", self.warm)
-            .set("result_key", opt_s(&self.result_key))
+            .set("result_key", opt_s(&self.result_key));
+        // Affinity gossip rides only when present: pre-affinity peers
+        // (and every non-reporting payload) see the legacy wire shape.
+        if !self.hot_keys.is_empty() {
+            j = j.set(
+                "hot_keys",
+                Json::Arr(self.hot_keys.iter().map(|k| Json::from(k.as_str())).collect()),
+            );
+        }
+        if self.hot_generation != 0 {
+            j = j.set("hot_generation", self.hot_generation);
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<Invocation, JsonError> {
@@ -322,6 +346,17 @@ impl Invocation {
             variant: opt_s("variant"),
             warm: j.get("warm").and_then(|v| v.as_bool()).unwrap_or(false),
             result_key: opt_s("result_key"),
+            // Lenient: pre-affinity peers never send the gossip section.
+            hot_keys: j
+                .get("hot_keys")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            hot_generation: j.get("hot_generation").and_then(|v| v.as_u64()).unwrap_or(0),
         })
     }
 }
@@ -441,6 +476,23 @@ mod tests {
         assert_eq!(back.status, Status::Running);
         assert_eq!(back.node.as_deref(), Some("node-1"));
         assert!(back.warm);
+    }
+
+    #[test]
+    fn hot_set_gossip_roundtrips_and_stays_off_the_legacy_wire() {
+        let mut inv = Invocation::new("inv-3", EventSpec::new("r", "datasets/d"), t(0));
+        // No summary: the wire shape is exactly the pre-affinity one.
+        assert!(inv.to_json().get("hot_keys").is_none());
+        assert!(inv.to_json().get("hot_generation").is_none());
+        let back = Invocation::from_json(&inv.to_json()).unwrap();
+        assert!(back.hot_keys.is_empty());
+        assert_eq!(back.hot_generation, 0);
+        // With a summary: roundtrips intact.
+        inv.hot_keys = vec!["datasets/d".into(), "datasets/e".into()];
+        inv.hot_generation = 7;
+        let back = Invocation::from_json(&inv.to_json()).unwrap();
+        assert_eq!(back.hot_keys, inv.hot_keys);
+        assert_eq!(back.hot_generation, 7);
     }
 
     #[test]

@@ -71,7 +71,7 @@ fn app() -> App {
                 .opt("gateway-addr", DEFAULT_GATEWAY, "gateway address for completion reporting (empty = node-local only)")
                 .opt("devices", "paper-all", "device preset: paper-dualgpu | paper-all")
                 .opt("id", "node-1", "node id")
-                .opt("policy", "warm-first", "warm-first | fifo | deadline:<ms> | priority:interactive | priority:batch")
+                .opt("policy", "warm-first", "warm-first | fifo | deadline:<ms> | priority:interactive | priority:batch | affinity[:<inner>]")
                 .opt("engine", "pjrt", "pjrt | mock (mock needs no artifacts)")
                 .opt("duration-s", "30", "how long to serve before draining")
                 .opt("node-cache-mb", "256", "per-cache MiB budget for the node's raw-object and decoded-input caches (worst-case memory 2x this; 0 = disabled)")

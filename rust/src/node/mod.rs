@@ -32,9 +32,52 @@ use crate::scheduler::{Admission, BatchAware, Policy};
 use crate::store::{CacheStats, CachedStore, DecodedCache, ObjectStore};
 use crate::util::Clock;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
+
+/// Data-locality scoreboard (DESIGN.md §15): at fetch time, was the
+/// invocation's dataset already resident in the node-local cache?  A hit
+/// means the work ran where its data lives; a miss on an
+/// affinity-steered take means the hint went stale and the fetch fell
+/// back to the backing store — never an error.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct AffinityStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl AffinityStats {
+    pub fn absorb(&mut self, other: &AffinityStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+}
+
+/// Shared atomics behind [`AffinityStats`]: workers bump at dataset-fetch
+/// time, the handle (and cluster aggregation) reads.
+#[derive(Default)]
+pub struct AffinityCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl AffinityCounters {
+    pub fn record(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> AffinityStats {
+        AffinityStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
 
 /// Where a node reports terminal invocations (paper §IV-C: nodes signal
 /// completion back to the event generator).  Single-process deployments
@@ -129,6 +172,7 @@ pub struct NodeHandle {
     cache: Option<Arc<CachedStore>>,
     decoded: Arc<DecodedCache>,
     batcher: Arc<BatchAggregator>,
+    affinity: Arc<AffinityCounters>,
 }
 
 impl NodeHandle {
@@ -159,7 +203,12 @@ impl NodeHandle {
     /// the node.
     pub fn retire(
         mut self,
-    ) -> (CacheStats, crate::runtime::pool::PoolStats, Vec<VariantBatchStats>) {
+    ) -> (
+        CacheStats,
+        crate::runtime::pool::PoolStats,
+        Vec<VariantBatchStats>,
+        AffinityStats,
+    ) {
         self.decommission();
         self.stop_inner();
         let cache = self.cache_stats();
@@ -167,7 +216,8 @@ impl NodeHandle {
         pool.live = 0;
         pool.busy = 0;
         let batch = self.batch_stats();
-        (cache, pool, batch)
+        let affinity = self.affinity_stats();
+        (cache, pool, batch, affinity)
     }
 
     fn stop_inner(&mut self) {
@@ -189,6 +239,12 @@ impl NodeHandle {
     /// Counters of the node's decoded-input (bytes→f32) cache.
     pub fn decoded_stats(&self) -> CacheStats {
         self.decoded.stats()
+    }
+
+    /// Data-locality counters: dataset fetches already resident in the
+    /// node-local cache (hits) vs served by the backing store (misses).
+    pub fn affinity_stats(&self) -> AffinityStats {
+        self.affinity.snapshot()
     }
 
     /// Per-variant micro-batch counters (dispatches, mean size, linger
@@ -231,22 +287,36 @@ pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps)
     } else {
         None
     };
+    // Bind cache-aware policies to *this node's* cache: the cluster
+    // shares one policy Arc across every node it spawns, but an affinity
+    // policy must advertise the taking node's own hot-set.
+    if let Some(c) = &cache {
+        if let Some(bound) = deps.policy.bind_cache(c) {
+            deps.policy = bound;
+        }
+    }
     let decoded = Arc::new(DecodedCache::new(cfg.cache_bytes));
     let batcher = BatchAggregator::new(cfg.batch.clone());
     if cfg.batch.max_batch > 1 {
         deps.policy = Arc::new(BatchAware { inner: deps.policy });
     }
+    let affinity = Arc::new(AffinityCounters::default());
     let handle_pool = pool.clone();
     let handle_registry = registry.clone();
+    let handle_cache = cache.clone();
     let handle_decoded = decoded.clone();
     let handle_batcher = batcher.clone();
+    let handle_affinity = affinity.clone();
     let stop2 = stop.clone();
     let draining2 = draining.clone();
     let id = cfg.id.clone();
     let thread = std::thread::Builder::new()
         .name(format!("node-mgr-{}", cfg.id))
         .spawn(move || {
-            manager_loop(cfg, registry, pool, deps, decoded, batcher, stop2, draining2)
+            manager_loop(
+                cfg, registry, pool, deps, cache, decoded, batcher, affinity, stop2,
+                draining2,
+            )
         })?;
     Ok(NodeHandle {
         id,
@@ -255,9 +325,10 @@ pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps)
         thread: Some(thread),
         pool: handle_pool,
         registry: handle_registry,
-        cache,
+        cache: handle_cache,
         decoded: handle_decoded,
         batcher: handle_batcher,
+        affinity: handle_affinity,
     })
 }
 
@@ -279,8 +350,10 @@ fn manager_loop(
     registry: DeviceRegistry,
     pool: Arc<InstancePool>,
     deps: NodeDeps,
+    cache: Option<Arc<CachedStore>>,
     decoded: Arc<DecodedCache>,
     batcher: Arc<BatchAggregator>,
+    affinity: Arc<AffinityCounters>,
     stop: Arc<AtomicBool>,
     draining: Arc<AtomicBool>,
 ) {
@@ -452,6 +525,7 @@ fn manager_loop(
                 deps.queue.as_ref(),
                 deps.completions.as_ref(),
                 &cfg.id,
+                cache.as_deref(),
                 rejected,
             );
             if batch.is_empty() {
@@ -472,12 +546,14 @@ fn manager_loop(
                 pool: pool.clone(),
                 queue: deps.queue.clone(),
                 store: deps.store.clone(),
+                cache: cache.clone(),
                 decoded: decoded.clone(),
                 clock: deps.clock.clone(),
                 policy: deps.policy.clone(),
                 reserve: deps.reserve.clone(),
                 completions: deps.completions.clone(),
                 batcher: batcher.clone(),
+                affinity: affinity.clone(),
                 draining: draining.clone(),
             };
             let name = format!("worker-{}", batch[0].id);
@@ -526,6 +602,14 @@ mod tests {
     }
 
     fn rig_with_batch(registry: DeviceRegistry, batch: BatchConfig) -> Rig {
+        rig_full(registry, batch, Arc::new(WarmFirst))
+    }
+
+    fn rig_full(
+        registry: DeviceRegistry,
+        batch: BatchConfig,
+        policy: Arc<dyn Policy>,
+    ) -> Rig {
         // 100x compression: mock delays of sim-ms become wall-µs.
         let clock: Arc<ScaledClock> = ScaledClock::new(100.0);
         let queue = MemQueue::new(clock.clone());
@@ -551,7 +635,7 @@ mod tests {
             queue: queue.clone(),
             store: store.clone(),
             clock: clock.clone(),
-            policy: Arc::new(WarmFirst),
+            policy,
             reserve,
             completions: Arc::new(tx),
         };
@@ -720,6 +804,51 @@ mod tests {
     }
 
     #[test]
+    fn stale_affinity_hint_degrades_to_backing_fetch() {
+        use crate::scheduler::CacheAffinity;
+        let r = rig_full(
+            paper_dualgpu(),
+            BatchConfig::default(),
+            Arc::new(CacheAffinity::over(Arc::new(WarmFirst))),
+        );
+        let key = dataset(&r.store, "img", &[1.0; 4]);
+        submit(&r, "inv-1", &key);
+        let d = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(d.status, Status::Succeeded);
+        assert_eq!(r.node.affinity_stats(), AffinityStats { hits: 0, misses: 1 });
+        // Resident now: the repeat invocation is an affinity hit.
+        submit(&r, "inv-2", &key);
+        let d = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(d.status, Status::Succeeded);
+        assert_eq!(r.node.affinity_stats(), AffinityStats { hits: 1, misses: 1 });
+        // Evict behind the queue's back: the cluster may still steer by
+        // the stale hint, but the invocation must complete via a plain
+        // backing fetch — never an error, never skipped.
+        r.node.cache.as_ref().unwrap().invalidate(&key);
+        submit(&r, "inv-3", &key);
+        let d = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(d.status, Status::Succeeded);
+        assert_eq!(r.node.affinity_stats(), AffinityStats { hits: 1, misses: 2 });
+        r.node.stop();
+    }
+
+    #[test]
+    fn completion_reports_carry_the_hot_set_summary() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0; 4]);
+        submit(&r, "inv-hot", &key);
+        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(done.status, Status::Succeeded);
+        assert!(
+            done.hot_keys.contains(&key),
+            "summary lists the dataset just served: {:?}",
+            done.hot_keys
+        );
+        assert!(done.hot_generation >= 1, "key-set changes bump the generation");
+        r.node.stop();
+    }
+
+    #[test]
     fn cache_disabled_when_budget_zero() {
         // A zero budget must degrade to pass-through, not break execution.
         let clock: Arc<ScaledClock> = ScaledClock::new(100.0);
@@ -764,6 +893,9 @@ mod tests {
         let done = rx.recv_timeout(Duration::from_secs(10)).unwrap();
         assert_eq!(done.status, Status::Succeeded);
         assert_eq!(node.cache_stats(), crate::store::CacheStats::default());
+        assert!(done.hot_keys.is_empty(), "no cache, no hot-set gossip");
+        assert_eq!(done.hot_generation, 0);
+        assert_eq!(node.affinity_stats(), AffinityStats::default());
         node.stop();
     }
 
@@ -807,7 +939,7 @@ mod tests {
             "nothing served after decommission"
         );
         // retire() drains + joins and hands back terminal counters.
-        let (cache, pool, _batch) = r.node.retire();
+        let (cache, pool, _batch, _affinity) = r.node.retire();
         assert!(cache.misses >= 1, "served one dataset fetch: {cache:?}");
         assert_eq!((pool.live, pool.busy), (0, 0), "gauges zeroed on retire");
         assert!(pool.cold_starts >= 1, "{pool:?}");

@@ -25,7 +25,7 @@ use crate::postprocess;
 use crate::queue::{InvocationQueue, Lease, TakeFilter};
 use crate::runtime::{InstancePool, RuntimeInstance};
 use crate::scheduler::{warm_runtimes, Admission, Policy};
-use crate::store::{keys, DecodedCache, ObjectStore};
+use crate::store::{keys, CachedStore, DecodedCache, ObjectStore};
 use crate::util::{Clock, Rng};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashSet;
@@ -40,6 +40,10 @@ pub struct WorkerCtx {
     /// The node's store view — a node-local [`crate::store::CachedStore`]
     /// when the cache is enabled (see [`crate::node::spawn_node`]).
     pub store: Arc<dyn ObjectStore>,
+    /// The same cache, typed (None when caching is disabled): residency
+    /// probes for affinity accounting and the hot-set summary
+    /// piggybacked on completion reports (DESIGN.md §15).
+    pub cache: Option<Arc<CachedStore>>,
     /// Node-wide bytes→f32 cache: the decode pass runs once per dataset
     /// buffer per node, not once per invocation.
     pub decoded: Arc<DecodedCache>,
@@ -50,6 +54,8 @@ pub struct WorkerCtx {
     /// Per-(variant, device) micro-batch former: linger budgets and the
     /// per-variant batch-size distribution (`cluster_stats.batch`).
     pub batcher: Arc<BatchAggregator>,
+    /// Data-locality scoreboard: bumped once per dataset fetch.
+    pub affinity: Arc<crate::node::AffinityCounters>,
     /// Node decommission flag: set, workers finish their current
     /// batch but skip the §IV-D warm re-take (graceful scale-in
     /// must stop *all* lease-taking paths, not just the manager poll).
@@ -230,7 +236,8 @@ pub fn run_invocations(ctx: WorkerCtx, first: Vec<Invocation>, slot: SlotGuard) 
                     .observe(&variant, &device.id, dispatched, cap, lingered, q2d_us);
             }
         }
-        for inv in batch.drain(..) {
+        for mut inv in batch.drain(..) {
+            stamp_hot_set(ctx.cache.as_deref(), &mut inv);
             if let Err(e) = ctx.completions.report(inv) {
                 log::warn!("node {}: completion report failed: {e:#}", ctx.node_id);
             }
@@ -277,6 +284,7 @@ pub fn run_invocations(ctx: WorkerCtx, first: Vec<Invocation>, slot: SlotGuard) 
             ctx.queue.as_ref(),
             ctx.completions.as_ref(),
             &ctx.node_id,
+            ctx.cache.as_deref(),
             rejected,
         );
         if batch.is_empty() {
@@ -379,6 +387,12 @@ fn execute_batch(
     let mut kept: Vec<Invocation> = Vec::with_capacity(batch.len());
     let mut fetch_failed: Vec<Invocation> = Vec::new();
     for mut inv in batch.drain(..) {
+        // Affinity accounting *before* the fetch fills the cache: was the
+        // dataset already here?  A stale hot hint lands as a miss — the
+        // read-through fetch below serves it from backing regardless.
+        if let Some(cache) = &ctx.cache {
+            ctx.affinity.record(cache.contains_cached(&inv.spec.dataset));
+        }
         let fetched = ctx
             .store
             .get(&inv.spec.dataset)
@@ -400,6 +414,7 @@ fn execute_batch(
         ctx.queue.as_ref(),
         ctx.completions.as_ref(),
         &ctx.node_id,
+        ctx.cache.as_deref(),
         fetch_failed,
     );
     if batch.is_empty() {
@@ -524,6 +539,18 @@ fn complete_member(
     }
 }
 
+/// Stamp the node's current hot-set summary onto an outgoing completion
+/// report — the affinity gossip rides the existing completion path
+/// (DESIGN.md §15), no new RPC.  No cache, no summary: the fields stay
+/// empty/zero and are omitted on the wire.
+fn stamp_hot_set(cache: Option<&CachedStore>, inv: &mut Invocation) {
+    if let Some(cache) = cache {
+        let (keys, generation) = cache.hot_keys(crate::scheduler::DEFAULT_HOT_SET);
+        inv.hot_keys = keys;
+        inv.hot_generation = generation;
+    }
+}
+
 /// Batched admission-rejection epilogue shared by the manager's dispatch
 /// loop and the worker's warm re-take: one `ack_batch` round trip, then
 /// per-invocation completion reports.
@@ -531,6 +558,7 @@ pub(crate) fn ack_and_report_rejected(
     queue: &dyn InvocationQueue,
     completions: &dyn CompletionSink,
     node_id: &str,
+    hot_from: Option<&CachedStore>,
     rejected: Vec<Invocation>,
 ) {
     if rejected.is_empty() {
@@ -540,7 +568,8 @@ pub(crate) fn ack_and_report_rejected(
     if let Err(e) = queue.ack_batch(&ids) {
         log::warn!("node {node_id}: reject ack_batch failed: {e:#}");
     }
-    for inv in rejected {
+    for mut inv in rejected {
+        stamp_hot_set(hot_from, &mut inv);
         if let Err(e) = completions.report(inv) {
             log::warn!("node {node_id}: completion report failed: {e:#}");
         }
@@ -593,6 +622,7 @@ fn fail_batch(ctx: &WorkerCtx, invs: Vec<Invocation>, reason: &str) {
         ctx.queue.as_ref(),
         ctx.completions.as_ref(),
         &ctx.node_id,
+        ctx.cache.as_deref(),
         failed,
     );
 }

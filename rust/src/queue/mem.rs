@@ -125,6 +125,34 @@ impl Lane {
         }
     }
 
+    /// The entry [`Lane::pop`] would deliver next, without mutating —
+    /// the cache-affinity pick (DESIGN.md §15) probes this to test the
+    /// *actually deliverable* invocation's dataset, so the hot check and
+    /// the subsequent pop cannot disagree about which invocation moves.
+    fn peek(&self, burst: u32, priority: Option<Priority>) -> Option<&(u64, Invocation)> {
+        match priority {
+            Some(Priority::Interactive) => self.interactive.front(),
+            Some(Priority::Batch) => self.batch.front(),
+            None => match (self.interactive.front(), self.batch.front()) {
+                (None, None) => None,
+                (Some(i), None) => Some(i),
+                (None, Some(b)) => Some(b),
+                (Some(i), Some(b)) => {
+                    let take_batch = if burst == 0 {
+                        b.0 < i.0
+                    } else {
+                        self.interactive_streak >= burst
+                    };
+                    if take_batch {
+                        Some(b)
+                    } else {
+                        Some(i)
+                    }
+                }
+            },
+        }
+    }
+
     /// The weighted-take rule.  A priority-pinned pop drains only its
     /// sub-queue (and leaves the streak alone).  Unrestricted pops serve
     /// interactive first — but after `burst` consecutive interactive
@@ -162,6 +190,13 @@ impl Lane {
             },
         }
     }
+}
+
+/// Whether an invocation's input data is in the filter's hot-set — the
+/// primary dataset or any fan-in input counts.
+fn invocation_is_hot(filter: &TakeFilter, inv: &Invocation) -> bool {
+    filter.is_hot(&inv.spec.dataset)
+        || inv.spec.datasets.iter().any(|d| filter.is_hot(d))
 }
 
 struct Inner {
@@ -275,6 +310,36 @@ impl Inner {
         self.best_lane(classes, false, priority)
     }
 
+    /// Smallest front seq among lanes whose next deliverable invocation
+    /// (exactly what [`Lane::pop`] would hand out, via [`Lane::peek`])
+    /// reads a dataset from the filter's hot-set.  The cache-affinity
+    /// tier of the take ranking: warm ▸ **hot** ▸ FIFO (DESIGN.md §15).
+    /// One peek per candidate class — same O(|classes|) cost as
+    /// [`Inner::min_front`]; a lane's *deeper* entries are not probed,
+    /// so hot preference is a front-of-lane bias, never a queue scan.
+    fn hot_front<'a>(
+        &self,
+        classes: impl Iterator<Item = &'a String>,
+        filter: &TakeFilter,
+        burst: u32,
+        priority: Option<Priority>,
+    ) -> Option<(u64, String)> {
+        let mut best: Option<(u64, &String)> = None;
+        for rt in classes {
+            let Some(lane) = self.queued.get(rt) else { continue };
+            let Some((seq, inv)) = lane.peek(burst, priority) else {
+                continue;
+            };
+            if !invocation_is_hot(filter, inv) {
+                continue;
+            }
+            if best.map(|(bs, _)| *seq < bs).unwrap_or(true) {
+                best = Some((*seq, rt));
+            }
+        }
+        best.map(|(seq, rt)| (seq, rt.clone()))
+    }
+
     /// Lane choice for a grouped take (see [`Inner::best_lane`]).
     fn pick_lane<'a>(
         &self,
@@ -337,6 +402,21 @@ impl MemQueue {
         let mut pick = inner
             .min_front(filter.warm.iter(), pri)
             .map(|(seq, rt)| (seq, rt, true));
+        if pick.is_none() && !filter.warm_only && !filter.hot_datasets.is_empty() {
+            // Cache-affinity tier (warm ▸ hot ▸ FIFO, DESIGN.md §15):
+            // among cold candidates, a lane whose next deliverable
+            // invocation reads a dataset this node already caches beats
+            // global FIFO order.  Skipped entirely when the hot-set is
+            // empty, so affinity-off takes are byte-identical to the
+            // legacy warm-first behavior.
+            let burst = self.config.interactive_burst;
+            pick = if filter.runtimes.is_empty() {
+                inner.hot_front(inner.queued.keys(), filter, burst, pri)
+            } else {
+                inner.hot_front(filter.runtimes.iter(), filter, burst, pri)
+            }
+            .map(|(seq, rt)| (seq, rt, false));
+        }
         if pick.is_none() && !filter.warm_only {
             pick = if filter.runtimes.is_empty() {
                 match pri {
@@ -451,6 +531,22 @@ impl InvocationQueue for MemQueue {
             .pick_lane(filter.warm.iter(), filter.prefer_deep, pri)
             .map(|rt| (rt, true))
             .or_else(|| {
+                // Cache-affinity tier, mirroring `take_locked`: a hot
+                // lane front beats both depth and FIFO among cold
+                // candidates (oldest hot front wins — the grouped take
+                // then drains that class, coalescing the hot data).
+                if filter.warm_only || filter.hot_datasets.is_empty() {
+                    return None;
+                }
+                let burst = self.config.interactive_burst;
+                if filter.runtimes.is_empty() {
+                    inner.hot_front(inner.queued.keys(), filter, burst, pri)
+                } else {
+                    inner.hot_front(filter.runtimes.iter(), filter, burst, pri)
+                }
+                .map(|(_, rt)| (rt, false))
+            })
+            .or_else(|| {
                 if filter.warm_only {
                     None
                 } else if filter.runtimes.is_empty() {
@@ -474,6 +570,9 @@ impl InvocationQueue for MemQueue {
             warm_only: warm_hit,
             prefer_deep: false,
             priority: pri,
+            // The class is already pinned; continuation takes within it
+            // are plain FIFO, hot or not.
+            hot_datasets: HashSet::new(),
         };
         let mut out = Vec::new();
         while out.len() < max {
@@ -701,6 +800,125 @@ mod tests {
         let lease = q.take(&f).unwrap().unwrap();
         assert_eq!(lease.invocation.id, "cold-1");
         assert!(!lease.warm_hit);
+    }
+
+    fn dinv(id: &str, runtime: &str, dataset: &str) -> Invocation {
+        Invocation::new(id, EventSpec::new(runtime, dataset), SimTime(0))
+    }
+
+    #[test]
+    fn hot_dataset_jumps_fifo_order() {
+        // The affinity tier: a lane whose front reads a locally-cached
+        // dataset is served before older cold work — warm ▸ hot ▸ FIFO.
+        let (_c, q) = queue();
+        q.publish(dinv("cold-1", "a", "datasets/cold")).unwrap();
+        q.publish(dinv("hot-1", "b", "datasets/hot")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_hot_datasets(vec!["datasets/hot".into()]);
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "hot-1", "hot data beats FIFO");
+        assert!(!lease.warm_hit, "hot is not warm");
+        assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "cold-1");
+    }
+
+    #[test]
+    fn warm_preference_still_beats_hot_data() {
+        let (_c, q) = queue();
+        q.publish(dinv("warm-1", "a", "datasets/cold")).unwrap();
+        q.publish(dinv("hot-1", "b", "datasets/hot")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_warm(vec!["a".into()])
+            .with_hot_datasets(vec!["datasets/hot".into()]);
+        let lease = q.take(&f).unwrap().unwrap();
+        assert_eq!(lease.invocation.id, "warm-1", "warm instance outranks hot data");
+        assert!(lease.warm_hit);
+    }
+
+    #[test]
+    fn empty_hot_set_is_plain_warm_first_fifo() {
+        // Affinity off must be byte-identical to the legacy ranking.
+        let (_c, q) = queue();
+        q.publish(dinv("cold-1", "a", "datasets/cold")).unwrap();
+        q.publish(dinv("hot-1", "b", "datasets/hot")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()]);
+        assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "cold-1");
+    }
+
+    #[test]
+    fn stale_hot_hint_degrades_to_fifo_without_skipping() {
+        // A hot-set entry nothing queued refers to (evicted data, stale
+        // gossip) must cost nothing: plain FIFO delivery, never a skip.
+        let (_c, q) = queue();
+        q.publish(dinv("cold-1", "a", "datasets/cold")).unwrap();
+        q.publish(dinv("cold-2", "b", "datasets/other")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_hot_datasets(vec!["datasets/gone".into()]);
+        assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "cold-1");
+        assert_eq!(q.take(&f).unwrap().unwrap().invocation.id, "cold-2");
+        assert!(q.take(&f).unwrap().is_none());
+    }
+
+    #[test]
+    fn hot_preference_is_front_of_lane_only() {
+        // Hot data buried behind cold work in the *same* lane does not
+        // jump within the lane (per-class FIFO is preserved); only lane
+        // fronts compete in the affinity tier.
+        let (_c, q) = queue();
+        q.publish(dinv("a1", "a", "datasets/cold")).unwrap();
+        q.publish(dinv("a2", "a", "datasets/hot")).unwrap();
+        q.publish(dinv("b1", "b", "datasets/other")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_hot_datasets(vec!["datasets/hot".into()]);
+        assert_eq!(
+            q.take(&f).unwrap().unwrap().invocation.id,
+            "a1",
+            "no lane front is hot -> global FIFO"
+        );
+        // Once the hot invocation reaches its lane front it does win,
+        // even against an older cold front in another lane:
+        let (_c, q) = queue();
+        q.publish(dinv("b1", "b", "datasets/other")).unwrap();
+        q.publish(dinv("a2", "a", "datasets/hot")).unwrap();
+        assert_eq!(
+            q.take(&f).unwrap().unwrap().invocation.id,
+            "a2",
+            "hot lane front beats the older cold front"
+        );
+    }
+
+    #[test]
+    fn fanin_inputs_count_for_hot_preference() {
+        let (_c, q) = queue();
+        q.publish(dinv("cold-1", "a", "datasets/cold")).unwrap();
+        let mut join = dinv("join-1", "b", "results/p1");
+        join.spec = join.spec.with_datasets(["results/p1", "results/p2"]);
+        q.publish(join).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .with_hot_datasets(vec!["results/p2".into()]);
+        assert_eq!(
+            q.take(&f).unwrap().unwrap().invocation.id,
+            "join-1",
+            "any fan-in input being hot qualifies"
+        );
+    }
+
+    #[test]
+    fn grouped_take_hot_lane_beats_depth_and_fifo() {
+        let (_c, q) = queue();
+        q.publish(dinv("c0", "a", "datasets/cold")).unwrap();
+        for i in 1..4 {
+            q.publish(dinv(&format!("c{i}"), "a", "datasets/cold")).unwrap();
+        }
+        q.publish(dinv("h0", "b", "datasets/hot")).unwrap();
+        let f = TakeFilter::supporting(vec!["a".into(), "b".into()])
+            .preferring_deep(true)
+            .with_hot_datasets(vec!["datasets/hot".into()]);
+        let leases = q.take_batch_grouped(&f, 8).unwrap();
+        let ids: Vec<&str> = leases.iter().map(|l| l.invocation.id.as_str()).collect();
+        assert_eq!(ids, vec!["h0"], "hot lane chosen over the deeper cold lane");
+        // With the hot lane drained, the deep cold lane flows as before.
+        let leases = q.take_batch_grouped(&f, 8).unwrap();
+        assert_eq!(leases.len(), 4);
     }
 
     #[test]

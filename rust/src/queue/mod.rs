@@ -57,6 +57,15 @@ pub struct TakeFilter {
     /// (see `queue::mem`); with `Some` the other lane is invisible —
     /// drain tooling and priority-pinned schedulers use this.
     pub priority: Option<Priority>,
+    /// Dataset keys the taking node already holds in its local content
+    /// cache (the `scheduler::CacheAffinity` hot-set, DESIGN.md §15).
+    /// Ranked **after** warm-instance preference and **before** FIFO
+    /// order: among cold candidates, an invocation whose dataset is in
+    /// this set is delivered first, so compute moves to hot data instead
+    /// of re-fetching.  Empty = no preference (exact legacy behavior).
+    /// Purely a *preference* — a hot entry never excludes cold work and
+    /// a stale entry merely costs a backing fetch.
+    pub hot_datasets: HashSet<String>,
 }
 
 impl TakeFilter {
@@ -89,6 +98,20 @@ impl TakeFilter {
     pub fn for_priority(mut self, priority: Option<Priority>) -> TakeFilter {
         self.priority = priority;
         self
+    }
+
+    /// Set the cache-affinity hot-set (see `hot_datasets`).
+    pub fn with_hot_datasets(
+        mut self,
+        hot: impl IntoIterator<Item = String>,
+    ) -> TakeFilter {
+        self.hot_datasets = hot.into_iter().collect();
+        self
+    }
+
+    /// Whether `dataset` enjoys the hot-data preference.
+    pub fn is_hot(&self, dataset: &str) -> bool {
+        self.hot_datasets.contains(dataset)
     }
 
     /// Follow-up filter for deepening a same-class chunk: only `runtime`,
@@ -129,17 +152,23 @@ impl TakeFilter {
             items.sort();
             Json::Arr(items.into_iter().map(|s| Json::from(s.as_str())).collect())
         };
-        let j = Json::obj()
+        let mut j = Json::obj()
             .set("runtimes", arr(&self.runtimes))
             .set("warm", arr(&self.warm))
             .set("warm_only", self.warm_only)
             .set("prefer_deep", self.prefer_deep);
-        match self.priority {
+        if let Some(p) = self.priority {
             // Omitted when unrestricted: pre-priority peers see exactly
             // the wire shape they always did.
-            None => j,
-            Some(p) => j.set("priority", p.as_str()),
+            j = j.set("priority", p.as_str());
         }
+        if !self.hot_datasets.is_empty() {
+            // Omitted when empty: pre-affinity peers see the legacy wire
+            // shape, and an affinity-off filter encodes byte-identically
+            // to one that predates the field.
+            j = j.set("hot_datasets", arr(&self.hot_datasets));
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<TakeFilter> {
@@ -163,6 +192,9 @@ impl TakeFilter {
                 .get("priority")
                 .and_then(|v| v.as_str())
                 .and_then(|s| Priority::parse(s).ok()),
+            // Lenient: pre-affinity peers never send it; absent = no
+            // hot-data preference.
+            hot_datasets: strs("hot_datasets"),
         })
     }
 }
@@ -469,6 +501,40 @@ mod tests {
         // Unknown lane names from newer peers degrade to unrestricted.
         let j = any.to_json().set("priority", "realtime-v2");
         assert_eq!(TakeFilter::from_json(&j).unwrap().priority, None);
+    }
+
+    #[test]
+    fn hot_datasets_roundtrip_and_wire_leniency() {
+        let f = TakeFilter::supporting(vec!["a".into()])
+            .with_hot_datasets(vec!["datasets/x".into(), "datasets/y".into()]);
+        assert!(f.is_hot("datasets/x"));
+        assert!(!f.is_hot("datasets/z"));
+        let back = TakeFilter::from_json(&f.to_json()).unwrap();
+        assert_eq!(back, f);
+
+        // Empty hot-set is omitted on the wire: pre-affinity peers see
+        // the exact legacy shape, and old payloads (field absent) parse
+        // to "no preference".
+        let off = TakeFilter::supporting(vec!["a".into()]);
+        assert!(off.to_json().get("hot_datasets").is_none());
+        let back = TakeFilter::from_json(&off.to_json()).unwrap();
+        assert!(back.hot_datasets.is_empty());
+
+        // An old peer that re-encodes and drops the field yields a
+        // filter with no preference — never an error.
+        let mut j = f.to_json();
+        j = j.set("hot_datasets", crate::json::Json::Null);
+        assert!(TakeFilter::from_json(&j).unwrap().hot_datasets.is_empty());
+    }
+
+    #[test]
+    fn hot_datasets_encode_sorted_for_deterministic_wire() {
+        let f = TakeFilter::default()
+            .with_hot_datasets(vec!["datasets/b".into(), "datasets/a".into()]);
+        let arr = f.to_json();
+        let hot = arr.get("hot_datasets").and_then(|v| v.as_arr()).unwrap();
+        let keys: Vec<&str> = hot.iter().filter_map(|x| x.as_str()).collect();
+        assert_eq!(keys, vec!["datasets/a", "datasets/b"]);
     }
 
     #[test]

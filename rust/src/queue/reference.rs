@@ -15,6 +15,11 @@
 //! under class-restricted takes it must replay byte-identical delivery
 //! (ids, warm hits, attempt counts), totals, and per-class gauges
 //! against the single-shard engine — with the QoS lanes on *and* off.
+//!
+//! Cache-affinity hints (DESIGN.md §15) join the replay here too: a
+//! take whose hot-set is stale must degrade to the hint-free ranking,
+//! and live hints must never desynchronize the sharded engine from the
+//! single-shard engine.
 
 use super::{InvocationQueue, MemQueue, QueueConfig, ShardedQueue, TakeFilter};
 use crate::events::{EventSpec, Invocation, Priority};
@@ -286,6 +291,27 @@ fn inv_pri(id: &str, runtime: &str, b: u64) -> Invocation {
     )
 }
 
+/// Like [`inv_pri`], but the dataset cycles through three objects so
+/// cache-affinity hints can genuinely match queued work.
+fn inv_ds(id: &str, runtime: &str, b: u64) -> Invocation {
+    let priority = if b % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+    Invocation::new(
+        id,
+        EventSpec::new(runtime, &format!("datasets/d{}", (b >> 8) % 3))
+            .with_priority(priority),
+        SimTime(0),
+    )
+}
+
+/// Random hot-set over the same three-object dataset namespace
+/// [`inv_ds`] publishes into (bits 16..19 of `c`).
+fn hot_hints(c: u64) -> Vec<String> {
+    (0..3)
+        .filter(|i| c & (1 << (i + 16)) != 0)
+        .map(|i| format!("datasets/d{i}"))
+        .collect()
+}
+
 /// The tentpole acceptance property: a 4-shard [`ShardedQueue`] against
 /// the single-shard engine, QoS lanes ON (default burst), mixed
 /// priorities, class-restricted takes, acks, releases, and expiry reaps
@@ -532,6 +558,164 @@ fn property_lanes_off_mixed_priorities_equal_scan_model() {
                     }
                 }
                 if indexed.queued_runtimes() != model.queued_runtimes() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Stale affinity hints are a pure no-op (DESIGN.md §15): a take whose
+/// hot-set names datasets nothing queued reads — e.g. objects evicted
+/// since the node last gossiped its summary — must replay
+/// byte-identical to the hint-free scan model.  The preference degrades
+/// to the legacy warm ▸ FIFO ranking; never an error, never a skipped
+/// or reordered invocation.
+#[test]
+fn property_stale_affinity_hints_equal_hint_free_scan_model() {
+    prop::check(
+        "stale-affinity-hints-equal-scan-model",
+        40,
+        |rng| {
+            (0..rng.range(5, 60))
+                .map(|_| (rng.below(4), rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .collect::<Vec<(u64, u64, u64, u64)>>()
+        },
+        |ops| {
+            let clock = TestClock::new();
+            let cfg = QueueConfig { interactive_burst: 0, ..QueueConfig::default() };
+            let indexed = MemQueue::with_config(clock.clone(), cfg.clone());
+            let mut model = ScanModel::new(cfg.visibility, cfg.max_attempts);
+            for (step, &(kind, a, b, c)) in ops.iter().enumerate() {
+                match kind {
+                    0 | 1 => {
+                        let rt = format!("r{}", a % 4);
+                        let id = format!("p{step}");
+                        indexed.publish(inv_ds(&id, &rt, b)).unwrap();
+                        model.publish(inv_ds(&id, &rt, b));
+                    }
+                    _ => {
+                        // The indexed engine sees hints for datasets no
+                        // queued invocation reads; the model never sees
+                        // hints at all.  Both must hand out the same
+                        // lease.
+                        let f = filter_from(a, b, c);
+                        let hinted = f
+                            .clone()
+                            .with_hot_datasets((0..2).map(|i| format!("datasets/gone{i}")));
+                        let got = indexed.take(&hinted).unwrap();
+                        let want = model.take(&f, clock.now());
+                        match (&got, &want) {
+                            (None, None) => {}
+                            (Some(lease), Some((id, warm, attempt))) => {
+                                if &lease.invocation.id != id
+                                    || lease.warm_hit != *warm
+                                    || lease.attempt != *attempt
+                                {
+                                    return false;
+                                }
+                            }
+                            _ => return false,
+                        }
+                    }
+                }
+                if indexed.queued_runtimes() != model.queued_runtimes() {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// Affinity hints ride the per-class sharded contract unchanged: with
+/// random hot-sets over the live dataset namespace (QoS lanes ON, mixed
+/// priorities, acks, releases, expiry reaps), the 4-shard engine must
+/// still replay byte-identical per-class delivery against the
+/// single-shard engine.  The hot tier runs inside whichever shard owns
+/// the class — the same lane code on both sides — so hints must never
+/// desynchronize the two engines.
+#[test]
+fn property_sharded_equals_single_shard_with_affinity_hints() {
+    prop::check(
+        "sharded-equals-single-shard-with-affinity-hints",
+        40,
+        |rng| {
+            (0..rng.range(5, 80))
+                .map(|_| (rng.below(6), rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .collect::<Vec<(u64, u64, u64, u64)>>()
+        },
+        |ops| {
+            let clock = TestClock::new();
+            let cfg = QueueConfig {
+                visibility: Duration::from_secs(1),
+                max_attempts: 2,
+                ..QueueConfig::default()
+            };
+            let sharded = ShardedQueue::with_config(clock.clone(), cfg.clone(), 4);
+            let single = MemQueue::with_config(clock.clone(), cfg.clone());
+            let mut outstanding: Vec<String> = Vec::new();
+            for (step, &(kind, a, b, c)) in ops.iter().enumerate() {
+                match kind {
+                    0 | 1 => {
+                        let rt = format!("r{}", a % 4);
+                        let id = format!("p{step}");
+                        sharded.publish(inv_ds(&id, &rt, b)).unwrap();
+                        single.publish(inv_ds(&id, &rt, b)).unwrap();
+                    }
+                    2 => {
+                        let (_, f) = class_filter(a, b, c);
+                        let f = f.with_hot_datasets(hot_hints(c));
+                        let got = sharded.take(&f).unwrap();
+                        let want = single.take(&f).unwrap();
+                        match (&got, &want) {
+                            (None, None) => {}
+                            (Some(g), Some(w)) => {
+                                if g.invocation.id != w.invocation.id
+                                    || g.warm_hit != w.warm_hit
+                                    || g.attempt != w.attempt
+                                {
+                                    return false;
+                                }
+                                outstanding.push(g.invocation.id.clone());
+                            }
+                            _ => return false,
+                        }
+                    }
+                    3 => {
+                        if outstanding.is_empty() {
+                            continue;
+                        }
+                        let id = outstanding.remove(a as usize % outstanding.len());
+                        if sharded.ack(&id).is_ok() != single.ack(&id).is_ok() {
+                            return false;
+                        }
+                    }
+                    4 => {
+                        if outstanding.is_empty() {
+                            continue;
+                        }
+                        let id = outstanding.remove(a as usize % outstanding.len());
+                        if sharded.release(&id).is_ok() != single.release(&id).is_ok() {
+                            return false;
+                        }
+                    }
+                    _ => {
+                        clock.advance(Duration::from_millis(a % 1500));
+                        if sharded.reap_expired().unwrap() != single.reap_expired().unwrap() {
+                            return false;
+                        }
+                    }
+                }
+                let s = sharded.stats().unwrap();
+                let m = single.stats().unwrap();
+                if (s.queued, s.in_flight, s.acked, s.dead)
+                    != (m.queued, m.in_flight, m.acked, m.dead)
+                {
+                    return false;
+                }
+                if s.classes != m.classes {
                     return false;
                 }
             }

@@ -13,13 +13,18 @@
 //!   kind while it has free slots (bias work toward cheap accelerators).
 //! * [`DeadlineFilter`] — the future-work latency guarantee: drop events
 //!   that have already waited past a deadline instead of running them.
+//! * [`CacheAffinity`] — data-locality decorator: advertise the node's
+//!   hot cached datasets in the take filter so the queue moves compute
+//!   to nodes that already hold the data (warm ▸ hot ▸ FIFO).
 
 use crate::accel::DeviceRegistry;
 use crate::events::Invocation;
 use crate::queue::TakeFilter;
 use crate::runtime::InstancePool;
+use crate::store::CachedStore;
 use crate::util::SimTime;
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Decision for a leased event before execution.
@@ -40,6 +45,19 @@ pub trait Policy: Send + Sync {
     /// Admission check after the lease is obtained.
     fn admit(&self, _inv: &Invocation, _now: SimTime) -> Admission {
         Admission::Run
+    }
+
+    /// Bind this policy to a node's local content cache, returning the
+    /// node-specific policy to poll with — or `None` when the policy is
+    /// cache-oblivious (the default; the shared instance keeps serving).
+    ///
+    /// A cluster shares **one** policy `Arc` across every node it
+    /// spawns, but [`CacheAffinity`] must read the *taking node's own*
+    /// cache; `spawn_node` calls this after building the node's
+    /// [`CachedStore`] so each node polls with a policy bound to its own
+    /// hot-set.  Decorators forward the call and re-wrap.
+    fn bind_cache(&self, _cache: &Arc<CachedStore>) -> Option<Arc<dyn Policy>> {
+        None
     }
 
     fn name(&self) -> &'static str;
@@ -103,8 +121,77 @@ impl Policy for BatchAware {
         self.inner.admit(inv, now)
     }
 
+    fn bind_cache(&self, cache: &Arc<CachedStore>) -> Option<Arc<dyn Policy>> {
+        self.inner
+            .bind_cache(cache)
+            .map(|inner| Arc::new(BatchAware { inner }) as Arc<dyn Policy>)
+    }
+
     fn name(&self) -> &'static str {
         "batch-aware"
+    }
+}
+
+/// Cache-affinity decorator (DESIGN.md §15): the inner policy's take
+/// set, with [`TakeFilter::hot_datasets`] filled from the taking node's
+/// local content cache each poll, so the queue ranks warm ▸ hot ▸ FIFO
+/// and compute moves to the data instead of re-fetching it.
+///
+/// Unbound (before [`Policy::bind_cache`], or on a node with caching
+/// disabled) the hot-set stays empty and every take is byte-identical
+/// to the inner policy — the affinity-off property the reference-model
+/// tests pin.  A stale hot-set entry costs at most one backing fetch on
+/// the node that advertised it (see `CachedStore::contains_cached`).
+pub struct CacheAffinity {
+    pub inner: Arc<dyn Policy>,
+    /// The node-local cache to summarize; `None` until bound.
+    cache: Option<Arc<CachedStore>>,
+    /// Hot-set size advertised per poll (top-K LRU keys).
+    pub top_k: usize,
+}
+
+/// Default hot-set breadth: enough for a node's working set of datasets
+/// while keeping the per-take membership probes and the gossip payload
+/// small.
+pub const DEFAULT_HOT_SET: usize = 16;
+
+impl CacheAffinity {
+    /// Decorate `inner` with cache-affinity; bind with
+    /// [`Policy::bind_cache`] once the node's cache exists.
+    pub fn over(inner: Arc<dyn Policy>) -> CacheAffinity {
+        CacheAffinity { inner, cache: None, top_k: DEFAULT_HOT_SET }
+    }
+}
+
+impl Policy for CacheAffinity {
+    fn filter(&self, registry: &DeviceRegistry, pool: &InstancePool) -> TakeFilter {
+        let f = self.inner.filter(registry, pool);
+        match &self.cache {
+            Some(cache) => {
+                let (keys, _generation) = cache.hot_keys(self.top_k);
+                f.with_hot_datasets(keys)
+            }
+            None => f,
+        }
+    }
+
+    fn admit(&self, inv: &Invocation, now: SimTime) -> Admission {
+        self.inner.admit(inv, now)
+    }
+
+    fn bind_cache(&self, cache: &Arc<CachedStore>) -> Option<Arc<dyn Policy>> {
+        // Re-bind the inner policy too, so stacked decorators all see
+        // the node's cache.
+        let inner = self.inner.bind_cache(cache).unwrap_or_else(|| self.inner.clone());
+        Some(Arc::new(CacheAffinity {
+            inner,
+            cache: Some(cache.clone()),
+            top_k: self.top_k,
+        }))
+    }
+
+    fn name(&self) -> &'static str {
+        "affinity"
     }
 }
 
@@ -226,9 +313,16 @@ pub fn parse_policy(name: &str) -> anyhow::Result<std::sync::Arc<dyn Policy>> {
                 .map_err(|e| anyhow::anyhow!("bad lane in '{s}': {e}"))?;
             Ok(std::sync::Arc::new(PriorityLane { lane }))
         }
+        "affinity" => Ok(std::sync::Arc::new(CacheAffinity::over(std::sync::Arc::new(
+            WarmFirst,
+        )))),
+        s if s.starts_with("affinity:") => {
+            let inner = parse_policy(&s["affinity:".len()..])?;
+            Ok(std::sync::Arc::new(CacheAffinity::over(inner)))
+        }
         other => anyhow::bail!(
             "unknown policy '{other}' (expected warm-first | fifo | deadline:<ms> | \
-             priority:interactive | priority:batch)"
+             priority:interactive | priority:batch | affinity[:<inner>])"
         ),
     }
 }
@@ -349,9 +443,70 @@ mod tests {
             "priority-interactive"
         );
         assert_eq!(parse_policy("priority:batch").unwrap().name(), "priority-batch");
+        assert_eq!(parse_policy("affinity").unwrap().name(), "affinity");
+        assert_eq!(parse_policy("affinity:fifo").unwrap().name(), "affinity");
+        assert_eq!(parse_policy("affinity:deadline:2000").unwrap().name(), "affinity");
+        assert!(parse_policy("affinity:zzz").is_err());
         assert!(parse_policy("priority:urgent").is_err());
         assert!(parse_policy("deadline:xx").is_err());
         assert!(parse_policy("zzz").is_err());
+    }
+
+    /// A node-local cache with a few resident datasets, for binding
+    /// affinity policies in tests.
+    fn cache_with(keys: &[&str]) -> Arc<CachedStore> {
+        use crate::store::ObjectStore;
+        let backing = Arc::new(crate::store::MemStore::new());
+        let cache = Arc::new(CachedStore::new(backing, 1 << 20));
+        for k in keys {
+            cache.put(k, b"payload").unwrap();
+            drop(cache.get(k).unwrap());
+        }
+        cache
+    }
+
+    #[test]
+    fn unbound_affinity_is_byte_identical_to_inner() {
+        let reg = paper_all_accel();
+        let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
+        let policy = CacheAffinity::over(std::sync::Arc::new(WarmFirst));
+        let f = policy.filter(&reg, &pool);
+        let inner = WarmFirst.filter(&reg, &pool);
+        assert_eq!(f.to_json().to_string(), inner.to_json().to_string());
+        assert!(f.hot_datasets.is_empty());
+    }
+
+    #[test]
+    fn bound_affinity_advertises_the_cache_hot_set() {
+        let reg = paper_all_accel();
+        let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
+        let cache = cache_with(&["datasets/a", "datasets/b"]);
+        let policy = CacheAffinity::over(std::sync::Arc::new(WarmFirst))
+            .bind_cache(&cache)
+            .expect("affinity binds");
+        let f = policy.filter(&reg, &pool);
+        assert_eq!(f.hot_datasets, set(&["datasets/a", "datasets/b"]));
+        assert_eq!(f.runtimes, set(&["tinyyolo"]), "take set still comes from the inner policy");
+        assert_eq!(f.warm, set(&["tinyyolo"]), "warm preference outranks hot and is preserved");
+    }
+
+    #[test]
+    fn batch_aware_forwards_bind_and_keeps_both_preferences() {
+        let reg = paper_all_accel();
+        let pool = pool_with_warm("tinyyolo-gpu", "gpu0");
+        let cache = cache_with(&["datasets/hot"]);
+        let stack = BatchAware {
+            inner: std::sync::Arc::new(CacheAffinity::over(std::sync::Arc::new(WarmFirst))),
+        };
+        // Cache-oblivious stacks stay on the shared instance.
+        assert!(BatchAware { inner: std::sync::Arc::new(WarmFirst) }
+            .bind_cache(&cache)
+            .is_none());
+        let bound = stack.bind_cache(&cache).expect("affinity inside the stack binds");
+        assert_eq!(bound.name(), "batch-aware");
+        let f = bound.filter(&reg, &pool);
+        assert!(f.prefer_deep, "batching preference survives the re-wrap");
+        assert_eq!(f.hot_datasets, set(&["datasets/hot"]));
     }
 
     #[test]

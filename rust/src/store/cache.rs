@@ -76,6 +76,11 @@ struct CacheState {
     tick: u64,
     bytes: usize,
     evictions: u64,
+    /// Bumped whenever the cached **key-set** changes (insert, eviction,
+    /// invalidation) — recency bumps don't count.  Lets a hot-set
+    /// consumer (DESIGN.md §15) drop out-of-order summaries and skip
+    /// recomputing an unchanged one.
+    generation: u64,
 }
 
 impl CacheState {
@@ -104,6 +109,7 @@ impl CacheState {
             } else {
                 self.lru.remove(&e.tick);
             }
+            self.generation += 1;
         }
     }
 
@@ -119,6 +125,7 @@ impl CacheState {
         let order = if pinned { &mut self.pinned_lru } else { &mut self.lru };
         order.insert(tick, key.to_string());
         self.map.insert(key.to_string(), Entry { blob, tick, pinned });
+        self.generation += 1;
         while self.bytes > budget {
             let victim = match self.lru.keys().next().copied() {
                 Some(t) => self.lru.remove(&t).expect("lru entry"),
@@ -132,7 +139,32 @@ impl CacheState {
             let e = self.map.remove(&victim).expect("map entry");
             self.bytes -= e.blob.len();
             self.evictions += 1;
+            self.generation += 1;
         }
+    }
+
+    /// Top-`k` most-recently-used cached keys (pinned and unpinned
+    /// merged by recency, newest first).  O(k) — two reverse BTreeMap
+    /// cursors, no allocation beyond the output.
+    fn hot_keys(&self, k: usize) -> Vec<String> {
+        let mut un = self.lru.iter().rev().peekable();
+        let mut pin = self.pinned_lru.iter().rev().peekable();
+        let mut out = Vec::with_capacity(k.min(self.map.len()));
+        while out.len() < k {
+            let take_unpinned = match (un.peek(), pin.peek()) {
+                (Some((tu, _)), Some((tp, _))) => tu > tp,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (None, None) => break,
+            };
+            let (_, key) = if take_unpinned {
+                un.next().expect("peeked")
+            } else {
+                pin.next().expect("peeked")
+            };
+            out.push(key.clone());
+        }
+        out
     }
 }
 
@@ -205,9 +237,37 @@ impl CachedStore {
         }
     }
 
+    /// Per-node hot-set summary (DESIGN.md §15): the top-`k`
+    /// most-recently-used cached keys, newest first, plus the cache
+    /// generation they were sampled at.  This is what the node gossips
+    /// on completion reports and what `scheduler::CacheAffinity` feeds
+    /// into [`crate::queue::TakeFilter::hot_datasets`].  Keys that no
+    /// queued invocation references are harmless noise — the queue's hot
+    /// tier is a pure preference.
+    pub fn hot_keys(&self, k: usize) -> (Vec<String>, u64) {
+        let state = self.state.lock().expect("cache poisoned");
+        (state.hot_keys(k), state.generation)
+    }
+
+    /// Current cache generation (bumped on every key-set change).
+    pub fn generation(&self) -> u64 {
+        self.state.lock().expect("cache poisoned").generation
+    }
+
+    /// Whether `key` is cache-resident *right now*, without promoting
+    /// it, counting a hit, or touching the backing store.  The affinity
+    /// hit/miss accounting probes this at fetch time: a dispatch whose
+    /// dataset is resident is an affinity hit, one that needs a backing
+    /// fetch is a miss (stale-hint degradation, never an error).
+    pub fn contains_cached(&self, key: &str) -> bool {
+        self.state.lock().expect("cache poisoned").map.contains_key(key)
+    }
+
     /// Drop the cached entry for `key` and poison any fetch of it that is
-    /// currently in flight.
-    fn invalidate(&self, key: &str) {
+    /// currently in flight.  Public so operators (and the stale-hint
+    /// regression tests) can evict behind the scheduler's back — the
+    /// backing object is untouched, so a later `get` refetches.
+    pub fn invalidate(&self, key: &str) {
         let inflight = self.inflight.lock().expect("inflight poisoned");
         if let Some(f) = inflight.get(key) {
             f.poisoned.store(true, Ordering::SeqCst);
@@ -755,6 +815,60 @@ mod tests {
         }
         assert!(Blob::ptr_eq(&a, &s.get(&key).unwrap()), "pinned entry survived churn");
         assert_eq!(inner.fetches(), 6, "only the churn keys fetched");
+    }
+
+    #[test]
+    fn hot_keys_rank_by_recency_with_generation() {
+        let s = CachedStore::new(Arc::new(MemStore::new()), 64 * MB);
+        let (keys, gen0) = s.hot_keys(8);
+        assert!(keys.is_empty());
+        for k in ["a", "b", "c"] {
+            s.put(&format!("datasets/{k}"), b"xx").unwrap();
+            s.get(&format!("datasets/{k}")).unwrap();
+        }
+        // Re-read "a": it becomes the most recent.
+        s.get("datasets/a").unwrap();
+        let (keys, gen1) = s.hot_keys(8);
+        assert_eq!(keys, vec!["datasets/a", "datasets/c", "datasets/b"]);
+        assert!(gen1 > gen0, "inserts bump the generation");
+        // Recency bumps alone don't change the key-set generation...
+        s.get("datasets/b").unwrap();
+        assert_eq!(s.generation(), gen1);
+        // ...but k truncates newest-first, and pinned cas entries rank
+        // by the same recency order.
+        let (keys, _) = s.hot_keys(1);
+        assert_eq!(keys, vec!["datasets/b"]);
+        let cas = s.put_cas(b"blob").unwrap();
+        let (keys, gen2) = s.hot_keys(2);
+        assert_eq!(keys, vec![cas.clone(), "datasets/b".to_string()]);
+        assert!(gen2 > gen1);
+        // Invalidation shrinks the set and bumps the generation.
+        s.invalidate(&cas);
+        let (keys, gen3) = s.hot_keys(8);
+        assert!(!keys.contains(&cas));
+        assert!(gen3 > gen2);
+    }
+
+    #[test]
+    fn contains_cached_probes_without_promotion_or_fetch() {
+        let inner = Arc::new(CountingStore::new(Duration::ZERO));
+        let s = CachedStore::new(inner.clone(), 64 * MB);
+        s.put("datasets/x", b"payload").unwrap();
+        assert!(
+            !s.contains_cached("datasets/x"),
+            "exists in the backing store but not resident"
+        );
+        assert_eq!(inner.fetches(), 0, "the probe never fetches");
+        s.get("datasets/x").unwrap();
+        let hits_before = s.stats().hits;
+        assert!(s.contains_cached("datasets/x"));
+        assert_eq!(s.stats().hits, hits_before, "the probe counts no hit");
+        // Invalidate behind the scheduler's back: the probe reports the
+        // truth and the next get degrades to a backing refetch.
+        s.invalidate("datasets/x");
+        assert!(!s.contains_cached("datasets/x"));
+        assert_eq!(s.get("datasets/x").unwrap(), b"payload");
+        assert_eq!(inner.fetches(), 2);
     }
 
     #[test]
