@@ -68,6 +68,67 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(inst.executions() as usize, n_serial + n8 + n32);
     drop(inst);
 
+    // Batched-HLO regime (DESIGN.md §16): a legacy bundle compiles only
+    // the batch-1 program, so even a coalesced dispatch loops the device
+    // once per input (ladder [1]); true batched artifacts execute one
+    // device program per planned sub-batch.  Delay models 100 µs per
+    // *device program*, so the gap is exactly the dispatch amortization
+    // batched artifacts buy on top of micro-batching.
+    let loop_inst = RuntimeInstance::start(
+        "bench-loop",
+        "gpu0",
+        MockExecutor::factory_batched(1.0, delay, vec![1]),
+    )?;
+    let mut loop_programs = 0usize;
+    let nloop = 2_048;
+    let loop_rate = measure(
+        &mut results,
+        "exec batch=32 loop-HLO (100us/program)",
+        nloop,
+        || {
+            for _ in 0..nloop / 32 {
+                let out = loop_inst.exec_batch(vec![input.clone(); 32]).unwrap();
+                loop_programs += out.programs;
+            }
+        },
+    );
+    assert_eq!(loop_programs, nloop, "loop fallback: one program per input");
+    drop(loop_inst);
+
+    let hlo_inst = RuntimeInstance::start(
+        "bench-hlo",
+        "gpu0",
+        MockExecutor::factory_batched(1.0, delay, vec![1, 2, 4, 8, 16, 32]),
+    )?;
+    let mut hlo_programs = 0usize;
+    let mut hlo_pads = 0usize;
+    let nhlo = 8_192;
+    let hlo_rate = measure(
+        &mut results,
+        "exec batch=32 batched-HLO (100us/program)",
+        nhlo,
+        || {
+            for _ in 0..nhlo / 32 {
+                let out = hlo_inst.exec_batch(vec![input.clone(); 32]).unwrap();
+                hlo_programs += out.programs;
+                hlo_pads += out.pad_slots;
+            }
+        },
+    );
+    assert_eq!(
+        hlo_programs,
+        nhlo / 32,
+        "batch=32 lands exactly on the 32-wide program: ceil(N/selected) = 1 per dispatch"
+    );
+    assert_eq!(hlo_pads, 0, "exact rung never pads");
+    // Off-rung sizes: 20 pads onto the half-full-or-better 32-wide
+    // program; 12 splits 8+4 over exact rungs (DESIGN.md §16 policy).
+    let out = hlo_inst.exec_batch(vec![input.clone(); 20]).unwrap();
+    assert_eq!((out.outputs.len(), out.programs, out.pad_slots), (20, 1, 12));
+    let out = hlo_inst.exec_batch(vec![input.clone(); 12]).unwrap();
+    assert_eq!((out.outputs.len(), out.programs, out.pad_slots), (12, 2, 0));
+    drop(hlo_inst);
+
     // Zero-delay regime: the instance layer itself (one channel + one
     // thread hop per batch instead of per invocation).
     let inst0 = instance(Duration::ZERO);
@@ -113,6 +174,15 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         batch0_rate >= serial0_rate * 0.9,
         "zero-overhead batching regressed the instance layer: {batch0_rate:.0} vs {serial0_rate:.0} ops/s"
+    );
+    // Batched-HLO acceptance (DESIGN.md §16): at batch 32 the 32-wide
+    // program turns 32 device dispatches into 1 — demand at least 4x
+    // fewer dispatches' worth of throughput over the per-input loop.
+    let hlo_speedup = hlo_rate / loop_rate;
+    println!("batched-HLO vs loop-HLO at batch=32: {hlo_speedup:.1}x");
+    anyhow::ensure!(
+        hlo_speedup >= 4.0,
+        "batched-HLO speedup below 4x: {hlo_speedup:.2}x ({hlo_rate:.0} vs {loop_rate:.0} ops/s)"
     );
     println!("execution micro-batch targets PASSED");
     Ok(())

@@ -56,6 +56,48 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // Batched-HLO artifacts (DESIGN.md §16): one device program per
+    // micro-batch vs the per-input loop a batch-1-only bundle forces.
+    // Gated on the bundle actually carrying batch variants (legacy
+    // artifact trees skip cleanly).
+    let gpu_ladder = bundle
+        .artifact("tinyyolo-gpu")
+        .map(|a| a.batch_sizes.clone())
+        .unwrap_or_else(|_| vec![1]);
+    if gpu_ladder.len() > 1 {
+        use hardless::runtime::Executor;
+        use std::sync::Arc;
+        let mut exec = PjrtExecutor::compile(&bundle, "tinyyolo-gpu")?;
+        let widest = *gpu_ladder.last().unwrap();
+        let rows: Vec<Arc<Vec<f32>>> =
+            (0..widest).map(|_| Arc::new(input.clone())).collect();
+        println!("\nbatched HLO (tinyyolo-gpu, ladder {gpu_ladder:?}):");
+        println!("{:<12} {:>10} {:>10} {:>14}", "batch", "programs", "pads", "rows/s");
+        for &n in &gpu_ladder {
+            // warmup, then measure one-program batched execution
+            exec.infer_batch(&rows[..n])?;
+            let iters = 20;
+            let t0 = Instant::now();
+            let mut programs = 0usize;
+            let mut pads = 0usize;
+            for _ in 0..iters {
+                let run = exec.infer_batch(&rows[..n])?;
+                programs += run.programs;
+                pads += run.pad_slots;
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "{:<12} {:>10} {:>10} {:>14.1}",
+                n,
+                programs / iters,
+                pads / iters,
+                (iters * n) as f64 / dt
+            );
+        }
+    } else {
+        println!("\nbundle has no batch variants (legacy batch-1 artifacts); skipping batched rows");
+    }
+
     // Analytic L1 kernel stats for the production GEMM shapes (DESIGN §8).
     println!("\nL1 Pallas GEMM — analytic MXU/VMEM estimates per layer (real-TPU deploy):");
     println!(

@@ -56,6 +56,39 @@ def lower_variant(variant: M.Variant, params) -> str:
     return to_hlo_text(lowered)
 
 
+def hlo_filename(name: str, batch: int) -> str:
+    """Storage-name convention shared with the Rust loader
+    (``runtime/bundle.rs``): the batch-1 artifact keeps its legacy stem so
+    pre-batching bundles stay readable byte-for-byte, batch-N variants
+    insert ``.b{N}`` before the extension."""
+    return f"{name}.hlo.txt" if batch == 1 else f"{name}.b{batch}.hlo.txt"
+
+
+def lower_batched(v, leaves, treedef, out_dir: str, force: bool,
+                  batch_sizes=None) -> str:
+    """Lower one variant at every compiled batch size (same weights,
+    N-leading-dim input spec).  Returns the batch-1 file path — the
+    manifest's ``file`` field; batch-N names are derived from it."""
+    sizes = batch_sizes or M.BATCH_SIZES
+    base = os.path.join(out_dir, hlo_filename(v.name, 1))
+    leaf_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
+    for n in sizes:
+        bv = v.at_batch(n)
+        path = os.path.join(out_dir, hlo_filename(v.name, n))
+        if not force and os.path.exists(path):
+            print(f"[aot] fresh: {path}")
+            continue
+        print(f"[aot] lowering {v.name} b{n} (input {bv.input_shape}, "
+              f"{jnp.dtype(v.compute_dtype).name}, tiles "
+              f"{v.bm}x{v.bk}x{v.bn}) ...")
+        img_spec = jax.ShapeDtypeStruct(bv.input_shape, jnp.float32)
+        text = to_hlo_text(jax.jit(bv.forward(treedef)).lower(img_spec, *leaf_specs))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {len(text) / 1e6:.2f} MB -> {path}")
+    return base
+
+
 def write_weights(params, out_dir: str):
     """Serialize weight leaves to ``weights.bin`` (little-endian f32).
 
@@ -96,7 +129,9 @@ def params_fingerprint(params) -> str:
     return h.hexdigest()[:16]
 
 
-def build_manifest(variants, params, hlo_files, weight_specs) -> dict:
+def build_manifest(variants, params, hlo_files, weight_specs,
+                   batch_sizes=None) -> dict:
+    sizes = list(batch_sizes or M.BATCH_SIZES)
     return {
         "model": "tiny-yolo-v2-repro",
         "seed": 0,
@@ -117,16 +152,30 @@ def build_manifest(variants, params, hlo_files, weight_specs) -> dict:
                 "compute_dtype": str(jnp.dtype(v.compute_dtype).name),
                 "tags": v.tags,
                 "tiles": {"bm": v.bm, "bk": v.bk, "bn": v.bn},
+                # Compiled micro-batch ladder: one device program per size,
+                # stored beside `file` under the `.b{N}` stem convention.
+                # Readers predating batched HLO ignore the field; bundles
+                # predating it omit it and default to [input_shape[0]].
+                "batch_sizes": sizes,
             }
             for v, f in zip(variants, hlo_files)
         ],
     }
 
 
+# Batched golden size: one representative ladder rung is enough for the
+# Rust equivalence test (batch-8 output rows vs 8 stacked batch-1 runs).
+GOLDEN_BATCH = 8
+
+
 def write_golden(variants, params, out_dir: str):
     """Emit a golden (input, output) pair per variant for Rust integration
     tests: the Rust runtime executes the artifact on ``golden_input.bin``
-    and asserts allclose against ``<variant>.golden.bin``."""
+    and asserts allclose against ``<variant>.golden.bin``.
+
+    Also emits a batched pair per variant (``golden_input.b{N}.bin`` with N
+    distinct rows + ``<variant>.b{N}.golden.bin``) so the PJRT-gated test
+    can assert a batch-N artifact matches N stacked batch-1 executions."""
     import numpy as np
 
     leaves, treedef, _ = M.flatten_params(params)
@@ -142,7 +191,23 @@ def write_golden(variants, params, out_dir: str):
         out = np.asarray(out, dtype=np.float32)
         with open(os.path.join(out_dir, f"{v.name}.golden.bin"), "wb") as f:
             f.write(out.astype("<f4").tobytes())
-    print(f"[aot] wrote golden input/output pairs for {len(variants)} variants")
+    # Batched pair: a separate seeded stream so the batch-1 goldens above
+    # stay byte-identical to pre-batching bundles.
+    rng_b = np.random.RandomState(5678)
+    row_shape = variants[0].input_shape[1:]
+    xb = rng_b.uniform(0.0, 255.0,
+                       size=(GOLDEN_BATCH,) + row_shape).astype(np.float32)
+    with open(os.path.join(out_dir, f"golden_input.b{GOLDEN_BATCH}.bin"), "wb") as f:
+        f.write(xb.astype("<f4").tobytes())
+    for v in variants:
+        bv = v.at_batch(GOLDEN_BATCH)
+        out = jax.jit(bv.forward(treedef))(jnp.asarray(xb), *leaves)[0]
+        out = np.asarray(out, dtype=np.float32)
+        name = f"{v.name}.b{GOLDEN_BATCH}.golden.bin"
+        with open(os.path.join(out_dir, name), "wb") as f:
+            f.write(out.astype("<f4").tobytes())
+    print(f"[aot] wrote golden input/output pairs for {len(variants)} variants "
+          f"(batch 1 and batch {GOLDEN_BATCH})")
 
 
 def lower_classifier_bundle(out_dir: str, force: bool) -> None:
@@ -155,22 +220,8 @@ def lower_classifier_bundle(out_dir: str, force: bool) -> None:
     os.makedirs(cls_dir, exist_ok=True)
     params = C.init_params(seed=1)
     leaves, treedef, _names = M.flatten_params(params)
-    files = []
-    for v in C.CLS_VARIANTS:
-        path = os.path.join(cls_dir, f"{v.name}.hlo.txt")
-        files.append(path)
-        if not force and os.path.exists(path):
-            print(f"[aot] fresh: {path}")
-            continue
-        print(f"[aot] lowering {v.name} (input {v.input_shape}, "
-              f"{jnp.dtype(v.compute_dtype).name}) ...")
-        fn = v.forward(treedef)
-        img_spec = jax.ShapeDtypeStruct(v.input_shape, jnp.float32)
-        leaf_specs = [jax.ShapeDtypeStruct(l.shape, l.dtype) for l in leaves]
-        text = to_hlo_text(jax.jit(fn).lower(img_spec, *leaf_specs))
-        with open(path, "w") as f:
-            f.write(text)
-        print(f"[aot] wrote {len(text) / 1e6:.2f} MB -> {path}")
+    files = [lower_batched(v, leaves, treedef, cls_dir, force)
+             for v in C.CLS_VARIANTS]
     weight_specs, wpath = write_weights(params, cls_dir)
     print(f"[aot] wrote {os.path.getsize(wpath) / 1e6:.2f} MB -> {wpath}")
     manifest = {
@@ -191,6 +242,7 @@ def lower_classifier_bundle(out_dir: str, force: bool) -> None:
                 "compute_dtype": str(jnp.dtype(v.compute_dtype).name),
                 "tags": v.tags,
                 "tiles": {"bm": v.bm, "bk": v.bk, "bn": v.bn},
+                "batch_sizes": list(M.BATCH_SIZES),
             }
             for v, f in zip(C.CLS_VARIANTS, files)
         ],
@@ -207,6 +259,19 @@ def lower_classifier_bundle(out_dir: str, force: bool) -> None:
     for v in C.CLS_VARIANTS:
         out = jax.jit(v.forward(treedef))(jnp.asarray(x), *leaves)[0]
         with open(os.path.join(cls_dir, f"{v.name}.golden.bin"), "wb") as f:
+            f.write(np.asarray(out, np.float32).astype("<f4").tobytes())
+    rng_b = np.random.RandomState(8765)
+    xb = rng_b.uniform(
+        0.0, 255.0,
+        size=(GOLDEN_BATCH,) + C.CLS_VARIANTS[0].input_shape[1:],
+    ).astype(np.float32)
+    with open(os.path.join(cls_dir, f"golden_input.b{GOLDEN_BATCH}.bin"), "wb") as f:
+        f.write(xb.astype("<f4").tobytes())
+    for v in C.CLS_VARIANTS:
+        bv = v.at_batch(GOLDEN_BATCH)
+        out = jax.jit(bv.forward(treedef))(jnp.asarray(xb), *leaves)[0]
+        name = f"{v.name}.b{GOLDEN_BATCH}.golden.bin"
+        with open(os.path.join(cls_dir, name), "wb") as f:
             f.write(np.asarray(out, np.float32).astype("<f4").tobytes())
     print(f"[aot] wrote {os.path.join(cls_dir, 'manifest.json')} + goldens")
 
@@ -232,20 +297,9 @@ def main(argv=None) -> int:
     variants = [M.get_variant(n) for n in names]
 
     params = M.init_params(seed=0)
-    files = []
-    for v in variants:
-        path = os.path.join(out_dir, f"{v.name}.hlo.txt")
-        files.append(path)
-        if not args.force and os.path.exists(path):
-            print(f"[aot] fresh: {path}")
-            continue
-        print(f"[aot] lowering {v.name} (input {v.input_shape}, "
-              f"{jnp.dtype(v.compute_dtype).name}, tiles "
-              f"{v.bm}x{v.bk}x{v.bn}) ...")
-        text = lower_variant(v, params)
-        with open(path, "w") as f:
-            f.write(text)
-        print(f"[aot] wrote {len(text) / 1e6:.2f} MB -> {path}")
+    leaves, treedef, _names = M.flatten_params(params)
+    files = [lower_batched(v, leaves, treedef, out_dir, args.force)
+             for v in variants]
 
     write_golden(variants, params, out_dir)
     weight_specs, wpath = write_weights(params, out_dir)

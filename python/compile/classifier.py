@@ -114,6 +114,15 @@ class ClsVariant:
     def bn(self):
         return 128
 
+    def at_batch(self, batch: int) -> "ClsVariant":
+        """Same implementation at a different leading dim (see
+        ``model.Variant.at_batch``)."""
+        import copy
+
+        v = copy.copy(self)
+        v.batch = batch
+        return v
+
     def forward(self, treedef):
         def fn(x, *leaves):
             params = jax.tree_util.tree_unflatten(treedef, leaves)

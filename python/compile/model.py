@@ -22,6 +22,7 @@ artifact as constants: serving passes only the image, matching the paper's
 
 from __future__ import annotations
 
+import copy
 import functools
 from typing import Any, Dict, List
 
@@ -53,6 +54,13 @@ HEAD_CHANNELS = NUM_ANCHORS * (5 + NUM_CLASSES)  # 125, as in tinyYOLOv2-VOC
 
 # The anchor priors of tinyYOLOv2 (VOC), consumed by the Rust-side decoder.
 ANCHORS = [(1.08, 1.19), (3.42, 4.41), (6.63, 11.38), (9.42, 5.11), (16.62, 10.52)]
+
+# Compiled micro-batch ladder (DESIGN.md §16): every variant is lowered once
+# per size with an N-leading-dim input spec, same weights.  Powers of two so
+# an arbitrary micro-batch N decomposes greedily into at most log2(max)+1
+# device programs, and the Rust selector's pad-to-next-size policy never
+# wastes more than half a program.
+BATCH_SIZES = [1, 2, 4, 8, 16, 32]
 
 
 def init_params(seed: int = 0, in_channels: int = 3) -> Dict[str, Any]:
@@ -180,6 +188,16 @@ class Variant:
     def output_shape(self):
         grid = self.input_hw // 32  # 5 stride-2 pools
         return (self.batch, grid, grid, HEAD_CHANNELS)
+
+    def at_batch(self, batch: int) -> "Variant":
+        """The same runtime implementation lowered at a different leading
+        dim.  The forward fn is batch-generic (the leading dim flows through
+        im2col and the pools untouched), so a batch variant is just a new
+        input spec over identical weights — one device program per compiled
+        size, which is the whole point of the batched-HLO bundle."""
+        v = copy.copy(self)
+        v.batch = batch
+        return v
 
     def forward(self, treedef):
         """Forward fn taking (image, *weight_leaves).

@@ -1,0 +1,8 @@
+"""Collection guard: the compile-path suite needs jax; CI runners without
+it (the default GitHub runner has no ML stack) must skip cleanly rather
+than die at import time."""
+
+import importlib.util
+
+if importlib.util.find_spec("jax") is None:
+    collect_ignore_glob = ["test_*.py"]

@@ -97,6 +97,54 @@ class TestManifest:
             assert os.path.exists(os.path.join(ART, art["file"]))
 
 
+class TestBatched:
+    def test_at_batch_shapes(self):
+        v = M.get_variant("tinyyolo-gpu")
+        b = v.at_batch(8)
+        assert b.input_shape == (8, 64, 64, 3)
+        assert b.output_shape == (8, 2, 2, 125)
+        # the ladder rungs are views over the same variant, not mutations
+        assert v.input_shape[0] == 1
+
+    def test_hlo_filename_convention(self):
+        assert aot.hlo_filename("tinyyolo-gpu", 1) == "tinyyolo-gpu.hlo.txt"
+        assert aot.hlo_filename("tinyyolo-gpu", 8) == "tinyyolo-gpu.b8.hlo.txt"
+
+    def test_batched_lowering_entry_layout(self, params):
+        v = M.get_variant("tinyyolo-gpu").at_batch(4)
+        text = aot.lower_variant(v, params)
+        assert text.startswith("HloModule")
+        assert "f32[4,64,64,3]" in text  # N-leading-dim image parameter
+        assert "f32[4,2,2,125]" in text  # batched detection grid
+
+    def test_manifest_batch_sizes(self, params, tmp_path):
+        specs, _ = aot.write_weights(params, str(tmp_path))
+        man = aot.build_manifest(M.VARIANTS, params,
+                                 [f"{v.name}.hlo.txt" for v in M.VARIANTS], specs)
+        for art in man["artifacts"]:
+            assert art["batch_sizes"] == M.BATCH_SIZES
+            # batch-1 keeps the legacy stem: the `file` field still names it
+            assert art["file"].endswith(".hlo.txt")
+            assert ".b" not in art["file"]
+
+    def test_batched_forward_matches_stacked_singles(self, params):
+        """The semantic contract the Rust runtime relies on: a batch-N
+        program over N rows equals N batch-1 programs, row for row."""
+        v = M.get_variant("tinyyolo-gpu")
+        leaves, treedef, _ = M.flatten_params(params)
+        rng = np.random.RandomState(7)
+        xs = rng.uniform(0.0, 255.0, size=(4, 64, 64, 3)).astype(np.float32)
+        batched = jax.jit(v.at_batch(4).forward(treedef))(
+            jnp.asarray(xs), *leaves)[0]
+        singles = [
+            jax.jit(v.forward(treedef))(jnp.asarray(xs[i:i + 1]), *leaves)[0]
+            for i in range(4)
+        ]
+        np.testing.assert_allclose(
+            np.asarray(batched), np.concatenate([np.asarray(s) for s in singles]),
+            rtol=1e-4, atol=1e-4)
+
+
 class TestGolden:
     @pytest.mark.skipif(not os.path.exists(os.path.join(ART, "golden_input.bin")),
                         reason="artifacts not built")

@@ -488,6 +488,8 @@ mod tests {
                 lingered: 1,
                 size_hist: [1, 0, 2, 2, 0, 0, 0],
                 queue_to_device_us: 310,
+                device_programs: 5,
+                pad_slots: 3,
             }],
             gc_deleted: 12,
             gc_reclaimed_bytes: 98304,

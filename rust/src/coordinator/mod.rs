@@ -233,6 +233,12 @@ impl Coordinator {
                         inv.hot_keys = Vec::new();
                         inv.hot_generation = 0;
                     }
+                    // Gossip-only report (a node's idle hot-set refresh,
+                    // empty id): the fold above was the whole payload —
+                    // there is no invocation to track or count.
+                    if inv.id.is_empty() {
+                        continue;
+                    }
                     self.metrics.record_completion(&inv);
                     let id = inv.id.clone();
                     let succeeded = inv.status == Status::Succeeded;
@@ -855,6 +861,32 @@ mod tests {
         // All three stage invocations were tracked like any submission.
         assert_eq!(c.submitted(), 3);
         assert_eq!(c.pipelines_tracked(), 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn gossip_only_report_updates_table_without_tracking() {
+        // An idle node re-sends its hot set as a completion report with
+        // an empty id: the coordinator must fold the summary and drop
+        // the report — no metrics sample, no completion tracking.
+        let (_clock, _queue, c) = setup();
+        let mut inv = Invocation::new("", EventSpec::new("", ""), SimTime(0));
+        inv.node = Some("node-7".into());
+        inv.hot_keys = vec!["datasets/idle".into()];
+        inv.hot_generation = 4;
+        c.completion_sender().send(inv).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while c.node_hot_sets().get("node-7").is_none() {
+            assert!(std::time::Instant::now() < deadline, "gossip never folded");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            c.node_hot_sets()["node-7"],
+            (4, vec!["datasets/idle".to_string()])
+        );
+        assert_eq!(c.metrics.len(), 0, "gossip is not a completion sample");
+        assert_eq!(c.successes(), 0);
+        assert!(c.completed().is_empty(), "nothing tracked");
         c.shutdown();
     }
 

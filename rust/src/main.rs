@@ -394,6 +394,11 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     let mut served = 0usize;
     while std::time::Instant::now() < deadline {
         if let Ok(inv) = rx.recv_timeout(Duration::from_millis(200)) {
+            // Gossip-only report (idle hot-set refresh, empty id): the
+            // gateway tee already folded it; nothing was served.
+            if inv.id.is_empty() {
+                continue;
+            }
             served += 1;
             println!(
                 "completed {} on {} ({}) ELat {:.0} ms",
@@ -413,13 +418,15 @@ fn cmd_node(m: &hardless::cli::Matches) -> anyhow::Result<()> {
     );
     for b in batch {
         println!(
-            "  batch [{}]: {} invocations in {} dispatches (mean {:.1}, {} full, {} lingered)",
+            "  batch [{}]: {} invocations in {} dispatches / {} device programs (mean {:.1}, {} full, {} lingered, {} pad slots)",
             b.variant,
             b.invocations,
             b.batches,
+            b.device_programs,
             b.mean_size(),
             b.full,
-            b.lingered
+            b.lingered,
+            b.pad_slots
         );
     }
     Ok(())

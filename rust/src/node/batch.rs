@@ -122,6 +122,12 @@ pub struct VariantBatchStats {
     /// µs because the interesting waits (the adaptive linger window) are
     /// sub-millisecond and would truncate to zero.
     pub queue_to_device_us: u64,
+    /// Device programs actually dispatched (DESIGN.md §16): with batched
+    /// HLO one dispatch can serve a whole batch with one program, so this
+    /// runs *below* `invocations`; a per-input loop pins it equal.
+    pub device_programs: u64,
+    /// Padded rows executed and discarded by pad-to-next-size dispatches.
+    pub pad_slots: u64,
 }
 
 impl VariantBatchStats {
@@ -153,6 +159,8 @@ impl VariantBatchStats {
             *a += b;
         }
         self.queue_to_device_us += other.queue_to_device_us;
+        self.device_programs += other.device_programs;
+        self.pad_slots += other.pad_slots;
     }
 
     pub fn to_json(&self) -> Json {
@@ -167,6 +175,8 @@ impl VariantBatchStats {
             .set("mean_size", self.mean_size())
             .set("size_hist", Json::Arr(hist))
             .set("queue_to_device_us", self.queue_to_device_us as usize)
+            .set("device_programs", self.device_programs as usize)
+            .set("pad_slots", self.pad_slots as usize)
     }
 
     /// Lenient parse: every counter defaults to zero (the section
@@ -187,6 +197,8 @@ impl VariantBatchStats {
             lingered: n("lingered"),
             size_hist,
             queue_to_device_us: n("queue_to_device_us"),
+            device_programs: n("device_programs"),
+            pad_slots: n("pad_slots"),
         })
     }
 }
@@ -235,11 +247,48 @@ fn lane_mut<'a>(
 pub struct BatchAggregator {
     cfg: BatchConfig,
     lanes: Mutex<HashMap<(String, String), LaneState>>,
+    /// Compiled batch ladders per variant, noted by workers at pool
+    /// checkout from the instance's cold-start capture
+    /// (`RuntimeInstance::compiled_batch_sizes`).  Feeds
+    /// [`snap_cap`](Self::snap_cap).
+    compiled: Mutex<HashMap<String, Vec<usize>>>,
 }
 
 impl BatchAggregator {
     pub fn new(cfg: BatchConfig) -> Arc<BatchAggregator> {
-        Arc::new(BatchAggregator { cfg, lanes: Mutex::new(HashMap::new()) })
+        Arc::new(BatchAggregator {
+            cfg,
+            lanes: Mutex::new(HashMap::new()),
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Record `variant`'s compiled batch ladder (sorted ascending).
+    pub fn note_compiled(&self, variant: &str, sizes: &[usize]) {
+        if sizes.is_empty() {
+            return;
+        }
+        let mut compiled = self.compiled.lock().expect("batcher poisoned");
+        compiled
+            .entry(variant.to_string())
+            .or_insert_with(|| sizes.to_vec());
+    }
+
+    /// Snap a dispatch/chunk cap down to the largest compiled batch size
+    /// <= `cap` (DESIGN.md §16), so full batches land exactly on a device
+    /// program instead of padding or splitting.  Left unchanged when the
+    /// variant's ladder is unknown, when no rung above 1 fits (a batch-1
+    /// ladder means the loop fallback, which never pads), or when the
+    /// whole ladder sits above `cap`.
+    pub fn snap_cap(&self, variant: &str, cap: usize) -> usize {
+        let compiled = self.compiled.lock().expect("batcher poisoned");
+        match compiled.get(variant) {
+            Some(ladder) => match ladder.iter().rev().find(|&&n| n > 1 && n <= cap) {
+                Some(&n) => n,
+                None => cap,
+            },
+            None => cap,
+        }
     }
 
     pub fn max_batch(&self) -> usize {
@@ -331,12 +380,16 @@ impl BatchAggregator {
         cap: usize,
         lingered: bool,
         queue_to_device_us: u64,
+        programs: usize,
+        pad_slots: usize,
     ) {
         let mut lanes = self.lanes.lock().expect("batcher poisoned");
         let lane = lane_mut(&mut lanes, variant, device_id);
         lane.ewma_fill = 0.75 * lane.ewma_fill + 0.25 * size as f64;
         lane.stats.batches += 1;
         lane.stats.invocations += size as u64;
+        lane.stats.device_programs += programs as u64;
+        lane.stats.pad_slots += pad_slots as u64;
         if size >= cap.clamp(1, self.max_batch()) {
             lane.stats.full += 1;
         }
@@ -367,6 +420,8 @@ impl BatchAggregator {
         }
         lane.stats.batches += n as u64;
         lane.stats.invocations += n as u64;
+        // Serial fallback runs one device program per member, never pads.
+        lane.stats.device_programs += n as u64;
         if lingered {
             // The gather did wait a linger window; the fallback does not
             // erase that from the linger hit rate.
@@ -418,7 +473,7 @@ mod tests {
         // Sustained full batches drive ewma -> max_batch and the lane
         // earns (asymptotically) the full ceiling.
         for _ in 0..32 {
-            a.observe("v", "gpu0", 8, 8, false, 0);
+            a.observe("v", "gpu0", 8, 8, false, 0, 1, 0);
         }
         let deep = a.linger_budget("v", "gpu0", 1, Duration::ZERO).unwrap();
         assert!(
@@ -433,7 +488,7 @@ mod tests {
         // Load drops again -> singles pull the ewma (and the budget) back
         // down; a quiet period can never leave the linger stuck high.
         for _ in 0..32 {
-            a.observe("v", "gpu0", 1, 8, false, 0);
+            a.observe("v", "gpu0", 1, 8, false, 0, 1, 0);
         }
         let shallow_again = a.linger_budget("v", "gpu0", 1, Duration::ZERO).unwrap();
         assert!(shallow_again <= Duration::from_millis(2), "{shallow_again:?}");
@@ -465,7 +520,7 @@ mod tests {
         // lane earns the whole linger ceiling, and `full` counts.
         let a = agg(32, 8);
         for _ in 0..32 {
-            a.observe("v", "gpu0", 8, 8, false, 0);
+            a.observe("v", "gpu0", 8, 8, false, 0, 1, 0);
         }
         let fill = a.lane_fill("v", "gpu0");
         let budget = a.linger_budget_at(fill, 8, 1, Duration::ZERO).unwrap();
@@ -496,7 +551,7 @@ mod tests {
     fn lanes_adapt_independently() {
         let a = agg(8, 8);
         for _ in 0..32 {
-            a.observe("v", "gpu0", 8, 8, false, 0);
+            a.observe("v", "gpu0", 8, 8, false, 0, 1, 0);
         }
         let hot = a.linger_budget("v", "gpu0", 1, Duration::ZERO).unwrap();
         let cold = a.linger_budget("v", "gpu1", 1, Duration::ZERO).unwrap();
@@ -506,9 +561,9 @@ mod tests {
     #[test]
     fn stats_merge_lanes_per_variant_and_roundtrip_json() {
         let a = agg(8, 5);
-        a.observe("tinyyolo-gpu", "gpu0", 8, 8, true, 40);
-        a.observe("tinyyolo-gpu", "gpu1", 4, 8, false, 12);
-        a.observe("tinyyolo-vpu", "vpu0", 1, 8, false, 3);
+        a.observe("tinyyolo-gpu", "gpu0", 8, 8, true, 40, 1, 0);
+        a.observe("tinyyolo-gpu", "gpu1", 4, 8, false, 12, 2, 3);
+        a.observe("tinyyolo-vpu", "vpu0", 1, 8, false, 3, 1, 0);
         let stats = a.stats();
         assert_eq!(stats.len(), 2, "{stats:?}");
         assert_eq!(stats[0].variant, "tinyyolo-gpu", "sorted by variant");
@@ -518,6 +573,8 @@ mod tests {
         assert_eq!(stats[0].lingered, 1);
         assert_eq!(stats[0].mean_size(), 6.0);
         assert_eq!(stats[0].queue_to_device_us, 52);
+        assert_eq!(stats[0].device_programs, 3, "1 + 2 across lanes");
+        assert_eq!(stats[0].pad_slots, 3);
         assert_eq!(stats[0].size_hist[3], 1, "size 8 bucket");
         assert_eq!(stats[0].size_hist[2], 1, "size 4 bucket");
         assert_eq!(stats[1].variant, "tinyyolo-vpu");
@@ -530,6 +587,36 @@ mod tests {
         let parsed = VariantBatchStats::from_json(&bare).unwrap();
         assert_eq!(parsed.batches, 0);
         assert_eq!(parsed.size_hist, [0; SIZE_BUCKETS]);
+    }
+
+    #[test]
+    fn serial_fallback_counts_one_program_per_member() {
+        let a = agg(8, 5);
+        a.observe_serial("v", "gpu0", 4, true, 20);
+        let stats = a.stats();
+        assert_eq!(stats[0].device_programs, 4);
+        assert_eq!(stats[0].pad_slots, 0);
+    }
+
+    #[test]
+    fn snap_cap_lands_on_largest_compiled_rung() {
+        let a = agg(32, 5);
+        // Unknown variant: cap passes through untouched.
+        assert_eq!(a.snap_cap("v", 9), 9);
+        a.note_compiled("v", &[1, 2, 4, 8, 16, 32]);
+        // 9 snaps down to the 8-rung program; exact rungs stay put.
+        assert_eq!(a.snap_cap("v", 9), 8);
+        assert_eq!(a.snap_cap("v", 16), 16);
+        assert_eq!(a.snap_cap("v", 31), 16);
+        // A cap below every rung > 1 is left alone (never snap *up*).
+        assert_eq!(a.snap_cap("v", 1), 1);
+        // Batch-1-only ladder = loop fallback: snapping to 1 would
+        // serialize batches for nothing, so the cap is untouched.
+        a.note_compiled("legacy", &[1]);
+        assert_eq!(a.snap_cap("legacy", 9), 9);
+        // First-noted ladder wins; later notes are ignored.
+        a.note_compiled("v", &[1]);
+        assert_eq!(a.snap_cap("v", 9), 8);
     }
 
     #[test]

@@ -301,6 +301,7 @@ pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps)
         deps.policy = Arc::new(BatchAware { inner: deps.policy });
     }
     let affinity = Arc::new(AffinityCounters::default());
+    let gossiped = Arc::new(AtomicU64::new(0));
     let handle_pool = pool.clone();
     let handle_registry = registry.clone();
     let handle_cache = cache.clone();
@@ -314,8 +315,8 @@ pub fn spawn_node(cfg: NodeConfig, registry: DeviceRegistry, mut deps: NodeDeps)
         .name(format!("node-mgr-{}", cfg.id))
         .spawn(move || {
             manager_loop(
-                cfg, registry, pool, deps, cache, decoded, batcher, affinity, stop2,
-                draining2,
+                cfg, registry, pool, deps, cache, decoded, batcher, affinity, gossiped,
+                stop2, draining2,
             )
         })?;
     Ok(NodeHandle {
@@ -344,6 +345,37 @@ fn chunk_cap(matching_depth: usize, parallelism: usize, max_batch: usize) -> usi
         .clamp(1, max_batch.max(1))
 }
 
+/// Re-send the node's hot-set summary on an idle poll tick when the
+/// cache generation advanced past the last gossiped one.  The report is
+/// a *gossip-only* invocation — empty id, hot fields populated — riding
+/// the existing [`CompletionSink`]; the coordinator folds the summary
+/// into its affinity table and then drops the report (no metrics, no
+/// tracking).  `gossiped` only advances on successful delivery, so a
+/// failed send retries on the next idle tick.
+fn idle_gossip(
+    node_id: &str,
+    cache: Option<&CachedStore>,
+    gossiped: &AtomicU64,
+    now: crate::util::SimTime,
+    completions: &dyn CompletionSink,
+) {
+    let Some(cache) = cache else { return };
+    if cache.generation() <= gossiped.load(Ordering::Relaxed) {
+        return;
+    }
+    let (keys, generation) = cache.hot_keys(crate::scheduler::DEFAULT_HOT_SET);
+    if generation == 0 {
+        return;
+    }
+    let mut inv = Invocation::new("", crate::events::EventSpec::new("", ""), now);
+    inv.node = Some(node_id.to_string());
+    inv.hot_keys = keys;
+    inv.hot_generation = generation;
+    if completions.report(inv).is_ok() {
+        gossiped.fetch_max(generation, Ordering::Relaxed);
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn manager_loop(
     cfg: NodeConfig,
@@ -354,6 +386,7 @@ fn manager_loop(
     decoded: Arc<DecodedCache>,
     batcher: Arc<BatchAggregator>,
     affinity: Arc<AffinityCounters>,
+    gossiped: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     draining: Arc<AtomicBool>,
 ) {
@@ -403,7 +436,22 @@ fn manager_loop(
         );
         let first = match deps.queue.take_timeout(&filter, wall_wait) {
             Ok(Some(l)) => l,
-            Ok(None) => continue,
+            Ok(None) => {
+                // Idle tick: no completion will carry the hot-set
+                // summary, so if the cache changed since the last
+                // piggyback (evictions, prefetches), re-gossip it
+                // through the completion path — the coordinator's
+                // affinity table must not steer by a stale set just
+                // because a node went quiet (DESIGN.md §15).
+                idle_gossip(
+                    &cfg.id,
+                    cache.as_deref(),
+                    &gossiped,
+                    deps.clock.now(),
+                    deps.completions.as_ref(),
+                );
+                continue;
+            }
             Err(e) => {
                 log::warn!("node {}: queue take failed: {e:#}", cfg.id);
                 deps.clock.sleep(cfg.poll_interval);
@@ -526,6 +574,7 @@ fn manager_loop(
                 deps.completions.as_ref(),
                 &cfg.id,
                 cache.as_deref(),
+                &gossiped,
                 rejected,
             );
             if batch.is_empty() {
@@ -555,6 +604,7 @@ fn manager_loop(
                 batcher: batcher.clone(),
                 affinity: affinity.clone(),
                 draining: draining.clone(),
+                gossiped: gossiped.clone(),
             };
             let name = format!("worker-{}", batch[0].id);
             let worker = std::thread::Builder::new()
@@ -610,6 +660,18 @@ mod tests {
         batch: BatchConfig,
         policy: Arc<dyn Policy>,
     ) -> Rig {
+        rig_exec(registry, batch, policy, None)
+    }
+
+    /// `ladder: None` seeds legacy batch-1 mock executors; `Some(l)`
+    /// seeds batched-HLO mocks whose compiled ladder is `l` (visible to
+    /// the aggregator, one dispatch delay per planned device program).
+    fn rig_exec(
+        registry: DeviceRegistry,
+        batch: BatchConfig,
+        policy: Arc<dyn Policy>,
+        ladder: Option<Vec<usize>>,
+    ) -> Rig {
         // 100x compression: mock delays of sim-ms become wall-µs.
         let clock: Arc<ScaledClock> = ScaledClock::new(100.0);
         let queue = MemQueue::new(clock.clone());
@@ -619,13 +681,17 @@ mod tests {
         for d in registry.devices() {
             for variant in d.profile.runtimes.values() {
                 for _ in 0..d.profile.slots {
+                    let factory = match &ladder {
+                        Some(l) => MockExecutor::factory_batched(
+                            2.0,
+                            Duration::from_millis(1),
+                            l.clone(),
+                        ),
+                        None => MockExecutor::factory(2.0, Duration::from_millis(1)),
+                    };
                     reserve.add(
-                        RuntimeInstance::start(
-                            variant.clone(),
-                            d.id.clone(),
-                            MockExecutor::factory(2.0, Duration::from_millis(1)),
-                        )
-                        .unwrap(),
+                        RuntimeInstance::start(variant.clone(), d.id.clone(), factory)
+                            .unwrap(),
                     );
                 }
             }
@@ -644,6 +710,29 @@ mod tests {
         cfg.batch = batch;
         let node = spawn_node(cfg, registry, deps).unwrap();
         Rig { queue, store, clock, completions: rx, node }
+    }
+
+    impl Rig {
+        /// Next *completion* off the sink, skipping gossip-only reports
+        /// (empty id): the coordinator drops those before tracking, so
+        /// tests reading the raw channel must too.
+        fn recv(&self, secs: u64) -> Invocation {
+            recv_completion(&self.completions, Duration::from_secs(secs))
+        }
+    }
+
+    fn recv_completion(
+        rx: &mpsc::Receiver<Invocation>,
+        timeout: Duration,
+    ) -> Invocation {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            let inv = rx.recv_timeout(left).expect("completion");
+            if !inv.id.is_empty() {
+                return inv;
+            }
+        }
     }
 
     fn dataset(store: &MemStore, name: &str, values: &[f32]) -> String {
@@ -667,7 +756,7 @@ mod tests {
         let r = rig(paper_dualgpu());
         let key = dataset(&r.store, "img", &[1.0, 2.0, 3.0]);
         submit(&r, "inv-a", &key);
-        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let done = r.recv(10);
         assert_eq!(done.id, "inv-a");
         assert_eq!(done.status, Status::Succeeded);
         assert_eq!(done.node.as_deref(), Some("node-1"));
@@ -696,7 +785,7 @@ mod tests {
     fn missing_dataset_fails_event() {
         let r = rig(paper_dualgpu());
         submit(&r, "inv-miss", "datasets/does-not-exist");
-        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let done = r.recv(10);
         match &done.status {
             Status::Failed(reason) => assert!(reason.contains("not found"), "{reason}"),
             s => panic!("expected failure, got {s:?}"),
@@ -710,7 +799,7 @@ mod tests {
         let r = rig(paper_dualgpu());
         let key = dataset(&r.store, "img", &[0.5; 16]);
         submit(&r, "inv-pace", &key);
-        let done = r.completions.recv_timeout(Duration::from_secs(15)).unwrap();
+        let done = r.recv(15);
         let elat = done.stamps.elat_ms().unwrap();
         // K600 profile: lognormal(median 1675 ms, σ=0.05) -> overwhelmingly
         // within [1400, 2000] sim-ms.
@@ -727,7 +816,7 @@ mod tests {
         }
         let mut done = Vec::new();
         for _ in 0..20 {
-            done.push(r.completions.recv_timeout(Duration::from_secs(30)).unwrap());
+            done.push(r.recv(30));
         }
         assert!(done.iter().all(|d| d.status == Status::Succeeded));
         // both accelerator kinds participated (the paper's heterogeneity
@@ -757,7 +846,7 @@ mod tests {
         }
         let mut warm_count = 0;
         for _ in 0..6 {
-            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            let d = r.recv(30);
             if d.warm {
                 warm_count += 1;
             }
@@ -777,14 +866,14 @@ mod tests {
         // no single-flight (cold concurrent decodes race benignly), so
         // exact-count asserts need a populated cache before the burst.
         submit(&r, "inv-warmup", &key);
-        let first = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+        let first = r.recv(30);
         assert_eq!(first.status, Status::Succeeded);
         let n: u64 = 12;
         for i in 1..n {
             submit(&r, &format!("inv-{i}"), &key);
         }
         for _ in 1..n {
-            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            let d = r.recv(30);
             assert_eq!(d.status, Status::Succeeded);
         }
         // The node-local cache collapses n dataset fetches into one
@@ -813,12 +902,12 @@ mod tests {
         );
         let key = dataset(&r.store, "img", &[1.0; 4]);
         submit(&r, "inv-1", &key);
-        let d = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let d = r.recv(10);
         assert_eq!(d.status, Status::Succeeded);
         assert_eq!(r.node.affinity_stats(), AffinityStats { hits: 0, misses: 1 });
         // Resident now: the repeat invocation is an affinity hit.
         submit(&r, "inv-2", &key);
-        let d = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let d = r.recv(10);
         assert_eq!(d.status, Status::Succeeded);
         assert_eq!(r.node.affinity_stats(), AffinityStats { hits: 1, misses: 1 });
         // Evict behind the queue's back: the cluster may still steer by
@@ -826,7 +915,7 @@ mod tests {
         // backing fetch — never an error, never skipped.
         r.node.cache.as_ref().unwrap().invalidate(&key);
         submit(&r, "inv-3", &key);
-        let d = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let d = r.recv(10);
         assert_eq!(d.status, Status::Succeeded);
         assert_eq!(r.node.affinity_stats(), AffinityStats { hits: 1, misses: 2 });
         r.node.stop();
@@ -837,7 +926,7 @@ mod tests {
         let r = rig(paper_dualgpu());
         let key = dataset(&r.store, "img", &[1.0; 4]);
         submit(&r, "inv-hot", &key);
-        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let done = r.recv(10);
         assert_eq!(done.status, Status::Succeeded);
         assert!(
             done.hot_keys.contains(&key),
@@ -890,7 +979,7 @@ mod tests {
             clock.now(),
         );
         queue.publish(inv).unwrap();
-        let done = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let done = recv_completion(&rx, Duration::from_secs(10));
         assert_eq!(done.status, Status::Succeeded);
         assert_eq!(node.cache_stats(), crate::store::CacheStats::default());
         assert!(done.hot_keys.is_empty(), "no cache, no hot-set gossip");
@@ -904,7 +993,7 @@ mod tests {
         let r = rig(paper_dualgpu());
         let key = dataset(&r.store, "img", &[1.0; 4]);
         submit(&r, "inv-1", &key);
-        let _ = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let _ = r.recv(10);
         r.node.stop();
         // after stop, new publishes stay queued (no one polls)
         let inv = Invocation::new("inv-2", EventSpec::new("tinyyolo", &key), SimTime(0));
@@ -918,7 +1007,7 @@ mod tests {
         let r = rig(paper_dualgpu());
         let key = dataset(&r.store, "img", &[1.0; 4]);
         submit(&r, "inv-before", &key);
-        let done = r.completions.recv_timeout(Duration::from_secs(10)).unwrap();
+        let done = r.recv(10);
         assert_eq!(done.status, Status::Succeeded);
         // Decommission: the node stays alive but must take nothing new —
         // neither via the manager poll nor the workers' warm re-take.
@@ -966,7 +1055,7 @@ mod tests {
             .collect();
         r.queue.publish_batch(invs).unwrap();
         for _ in 0..12 {
-            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            let d = r.recv(30);
             assert_eq!(d.status, Status::Succeeded);
         }
         let stats = r.node.batch_stats();
@@ -1046,7 +1135,7 @@ mod tests {
         let mut failed = Vec::new();
         let mut ok = 0;
         for _ in 0..16 {
-            let d = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let d = recv_completion(&rx, Duration::from_secs(30));
             match d.status {
                 Status::Succeeded => ok += 1,
                 Status::Failed(_) => failed.push(d.id),
@@ -1076,7 +1165,7 @@ mod tests {
             .collect();
         r.queue.publish_batch(invs).unwrap();
         for _ in 0..6 {
-            let d = r.completions.recv_timeout(Duration::from_secs(30)).unwrap();
+            let d = r.recv(30);
             assert_eq!(d.status, Status::Succeeded);
         }
         let stats = r.node.batch_stats();
@@ -1091,9 +1180,10 @@ mod tests {
     fn property_batched_execution_is_semantically_invisible() {
         use crate::prop;
         // The acceptance property: identical invocation streams through
-        // batched and serial nodes produce byte-identical per-invocation
-        // results, identical statuses, and identical ack/completion
-        // counts — batching may only change how many device dispatches
+        // serial, batched, and batched-HLO nodes produce byte-identical
+        // per-invocation results, identical statuses, and identical
+        // ack/completion counts — batching (and padded / sub-batched
+        // device programs) may only change how many device dispatches
         // happen, never what the client observes.
         prop::check(
             "batched-vs-serial-equivalence",
@@ -1113,8 +1203,13 @@ mod tests {
                 (datasets, picks)
             },
             |(datasets, picks)| {
-                let run = |batch: BatchConfig| {
-                    let r = rig_with_batch(paper_dualgpu(), batch);
+                let run = |batch: BatchConfig, ladder: Option<Vec<usize>>| {
+                    let r = rig_exec(
+                        paper_dualgpu(),
+                        batch,
+                        Arc::new(WarmFirst),
+                        ladder,
+                    );
                     let keys: Vec<String> = datasets
                         .iter()
                         .enumerate()
@@ -1138,9 +1233,7 @@ mod tests {
                     r.queue.publish_batch(invs).unwrap();
                     let mut done: Vec<Invocation> = (0..picks.len())
                         .map(|_| {
-                            r.completions
-                                .recv_timeout(Duration::from_secs(30))
-                                .expect("all invocations complete")
+                            r.recv(30)
                         })
                         .collect();
                     done.sort_by(|a, b| a.id.cmp(&b.id));
@@ -1158,19 +1251,105 @@ mod tests {
                     r.node.stop();
                     (observed, acked)
                 };
-                let serial = run(BatchConfig {
-                    max_batch: 1,
-                    max_linger: Duration::from_millis(5),
-                    ..BatchConfig::default()
-                });
-                let batched = run(BatchConfig {
+                let deep = BatchConfig {
                     max_batch: 8,
                     max_linger: Duration::from_millis(5),
                     ..BatchConfig::default()
-                });
-                serial == batched
+                };
+                let serial = run(
+                    BatchConfig { max_batch: 1, ..deep.clone() },
+                    None,
+                );
+                let batched = run(deep.clone(), None);
+                // Batched HLO with a sparse ladder: batches of 3/5/6/7
+                // members pad to the 4- or 8-wide program (or split),
+                // and the padded rows must never surface.
+                let batched_hlo = run(deep, Some(vec![1, 4, 8]));
+                serial == batched && serial == batched_hlo
             },
         );
+    }
+
+    #[test]
+    fn idle_tick_regossips_hot_set_after_silent_cache_change() {
+        let r = rig(paper_dualgpu());
+        let key = dataset(&r.store, "img", &[1.0; 4]);
+        submit(&r, "inv-1", &key);
+        let done = r.recv(10);
+        assert_eq!(done.status, Status::Succeeded);
+        let g0 = done.hot_generation;
+        assert!(g0 >= 1);
+        // Evict behind the node's back: the key-set changes with no
+        // completion left to carry the news — only the manager's idle
+        // poll tick can refresh the coordinator's affinity table now.
+        r.node.cache.as_ref().unwrap().invalidate(&key);
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        let gossip = loop {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            let inv = r.completions.recv_timeout(left).expect("idle gossip report");
+            if inv.id.is_empty() && inv.hot_generation > g0 {
+                break inv;
+            }
+        };
+        assert_eq!(gossip.node.as_deref(), Some("node-1"));
+        assert!(
+            !gossip.hot_keys.contains(&key),
+            "evicted key must have left the gossiped hot set: {:?}",
+            gossip.hot_keys
+        );
+        // The refresh is generation-gated, not periodic: with no further
+        // cache change the idle loop stays silent.
+        std::thread::sleep(Duration::from_millis(150));
+        let mut extra = 0;
+        while let Ok(inv) = r.completions.try_recv() {
+            if inv.id.is_empty() && inv.hot_generation > gossip.hot_generation {
+                extra += 1;
+            }
+        }
+        assert_eq!(extra, 0, "no re-gossip without a new generation");
+        r.node.stop();
+    }
+
+    #[test]
+    fn batched_hlo_node_counts_device_programs_and_pad_slots() {
+        // Mock engines advertising a compiled {1,2,4,8} ladder: the
+        // aggregator snaps chunk caps onto the ladder, and every
+        // dispatch's device-program / pad-slot counts flow into the
+        // per-variant stats.
+        let r = rig_exec(
+            paper_dualgpu(),
+            BatchConfig::default(),
+            Arc::new(WarmFirst),
+            Some(vec![1, 2, 4, 8]),
+        );
+        let key = dataset(&r.store, "img", &[1.0; 8]);
+        let invs: Vec<Invocation> = (0..12)
+            .map(|i| {
+                Invocation::new(
+                    format!("inv-{i}"),
+                    EventSpec::new("tinyyolo", &key),
+                    r.clock.now(),
+                )
+            })
+            .collect();
+        r.queue.publish_batch(invs).unwrap();
+        for _ in 0..12 {
+            let d = r.recv(30);
+            assert_eq!(d.status, Status::Succeeded);
+        }
+        let stats = r.node.batch_stats();
+        assert_eq!(stats.len(), 1, "{stats:?}");
+        let s = &stats[0];
+        assert_eq!(s.invocations, 12);
+        assert!(
+            s.device_programs >= s.batches,
+            "every dispatch runs at least one program: {s:?}"
+        );
+        assert!(
+            s.device_programs <= s.invocations,
+            "batched HLO never exceeds one program per input: {s:?}"
+        );
+        r.node.stop();
     }
 
     #[test]

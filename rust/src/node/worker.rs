@@ -60,6 +60,11 @@ pub struct WorkerCtx {
     /// batch but skip the §IV-D warm re-take (graceful scale-in
     /// must stop *all* lease-taking paths, not just the manager poll).
     pub draining: Arc<std::sync::atomic::AtomicBool>,
+    /// Highest cache generation already gossiped off this node (shared
+    /// with the manager's idle tick): completions advance it as they
+    /// piggyback the hot set, so the idle path only re-sends when the
+    /// cache changed with no completion to carry the news (DESIGN.md §15).
+    pub gossiped: Arc<std::sync::atomic::AtomicU64>,
 }
 
 /// Pick a device + slot for `runtime`.  When the lease was a warm hit,
@@ -174,10 +179,16 @@ pub fn run_invocations(ctx: WorkerCtx, first: Vec<Invocation>, slot: SlotGuard) 
     // the excess is handed straight back rather than held across
     // sequential dispatches — a worker never holds more leases than one
     // dispatch serves.
+    // The instance thread captured the bundle's compiled batch ladder at
+    // cold start; publish it so chunk caps snap to a compiled size
+    // (DESIGN.md §16) and full batches land on one device program.
+    ctx.batcher
+        .note_compiled(&variant, pooled.instance.compiled_batch_sizes());
     let cap = ctx
         .batcher
         .dispatch_cap(device.profile.service.median_ms)
         .max(1);
+    let cap = ctx.batcher.snap_cap(&variant, cap);
     let mut batch = first;
     if batch.len() > cap {
         let overflow = batch.split_off(cap);
@@ -200,7 +211,7 @@ pub fn run_invocations(ctx: WorkerCtx, first: Vec<Invocation>, slot: SlotGuard) 
             // start; the rest ride the (now hot) instance.
             inv.warm = warm || i > 0;
         }
-        let (dispatched, fallback) =
+        let (dispatched, fallback, programs, pad_slots) =
             execute_batch(&ctx, &device, &pooled.instance, &mut batch);
         let n_end = ctx.clock.now();
         // Accumulate in µs: the waits this metric exists to expose (the
@@ -232,12 +243,14 @@ pub fn run_invocations(ctx: WorkerCtx, first: Vec<Invocation>, slot: SlotGuard) 
                 ctx.batcher
                     .observe_serial(&variant, &device.id, dispatched, lingered, q2d_us);
             } else {
-                ctx.batcher
-                    .observe(&variant, &device.id, dispatched, cap, lingered, q2d_us);
+                ctx.batcher.observe(
+                    &variant, &device.id, dispatched, cap, lingered, q2d_us, programs,
+                    pad_slots,
+                );
             }
         }
         for mut inv in batch.drain(..) {
-            stamp_hot_set(ctx.cache.as_deref(), &mut inv);
+            stamp_hot_set(ctx.cache.as_deref(), &ctx.gossiped, &mut inv);
             if let Err(e) = ctx.completions.report(inv) {
                 log::warn!("node {}: completion report failed: {e:#}", ctx.node_id);
             }
@@ -285,6 +298,7 @@ pub fn run_invocations(ctx: WorkerCtx, first: Vec<Invocation>, slot: SlotGuard) 
             ctx.completions.as_ref(),
             &ctx.node_id,
             ctx.cache.as_deref(),
+            &ctx.gossiped,
             rejected,
         );
         if batch.is_empty() {
@@ -370,14 +384,15 @@ fn gather_reuse(
 /// [`crate::runtime::Executor::infer_batch`]) and the members are then
 /// re-run individually so one malformed input cannot poison its
 /// neighbours.  Returns how many invocations actually reached the
-/// device (0 = no dispatch ran) and whether the serial isolation
-/// fallback ran (stats must then record serial dispatches).
+/// device (0 = no dispatch ran), whether the serial isolation
+/// fallback ran (stats must then record serial dispatches), and the
+/// dispatch's device-program / pad-slot counts (DESIGN.md §16).
 fn execute_batch(
     ctx: &WorkerCtx,
     device: &Arc<Device>,
     instance: &Arc<RuntimeInstance>,
     batch: &mut Vec<Invocation>,
-) -> (usize, bool) {
+) -> (usize, bool, usize, usize) {
     // Fetch the datasets (stateless workloads fetch their inputs, §IV-A).
     // Through the node's CachedStore this is an Arc clone on the warm
     // path, and the decoded-input cache skips the bytes→f32 pass when the
@@ -415,10 +430,11 @@ fn execute_batch(
         ctx.completions.as_ref(),
         &ctx.node_id,
         ctx.cache.as_deref(),
+        &ctx.gossiped,
         fetch_failed,
     );
     if batch.is_empty() {
-        return (0, false);
+        return (0, false, 0, 0);
     }
     // Every remaining batch entry is a device-batch member, index-aligned
     // with `inputs`.
@@ -450,8 +466,12 @@ fn execute_batch(
         .collect();
     let total_ms: f64 = targets_ms.iter().sum();
     let mut fallback = false;
+    let mut programs = 0usize;
+    let mut pad_slots = 0usize;
     match outcome {
         Ok(out) => {
+            programs = out.programs;
+            pad_slots = out.pad_slots;
             let spent_ms = out.compute_wall.as_secs_f64() * 1e3 * ctx.clock.scale();
             if total_ms > spent_ms {
                 ctx.clock
@@ -474,6 +494,8 @@ fn execute_batch(
             }
         }
         Err(e) if batch.len() == 1 => {
+            // The device was handed one program even though it errored.
+            programs = 1;
             let now = ctx.clock.now();
             complete_member(ctx, &mut batch[0], Err(e), now);
         }
@@ -510,7 +532,7 @@ fn execute_batch(
             }
         }
     }
-    (batch.len(), fallback)
+    (batch.len(), fallback, programs, pad_slots)
 }
 
 /// Terminal bookkeeping for one member — `EEnd` stamp, result
@@ -543,11 +565,18 @@ fn complete_member(
 /// report — the affinity gossip rides the existing completion path
 /// (DESIGN.md §15), no new RPC.  No cache, no summary: the fields stay
 /// empty/zero and are omitted on the wire.
-fn stamp_hot_set(cache: Option<&CachedStore>, inv: &mut Invocation) {
+fn stamp_hot_set(
+    cache: Option<&CachedStore>,
+    gossiped: &std::sync::atomic::AtomicU64,
+    inv: &mut Invocation,
+) {
     if let Some(cache) = cache {
         let (keys, generation) = cache.hot_keys(crate::scheduler::DEFAULT_HOT_SET);
         inv.hot_keys = keys;
         inv.hot_generation = generation;
+        // This completion carries generation G: the manager's idle tick
+        // need not re-gossip anything at or below it.
+        gossiped.fetch_max(generation, std::sync::atomic::Ordering::Relaxed);
     }
 }
 
@@ -559,6 +588,7 @@ pub(crate) fn ack_and_report_rejected(
     completions: &dyn CompletionSink,
     node_id: &str,
     hot_from: Option<&CachedStore>,
+    gossiped: &std::sync::atomic::AtomicU64,
     rejected: Vec<Invocation>,
 ) {
     if rejected.is_empty() {
@@ -569,7 +599,7 @@ pub(crate) fn ack_and_report_rejected(
         log::warn!("node {node_id}: reject ack_batch failed: {e:#}");
     }
     for mut inv in rejected {
-        stamp_hot_set(hot_from, &mut inv);
+        stamp_hot_set(hot_from, gossiped, &mut inv);
         if let Err(e) = completions.report(inv) {
             log::warn!("node {node_id}: completion report failed: {e:#}");
         }
@@ -623,6 +653,7 @@ fn fail_batch(ctx: &WorkerCtx, invs: Vec<Invocation>, reason: &str) {
         ctx.completions.as_ref(),
         &ctx.node_id,
         ctx.cache.as_deref(),
+        &ctx.gossiped,
         failed,
     );
 }

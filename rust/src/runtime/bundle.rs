@@ -6,7 +6,7 @@
 //! fetched and opened by node managers with [`RuntimeBundle::fetch`].
 
 use crate::json::Json;
-use crate::store::{keys, Blob, ObjectStore};
+use crate::store::{hex_sha256, keys, Blob, ObjectStore};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -29,6 +29,11 @@ pub struct ArtifactSpec {
     pub output_shape: Vec<usize>,
     pub compute_dtype: String,
     pub tags: Vec<String>,
+    /// Compiled micro-batch ladder (DESIGN.md §16): one device program per
+    /// size, stored under the `.b{N}` stem convention next to `file`.
+    /// Sorted ascending, deduped.  Bundles predating batched HLO omit the
+    /// manifest field and default to `[input_shape[0]]` (i.e. batch 1).
+    pub batch_sizes: Vec<usize>,
 }
 
 impl ArtifactSpec {
@@ -38,6 +43,94 @@ impl ArtifactSpec {
 
     pub fn output_len(&self) -> usize {
         self.output_shape.iter().product()
+    }
+
+    /// Elements in ONE input row (leading dim stripped): what each member
+    /// of a micro-batch supplies regardless of which program serves it.
+    pub fn input_row_len(&self) -> usize {
+        self.input_shape[1..].iter().product()
+    }
+
+    /// Elements in one output row.
+    pub fn output_row_len(&self) -> usize {
+        self.output_shape[1..].iter().product()
+    }
+
+    /// Storage stem of the batch-`n` program: the batch-1 artifact keeps
+    /// its legacy stem (`m-gpu`), batch-N inserts `.b{N}` (`m-gpu.b8`) —
+    /// the convention `python/compile/aot.py::hlo_filename` writes.
+    pub fn hlo_stem(&self, n: usize) -> String {
+        if n == 1 {
+            self.name.clone()
+        } else {
+            format!("{}.b{n}", self.name)
+        }
+    }
+}
+
+/// One device execution of a planned micro-batch: `rows` real inputs
+/// served by the compiled batch-`program` artifact (`program - rows` pad
+/// slots, zero-filled on the way in and discarded on the way out).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubBatch {
+    pub rows: usize,
+    pub program: usize,
+}
+
+impl SubBatch {
+    pub fn pad_slots(&self) -> usize {
+        self.program - self.rows
+    }
+}
+
+/// Decompose a micro-batch of `n` rows into device programs drawn from the
+/// compiled ladder (sorted ascending, non-empty, all sizes >= 1).
+///
+/// Selection rule (DESIGN.md §16): per remaining chunk `r`,
+/// - an exact compiled size wins outright;
+/// - otherwise pad `r` up to the next compiled size iff the padded program
+///   would be at least half full (`2 * (high - r) <= high`) — one dispatch
+///   beats a split whenever fewer than half the slots are wasted;
+/// - otherwise run the largest compiled size below `r` and recurse on the
+///   remainder.  When no compiled size fits below `r` (ladders without a
+///   batch-1 rung), padding is unconditional — there is nothing to split to.
+pub fn plan_batches(compiled: &[usize], n: usize) -> Result<Vec<SubBatch>> {
+    if compiled.is_empty() || compiled[0] == 0 {
+        bail!("compiled batch ladder empty or contains 0");
+    }
+    let mut plan = Vec::new();
+    let mut r = n;
+    while r > 0 {
+        if compiled.binary_search(&r).is_ok() {
+            plan.push(SubBatch { rows: r, program: r });
+            break;
+        }
+        let low = compiled.iter().rev().find(|&&c| c < r).copied();
+        let high = compiled.iter().find(|&&c| c > r).copied();
+        match (low, high) {
+            (_, Some(high)) if low.is_none() || 2 * (high - r) <= high => {
+                plan.push(SubBatch { rows: r, program: high });
+                break;
+            }
+            (Some(low), _) => {
+                plan.push(SubBatch { rows: low, program: low });
+                r -= low;
+            }
+            (None, None) => unreachable!("non-empty ladder has a low or high"),
+        }
+    }
+    Ok(plan)
+}
+
+/// Derive the on-disk file of the batch-`n` program from the manifest's
+/// batch-1 `file` field: `m-gpu.hlo.txt` -> `m-gpu.b8.hlo.txt`.
+fn batch_file(file: &str, n: usize) -> String {
+    if n == 1 {
+        return file.to_string();
+    }
+    match file.strip_suffix(".hlo.txt") {
+        Some(stem) => format!("{stem}.b{n}.hlo.txt"),
+        None => format!("{file}.b{n}"),
     }
 }
 
@@ -49,7 +142,8 @@ pub struct RuntimeBundle {
     pub manifest: Json,
     pub artifacts: Vec<ArtifactSpec>,
     pub weights: Vec<WeightSpec>,
-    /// HLO text per artifact name.
+    /// HLO text per storage stem: the batch-1 program under the artifact
+    /// name (`m-gpu`), batch-N programs under `{name}.b{N}` (`m-gpu.b8`).
     pub hlo_texts: BTreeMap<String, String>,
     /// The dense little-endian f32 weight blob (shared buffer: fetching
     /// a bundle from a cached store keeps the store's allocation).
@@ -68,10 +162,22 @@ impl RuntimeBundle {
                     .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad {key}")))
                     .collect()
             };
+            let input_shape = shapes("input_shape")?;
+            // Lenient: pre-batching manifests omit the ladder — the only
+            // compiled program is the artifact itself.
+            let mut batch_sizes = match a.get("batch_sizes").and_then(|v| v.as_arr()) {
+                Some(arr) => arr.iter().filter_map(|v| v.as_usize()).collect(),
+                None => vec![*input_shape.first().unwrap_or(&1)],
+            };
+            batch_sizes.sort_unstable();
+            batch_sizes.dedup();
+            if batch_sizes.first().map_or(true, |&b| b == 0) {
+                bail!("artifact batch_sizes empty or contains 0");
+            }
             artifacts.push(ArtifactSpec {
                 name: a.str_of("name")?.to_string(),
                 file: a.str_of("file")?.to_string(),
-                input_shape: shapes("input_shape")?,
+                input_shape,
                 output_shape: shapes("output_shape")?,
                 compute_dtype: a.str_of("compute_dtype")?.to_string(),
                 tags: a
@@ -79,6 +185,7 @@ impl RuntimeBundle {
                     .iter()
                     .filter_map(|t| t.as_str().map(String::from))
                     .collect(),
+                batch_sizes,
             });
         }
         let mut weights = Vec::new();
@@ -116,9 +223,12 @@ impl RuntimeBundle {
             Json::parse(&manifest_text).map_err(|e| anyhow!("parse manifest: {e}"))?;
         let mut bundle = Self::parse_manifest(name, manifest)?;
         for art in bundle.artifacts.clone() {
-            let text = std::fs::read_to_string(dir.join(&art.file))
-                .with_context(|| format!("read artifact {}", art.file))?;
-            bundle.hlo_texts.insert(art.name.clone(), text);
+            for &n in &art.batch_sizes {
+                let file = batch_file(&art.file, n);
+                let text = std::fs::read_to_string(dir.join(&file))
+                    .with_context(|| format!("read artifact {file}"))?;
+                bundle.hlo_texts.insert(art.hlo_stem(n), text);
+            }
         }
         let weights_file = bundle
             .manifest
@@ -133,15 +243,42 @@ impl RuntimeBundle {
         Ok(bundle)
     }
 
+    /// Content fingerprint over everything `publish` would upload: the
+    /// manifest text, every HLO text in stem order, and the weight blob.
+    /// Same digest machinery as the store's CAS path (`hex_sha256`).
+    pub fn content_fingerprint(&self) -> String {
+        let mut payload: Vec<u8> = Vec::new();
+        payload.extend_from_slice(self.manifest.to_string().as_bytes());
+        for (stem, text) in &self.hlo_texts {
+            payload.extend_from_slice(stem.as_bytes());
+            payload.extend_from_slice(text.as_bytes());
+        }
+        payload.extend_from_slice(&self.weight_blob);
+        hex_sha256(&payload)
+    }
+
     /// Publish this bundle into the object store under
-    /// `runtimes/<name>/...` (idempotent; bodies are content-addressed).
+    /// `runtimes/<name>/...`.
+    ///
+    /// Idempotent: uploads are keyed by the bundle's content fingerprint.
+    /// A `fingerprint` marker object is written LAST, so a re-publish of
+    /// an unchanged bundle is one small GET, while a crash mid-upload
+    /// leaves no marker and the next publish re-uploads everything.
     pub fn publish(&self, store: &dyn ObjectStore) -> Result<()> {
         let base = keys::runtime(&self.name);
+        let fp = self.content_fingerprint();
+        let fp_key = format!("{base}/fingerprint");
+        if let Ok(prev) = store.get(&fp_key) {
+            if prev.as_ref() == fp.as_bytes() {
+                return Ok(());
+            }
+        }
         store.put(&format!("{base}/manifest.json"), self.manifest.to_string().as_bytes())?;
-        for (variant, text) in &self.hlo_texts {
-            store.put(&format!("{base}/{variant}.hlo.txt"), text.as_bytes())?;
+        for (stem, text) in &self.hlo_texts {
+            store.put(&format!("{base}/{stem}.hlo.txt"), text.as_bytes())?;
         }
         store.put(&format!("{base}/weights.bin"), &self.weight_blob)?;
+        store.put(&fp_key, fp.as_bytes())?;
         Ok(())
     }
 
@@ -159,9 +296,12 @@ impl RuntimeBundle {
         .map_err(|e| anyhow!("parse manifest: {e}"))?;
         let mut bundle = Self::parse_manifest(name, manifest)?;
         for art in bundle.artifacts.clone() {
-            let text = store.get(&format!("{base}/{}.hlo.txt", art.name))?;
-            let text = std::str::from_utf8(&text).context("hlo not utf-8")?.to_string();
-            bundle.hlo_texts.insert(art.name.clone(), text);
+            for &n in &art.batch_sizes {
+                let stem = art.hlo_stem(n);
+                let text = store.get(&format!("{base}/{stem}.hlo.txt"))?;
+                let text = std::str::from_utf8(&text).context("hlo not utf-8")?.to_string();
+                bundle.hlo_texts.insert(stem, text);
+            }
         }
         // shared buffer straight from the store (no copy)
         bundle.weight_blob = store.get(&format!("{base}/weights.bin"))?;
@@ -187,8 +327,10 @@ impl RuntimeBundle {
             }
         }
         for a in &self.artifacts {
-            if !self.hlo_texts.contains_key(&a.name) {
-                bail!("artifact {} missing HLO text", a.name);
+            for &n in &a.batch_sizes {
+                if !self.hlo_texts.contains_key(&a.hlo_stem(n)) {
+                    bail!("artifact {} missing HLO text for batch {n}", a.name);
+                }
             }
             if a.input_shape.is_empty() || a.output_shape.is_empty() {
                 bail!("artifact {} has empty shapes", a.name);
@@ -209,6 +351,23 @@ impl RuntimeBundle {
             .get(variant)
             .map(|s| s.as_str())
             .ok_or_else(|| anyhow!("no HLO for variant '{variant}'"))
+    }
+
+    /// HLO text of the batch-`n` program of `variant`.
+    pub fn hlo_text_at(&self, variant: &str, n: usize) -> Result<&str> {
+        let art = self.artifact(variant)?;
+        self.hlo_texts
+            .get(&art.hlo_stem(n))
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("no batch-{n} HLO for variant '{variant}'"))
+    }
+
+    /// Plan how a micro-batch of `n` rows maps onto `variant`'s compiled
+    /// ladder: largest compiled size <= n per step, padding up to the next
+    /// size when the padded program stays at least half full (see
+    /// [`plan_batches`]).
+    pub fn select_batch_variant(&self, variant: &str, n: usize) -> Result<Vec<SubBatch>> {
+        plan_batches(&self.artifact(variant)?.batch_sizes, n)
     }
 
     /// Decode one weight tensor as f32 (little-endian).
@@ -262,6 +421,37 @@ mod tests {
         b
     }
 
+    /// A synthetic bundle with a compiled batch ladder {1, 2, 4, 8}.
+    pub(crate) fn batched_bundle() -> RuntimeBundle {
+        let weights: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0];
+        let blob: Vec<u8> = weights.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let manifest = Json::parse(
+            r#"{
+              "model": "test",
+              "weights_file": "weights.bin",
+              "weights": [
+                {"name": "[w]", "shape": [2, 2], "dtype": "f32", "offset": 0, "len": 16}
+              ],
+              "artifacts": [
+                {"name": "m-gpu", "file": "m-gpu.hlo.txt",
+                 "input_shape": [1, 2], "input_dtype": "f32",
+                 "output_shape": [1, 2], "output_dtype": "f32",
+                 "compute_dtype": "float32", "tags": ["gpu"],
+                 "batch_sizes": [1, 2, 4, 8]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let mut b = RuntimeBundle::parse_manifest("m", manifest).unwrap();
+        for n in [1usize, 2, 4, 8] {
+            b.hlo_texts
+                .insert(b.artifacts[0].hlo_stem(n), format!("HloModule fake b{n}"));
+        }
+        b.weight_blob = Blob::from(blob);
+        b.validate().unwrap();
+        b
+    }
+
     #[test]
     fn parse_and_accessors() {
         let b = tiny_bundle();
@@ -308,6 +498,164 @@ mod tests {
         assert_eq!(fetched.weights, b.weights);
         assert_eq!(fetched.weight_blob, b.weight_blob);
         assert_eq!(fetched.hlo_text("m-gpu").unwrap(), "HloModule fake");
+    }
+
+    #[test]
+    fn legacy_manifest_defaults_to_own_batch() {
+        let b = tiny_bundle();
+        assert_eq!(b.artifacts[0].batch_sizes, vec![1]);
+        assert_eq!(b.artifacts[0].hlo_stem(1), "m-gpu");
+        assert_eq!(b.artifacts[0].input_row_len(), 2);
+    }
+
+    #[test]
+    fn batch_file_derivation() {
+        assert_eq!(batch_file("m-gpu.hlo.txt", 1), "m-gpu.hlo.txt");
+        assert_eq!(batch_file("m-gpu.hlo.txt", 8), "m-gpu.b8.hlo.txt");
+        assert_eq!(batch_file("odd-name", 4), "odd-name.b4");
+    }
+
+    #[test]
+    fn plan_exact_sizes_take_one_program() {
+        let ladder = [1usize, 2, 4, 8, 16, 32];
+        for n in ladder {
+            assert_eq!(
+                plan_batches(&ladder, n).unwrap(),
+                vec![SubBatch { rows: n, program: n }],
+            );
+        }
+    }
+
+    #[test]
+    fn plan_pads_when_program_at_least_half_full() {
+        let ladder = [1usize, 2, 4, 8, 16, 32];
+        // 5 rows in an 8-program: 3 pad slots, 8-program > half full.
+        assert_eq!(
+            plan_batches(&ladder, 5).unwrap(),
+            vec![SubBatch { rows: 5, program: 8 }],
+        );
+        assert_eq!(plan_batches(&ladder, 5).unwrap()[0].pad_slots(), 3);
+        // 7 rows pad to 8 (1 slot) instead of splitting 4+2+1.
+        assert_eq!(
+            plan_batches(&ladder, 7).unwrap(),
+            vec![SubBatch { rows: 7, program: 8 }],
+        );
+    }
+
+    #[test]
+    fn plan_splits_when_padding_would_waste_over_half() {
+        // Sparse ladder: 3 rows against {2, 8} — padding to 8 would leave
+        // 5 of 8 slots empty, so split 2 + pad 1-to-2.
+        assert_eq!(
+            plan_batches(&[2, 8], 3).unwrap(),
+            vec![
+                SubBatch { rows: 2, program: 2 },
+                SubBatch { rows: 1, program: 2 },
+            ],
+        );
+        // 40 rows against {1,2,4,8,16,32}: 32 + 8, no padding.
+        assert_eq!(
+            plan_batches(&[1, 2, 4, 8, 16, 32], 40).unwrap(),
+            vec![
+                SubBatch { rows: 32, program: 32 },
+                SubBatch { rows: 8, program: 8 },
+            ],
+        );
+    }
+
+    #[test]
+    fn plan_pads_unconditionally_below_smallest_program() {
+        // Ladder without a batch-1 rung: nothing to split down to.
+        assert_eq!(
+            plan_batches(&[8], 2).unwrap(),
+            vec![SubBatch { rows: 2, program: 8 }],
+        );
+        assert!(plan_batches(&[], 4).is_err());
+        assert!(plan_batches(&[0, 2], 4).is_err());
+    }
+
+    #[test]
+    fn plan_conserves_rows() {
+        let ladders: [&[usize]; 4] = [&[1, 2, 4, 8, 16, 32], &[2, 8], &[8], &[1, 3, 5]];
+        for ladder in ladders {
+            for n in 1..=64usize {
+                let plan = plan_batches(ladder, n).unwrap();
+                let rows: usize = plan.iter().map(|s| s.rows).sum();
+                assert_eq!(rows, n, "ladder {ladder:?} n {n}");
+                for s in &plan {
+                    assert!(ladder.contains(&s.program), "{ladder:?} {n} -> {s:?}");
+                    assert!(s.rows <= s.program);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_bundle_publish_fetch_roundtrip() {
+        let store = MemStore::new();
+        let b = batched_bundle();
+        b.publish(&store).unwrap();
+        assert!(store.exists("runtimes/m/m-gpu.hlo.txt").unwrap());
+        assert!(store.exists("runtimes/m/m-gpu.b8.hlo.txt").unwrap());
+        let fetched = RuntimeBundle::fetch("m", &store).unwrap();
+        assert_eq!(fetched.artifacts[0].batch_sizes, vec![1, 2, 4, 8]);
+        assert_eq!(fetched.hlo_text_at("m-gpu", 8).unwrap(), "HloModule fake b8");
+        assert_eq!(fetched.hlo_text("m-gpu").unwrap(), "HloModule fake b1");
+        assert_eq!(
+            fetched.select_batch_variant("m-gpu", 6).unwrap(),
+            vec![SubBatch { rows: 6, program: 8 }],
+        );
+    }
+
+    /// Store wrapper that counts mutating puts — the idempotence probe.
+    struct CountingStore {
+        inner: MemStore,
+        puts: std::sync::atomic::AtomicUsize,
+    }
+
+    impl ObjectStore for CountingStore {
+        fn put(&self, key: &str, data: &[u8]) -> anyhow::Result<()> {
+            self.puts.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            self.inner.put(key, data)
+        }
+        fn get(&self, key: &str) -> anyhow::Result<Blob> {
+            self.inner.get(key)
+        }
+        fn exists(&self, key: &str) -> anyhow::Result<bool> {
+            self.inner.exists(key)
+        }
+        fn delete(&self, key: &str) -> anyhow::Result<()> {
+            self.inner.delete(key)
+        }
+        fn list(&self, prefix: &str) -> anyhow::Result<Vec<String>> {
+            self.inner.list(prefix)
+        }
+    }
+
+    #[test]
+    fn republish_unchanged_bundle_uploads_nothing() {
+        let store = CountingStore {
+            inner: MemStore::new(),
+            puts: std::sync::atomic::AtomicUsize::new(0),
+        };
+        let b = batched_bundle();
+        b.publish(&store).unwrap();
+        let first = store.puts.load(std::sync::atomic::Ordering::SeqCst);
+        // manifest + 4 ladder programs + weights + fingerprint marker
+        assert_eq!(first, 7);
+        b.publish(&store).unwrap();
+        assert_eq!(
+            store.puts.load(std::sync::atomic::Ordering::SeqCst),
+            first,
+            "re-publishing an unchanged bundle must not re-upload"
+        );
+        // A changed bundle DOES re-upload (fingerprint mismatch).
+        let mut b2 = batched_bundle();
+        b2.hlo_texts.insert("m-gpu".into(), "HloModule changed".into());
+        b2.publish(&store).unwrap();
+        assert!(store.puts.load(std::sync::atomic::Ordering::SeqCst) > first);
+        let fetched = RuntimeBundle::fetch("m", &store).unwrap();
+        assert_eq!(fetched.hlo_text("m-gpu").unwrap(), "HloModule changed");
     }
 
     #[test]

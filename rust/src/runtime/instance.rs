@@ -18,19 +18,42 @@ pub trait Executor {
     /// Run one invocation payload (flattened f32 image) to its output.
     fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>>;
 
-    /// Run a micro-batch of payloads in one device dispatch, returning
-    /// one output per input (same order).  The default loops [`infer`]
-    /// so every executor is batch-correct from day one; engines whose
-    /// dispatch overhead dominates (the whole point of micro-batching)
-    /// specialize it to pay that overhead once per batch.
+    /// Run a micro-batch of payloads, returning one output per input
+    /// (same order) plus device-program accounting.  The default loops
+    /// [`infer`] — one device program per input — so every executor is
+    /// batch-correct from day one; engines with batched-HLO artifacts
+    /// (DESIGN.md §16) specialize it to pack the batch into leading-dim
+    /// literals and dispatch one program per planned sub-batch.
     ///
     /// Contract: all-or-nothing.  An error fails the whole batch — the
     /// caller demultiplexes it to every invocation in the batch.
     ///
     /// [`infer`]: Executor::infer
-    fn infer_batch(&mut self, inputs: &[Arc<Vec<f32>>]) -> Result<Vec<Vec<f32>>> {
-        inputs.iter().map(|input| self.infer(input)).collect()
+    fn infer_batch(&mut self, inputs: &[Arc<Vec<f32>>]) -> Result<BatchRun> {
+        let outputs = inputs
+            .iter()
+            .map(|input| self.infer(input))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BatchRun { outputs, programs: inputs.len(), pad_slots: 0 })
     }
+
+    /// The compiled micro-batch ladder this executor can serve with one
+    /// device program per rung (sorted ascending).  `[1]` — the default —
+    /// means per-input programs only; the aggregator uses the ladder to
+    /// snap its chunk caps to compiled sizes so dispatches don't pad.
+    fn compiled_batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+}
+
+/// What one [`Executor::infer_batch`] call did at the device boundary:
+/// per-input outputs plus how many device programs were dispatched and how
+/// many padded rows were executed and discarded to serve them.
+#[derive(Debug, Clone)]
+pub struct BatchRun {
+    pub outputs: Vec<Vec<f32>>,
+    pub programs: usize,
+    pub pad_slots: usize,
 }
 
 /// Result of one execution, with the instance-side wall time (the real
@@ -41,12 +64,17 @@ pub struct ExecOutcome {
     pub compute_wall: Duration,
 }
 
-/// Result of one batched execution: per-invocation outputs (input order)
-/// plus the wall time of the single device dispatch that produced them.
+/// Result of one batched execution: per-invocation outputs (input order),
+/// the wall time of the instance-side dispatch, and the device-program
+/// accounting forwarded from [`BatchRun`].
 #[derive(Debug, Clone)]
 pub struct BatchOutcome {
     pub outputs: Vec<Vec<f32>>,
     pub compute_wall: Duration,
+    /// Device programs dispatched to serve the batch.
+    pub programs: usize,
+    /// Padded rows executed and discarded (batched-HLO engines only).
+    pub pad_slots: usize,
 }
 
 enum Request {
@@ -67,6 +95,9 @@ pub struct RuntimeInstance {
     handle: Option<std::thread::JoinHandle<()>>,
     /// Wall-clock cost of the cold start (thread + compile + weights).
     pub cold_start_wall: Duration,
+    /// The executor's compiled micro-batch ladder, captured at cold start
+    /// (the executor itself lives on the instance thread).
+    compiled_batch_sizes: Vec<usize>,
     created: Instant,
     executions: std::sync::atomic::AtomicU64,
 }
@@ -82,7 +113,7 @@ impl RuntimeInstance {
         let variant = variant.into();
         let device_id = device_id.into();
         let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<usize>>>();
         let t0 = Instant::now();
         let thread_name = format!("rt-{variant}-{device_id}");
         let handle = std::thread::Builder::new()
@@ -90,7 +121,7 @@ impl RuntimeInstance {
             .spawn(move || {
                 let mut exec = match factory() {
                     Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
+                        let _ = ready_tx.send(Ok(e.compiled_batch_sizes()));
                         e
                     }
                     Err(e) => {
@@ -103,14 +134,19 @@ impl RuntimeInstance {
                         Request::Exec { inputs, reply } => {
                             let t = Instant::now();
                             let n = inputs.len();
-                            let result = exec.infer_batch(&inputs).and_then(|outputs| {
-                                if outputs.len() != n {
+                            let result = exec.infer_batch(&inputs).and_then(|run| {
+                                if run.outputs.len() != n {
                                     return Err(anyhow!(
                                         "executor returned {} outputs for a batch of {n}",
-                                        outputs.len()
+                                        run.outputs.len()
                                     ));
                                 }
-                                Ok(BatchOutcome { outputs, compute_wall: t.elapsed() })
+                                Ok(BatchOutcome {
+                                    outputs: run.outputs,
+                                    compute_wall: t.elapsed(),
+                                    programs: run.programs,
+                                    pad_slots: run.pad_slots,
+                                })
                             });
                             let _ = reply.send(result);
                         }
@@ -118,7 +154,7 @@ impl RuntimeInstance {
                     }
                 }
             })?;
-        ready_rx
+        let compiled_batch_sizes = ready_rx
             .recv()
             .map_err(|_| anyhow!("instance thread died during cold start"))??;
         Ok(RuntimeInstance {
@@ -127,6 +163,7 @@ impl RuntimeInstance {
             tx,
             handle: Some(handle),
             cold_start_wall: t0.elapsed(),
+            compiled_batch_sizes,
             created: Instant::now(),
             executions: 0.into(),
         })
@@ -171,6 +208,12 @@ impl RuntimeInstance {
         self.executions.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// The executor's compiled micro-batch ladder (sorted ascending),
+    /// captured at cold start.  `[1]` for engines without batched HLO.
+    pub fn compiled_batch_sizes(&self) -> &[usize] {
+        &self.compiled_batch_sizes
+    }
+
     pub fn age(&self) -> Duration {
         self.created.elapsed()
     }
@@ -206,12 +249,26 @@ pub struct MockExecutor {
     pub scale: f32,
     pub delay: Duration,
     pub fail_after: Option<u64>,
+    /// Compiled micro-batch ladder the mock pretends to have.  `None`
+    /// (legacy) models a fully amortizing engine: one dispatch delay per
+    /// `infer_batch` call regardless of size.  `Some(ladder)` models
+    /// batched-HLO artifacts: the batch is planned over the ladder
+    /// ([`crate::runtime::plan_batches`]) and the delay is paid once per
+    /// planned device program — `Some(vec![1])` therefore models the
+    /// per-input PJRT loop a legacy bundle falls back to.
+    pub compiled: Option<Vec<usize>>,
     count: u64,
 }
 
 impl MockExecutor {
     pub fn new(scale: f32) -> MockExecutor {
-        MockExecutor { scale, delay: Duration::ZERO, fail_after: None, count: 0 }
+        MockExecutor {
+            scale,
+            delay: Duration::ZERO,
+            fail_after: None,
+            compiled: None,
+            count: 0,
+        }
     }
 
     pub fn with_delay(mut self, d: Duration) -> MockExecutor {
@@ -224,9 +281,29 @@ impl MockExecutor {
         self
     }
 
+    /// Give the mock a compiled batch ladder (sorted ascending).
+    pub fn with_compiled(mut self, ladder: Vec<usize>) -> MockExecutor {
+        self.compiled = Some(ladder);
+        self
+    }
+
     /// Factory suited for [`RuntimeInstance::start`].
     pub fn factory(scale: f32, delay: Duration) -> super::ExecutorFactory {
         Box::new(move || Ok(Box::new(MockExecutor::new(scale).with_delay(delay)) as Box<dyn Executor>))
+    }
+
+    /// Factory for a mock with batched-HLO artifacts: per-device-program
+    /// dispatch delay and a compiled ladder visible to the aggregator.
+    pub fn factory_batched(
+        scale: f32,
+        delay: Duration,
+        ladder: Vec<usize>,
+    ) -> super::ExecutorFactory {
+        Box::new(move || {
+            Ok(Box::new(
+                MockExecutor::new(scale).with_delay(delay).with_compiled(ladder.clone()),
+            ) as Box<dyn Executor>)
+        })
     }
 }
 
@@ -244,10 +321,11 @@ impl Executor for MockExecutor {
         Ok(input.iter().map(|x| x * self.scale).collect())
     }
 
-    /// Batched mock semantics: `delay` models per-dispatch overhead, so a
-    /// successful batch pays it **once** (the amortization
-    /// micro-batching exists for), and — mirroring [`infer`]'s
-    /// check-then-sleep order — a failed batch pays it not at all.  The
+    /// Batched mock semantics: `delay` models per-dispatch overhead.  A
+    /// successful legacy batch (`compiled: None`) pays it **once** (the
+    /// amortization micro-batching exists for); a batched-HLO mock pays
+    /// it once per planned device program.  Mirroring [`infer`]'s
+    /// check-then-sleep order, a failed batch pays it not at all.  The
     /// call counter advances for **every** member of the dispatch (no
     /// short-circuit), then the first injected failure fails the batch.
     /// Note that call-count-based failure injection is inherently
@@ -257,7 +335,7 @@ impl Executor for MockExecutor {
     /// failures, not `fail_after`.
     ///
     /// [`infer`]: Executor::infer
-    fn infer_batch(&mut self, inputs: &[Arc<Vec<f32>>]) -> Result<Vec<Vec<f32>>> {
+    fn infer_batch(&mut self, inputs: &[Arc<Vec<f32>>]) -> Result<BatchRun> {
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut first_err = None;
         for input in inputs {
@@ -274,10 +352,23 @@ impl Executor for MockExecutor {
         if let Some(e) = first_err {
             return Err(e);
         }
+        let (programs, pad_slots) = match &self.compiled {
+            None => (1, 0),
+            Some(ladder) => {
+                let plan = crate::runtime::plan_batches(ladder, inputs.len())?;
+                (plan.len(), plan.iter().map(|s| s.pad_slots()).sum())
+            }
+        };
         if !self.delay.is_zero() {
-            std::thread::sleep(self.delay);
+            for _ in 0..programs {
+                std::thread::sleep(self.delay);
+            }
         }
-        Ok(outputs)
+        Ok(BatchRun { outputs, programs, pad_slots })
+    }
+
+    fn compiled_batch_sizes(&self) -> Vec<usize> {
+        self.compiled.clone().unwrap_or_else(|| vec![1])
     }
 }
 
@@ -388,6 +479,88 @@ mod tests {
         assert!(format!("{err}").contains("failure injection"));
         assert_eq!(flaky.executions(), 0, "failed batch counts no executions");
         assert!(flaky.exec_batch(vec![Arc::new(vec![1.0])]).is_err());
+    }
+
+    #[test]
+    fn instance_exposes_compiled_ladder() {
+        let inst = RuntimeInstance::start(
+            "mock",
+            "gpu0",
+            MockExecutor::factory(1.0, Duration::ZERO),
+        )
+        .unwrap();
+        assert_eq!(inst.compiled_batch_sizes(), &[1], "legacy mock: batch-1 only");
+        let inst = RuntimeInstance::start(
+            "mock-b",
+            "gpu0",
+            MockExecutor::factory_batched(1.0, Duration::ZERO, vec![1, 2, 4, 8]),
+        )
+        .unwrap();
+        assert_eq!(inst.compiled_batch_sizes(), &[1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn batched_mock_counts_programs_and_pad_slots() {
+        let inst = RuntimeInstance::start(
+            "mock-b",
+            "gpu0",
+            MockExecutor::factory_batched(2.0, Duration::ZERO, vec![1, 2, 4, 8]),
+        )
+        .unwrap();
+        // 8 rows = one compiled 8-program, no padding.
+        let out = inst
+            .exec_batch((0..8).map(|i| Arc::new(vec![i as f32])).collect())
+            .unwrap();
+        assert_eq!(out.programs, 1);
+        assert_eq!(out.pad_slots, 0);
+        assert_eq!(out.outputs[3], vec![6.0]);
+        // 5 rows pad to the 8-program: still one dispatch, 3 pad slots,
+        // and exactly 5 outputs (padded rows never surface).
+        let out = inst
+            .exec_batch((0..5).map(|i| Arc::new(vec![i as f32])).collect())
+            .unwrap();
+        assert_eq!(out.programs, 1);
+        assert_eq!(out.pad_slots, 3);
+        assert_eq!(out.outputs.len(), 5);
+        // 11 rows = 8 + pad(3 -> 4): two programs, one pad slot.
+        let out = inst
+            .exec_batch((0..11).map(|i| Arc::new(vec![i as f32])).collect())
+            .unwrap();
+        assert_eq!(out.programs, 2);
+        assert_eq!(out.pad_slots, 1);
+        assert_eq!(out.outputs.len(), 11);
+    }
+
+    #[test]
+    fn loop_mock_pays_dispatch_per_input_batched_mock_per_program() {
+        // The per-input loop (ladder [1]) pays 8 dispatch delays for a
+        // batch of 8; the batched-HLO ladder pays one.  This is the mock
+        // model of exactly the win batched artifacts buy on hardware.
+        let looped = RuntimeInstance::start(
+            "mock-loop",
+            "gpu0",
+            MockExecutor::factory_batched(1.0, Duration::from_millis(20), vec![1]),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let out = looped
+            .exec_batch((0..8).map(|i| Arc::new(vec![i as f32])).collect())
+            .unwrap();
+        assert_eq!(out.programs, 8);
+        assert!(t0.elapsed() >= Duration::from_millis(150), "{:?}", t0.elapsed());
+
+        let batched = RuntimeInstance::start(
+            "mock-b",
+            "gpu0",
+            MockExecutor::factory_batched(1.0, Duration::from_millis(20), vec![1, 8]),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let out = batched
+            .exec_batch((0..8).map(|i| Arc::new(vec![i as f32])).collect())
+            .unwrap();
+        assert_eq!(out.programs, 1);
+        assert!(t0.elapsed() < Duration::from_millis(150), "{:?}", t0.elapsed());
     }
 
     #[test]

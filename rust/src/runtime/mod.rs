@@ -24,8 +24,8 @@ pub mod instance;
 pub mod pjrt;
 pub mod pool;
 
-pub use bundle::{ArtifactSpec, RuntimeBundle, WeightSpec};
-pub use instance::{BatchOutcome, ExecOutcome, Executor, RuntimeInstance};
+pub use bundle::{plan_batches, ArtifactSpec, RuntimeBundle, SubBatch, WeightSpec};
+pub use instance::{BatchOutcome, BatchRun, ExecOutcome, Executor, RuntimeInstance};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtExecutor;
 pub use pool::InstancePool;

@@ -11,19 +11,27 @@
 //! is `Rc`-based); it lives inside its [`super::RuntimeInstance`] thread,
 //! mirroring the paper's process-per-instance isolation.
 
-use super::bundle::RuntimeBundle;
-use super::instance::Executor;
-use anyhow::{bail, Context, Result};
+use super::bundle::{plan_batches, RuntimeBundle};
+use super::instance::{BatchRun, Executor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-/// A compiled model variant bound to a PJRT client.
+/// A compiled model variant bound to a PJRT client: one loaded executable
+/// per compiled batch-ladder rung (legacy bundles have exactly one).
 pub struct PjrtExecutor {
-    exe: PjRtLoadedExecutable,
+    /// Loaded executables keyed by leading (batch) dimension.
+    exes: BTreeMap<usize, PjRtLoadedExecutable>,
     /// Weight literals in entry-signature order (after the image).
     weight_literals: Vec<Literal>,
     input_shape: Vec<usize>,
     input_len: usize,
     output_len: usize,
+    /// Compiled batch ladder (sorted ascending; `[base_batch]` for
+    /// pre-batching bundles).
+    batch_sizes: Vec<usize>,
+    /// The base artifact's own leading dim (1 in practice).
+    base_batch: usize,
     variant: String,
 }
 
@@ -31,28 +39,35 @@ impl PjrtExecutor {
     /// Compile `variant` from `bundle` on a fresh PJRT CPU client.
     ///
     /// This is the cold-start path: client creation + HLO parse + XLA
-    /// compilation + weight literal upload all happen here.
+    /// compilation (once per batch-ladder rung) + weight literal upload
+    /// all happen here.
     pub fn compile(bundle: &RuntimeBundle, variant: &str) -> Result<PjrtExecutor> {
         let art = bundle.artifact(variant)?.clone();
-        let hlo = bundle.hlo_text(variant)?;
         let client = PjRtClient::cpu().context("create PJRT CPU client")?;
-        let proto = HloModuleProto::parse_and_return_unverified_module(hlo.as_bytes())
-            .with_context(|| format!("parse HLO text for {variant}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .with_context(|| format!("XLA compile {variant}"))?;
+        let mut exes = BTreeMap::new();
+        for &n in &art.batch_sizes {
+            let hlo = bundle.hlo_text_at(variant, n)?;
+            let proto = HloModuleProto::parse_and_return_unverified_module(hlo.as_bytes())
+                .with_context(|| format!("parse HLO text for {variant} b{n}"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile {variant} b{n}"))?;
+            exes.insert(n, exe);
+        }
 
         let mut weight_literals = Vec::with_capacity(bundle.weights.len());
         for (shape, data) in bundle.weights_f32() {
             weight_literals.push(make_literal(&data, &shape)?);
         }
         Ok(PjrtExecutor {
-            exe,
+            exes,
             weight_literals,
             input_len: art.input_len(),
             input_shape: art.input_shape.clone(),
             output_len: art.output_len(),
+            batch_sizes: art.batch_sizes.clone(),
+            base_batch: *art.input_shape.first().unwrap_or(&1),
             variant: variant.to_string(),
         })
     }
@@ -67,6 +82,37 @@ impl PjrtExecutor {
 
     pub fn output_len(&self) -> usize {
         self.output_len
+    }
+
+    /// Execute the batch-`n` program on a packed leading-dim literal and
+    /// read back the flat f32 output (length-checked).
+    fn execute_program(&self, n: usize, packed: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .exes
+            .get(&n)
+            .ok_or_else(|| anyhow!("variant {} has no compiled batch-{n} program", self.variant))?;
+        let mut shape: Vec<usize> = vec![n];
+        shape.extend_from_slice(&self.input_shape[1..]);
+        let img = make_literal(packed, &shape)?;
+        let mut args: Vec<&Literal> = Vec::with_capacity(1 + self.weight_literals.len());
+        args.push(&img);
+        args.extend(self.weight_literals.iter());
+        let result = exe.execute::<&Literal>(&args)?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("readback")?
+            .to_tuple1()
+            .context("unwrap 1-tuple (AOT lowers with return_tuple=True)")?;
+        let values = out.to_vec::<f32>()?;
+        let expect = n * self.output_len / self.base_batch;
+        if values.len() != expect {
+            bail!(
+                "variant {} b{n} produced {} f32s, manifest implies {expect}",
+                self.variant,
+                values.len(),
+            );
+        }
+        Ok(values)
     }
 }
 
@@ -99,35 +145,18 @@ impl Executor for PjrtExecutor {
             );
         }
         // The AOT signature is (image[1,H,W,3], *weight_leaves).
-        let img = make_literal(input, &self.input_shape)?;
-        let mut args: Vec<&Literal> = Vec::with_capacity(1 + self.weight_literals.len());
-        args.push(&img);
-        args.extend(self.weight_literals.iter());
-        let result = self.exe.execute::<&Literal>(&args)?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("readback")?
-            .to_tuple1()
-            .context("unwrap 1-tuple (AOT lowers with return_tuple=True)")?;
-        let values = out.to_vec::<f32>()?;
-        if values.len() != self.output_len {
-            bail!(
-                "variant {} produced {} f32s, manifest says {}",
-                self.variant,
-                values.len(),
-                self.output_len
-            );
-        }
-        Ok(values)
+        self.execute_program(self.base_batch, input)
     }
 
-    /// Batched PJRT execution: the AOT modules are compiled for batch
-    /// dimension 1, so the device still runs once per input — but shape
-    /// validation happens once up front (all-or-nothing, before any
-    /// compute is spent) and the batch shares one instance-thread hop.
-    /// True batched HLO (N > 1 leading dimension) is a compile-time
-    /// artifact change tracked in ROADMAP.md.
-    fn infer_batch(&mut self, inputs: &[std::sync::Arc<Vec<f32>>]) -> Result<Vec<Vec<f32>>> {
+    /// Batched PJRT execution (DESIGN.md §16).  With batched-HLO
+    /// artifacts the micro-batch is planned over the compiled ladder —
+    /// largest fit, padding up to the next rung when the padded program
+    /// stays at least half full — each sub-batch packed into ONE
+    /// leading-dim literal and dispatched as ONE device execution, the
+    /// output split back into rows with padded rows discarded before
+    /// anyone sees them.  Legacy batch-1-only bundles keep the per-input
+    /// loop byte-identically.
+    fn infer_batch(&mut self, inputs: &[std::sync::Arc<Vec<f32>>]) -> Result<BatchRun> {
         for input in inputs {
             if input.len() != self.input_len {
                 bail!(
@@ -138,7 +167,39 @@ impl Executor for PjrtExecutor {
                 );
             }
         }
-        inputs.iter().map(|input| self.infer(input)).collect()
+        if self.batch_sizes == [self.base_batch] {
+            let outputs = inputs
+                .iter()
+                .map(|input| self.infer(input))
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(BatchRun { outputs, programs: inputs.len(), pad_slots: 0 });
+        }
+        let plan = plan_batches(&self.batch_sizes, inputs.len())?;
+        let row_len = self.input_len / self.base_batch;
+        let out_row_len = self.output_len / self.base_batch;
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut offset = 0usize;
+        let mut pad_slots = 0usize;
+        for sub in &plan {
+            let rows = &inputs[offset..offset + sub.rows];
+            offset += sub.rows;
+            pad_slots += sub.pad_slots();
+            // Pack real rows into the program's leading dim; pad slots
+            // stay zero-filled (their outputs are never read back out).
+            let mut packed = vec![0.0f32; sub.program * row_len];
+            for (i, row) in rows.iter().enumerate() {
+                packed[i * row_len..(i + 1) * row_len].copy_from_slice(row);
+            }
+            let values = self.execute_program(sub.program, &packed)?;
+            for i in 0..sub.rows {
+                outputs.push(values[i * out_row_len..(i + 1) * out_row_len].to_vec());
+            }
+        }
+        Ok(BatchRun { outputs, programs: plan.len(), pad_slots })
+    }
+
+    fn compiled_batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
     }
 }
 
@@ -212,6 +273,70 @@ mod tests {
         bound(&out, &expect, 0.75, 0.15, "vs bf16 golden");
         let f32_golden = golden("tinyyolo-gpu.golden.bin");
         bound(&out, &f32_golden, 0.75, 0.15, "vs f32 golden");
+    }
+
+    #[test]
+    fn batched_artifact_matches_stacked_singles() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        if !bundle.artifact("tinyyolo-gpu").unwrap().batch_sizes.contains(&8) {
+            eprintln!("skipping: bundle predates batched HLO (no batch-8 rung)");
+            return;
+        }
+        let mut exec = PjrtExecutor::compile(&bundle, "tinyyolo-gpu").unwrap();
+        let input = golden("golden_input.b8.bin");
+        let expect = golden("tinyyolo-gpu.b8.golden.bin");
+        let row = input.len() / 8;
+        let out_row = expect.len() / 8;
+        let inputs: Vec<std::sync::Arc<Vec<f32>>> = (0..8)
+            .map(|i| std::sync::Arc::new(input[i * row..(i + 1) * row].to_vec()))
+            .collect();
+        let run = exec.infer_batch(&inputs).unwrap();
+        assert_eq!(run.programs, 1, "batch 8 must be ONE device execution");
+        assert_eq!(run.pad_slots, 0);
+        assert_eq!(run.outputs.len(), 8);
+        for i in 0..8 {
+            // vs the jax batched golden ...
+            let d = max_abs_diff(&run.outputs[i], &expect[i * out_row..(i + 1) * out_row]);
+            assert!(d < 1e-3, "row {i} diverges from batched golden by {d}");
+            // ... and vs a stacked batch-1 execution of the same row
+            let single = exec.infer(&inputs[i]).unwrap();
+            let d = max_abs_diff(&run.outputs[i], &single);
+            assert!(d < 1e-3, "row {i}: batch-8 vs batch-1 diverge by {d}");
+        }
+    }
+
+    #[test]
+    fn padded_rows_never_surface() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let bundle = RuntimeBundle::load_dir("tinyyolo", artifacts_dir()).unwrap();
+        if !bundle.artifact("tinyyolo-gpu").unwrap().batch_sizes.contains(&8) {
+            eprintln!("skipping: bundle predates batched HLO (no batch-8 rung)");
+            return;
+        }
+        let mut exec = PjrtExecutor::compile(&bundle, "tinyyolo-gpu").unwrap();
+        let input = golden("golden_input.b8.bin");
+        let row = input.len() / 8;
+        // 5 rows pad into the 8-program: one dispatch, 3 pad slots, and
+        // exactly 5 outputs identical to unbatched runs of those rows.
+        let inputs: Vec<std::sync::Arc<Vec<f32>>> = (0..5)
+            .map(|i| std::sync::Arc::new(input[i * row..(i + 1) * row].to_vec()))
+            .collect();
+        let run = exec.infer_batch(&inputs).unwrap();
+        assert_eq!(run.programs, 1);
+        assert_eq!(run.pad_slots, 3);
+        assert_eq!(run.outputs.len(), 5);
+        for i in 0..5 {
+            let single = exec.infer(&inputs[i]).unwrap();
+            let d = max_abs_diff(&run.outputs[i], &single);
+            assert!(d < 1e-3, "row {i}: padded batch vs single diverge by {d}");
+        }
     }
 
     #[test]
